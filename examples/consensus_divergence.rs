@@ -1,0 +1,51 @@
+//! The paper's §1 counterexample, live: why naive SignSGD diverges under
+//! heterogeneous data, and how much noise fixes it (Theorem 2's threshold).
+//!
+//! Problem: min (x−A)² + (x+A)², A = 4, x0 = 2. For any x ∈ (−A, A) the two
+//! clients' gradient signs cancel and vanilla SignSGD never moves. Uniform
+//! noise below the σ > E(G+Q∞) threshold cannot flip the signs either
+//! (Remark 2); Gaussian noise always can.
+//!
+//!     cargo run --release --example consensus_divergence
+
+use zsignfedavg::fl::backend::AnalyticBackend;
+use zsignfedavg::fl::server::{run_experiment, ServerConfig};
+use zsignfedavg::fl::AlgorithmConfig;
+use zsignfedavg::problems::consensus::Consensus;
+use zsignfedavg::problems::AnalyticProblem;
+use zsignfedavg::rng::ZParam;
+
+fn trajectory(algo: &AlgorithmConfig, rounds: usize) -> Vec<f64> {
+    let mut b = AnalyticBackend::new(Consensus::counterexample(4.0));
+    b.x0 = vec![2.0];
+    let cfg = ServerConfig { rounds, eval_every: rounds / 10, ..Default::default() };
+    run_experiment(&mut b, algo, &cfg).records.iter().map(|r| r.objective).collect()
+}
+
+fn main() {
+    let f_star = Consensus::counterexample(4.0).optimal_value().unwrap();
+    println!("min (x-4)^2 + (x+4)^2   from x0 = 2    (f* = {f_star})\n");
+    let cases = vec![
+        ("SignSGD (no noise)", AlgorithmConfig::signsgd().with_lrs(0.02, 1.0)),
+        (
+            "inf-SignSGD, sigma=1  (< threshold!)",
+            AlgorithmConfig::z_signsgd(ZParam::Inf, 1.0).with_lrs(0.02, 1.0),
+        ),
+        (
+            "inf-SignSGD, sigma=20 (> threshold)",
+            AlgorithmConfig::z_signsgd(ZParam::Inf, 20.0).with_lrs(0.05, 1.0),
+        ),
+        (
+            "1-SignSGD,   sigma=5  (Gaussian: unbounded support)",
+            AlgorithmConfig::z_signsgd(ZParam::Finite(1), 5.0).with_lrs(0.05, 1.0),
+        ),
+    ];
+    println!("{:<52} objective trajectory (f - f*)", "");
+    for (label, algo) in cases {
+        let traj = trajectory(&algo, 1000);
+        let s: Vec<String> = traj.iter().step_by(2).map(|f| format!("{:7.3}", f - f_star)).collect();
+        println!("{label:<52} {}", s.join(" "));
+    }
+    println!("\nRows 1-2 are pinned at the initial gap: the sign votes cancel exactly.");
+    println!("Rows 3-4 decay towards 0: the stochastic sign is asymptotically unbiased.");
+}

@@ -1,0 +1,54 @@
+//! DP-SignFedAvg (Algorithm 2) in practice: calibrate the Gaussian noise for
+//! a target privacy budget with the RDP accountant, then run the clipped,
+//! perturbed, sign-compressed pipeline and compare against uncompressed
+//! DP-FedAvg — the sign step is free post-processing under DP.
+//!
+//!     cargo run --release --example dp_federated
+
+use zsignfedavg::dp::{calibrate_noise, eps_for_noise};
+use zsignfedavg::fl::backend::AnalyticBackend;
+use zsignfedavg::fl::server::{run_experiment, ServerConfig};
+use zsignfedavg::fl::AlgorithmConfig;
+use zsignfedavg::problems::logistic::Logistic;
+
+fn main() {
+    // Accounting setup: 200 clients, 20 sampled per round, 300 rounds.
+    let (n, m, rounds) = (200usize, 20usize, 300usize);
+    let q = m as f64 / n as f64;
+    let delta = 1.0 / n as f64;
+
+    println!("subsampled-Gaussian RDP accounting: q={q}, T={rounds}, delta={delta:.1e}\n");
+    println!("{:>6} {:>12} {:>14}", "eps", "sigma(noise)", "check eps");
+    let mut sigmas = Vec::new();
+    for eps in [1.0f64, 2.0, 4.0, 8.0] {
+        let sigma = calibrate_noise(q, rounds as u64, delta, eps);
+        let back = eps_for_noise(q, sigma, rounds as u64, delta);
+        println!("{eps:>6.1} {sigma:>12.3} {back:>14.3}");
+        sigmas.push((eps, sigma));
+    }
+
+    println!("\nrunning DP-SignFedAvg vs DP-FedAvg on 200-client logistic regression");
+    println!("{:>6} {:>22} {:>22}", "eps", "DP-SignFedAvg f(x)", "DP-FedAvg f(x)");
+    let clip = 0.1f32;
+    for &(eps, sigma) in &sigmas {
+        let mut finals = Vec::new();
+        for algo in [
+            AlgorithmConfig::dp_signfedavg(clip, sigma as f32, 3).with_lrs(0.05, 0.5),
+            AlgorithmConfig::dp_fedavg(clip, sigma as f32, 3).with_lrs(0.05, 5.0),
+        ] {
+            let mut b = AnalyticBackend::new(Logistic::generate(n, 50, 30, 0.5, 0.01, 5))
+                .stochastic();
+            let cfg = ServerConfig {
+                rounds,
+                clients_per_round: Some(m),
+                eval_every: rounds / 5,
+                ..Default::default()
+            };
+            let run = run_experiment(&mut b, &algo, &cfg);
+            finals.push(run.final_objective());
+        }
+        println!("{eps:>6.1} {:>22.4} {:>22.4}", finals[0], finals[1]);
+    }
+    println!("\nThe sign column should track the dense column within a small gap at");
+    println!("every eps, using 32x fewer uplink bits — Appendix F's headline.");
+}

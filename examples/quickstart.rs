@@ -1,0 +1,55 @@
+//! Quickstart: 60 lines from zero to a converged sign-compressed federated
+//! run.
+//!
+//! Builds a 10-client heterogeneous consensus problem, runs uncompressed
+//! GD, vanilla SignSGD and the paper's 1-SignSGD side by side, and prints
+//! objective + exact uplink bits — the paper's pitch in one screen.
+//!
+//!     cargo run --release --example quickstart
+
+use zsignfedavg::fl::backend::AnalyticBackend;
+use zsignfedavg::fl::server::{run_experiment, ServerConfig};
+use zsignfedavg::fl::AlgorithmConfig;
+use zsignfedavg::problems::consensus::Consensus;
+use zsignfedavg::problems::AnalyticProblem;
+use zsignfedavg::rng::ZParam;
+
+fn main() {
+    // A 10-client, 1000-dimensional consensus problem — each client pulls
+    // the model toward its own Gaussian target (maximal heterogeneity).
+    let dim = 1000;
+    let problem = Consensus::gaussian(10, dim, 7);
+    let f_star = problem.optimal_value().unwrap();
+    println!("consensus problem: n=10, d={dim}, f* = {f_star:.4}\n");
+
+    let algorithms = vec![
+        // Uncompressed baseline: 32 bits per coordinate on the uplink.
+        AlgorithmConfig::gd().with_lrs(0.01, 1.0),
+        // Naive 1-bit signs: stalls under heterogeneity (paper §1).
+        AlgorithmConfig::signsgd().with_lrs(0.01, 1.0),
+        // The paper's fix: perturb with Gaussian noise before the sign.
+        AlgorithmConfig::z_signsgd(ZParam::Finite(1), 3.0).with_lrs(0.01, 1.0),
+    ];
+
+    println!(
+        "{:<22} {:>14} {:>14} {:>12}",
+        "algorithm", "final f - f*", "uplink (Mbit)", "bits/coord"
+    );
+    for algo in &algorithms {
+        let rounds = 2000;
+        let mut backend = AnalyticBackend::new(Consensus::gaussian(10, dim, 7));
+        let cfg = ServerConfig { rounds, eval_every: 100, ..Default::default() };
+        let run = run_experiment(&mut backend, algo, &cfg);
+        let gap = run.final_objective() - f_star;
+        let bits = run.total_bits();
+        let per_coord = bits as f64 / (rounds as f64 * 10.0 * dim as f64);
+        println!(
+            "{:<22} {:>14.6} {:>14.2} {:>12.0}",
+            algo.name,
+            gap,
+            bits as f64 / 1e6,
+            per_coord
+        );
+    }
+    println!("\n1-SignSGD matches GD at 1/32 of the uplink — that's the paper.");
+}

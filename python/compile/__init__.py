@@ -1,0 +1,5 @@
+"""Build-time compile path (L2 model + L1 kernels + AOT lowering).
+
+Never imported at runtime: the Rust coordinator only consumes the HLO text
+artifacts this package emits via ``python -m compile.aot``.
+"""

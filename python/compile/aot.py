@@ -1,0 +1,201 @@
+"""AOT pipeline: lower the L2/L1 entry points to HLO text artifacts.
+
+Interchange format is HLO *text*, not ``.serialize()``: the image's
+xla_extension 0.5.1 rejects jax>=0.5 protos (64-bit instruction ids); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Outputs, under ``artifacts/``:
+
+* ``<name>.hlo.txt`` — one module per entry point, lowered with
+  ``return_tuple=True`` (the Rust side unwraps the tuple).
+* ``manifest.json`` — input/output dtypes+shapes and model metadata for every
+  artifact, parsed by ``rust/src/runtime/manifest.rs``.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--models mnist_cnn,...]
+        [--local-steps 1,5,10] [--test-dims 4096]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# z values to build compression artifacts for. 0 is the sentinel for z=+inf
+# (uniform noise); 1 is Gaussian; 2 shows the general-z Gamma-transform path.
+DEFAULT_ZS = (1, 0)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(dt) -> str:
+    return jnp.dtype(dt).name  # "float32", "int32", "uint32", "int8"
+
+
+def _spec(shape: Sequence[int], dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+class ArtifactWriter:
+    """Accumulates lowered modules + manifest entries and writes them out."""
+
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.entries: List[dict] = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def add(self, name: str, fn, in_specs: List[Tuple[str, jax.ShapeDtypeStruct]],
+            meta: Dict):
+        """Lower ``fn`` at ``in_specs`` and record the artifact."""
+        lowered = jax.jit(fn).lower(*[s for _, s in in_specs])
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        # Recover output shapes from the lowered signature.
+        out_avals = jax.eval_shape(fn, *[s for _, s in in_specs])
+        if not isinstance(out_avals, (tuple, list)):
+            out_avals = (out_avals,)
+        entry = {
+            "name": name,
+            "file": fname,
+            "inputs": [
+                {"name": n, "dtype": _dtype_name(s.dtype), "shape": list(s.shape)}
+                for n, s in in_specs
+            ],
+            "outputs": [
+                {"dtype": _dtype_name(a.dtype), "shape": list(a.shape)}
+                for a in out_avals
+            ],
+            "meta": meta,
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        }
+        self.entries.append(entry)
+        print(f"  wrote {fname:<44s} ({len(text)//1024:>5d} KiB)")
+
+    def finish(self):
+        manifest = {"version": 1, "artifacts": self.entries}
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(manifest, f, indent=1)
+        print(f"manifest: {path} ({len(self.entries)} artifacts)")
+
+
+def build_model_artifacts(w: ArtifactWriter, spec: M.ModelSpec,
+                          local_steps: Sequence[int], zs: Sequence[int]):
+    """All artifacts for one model variant."""
+    d = M.param_count(spec)
+    eps = M.make_entry_points(spec)
+    h, wd, c = spec.input_shape
+    B, BE = spec.train_batch, spec.eval_batch
+
+    # Initial flat parameters: the Rust coordinator cannot reproduce jax's
+    # threefry init, so the AOT step exports them as raw little-endian f32.
+    import numpy as np
+    flat, _ = M.flat_init(spec, seed=0)
+    init_file = f"{spec.name}_init.f32"
+    np.asarray(flat, dtype="<f4").tofile(os.path.join(w.out_dir, init_file))
+
+    meta = {
+        "model": spec.name, "param_count": d, "arch": spec.arch,
+        "num_classes": spec.num_classes, "input_shape": list(spec.input_shape),
+        "train_batch": B, "eval_batch": BE, "init_file": init_file,
+    }
+
+    w.add(f"{spec.name}_train_step", eps["train_step"],
+          [("params", _spec((d,), "float32")),
+           ("x", _spec((B, h, wd, c), "float32")),
+           ("y", _spec((B,), "int32")),
+           ("lr", _spec((), "float32"))],
+          {**meta, "kind": "train_step"})
+
+    for e in local_steps:
+        if e <= 1:
+            continue
+        w.add(f"{spec.name}_local_update_e{e}", eps["make_local_update"](e),
+              [("params", _spec((d,), "float32")),
+               ("xs", _spec((e, B, h, wd, c), "float32")),
+               ("ys", _spec((e, B), "int32")),
+               ("lr", _spec((), "float32"))],
+              {**meta, "kind": "local_update", "local_steps": e})
+
+    w.add(f"{spec.name}_eval_step", eps["eval_step"],
+          [("params", _spec((d,), "float32")),
+           ("x", _spec((BE, h, wd, c), "float32")),
+           ("y", _spec((BE,), "int32"))],
+          {**meta, "kind": "eval_step"})
+
+    for z in zs:
+        build_compress_artifact(w, f"{spec.name}_compress_z{z}", d, z,
+                                extra_meta={"model": spec.name})
+        build_compress_artifact(w, f"{spec.name}_compress_packed_z{z}", d, z,
+                                extra_meta={"model": spec.name}, packed=True)
+
+
+def build_compress_artifact(w: ArtifactWriter, name: str, dim: int, z: int,
+                            extra_meta: Dict | None = None, packed: bool = False):
+    """compress(delta, key_data, sigma) -> signs, for noise family z.
+
+    ``packed=True`` emits u32 bit-packed words instead of int8 signs — an 8x
+    smaller PJRT output transfer (the §Perf variant the server prefers).
+    """
+    compress = M.make_compress_packed(z) if packed else M.make_compress(z)
+
+    def entry(delta, key_data, sigma):
+        key = jax.random.wrap_key_data(key_data, impl="threefry2x32")
+        return (compress(delta, key, sigma),)
+
+    w.add(name, entry,
+          [("delta", _spec((dim,), "float32")),
+           ("key", _spec((2,), "uint32")),
+           ("sigma", _spec((), "float32"))],
+          {"kind": "compress_packed" if packed else "compress",
+           "z": z, "dim": dim,
+           "eta_z": M.ref.eta_z(z), **(extra_meta or {})})
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="mnist_mlp,mnist_cnn,emnist_cnn,cifar_cnn")
+    ap.add_argument("--local-steps", default="1,5,10",
+                    help="E values to bake local_update scan artifacts for")
+    ap.add_argument("--zs", default="1,0",
+                    help="z noise families (0 = z=inf uniform)")
+    ap.add_argument("--test-dims", default="4096",
+                    help="extra standalone compress dims for Rust tests")
+    args = ap.parse_args()
+
+    models = [m for m in args.models.split(",") if m]
+    steps = [int(s) for s in args.local_steps.split(",") if s]
+    zs = [int(z) for z in args.zs.split(",") if z]
+    w = ArtifactWriter(args.out_dir)
+    for name in models:
+        spec = M.MODEL_SPECS[name]
+        print(f"model {name}: d={M.param_count(spec)}")
+        build_model_artifacts(w, spec, steps, zs)
+    for dim in [int(x) for x in args.test_dims.split(",") if x]:
+        for z in zs + [2]:  # include a general-z artifact on the test dim
+            build_compress_artifact(w, f"test_compress_d{dim}_z{z}", dim, z)
+        build_compress_artifact(w, f"test_compress_packed_d{dim}_z1", dim, 1, packed=True)
+    w.finish()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Layer-1 Pallas kernels for z-SignFedAvg.
+
+Two kernel families live here:
+
+* :mod:`stoch_sign` — the paper's compression hot-spot,
+  ``sign(x + sigma * xi) -> int8`` tiled over VMEM-sized blocks, plus a fused
+  SGD-axpy update kernel used on the local-training path.
+* :mod:`ref` — pure-``jnp`` oracles used by pytest/hypothesis to pin down the
+  kernels' numerics.
+
+All kernels are lowered with ``interpret=True`` — the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so interpret mode is both the correctness and the
+AOT path; the TPU roofline discussion lives in DESIGN.md §Hardware-Adaptation.
+"""
+
+from . import ref, stoch_sign  # noqa: F401

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth the pytest/hypothesis suite checks the kernels
+against, and they double as the executable definition of the paper's
+compression operator (Section 2 of the paper):
+
+    C_z(x) = Sign(x + sigma * xi_z),    xi_z ~ p_z(t) ∝ exp(-t^{2z}/2)
+
+with the dequantization constant ``eta_z = 2^{1/(2z)} * Gamma(1 + 1/(2z))``
+so that ``eta_z * sigma * E[C_z(x)] -> x`` as ``sigma -> inf`` (Lemma 1).
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def sign_pm1(x: jnp.ndarray) -> jnp.ndarray:
+    """The paper's Sign: +1 for x >= 0, -1 otherwise (never 0)."""
+    return jnp.where(x >= 0, 1, -1).astype(jnp.int8)
+
+
+def stoch_sign_ref(x: jnp.ndarray, noise: jnp.ndarray, sigma: jnp.ndarray) -> jnp.ndarray:
+    """Reference stochastic sign: ``Sign(x + sigma * noise)`` as int8 in {-1,+1}.
+
+    ``noise`` is pre-sampled (the kernel is deterministic given it); sampling
+    lives in :func:`sample_z_noise` / L2 so that L1 stays a pure map.
+    """
+    return sign_pm1(x + sigma * noise)
+
+
+def sgd_axpy_ref(p: jnp.ndarray, g: jnp.ndarray, lr: jnp.ndarray) -> jnp.ndarray:
+    """Reference fused SGD update: ``p - lr * g``."""
+    return p - lr * g
+
+
+def eta_z(z: int) -> float:
+    """Dequantization constant eta_z = 2^{1/(2z)} Gamma(1 + 1/(2z)).
+
+    ``z = 0`` is used as the sentinel for z = +inf (uniform noise), where
+    eta_inf = 1 (Lemma 2: p_z -> Uniform[-1, 1]).
+    """
+    if z == 0:  # z = +infinity sentinel
+        return 1.0
+    return 2.0 ** (1.0 / (2 * z)) * math.gamma(1.0 + 1.0 / (2 * z))
+
+
+def sample_z_noise(key: jax.Array, shape, z: int) -> jnp.ndarray:
+    """Sample xi ~ p_z(t) ∝ exp(-t^{2z}/2), i.i.d. over ``shape``.
+
+    z = 1 is the standard Gaussian; z = 0 (sentinel for +inf) is
+    Uniform[-1, 1]. For general finite z we use the Gamma transform: if
+    G ~ Gamma(shape=1/(2z), scale=2) then t = ±G^{1/(2z)} has density
+    ∝ exp(-t^{2z}/2)  (change of variables u = t^{2z}).
+    """
+    if z == 1:
+        return jax.random.normal(key, shape, dtype=jnp.float32)
+    if z == 0:
+        return jax.random.uniform(key, shape, dtype=jnp.float32, minval=-1.0, maxval=1.0)
+    if z < 0:
+        raise ValueError(f"invalid z={z}")
+    k_gamma, k_sign = jax.random.split(key)
+    g = jax.random.gamma(k_gamma, 1.0 / (2 * z), shape, dtype=jnp.float32) * 2.0
+    mag = g ** (1.0 / (2 * z))
+    sgn = jax.random.rademacher(k_sign, shape, dtype=jnp.float32)
+    return sgn * mag
+
+
+def compress_ref(delta: jnp.ndarray, key: jax.Array, sigma: jnp.ndarray, z: int) -> jnp.ndarray:
+    """End-to-end reference compressor: sample xi_z, perturb, take the sign."""
+    noise = sample_z_noise(key, delta.shape, z)
+    return stoch_sign_ref(delta, noise, sigma)

@@ -1,0 +1,114 @@
+"""Pallas kernels for the stochastic-sign compression hot path.
+
+The paper's compressor is an elementwise map over the (possibly multi-million
+dimensional) flattened model delta:
+
+    out[j] = Sign(x[j] + sigma * xi[j])   in {-1, +1}, emitted as int8
+
+On a real TPU this is a pure HBM-bandwidth-bound kernel; the BlockSpec below
+expresses the HBM->VMEM schedule: 1-D tiles of ``block`` lanes (default 8*128
+* 8 = 8192 elements = 32 KiB of f32 per input buffer, comfortably under the
+~16 MiB VMEM budget even with double buffering), int8 output so the store
+traffic is 1/4 of the load traffic. There is no MXU work here — compression
+rooflines on bandwidth, see DESIGN.md §Hardware-Adaptation.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, so interpret mode is both the correctness path (pytest vs
+ref.py) and the AOT path (the kernel lowers to plain HLO ops that the Rust
+PJRT client executes).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default 1-D tile: multiple of the (8, 128) f32 TPU tile, sized for VMEM.
+DEFAULT_BLOCK = 8 * 128 * 8  # 8192 lanes = 32 KiB f32 per buffer
+
+
+def _stoch_sign_kernel(x_ref, noise_ref, sigma_ref, o_ref):
+    """One VMEM tile: o = Sign(x + sigma * noise) as int8 in {-1, +1}."""
+    sigma = sigma_ref[0]
+    perturbed = x_ref[...] + sigma * noise_ref[...]
+    o_ref[...] = jnp.where(perturbed >= 0, 1, -1).astype(jnp.int8)
+
+
+def _pad_to(x: jnp.ndarray, block: int) -> jnp.ndarray:
+    """Right-pad a 1-D array to a multiple of ``block`` (zeros)."""
+    rem = (-x.shape[0]) % block
+    if rem == 0:
+        return x
+    return jnp.pad(x, (0, rem))
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def stoch_sign(x: jnp.ndarray, noise: jnp.ndarray, sigma: jnp.ndarray,
+               block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """Stochastic sign compression of a flat f32 vector.
+
+    Args:
+      x: f32[d] — the flattened model delta (``(x_{t-1} - x_{t-1,E}) / gamma``).
+      noise: f32[d] — pre-sampled xi_z (see ``ref.sample_z_noise``).
+      sigma: f32[] or f32[1] — the noise scale.
+      block: lanes per VMEM tile.
+
+    Returns:
+      int8[d] with entries in {-1, +1}: ``Sign(x + sigma * noise)``.
+    """
+    if x.ndim != 1 or noise.shape != x.shape:
+        raise ValueError(f"expected matching 1-D inputs, got {x.shape} vs {noise.shape}")
+    d = x.shape[0]
+    sigma = jnp.asarray(sigma, jnp.float32).reshape((1,))
+    xp = _pad_to(x.astype(jnp.float32), block)
+    np_ = _pad_to(noise.astype(jnp.float32), block)
+    grid = (xp.shape[0] // block,)
+    out = pl.pallas_call(
+        _stoch_sign_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),  # sigma broadcast to every tile
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0],), jnp.int8),
+        interpret=True,
+    )(xp, np_, sigma)
+    return out[:d]
+
+
+def _sgd_axpy_kernel(p_ref, g_ref, lr_ref, o_ref):
+    """One VMEM tile of the fused SGD update: o = p - lr * g."""
+    o_ref[...] = p_ref[...] - lr_ref[0] * g_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def sgd_axpy(p: jnp.ndarray, g: jnp.ndarray, lr: jnp.ndarray,
+             block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """Fused SGD parameter update ``p - lr * g`` over flat f32 vectors.
+
+    Used by the L2 ``train_step`` so the L1 kernel sits on the local-training
+    hot path as well as the compression path.
+    """
+    if p.ndim != 1 or g.shape != p.shape:
+        raise ValueError(f"expected matching 1-D inputs, got {p.shape} vs {g.shape}")
+    d = p.shape[0]
+    lr = jnp.asarray(lr, jnp.float32).reshape((1,))
+    pp = _pad_to(p.astype(jnp.float32), block)
+    gp = _pad_to(g.astype(jnp.float32), block)
+    grid = (pp.shape[0] // block,)
+    out = pl.pallas_call(
+        _sgd_axpy_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((pp.shape[0],), jnp.float32),
+        interpret=True,
+    )(pp, gp, lr)
+    return out[:d]

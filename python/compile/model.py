@@ -1,0 +1,237 @@
+"""Layer-2 JAX model definitions and FL entry points for z-SignFedAvg.
+
+Everything here is *build-time only*: `aot.py` lowers the jitted functions to
+HLO text that the Rust coordinator loads through PJRT. Parameters travel as a
+single flat f32 vector (``ravel_pytree``) so the L3 compression codec and the
+L1 kernels operate on one contiguous buffer.
+
+Entry points lowered per model (see ``aot.py``):
+
+* ``train_step(params, x, y, lr) -> (params', loss)`` — one SGD minibatch
+  step; the parameter update runs through the L1 fused ``sgd_axpy`` kernel.
+* ``local_update_E{e}(params, xs, ys, lr) -> (params', mean_loss)`` — E SGD
+  steps folded into one artifact via ``lax.scan`` (one PJRT call per client
+  per round instead of E).
+* ``eval_step(params, x, y) -> (sum_loss, n_correct)`` — test-set shard eval.
+* ``compress_z{z}(delta, key, sigma) -> int8 signs`` — threefry xi_z sampling
+  plus the L1 stochastic-sign kernel; ``z=0`` is the z=+inf (uniform) case.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+
+from .kernels import ref, stoch_sign
+
+
+# ---------------------------------------------------------------------------
+# Architectures
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Static description of one model variant (fixed at AOT time)."""
+
+    name: str
+    input_shape: Tuple[int, ...]  # (H, W, C)
+    num_classes: int
+    arch: str  # "mlp" | "cnn"
+    hidden: Tuple[int, ...] = (128,)
+    conv_channels: Tuple[int, ...] = (8, 16)
+    train_batch: int = 32
+    eval_batch: int = 256
+
+
+# The paper's workloads, scaled to the 1-core CPU testbed (see DESIGN.md §3).
+MODEL_SPECS: Dict[str, ModelSpec] = {
+    # §4.2 non-iid MNIST: "simple two-layer CNN from the PyTorch tutorial".
+    "mnist_cnn": ModelSpec("mnist_cnn", (28, 28, 1), 10, "cnn"),
+    # MLP variant used by the quickstart + ablations (smaller & faster).
+    "mnist_mlp": ModelSpec("mnist_mlp", (28, 28, 1), 10, "mlp", hidden=(64,)),
+    # §4.3 EMNIST: same CNN, 62 classes.
+    "emnist_cnn": ModelSpec("emnist_cnn", (28, 28, 1), 62, "cnn"),
+    # §4.3 CIFAR-10: ResNet18 in the paper; small CNN here (DESIGN.md §3).
+    "cifar_cnn": ModelSpec("cifar_cnn", (32, 32, 3), 10, "cnn",
+                           conv_channels=(16, 32), hidden=(64,)),
+}
+
+
+def _init_dense(key, fan_in: int, fan_out: int):
+    """He-uniform dense init (matches PyTorch's default Linear init scale)."""
+    bound = float(np.sqrt(1.0 / fan_in))
+    kw, kb = jax.random.split(key)
+    w = jax.random.uniform(kw, (fan_in, fan_out), jnp.float32, -bound, bound)
+    b = jax.random.uniform(kb, (fan_out,), jnp.float32, -bound, bound)
+    return {"w": w, "b": b}
+
+
+def _init_conv(key, kh: int, kw_: int, cin: int, cout: int):
+    fan_in = kh * kw_ * cin
+    bound = float(np.sqrt(1.0 / fan_in))
+    kw1, kb = jax.random.split(key)
+    w = jax.random.uniform(kw1, (kh, kw_, cin, cout), jnp.float32, -bound, bound)
+    b = jax.random.uniform(kb, (cout,), jnp.float32, -bound, bound)
+    return {"w": w, "b": b}
+
+
+def _conv_out_hw(h: int, w: int) -> Tuple[int, int]:
+    """Spatial size after one VALID 3x3 conv + 2x2 max-pool."""
+    return (h - 2) // 2, (w - 2) // 2
+
+
+def init_params(spec: ModelSpec, seed: int = 0):
+    """Build the parameter pytree for ``spec``. Deterministic in ``seed``."""
+    key = jax.random.PRNGKey(seed)
+    h, w, c = spec.input_shape
+    params: Dict[str, Dict[str, jnp.ndarray]] = {}
+    if spec.arch == "cnn":
+        cin = c
+        for li, cout in enumerate(spec.conv_channels):
+            key, sub = jax.random.split(key)
+            params[f"conv{li}"] = _init_conv(sub, 3, 3, cin, cout)
+            h, w = _conv_out_hw(h, w)
+            cin = cout
+        flat_dim = h * w * cin
+    else:
+        flat_dim = h * w * c
+    prev = flat_dim
+    for li, hid in enumerate(spec.hidden):
+        key, sub = jax.random.split(key)
+        params[f"fc{li}"] = _init_dense(sub, prev, hid)
+        prev = hid
+    key, sub = jax.random.split(key)
+    params["out"] = _init_dense(sub, prev, spec.num_classes)
+    return params
+
+
+def forward(spec: ModelSpec, params, x: jnp.ndarray) -> jnp.ndarray:
+    """Logits for a batch ``x: f32[B, H, W, C]``."""
+    if spec.arch == "cnn":
+        for li in range(len(spec.conv_channels)):
+            p = params[f"conv{li}"]
+            x = jax.lax.conv_general_dilated(
+                x, p["w"], window_strides=(1, 1), padding="VALID",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            x = jax.nn.relu(x + p["b"])
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+        x = x.reshape((x.shape[0], -1))
+    else:
+        x = x.reshape((x.shape[0], -1))
+    for li in range(len(spec.hidden)):
+        p = params[f"fc{li}"]
+        x = jax.nn.relu(x @ p["w"] + p["b"])
+    p = params["out"]
+    return x @ p["w"] + p["b"]
+
+
+def cross_entropy(logits: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Mean softmax cross-entropy; ``y: int32[B]`` class indices."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None].astype(jnp.int32), axis=-1)
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# Flat-vector plumbing and AOT entry points
+# ---------------------------------------------------------------------------
+
+def flat_init(spec: ModelSpec, seed: int = 0):
+    """Initial flat parameter vector + the unravel closure for ``spec``."""
+    params = init_params(spec, seed)
+    flat, unravel = ravel_pytree(params)
+    return flat.astype(jnp.float32), unravel
+
+
+def make_entry_points(spec: ModelSpec) -> Dict[str, Callable]:
+    """Build the jittable FL entry points for one model variant.
+
+    All functions take/return flat f32 parameter vectors so that Rust's codec
+    and the L1 kernels see a single contiguous buffer.
+    """
+    _, unravel = flat_init(spec, seed=0)
+
+    def loss_fn(flat_params, x, y):
+        return cross_entropy(forward(spec, unravel(flat_params), x), y)
+
+    def train_step(flat_params, x, y, lr):
+        loss, grad = jax.value_and_grad(loss_fn)(flat_params, x, y)
+        # L1 fused update kernel on the hot path.
+        new_flat = stoch_sign.sgd_axpy(flat_params, grad, lr)
+        return new_flat, loss
+
+    def make_local_update(num_steps: int):
+        def local_update(flat_params, xs, ys, lr):
+            """E SGD steps over stacked batches xs: f32[E,B,H,W,C]."""
+            def body(p, batch):
+                bx, by = batch
+                p2, l = train_step(p, bx, by, lr)
+                return p2, l
+            final, losses = jax.lax.scan(body, flat_params, (xs, ys), length=num_steps)
+            return final, jnp.mean(losses)
+        return local_update
+
+    def eval_step(flat_params, x, y):
+        logits = forward(spec, unravel(flat_params), x)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, y[:, None].astype(jnp.int32), axis=-1)
+        pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        correct = jnp.sum((pred == y).astype(jnp.int32))
+        return jnp.sum(nll), correct
+
+    return {
+        "train_step": train_step,
+        "eval_step": eval_step,
+        "make_local_update": make_local_update,
+        "loss_fn": loss_fn,
+    }
+
+
+def pack_signs_u32(signs: jnp.ndarray) -> jnp.ndarray:
+    """Pack int8 ±1 signs into u32 words (bit j%32 of word j/32 = sign>0).
+
+    Trailing bits of the last word are 0 (decode as −1), matching the Rust
+    `PackedSigns` convention. Packing on-device shrinks the PJRT transfer by
+    8× vs the int8 sign vector (see EXPERIMENTS.md §Perf).
+    """
+    d = signs.shape[0]
+    rem = (-d) % 32
+    bits = (signs > 0).astype(jnp.uint32)
+    if rem:
+        bits = jnp.pad(bits, (0, rem))
+    weights = jnp.left_shift(jnp.uint32(1), jnp.arange(32, dtype=jnp.uint32))
+    return jnp.sum(bits.reshape(-1, 32) * weights, axis=1, dtype=jnp.uint32)
+
+
+def make_compress_packed(z: int) -> Callable:
+    """Compression entry point with on-device bit packing: u32[ceil(d/32)]."""
+    compress = make_compress(z)
+
+    def packed(delta, key, sigma):
+        return pack_signs_u32(compress(delta, key, sigma))
+
+    return packed
+
+
+def make_compress(z: int) -> Callable:
+    """Compression entry point for noise family ``z`` (0 = z=+inf/uniform).
+
+    ``compress(delta, key, sigma) -> int8[d]``: samples xi_z with threefry,
+    then runs the L1 stochastic-sign kernel. The vanilla (noiseless) SignSGD
+    baseline is this with sigma = 0.
+    """
+    def compress(delta, key, sigma):
+        noise = ref.sample_z_noise(key, delta.shape, z)
+        return stoch_sign.stoch_sign(delta, noise, sigma)
+    return compress
+
+
+def param_count(spec: ModelSpec) -> int:
+    flat, _ = flat_init(spec)
+    return int(flat.shape[0])

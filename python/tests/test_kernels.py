@@ -1,0 +1,124 @@
+"""L1 kernel correctness: Pallas stoch_sign / sgd_axpy vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the compression hot path. Hypothesis
+sweeps shapes, noise scales and block sizes; the oracle is ``ref.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, stoch_sign
+
+
+def _rand(key, d, scale=3.0):
+    return scale * jax.random.normal(key, (d,), dtype=jnp.float32)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    d=st.integers(min_value=1, max_value=5000),
+    sigma=st.floats(min_value=0.0, max_value=100.0, allow_nan=False),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_stoch_sign_matches_ref(d, sigma, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = _rand(k1, d)
+    noise = jax.random.normal(k2, (d,), dtype=jnp.float32)
+    got = stoch_sign.stoch_sign(x, noise, jnp.float32(sigma))
+    want = ref.stoch_sign_ref(x, noise, jnp.float32(sigma))
+    assert got.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    d=st.integers(min_value=1, max_value=4096),
+    block=st.sampled_from([8, 128, 1024, stoch_sign.DEFAULT_BLOCK]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_stoch_sign_block_invariance(d, block, seed):
+    """The tiling/padding schedule must not change the numerics."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = _rand(k1, d)
+    noise = jax.random.normal(k2, (d,), dtype=jnp.float32)
+    got = stoch_sign.stoch_sign(x, noise, jnp.float32(1.5), block=block)
+    want = ref.stoch_sign_ref(x, noise, jnp.float32(1.5))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    d=st.integers(min_value=1, max_value=5000),
+    lr=st.floats(min_value=0.0, max_value=10.0, allow_nan=False),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_sgd_axpy_matches_ref(d, lr, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    p = _rand(k1, d)
+    g = _rand(k2, d)
+    got = stoch_sign.sgd_axpy(p, g, jnp.float32(lr))
+    want = ref.sgd_axpy_ref(p, g, jnp.float32(lr))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+def test_sign_of_zero_is_plus_one():
+    """The paper defines Sign(0) = +1; the codec on the Rust side relies on it."""
+    x = jnp.zeros((16,), jnp.float32)
+    out = stoch_sign.stoch_sign(x, x, jnp.float32(0.0))
+    assert np.all(np.asarray(out) == 1)
+
+
+def test_zero_sigma_is_deterministic_sign():
+    """sigma = 0 must reduce to vanilla SignSGD regardless of the noise."""
+    key = jax.random.PRNGKey(7)
+    x = _rand(key, 4096)
+    noise = 1e6 * jnp.ones_like(x)
+    out = stoch_sign.stoch_sign(x, noise, jnp.float32(0.0))
+    want = ref.sign_pm1(x)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_output_always_pm1():
+    key = jax.random.PRNGKey(3)
+    x = _rand(key, 10_000, scale=100.0)
+    noise = jax.random.normal(jax.random.PRNGKey(4), (10_000,), dtype=jnp.float32)
+    out = np.asarray(stoch_sign.stoch_sign(x, noise, jnp.float32(10.0)))
+    assert set(np.unique(out)).issubset({-1, 1})
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    d=st.integers(min_value=1, max_value=3000),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_pack_signs_u32_matches_manual(d, seed):
+    """On-device bit packing must match the Rust PackedSigns convention:
+    coordinate j -> word j//32, bit j%32; trailing bits zero."""
+    from compile import model as M
+    signs = np.asarray(
+        ref.sign_pm1(jax.random.normal(jax.random.PRNGKey(seed), (d,), dtype=jnp.float32)))
+    words = np.asarray(M.pack_signs_u32(jnp.asarray(signs)))
+    assert words.dtype == np.uint32
+    assert len(words) == (d + 31) // 32
+    for j in range(d):
+        bit = (words[j // 32] >> (j % 32)) & 1
+        assert bit == (1 if signs[j] > 0 else 0), f"j={j}"
+    # Trailing bits zero.
+    if d % 32:
+        tail = words[-1] >> (d % 32)
+        assert tail == 0
+
+
+@pytest.mark.parametrize("d", [1, 7, 8192, 8193, 3 * 8192 + 5])
+def test_padding_boundary_dims(d):
+    """Dims straddling tile boundaries must round-trip exactly."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(d))
+    x = _rand(k1, d)
+    noise = jax.random.normal(k2, (d,), dtype=jnp.float32)
+    got = stoch_sign.stoch_sign(x, noise, jnp.float32(0.7))
+    want = ref.stoch_sign_ref(x, noise, jnp.float32(0.7))
+    assert got.shape == (d,)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -1,0 +1,104 @@
+"""L2 model correctness: gradients, training dynamics, eval, local_update."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+TINY = M.ModelSpec("tiny_mlp", (6, 6, 1), 3, "mlp", hidden=(8,), train_batch=8, eval_batch=16)
+TINY_CNN = M.ModelSpec("tiny_cnn", (10, 10, 1), 3, "cnn", conv_channels=(2, 4),
+                       hidden=(8,), train_batch=8, eval_batch=16)
+
+
+def _batch(spec, key, b=None):
+    b = b or spec.train_batch
+    kx, ky = jax.random.split(key)
+    x = jax.random.normal(kx, (b, *spec.input_shape), dtype=jnp.float32)
+    y = jax.random.randint(ky, (b,), 0, spec.num_classes, dtype=jnp.int32)
+    return x, y
+
+
+@pytest.mark.parametrize("spec", [TINY, TINY_CNN], ids=["mlp", "cnn"])
+def test_grad_matches_finite_difference(spec):
+    flat, _ = M.flat_init(spec, seed=1)
+    eps_fns = M.make_entry_points(spec)
+    x, y = _batch(spec, jax.random.PRNGKey(0))
+    loss_fn = eps_fns["loss_fn"]
+    g = jax.grad(loss_fn)(flat, x, y)
+    # Check a handful of random coordinates by central differences.
+    rng = np.random.default_rng(0)
+    idx = rng.choice(flat.shape[0], size=8, replace=False)
+    h = 1e-3
+    for j in idx:
+        e = jnp.zeros_like(flat).at[j].set(h)
+        fd = (loss_fn(flat + e, x, y) - loss_fn(flat - e, x, y)) / (2 * h)
+        assert float(fd) == pytest.approx(float(g[j]), rel=0.05, abs=1e-4)
+
+
+@pytest.mark.parametrize("spec", [TINY, TINY_CNN], ids=["mlp", "cnn"])
+def test_training_decreases_loss(spec):
+    flat, _ = M.flat_init(spec, seed=0)
+    fns = M.make_entry_points(spec)
+    x, y = _batch(spec, jax.random.PRNGKey(3))
+    loss0 = float(fns["loss_fn"](flat, x, y))
+    p = flat
+    for _ in range(30):
+        p, loss = fns["train_step"](p, x, y, jnp.float32(0.1))
+    assert float(loss) < loss0 * 0.8
+
+
+def test_local_update_equals_repeated_train_steps():
+    spec = TINY
+    flat, _ = M.flat_init(spec, seed=0)
+    fns = M.make_entry_points(spec)
+    E = 4
+    keys = jax.random.split(jax.random.PRNGKey(5), E)
+    xs = jnp.stack([_batch(spec, k)[0] for k in keys])
+    ys = jnp.stack([_batch(spec, k)[1] for k in keys])
+    lu = fns["make_local_update"](E)
+    p_scan, mean_loss = lu(flat, xs, ys, jnp.float32(0.05))
+    p_loop, losses = flat, []
+    for e in range(E):
+        p_loop, l = fns["train_step"](p_loop, xs[e], ys[e], jnp.float32(0.05))
+        losses.append(float(l))
+    np.testing.assert_allclose(np.asarray(p_scan), np.asarray(p_loop), rtol=2e-5, atol=2e-6)
+    assert float(mean_loss) == pytest.approx(np.mean(losses), rel=1e-5)
+
+
+def test_eval_step_counts_correct():
+    spec = TINY
+    flat, _ = M.flat_init(spec, seed=0)
+    fns = M.make_entry_points(spec)
+    x, y = _batch(spec, jax.random.PRNGKey(9), b=spec.eval_batch)
+    sum_loss, correct = fns["eval_step"](flat, x, y)
+    # Recompute with numpy.
+    logits = np.asarray(M.forward(spec, M.init_params(spec, 0), x))
+    pred = logits.argmax(-1)
+    assert int(correct) == int((pred == np.asarray(y)).sum())
+    assert float(sum_loss) > 0
+
+
+def test_param_count_consistency():
+    for name, spec in M.MODEL_SPECS.items():
+        d = M.param_count(spec)
+        flat, _ = M.flat_init(spec)
+        assert flat.shape == (d,), name
+        assert d > 0
+
+
+def test_init_deterministic_in_seed():
+    a, _ = M.flat_init(TINY, seed=7)
+    b, _ = M.flat_init(TINY, seed=7)
+    c, _ = M.flat_init(TINY, seed=8)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_compress_entry_zero_sigma_is_sign():
+    delta = jnp.linspace(-1, 1, 257, dtype=jnp.float32)
+    comp = M.make_compress(1)
+    out = np.asarray(comp(delta, jax.random.PRNGKey(0), jnp.float32(0.0)))
+    want = np.where(np.asarray(delta) >= 0, 1, -1)
+    np.testing.assert_array_equal(out, want)

@@ -1,0 +1,130 @@
+"""Statistical validation of the z-distribution machinery (paper §2).
+
+Checks Definition 1 (the z-distribution sampler), Lemma 1 (the bias bound of
+the dequantized stochastic sign) and Lemma 2 (z -> inf weak convergence to
+Uniform[-1,1]) by Monte-Carlo against closed forms.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from scipy import stats as spstats
+
+from compile.kernels import ref
+
+
+def test_eta_z_closed_forms():
+    # eta_1 = sqrt(2) * Gamma(3/2) = sqrt(pi/2)
+    assert ref.eta_z(1) == pytest.approx(math.sqrt(math.pi / 2), rel=1e-12)
+    # eta_inf = 1 (uniform noise needs no correction beyond sigma)
+    assert ref.eta_z(0) == 1.0
+    # eta_z is decreasing in z towards 1
+    vals = [ref.eta_z(z) for z in (1, 2, 3, 5, 10, 50)]
+    assert all(a > b for a, b in zip(vals, vals[1:]))
+    assert vals[-1] == pytest.approx(1.0, abs=0.02)
+
+
+@pytest.mark.parametrize("z", [1, 2, 3])
+def test_z_noise_moments(z):
+    """E[xi]=0 and E[xi^2] matches the closed form of p_z."""
+    n = 200_000
+    xi = np.asarray(ref.sample_z_noise(jax.random.PRNGKey(z), (n,), z))
+    # mean
+    assert abs(xi.mean()) < 5 * xi.std() / math.sqrt(n)
+    # E[t^2] for p_z: 2^{1/z} Gamma(3/(2z)) / (2z * eta_z / (2z)) ... compute by
+    # quadrature instead of deriving the closed form.
+    from scipy.integrate import quad
+    eta = ref.eta_z(z)
+    # Integrand is concentrated near the origin for large z; keep the domain
+    # tight so the adaptive quadrature cannot miss the bump.
+    m2, _ = quad(lambda t: t * t * math.exp(-(t ** (2 * z)) / 2) / (2 * eta), -6, 6)
+    assert xi.var() == pytest.approx(m2, rel=0.03)
+
+
+def test_z1_is_standard_gaussian():
+    n = 100_000
+    xi = np.asarray(ref.sample_z_noise(jax.random.PRNGKey(0), (n,), 1))
+    _, p = spstats.kstest(xi, "norm")
+    assert p > 1e-3
+
+
+def test_zinf_is_uniform():
+    n = 100_000
+    xi = np.asarray(ref.sample_z_noise(jax.random.PRNGKey(0), (n,), 0))
+    _, p = spstats.kstest(xi, spstats.uniform(loc=-1, scale=2).cdf)
+    assert p > 1e-3
+    assert xi.min() >= -1 and xi.max() <= 1
+
+
+@pytest.mark.parametrize("z", [2, 4])
+def test_general_z_density_via_ks(z):
+    """KS test of the Gamma-transform sampler against the exact CDF of p_z."""
+    from scipy.integrate import quad
+    n = 50_000
+    xi = np.asarray(ref.sample_z_noise(jax.random.PRNGKey(11), (n,), z))
+    eta = ref.eta_z(z)
+
+    def cdf(t):
+        t = np.atleast_1d(t)
+        out = np.empty_like(t, dtype=float)
+        for i, ti in enumerate(t):
+            v, _ = quad(lambda s: math.exp(-(s ** (2 * z)) / 2) / (2 * eta), -10, ti)
+            out[i] = v
+        return out
+
+    sub = np.sort(xi)[:: n // 500]  # KS on a sub-sample for quadrature speed
+    _, p = spstats.kstest(sub, cdf)
+    assert p > 1e-3
+
+
+@pytest.mark.parametrize("z,sigma", [(1, 5.0), (1, 20.0), (2, 5.0), (0, 5.0)])
+def test_lemma1_bias_bound(z, sigma):
+    """||eta_z sigma E[Sign(x+sigma xi)] - x||^2 <= ||x||_{4z+2}^{4z+2}/(4(2z+1)^2 sigma^{4z}).
+
+    For z=0 (uniform), the bias is exactly 0 once sigma > ||x||_inf (Remark 1).
+    Monte-Carlo estimate with enough repeats that the MC error is far below
+    the bound.
+    """
+    d, reps = 64, 4000
+    key = jax.random.PRNGKey(42)
+    x = 2.0 * jax.random.normal(key, (d,), dtype=jnp.float32)
+    eta = ref.eta_z(z)
+
+    keys = jax.random.split(jax.random.PRNGKey(7), reps)
+    signs = jax.vmap(lambda k: ref.compress_ref(x, k, jnp.float32(sigma), z))(keys)
+    est = eta * sigma * np.asarray(signs, dtype=np.float64).mean(axis=0)
+    bias_sq = float(np.sum((est - np.asarray(x)) ** 2))
+
+    mc_err = d * (eta * sigma) ** 2 / reps  # per-coordinate MC variance bound
+    if z == 0:
+        assert sigma > float(jnp.max(jnp.abs(x)))
+        assert bias_sq <= 4 * mc_err
+    else:
+        zz = z
+        bound = float(jnp.sum(jnp.abs(x) ** (4 * zz + 2))) / (
+            4 * (2 * zz + 1) ** 2 * sigma ** (4 * zz))
+        assert bias_sq <= bound + 4 * mc_err
+
+
+def test_unbiasedness_improves_with_sigma():
+    """The dequantized-sign bias must shrink as sigma grows: O(sigma^{-2z}).
+
+    For z=1 the expectation is available in closed form,
+    E[Sign(x + sigma*xi)] = 2*Phi(x/sigma) - 1, so the bias
+    ``eta_1 * sigma * (2*Phi(x/sigma) - 1) - x`` is computed exactly (this also
+    pins down eta_1 = sqrt(pi/2): any other constant breaks the decay).
+    """
+    x = np.asarray(1.5 * jax.random.normal(jax.random.PRNGKey(1), (32,), dtype=jnp.float32),
+                   dtype=np.float64)
+    eta = ref.eta_z(1)
+    sigmas = np.array([2.0, 8.0, 32.0, 128.0])
+    biases = []
+    for sigma in sigmas:
+        est = eta * sigma * (2.0 * spstats.norm.cdf(x / sigma) - 1.0)
+        biases.append(np.abs(est - x).mean())
+    # Strictly decreasing, and the tail decays like sigma^{-2} (ratio ~16x per 4x sigma).
+    assert all(a > b for a, b in zip(biases, biases[1:])), biases
+    assert biases[3] < biases[2] / 8

@@ -1,0 +1,99 @@
+//! Ablation bench: the design choices DESIGN.md calls out, measured.
+//!
+//! * compressor bit-efficiency at equal rounds (sign vs QSGD vs top-k vs
+//!   sparse-sign vs dense) — bits to reach a fixed optimality gap;
+//! * downlink compression on/off — total traffic and final gap;
+//! * server optimizer (SGD vs momentum vs FedAdam) at equal rounds;
+//! * simulated time-to-target on a cross-device link (net::LinkModel).
+
+use zsignfedavg::fl::backend::AnalyticBackend;
+use zsignfedavg::fl::server::{run_experiment, ServerConfig};
+use zsignfedavg::fl::AlgorithmConfig;
+use zsignfedavg::net::{simulate_timeline, LinkModel};
+use zsignfedavg::problems::consensus::Consensus;
+use zsignfedavg::problems::AnalyticProblem;
+use zsignfedavg::rng::ZParam;
+
+fn main() {
+    let n = 10;
+    let d = 2000;
+    let rounds = 1200;
+    let f_star = Consensus::gaussian(n, d, 21).optimal_value().unwrap();
+    let cfg = ServerConfig { rounds, eval_every: 25, ..Default::default() };
+    let link = LinkModel::cross_device();
+
+    println!("== ablation: compressors on consensus n={n} d={d}, {rounds} rounds ==");
+    // Time-to-target threshold: above the sign-methods' variance floor
+    // (~3 at this sigma/d) so every convergent algorithm registers a time.
+    let target_gap = 5.0;
+    println!(
+        "{:<26} {:>12} {:>14} {:>16} {:>18}",
+        "algorithm", "final gap", "uplink Mbit", "bits/coord/rnd", "sim t@gap<5 (s)"
+    );
+    let algos = vec![
+        AlgorithmConfig::gd().with_lrs(0.02, 1.0),
+        AlgorithmConfig::z_signsgd(ZParam::Finite(1), 3.0).with_lrs(0.02, 1.0),
+        AlgorithmConfig::z_signsgd(ZParam::Inf, 3.0).with_lrs(0.02, 1.0),
+        AlgorithmConfig::qsgd(1).with_lrs(0.02, 1.0),
+        AlgorithmConfig::qsgd(4).with_lrs(0.02, 1.0),
+        AlgorithmConfig::topk(0.05, 1).with_lrs(0.02, 1.0),
+        AlgorithmConfig::sparse_sign(0.05, ZParam::Finite(1), 3.0, 1).with_lrs(0.02, 1.0),
+    ];
+    for algo in &algos {
+        let mut b = AnalyticBackend::new(Consensus::gaussian(n, d, 21));
+        let run = run_experiment(&mut b, algo, &cfg);
+        let gap = run.final_objective() - f_star;
+        let bits = run.total_bits();
+        let per_coord = bits as f64 / (rounds * n * d) as f64;
+        // Simulated time until gap < 1.0 under the cross-device link (use
+        // the objective as the "accuracy" channel via a shim).
+        let timeline = simulate_timeline(&run, &link, n);
+        let t_hit = timeline
+            .iter()
+            .find(|t| t.record.objective - f_star < target_gap)
+            .map(|t| format!("{:.1}", t.sim_time_s))
+            .unwrap_or_else(|| "-".into());
+        println!(
+            "{:<26} {:>12.4} {:>14.2} {:>16.2} {:>18}",
+            algo.name,
+            gap,
+            bits as f64 / 1e6,
+            per_coord,
+            t_hit
+        );
+    }
+
+    println!("\n== ablation: downlink compression (1-SignSGD) ==");
+    // The downlink payload is the mean-vote vector (entries in [-1, 1]), so
+    // its noise scale is matched to that magnitude, not the gradients'.
+    for (label, downlink) in [("dense downlink", None), ("sign downlink", Some((ZParam::Finite(1), 0.5f32)))] {
+        let mut b = AnalyticBackend::new(Consensus::gaussian(n, d, 21));
+        let algo = AlgorithmConfig::z_signsgd(ZParam::Finite(1), 3.0).with_lrs(0.02, 1.0);
+        let c = ServerConfig { downlink_sign: downlink, ..cfg.clone() };
+        let run = run_experiment(&mut b, &algo, &c);
+        let last = run.records.last().unwrap();
+        println!(
+            "  {label:<18} final gap {:>9.4}   up {:>8.2} Mbit   down {:>8.2} Mbit",
+            last.objective - f_star,
+            last.bits_up as f64 / 1e6,
+            last.bits_down as f64 / 1e6
+        );
+    }
+
+    println!("\n== ablation: server optimizer (1-SignFedAvg E=2) ==");
+    // Momentum/Adam act on constant-magnitude sign votes, so their server
+    // stepsizes are scaled down accordingly (momentum amplifies ~1/(1-β)).
+    for algo in [
+        AlgorithmConfig::z_signfedavg(ZParam::Finite(1), 4.0, 2).with_lrs(0.02, 1.0),
+        AlgorithmConfig::z_signfedavg(ZParam::Finite(1), 4.0, 2)
+            .with_lrs(0.02, 0.1)
+            .with_momentum(0.9),
+        AlgorithmConfig::z_signfedavg(ZParam::Finite(1), 4.0, 2)
+            .with_lrs(0.02, 0.3)
+            .with_server_adam(),
+    ] {
+        let mut b = AnalyticBackend::new(Consensus::gaussian(n, d, 21));
+        let run = run_experiment(&mut b, &algo, &cfg);
+        println!("  {:<28} final gap {:>9.4}", algo.name, run.final_objective() - f_star);
+    }
+}

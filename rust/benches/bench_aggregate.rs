@@ -1,0 +1,64 @@
+//! Bench: server-side sign-vote aggregation — the L3 hot path that scales
+//! with n·d per round (Algorithm 1 line 15).
+//!
+//! Compares the packed word-walking `VoteAccumulator` against a naive
+//! unpack-and-add baseline, plus the final dequantize (`mean_into`) and the
+//! dense-mean path used by FedAvg/QSGD.
+
+use zsignfedavg::bench::{bench, BenchConfig};
+use zsignfedavg::compress::pack::{PackedSigns, VoteAccumulator};
+use zsignfedavg::rng::Pcg64;
+use zsignfedavg::tensor;
+use zsignfedavg::testutil::{gen_signs, gen_vec_f32};
+
+fn main() {
+    let cfg = BenchConfig::default();
+    println!("== sign-vote aggregation (per-round server cost) ==");
+    for &(n, d) in &[(10usize, 1_048_576usize), (100, 65_536)] {
+        let mut rng = Pcg64::seeded(7);
+        let packed: Vec<PackedSigns> = (0..n)
+            .map(|_| PackedSigns::from_signs(&gen_signs(&mut rng, d)))
+            .collect();
+        let mut acc = VoteAccumulator::new(d);
+
+        let r = bench(&format!("votes_packed/n={n},d={d}"), cfg, || {
+            acc.reset();
+            for p in &packed {
+                acc.add(std::hint::black_box(p));
+            }
+        });
+        println!("{}", r.report_throughput((n * d) as f64, "vote"));
+
+        // Naive baseline: unpack to i8 then add per coordinate.
+        let mut signs = vec![0i8; d];
+        let mut counts = vec![0i32; d];
+        let r = bench(&format!("votes_naive/n={n},d={d}"), cfg, || {
+            counts.iter_mut().for_each(|c| *c = 0);
+            for p in &packed {
+                p.unpack_into(&mut signs);
+                for (c, &s) in counts.iter_mut().zip(&signs) {
+                    *c += s as i32;
+                }
+            }
+        });
+        println!("{}", r.report_throughput((n * d) as f64, "vote"));
+
+        let mut update = vec![0.0f32; d];
+        let r = bench(&format!("mean_into/d={d}"), cfg, || {
+            acc.mean_into(0.01, std::hint::black_box(&mut update));
+        });
+        println!("{}", r.report_throughput(d as f64, "elem"));
+
+        // Dense aggregation baseline (FedAvg path): n axpys.
+        let dense: Vec<Vec<f32>> = (0..n).map(|_| gen_vec_f32(&mut rng, d, 1.0)).collect();
+        let mut agg = vec![0.0f32; d];
+        let r = bench(&format!("dense_mean/n={n},d={d}"), cfg, || {
+            agg.iter_mut().for_each(|v| *v = 0.0);
+            for v in &dense {
+                tensor::axpy(1.0 / n as f32, std::hint::black_box(v), &mut agg);
+            }
+        });
+        println!("{}", r.report_throughput((n * d) as f64, "elem"));
+        println!();
+    }
+}

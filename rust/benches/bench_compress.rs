@@ -1,0 +1,60 @@
+//! Bench: the uplink compression hot path (Rust reference implementations).
+//!
+//! Regenerates the per-coordinate cost rows behind the paper's Table 2
+//! bits-per-round column: stochastic sign (z = 1, z = ∞, z = 2), vanilla
+//! sign, 1-bit packing, and the QSGD quantizer across problem dimensions.
+//! Run with `cargo bench --bench bench_compress`.
+
+use zsignfedavg::bench::{bench, BenchConfig};
+use zsignfedavg::compress::pack::PackedSigns;
+use zsignfedavg::compress::qsgd::Qsgd;
+use zsignfedavg::compress::sign::{SigmaRule, StochasticSign};
+use zsignfedavg::rng::{Pcg64, ZParam};
+use zsignfedavg::testutil::gen_vec_f32;
+
+fn main() {
+    let cfg = BenchConfig::default();
+    println!("== compression hot path ==");
+    for &d in &[65_536usize, 1_048_576] {
+        let mut rng = Pcg64::seeded(42);
+        let x = gen_vec_f32(&mut rng, d, 1.0);
+        let mut out = vec![0i8; d];
+
+        // Vanilla sign (sigma = 0): the floor.
+        let mut det = StochasticSign::deterministic();
+        let r = bench(&format!("sign_det/d={d}"), cfg, || {
+            det.compress_into(std::hint::black_box(&x), &mut rng, &mut out);
+        });
+        println!("{}", r.report_throughput(d as f64, "elem"));
+
+        for z in [ZParam::Finite(1), ZParam::Inf, ZParam::Finite(2)] {
+            let mut c = StochasticSign::new(z, SigmaRule::Fixed(0.5));
+            let r = bench(&format!("stoch_sign_z{z}/d={d}"), cfg, || {
+                c.compress_into(std::hint::black_box(&x), &mut rng, &mut out);
+            });
+            println!("{}", r.report_throughput(d as f64, "elem"));
+        }
+
+        // 1-bit packing + unpack round trip.
+        let r = bench(&format!("pack/d={d}"), cfg, || {
+            std::hint::black_box(PackedSigns::from_signs(&out));
+        });
+        println!("{}", r.report_throughput(d as f64, "elem"));
+        let packed = PackedSigns::from_signs(&out);
+        let mut unpacked = vec![0i8; d];
+        let r = bench(&format!("unpack/d={d}"), cfg, || {
+            packed.unpack_into(std::hint::black_box(&mut unpacked));
+        });
+        println!("{}", r.report_throughput(d as f64, "elem"));
+
+        // QSGD quantize (s = 1 and s = 4).
+        for s in [1u32, 4] {
+            let q = Qsgd::new(s);
+            let r = bench(&format!("qsgd_s{s}/d={d}"), cfg, || {
+                std::hint::black_box(q.quantize(&x, &mut rng));
+            });
+            println!("{}", r.report_throughput(d as f64, "elem"));
+        }
+        println!();
+    }
+}

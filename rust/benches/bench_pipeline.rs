@@ -1,0 +1,63 @@
+//! Bench: whole coordinator rounds, end to end.
+//!
+//! * Analytic consensus rounds at d = 10^5 (the Fig. 1/2 workload) — pure-L3
+//!   cost: local updates + Rust compression + vote aggregation + server step.
+//! * One full XLA-backed round of 1-SignSGD on synthMNIST (train_step ×10 +
+//!   Pallas compress ×10 + vote aggregation) — L3 overhead should be a small
+//!   fraction of this (the §Perf target).
+
+use std::path::Path;
+use zsignfedavg::bench::{bench, BenchConfig};
+use zsignfedavg::data::{partition, synth};
+use zsignfedavg::fl::server::{run_experiment, ServerConfig};
+use zsignfedavg::fl::AlgorithmConfig;
+use zsignfedavg::fl::backend::AnalyticBackend;
+use zsignfedavg::problems::consensus::Consensus;
+use zsignfedavg::rng::ZParam;
+use zsignfedavg::runtime::{ModelRuntime, XlaBackend};
+
+fn main() {
+    let cfg = BenchConfig { warmup_time_s: 0.5, samples: 15, min_batch_time_s: 0.05 };
+    println!("== end-to-end coordinator rounds ==");
+
+    // Analytic path: 10 clients, d = 100k, 1-SignSGD, one round per iter.
+    for &d in &[10_000usize, 100_000] {
+        let algo = AlgorithmConfig::z_signsgd(ZParam::Finite(1), 1.0).with_lrs(0.01, 1.0);
+        let sc = ServerConfig { rounds: 1, eval_every: 1000, ..Default::default() };
+        let mut backend = AnalyticBackend::new(Consensus::gaussian(10, d, 1));
+        let r = bench(&format!("analytic_round/1-SignSGD/d={d}"), cfg, || {
+            std::hint::black_box(run_experiment(&mut backend, &algo, &sc));
+        });
+        println!("{}", r.report());
+
+        let algo_gd = AlgorithmConfig::gd().with_lrs(0.01, 1.0);
+        let r = bench(&format!("analytic_round/GD/d={d}"), cfg, || {
+            std::hint::black_box(run_experiment(&mut backend, &algo_gd, &sc));
+        });
+        println!("{}", r.report());
+    }
+
+    // XLA path.
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("(skipping XLA round bench: run `make artifacts`)");
+        return;
+    }
+    let rt = ModelRuntime::open(dir, "mnist_mlp").unwrap();
+    let init = rt.load_init().unwrap();
+    let eval_batch = rt.eval_batch;
+    let (train, test) = synth::train_test(synth::SynthSpec::mnist(), 400, eval_batch);
+    let fed = partition::by_label(train, 10);
+    let mut backend = XlaBackend::new(rt, fed, test, init);
+    let algo = AlgorithmConfig::z_signsgd(ZParam::Finite(1), 0.05).with_lrs(0.05, 1.0);
+    let sc = ServerConfig { rounds: 1, eval_every: 1000, ..Default::default() };
+    let r = bench("xla_round/1-SignSGD/mnist_mlp/10cl", cfg, || {
+        std::hint::black_box(run_experiment(&mut backend, &algo, &sc));
+    });
+    println!("{}", r.report());
+    let algo_fedavg = AlgorithmConfig::fedavg(1).with_lrs(0.05, 1.0);
+    let r = bench("xla_round/FedAvg/mnist_mlp/10cl", cfg, || {
+        std::hint::black_box(run_experiment(&mut backend, &algo_fedavg, &sc));
+    });
+    println!("{}", r.report());
+}

@@ -1,0 +1,84 @@
+//! Bench: PJRT execute latency for each artifact kind — the L2 cost model
+//! per coordinator round (train_step, fused local_update, eval, compress).
+//! Skips politely when `artifacts/` is missing.
+
+use std::path::Path;
+use zsignfedavg::bench::{bench, BenchConfig};
+use zsignfedavg::data::synth;
+use zsignfedavg::rng::{Pcg64, ZParam};
+use zsignfedavg::runtime::ModelRuntime;
+
+fn main() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("bench_runtime: no artifacts/ — run `make artifacts` first");
+        return;
+    }
+    let cfg = BenchConfig { warmup_time_s: 1.0, samples: 20, min_batch_time_s: 0.05 };
+    for model in ["mnist_mlp", "mnist_cnn", "cifar_cnn"] {
+        let Ok(mut rt) = ModelRuntime::open(dir, model) else {
+            println!("skipping {model}: artifacts missing");
+            continue;
+        };
+        let d = rt.param_count;
+        println!("== {model} (d = {d}) ==");
+        let mut params = rt.load_init().unwrap();
+        let spec = if model == "cifar_cnn" { synth::SynthSpec::cifar() } else { synth::SynthSpec::mnist() };
+        let (train, _) = synth::train_test(spec, 256, 8);
+        let b = rt.train_batch;
+        let l = train.sample_len();
+        let mut x = vec![0.0f32; b * l];
+        let mut y = vec![0i32; b];
+        train.gather_into(&(0..b).collect::<Vec<_>>(), &mut x, &mut y);
+
+        let r = bench(&format!("train_step/{model}"), cfg, || {
+            rt.train_step(&mut params, &x, &y, 0.01).unwrap();
+        });
+        println!("{}", r.report());
+
+        if rt.fused_local_steps.contains(&5) {
+            let mut xs = vec![0.0f32; 5 * b * l];
+            let mut ys = vec![0i32; 5 * b];
+            for s in 0..5 {
+                xs[s * b * l..(s + 1) * b * l].copy_from_slice(&x);
+                ys[s * b..(s + 1) * b].copy_from_slice(&y);
+            }
+            let r = bench(&format!("local_update_e5/{model}"), cfg, || {
+                rt.local_update_fused(&mut params, 5, &xs, &ys, 0.01).unwrap();
+            });
+            println!("{}  ({} per step)", r.report(),
+                zsignfedavg::bench::fmt_time(r.median_s() / 5.0));
+        }
+
+        let be = rt.eval_batch;
+        let mut xe = vec![0.0f32; be * l];
+        let mut ye = vec![0i32; be];
+        for k in 0..be {
+            let i = k % train.n;
+            xe[k * l..(k + 1) * l].copy_from_slice(train.image(i));
+            ye[k] = train.y[i];
+        }
+        let r = bench(&format!("eval_step/{model}"), cfg, || {
+            rt.eval_step(&params, &xe, &ye).unwrap();
+        });
+        println!("{}", r.report());
+
+        // Compression through the AOT Pallas kernel: int8 output vs the
+        // bit-packed u32 output (8x smaller PJRT transfer).
+        let mut rng = Pcg64::seeded(1);
+        let delta: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        for z in [ZParam::Finite(1), ZParam::Inf] {
+            let r = bench(&format!("compress_kernel_z{z}/{model}"), cfg, || {
+                rt.compress(&delta, z, 0.05, &mut rng).unwrap();
+            });
+            println!("{}", r.report_throughput(d as f64, "elem"));
+        }
+        if rt.compress_packed(&delta, ZParam::Finite(1), 0.05, &mut rng).is_ok() {
+            let r = bench(&format!("compress_packed_z1/{model}"), cfg, || {
+                rt.compress_packed(&delta, ZParam::Finite(1), 0.05, &mut rng).unwrap();
+            });
+            println!("{}", r.report_throughput(d as f64, "elem"));
+        }
+        println!();
+    }
+}

@@ -1,0 +1,155 @@
+//! Micro-benchmark harness (criterion substitute; the vendor set has no
+//! criterion).
+//!
+//! Methodology mirrors criterion's core loop: warm-up phase, then `samples`
+//! timed batches where the batch size is auto-scaled so each batch takes
+//! ≥ `min_batch_time`; reports mean/median/p5/p95 per-iteration time and
+//! derived throughput. Used by the `benches/*.rs` targets (built with
+//! `harness = false`) and by the §Perf drivers.
+
+use crate::util::stats::{percentile, Summary};
+use std::time::Instant;
+
+/// Harness configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub warmup_time_s: f64,
+    pub samples: usize,
+    pub min_batch_time_s: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup_time_s: 0.5, samples: 30, min_batch_time_s: 0.02 }
+    }
+}
+
+/// One benchmark's results.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration seconds for each sample batch.
+    pub per_iter_s: Vec<f64>,
+    pub iters_total: u64,
+}
+
+impl BenchResult {
+    pub fn mean_s(&self) -> f64 {
+        let mut s = Summary::new();
+        for &x in &self.per_iter_s {
+            s.push(x);
+        }
+        s.mean()
+    }
+
+    pub fn median_s(&self) -> f64 {
+        percentile(&self.per_iter_s, 0.5)
+    }
+
+    pub fn p95_s(&self) -> f64 {
+        percentile(&self.per_iter_s, 0.95)
+    }
+
+    /// items/second given `items` processed per iteration.
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / self.median_s()
+    }
+
+    /// Human line like criterion's output.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} median {:>12}   mean {:>12}   p95 {:>12}   ({} iters)",
+            self.name,
+            fmt_time(self.median_s()),
+            fmt_time(self.mean_s()),
+            fmt_time(self.p95_s()),
+            self.iters_total
+        )
+    }
+
+    /// Report with an explicit throughput row.
+    pub fn report_throughput(&self, items: f64, unit: &str) -> String {
+        format!("{}   {:>10.2} M{}/s", self.report(), self.throughput(items) / 1e6, unit)
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{s:.3} s")
+    }
+}
+
+/// Run one benchmark. `f` is called once per iteration; use `std::hint::black_box`
+/// inside to defeat DCE.
+pub fn bench<F: FnMut()>(name: &str, cfg: BenchConfig, mut f: F) -> BenchResult {
+    // Warm-up + batch-size calibration.
+    let warm_start = Instant::now();
+    let mut iters_per_batch = 1u64;
+    let mut calib = 0u64;
+    while warm_start.elapsed().as_secs_f64() < cfg.warmup_time_s {
+        f();
+        calib += 1;
+    }
+    let per_iter_est = warm_start.elapsed().as_secs_f64() / calib.max(1) as f64;
+    if per_iter_est < cfg.min_batch_time_s {
+        iters_per_batch = (cfg.min_batch_time_s / per_iter_est).ceil() as u64;
+    }
+
+    let mut per_iter_s = Vec::with_capacity(cfg.samples);
+    let mut iters_total = 0u64;
+    for _ in 0..cfg.samples {
+        let t0 = Instant::now();
+        for _ in 0..iters_per_batch {
+            f();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        per_iter_s.push(dt / iters_per_batch as f64);
+        iters_total += iters_per_batch;
+    }
+    BenchResult { name: name.to_string(), per_iter_s, iters_total }
+}
+
+/// Quick preset for cheap functions in CI.
+pub fn quick(name: &str, f: impl FnMut()) -> BenchResult {
+    bench(name, BenchConfig { warmup_time_s: 0.1, samples: 12, min_batch_time_s: 0.005 }, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_sleep_scale() {
+        let r = bench(
+            "sleep_1ms",
+            BenchConfig { warmup_time_s: 0.02, samples: 5, min_batch_time_s: 0.001 },
+            || std::thread::sleep(std::time::Duration::from_millis(1)),
+        );
+        let m = r.median_s();
+        assert!(m > 0.8e-3 && m < 10e-3, "median={m}");
+    }
+
+    #[test]
+    fn throughput_computation() {
+        let r = BenchResult {
+            name: "x".into(),
+            per_iter_s: vec![0.001, 0.001, 0.001],
+            iters_total: 3,
+        };
+        assert!((r.throughput(1000.0) - 1e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(5e-9).contains("ns"));
+        assert!(fmt_time(5e-6).contains("µs"));
+        assert!(fmt_time(5e-3).contains("ms"));
+        assert!(fmt_time(5.0).contains(" s"));
+    }
+}

@@ -1,0 +1,132 @@
+//! Hand-rolled CLI argument parsing (the vendor set has no clap).
+//!
+//! Grammar: `zsfa <subcommand> [--flag] [--key value] [positional...]`.
+//! `--key value` pairs double as config overrides (see `config::Config`).
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+/// Marker value for boolean flags given without a value.
+const FLAG_TRUE: &str = "true";
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    return Err("bare `--` not supported".into());
+                }
+                // `--key=value` or `--key value` or bare boolean flag.
+                if let Some((k, v)) = key.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    let takes_value =
+                        it.peek().map(|n| !n.starts_with("--")).unwrap_or(false);
+                    if takes_value {
+                        args.flags.insert(key.to_string(), it.next().unwrap());
+                    } else {
+                        args.flags.insert(key.to_string(), FLAG_TRUE.to_string());
+                    }
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(a);
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.flag(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.flag(key)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{key}: bad integer {s:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> f32 {
+        self.flag(key)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{key}: bad float {s:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.flag(key)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{key}: bad integer {s:?}")))
+            .unwrap_or(default)
+    }
+
+    /// Apply all `--key value` pairs as config overrides.
+    pub fn apply_overrides(&self, cfg: &mut crate::config::Config) {
+        for (k, v) in &self.flags {
+            cfg.set(k, v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_positional() {
+        let a = parse("fig1 extra1 extra2");
+        assert_eq!(a.subcommand.as_deref(), Some("fig1"));
+        assert_eq!(a.positional, vec!["extra1", "extra2"]);
+    }
+
+    #[test]
+    fn flags_with_values() {
+        let a = parse("run --rounds 100 --sigma=0.05 --verbose --seed 7");
+        assert_eq!(a.usize_or("rounds", 0), 100);
+        assert_eq!(a.f32_or("sigma", 0.0), 0.05);
+        assert!(a.has("verbose"));
+        assert_eq!(a.str_or("verbose", "false"), "true");
+        assert_eq!(a.u64_or("seed", 0), 7);
+    }
+
+    #[test]
+    fn overrides_into_config() {
+        let a = parse("run --rounds 5");
+        let mut cfg = crate::config::Config::new();
+        a.apply_overrides(&mut cfg);
+        assert_eq!(cfg.usize_or("rounds", 0), 5);
+    }
+
+    #[test]
+    fn boolean_flag_before_subcommand_value() {
+        let a = parse("--dry-run fig1");
+        // "fig1" is consumed as the value of --dry-run by the grammar; the
+        // driver CLI always places the subcommand first, which avoids this.
+        assert_eq!(a.str_or("dry-run", ""), "fig1");
+    }
+}

@@ -1,0 +1,143 @@
+//! EF-SignSGD: error feedback for the scaled sign compressor
+//! (Karimireddy et al. '19; the paper's strongest sign-based baseline,
+//! Fig. 3).
+//!
+//! Each client keeps a residual `e_i`. Per round, with local update `p`:
+//!
+//! ```text
+//! u      = e_i + p                        (compensated update)
+//! msg    = (‖u‖₁ / d) · Sign(u)           (the scaled-sign contraction)
+//! e_i    = u − decode(msg)                (carry the compression error)
+//! ```
+//!
+//! The scaled sign is a *contractive* compressor: ‖u − C(u)‖² ≤ (1−δ)‖u‖²
+//! with δ = ‖u‖₁²/(d‖u‖₂²) — asserted as a property test below. The wire
+//! cost is `d + 32` bits (signs + the f32 scale), matching the paper's
+//! Table 2.
+//!
+//! As the paper notes (§1.1), EF cannot track residuals under partial
+//! participation; `fl::algorithms` therefore only offers EF with full
+//! participation and the server rejects the combination otherwise.
+
+use super::pack::PackedSigns;
+use crate::tensor;
+
+/// Per-client error-feedback state.
+#[derive(Debug, Clone)]
+pub struct EfState {
+    residual: Vec<f32>,
+    /// Scratch: compensated update.
+    u: Vec<f32>,
+}
+
+/// The EF message: scaled sign with its scalar.
+#[derive(Debug, Clone)]
+pub struct EfMessage {
+    pub scale: f32, // ‖u‖₁ / d
+    pub signs: PackedSigns,
+}
+
+impl EfMessage {
+    pub fn bits_on_wire(&self) -> u64 {
+        self.signs.len() as u64 + 32
+    }
+
+    pub fn decode_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.signs.len());
+        let mut s = vec![0i8; self.signs.len()];
+        self.signs.unpack_into(&mut s);
+        for (o, &si) in out.iter_mut().zip(&s) {
+            *o = self.scale * si as f32;
+        }
+    }
+}
+
+impl EfState {
+    pub fn new(dim: usize) -> Self {
+        EfState { residual: vec![0.0; dim], u: vec![0.0; dim] }
+    }
+
+    pub fn residual(&self) -> &[f32] {
+        &self.residual
+    }
+
+    /// Compress `update` with error compensation; mutates the residual.
+    pub fn step(&mut self, update: &[f32]) -> EfMessage {
+        assert_eq!(update.len(), self.residual.len());
+        let d = update.len();
+        // u = residual + update
+        for ((u, &r), &p) in self.u.iter_mut().zip(&self.residual).zip(update) {
+            *u = r + p;
+        }
+        let scale = (tensor::norm_p(&self.u, 1.0) / d as f64) as f32;
+        let signs = PackedSigns::from_f32_signs(&self.u);
+        // residual = u - scale * sign(u)
+        for (r, &u) in self.residual.iter_mut().zip(&self.u) {
+            let s = if u >= 0.0 { 1.0 } else { -1.0 };
+            *r = u - scale * s;
+        }
+        EfMessage { scale, signs }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn residual_plus_message_telescopes() {
+        // Invariant: decode(msg) + new_residual == old_residual + update.
+        let mut rng = Pcg64::seeded(0);
+        let d = 129;
+        let mut ef = EfState::new(d);
+        let mut out = vec![0.0f32; d];
+        for step in 0..20 {
+            let update: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let before: Vec<f32> = ef.residual().to_vec();
+            let msg = ef.step(&update);
+            msg.decode_into(&mut out);
+            for j in 0..d {
+                let lhs = out[j] + ef.residual()[j];
+                let rhs = before[j] + update[j];
+                assert!((lhs - rhs).abs() < 1e-5, "step={step} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn scaled_sign_is_contractive() {
+        // ‖u − C(u)‖² ≤ (1 − ‖u‖₁²/(d‖u‖₂²)) ‖u‖² for all u ≠ 0.
+        let mut rng = Pcg64::seeded(1);
+        for d in [4usize, 64, 1000] {
+            for _ in 0..20 {
+                let u: Vec<f32> = (0..d).map(|_| (rng.normal() * 3.0) as f32).collect();
+                let scale = (tensor::norm_p(&u, 1.0) / d as f64) as f32;
+                let mut err = 0.0f64;
+                for &ui in &u {
+                    let s = if ui >= 0.0 { 1.0 } else { -1.0 };
+                    err += (ui as f64 - (scale * s) as f64).powi(2);
+                }
+                let n1 = tensor::norm_p(&u, 1.0);
+                let n2sq = tensor::norm2_sq(&u);
+                let delta = n1 * n1 / (d as f64 * n2sq);
+                assert!(err <= (1.0 - delta) * n2sq + 1e-6, "d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_update_zero_message() {
+        let mut ef = EfState::new(8);
+        let msg = ef.step(&[0.0; 8]);
+        assert_eq!(msg.scale, 0.0);
+        assert!(ef.residual().iter().all(|&r| r == 0.0));
+    }
+
+    #[test]
+    fn wire_cost_is_d_plus_32() {
+        let mut ef = EfState::new(100);
+        let msg = ef.step(&[1.0; 100]);
+        assert_eq!(msg.bits_on_wire(), 132);
+    }
+}

@@ -1,0 +1,107 @@
+//! Gradient-compression substrate.
+//!
+//! Everything a z-SignFedAvg coordinator (and its baselines) puts on the
+//! wire lives here:
+//!
+//! * [`sign`] — the paper's stochastic sign family `C_z(x) = Sign(x + σ·ξ_z)`
+//!   (Section 2), the deterministic SignSGD operator, and the
+//!   input-dependent Sto-SignSGD operator of Safaryan–Richtárik '21.
+//! * [`pack`] — the 1-bit wire codec (sign vector ↔ packed `u64` words) and
+//!   the popcount-based vote accumulator used by the server hot path.
+//! * [`qsgd`] — the unbiased stochastic quantizer of Alistarh et al. '17
+//!   (Definition 2 in the paper's appendix), used by the QSGD/FedPAQ
+//!   baselines of Appendix E.
+//! * [`error_feedback`] — the EF-SignSGD residual state (Karimireddy et
+//!   al. '19), the paper's strongest sign-based baseline.
+//!
+//! The [`Compressor`] trait unifies them for the FL server; every message
+//! reports its exact wire size so the accuracy-vs-bits figures (Fig. 3c,
+//! Fig. 16) are byte-accurate.
+
+pub mod error_feedback;
+pub mod pack;
+pub mod qsgd;
+pub mod sign;
+pub mod sparsify;
+pub mod wire;
+
+use crate::rng::Pcg64;
+
+/// A compressed client→server message plus its exact uplink cost.
+#[derive(Debug, Clone)]
+pub enum Message {
+    /// Packed ±1 signs: `d` bits on the wire (one per coordinate).
+    Signs(pack::PackedSigns),
+    /// QSGD quantized vector: norm (32 bits) + per-coordinate sign+level.
+    Quantized(qsgd::Quantized),
+    /// Sparse payload (top-k / sparse-sign): indices + values or sign bits.
+    Sparse(sparsify::SparseMessage),
+    /// Uncompressed f32 vector: 32·d bits.
+    Dense(Vec<f32>),
+}
+
+impl Message {
+    /// Exact number of bits this message occupies on the uplink.
+    pub fn bits_on_wire(&self) -> u64 {
+        match self {
+            Message::Signs(s) => s.len() as u64,
+            Message::Quantized(q) => q.bits_on_wire(),
+            Message::Sparse(s) => s.bits_on_wire(),
+            Message::Dense(v) => 32 * v.len() as u64,
+        }
+    }
+}
+
+/// A (possibly stateful, possibly randomized) uplink compressor.
+///
+/// `compress` consumes the client's *update direction* (the paper compresses
+/// `(x_{t-1} - x^i_{t-1,E}) / γ`, i.e. the accumulated gradient estimate) and
+/// a per-client RNG stream; `decode_into` is the matching server-side
+/// dequantizer used when aggregating a single message (the sign-vote fast
+/// path in `fl::server` bypasses it).
+pub trait Compressor: Send {
+    fn compress(&mut self, delta: &[f32], rng: &mut Pcg64) -> Message;
+
+    /// Dequantize `msg` into `out` (overwrites).
+    fn decode_into(&self, msg: &Message, out: &mut [f32]);
+
+    /// Human-readable name for logs/CSV.
+    fn name(&self) -> String;
+}
+
+/// The identity "compressor" (uncompressed FedAvg / SGD baselines).
+pub struct Identity;
+
+impl Compressor for Identity {
+    fn compress(&mut self, delta: &[f32], _rng: &mut Pcg64) -> Message {
+        Message::Dense(delta.to_vec())
+    }
+
+    fn decode_into(&self, msg: &Message, out: &mut [f32]) {
+        match msg {
+            Message::Dense(v) => out.copy_from_slice(v),
+            _ => panic!("Identity::decode_into on non-dense message"),
+        }
+    }
+
+    fn name(&self) -> String {
+        "identity".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_roundtrip_and_bits() {
+        let mut c = Identity;
+        let mut rng = Pcg64::seeded(0);
+        let x = vec![1.0f32, -2.0, 3.5];
+        let m = c.compress(&x, &mut rng);
+        assert_eq!(m.bits_on_wire(), 96);
+        let mut out = vec![0.0; 3];
+        c.decode_into(&m, &mut out);
+        assert_eq!(out, x);
+    }
+}

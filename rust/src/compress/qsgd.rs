@@ -1,0 +1,183 @@
+//! QSGD: the unbiased stochastic quantizer (Alistarh et al. '17),
+//! Definition 2 in the paper's Appendix A — the baseline family of Fig. 16.
+//!
+//! `Q(x)[j] = ‖x‖₂ · Sign(x[j]) · ξ(x[j], s)` where `ξ` rounds `|x[j]|/‖x‖₂·s`
+//! to one of the two neighbouring integer levels with probabilities chosen so
+//! `E[Q(x)] = x`. Wire cost per coordinate: 1 sign bit + ⌈log2(s+1)⌉ level
+//! bits (the paper's Table 2 approximates this as `s·d + 32`; we account
+//! exactly, plus 32 bits for the norm).
+
+use super::{Compressor, Message};
+use crate::rng::Pcg64;
+use crate::tensor;
+
+/// A QSGD-quantized vector.
+#[derive(Debug, Clone)]
+pub struct Quantized {
+    pub norm: f32,
+    /// Per-coordinate signed level in [-s, s] (i16 is enough for s ≤ 2^15-1).
+    pub levels: Vec<i16>,
+    pub s: u32,
+}
+
+impl Quantized {
+    pub fn bits_on_wire(&self) -> u64 {
+        // 32-bit norm + per-coordinate (sign + level) bits.
+        32 + (1 + bits_per_level(self.s)) * self.levels.len() as u64
+    }
+
+    /// Dequantize into `out`.
+    pub fn decode_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.levels.len());
+        let k = self.norm / self.s as f32;
+        for (o, &l) in out.iter_mut().zip(&self.levels) {
+            *o = k * l as f32;
+        }
+    }
+}
+
+/// Bits to encode a level index in [0, s].
+pub fn bits_per_level(s: u32) -> u64 {
+    (64 - (s as u64).leading_zeros() as u64).max(1)
+}
+
+/// The QSGD compressor with `s` quantization levels.
+#[derive(Debug, Clone)]
+pub struct Qsgd {
+    pub s: u32,
+}
+
+impl Qsgd {
+    pub fn new(s: u32) -> Self {
+        assert!(s >= 1);
+        Qsgd { s }
+    }
+
+    /// Quantize `x` (allocating). Unbiased: `E[decode(quantize(x))] = x`.
+    pub fn quantize(&self, x: &[f32], rng: &mut Pcg64) -> Quantized {
+        let norm = tensor::norm2(x) as f32;
+        let mut levels = vec![0i16; x.len()];
+        if norm > 0.0 {
+            let s = self.s as f32;
+            for (l, &xi) in levels.iter_mut().zip(x) {
+                let r = xi.abs() / norm * s; // in [0, s]
+                let lo = r.floor();
+                let p_hi = (r - lo) as f64;
+                let mut lvl = lo as i16;
+                if rng.uniform() < p_hi {
+                    lvl += 1;
+                }
+                *l = if xi >= 0.0 { lvl } else { -lvl };
+            }
+        }
+        Quantized { norm, levels, s: self.s }
+    }
+}
+
+impl Compressor for Qsgd {
+    fn compress(&mut self, delta: &[f32], rng: &mut Pcg64) -> Message {
+        Message::Quantized(self.quantize(delta, rng))
+    }
+
+    fn decode_into(&self, msg: &Message, out: &mut [f32]) {
+        match msg {
+            Message::Quantized(q) => q.decode_into(out),
+            _ => panic!("Qsgd::decode_into on non-quantized message"),
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("qsgd(s={})", self.s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_within_range() {
+        let q = Qsgd::new(4);
+        let mut rng = Pcg64::seeded(0);
+        let mut x = vec![0.0f32; 1000];
+        for xi in x.iter_mut() {
+            *xi = rng.normal() as f32;
+        }
+        let quant = q.quantize(&x, &mut rng);
+        assert!(quant.levels.iter().all(|&l| l.unsigned_abs() as u32 <= 4));
+    }
+
+    #[test]
+    fn unbiasedness_monte_carlo() {
+        let q = Qsgd::new(2);
+        let mut rng = Pcg64::seeded(1);
+        let x = [0.6f32, -0.3, 0.1, 0.72];
+        let reps = 50_000;
+        let mut acc = [0.0f64; 4];
+        let mut out = [0.0f32; 4];
+        for _ in 0..reps {
+            let quant = q.quantize(&x, &mut rng);
+            quant.decode_into(&mut out);
+            for (a, &o) in acc.iter_mut().zip(&out) {
+                *a += o as f64;
+            }
+        }
+        let norm = tensor::norm2(&x);
+        for (j, &xj) in x.iter().enumerate() {
+            let est = acc[j] / reps as f64;
+            // MC std per coord <= norm/(s*sqrt(reps)).
+            let tol = 5.0 * norm / (2.0 * (reps as f64).sqrt());
+            assert!((est - xj as f64).abs() < tol, "j={j} est={est} want={xj}");
+        }
+    }
+
+    #[test]
+    fn variance_bound() {
+        // QSGD guarantees E||Q(x)-x||^2 <= min(d/s^2, sqrt(d)/s)||x||^2.
+        let d = 256;
+        let s = 4u32;
+        let q = Qsgd::new(s);
+        let mut rng = Pcg64::seeded(2);
+        let mut x = vec![0.0f32; d];
+        for xi in x.iter_mut() {
+            *xi = rng.normal() as f32;
+        }
+        let reps = 2000;
+        let mut err = 0.0f64;
+        let mut out = vec![0.0f32; d];
+        for _ in 0..reps {
+            q.quantize(&x, &mut rng).decode_into(&mut out);
+            let mut e = 0.0;
+            for (o, &xi) in out.iter().zip(&x) {
+                e += (*o as f64 - xi as f64).powi(2);
+            }
+            err += e;
+        }
+        let mean_err = err / reps as f64;
+        let bound = (d as f64 / (s * s) as f64).min((d as f64).sqrt() / s as f64)
+            * tensor::norm2_sq(&x);
+        assert!(mean_err <= bound * 1.05, "mean_err={mean_err} bound={bound}");
+    }
+
+    #[test]
+    fn zero_vector() {
+        let q = Qsgd::new(1);
+        let mut rng = Pcg64::seeded(3);
+        let quant = q.quantize(&[0.0; 8], &mut rng);
+        assert_eq!(quant.norm, 0.0);
+        assert!(quant.levels.iter().all(|&l| l == 0));
+        let mut out = [1.0f32; 8];
+        quant.decode_into(&mut out);
+        assert_eq!(out, [0.0; 8]);
+    }
+
+    #[test]
+    fn wire_bits() {
+        assert_eq!(bits_per_level(1), 1);
+        assert_eq!(bits_per_level(2), 2);
+        assert_eq!(bits_per_level(4), 3);
+        assert_eq!(bits_per_level(8), 4);
+        let q = Quantized { norm: 1.0, levels: vec![0; 100], s: 4 };
+        assert_eq!(q.bits_on_wire(), 32 + 4 * 100);
+    }
+}

@@ -1,0 +1,214 @@
+//! The paper's sign-compressor family (Section 2) on the Rust side.
+//!
+//! The XLA/Pallas path (`runtime::ModelRuntime::compress`) is the production
+//! hot path for neural workloads; this module is the *reference
+//! implementation* used by (a) the analytic-problem experiments (Fig. 1/2,
+//! where there is no XLA graph at all), (b) the baseline algorithms that
+//! compress quantities the artifacts don't model (EF residuals, momentum
+//! buffers), and (c) the Rust↔Python cross-validation tests.
+//!
+//! Operators:
+//! * [`StochasticSign`] — `Sign(x + σ·ξ_z)`, the z-SignFedAvg compressor.
+//!   σ = 0 recovers vanilla SignSGD.
+//! * [`InputScaledSign`] — Sto-SignSGD (Safaryan–Richtárik '21): uniform
+//!   noise with the *input-dependent* scale σ = ‖x‖ (the paper shows this is
+//!   exactly `∞-SignSGD` with σ = ‖x‖₂, and that the dimension-growing scale
+//!   is what slows it down on high-d problems — Fig. 1/3).
+
+use super::{pack::PackedSigns, Compressor, Message};
+use crate::rng::{Pcg64, ZParam};
+use crate::tensor;
+
+/// How the noise scale σ is chosen per compression call.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SigmaRule {
+    /// Fixed σ (a tunable hyperparameter; the paper's main setting).
+    Fixed(f32),
+    /// σ = ‖x‖₂ (Sto-SignSGD of Safaryan–Richtárik '21).
+    L2Norm,
+    /// σ = ‖x‖_∞ (ablation: the tightest scale satisfying Remark 1).
+    InfNorm,
+}
+
+/// `Sign(x + σ·ξ_z)` with ξ_z i.i.d. from the z-distribution.
+#[derive(Debug, Clone)]
+pub struct StochasticSign {
+    pub z: ZParam,
+    pub sigma: SigmaRule,
+    /// Effective σ of the most recent `compress` call (what the server must
+    /// multiply by η_z when dequantizing; see `fl::server`).
+    pub last_sigma: f32,
+}
+
+impl StochasticSign {
+    pub fn new(z: ZParam, sigma: SigmaRule) -> Self {
+        StochasticSign { z, sigma, last_sigma: 0.0 }
+    }
+
+    /// Vanilla (noiseless) SignSGD.
+    pub fn deterministic() -> Self {
+        StochasticSign::new(ZParam::Finite(1), SigmaRule::Fixed(0.0))
+    }
+
+    fn effective_sigma(&self, x: &[f32]) -> f32 {
+        match self.sigma {
+            SigmaRule::Fixed(s) => s,
+            SigmaRule::L2Norm => tensor::norm2(x) as f32,
+            SigmaRule::InfNorm => tensor::norm_inf(x) as f32,
+        }
+    }
+
+    /// Compress into a reusable i8 buffer (no allocation on the hot path).
+    pub fn compress_into(&mut self, x: &[f32], rng: &mut Pcg64, out: &mut [i8]) {
+        assert_eq!(x.len(), out.len());
+        let sigma = self.effective_sigma(x);
+        self.last_sigma = sigma;
+        if sigma == 0.0 {
+            tensor::sign_into(x, out);
+            return;
+        }
+        let s = sigma as f64;
+        for (o, &xi) in out.iter_mut().zip(x) {
+            let perturbed = xi as f64 + s * rng.z_noise(self.z);
+            *o = if perturbed >= 0.0 { 1 } else { -1 };
+        }
+    }
+}
+
+impl Compressor for StochasticSign {
+    fn compress(&mut self, delta: &[f32], rng: &mut Pcg64) -> Message {
+        let mut signs = vec![0i8; delta.len()];
+        self.compress_into(delta, rng, &mut signs);
+        Message::Signs(PackedSigns::from_signs(&signs))
+    }
+
+    fn decode_into(&self, msg: &Message, out: &mut [f32]) {
+        // Dequantize a single message: η_z · σ · sign  (Lemma 1's estimator).
+        let scale = (self.z.eta() as f32) * self.last_sigma;
+        match msg {
+            Message::Signs(p) => {
+                let mut signs = vec![0i8; p.len()];
+                p.unpack_into(&mut signs);
+                for (o, s) in out.iter_mut().zip(&signs) {
+                    *o = scale * *s as f32;
+                }
+            }
+            _ => panic!("StochasticSign::decode_into on non-sign message"),
+        }
+    }
+
+    fn name(&self) -> String {
+        match self.sigma {
+            SigmaRule::Fixed(s) => format!("{}-sign(sigma={s})", self.z),
+            SigmaRule::L2Norm => "sto-sign(|x|_2)".into(),
+            SigmaRule::InfNorm => "sto-sign(|x|_inf)".into(),
+        }
+    }
+}
+
+/// Sto-SignSGD: `∞`-noise with σ = ‖x‖₂ (equivalently, the importance-sampled
+/// stochastic sign of Safaryan–Richtárik; see paper Appendix A).
+pub fn sto_sign() -> StochasticSign {
+    StochasticSign::new(ZParam::Inf, SigmaRule::L2Norm)
+}
+
+/// Wrapper with a different display name for the algorithm tables.
+pub type InputScaledSign = StochasticSign;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_sigma_is_deterministic_sign() {
+        let mut c = StochasticSign::deterministic();
+        let mut rng = Pcg64::seeded(0);
+        let x = [1.5f32, -0.1, 0.0, -7.0];
+        let mut out = [0i8; 4];
+        c.compress_into(&x, &mut rng, &mut out);
+        assert_eq!(out, [1, -1, 1, -1]);
+    }
+
+    #[test]
+    fn large_sigma_flips_signs_sometimes() {
+        let mut c = StochasticSign::new(ZParam::Finite(1), SigmaRule::Fixed(10.0));
+        let mut rng = Pcg64::seeded(1);
+        let x = vec![0.5f32; 10_000];
+        let mut out = vec![0i8; 10_000];
+        c.compress_into(&x, &mut rng, &mut out);
+        let plus = out.iter().filter(|&&s| s == 1).count();
+        // P[+1] = Phi(0.05) ≈ 0.52: both signs must appear in bulk.
+        assert!(plus > 4_000 && plus < 6_500, "plus={plus}");
+    }
+
+    #[test]
+    fn uniform_noise_respects_support() {
+        // For z=inf with sigma < |x_j|, the sign can never flip (Remark 2).
+        let mut c = StochasticSign::new(ZParam::Inf, SigmaRule::Fixed(0.5));
+        let mut rng = Pcg64::seeded(2);
+        let x = vec![1.0f32; 1000];
+        let mut out = vec![0i8; 1000];
+        c.compress_into(&x, &mut rng, &mut out);
+        assert!(out.iter().all(|&s| s == 1));
+    }
+
+    #[test]
+    fn asymptotic_unbiasedness_monte_carlo() {
+        // eta_z * sigma * mean(sign) -> x for large sigma (Lemma 1), checked
+        // for both z = 1 and z = inf.
+        for z in [ZParam::Finite(1), ZParam::Inf] {
+            let sigma = 50.0f32;
+            let mut c = StochasticSign::new(z, SigmaRule::Fixed(sigma));
+            let mut rng = Pcg64::seeded(3);
+            let x = [3.0f32, -2.0, 0.5];
+            let reps = 60_000;
+            let mut acc = [0.0f64; 3];
+            let mut out = [0i8; 3];
+            for _ in 0..reps {
+                c.compress_into(&x, &mut rng, &mut out);
+                for (a, &s) in acc.iter_mut().zip(&out) {
+                    *a += s as f64;
+                }
+            }
+            let eta = z.eta();
+            for (j, &xj) in x.iter().enumerate() {
+                let est = eta * sigma as f64 * acc[j] / reps as f64;
+                // MC std ≈ eta*sigma/sqrt(reps) ≈ 0.26; allow 4 sigma.
+                assert!(
+                    (est - xj as f64).abs() < 1.1,
+                    "z={z} j={j} est={est} want={xj}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn input_scaled_uses_l2_norm() {
+        let mut c = sto_sign();
+        let mut rng = Pcg64::seeded(4);
+        let x = [3.0f32, 4.0];
+        let mut out = [0i8; 2];
+        c.compress_into(&x, &mut rng, &mut out);
+        assert!((c.last_sigma - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn compressor_trait_bits() {
+        let mut c = StochasticSign::deterministic();
+        let mut rng = Pcg64::seeded(5);
+        let msg = c.compress(&vec![1.0f32; 777], &mut rng);
+        assert_eq!(msg.bits_on_wire(), 777);
+    }
+
+    #[test]
+    fn decode_scales_by_eta_sigma() {
+        let mut c = StochasticSign::new(ZParam::Inf, SigmaRule::Fixed(2.0));
+        let mut rng = Pcg64::seeded(6);
+        let x = [10.0f32, -10.0]; // |x| > sigma: signs deterministic
+        let msg = c.compress(&x, &mut rng);
+        let mut out = [0.0f32; 2];
+        c.decode_into(&msg, &mut out);
+        // eta_inf = 1, sigma = 2 -> ±2.
+        assert_eq!(out, [2.0, -2.0]);
+    }
+}

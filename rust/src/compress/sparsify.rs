@@ -1,0 +1,251 @@
+//! Gradient sparsification + the sparsified stochastic sign.
+//!
+//! The paper's conclusion calls out that the stochastic sign compressor
+//! "can be conveniently combined with ... gradient sparsification
+//! techniques such as [30, 41, 8] to further improve the communication
+//! efficiency". This module implements that combination:
+//!
+//! * [`TopK`] — classic magnitude top-k: k indices + k f32 values
+//!   (k·(32+32) bits).
+//! * [`SparseSign`] — top-k support + *stochastic sign* of the kept values
+//!   with a single f32 magnitude scale: k·(32+1) + 32 bits. This is the
+//!   conclusion's combo; the `sparse_sign` ablation bench compares both
+//!   against dense signs at equal bit budgets.
+
+use super::{Compressor, Message};
+use crate::rng::{Pcg64, ZParam};
+
+/// A sparse uplink payload: values at `idx`, zero elsewhere.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparseMessage {
+    pub dim: usize,
+    pub idx: Vec<u32>,
+    /// Either raw values (TopK) or ±scale (SparseSign).
+    pub vals: Vec<f32>,
+    /// True when `vals` are ±scale (1 bit each on the wire + one shared f32).
+    pub sign_coded: bool,
+}
+
+impl SparseMessage {
+    pub fn bits_on_wire(&self) -> u64 {
+        let k = self.idx.len() as u64;
+        if self.sign_coded {
+            32 * k + k + 32 // indices + sign bits + shared scale
+        } else {
+            32 * k + 32 * k // indices + f32 values
+        }
+    }
+
+    /// Scatter into a dense buffer (overwrites).
+    pub fn decode_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.dim);
+        out.iter_mut().for_each(|v| *v = 0.0);
+        for (&i, &v) in self.idx.iter().zip(&self.vals) {
+            out[i as usize] = v;
+        }
+    }
+}
+
+/// Indices of the k largest-|x| entries (O(d) selection via partial sort).
+pub fn top_k_indices(x: &[f32], k: usize) -> Vec<u32> {
+    let k = k.min(x.len());
+    let mut idx: Vec<u32> = (0..x.len() as u32).collect();
+    idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
+        x[b as usize]
+            .abs()
+            .partial_cmp(&x[a as usize].abs())
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    idx.truncate(k);
+    idx.sort_unstable(); // deterministic order for the wire
+    idx
+}
+
+/// Magnitude top-k compressor (k = ceil(frac·d)).
+#[derive(Debug, Clone)]
+pub struct TopK {
+    pub frac: f32,
+}
+
+impl TopK {
+    pub fn new(frac: f32) -> Self {
+        assert!(frac > 0.0 && frac <= 1.0);
+        TopK { frac }
+    }
+
+    pub fn k_for(&self, d: usize) -> usize {
+        // The relative epsilon guards against f32 representation noise:
+        // 0.05f32 * 200 = 10.0000001..., which must yield k = 10, not 11.
+        (((self.frac as f64 * d as f64) * (1.0 - 1e-6)).ceil() as usize).clamp(1, d)
+    }
+}
+
+impl Compressor for TopK {
+    fn compress(&mut self, delta: &[f32], _rng: &mut Pcg64) -> Message {
+        let k = self.k_for(delta.len());
+        let idx = top_k_indices(delta, k);
+        let vals = idx.iter().map(|&i| delta[i as usize]).collect();
+        Message::Sparse(SparseMessage { dim: delta.len(), idx, vals, sign_coded: false })
+    }
+
+    fn decode_into(&self, msg: &Message, out: &mut [f32]) {
+        match msg {
+            Message::Sparse(s) => s.decode_into(out),
+            _ => panic!("TopK::decode_into on non-sparse message"),
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("topk({})", self.frac)
+    }
+}
+
+/// Top-k support + stochastic sign of the kept values (the conclusion's
+/// combination). The shared scale is the mean |value| over the support, so
+/// the decoded message is `scale·Sign(v_i + σ·ξ_z)` at the kept indices.
+#[derive(Debug, Clone)]
+pub struct SparseSign {
+    pub frac: f32,
+    pub z: ZParam,
+    pub sigma: f32,
+}
+
+impl SparseSign {
+    pub fn new(frac: f32, z: ZParam, sigma: f32) -> Self {
+        assert!(frac > 0.0 && frac <= 1.0);
+        SparseSign { frac, z, sigma }
+    }
+}
+
+impl Compressor for SparseSign {
+    fn compress(&mut self, delta: &[f32], rng: &mut Pcg64) -> Message {
+        let k = TopK::new(self.frac).k_for(delta.len());
+        let idx = top_k_indices(delta, k);
+        let scale = (idx.iter().map(|&i| delta[i as usize].abs() as f64).sum::<f64>()
+            / k as f64) as f32;
+        let vals = idx
+            .iter()
+            .map(|&i| {
+                let v = delta[i as usize] as f64 + self.sigma as f64 * rng.z_noise(self.z);
+                if v >= 0.0 {
+                    scale
+                } else {
+                    -scale
+                }
+            })
+            .collect();
+        Message::Sparse(SparseMessage { dim: delta.len(), idx, vals, sign_coded: true })
+    }
+
+    fn decode_into(&self, msg: &Message, out: &mut [f32]) {
+        match msg {
+            Message::Sparse(s) => s.decode_into(out),
+            _ => panic!("SparseSign::decode_into on non-sparse message"),
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("sparse-sign({},{})", self.frac, self.sigma)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{gen_vec_f32, prop_check, PropConfig};
+
+    #[test]
+    fn top_k_picks_largest() {
+        let x = [0.1f32, -5.0, 2.0, 0.0, -3.0];
+        let idx = top_k_indices(&x, 2);
+        assert_eq!(idx, vec![1, 4]);
+        let idx = top_k_indices(&x, 5);
+        assert_eq!(idx.len(), 5);
+    }
+
+    #[test]
+    fn topk_roundtrip_preserves_kept_values() {
+        let mut rng = Pcg64::seeded(0);
+        let x = gen_vec_f32(&mut rng, 100, 2.0);
+        let mut c = TopK::new(0.1);
+        let msg = c.compress(&x, &mut rng);
+        let mut out = vec![0.0f32; 100];
+        c.decode_into(&msg, &mut out);
+        let nonzero = out.iter().filter(|v| **v != 0.0).count();
+        assert_eq!(nonzero, 10);
+        for (o, xi) in out.iter().zip(&x) {
+            assert!(*o == 0.0 || o == xi);
+        }
+    }
+
+    #[test]
+    fn sparse_sign_vals_are_pm_scale() {
+        let mut rng = Pcg64::seeded(1);
+        let x = gen_vec_f32(&mut rng, 200, 1.0);
+        let mut c = SparseSign::new(0.05, ZParam::Finite(1), 0.1);
+        match c.compress(&x, &mut rng) {
+            Message::Sparse(s) => {
+                assert!(s.sign_coded);
+                assert_eq!(s.idx.len(), 10);
+                let scale = s.vals[0].abs();
+                assert!(s.vals.iter().all(|v| (v.abs() - scale).abs() < 1e-6));
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn bits_accounting() {
+        let s = SparseMessage { dim: 1000, idx: vec![1, 2], vals: vec![0.5, -0.5], sign_coded: true };
+        assert_eq!(s.bits_on_wire(), 64 + 2 + 32);
+        let t = SparseMessage { dim: 1000, idx: vec![1, 2], vals: vec![0.5, -0.5], sign_coded: false };
+        assert_eq!(t.bits_on_wire(), 64 + 64);
+    }
+
+    #[test]
+    fn sparse_sign_beats_dense_bits_at_same_k() {
+        // frac = 1/33 ~ break-even vs dense 1-bit signs: below that it's cheaper.
+        let d = 33_000usize;
+        let mut rng = Pcg64::seeded(2);
+        let x = gen_vec_f32(&mut rng, d, 1.0);
+        let mut c = SparseSign::new(0.01, ZParam::Inf, 0.0);
+        let bits = c.compress(&x, &mut rng).bits_on_wire();
+        assert!(bits < d as u64, "sparse-sign {bits} vs dense sign {d}");
+    }
+
+    #[test]
+    fn prop_topk_exact_cover_and_order() {
+        prop_check(
+            PropConfig { cases: 60, max_size: 2000, seed: 0x70b },
+            |rng, size| {
+                let d = size.max(2);
+                let frac = [0.01f32, 0.1, 0.5, 1.0][rng.below(4) as usize];
+                (gen_vec_f32(rng, d, 2.0), frac)
+            },
+            |(x, frac)| {
+                let k = TopK::new(*frac).k_for(x.len());
+                let idx = top_k_indices(x, k);
+                if idx.len() != k {
+                    return Err(format!("got {} indices, want {k}", idx.len()));
+                }
+                // Sorted, unique, in range.
+                if !idx.windows(2).all(|w| w[0] < w[1]) {
+                    return Err("indices not strictly sorted".into());
+                }
+                // Every kept |value| >= every dropped |value|.
+                let kept_min = idx
+                    .iter()
+                    .map(|&i| x[i as usize].abs())
+                    .fold(f32::INFINITY, f32::min);
+                let dropped_max = (0..x.len() as u32)
+                    .filter(|i| idx.binary_search(i).is_err())
+                    .map(|i| x[i as usize].abs())
+                    .fold(0.0f32, f32::max);
+                if dropped_max > kept_min + 1e-6 {
+                    return Err(format!("dropped {dropped_max} > kept {kept_min}"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,155 @@
+//! Layered experiment configuration.
+//!
+//! Format: flat `key = value` lines (a TOML subset — the vendor set has no
+//! toml crate), `#` comments, strings unquoted or double-quoted. Values are
+//! looked up typed, with defaults, and every key access is recorded so
+//! `warn_unused` can flag typos in config files.
+//!
+//! Precedence: built-in defaults < config file < CLI `--key value`
+//! overrides (`cli::Args::apply_overrides`).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+
+/// A flat string→string config map with typed accessors.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+    accessed: std::cell::RefCell<BTreeSet<String>>,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Config::default()
+    }
+
+    /// Parse the `key = value` format.
+    pub fn parse(body: &str) -> Result<Config, String> {
+        let mut cfg = Config::new();
+        for (lineno, raw) in body.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected `key = value`", lineno + 1))?;
+            let key = k.trim().to_string();
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            let mut val = v.trim().to_string();
+            if val.len() >= 2 && val.starts_with('"') && val.ends_with('"') {
+                val = val[1..val.len() - 1].to_string();
+            }
+            cfg.values.insert(key, val);
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> Result<Config, String> {
+        let body =
+            std::fs::read_to_string(path).map_err(|e| format!("reading {path:?}: {e}"))?;
+        Self::parse(&body)
+    }
+
+    /// Set (CLI overrides).
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+
+    /// Merge `other` on top of `self`.
+    pub fn overlay(&mut self, other: &Config) {
+        for (k, v) in &other.values {
+            self.values.insert(k.clone(), v.clone());
+        }
+    }
+
+    fn raw(&self, key: &str) -> Option<&str> {
+        self.accessed.borrow_mut().insert(key.to_string());
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.raw(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.raw(key).map(|s| s.parse().unwrap_or_else(|_| panic!("config {key}: bad usize {s:?}"))).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.raw(key).map(|s| s.parse().unwrap_or_else(|_| panic!("config {key}: bad u64 {s:?}"))).unwrap_or(default)
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> f32 {
+        self.raw(key).map(|s| s.parse().unwrap_or_else(|_| panic!("config {key}: bad f32 {s:?}"))).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.raw(key).map(|s| s.parse().unwrap_or_else(|_| panic!("config {key}: bad f64 {s:?}"))).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.raw(key)
+            .map(|s| match s {
+                "true" | "1" | "yes" => true,
+                "false" | "0" | "no" => false,
+                other => panic!("config {key}: bad bool {other:?}"),
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, key: &str) -> Option<usize> {
+        self.raw(key).map(|s| s.parse().unwrap_or_else(|_| panic!("config {key}: bad usize {s:?}")))
+    }
+
+    /// Keys present in the file but never read (likely typos).
+    pub fn unused_keys(&self) -> Vec<String> {
+        let accessed = self.accessed.borrow();
+        self.values.keys().filter(|k| !accessed.contains(*k)).cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic() {
+        let c = Config::parse("a = 1\n# comment\nname = \"hello world\"\nlr=0.5\n").unwrap();
+        assert_eq!(c.usize_or("a", 0), 1);
+        assert_eq!(c.str_or("name", ""), "hello world");
+        assert_eq!(c.f32_or("lr", 0.0), 0.5);
+        assert_eq!(c.bool_or("missing", true), true);
+    }
+
+    #[test]
+    fn overlay_precedence() {
+        let mut base = Config::parse("a = 1\nb = 2").unwrap();
+        let over = Config::parse("b = 3").unwrap();
+        base.overlay(&over);
+        assert_eq!(base.usize_or("a", 0), 1);
+        assert_eq!(base.usize_or("b", 0), 3);
+    }
+
+    #[test]
+    fn tracks_unused() {
+        let c = Config::parse("used = 1\ntypo_key = 2").unwrap();
+        let _ = c.usize_or("used", 0);
+        assert_eq!(c.unused_keys(), vec!["typo_key".to_string()]);
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Config::parse("just a line").is_err());
+        assert!(Config::parse("= 3").is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "bad usize")]
+    fn typed_access_panics_on_garbage() {
+        let c = Config::parse("n = zebra").unwrap();
+        c.usize_or("n", 0);
+    }
+}

@@ -1,0 +1,217 @@
+//! Client partitioners: how training samples are assigned to clients.
+//!
+//! Mirrors the paper's three settings:
+//! * [`by_label`] — §4.2's extreme non-iid split (client i holds only
+//!   class i mod C);
+//! * [`dirichlet`] — §4.3's CIFAR-10 split (each client's label
+//!   distribution drawn from a symmetric Dirichlet(α));
+//! * [`iid`] — uniform random shards (and the EMNIST many-client setting,
+//!   where 3579 clients each hold a small shard).
+//!
+//! Invariant (property-tested): every sample is assigned to exactly one
+//! client and no client is empty.
+
+use super::{Dataset, FederatedDataset};
+use crate::rng::Pcg64;
+
+/// Extreme label split: client i receives all samples with label ≡ i (mod C).
+/// Requires `n_clients >= num_classes` to be meaningful; with
+/// `n_clients == num_classes` this is exactly the paper's §4.2 setting.
+pub fn by_label(data: Dataset, n_clients: usize) -> FederatedDataset {
+    assert!(n_clients >= 1);
+    let c = data.num_classes;
+    let mut clients: Vec<Vec<usize>> = vec![Vec::new(); n_clients];
+    // Samples of class k rotate over clients {k, k+c, k+2c, ...}.
+    let mut next_holder: Vec<usize> = (0..c).collect();
+    for (i, &y) in data.y.iter().enumerate() {
+        let k = y as usize;
+        let holder = next_holder[k] % n_clients;
+        clients[holder].push(i);
+        // Advance to the next client that serves this class.
+        next_holder[k] = if n_clients > c { next_holder[k] + c } else { next_holder[k] };
+        if n_clients > c && next_holder[k] >= n_clients {
+            next_holder[k] = k;
+        }
+    }
+    FederatedDataset { data, clients }
+}
+
+/// iid shards: shuffle, split as evenly as possible.
+pub fn iid(data: Dataset, n_clients: usize, seed: u64) -> FederatedDataset {
+    assert!(n_clients >= 1 && n_clients <= data.n);
+    let mut order: Vec<usize> = (0..data.n).collect();
+    Pcg64::new(seed, 3).shuffle(&mut order);
+    let mut clients: Vec<Vec<usize>> = vec![Vec::new(); n_clients];
+    for (k, idx) in order.into_iter().enumerate() {
+        clients[k % n_clients].push(idx);
+    }
+    FederatedDataset { data, clients }
+}
+
+/// Symmetric Dirichlet(α) label skew (Reddi et al. '20 / the paper's §4.3):
+/// for each class, the class's samples are distributed over clients with
+/// proportions drawn from Dirichlet(α). Small α → near one-label clients;
+/// α = 1 matches the paper's CIFAR-10 setting.
+pub fn dirichlet(data: Dataset, n_clients: usize, alpha: f64, seed: u64) -> FederatedDataset {
+    assert!(n_clients >= 1);
+    assert!(alpha > 0.0);
+    let mut rng = Pcg64::new(seed, 5);
+    let c = data.num_classes;
+    // Bucket sample indices per class.
+    let mut per_class: Vec<Vec<usize>> = vec![Vec::new(); c];
+    for (i, &y) in data.y.iter().enumerate() {
+        per_class[y as usize].push(i);
+    }
+    let mut clients: Vec<Vec<usize>> = vec![Vec::new(); n_clients];
+    for idxs in per_class.into_iter() {
+        // Dirichlet via normalized Gammas.
+        let mut props: Vec<f64> = (0..n_clients).map(|_| rng.gamma(alpha, 1.0)).collect();
+        let total: f64 = props.iter().sum();
+        props.iter_mut().for_each(|p| *p /= total);
+        // Convert proportions to cumulative cut points over this class.
+        let m = idxs.len();
+        let mut cuts = Vec::with_capacity(n_clients);
+        let mut acc = 0.0;
+        for p in &props {
+            acc += p;
+            cuts.push((acc * m as f64).round() as usize);
+        }
+        *cuts.last_mut().unwrap() = m; // rounding-proof
+        let mut start = 0usize;
+        for (k, &end) in cuts.iter().enumerate() {
+            let end = end.clamp(start, m);
+            clients[k].extend_from_slice(&idxs[start..end]);
+            start = end;
+        }
+    }
+    // Guarantee non-empty clients: steal one sample from the largest client.
+    for k in 0..n_clients {
+        if clients[k].is_empty() {
+            let donor = (0..n_clients).max_by_key(|&j| clients[j].len()).unwrap();
+            assert!(clients[donor].len() > 1, "not enough samples for {n_clients} clients");
+            let taken = clients[donor].pop().unwrap();
+            clients[k].push(taken);
+        }
+    }
+    FederatedDataset { data, clients }
+}
+
+/// Partition diagnostics: per-client label entropy (0 = single-label client).
+pub fn mean_label_entropy(fed: &FederatedDataset) -> f64 {
+    let c = fed.data.num_classes;
+    let mut total = 0.0;
+    for idxs in &fed.clients {
+        let mut h = vec![0usize; c];
+        for &i in idxs {
+            h[fed.data.y[i] as usize] += 1;
+        }
+        let n = idxs.len() as f64;
+        let mut ent = 0.0;
+        for &cnt in &h {
+            if cnt > 0 {
+                let p = cnt as f64 / n;
+                ent -= p * p.ln();
+            }
+        }
+        total += ent;
+    }
+    total / fed.clients.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{train_test, SynthSpec};
+    use crate::testutil::{prop_check, PropConfig};
+
+    fn check_exact_cover(fed: &FederatedDataset) {
+        let mut seen = vec![false; fed.data.n];
+        for idxs in &fed.clients {
+            assert!(!idxs.is_empty(), "empty client");
+            for &i in idxs {
+                assert!(!seen[i], "sample {i} assigned twice");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "unassigned samples");
+    }
+
+    #[test]
+    fn by_label_single_class_clients() {
+        let (train, _) = train_test(SynthSpec::mnist(), 200, 10);
+        let fed = by_label(train, 10);
+        check_exact_cover(&fed);
+        for (i, idxs) in fed.clients.iter().enumerate() {
+            assert!(idxs.iter().all(|&k| fed.data.y[k] as usize == i));
+        }
+        assert!(mean_label_entropy(&fed) < 1e-9);
+    }
+
+    #[test]
+    fn iid_partition_covers() {
+        let (train, _) = train_test(SynthSpec::mnist(), 103, 10);
+        let fed = iid(train, 7, 1);
+        check_exact_cover(&fed);
+        // Near-even shard sizes.
+        let sizes: Vec<usize> = fed.clients.iter().map(|c| c.len()).collect();
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+        // iid shards should have high label entropy.
+        assert!(mean_label_entropy(&fed) > 1.5);
+    }
+
+    #[test]
+    fn dirichlet_property_exact_cover() {
+        let (train, _) = train_test(SynthSpec::mnist(), 300, 10);
+        prop_check(
+            PropConfig { cases: 25, max_size: 20, ..Default::default() },
+            |rng, size| {
+                let n_clients = 2 + size.min(18);
+                let alpha = [0.1, 0.5, 1.0, 10.0][rng.below(4) as usize];
+                (n_clients, alpha, rng.next_u64())
+            },
+            |&(n_clients, alpha, seed)| {
+                let fed = dirichlet(train.clone(), n_clients, alpha, seed);
+                let mut seen = vec![false; fed.data.n];
+                for idxs in &fed.clients {
+                    if idxs.is_empty() {
+                        return Err("empty client".into());
+                    }
+                    for &i in idxs {
+                        if seen[i] {
+                            return Err(format!("sample {i} assigned twice"));
+                        }
+                        seen[i] = true;
+                    }
+                }
+                if !seen.iter().all(|&s| s) {
+                    return Err("unassigned samples".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn dirichlet_alpha_controls_skew() {
+        let (train, _) = train_test(SynthSpec::mnist(), 1000, 10);
+        let skewed = mean_label_entropy(&dirichlet(train.clone(), 10, 0.05, 3));
+        let uniform = mean_label_entropy(&dirichlet(train, 10, 100.0, 3));
+        assert!(
+            skewed < uniform - 0.5,
+            "skewed={skewed} uniform={uniform}"
+        );
+    }
+
+    #[test]
+    fn by_label_more_clients_than_classes() {
+        let (train, _) = train_test(SynthSpec::mnist(), 400, 10);
+        let fed = by_label(train, 40);
+        check_exact_cover(&fed);
+        // Every client still holds exactly one label.
+        for idxs in &fed.clients {
+            let labels: std::collections::BTreeSet<i32> =
+                idxs.iter().map(|&k| fed.data.y[k]).collect();
+            assert_eq!(labels.len(), 1);
+        }
+    }
+}

@@ -1,0 +1,264 @@
+//! RDP accountant for the subsampled Gaussian mechanism.
+//!
+//! Client-level DP with client subsampling (the paper's EMNIST setting:
+//! q = 100/3579 clients per round, T = 500 rounds). Per round, each selected
+//! client's clipped update is perturbed with `N(0, (σ·C)²)`; the sign is
+//! post-processing and free.
+//!
+//! RDP of the *sampled* Gaussian at integer order α (Mironov et al. '19,
+//! Thm. 5 upper bound / the binomial-expansion form used by TF-Privacy):
+//!
+//! ```text
+//! ε(α) = 1/(α−1) · log Σ_{k=0}^{α} C(α,k)·(1−q)^{α−k}·q^k·exp(k(k−1)/(2σ²))
+//! ```
+//!
+//! Composition over T rounds adds the per-round RDP; conversion to
+//! approximate DP uses `ε = min_α [ ε_rdp(α) + log(1/δ)/(α−1) ]`.
+
+/// Log of the binomial coefficient C(n, k) via lgamma.
+fn log_binom(n: u64, k: u64) -> f64 {
+    lgamma((n + 1) as f64) - lgamma((k + 1) as f64) - lgamma((n - k + 1) as f64)
+}
+
+/// Lanczos log-gamma (same coefficients as `rng::gamma_fn`, in log space to
+/// stay finite for large arguments).
+pub fn lgamma(x: f64) -> f64 {
+    assert!(x > 0.0);
+    const G: f64 = 7.0;
+    const COEF: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_572e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        (std::f64::consts::PI / (std::f64::consts::PI * x).sin()).ln() - lgamma(1.0 - x)
+    } else {
+        let xm = x - 1.0;
+        let mut a = COEF[0];
+        let t = xm + G + 0.5;
+        for (i, &c) in COEF.iter().enumerate().skip(1) {
+            a += c / (xm + i as f64);
+        }
+        0.5 * (2.0 * std::f64::consts::PI).ln() + (xm + 0.5) * t.ln() - t + a.ln()
+    }
+}
+
+/// Numerically-stable log-sum-exp.
+fn logsumexp(xs: &[f64]) -> f64 {
+    let m = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if m.is_infinite() {
+        return m;
+    }
+    m + xs.iter().map(|x| (x - m).exp()).sum::<f64>().ln()
+}
+
+/// Per-step RDP of the subsampled Gaussian at integer order `alpha`.
+///
+/// `q` — sampling probability; `noise_mult` — σ (noise stddev / clip norm).
+pub fn rdp_sampled_gaussian(q: f64, noise_mult: f64, alpha: u64) -> f64 {
+    assert!((0.0..=1.0).contains(&q));
+    assert!(noise_mult > 0.0);
+    assert!(alpha >= 2);
+    if q == 0.0 {
+        return 0.0;
+    }
+    if q == 1.0 {
+        // Plain Gaussian: ε(α) = α/(2σ²).
+        return alpha as f64 / (2.0 * noise_mult * noise_mult);
+    }
+    let log_q = q.ln();
+    let log_1mq = (1.0 - q).ln_1p_safe();
+    let terms: Vec<f64> = (0..=alpha)
+        .map(|k| {
+            log_binom(alpha, k)
+                + (alpha - k) as f64 * log_1mq
+                + k as f64 * log_q
+                + (k as f64) * (k as f64 - 1.0) / (2.0 * noise_mult * noise_mult)
+        })
+        .collect();
+    logsumexp(&terms) / (alpha as f64 - 1.0)
+}
+
+trait Ln1pSafe {
+    fn ln_1p_safe(self) -> f64;
+}
+
+impl Ln1pSafe for f64 {
+    /// ln(x) written as ln1p(x−1) for x near 1 (x = 1−q with small q).
+    fn ln_1p_safe(self) -> f64 {
+        (self - 1.0).ln_1p()
+    }
+}
+
+/// Default RDP orders (matches the common accounting practice: a dense grid
+/// of small integer orders plus a coarse tail).
+pub fn default_orders() -> Vec<u64> {
+    let mut o: Vec<u64> = (2..=64).collect();
+    o.extend([72, 80, 96, 128, 192, 256, 384, 512]);
+    o
+}
+
+/// Tracks composed RDP over rounds.
+#[derive(Debug, Clone)]
+pub struct RdpAccountant {
+    pub orders: Vec<u64>,
+    pub rdp: Vec<f64>,
+}
+
+impl RdpAccountant {
+    pub fn new() -> Self {
+        let orders = default_orders();
+        let rdp = vec![0.0; orders.len()];
+        RdpAccountant { orders, rdp }
+    }
+
+    /// Compose `steps` rounds of subsampled Gaussian (q, σ).
+    pub fn compose(&mut self, q: f64, noise_mult: f64, steps: u64) {
+        for (r, &a) in self.rdp.iter_mut().zip(&self.orders) {
+            *r += steps as f64 * rdp_sampled_gaussian(q, noise_mult, a);
+        }
+    }
+
+    /// Convert to (ε, δ): minimize over orders.
+    pub fn epsilon(&self, delta: f64) -> f64 {
+        assert!(delta > 0.0 && delta < 1.0);
+        self.orders
+            .iter()
+            .zip(&self.rdp)
+            .map(|(&a, &r)| r + (1.0 / delta).ln() / (a as f64 - 1.0))
+            .fold(f64::INFINITY, f64::min)
+    }
+}
+
+impl Default for RdpAccountant {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// ε spent by T rounds of (q, σ) subsampled Gaussian at a given δ.
+pub fn eps_for_noise(q: f64, noise_mult: f64, steps: u64, delta: f64) -> f64 {
+    let mut acc = RdpAccountant::new();
+    acc.compose(q, noise_mult, steps);
+    acc.epsilon(delta)
+}
+
+/// Calibrate the noise multiplier σ achieving `target_eps` at (q, T, δ) by
+/// bisection (the paper's Table 8 workflow).
+pub fn calibrate_noise(q: f64, steps: u64, delta: f64, target_eps: f64) -> f64 {
+    assert!(target_eps > 0.0);
+    let mut lo = 1e-2;
+    let mut hi = 1e2;
+    // Widen until bracketed.
+    while eps_for_noise(q, hi, steps, delta) > target_eps {
+        hi *= 2.0;
+        assert!(hi < 1e6, "cannot reach eps={target_eps}");
+    }
+    while eps_for_noise(q, lo, steps, delta) < target_eps {
+        lo /= 2.0;
+        assert!(lo > 1e-8, "eps={target_eps} needs no noise");
+    }
+    for _ in 0..60 {
+        let mid = 0.5 * (lo + hi);
+        if eps_for_noise(q, mid, steps, delta) > target_eps {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lgamma_matches_gamma() {
+        for x in [0.5f64, 1.0, 2.5, 10.0, 100.5] {
+            let lg = lgamma(x);
+            let direct = crate::rng::gamma_fn(x.min(30.0)).ln();
+            if x <= 30.0 {
+                assert!((lg - direct).abs() < 1e-8, "x={x}");
+            }
+            assert!(lg.is_finite());
+        }
+        // lgamma(171) would overflow Gamma in f64 but must stay finite.
+        assert!(lgamma(500.0).is_finite());
+    }
+
+    #[test]
+    fn full_batch_matches_plain_gaussian() {
+        // q=1 reduces to the Gaussian mechanism's RDP α/(2σ²).
+        for alpha in [2u64, 8, 32] {
+            let got = rdp_sampled_gaussian(1.0, 1.5, alpha);
+            let want = alpha as f64 / (2.0 * 1.5 * 1.5);
+            assert!((got - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn subsampling_amplifies_privacy() {
+        // Smaller q -> strictly less RDP at every order.
+        for alpha in [2u64, 16, 64] {
+            let e_small = rdp_sampled_gaussian(0.01, 1.0, alpha);
+            let e_big = rdp_sampled_gaussian(0.5, 1.0, alpha);
+            let e_full = rdp_sampled_gaussian(1.0, 1.0, alpha);
+            assert!(e_small < e_big && e_big < e_full, "alpha={alpha}");
+        }
+    }
+
+    #[test]
+    fn epsilon_monotone_in_steps_and_noise() {
+        let d = 1e-5;
+        assert!(eps_for_noise(0.03, 1.0, 100, d) < eps_for_noise(0.03, 1.0, 1000, d));
+        assert!(eps_for_noise(0.03, 2.0, 500, d) < eps_for_noise(0.03, 1.0, 500, d));
+    }
+
+    #[test]
+    fn calibration_inverts_accounting() {
+        let (q, t, delta) = (0.0279, 500, 1.0 / 3579.0);
+        for target in [1.0f64, 4.0, 10.0] {
+            let sigma = calibrate_noise(q, t, delta, target);
+            let eps = eps_for_noise(q, sigma, t, delta);
+            assert!((eps - target).abs() / target < 1e-3, "target={target} got={eps}");
+        }
+    }
+
+    #[test]
+    fn paper_table8_noise_scales_shape() {
+        // Table 8: eps 1→σ≈2.77, 2→1.57, 4→1.02, 6→0.845, 8→0.75, 10→0.685
+        // under the EMNIST setting (q=100/3579, T=500, δ=1/n). Our accountant
+        // uses the same integer-order RDP bound, so the calibrated σ should
+        // land in the same ballpark (within ~25%) and must preserve the
+        // ordering/ratios.
+        let (q, t, delta) = (100.0 / 3579.0, 500u64, 1.0 / 3579.0);
+        let paper = [(1.0, 2.77), (2.0, 1.57), (4.0, 1.02), (6.0, 0.845), (8.0, 0.75), (10.0, 0.685)];
+        let mut prev = f64::INFINITY;
+        for (eps, sigma_paper) in paper {
+            let sigma = calibrate_noise(q, t, delta, eps);
+            assert!(sigma < prev, "sigma must decrease with eps");
+            prev = sigma;
+            let rel = (sigma - sigma_paper).abs() / sigma_paper;
+            assert!(rel < 0.25, "eps={eps}: sigma={sigma:.3} paper={sigma_paper} rel={rel:.2}");
+        }
+    }
+
+    #[test]
+    fn accountant_composition_is_additive() {
+        let mut a = RdpAccountant::new();
+        a.compose(0.05, 1.2, 300);
+        let mut b = RdpAccountant::new();
+        b.compose(0.05, 1.2, 100);
+        b.compose(0.05, 1.2, 200);
+        for (x, y) in a.rdp.iter().zip(&b.rdp) {
+            assert!((x - y).abs() <= 1e-12 * x.abs().max(1.0), "{x} vs {y}");
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Differential-privacy substrate for DP-SignFedAvg (paper §3.4, Appendix F).
+//!
+//! * [`accountant`] — Rényi-DP accounting for the *subsampled Gaussian
+//!   mechanism* (Mironov, Talwar, Zhang '19), RDP→(ε,δ) conversion, and
+//!   noise calibration by bisection (this is how the paper's Table 8 maps
+//!   privacy budgets ε ∈ {1,…,10} to noise scales).
+//! * The mechanism itself (clip → Gaussian perturbation → sign) lives on the
+//!   client path in `fl::server` (`Compression::DpSign` / `DpDense`),
+//!   because sign compression is post-processing and costs no extra ε.
+
+pub mod accountant;
+
+pub use accountant::{calibrate_noise, eps_for_noise, RdpAccountant};

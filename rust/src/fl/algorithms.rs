@@ -1,0 +1,269 @@
+//! Named algorithm presets — every row of the paper's Table 2 and every
+//! curve in Figures 1–17, expressed as `(compression, server optimizer)`
+//! configurations over the shared round loop in [`super::server`].
+
+use crate::compress::sign::SigmaRule;
+use crate::rng::ZParam;
+
+/// Which uplink compressor the clients apply.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Compression {
+    /// Uncompressed f32 updates (FedAvg / distributed SGD / GD).
+    None,
+    /// The paper's stochastic sign `Sign(delta + σ·ξ_z)`.
+    /// σ = 0 gives vanilla SignSGD; `SigmaRule::L2Norm` with `z = Inf` gives
+    /// Sto-SignSGD (Safaryan–Richtárik).
+    ZSign { z: ZParam, sigma: SigmaRule },
+    /// EF-SignSGD (scaled sign + error feedback). Full participation only.
+    ErrorFeedback,
+    /// QSGD / FedPAQ unbiased quantizer with `s` levels.
+    Qsgd { s: u32 },
+    /// DP-SignFedAvg (Algorithm 2): clip the *model diff* to `clip`, add
+    /// Gaussian noise `N(0, (noise_mult·clip)²)`, then sign. The server
+    /// applies η·mean(signs) without the γ factor (matching Alg. 2 line 15).
+    DpSign { clip: f32, noise_mult: f32 },
+    /// Uncompressed DP-FedAvg baseline (clip + Gaussian noise, no sign).
+    DpDense { clip: f32, noise_mult: f32 },
+    /// Magnitude top-k sparsification (Qsparse-local-SGD-style baseline [8]).
+    TopK { frac: f32 },
+    /// Top-k support + stochastic sign of values — the paper conclusion's
+    /// "sign + sparsification" combination.
+    SparseSign { frac: f32, z: ZParam, sigma: f32 },
+}
+
+impl Compression {
+    /// Does this compressor transmit packed signs (d bits)?
+    pub fn is_sign(&self) -> bool {
+        matches!(self, Compression::ZSign { .. } | Compression::DpSign { .. })
+    }
+}
+
+/// Server-side optimizer applied to the dequantized aggregate (the paper's
+/// conclusion: the compressor composes with adaptive FL optimizers [41]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ServerOpt {
+    /// Plain step: x ← x − scale·agg.
+    Sgd,
+    /// Heavy-ball momentum (the "wM" baselines).
+    Momentum(f32),
+    /// FedAdam (Reddi et al. '20): first/second-moment adaptive step.
+    Adam { beta1: f32, beta2: f32, eps: f32 },
+}
+
+/// A fully-specified algorithm: compression + stepsizes + server optimizer.
+#[derive(Debug, Clone)]
+pub struct AlgorithmConfig {
+    /// Display name for logs/CSV (matches the paper's legend strings).
+    pub name: String,
+    pub compression: Compression,
+    /// Client stepsize γ.
+    pub client_lr: f32,
+    /// Server stepsize η (Algorithm 1 line 15 applies η·γ; the theory sets
+    /// η = η_z·σ, the experiments tune η directly — see §4).
+    pub server_lr: f32,
+    /// Server optimizer over the aggregated update.
+    pub server_opt: ServerOpt,
+    /// Local SGD steps per round E (E = 1 recovers z-SignSGD).
+    pub local_steps: usize,
+}
+
+impl AlgorithmConfig {
+    fn base(name: &str, compression: Compression) -> Self {
+        AlgorithmConfig {
+            name: name.to_string(),
+            compression,
+            client_lr: 0.01,
+            server_lr: 1.0,
+            server_opt: ServerOpt::Sgd,
+            local_steps: 1,
+        }
+    }
+
+    // -- builders ---------------------------------------------------------
+
+    pub fn with_lrs(mut self, client_lr: f32, server_lr: f32) -> Self {
+        self.client_lr = client_lr;
+        self.server_lr = server_lr;
+        self
+    }
+
+    pub fn with_momentum(mut self, m: f32) -> Self {
+        if m > 0.0 {
+            self.server_opt = ServerOpt::Momentum(m);
+            if !self.name.ends_with("wM") {
+                self.name = format!("{}wM", self.name);
+            }
+        }
+        self
+    }
+
+    /// FedAdam server optimizer (Reddi et al. '20 defaults).
+    pub fn with_server_adam(mut self) -> Self {
+        self.server_opt = ServerOpt::Adam { beta1: 0.9, beta2: 0.99, eps: 1e-3 };
+        self.name = format!("{}+Adam", self.name);
+        self
+    }
+
+    pub fn with_local_steps(mut self, e: usize) -> Self {
+        assert!(e >= 1);
+        self.local_steps = e;
+        self
+    }
+
+    // -- the paper's algorithms --------------------------------------------
+
+    /// Uncompressed gradient descent / distributed SGD ([22] in Table 2).
+    pub fn gd() -> Self {
+        Self::base("GD", Compression::None)
+    }
+
+    /// Distributed SGD with server momentum (SGDwM, Fig. 3).
+    pub fn sgdwm(momentum: f32) -> Self {
+        Self::base("SGD", Compression::None).with_momentum(momentum)
+    }
+
+    /// Uncompressed FedAvg ([37]/[55]) with E local steps.
+    pub fn fedavg(local_steps: usize) -> Self {
+        Self::base("FedAvg", Compression::None).with_local_steps(local_steps)
+    }
+
+    /// Vanilla (noiseless) SignSGD [9] — diverges under heterogeneity (§1).
+    pub fn signsgd() -> Self {
+        Self::base(
+            "SignSGD",
+            Compression::ZSign { z: ZParam::Finite(1), sigma: SigmaRule::Fixed(0.0) },
+        )
+    }
+
+    /// z-SignSGD (Algorithm 1 with E = 1): the paper's 1-SignSGD/∞-SignSGD.
+    pub fn z_signsgd(z: ZParam, sigma: f32) -> Self {
+        let name = format!("{z}-SignSGD");
+        Self::base(&name, Compression::ZSign { z, sigma: SigmaRule::Fixed(sigma) })
+    }
+
+    /// z-SignFedAvg (Algorithm 1): the paper's headline algorithm.
+    pub fn z_signfedavg(z: ZParam, sigma: f32, local_steps: usize) -> Self {
+        let name = format!("{z}-SignFedAvg");
+        Self::base(&name, Compression::ZSign { z, sigma: SigmaRule::Fixed(sigma) })
+            .with_local_steps(local_steps)
+    }
+
+    /// Noiseless SignFedAvg ablation (Appendix D.2's "SignFedAvg").
+    pub fn sign_fedavg(local_steps: usize) -> Self {
+        Self::base(
+            "SignFedAvg",
+            Compression::ZSign { z: ZParam::Finite(1), sigma: SigmaRule::Fixed(0.0) },
+        )
+        .with_local_steps(local_steps)
+    }
+
+    /// Sto-SignSGD [43]: uniform noise with the input-dependent scale σ=‖x‖₂.
+    pub fn sto_signsgd() -> Self {
+        Self::base(
+            "Sto-SignSGD",
+            Compression::ZSign { z: ZParam::Inf, sigma: SigmaRule::L2Norm },
+        )
+    }
+
+    /// EF-SignSGD [31] (with optional momentum — EF-SignSGDwM in Fig. 3).
+    pub fn ef_signsgd() -> Self {
+        Self::base("EF-SignSGD", Compression::ErrorFeedback)
+    }
+
+    /// QSGD [5] with s quantization levels.
+    pub fn qsgd(s: u32) -> Self {
+        Self::base(&format!("QSGD(s={s})"), Compression::Qsgd { s })
+    }
+
+    /// FedPAQ [42] = QSGD quantizer + E local steps.
+    pub fn fedpaq(s: u32, local_steps: usize) -> Self {
+        Self::base(&format!("FedPAQ(s={s})"), Compression::Qsgd { s })
+            .with_local_steps(local_steps)
+    }
+
+    /// DP-SignFedAvg (Algorithm 2).
+    pub fn dp_signfedavg(clip: f32, noise_mult: f32, local_steps: usize) -> Self {
+        Self::base("DP-SignFedAvg", Compression::DpSign { clip, noise_mult })
+            .with_local_steps(local_steps)
+    }
+
+    /// Uncompressed DP-FedAvg [21]/[28].
+    pub fn dp_fedavg(clip: f32, noise_mult: f32, local_steps: usize) -> Self {
+        Self::base("DP-FedAvg", Compression::DpDense { clip, noise_mult })
+            .with_local_steps(local_steps)
+    }
+
+    /// Magnitude top-k baseline (Qsparse-local-SGD-flavoured [8]).
+    pub fn topk(frac: f32, local_steps: usize) -> Self {
+        Self::base(&format!("TopK({frac})"), Compression::TopK { frac })
+            .with_local_steps(local_steps)
+    }
+
+    /// Sparsified stochastic sign — the conclusion's combination.
+    pub fn sparse_sign(frac: f32, z: ZParam, sigma: f32, local_steps: usize) -> Self {
+        Self::base(
+            &format!("Sparse{z}-Sign({frac})"),
+            Compression::SparseSign { frac, z, sigma },
+        )
+        .with_local_steps(local_steps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_match_paper_legends() {
+        assert_eq!(AlgorithmConfig::z_signsgd(ZParam::Finite(1), 0.05).name, "1-SignSGD");
+        assert_eq!(AlgorithmConfig::z_signsgd(ZParam::Inf, 0.05).name, "inf-SignSGD");
+        assert_eq!(
+            AlgorithmConfig::z_signfedavg(ZParam::Finite(1), 0.01, 5).name,
+            "1-SignFedAvg"
+        );
+        assert_eq!(AlgorithmConfig::sgdwm(0.9).name, "SGDwM");
+        assert_eq!(AlgorithmConfig::ef_signsgd().with_momentum(0.9).name, "EF-SignSGDwM");
+    }
+
+    #[test]
+    fn signsgd_is_zero_noise() {
+        match AlgorithmConfig::signsgd().compression {
+            Compression::ZSign { sigma: SigmaRule::Fixed(s), .. } => assert_eq!(s, 0.0),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn sto_sign_is_input_scaled_inf() {
+        match AlgorithmConfig::sto_signsgd().compression {
+            Compression::ZSign { z: ZParam::Inf, sigma: SigmaRule::L2Norm } => {}
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn builders_compose() {
+        let a = AlgorithmConfig::fedavg(10).with_lrs(0.1, 0.5).with_momentum(0.9);
+        assert_eq!(a.local_steps, 10);
+        assert_eq!(a.client_lr, 0.1);
+        assert_eq!(a.server_lr, 0.5);
+        assert_eq!(a.name, "FedAvgwM");
+        assert_eq!(a.server_opt, ServerOpt::Momentum(0.9));
+    }
+
+    #[test]
+    fn adam_builder() {
+        let a = AlgorithmConfig::z_signfedavg(ZParam::Finite(1), 0.01, 5).with_server_adam();
+        assert!(matches!(a.server_opt, ServerOpt::Adam { .. }));
+        assert!(a.name.ends_with("+Adam"));
+    }
+
+    #[test]
+    fn sparse_builders() {
+        let a = AlgorithmConfig::sparse_sign(0.05, ZParam::Inf, 0.1, 2);
+        assert!(matches!(a.compression, Compression::SparseSign { .. }));
+        assert!(!a.compression.is_sign()); // not the packed-sign wire path
+        let b = AlgorithmConfig::topk(0.1, 1);
+        assert!(matches!(b.compression, Compression::TopK { .. }));
+    }
+}

@@ -1,0 +1,200 @@
+//! The `TrainBackend` abstraction: what a "client doing E local SGD steps"
+//! means for a given workload.
+//!
+//! * [`AnalyticBackend`] — closed-form problems (Fig. 1/2, integration
+//!   tests): exact or minibatch gradients from `problems::AnalyticProblem`.
+//! * `runtime::XlaBackend` — neural workloads over AOT-compiled PJRT
+//!   artifacts (Fig. 3–17); lives in `runtime/` because it owns the PJRT
+//!   engine, but implements this same trait.
+
+use crate::problems::AnalyticProblem;
+use crate::rng::{Pcg64, ZParam};
+use crate::tensor;
+
+/// Result of one client's local work for a round.
+#[derive(Debug, Clone)]
+pub struct LocalOutcome {
+    /// The accumulated update direction `(x_start − x_E)/γ = Σ_s g_s`
+    /// (Algorithm 1 line 11 compresses exactly this).
+    pub delta: Vec<f32>,
+    /// Mean local training loss over the E steps (diagnostics only).
+    pub mean_loss: f64,
+}
+
+/// Periodic evaluation of the global model.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalResult {
+    /// Global objective (train loss for neural workloads, f(x) for analytic).
+    pub objective: f64,
+    /// Test accuracy, when the workload has one.
+    pub accuracy: Option<f64>,
+    /// ‖∇f(x)‖² (the paper's convergence metric), when computable exactly.
+    pub grad_norm_sq: Option<f64>,
+}
+
+/// A training workload as seen by the FL server.
+pub trait TrainBackend {
+    /// Flat parameter dimension d.
+    fn dim(&self) -> usize;
+
+    /// Total number of clients n.
+    fn num_clients(&self) -> usize;
+
+    /// The initial global iterate x_0.
+    fn init_params(&mut self) -> Vec<f32>;
+
+    /// Run E local SGD steps for `client` starting at `params`, stepsize γ.
+    fn local_update(
+        &mut self,
+        client: usize,
+        params: &[f32],
+        local_steps: usize,
+        gamma: f32,
+        rng: &mut Pcg64,
+    ) -> LocalOutcome;
+
+    /// Evaluate the global model.
+    fn evaluate(&mut self, params: &[f32]) -> EvalResult;
+
+    /// Optional accelerated compression path (the XLA backend routes this
+    /// through the AOT-compiled Pallas kernel, preferring the bit-packed
+    /// artifact variant; analytic backends return `None` and the server
+    /// falls back to the Rust reference compressor).
+    fn compress_hook(
+        &mut self,
+        _delta: &[f32],
+        _z: ZParam,
+        _sigma: f32,
+        _rng: &mut Pcg64,
+    ) -> Option<crate::compress::pack::PackedSigns> {
+        None
+    }
+}
+
+/// Backend over an analytic problem. `stochastic` switches the gradient
+/// oracle from full gradients (Fig. 1/2's setting) to single-sample
+/// minibatches.
+pub struct AnalyticBackend<P: AnalyticProblem> {
+    pub problem: P,
+    pub stochastic: bool,
+    /// Initial iterate (the paper's §4.1 uses the zero vector).
+    pub x0: Vec<f32>,
+}
+
+impl<P: AnalyticProblem> AnalyticBackend<P> {
+    pub fn new(problem: P) -> Self {
+        let d = problem.dim();
+        AnalyticBackend { problem, stochastic: false, x0: vec![0.0; d] }
+    }
+
+    pub fn stochastic(mut self) -> Self {
+        self.stochastic = true;
+        self
+    }
+}
+
+impl<P: AnalyticProblem> TrainBackend for AnalyticBackend<P> {
+    fn dim(&self) -> usize {
+        self.problem.dim()
+    }
+
+    fn num_clients(&self) -> usize {
+        self.problem.num_clients()
+    }
+
+    fn init_params(&mut self) -> Vec<f32> {
+        self.x0.clone()
+    }
+
+    fn local_update(
+        &mut self,
+        client: usize,
+        params: &[f32],
+        local_steps: usize,
+        gamma: f32,
+        rng: &mut Pcg64,
+    ) -> LocalOutcome {
+        let d = params.len();
+        let mut x = params.to_vec();
+        let mut g = vec![0.0f32; d];
+        for _ in 0..local_steps {
+            self.problem.grad_into(
+                client,
+                &x,
+                &mut g,
+                if self.stochastic { Some(rng) } else { None },
+            );
+            tensor::axpy(-gamma, &g, &mut x);
+        }
+        // delta = (params - x_E) / gamma = sum of the local gradients.
+        let mut delta = vec![0.0f32; d];
+        for ((dl, &p), &xe) in delta.iter_mut().zip(params).zip(&x) {
+            *dl = (p - xe) / gamma;
+        }
+        LocalOutcome { delta, mean_loss: self.problem.objective(&x) }
+    }
+
+    fn evaluate(&mut self, params: &[f32]) -> EvalResult {
+        EvalResult {
+            objective: self.problem.objective(params),
+            accuracy: None,
+            grad_norm_sq: Some(self.problem.grad_norm_sq(params)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::consensus::Consensus;
+
+    #[test]
+    fn delta_is_sum_of_gradients_single_step() {
+        let p = Consensus::gaussian(3, 4, 1);
+        let mut b = AnalyticBackend::new(p);
+        let x = vec![0.5f32; 4];
+        let mut rng = Pcg64::seeded(0);
+        let out = b.local_update(1, &x, 1, 0.1, &mut rng);
+        let mut g = vec![0.0f32; 4];
+        b.problem.grad_into(1, &x, &mut g, None);
+        for (a, w) in out.delta.iter().zip(&g) {
+            assert!((a - w).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn multiple_steps_accumulate() {
+        let p = Consensus::gaussian(2, 3, 2);
+        let mut b = AnalyticBackend::new(p);
+        let x = vec![1.0f32; 3];
+        let mut rng = Pcg64::seeded(0);
+        let gamma = 0.05f32;
+        let e = 4usize;
+        let out = b.local_update(0, &x, e, gamma, &mut rng);
+        // Replay manually.
+        let mut xi = x.clone();
+        let mut g = vec![0.0f32; 3];
+        let mut acc = vec![0.0f32; 3];
+        for _ in 0..e {
+            b.problem.grad_into(0, &xi, &mut g, None);
+            tensor::axpy(1.0, &g, &mut acc);
+            tensor::axpy(-gamma, &g, &mut xi);
+        }
+        for (a, w) in out.delta.iter().zip(&acc) {
+            assert!((a - w).abs() < 1e-3, "{a} vs {w}");
+        }
+    }
+
+    #[test]
+    fn evaluate_reports_grad_norm() {
+        let p = Consensus::gaussian(3, 4, 1);
+        let mut b = AnalyticBackend::new(p);
+        let opt = {
+            let p2 = Consensus::gaussian(3, 4, 1);
+            p2.optimum()
+        };
+        let r = b.evaluate(&opt);
+        assert!(r.grad_norm_sq.unwrap() < 1e-10);
+        assert!(r.accuracy.is_none());
+    }
+}

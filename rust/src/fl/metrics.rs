@@ -1,0 +1,197 @@
+//! Experiment metrics: per-round records, repeat aggregation (the paper's
+//! "10 independent runs, mean ± std" protocol), and CSV output.
+
+use crate::util::stats::Summary;
+use std::io::Write;
+use std::path::Path;
+
+/// One communication round's measurements.
+#[derive(Debug, Clone, Copy)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Global objective (train loss / f(x)).
+    pub objective: f64,
+    /// Test accuracy if the workload has one.
+    pub accuracy: Option<f64>,
+    /// ‖∇f(x)‖² when available (the paper's convergence metric).
+    pub grad_norm_sq: Option<f64>,
+    /// Cumulative uplink bits across all clients and rounds so far.
+    pub bits_up: u64,
+    /// Cumulative downlink bits (32·d per client unless downlink compression
+    /// is enabled — see `ServerConfig::downlink_sign`).
+    pub bits_down: u64,
+    /// Noise scale σ in effect this round (tracks the plateau controller).
+    pub sigma: f32,
+    /// Wall-clock milliseconds spent on this round.
+    pub wall_ms: f64,
+}
+
+/// A complete run: algorithm name + its round records.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub algorithm: String,
+    pub records: Vec<RoundRecord>,
+}
+
+impl RunResult {
+    pub fn final_objective(&self) -> f64 {
+        self.records.last().map(|r| r.objective).unwrap_or(f64::NAN)
+    }
+
+    pub fn final_accuracy(&self) -> Option<f64> {
+        self.records.last().and_then(|r| r.accuracy)
+    }
+
+    pub fn total_bits(&self) -> u64 {
+        self.records.last().map(|r| r.bits_up).unwrap_or(0)
+    }
+}
+
+/// Mean ± std aggregation of repeated runs (per round index).
+#[derive(Debug, Clone)]
+pub struct Aggregated {
+    pub algorithm: String,
+    pub rounds: Vec<usize>,
+    pub objective_mean: Vec<f64>,
+    pub objective_std: Vec<f64>,
+    pub accuracy_mean: Vec<f64>,
+    pub accuracy_std: Vec<f64>,
+    pub bits_up: Vec<u64>,
+}
+
+/// Aggregate repeats; all runs must share round structure.
+pub fn aggregate(runs: &[RunResult]) -> Aggregated {
+    assert!(!runs.is_empty());
+    let n_rounds = runs[0].records.len();
+    assert!(runs.iter().all(|r| r.records.len() == n_rounds), "ragged repeats");
+    let mut out = Aggregated {
+        algorithm: runs[0].algorithm.clone(),
+        rounds: Vec::with_capacity(n_rounds),
+        objective_mean: Vec::new(),
+        objective_std: Vec::new(),
+        accuracy_mean: Vec::new(),
+        accuracy_std: Vec::new(),
+        bits_up: Vec::new(),
+    };
+    for t in 0..n_rounds {
+        let mut obj = Summary::new();
+        let mut acc = Summary::new();
+        for r in runs {
+            obj.push(r.records[t].objective);
+            if let Some(a) = r.records[t].accuracy {
+                acc.push(a);
+            }
+        }
+        out.rounds.push(runs[0].records[t].round);
+        out.objective_mean.push(obj.mean());
+        out.objective_std.push(obj.std());
+        out.accuracy_mean.push(if acc.count() > 0 { acc.mean() } else { f64::NAN });
+        out.accuracy_std.push(if acc.count() > 0 { acc.std() } else { f64::NAN });
+        out.bits_up.push(runs[0].records[t].bits_up);
+    }
+    out
+}
+
+/// Write one aggregated series as CSV (`results/` convention: one file per
+/// algorithm per figure).
+pub fn write_csv(path: &Path, agg: &Aggregated) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "round,objective_mean,objective_std,accuracy_mean,accuracy_std,bits_up")?;
+    for t in 0..agg.rounds.len() {
+        writeln!(
+            f,
+            "{},{},{},{},{},{}",
+            agg.rounds[t],
+            agg.objective_mean[t],
+            agg.objective_std[t],
+            agg.accuracy_mean[t],
+            agg.accuracy_std[t],
+            agg.bits_up[t]
+        )?;
+    }
+    Ok(())
+}
+
+/// Write raw per-run records as CSV (for debugging / EXPERIMENTS.md).
+pub fn write_runs_csv(path: &Path, runs: &[RunResult]) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "run,round,objective,accuracy,grad_norm_sq,bits_up,bits_down,sigma,wall_ms")?;
+    for (k, run) in runs.iter().enumerate() {
+        for r in &run.records {
+            writeln!(
+                f,
+                "{},{},{},{},{},{},{},{},{}",
+                k,
+                r.round,
+                r.objective,
+                r.accuracy.unwrap_or(f64::NAN),
+                r.grad_norm_sq.unwrap_or(f64::NAN),
+                r.bits_up,
+                r.bits_down,
+                r.sigma,
+                r.wall_ms
+            )?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_run(name: &str, objs: &[f64]) -> RunResult {
+        RunResult {
+            algorithm: name.into(),
+            records: objs
+                .iter()
+                .enumerate()
+                .map(|(i, &o)| RoundRecord {
+                    round: i,
+                    objective: o,
+                    accuracy: Some(1.0 - o),
+                    grad_norm_sq: None,
+                    bits_up: (i as u64 + 1) * 100,
+                    bits_down: 0,
+                    sigma: 0.0,
+                    wall_ms: 0.0,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn aggregate_mean_std() {
+        let runs = vec![mk_run("a", &[1.0, 0.5]), mk_run("a", &[3.0, 1.5])];
+        let agg = aggregate(&runs);
+        assert_eq!(agg.objective_mean, vec![2.0, 1.0]);
+        // std of {1,3} = sqrt(2)
+        assert!((agg.objective_std[0] - 2f64.sqrt()).abs() < 1e-12);
+        assert_eq!(agg.bits_up, vec![100, 200]);
+    }
+
+    #[test]
+    fn csv_roundtrip_format() {
+        let dir = std::env::temp_dir().join("zsfa_metrics_test");
+        let path = dir.join("a.csv");
+        let runs = vec![mk_run("a", &[1.0, 0.5])];
+        write_csv(&path, &aggregate(&runs)).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.starts_with("round,"));
+        assert_eq!(body.lines().count(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn ragged_repeats_rejected() {
+        let runs = vec![mk_run("a", &[1.0]), mk_run("a", &[1.0, 2.0])];
+        aggregate(&runs);
+    }
+}

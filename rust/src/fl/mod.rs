@@ -1,0 +1,24 @@
+//! The federated-learning coordinator (the paper's L3 contribution).
+//!
+//! * [`algorithms`] — named presets for every algorithm in the paper's
+//!   experiment section (Table 2 + §4): FedAvg, GD/SGDwM, SignSGD,
+//!   1-/∞-SignSGD, z-SignFedAvg, Sto-SignSGD(wM), EF-SignSGDwM, QSGD,
+//!   FedPAQ, and the DP variants.
+//! * [`backend`] — the `TrainBackend` abstraction: analytic problems
+//!   (Fig. 1/2) vs. AOT-compiled neural workloads over PJRT (Fig. 3–17).
+//! * [`server`] — Algorithm 1's round loop: client sampling, local updates,
+//!   uplink compression, sign-vote aggregation, server momentum, the
+//!   plateau σ-controller, and exact bits-on-the-wire accounting.
+//! * [`plateau`] — §4.4's Plateau criterion for the adaptive noise scale.
+//! * [`metrics`] — round records, repeat aggregation (mean ± std), CSV.
+
+pub mod algorithms;
+pub mod backend;
+pub mod metrics;
+pub mod plateau;
+pub mod server;
+
+pub use algorithms::{AlgorithmConfig, Compression};
+pub use backend::{EvalResult, LocalOutcome, TrainBackend};
+pub use metrics::{RoundRecord, RunResult};
+pub use server::{run_experiment, ServerConfig};

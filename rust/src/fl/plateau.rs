@@ -1,0 +1,138 @@
+//! The Plateau criterion (paper §4.4): adaptive noise-scale scheduling.
+//!
+//! Start from a small σ_init; whenever the objective has not improved for κ
+//! consecutive communication rounds, multiply σ by β ∈ [1.5, 2]; stop
+//! growing once σ ≥ σ_bound. The paper's Table 6 hyperparameters are
+//! provided as presets.
+
+/// Plateau-criterion hyperparameters.
+#[derive(Debug, Clone, Copy)]
+pub struct PlateauConfig {
+    pub sigma_init: f32,
+    pub sigma_bound: f32,
+    /// Rounds without improvement before σ grows.
+    pub kappa: usize,
+    /// Multiplicative growth factor β.
+    pub beta: f32,
+}
+
+impl PlateauConfig {
+    /// Table 6, non-i.i.d. MNIST row.
+    pub fn mnist() -> Self {
+        PlateauConfig { sigma_init: 0.01, sigma_bound: 0.5, kappa: 30, beta: 1.5 }
+    }
+
+    /// Table 6, EMNIST row.
+    pub fn emnist() -> Self {
+        PlateauConfig { sigma_init: 0.0001, sigma_bound: 0.1, kappa: 10, beta: 2.0 }
+    }
+
+    /// Table 6, CIFAR-10 row.
+    pub fn cifar() -> Self {
+        PlateauConfig { sigma_init: 0.001, sigma_bound: 0.1, kappa: 200, beta: 1.5 }
+    }
+}
+
+/// Stateful controller: feed it the objective once per round, read σ back.
+#[derive(Debug, Clone)]
+pub struct PlateauController {
+    cfg: PlateauConfig,
+    sigma: f32,
+    best: f64,
+    stall: usize,
+}
+
+impl PlateauController {
+    pub fn new(cfg: PlateauConfig) -> Self {
+        assert!(cfg.sigma_init > 0.0 && cfg.sigma_bound >= cfg.sigma_init);
+        assert!(cfg.beta > 1.0);
+        PlateauController { cfg, sigma: cfg.sigma_init, best: f64::INFINITY, stall: 0 }
+    }
+
+    /// Current noise scale.
+    pub fn sigma(&self) -> f32 {
+        self.sigma
+    }
+
+    /// Observe this round's objective; returns the (possibly grown) σ.
+    pub fn observe(&mut self, objective: f64) -> f32 {
+        if objective < self.best {
+            self.best = objective;
+            self.stall = 0;
+        } else {
+            self.stall += 1;
+            if self.stall >= self.cfg.kappa && self.sigma < self.cfg.sigma_bound {
+                self.sigma = (self.sigma * self.cfg.beta).min(self.cfg.sigma_bound);
+                self.stall = 0;
+            }
+        }
+        self.sigma
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> PlateauConfig {
+        PlateauConfig { sigma_init: 0.01, sigma_bound: 0.08, kappa: 3, beta: 2.0 }
+    }
+
+    #[test]
+    fn grows_only_on_stall() {
+        let mut c = PlateauController::new(cfg());
+        // Improving objective: sigma stays.
+        for i in 0..10 {
+            assert_eq!(c.observe(10.0 - i as f64), 0.01);
+        }
+        // Stalled: after kappa rounds, sigma doubles.
+        assert_eq!(c.observe(5.0), 0.01);
+        assert_eq!(c.observe(5.0), 0.01);
+        let s = c.observe(5.0);
+        assert!((s - 0.02).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bounded_by_sigma_bound() {
+        let mut c = PlateauController::new(cfg());
+        for _ in 0..1000 {
+            c.observe(1.0);
+        }
+        assert!(c.sigma() <= 0.08 + 1e-9);
+        assert!((c.sigma() - 0.08).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sigma_is_monotone_nondecreasing() {
+        let mut c = PlateauController::new(cfg());
+        let mut prev = c.sigma();
+        let mut rng = crate::rng::Pcg64::seeded(0);
+        for _ in 0..500 {
+            let s = c.observe(rng.uniform());
+            assert!(s >= prev);
+            prev = s;
+        }
+    }
+
+    #[test]
+    fn stall_counter_resets_after_growth() {
+        let mut c = PlateauController::new(cfg());
+        c.observe(1.0); // first observation improves over +inf
+        for _ in 0..3 {
+            c.observe(1.0); // kappa = 3 stalls -> growth on the last one
+        }
+        let s1 = c.sigma();
+        assert!((s1 - 0.02).abs() < 1e-9);
+        // Needs another kappa stalls before the next growth.
+        c.observe(1.0);
+        assert_eq!(c.sigma(), s1);
+    }
+
+    #[test]
+    fn paper_presets_valid() {
+        for cfg in [PlateauConfig::mnist(), PlateauConfig::emnist(), PlateauConfig::cifar()] {
+            let _ = PlateauController::new(cfg);
+            assert!(cfg.beta >= 1.5 && cfg.beta <= 2.0);
+        }
+    }
+}

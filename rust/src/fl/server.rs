@@ -1,0 +1,582 @@
+//! Algorithm 1's round loop — the coordinator proper.
+//!
+//! Responsibilities per communication round t:
+//!   1. sample the participant set (full or uniform partial participation);
+//!   2. orchestrate each participant's E local SGD steps via the backend;
+//!   3. apply the configured uplink compressor to each client's update
+//!      direction `(x_{t-1} − x^i_{t-1,E})/γ` and account the exact bits;
+//!   4. aggregate: packed-sign **vote accumulation** for the sign family
+//!      (the hot path — see `compress::pack::VoteAccumulator`), dense mean
+//!      otherwise;
+//!   5. server step `x_t = x_{t-1} − η·γ·agg` (Alg. 1 line 15), with
+//!      optional server momentum (the paper's "wM" baselines) and the DP
+//!      variant's γ-free step (Alg. 2 line 15);
+//!   6. feed the plateau controller and periodically evaluate.
+//!
+//! Determinism: every (round, client) pair gets its own PCG stream derived
+//! from the experiment seed, so runs are bit-reproducible regardless of
+//! participant order.
+
+use super::algorithms::{AlgorithmConfig, Compression, ServerOpt};
+use super::backend::TrainBackend;
+use super::metrics::{RoundRecord, RunResult};
+use super::plateau::{PlateauConfig, PlateauController};
+use crate::compress::error_feedback::EfState;
+use crate::compress::pack::{PackedSigns, VoteAccumulator};
+use crate::compress::qsgd::Qsgd;
+use crate::compress::sign::{SigmaRule, StochasticSign};
+use crate::compress::sparsify::{SparseSign, TopK};
+use crate::compress::{Compressor, Message};
+use crate::rng::{Pcg64, ZParam};
+use crate::tensor;
+use crate::util::Timer;
+
+/// Server-side experiment configuration (everything that is not the
+/// algorithm itself).
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Communication rounds T.
+    pub rounds: usize,
+    /// Clients sampled per round (None = full participation).
+    pub clients_per_round: Option<usize>,
+    /// Evaluate every k rounds (records are emitted only on eval rounds).
+    pub eval_every: usize,
+    /// Experiment seed (repeats vary this).
+    pub seed: u64,
+    /// Optional §4.4 plateau controller for the noise scale.
+    pub plateau: Option<PlateauConfig>,
+    /// Optional downlink compression: broadcast the *server update* as a
+    /// stochastic sign with scale σ_d (the [27]/[12] bidirectional setting).
+    /// The server applies the compressed update itself, so server and
+    /// clients stay consistent; downlink costs d bits per client per round.
+    pub downlink_sign: Option<(ZParam, f32)>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            rounds: 100,
+            clients_per_round: None,
+            eval_every: 1,
+            seed: 0,
+            plateau: None,
+            downlink_sign: None,
+        }
+    }
+}
+
+/// Run one experiment; returns the evaluated round records.
+pub fn run_experiment(
+    backend: &mut dyn TrainBackend,
+    algo: &AlgorithmConfig,
+    cfg: &ServerConfig,
+) -> RunResult {
+    let d = backend.dim();
+    let n = backend.num_clients();
+    let m_per_round = cfg.clients_per_round.unwrap_or(n).min(n);
+    assert!(m_per_round >= 1);
+    if matches!(algo.compression, Compression::ErrorFeedback) {
+        assert!(
+            m_per_round == n,
+            "EF-SignSGD cannot track residuals under partial participation (paper §1.1)"
+        );
+    }
+
+    let mut params = backend.init_params();
+    assert_eq!(params.len(), d);
+    let root = Pcg64::new(cfg.seed, 0xa11ce);
+
+    // Server state.
+    let mut momentum_buf = vec![0.0f32; d];
+    let mut adam_v = vec![0.0f32; d];
+    let mut adam_t = 0u32;
+    let mut plateau = cfg.plateau.map(PlateauController::new);
+    let mut ef_states: Vec<EfState> = match algo.compression {
+        Compression::ErrorFeedback => (0..n).map(|_| EfState::new(d)).collect(),
+        _ => Vec::new(),
+    };
+
+    // Scratch buffers reused across rounds (no allocation on the hot loop).
+    let mut votes = VoteAccumulator::new(d);
+    let mut dense_acc = vec![0.0f32; d];
+    let mut update = vec![0.0f32; d];
+    let mut signs_buf = vec![0i8; d];
+    let mut decode_buf = vec![0.0f32; d];
+
+    let mut bits_up: u64 = 0;
+    let mut bits_down: u64 = 0;
+    let mut records = Vec::new();
+
+    for t in 0..cfg.rounds {
+        let timer = Timer::start();
+        // 1. Participant sampling (uniform, without replacement).
+        let mut sample_rng = root.split(t as u64 * 2 + 1);
+        let participants: Vec<usize> = if m_per_round == n {
+            (0..n).collect()
+        } else {
+            sample_rng.sample_without_replacement(n, m_per_round)
+        };
+
+        // Effective sigma this round (plateau overrides the fixed value).
+        let round_sigma = effective_sigma(algo, plateau.as_ref());
+
+        votes.reset();
+        dense_acc.iter_mut().for_each(|v| *v = 0.0);
+        let inv_m = 1.0f32 / participants.len() as f32;
+        let mut loss_sum = 0.0f64;
+
+        // 2–3. Local updates + compression.
+        for &client in &participants {
+            let mut crng = root.split(((t as u64) << 20) ^ (client as u64) ^ 0x5eed);
+            let outcome =
+                backend.local_update(client, &params, algo.local_steps, algo.client_lr, &mut crng);
+            loss_sum += outcome.mean_loss;
+            match &algo.compression {
+                Compression::None => {
+                    tensor::axpy(inv_m, &outcome.delta, &mut dense_acc);
+                    bits_up += 32 * d as u64;
+                }
+                Compression::ZSign { z, sigma } => {
+                    let s = match sigma {
+                        SigmaRule::Fixed(_) => round_sigma,
+                        SigmaRule::L2Norm => tensor::norm2(&outcome.delta) as f32,
+                        SigmaRule::InfNorm => tensor::norm_inf(&outcome.delta) as f32,
+                    };
+                    // Prefer the backend's AOT Pallas kernel; fall back to
+                    // the Rust reference compressor (analytic problems).
+                    let packed = match backend.compress_hook(&outcome.delta, *z, s, &mut crng) {
+                        Some(packed) => packed,
+                        None => {
+                            let mut comp = StochasticSign::new(*z, SigmaRule::Fixed(s));
+                            comp.compress_into(&outcome.delta, &mut crng, &mut signs_buf);
+                            PackedSigns::from_signs(&signs_buf)
+                        }
+                    };
+                    votes.add(&packed);
+                    bits_up += d as u64;
+                }
+                Compression::ErrorFeedback => {
+                    // EF compresses the stepsize-scaled update γ·Σg.
+                    let mut scaled = outcome.delta.clone();
+                    tensor::scale(algo.client_lr, &mut scaled);
+                    let msg = ef_states[client].step(&scaled);
+                    bits_up += msg.bits_on_wire();
+                    msg.decode_into(&mut decode_buf);
+                    // Undo the γ scaling so the server step stays η·γ·agg.
+                    tensor::axpy(inv_m / algo.client_lr, &decode_buf, &mut dense_acc);
+                }
+                Compression::Qsgd { s } => {
+                    let q = Qsgd::new(*s).quantize(&outcome.delta, &mut crng);
+                    bits_up += q.bits_on_wire();
+                    q.decode_into(&mut decode_buf);
+                    tensor::axpy(inv_m, &decode_buf, &mut dense_acc);
+                }
+                Compression::DpSign { clip, noise_mult } => {
+                    // Alg. 2 line 11: clip the *model diff*, perturb, sign.
+                    let mut diff = outcome.delta.clone();
+                    tensor::scale(algo.client_lr, &mut diff); // γ·Σg = x_{t-1} − x_E
+                    tensor::clip_l2(&mut diff, *clip as f64);
+                    let noise_std = noise_mult * clip;
+                    for v in diff.iter_mut() {
+                        *v += noise_std * crng.normal() as f32;
+                    }
+                    votes.add(&PackedSigns::from_f32_signs(&diff));
+                    bits_up += d as u64;
+                }
+                Compression::DpDense { clip, noise_mult } => {
+                    let mut diff = outcome.delta.clone();
+                    tensor::scale(algo.client_lr, &mut diff);
+                    tensor::clip_l2(&mut diff, *clip as f64);
+                    let noise_std = noise_mult * clip;
+                    for v in diff.iter_mut() {
+                        *v += noise_std * crng.normal() as f32;
+                    }
+                    tensor::axpy(inv_m, &diff, &mut dense_acc);
+                    bits_up += 32 * d as u64;
+                }
+                Compression::TopK { frac } => {
+                    let msg = TopK::new(*frac).compress(&outcome.delta, &mut crng);
+                    bits_up += msg.bits_on_wire();
+                    if let Message::Sparse(s) = &msg {
+                        s.decode_into(&mut decode_buf);
+                    }
+                    tensor::axpy(inv_m, &decode_buf, &mut dense_acc);
+                }
+                Compression::SparseSign { frac, z, sigma } => {
+                    let msg =
+                        SparseSign::new(*frac, *z, *sigma).compress(&outcome.delta, &mut crng);
+                    bits_up += msg.bits_on_wire();
+                    if let Message::Sparse(s) = &msg {
+                        s.decode_into(&mut decode_buf);
+                    }
+                    tensor::axpy(inv_m, &decode_buf, &mut dense_acc);
+                }
+            }
+        }
+
+        // 4–5. Aggregate + server step.
+        let step_scale = match &algo.compression {
+            // Alg. 2 applies η to the mean sign of *model diffs* (no γ).
+            Compression::DpSign { .. } => algo.server_lr,
+            // DP-FedAvg likewise averages model diffs directly.
+            Compression::DpDense { .. } => algo.server_lr,
+            // Alg. 1 line 15: η·γ·mean(Δ).
+            _ => algo.server_lr * algo.client_lr,
+        };
+        if algo.compression.is_sign() {
+            votes.mean_into(1.0, &mut update);
+        } else {
+            update.copy_from_slice(&dense_acc);
+        }
+        // Optional downlink compression: broadcast the update itself as a
+        // dequantized stochastic sign (applied server-side too, so the
+        // global iterate equals what the clients reconstruct).
+        if let Some((z, sigma_d)) = cfg.downlink_sign {
+            let mut drng = root.split((t as u64) | 0x4000_0000_0000_0000);
+            let mut comp = StochasticSign::new(z, SigmaRule::Fixed(sigma_d));
+            comp.compress_into(&update.clone(), &mut drng, &mut signs_buf);
+            let scale = (z.eta() as f32) * sigma_d;
+            for (u, &s) in update.iter_mut().zip(&signs_buf) {
+                *u = scale * s as f32;
+            }
+            bits_down += (participants.len() * d) as u64;
+        } else {
+            bits_down += (participants.len() * d * 32) as u64;
+        }
+        match algo.server_opt {
+            ServerOpt::Sgd => tensor::axpy(-step_scale, &update, &mut params),
+            ServerOpt::Momentum(beta) => {
+                // Server momentum: m ← β·m + agg; x ← x − scale·m.
+                for (mb, &u) in momentum_buf.iter_mut().zip(&update) {
+                    *mb = beta * *mb + u;
+                }
+                tensor::axpy(-step_scale, &momentum_buf, &mut params);
+            }
+            ServerOpt::Adam { beta1, beta2, eps } => {
+                // FedAdam (Reddi et al. '20) with bias correction.
+                adam_t += 1;
+                let bc1 = 1.0 - beta1.powi(adam_t as i32);
+                let bc2 = 1.0 - beta2.powi(adam_t as i32);
+                for ((p, mb), (vb, &u)) in params
+                    .iter_mut()
+                    .zip(momentum_buf.iter_mut())
+                    .zip(adam_v.iter_mut().zip(&update))
+                {
+                    *mb = beta1 * *mb + (1.0 - beta1) * u;
+                    *vb = beta2 * *vb + (1.0 - beta2) * u * u;
+                    let mhat = *mb / bc1;
+                    let vhat = *vb / bc2;
+                    *p -= step_scale * mhat / (vhat.sqrt() + eps);
+                }
+            }
+        }
+
+        // 6. Plateau + evaluation.
+        let mean_local_loss = loss_sum / participants.len() as f64;
+        if let Some(p) = plateau.as_mut() {
+            p.observe(mean_local_loss);
+        }
+        if t % cfg.eval_every == 0 || t + 1 == cfg.rounds {
+            let eval = backend.evaluate(&params);
+            records.push(RoundRecord {
+                round: t,
+                objective: eval.objective,
+                accuracy: eval.accuracy,
+                grad_norm_sq: eval.grad_norm_sq,
+                bits_up,
+                bits_down,
+                sigma: round_sigma,
+                wall_ms: timer.elapsed_ms(),
+            });
+        }
+    }
+
+    RunResult { algorithm: algo.name.clone(), records }
+}
+
+fn effective_sigma(algo: &AlgorithmConfig, plateau: Option<&PlateauController>) -> f32 {
+    match (&algo.compression, plateau) {
+        (Compression::ZSign { sigma: SigmaRule::Fixed(_), .. }, Some(p)) => p.sigma(),
+        (Compression::ZSign { sigma: SigmaRule::Fixed(s), .. }, None) => *s,
+        _ => 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::backend::AnalyticBackend;
+    use crate::problems::consensus::Consensus;
+    use crate::problems::AnalyticProblem;
+    use crate::rng::ZParam;
+
+    fn consensus_backend(n: usize, d: usize) -> AnalyticBackend<Consensus> {
+        AnalyticBackend::new(Consensus::gaussian(n, d, 99))
+    }
+
+    #[test]
+    fn gd_converges_on_consensus() {
+        let mut b = consensus_backend(10, 20);
+        let f_star = b.problem.optimal_value().unwrap();
+        let algo = AlgorithmConfig::gd().with_lrs(0.1, 1.0);
+        let cfg = ServerConfig { rounds: 200, ..Default::default() };
+        let run = run_experiment(&mut b, &algo, &cfg);
+        assert!(run.final_objective() - f_star < 1e-6, "gap={}", run.final_objective() - f_star);
+    }
+
+    #[test]
+    fn signsgd_stalls_on_counterexample() {
+        // The §1 counterexample: vanilla SignSGD never moves from x0 in (−A, A).
+        let mut b = AnalyticBackend::new(Consensus::counterexample(4.0));
+        b.x0 = vec![2.0];
+        let algo = AlgorithmConfig::signsgd().with_lrs(0.01, 1.0);
+        let cfg = ServerConfig { rounds: 100, ..Default::default() };
+        let run = run_experiment(&mut b, &algo, &cfg);
+        let first = run.records.first().unwrap().objective;
+        let last = run.records.last().unwrap().objective;
+        assert!((first - last).abs() < 1e-9, "SignSGD moved: {first} -> {last}");
+    }
+
+    #[test]
+    fn stochastic_sign_escapes_counterexample() {
+        // 1-SignSGD (Gaussian noise) does make progress on the same instance.
+        // f* = 16 for A = 4 (the objective is x^2 + 16).
+        let mut b = AnalyticBackend::new(Consensus::counterexample(4.0));
+        let f_star = b.problem.optimal_value().unwrap();
+        b.x0 = vec![2.0];
+        let algo = AlgorithmConfig::z_signsgd(ZParam::Finite(1), 5.0).with_lrs(0.05, 1.0);
+        let cfg = ServerConfig { rounds: 400, ..Default::default() };
+        let run = run_experiment(&mut b, &algo, &cfg);
+        let gap0 = run.records.first().unwrap().objective - f_star;
+        let gap = run.records.last().unwrap().objective - f_star;
+        assert!(gap < gap0 * 0.3, "gap {gap0} -> {gap}");
+    }
+
+    #[test]
+    fn inf_sign_threshold_behaviour() {
+        // Theorem 2 / Remark 2: with sigma below the gradient range, inf-sign
+        // cannot converge; with sigma above it, it does.
+        let a = 4.0f32;
+        for (sigma, should_move) in [(1.0f32, false), (20.0, true)] {
+            let mut b = AnalyticBackend::new(Consensus::counterexample(a));
+            let f_star = b.problem.optimal_value().unwrap();
+            b.x0 = vec![2.0];
+            let algo = AlgorithmConfig::z_signsgd(ZParam::Inf, sigma).with_lrs(0.05, 1.0);
+            let cfg = ServerConfig { rounds: 800, ..Default::default() };
+            let run = run_experiment(&mut b, &algo, &cfg);
+            let first = run.records.first().unwrap().objective;
+            let last = run.records.last().unwrap().objective;
+            if should_move {
+                let (gap0, gap) = (first - f_star, last - f_star);
+                assert!(gap < gap0 * 0.5, "sigma={sigma}: gap {gap0} -> {gap}");
+            } else {
+                // Gradients at x0=2: f1' = 2(x−4) = −4, f2' = 2(x+4) = 12.
+                // With sigma=1 < 4 the signs are deterministic and cancel.
+                assert!((first - last).abs() < 1e-9, "sigma={sigma} moved");
+            }
+        }
+    }
+
+    #[test]
+    fn z_signfedavg_with_local_steps_converges() {
+        // E = 5 local steps: the compressed quantity is a sum of 5 gradients,
+        // so sigma must scale with E (Theorem 1's threshold grows with E).
+        let mut b = consensus_backend(10, 30);
+        let f_star = b.problem.optimal_value().unwrap();
+        let algo =
+            AlgorithmConfig::z_signfedavg(ZParam::Finite(1), 5.0, 5).with_lrs(0.02, 1.0);
+        let cfg = ServerConfig { rounds: 600, ..Default::default() };
+        let run = run_experiment(&mut b, &algo, &cfg);
+        let gap0 = run.records.first().unwrap().objective - f_star;
+        let gap = run.final_objective() - f_star;
+        assert!(gap < gap0 * 0.1, "gap {gap0} -> {gap}");
+    }
+
+    #[test]
+    fn ef_signsgd_converges_full_participation() {
+        let mut b = consensus_backend(8, 16);
+        let f_star = b.problem.optimal_value().unwrap();
+        let algo = AlgorithmConfig::ef_signsgd().with_lrs(0.1, 1.0);
+        let cfg = ServerConfig { rounds: 800, ..Default::default() };
+        let run = run_experiment(&mut b, &algo, &cfg);
+        let gap0 = run.records.first().unwrap().objective - f_star;
+        let gap = run.final_objective() - f_star;
+        // EF oscillates at its scaled-sign floor (~2-3% of the initial gap
+        // on this instance); assert order-of-magnitude contraction.
+        assert!(gap < gap0 * 0.05, "gap {gap0} -> {gap}");
+    }
+
+    #[test]
+    #[should_panic(expected = "partial participation")]
+    fn ef_rejects_partial_participation() {
+        let mut b = consensus_backend(8, 4);
+        let algo = AlgorithmConfig::ef_signsgd();
+        let cfg =
+            ServerConfig { rounds: 1, clients_per_round: Some(4), ..Default::default() };
+        run_experiment(&mut b, &algo, &cfg);
+    }
+
+    #[test]
+    fn qsgd_converges() {
+        let mut b = consensus_backend(6, 12);
+        let f_star = b.problem.optimal_value().unwrap();
+        let algo = AlgorithmConfig::qsgd(4).with_lrs(0.1, 1.0);
+        let cfg = ServerConfig { rounds: 300, ..Default::default() };
+        let run = run_experiment(&mut b, &algo, &cfg);
+        assert!(run.final_objective() - f_star < 1e-2);
+    }
+
+    #[test]
+    fn partial_participation_still_converges() {
+        let mut b = consensus_backend(20, 10);
+        let f_star = b.problem.optimal_value().unwrap();
+        let algo = AlgorithmConfig::fedavg(2).with_lrs(0.05, 1.0);
+        let cfg = ServerConfig {
+            rounds: 400,
+            clients_per_round: Some(5),
+            ..Default::default()
+        };
+        let run = run_experiment(&mut b, &algo, &cfg);
+        assert!(run.final_objective() - f_star < 0.05);
+    }
+
+    #[test]
+    fn bits_accounting_exact() {
+        let d = 33;
+        let n = 4;
+        let mut b = consensus_backend(n, d);
+        let rounds = 3;
+        let cfg = ServerConfig { rounds, ..Default::default() };
+        // Sign: d bits per client per round.
+        let run =
+            run_experiment(&mut b, &AlgorithmConfig::signsgd().with_lrs(0.01, 1.0), &cfg);
+        assert_eq!(run.total_bits(), (rounds * n * d) as u64);
+        // Dense: 32·d bits.
+        let mut b2 = consensus_backend(n, d);
+        let run2 = run_experiment(&mut b2, &AlgorithmConfig::gd().with_lrs(0.01, 1.0), &cfg);
+        assert_eq!(run2.total_bits(), (rounds * n * 32 * d) as u64);
+    }
+
+    #[test]
+    fn runs_are_deterministic_in_seed() {
+        let algo = AlgorithmConfig::z_signsgd(ZParam::Finite(1), 0.5).with_lrs(0.05, 1.0);
+        let cfg = ServerConfig { rounds: 50, seed: 7, ..Default::default() };
+        let mut b1 = consensus_backend(5, 8);
+        let mut b2 = consensus_backend(5, 8);
+        let r1 = run_experiment(&mut b1, &algo, &cfg);
+        let r2 = run_experiment(&mut b2, &algo, &cfg);
+        for (a, b) in r1.records.iter().zip(&r2.records) {
+            assert_eq!(a.objective, b.objective);
+        }
+        // Different seed diverges.
+        let cfg2 = ServerConfig { seed: 8, ..cfg };
+        let mut b3 = consensus_backend(5, 8);
+        let r3 = run_experiment(&mut b3, &algo, &cfg2);
+        assert!(r1.records.last().unwrap().objective != r3.records.last().unwrap().objective);
+    }
+
+    #[test]
+    fn plateau_sigma_grows_during_run() {
+        let mut b = AnalyticBackend::new(Consensus::counterexample(2.0));
+        b.x0 = vec![1.0];
+        let algo = AlgorithmConfig::z_signsgd(ZParam::Finite(1), 0.0).with_lrs(0.01, 1.0);
+        let plateau = PlateauConfig { sigma_init: 0.01, sigma_bound: 8.0, kappa: 5, beta: 2.0 };
+        let cfg = ServerConfig { rounds: 300, plateau: Some(plateau), ..Default::default() };
+        let run = run_experiment(&mut b, &algo, &cfg);
+        let first_sigma = run.records.first().unwrap().sigma;
+        let last_sigma = run.records.last().unwrap().sigma;
+        assert!(last_sigma > first_sigma, "{first_sigma} -> {last_sigma}");
+        // And the grown sigma lets it escape the stall.
+        let first = run.records.first().unwrap().objective;
+        let last = run.records.last().unwrap().objective;
+        assert!(last < first, "{first} -> {last}");
+    }
+
+    #[test]
+    fn topk_and_sparse_sign_converge() {
+        // The conclusion's combination must still optimize and must cost
+        // fewer bits than dense signs at small k.
+        let d = 64;
+        let mut b = consensus_backend(6, d);
+        let f_star = b.problem.optimal_value().unwrap();
+        // Top-k without error feedback only touches k coords per round, so
+        // give it proportionally more rounds.
+        let rounds = 2500;
+        let cfg = ServerConfig { rounds, ..Default::default() };
+        for algo in [
+            AlgorithmConfig::topk(0.25, 1).with_lrs(0.05, 1.0),
+            AlgorithmConfig::sparse_sign(0.25, ZParam::Finite(1), 1.0, 1).with_lrs(0.05, 1.0),
+        ] {
+            let run = run_experiment(&mut b, &algo, &cfg);
+            let gap0 = run.records.first().unwrap().objective - f_star;
+            let gap = run.final_objective() - f_star;
+            // Top-k without error feedback is biased (the masked-gradient
+            // fixed point is not the optimum), so a residual floor at a
+            // fraction of the initial gap is the *expected* behaviour — we
+            // assert clear improvement, not convergence to f*.
+            assert!(gap < gap0 * 0.6, "{}: gap {gap0} -> {gap}", algo.name);
+            // Bits: k(32+32) or k·33+32 per client per round, both < 32d.
+            assert!(run.total_bits() < (rounds * 6 * 32 * d) as u64);
+        }
+    }
+
+    #[test]
+    fn downlink_compression_tracks_bits_and_converges() {
+        let d = 50;
+        let mut b = consensus_backend(8, d);
+        let f_star = b.problem.optimal_value().unwrap();
+        let algo = AlgorithmConfig::z_signsgd(ZParam::Finite(1), 3.0).with_lrs(0.02, 1.0);
+        let rounds = 1200;
+        // The downlink payload is the *mean vote* vector (entries in [-1,1]),
+        // so its noise scale must match that magnitude, not the gradient's.
+        let cfg = ServerConfig {
+            rounds,
+            downlink_sign: Some((ZParam::Finite(1), 0.5)),
+            ..Default::default()
+        };
+        let run = run_experiment(&mut b, &algo, &cfg);
+        // Downlink is d bits per client per round under compression.
+        assert_eq!(run.records.last().unwrap().bits_down, (rounds * 8 * d) as u64);
+        let gap0 = run.records.first().unwrap().objective - f_star;
+        let gap = run.final_objective() - f_star;
+        assert!(gap < gap0 * 0.5, "gap {gap0} -> {gap}");
+        // Uncompressed downlink accounts 32d.
+        let mut b2 = consensus_backend(8, d);
+        let cfg2 = ServerConfig { rounds: 3, ..Default::default() };
+        let run2 = run_experiment(&mut b2, &algo, &cfg2);
+        assert_eq!(run2.records.last().unwrap().bits_down, (3 * 8 * 32 * d) as u64);
+    }
+
+    #[test]
+    fn server_adam_converges() {
+        let mut b = consensus_backend(8, 40);
+        let f_star = b.problem.optimal_value().unwrap();
+        let algo = AlgorithmConfig::z_signfedavg(ZParam::Finite(1), 3.0, 1)
+            .with_lrs(0.02, 0.3)
+            .with_server_adam();
+        let cfg = ServerConfig { rounds: 800, ..Default::default() };
+        let run = run_experiment(&mut b, &algo, &cfg);
+        let gap0 = run.records.first().unwrap().objective - f_star;
+        let gap = run.final_objective() - f_star;
+        assert!(gap < gap0 * 0.5, "gap {gap0} -> {gap}");
+        assert!(run.final_objective().is_finite());
+    }
+
+    #[test]
+    fn sgdwm_momentum_accelerates_consensus() {
+        let cfg = ServerConfig { rounds: 60, ..Default::default() };
+        let mut b1 = consensus_backend(10, 20);
+        let f_star = b1.problem.optimal_value().unwrap();
+        let plain = run_experiment(&mut b1, &AlgorithmConfig::gd().with_lrs(0.05, 1.0), &cfg);
+        let mut b2 = consensus_backend(10, 20);
+        let wm = run_experiment(
+            &mut b2,
+            &AlgorithmConfig::sgdwm(0.9).with_lrs(0.05, 1.0),
+            &cfg,
+        );
+        assert!(
+            wm.final_objective() - f_star < plain.final_objective() - f_star,
+            "momentum should accelerate the quadratic"
+        );
+    }
+}

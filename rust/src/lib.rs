@@ -1,0 +1,40 @@
+//! # z-SignFedAvg
+//!
+//! A production-quality reproduction of *"z-SignFedAvg: A Unified Stochastic
+//! Sign-based Compression for Federated Learning"* (Tang, Wang, Chang — AAAI
+//! 2024) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the federated-learning coordinator: round
+//!   loop, client sampling, the 1-bit sign wire codec, vote aggregation,
+//!   plateau noise-scale controller, DP accountant, metrics.
+//! * **Layer 2 (`python/compile/model.py`)** — JAX model fwd/bwd + the
+//!   compression entry points, AOT-lowered to HLO text.
+//! * **Layer 1 (`python/compile/kernels/`)** — Pallas kernels for the
+//!   stochastic-sign compressor and the fused SGD update.
+//!
+//! After `make artifacts`, the `zsfa` binary is self-contained: it loads the
+//! HLO artifacts through PJRT (the `xla` crate) and never touches Python.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index
+//! mapping every figure/table of the paper to a driver.
+
+pub mod bench;
+pub mod cli;
+pub mod compress;
+pub mod config;
+pub mod data;
+pub mod dp;
+pub mod fl;
+pub mod net;
+pub mod problems;
+pub mod repro;
+pub mod rng;
+pub mod runtime;
+pub mod tensor;
+pub mod testutil;
+pub mod util;
+
+/// Crate version (mirrors Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,155 @@
+//! `zsfa` — the z-SignFedAvg coordinator CLI.
+//!
+//! Subcommands:
+//!   run                 config-driven experiment (`--config configs/x.cfg`)
+//!   fig1 fig2 fig3 fig5 fig6 fig16 fig17 table2
+//!                       reproduce the paper's figures/tables (DESIGN.md §5)
+//!   inspect             list artifacts from the manifest
+//!   bench               in-process micro-bench smoke (full benches: `cargo bench`)
+//!   version             print version
+
+use anyhow::Result;
+use zsignfedavg::cli::Args;
+use zsignfedavg::repro;
+
+fn main() -> Result<()> {
+    let args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
+    match args.subcommand.as_deref() {
+        Some("fig1") => repro::fig1_consensus::run(&args),
+        Some("fig2") => repro::fig2_noise::run(&args),
+        Some("fig3") | Some("fig7") => repro::fig3_mnist::run(&args),
+        Some("fig5") | Some("fig8") => repro::fig5_fedavg::run(&args),
+        Some("fig6") => repro::fig6_plateau::run(&args),
+        Some("fig16") => repro::fig16_qsgd::run(&args),
+        Some("fig17") => repro::fig17_dp::run(&args),
+        Some("table2") => repro::table2_rates::run(&args),
+        Some("run") => run_config(&args),
+        Some("inspect") => inspect(&args),
+        Some("version") => {
+            println!("zsfa {}", zsignfedavg::version());
+            Ok(())
+        }
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown subcommand {o:?}\n");
+            }
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "zsfa {} — z-SignFedAvg federated-learning coordinator (AAAI'24 reproduction)
+
+USAGE: zsfa <subcommand> [--key value ...]
+
+SUBCOMMANDS
+  fig1    consensus problem across dimensions (+ §1 counterexample)
+  fig2    noise-scale bias/variance trade-off
+  fig3    non-iid MNIST sign-method comparison   (--sweep-sigma => fig7)
+  fig5    FedAvg vs z-SignFedAvg                 (--dataset emnist => fig8,
+                                                  --sweep => figs 9-13)
+  fig6    plateau criterion  (--dataset mnist|emnist|cifar)
+  fig16   sign vs QSGD/FedPAQ accuracy-per-bit
+  fig17   DP-SignFedAvg vs DP-FedAvg across privacy budgets
+  table2  rate summary + empirical rate fit
+  run     config-driven experiment: --config configs/<f>.cfg
+  inspect list AOT artifacts
+
+COMMON FLAGS
+  --rounds N --repeats N --seed N --paper-scale
+  --artifacts DIR (default: artifacts)
+  figures 3-17 need `make artifacts` first",
+        zsignfedavg::version()
+    );
+}
+
+fn inspect(args: &Args) -> Result<()> {
+    let dir = std::path::Path::new(args.str_or("artifacts", "artifacts"));
+    let man = zsignfedavg::runtime::manifest::Manifest::load(dir)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    if let Some(name) = args.flag("hlo") {
+        // Op-count / FLOP audit of one artifact (L2 perf tooling).
+        let info = man.get(name).map_err(|e| anyhow::anyhow!(e))?;
+        let audit = zsignfedavg::runtime::hlo_audit::audit_file(&info.file)?;
+        println!("HLO audit for {name}:\n{}", audit.report());
+        return Ok(());
+    }
+    println!("{} artifacts in {dir:?}:", man.artifacts.len());
+    for a in man.artifacts.values() {
+        let ins: Vec<String> = a
+            .inputs
+            .iter()
+            .map(|t| format!("{}:{:?}{:?}", t.name, t.dtype, t.shape))
+            .collect();
+        println!("  {:<40} kind={:<14} inputs=[{}]",
+            a.name,
+            a.meta_str("kind").unwrap_or("?"),
+            ins.join(", "));
+    }
+    Ok(())
+}
+
+/// Config-driven experiment runner (see `configs/*.cfg`).
+fn run_config(args: &Args) -> Result<()> {
+    use zsignfedavg::config::Config;
+    use zsignfedavg::fl::server::ServerConfig;
+    use zsignfedavg::fl::AlgorithmConfig;
+    use zsignfedavg::repro::common::{
+        build_xla_backend, print_summary_row, run_repeats, save_series, Workload,
+    };
+    use zsignfedavg::rng::ZParam;
+
+    let mut cfg = Config::new();
+    if let Some(path) = args.flag("config") {
+        cfg = Config::load(std::path::Path::new(path)).map_err(|e| anyhow::anyhow!(e))?;
+    }
+    args.apply_overrides(&mut cfg);
+
+    let workload = Workload::parse(cfg.str_or("dataset", "mnist"))
+        .ok_or_else(|| anyhow::anyhow!("dataset must be mnist|emnist|cifar"))?;
+    let algo_name = cfg.str_or("algorithm", "1-signfedavg").to_string();
+    let sigma = cfg.f32_or("sigma", 0.05);
+    let e = cfg.usize_or("local_steps", 1);
+    let algo = match algo_name.as_str() {
+        "fedavg" => AlgorithmConfig::fedavg(e),
+        "signsgd" => AlgorithmConfig::signsgd(),
+        "sign-fedavg" => AlgorithmConfig::sign_fedavg(e),
+        "1-signfedavg" => AlgorithmConfig::z_signfedavg(ZParam::Finite(1), sigma, e),
+        "inf-signfedavg" => AlgorithmConfig::z_signfedavg(ZParam::Inf, sigma, e),
+        "sto-signsgd" => AlgorithmConfig::sto_signsgd(),
+        "ef-signsgd" => AlgorithmConfig::ef_signsgd(),
+        "qsgd" => AlgorithmConfig::qsgd(cfg.usize_or("qsgd_levels", 2) as u32),
+        other => anyhow::bail!("unknown algorithm {other:?}"),
+    }
+    .with_lrs(cfg.f32_or("client_lr", 0.01), cfg.f32_or("server_lr", 1.0))
+    .with_momentum(cfg.f32_or("momentum", 0.0));
+
+    let server = ServerConfig {
+        rounds: cfg.usize_or("rounds", 100),
+        clients_per_round: cfg.opt_usize("clients_per_round"),
+        eval_every: cfg.usize_or("eval_every", 5),
+        seed: cfg.u64_or("seed", 0),
+        plateau: None,
+        downlink_sign: None,
+    };
+    let repeats = cfg.usize_or("repeats", 1);
+    println!(
+        "run: {} on {:?} — rounds={} E={} repeats={repeats}",
+        algo.name, workload, server.rounds, algo.local_steps
+    );
+    let (agg, runs) = run_repeats(
+        || build_xla_backend(workload, args).expect("backend"),
+        &algo,
+        &server,
+        repeats,
+    );
+    save_series("run", &algo.name, &agg, &runs);
+    print_summary_row(&algo.name, &agg);
+    for k in cfg.unused_keys() {
+        eprintln!("warning: unused config key {k:?}");
+    }
+    Ok(())
+}

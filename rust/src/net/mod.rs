@@ -1,0 +1,156 @@
+//! Communication-time simulation.
+//!
+//! The paper's whole pitch is communication cost, so the drivers report a
+//! *simulated wall-clock* axis alongside rounds and bits: given a link
+//! model (uplink/downlink bandwidth + per-round latency) and the exact bit
+//! counts the coordinator recorded, this module turns a run into a
+//! time-to-accuracy series — the figure real FL deployments care about.
+//!
+//! The model is deliberately simple and standard (cf. FedScale-style
+//! simulators): per round,
+//!
+//! ```text
+//! t_round = latency
+//!         + max_i(uplink_bits_i) / uplink_bps      (slowest uploader gates)
+//!         + downlink_bits / downlink_bps
+//!         + compute_time
+//! ```
+//!
+//! With uniform client payloads (every algorithm here sends equal-size
+//! messages per round), max_i = per-client bits.
+
+use crate::fl::metrics::{RoundRecord, RunResult};
+
+/// A symmetric-ish WAN link model.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkModel {
+    /// Client upload bandwidth, bits/second.
+    pub uplink_bps: f64,
+    /// Server broadcast bandwidth per client, bits/second.
+    pub downlink_bps: f64,
+    /// Fixed per-round latency (connection setup + straggler slack), seconds.
+    pub latency_s: f64,
+    /// Client compute seconds per round (E local steps).
+    pub compute_s: f64,
+}
+
+impl LinkModel {
+    /// A typical cross-device FL profile: 10 Mbit/s up, 50 Mbit/s down,
+    /// 300 ms round latency.
+    pub fn cross_device() -> Self {
+        LinkModel { uplink_bps: 10e6, downlink_bps: 50e6, latency_s: 0.3, compute_s: 0.5 }
+    }
+
+    /// A datacenter profile: 10 Gbit/s symmetric, 5 ms latency.
+    pub fn datacenter() -> Self {
+        LinkModel { uplink_bps: 10e9, downlink_bps: 10e9, latency_s: 0.005, compute_s: 0.1 }
+    }
+}
+
+/// One simulated point: cumulative seconds + the record it corresponds to.
+#[derive(Debug, Clone, Copy)]
+pub struct TimedRecord {
+    pub sim_time_s: f64,
+    pub record: RoundRecord,
+}
+
+/// Replay a run through the link model.
+///
+/// `clients_per_round` must match the experiment (bits are totals across
+/// participants; the model needs per-client payloads).
+pub fn simulate_timeline(run: &RunResult, link: &LinkModel, clients_per_round: usize) -> Vec<TimedRecord> {
+    assert!(clients_per_round >= 1);
+    let mut out = Vec::with_capacity(run.records.len());
+    let mut prev_up = 0u64;
+    let mut prev_down = 0u64;
+    let mut prev_round = 0usize;
+    let mut t = 0.0f64;
+    for rec in &run.records {
+        // Bits accrued since the previous *evaluated* record, averaged over
+        // the rounds in between (records may be sparse when eval_every > 1).
+        let rounds = (rec.round + 1).saturating_sub(prev_round).max(1);
+        let up_per_client_round =
+            (rec.bits_up - prev_up) as f64 / (rounds * clients_per_round) as f64;
+        let down_per_client_round =
+            (rec.bits_down - prev_down) as f64 / (rounds * clients_per_round) as f64;
+        let per_round = link.latency_s
+            + up_per_client_round / link.uplink_bps
+            + down_per_client_round / link.downlink_bps
+            + link.compute_s;
+        t += per_round * rounds as f64;
+        prev_up = rec.bits_up;
+        prev_down = rec.bits_down;
+        prev_round = rec.round + 1;
+        out.push(TimedRecord { sim_time_s: t, record: *rec });
+    }
+    out
+}
+
+/// Simulated seconds to first reach `target` accuracy (None if never).
+pub fn time_to_accuracy(timeline: &[TimedRecord], target: f64) -> Option<f64> {
+    timeline
+        .iter()
+        .find(|t| t.record.accuracy.map(|a| a >= target).unwrap_or(false))
+        .map(|t| t.sim_time_s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_run(bits_per_round_up: u64, bits_per_round_down: u64, accs: &[f64]) -> RunResult {
+        RunResult {
+            algorithm: "x".into(),
+            records: accs
+                .iter()
+                .enumerate()
+                .map(|(i, &a)| RoundRecord {
+                    round: i,
+                    objective: 1.0,
+                    accuracy: Some(a),
+                    grad_norm_sq: None,
+                    bits_up: bits_per_round_up * (i as u64 + 1),
+                    bits_down: bits_per_round_down * (i as u64 + 1),
+                    sigma: 0.0,
+                    wall_ms: 0.0,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn round_time_decomposes() {
+        // 1 client, 1e6 bits up per round @1e6 bps = 1 s, latency 0.5, no
+        // compute, downlink free.
+        let link = LinkModel { uplink_bps: 1e6, downlink_bps: 1e12, latency_s: 0.5, compute_s: 0.0 };
+        let run = mk_run(1_000_000, 0, &[0.1, 0.2, 0.3]);
+        let tl = simulate_timeline(&run, &link, 1);
+        assert!((tl[0].sim_time_s - 1.5).abs() < 1e-9);
+        assert!((tl[2].sim_time_s - 4.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn compression_wins_time_to_accuracy() {
+        // Same accuracy trajectory, 32x fewer bits -> much earlier target hit
+        // on a slow uplink.
+        let link = LinkModel { uplink_bps: 1e6, downlink_bps: 1e9, latency_s: 0.0, compute_s: 0.0 };
+        let accs = [0.1, 0.5, 0.9];
+        let dense = simulate_timeline(&mk_run(32_000_000, 0, &accs), &link, 1);
+        let signs = simulate_timeline(&mk_run(1_000_000, 0, &accs), &link, 1);
+        let td = time_to_accuracy(&dense, 0.9).unwrap();
+        let ts = time_to_accuracy(&signs, 0.9).unwrap();
+        assert!((td / ts - 32.0).abs() < 1e-6, "{td} vs {ts}");
+    }
+
+    #[test]
+    fn target_never_reached() {
+        let link = LinkModel::cross_device();
+        let tl = simulate_timeline(&mk_run(1000, 1000, &[0.1, 0.2]), &link, 1);
+        assert!(time_to_accuracy(&tl, 0.99).is_none());
+    }
+
+    #[test]
+    fn presets_sane() {
+        assert!(LinkModel::cross_device().uplink_bps < LinkModel::datacenter().uplink_bps);
+    }
+}

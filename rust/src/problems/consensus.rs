@@ -1,0 +1,146 @@
+//! The consensus problem of the paper's §4.1 and the §1 counterexample.
+//!
+//! `min_x (w/2n) Σ_i ‖x − y_i‖²` with targets `y_i`. The optimum is the mean
+//! of the targets and `f* = (w/2n) Σ_i ‖ȳ − y_i‖²`, so convergence can be
+//! measured exactly. `w = 2` with `y = {A, −A}` reproduces the paper's
+//! divergence counterexample `min (x−A)² + (x+A)²` up to the 1/n average.
+
+use super::AnalyticProblem;
+use crate::rng::Pcg64;
+
+/// Quadratic consensus: f_i(x) = (w/2)·‖x − y_i‖².
+pub struct Consensus {
+    targets: Vec<Vec<f32>>, // n × d
+    weight: f32,
+}
+
+impl Consensus {
+    pub fn new(targets: Vec<Vec<f32>>, weight: f32) -> Self {
+        assert!(!targets.is_empty());
+        let d = targets[0].len();
+        assert!(targets.iter().all(|t| t.len() == d));
+        Consensus { targets, weight }
+    }
+
+    /// The paper's §4.1 instance: n clients, i.i.d. standard Gaussian targets.
+    pub fn gaussian(n: usize, dim: usize, seed: u64) -> Self {
+        let mut rng = Pcg64::seeded(seed);
+        let targets = (0..n)
+            .map(|_| (0..dim).map(|_| rng.normal() as f32).collect())
+            .collect();
+        Consensus::new(targets, 1.0)
+    }
+
+    /// The §1 counterexample: `min (x−A)² + (x+A)²` as two clients in 1-D.
+    pub fn counterexample(a: f32) -> Self {
+        Consensus::new(vec![vec![a], vec![-a]], 2.0)
+    }
+
+    /// The minimizer ȳ = mean of targets.
+    pub fn optimum(&self) -> Vec<f32> {
+        let n = self.targets.len();
+        let d = self.targets[0].len();
+        let mut m = vec![0.0f32; d];
+        for t in &self.targets {
+            for (mi, &ti) in m.iter_mut().zip(t) {
+                *mi += ti / n as f32;
+            }
+        }
+        m
+    }
+}
+
+impl AnalyticProblem for Consensus {
+    fn dim(&self) -> usize {
+        self.targets[0].len()
+    }
+
+    fn num_clients(&self) -> usize {
+        self.targets.len()
+    }
+
+    fn grad_into(&self, client: usize, x: &[f32], out: &mut [f32], _rng: Option<&mut Pcg64>) {
+        // ∇f_i(x) = w·(x − y_i); the problem is deterministic (full gradient),
+        // matching the paper's "no minibatch SGD" setting for Fig. 1/2.
+        let y = &self.targets[client];
+        for ((o, &xi), &yi) in out.iter_mut().zip(x).zip(y) {
+            *o = self.weight * (xi - yi);
+        }
+    }
+
+    fn objective(&self, x: &[f32]) -> f64 {
+        let n = self.targets.len() as f64;
+        let mut f = 0.0;
+        for t in &self.targets {
+            let mut s = 0.0f64;
+            for (&xi, &ti) in x.iter().zip(t) {
+                s += (xi as f64 - ti as f64).powi(2);
+            }
+            f += 0.5 * self.weight as f64 * s;
+        }
+        f / n
+    }
+
+    fn optimal_value(&self) -> Option<f64> {
+        Some(self.objective(&self.optimum()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::tensor;
+    use super::*;
+
+    #[test]
+    fn optimum_is_stationary() {
+        let p = Consensus::gaussian(10, 50, 7);
+        let opt = p.optimum();
+        assert!(p.grad_norm_sq(&opt) < 1e-10);
+    }
+
+    #[test]
+    fn objective_at_optimum_matches() {
+        let p = Consensus::gaussian(5, 20, 3);
+        let f_star = p.optimal_value().unwrap();
+        // Any other point is worse.
+        let mut x = p.optimum();
+        x[0] += 1.0;
+        assert!(p.objective(&x) > f_star);
+    }
+
+    #[test]
+    fn gradient_is_correct_fd() {
+        let p = Consensus::gaussian(3, 8, 1);
+        let x: Vec<f32> = (0..8).map(|i| 0.1 * i as f32).collect();
+        let mut g = vec![0.0f32; 8];
+        // global gradient = mean of client gradients
+        let mut gi = vec![0.0f32; 8];
+        for i in 0..3 {
+            p.grad_into(i, &x, &mut gi, None);
+            tensor::axpy(1.0 / 3.0, &gi, &mut g);
+        }
+        let h = 1e-3;
+        for j in 0..8 {
+            let mut xp = x.clone();
+            let mut xm = x.clone();
+            xp[j] += h;
+            xm[j] -= h;
+            let fd = (p.objective(&xp) - p.objective(&xm)) / (2.0 * h as f64);
+            assert!((fd - g[j] as f64).abs() < 1e-3, "j={j}");
+        }
+    }
+
+    #[test]
+    fn counterexample_gradients_cancel_in_sign() {
+        // For x in (-A, A): Sign(∇f_1) + Sign(∇f_2) = 0 — the §1 stall.
+        let p = Consensus::counterexample(4.0);
+        let x = [1.0f32];
+        let mut g1 = [0.0f32];
+        let mut g2 = [0.0f32];
+        p.grad_into(0, &x, &mut g1, None);
+        p.grad_into(1, &x, &mut g2, None);
+        assert!(g1[0] < 0.0 && g2[0] > 0.0);
+        let s = |v: f32| if v >= 0.0 { 1 } else { -1 };
+        assert_eq!(s(g1[0]) + s(g2[0]), 0);
+    }
+}

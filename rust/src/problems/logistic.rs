@@ -1,0 +1,178 @@
+//! Regularized logistic regression on heterogeneous synthetic data — the
+//! non-quadratic convex testbed (smooth, bounded gradients, so every
+//! assumption A.1–A.4 holds with explicit constants).
+
+use super::AnalyticProblem;
+use crate::rng::Pcg64;
+
+/// f_i(x) = (1/mᵢ) Σ_k log(1 + exp(−y_k·⟨a_k, x⟩)) + (λ/2)‖x‖².
+pub struct Logistic {
+    clients: Vec<ClientData>,
+    dim: usize,
+    lambda: f32,
+}
+
+struct ClientData {
+    a: Vec<f32>, // m × d row-major
+    y: Vec<f32>, // ±1 labels
+    m: usize,
+}
+
+impl Logistic {
+    /// Each client draws features around a client-specific center (label
+    /// skew + covariate shift), giving genuinely heterogeneous `f_i`.
+    pub fn generate(n: usize, dim: usize, rows_per_client: usize, heterogeneity: f32,
+                    lambda: f32, seed: u64) -> Self {
+        let mut rng = Pcg64::seeded(seed);
+        let w_true: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+        let clients = (0..n)
+            .map(|_| {
+                let center: Vec<f32> =
+                    (0..dim).map(|_| heterogeneity * rng.normal() as f32).collect();
+                let mut a = vec![0.0f32; rows_per_client * dim];
+                for r in 0..rows_per_client {
+                    for j in 0..dim {
+                        a[r * dim + j] = center[j] + rng.normal() as f32;
+                    }
+                }
+                let y: Vec<f32> = (0..rows_per_client)
+                    .map(|r| {
+                        let row = &a[r * dim..(r + 1) * dim];
+                        let mut s = 0.0f64;
+                        for (ai, wi) in row.iter().zip(&w_true) {
+                            s += *ai as f64 * *wi as f64;
+                        }
+                        // Noisy labels: flip with prob sigmoid(-|s|)/2.
+                        let p_correct = 1.0 / (1.0 + (-s.abs()).exp());
+                        let label = if s >= 0.0 { 1.0 } else { -1.0 };
+                        if rng.uniform() < 1.0 - p_correct {
+                            -label
+                        } else {
+                            label
+                        }
+                    })
+                    .collect();
+                ClientData { a, y, m: rows_per_client }
+            })
+            .collect();
+        Logistic { clients, dim, lambda }
+    }
+
+    fn margin(&self, i: usize, x: &[f32], row: usize) -> f64 {
+        let c = &self.clients[i];
+        let a = &c.a[row * self.dim..(row + 1) * self.dim];
+        let mut s = 0.0f64;
+        for (ai, xi) in a.iter().zip(x) {
+            s += *ai as f64 * *xi as f64;
+        }
+        s * c.y[row] as f64
+    }
+
+    fn add_row_grad(&self, i: usize, x: &[f32], row: usize, w: f64, out: &mut [f32]) {
+        let c = &self.clients[i];
+        let m = self.margin(i, x, row);
+        // d/dx log(1+exp(-m)) = -sigmoid(-m) * y * a
+        let coef = -w * c.y[row] as f64 / (1.0 + m.exp());
+        let a = &c.a[row * self.dim..(row + 1) * self.dim];
+        for (o, &ai) in out.iter_mut().zip(a) {
+            *o += (coef * ai as f64) as f32;
+        }
+    }
+}
+
+impl AnalyticProblem for Logistic {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn num_clients(&self) -> usize {
+        self.clients.len()
+    }
+
+    fn grad_into(&self, client: usize, x: &[f32], out: &mut [f32], rng: Option<&mut Pcg64>) {
+        let c = &self.clients[client];
+        // Regularizer first.
+        for (o, &xi) in out.iter_mut().zip(x) {
+            *o = self.lambda * xi;
+        }
+        match rng {
+            None => {
+                for r in 0..c.m {
+                    self.add_row_grad(client, x, r, 1.0 / c.m as f64, out);
+                }
+            }
+            Some(rng) => {
+                let r = rng.below(c.m as u64) as usize;
+                self.add_row_grad(client, x, r, 1.0, out);
+            }
+        }
+    }
+
+    fn objective(&self, x: &[f32]) -> f64 {
+        let n = self.clients.len() as f64;
+        let reg = 0.5 * self.lambda as f64 * crate::tensor::norm2_sq(x);
+        let mut f = 0.0;
+        for i in 0..self.clients.len() {
+            let c = &self.clients[i];
+            let mut s = 0.0;
+            for r in 0..c.m {
+                let m = self.margin(i, x, r);
+                // log(1+exp(-m)), numerically stable.
+                s += if m > 0.0 { (-m).exp().ln_1p() } else { -m + m.exp().ln_1p() };
+            }
+            f += s / c.m as f64;
+        }
+        f / n + reg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gradient_matches_fd() {
+        let p = Logistic::generate(2, 5, 12, 1.0, 0.01, 5);
+        let x = vec![0.3f32; 5];
+        let mut g = vec![0.0f32; 5];
+        let mut gi = vec![0.0f32; 5];
+        for i in 0..2 {
+            p.grad_into(i, &x, &mut gi, None);
+            crate::tensor::axpy(0.5, &gi, &mut g);
+        }
+        let h = 1e-3;
+        for j in 0..5 {
+            let mut xp = x.clone();
+            let mut xm = x.clone();
+            xp[j] += h;
+            xm[j] -= h;
+            let fd = (p.objective(&xp) - p.objective(&xm)) / (2.0 * h as f64);
+            assert!((fd - g[j] as f64).abs() < 1e-3, "j={j}");
+        }
+    }
+
+    #[test]
+    fn gd_decreases_objective() {
+        let p = Logistic::generate(4, 10, 20, 0.5, 0.01, 9);
+        let mut x = vec![0.0f32; 10];
+        let f0 = p.objective(&x);
+        let mut g = vec![0.0f32; 10];
+        let mut gi = vec![0.0f32; 10];
+        for _ in 0..50 {
+            g.iter_mut().for_each(|v| *v = 0.0);
+            for i in 0..4 {
+                p.grad_into(i, &x, &mut gi, None);
+                crate::tensor::axpy(0.25, &gi, &mut g);
+            }
+            crate::tensor::axpy(-0.5, &g, &mut x);
+        }
+        assert!(p.objective(&x) < f0 * 0.9);
+    }
+
+    #[test]
+    fn objective_is_finite_for_large_x() {
+        let p = Logistic::generate(2, 4, 8, 0.0, 0.0, 1);
+        let x = vec![100.0f32; 4];
+        assert!(p.objective(&x).is_finite());
+    }
+}

@@ -1,0 +1,50 @@
+//! Analytic distributed-optimization problems.
+//!
+//! The paper's §4.1 experiments (Fig. 1/2) and the §1 divergence
+//! counterexample run on closed-form objectives where gradients are exact;
+//! no XLA graph is involved. These problems also power the integration tests
+//! and the empirical convergence-rate fits of the Table 2 driver, because
+//! their optima are known exactly.
+
+pub mod consensus;
+pub mod least_squares;
+pub mod logistic;
+
+use crate::rng::Pcg64;
+
+/// A distributed problem `f(x) = (1/n) Σ_i f_i(x)` with analytic gradients.
+pub trait AnalyticProblem: Send + Sync {
+    /// Problem dimension d.
+    fn dim(&self) -> usize;
+
+    /// Number of clients n.
+    fn num_clients(&self) -> usize;
+
+    /// Write ∇f_i(x) (or a minibatch estimate when `rng` is provided and the
+    /// problem is stochastic) into `out`.
+    fn grad_into(&self, client: usize, x: &[f32], out: &mut [f32], rng: Option<&mut Pcg64>);
+
+    /// Global objective f(x).
+    fn objective(&self, x: &[f32]) -> f64;
+
+    /// Squared l2-norm of the global gradient ‖∇f(x)‖² (the paper's
+    /// convergence metric).
+    fn grad_norm_sq(&self, x: &[f32]) -> f64 {
+        let d = self.dim();
+        let n = self.num_clients();
+        let mut g = vec![0.0f32; d];
+        let mut gi = vec![0.0f32; d];
+        for i in 0..n {
+            self.grad_into(i, x, &mut gi, None);
+            for (a, &b) in g.iter_mut().zip(&gi) {
+                *a += b / n as f32;
+            }
+        }
+        crate::tensor::norm2_sq(&g)
+    }
+
+    /// f* when known in closed form.
+    fn optimal_value(&self) -> Option<f64> {
+        None
+    }
+}

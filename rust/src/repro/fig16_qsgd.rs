@@ -1,0 +1,77 @@
+//! Figure 16 (Appendix E): sign compression vs unbiased quantization —
+//! 1-SignSGD vs QSGD(s) on non-iid MNIST, and 1-SignFedAvg vs FedPAQ(s) on
+//! EMNIST/CIFAR, as accuracy-versus-uplink-bits curves.
+//!
+//! Paper settings: QSGD server stepsizes from Table 7 (0.01 for s=1, 0.05
+//! for s=2/4); FedPAQ server stepsize 1 for all s. Expected shape: the sign
+//! compressor dominates the low-precision regime (1–8 bits/coordinate);
+//! QSGD needs s ≥ 4 to come close on MNIST.
+
+use super::common::*;
+use crate::cli::Args;
+use crate::fl::server::ServerConfig;
+use crate::fl::AlgorithmConfig;
+use crate::rng::ZParam;
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let workload = Workload::parse(args.str_or("dataset", "mnist"))
+        .ok_or_else(|| anyhow::anyhow!("--dataset mnist|emnist|cifar"))?;
+    banner(&format!("Figure 16 — sign vs unbiased quantization on {workload:?}"));
+    let rounds = args.usize_or("rounds", 100);
+    let repeats = args.usize_or("repeats", 2);
+    let cpr = clients_per_round(workload, args);
+
+    let mut algos: Vec<AlgorithmConfig> = Vec::new();
+    match workload {
+        Workload::NoniidMnist => {
+            // E = 1: QSGD vs 1-SignSGD (Table 7 row 1).
+            algos.push(
+                AlgorithmConfig::z_signsgd(ZParam::Finite(1), 0.05).with_lrs(0.01, 1.0),
+            );
+            for (s, lr) in [(1u32, 0.01f32), (2, 0.05), (4, 0.05)] {
+                algos.push(AlgorithmConfig::qsgd(s).with_lrs(lr, 1.0));
+            }
+        }
+        Workload::Emnist | Workload::Cifar => {
+            let (client_lr, server_lr, sigma, e) = if workload == Workload::Emnist {
+                (0.05f32, 0.03f32, 0.01f32, 5usize)
+            } else {
+                (0.1, 0.0032, 0.0005, 5)
+            };
+            algos.push(
+                AlgorithmConfig::z_signfedavg(ZParam::Finite(1), sigma, e)
+                    .with_lrs(client_lr, server_lr),
+            );
+            for s in [1u32, 2, 4, 8] {
+                // Table 7: FedPAQ server stepsize 1.
+                algos.push(AlgorithmConfig::fedpaq(s, e).with_lrs(client_lr, 1.0));
+            }
+        }
+    }
+
+    for algo in &algos {
+        let cfg = ServerConfig {
+            rounds,
+            clients_per_round: cpr,
+            eval_every: (rounds / 20).max(1),
+            ..Default::default()
+        };
+        let (agg, runs) = run_repeats(
+            || build_xla_backend(workload, args).expect("backend"),
+            algo,
+            &cfg,
+            repeats,
+        );
+        save_series(
+            &format!("fig16_{}", args.str_or("dataset", "mnist")),
+            &algo.name,
+            &agg,
+            &runs,
+        );
+        // Report accuracy *and* bits so the bit-efficiency ordering is visible
+        // directly in the console output.
+        print_summary_row(&algo.name, &agg);
+    }
+    println!("\nShape check: at equal accuracy the sign rows should show ~s+1x fewer Mbit.");
+    Ok(())
+}

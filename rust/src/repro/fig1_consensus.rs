@@ -1,0 +1,104 @@
+//! Figure 1: the consensus problem under different problem dimensions.
+//!
+//! Paper setting (§4.1): 10 clients, `min_x (1/2n) Σ‖x − y_i‖²` with i.i.d.
+//! standard-Gaussian targets, full gradients, stepsize 0.01, zero init,
+//! d ∈ {10, 100, 1000, 10000}, 10 repeats. Algorithms: GD, SignSGD,
+//! Sto-SignSGD [43], 1-SignSGD, ∞-SignSGD.
+//!
+//! Expected shape (paper Fig. 1): vanilla SignSGD stalls above the optimum;
+//! 1-/∞-SignSGD track GD closely; Sto-SignSGD's input-dependent noise scale
+//! (σ = ‖x‖₂, which grows with d) slows it down badly at high dimension.
+//!
+//! Also runs the §1 two-client counterexample, reporting the stall of
+//! SignSGD and the σ-threshold of ∞-SignSGD (Theorem 2 / Remark 2).
+
+use super::common::*;
+use crate::cli::Args;
+use crate::fl::backend::AnalyticBackend;
+use crate::fl::server::ServerConfig;
+use crate::fl::AlgorithmConfig;
+use crate::problems::consensus::Consensus;
+use crate::problems::AnalyticProblem;
+use crate::rng::ZParam;
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    banner("Figure 1 — consensus problem, varying dimension");
+    let rounds = args.usize_or("rounds", 600);
+    let repeats = args.usize_or("repeats", 5);
+    let lr = args.f32_or("lr", 0.01);
+    let sigma = args.f32_or("sigma", 3.0);
+    let n = args.usize_or("clients", 10);
+    let dims: Vec<usize> = if args.has("paper-scale") {
+        vec![10, 100, 1000, 10000]
+    } else {
+        args.flag("dims")
+            .map(|s| s.split(',').map(|d| d.parse().unwrap()).collect())
+            .unwrap_or_else(|| vec![10, 100, 1000, 10000])
+    };
+
+    for &d in &dims {
+        println!("\n-- dimension d = {d} --");
+        let algos = vec![
+            AlgorithmConfig::gd().with_lrs(lr, 1.0),
+            AlgorithmConfig::signsgd().with_lrs(lr, 1.0),
+            AlgorithmConfig::sto_signsgd().with_lrs(lr, 1.0),
+            AlgorithmConfig::z_signsgd(ZParam::Finite(1), sigma).with_lrs(lr, 1.0),
+            AlgorithmConfig::z_signsgd(ZParam::Inf, sigma).with_lrs(lr, 1.0),
+        ];
+        let f_star = Consensus::gaussian(n, d, 99).optimal_value().unwrap();
+        println!("  f* = {f_star:.6}");
+        for algo in &algos {
+            let cfg = ServerConfig {
+                rounds,
+                eval_every: (rounds / 100).max(1),
+                ..Default::default()
+            };
+            let (mut agg, runs) = run_repeats(
+                || AnalyticBackend::new(Consensus::gaussian(n, d, 99)),
+                algo,
+                &cfg,
+                repeats,
+            );
+            // Report the optimality gap, matching the paper's y-axis.
+            for v in agg.objective_mean.iter_mut() {
+                *v -= f_star;
+            }
+            save_series(&format!("fig1_d{d}"), &algo.name, &agg, &runs);
+            print_summary_row(&algo.name, &agg);
+        }
+    }
+
+    counterexample_report(args);
+    Ok(())
+}
+
+/// The §1 counterexample + Theorem 2's σ-threshold, printed as a table.
+fn counterexample_report(args: &Args) {
+    banner("§1 counterexample: min (x−A)² + (x+A)², A = 4, x0 = 2");
+    let rounds = args.usize_or("rounds", 600);
+    let a = 4.0f32;
+    let cases: Vec<(String, AlgorithmConfig)> = vec![
+        ("SignSGD (stalls)".into(), AlgorithmConfig::signsgd().with_lrs(0.01, 1.0)),
+        (
+            "inf-SignSGD sigma=1 < threshold (stalls)".into(),
+            AlgorithmConfig::z_signsgd(ZParam::Inf, 1.0).with_lrs(0.01, 1.0),
+        ),
+        (
+            "inf-SignSGD sigma=20 > threshold (converges)".into(),
+            AlgorithmConfig::z_signsgd(ZParam::Inf, 20.0).with_lrs(0.05, 1.0),
+        ),
+        (
+            "1-SignSGD sigma=5 (converges)".into(),
+            AlgorithmConfig::z_signsgd(ZParam::Finite(1), 5.0).with_lrs(0.05, 1.0),
+        ),
+    ];
+    for (label, algo) in cases {
+        let mut b = AnalyticBackend::new(Consensus::counterexample(a));
+        b.x0 = vec![a / 2.0];
+        let cfg = ServerConfig { rounds, eval_every: (rounds / 50).max(1), ..Default::default() };
+        let run = crate::fl::server::run_experiment(&mut b, &algo, &cfg);
+        let first = run.records.first().unwrap().objective;
+        let last = run.records.last().unwrap().objective;
+        println!("  {label:<46} f: {first:>10.4} -> {last:>10.4}");
+    }
+}

@@ -1,0 +1,95 @@
+//! Figure 3 (+ Fig. 7): z-SignSGD on extremely non-iid MNIST.
+//!
+//! Paper setting (§4.2): 10 clients, each holding exactly one digit, the
+//! PyTorch-tutorial CNN, E = 1, full participation. Algorithms and tuned
+//! hyperparameters from Table 3:
+//!
+//! | algorithm      | stepsize | momentum | noise |
+//! | SGDwM          | 0.05     | 0.9      |   –   |
+//! | EF-SignSGDwM   | 0.05     | 0.9      |   –   |
+//! | Sto-SignSGDwM  | 0.01     | 0.9      |   –   |
+//! | SignSGD        | 0.01     | 0        |  0    |
+//! | 1-SignSGD      | 0.01     | 0        | 0.05  |
+//! | ∞-SignSGD      | 0.01     | 0        | 0.05  |
+//!
+//! Outputs (CSV per algorithm): train loss + test accuracy per round and
+//! accuracy vs cumulative uplink bits (Fig. 3a/3b/3c). `--sweep-sigma`
+//! reproduces Fig. 7's noise-scale sweep instead.
+//!
+//! Expected shape: SignSGD plateaus low; 1-/∞-SignSGD ≈ SGDwM and clearly
+//! above EF-SignSGDwM and Sto-SignSGDwM; in bits, the sign family dominates.
+
+use super::common::*;
+use crate::cli::Args;
+use crate::fl::server::ServerConfig;
+use crate::fl::AlgorithmConfig;
+use crate::rng::ZParam;
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    if args.has("sweep-sigma") {
+        return sweep_sigma(args);
+    }
+    banner("Figure 3 — non-iid MNIST (one digit per client)");
+    let rounds = args.usize_or("rounds", 120);
+    let repeats = args.usize_or("repeats", 2);
+    let sigma = args.f32_or("sigma", 0.05);
+
+    // Table 3 hyperparameters.
+    let algos = vec![
+        AlgorithmConfig::sgdwm(0.9).with_lrs(0.05, 1.0),
+        AlgorithmConfig::ef_signsgd().with_momentum(0.9).with_lrs(0.05, 1.0),
+        AlgorithmConfig::sto_signsgd().with_momentum(0.9).with_lrs(0.01, 1.0),
+        AlgorithmConfig::signsgd().with_lrs(0.01, 1.0),
+        AlgorithmConfig::z_signsgd(ZParam::Finite(1), sigma).with_lrs(0.01, 1.0),
+        AlgorithmConfig::z_signsgd(ZParam::Inf, sigma).with_lrs(0.01, 1.0),
+    ];
+
+    for algo in &algos {
+        let cfg = ServerConfig {
+            rounds,
+            eval_every: (rounds / 20).max(1),
+            ..Default::default()
+        };
+        let (agg, runs) = run_repeats(
+            || build_xla_backend(Workload::NoniidMnist, args).expect("backend"),
+            algo,
+            &cfg,
+            repeats,
+        );
+        save_series("fig3", &algo.name, &agg, &runs);
+        print_summary_row(&algo.name, &agg);
+    }
+    println!("\nFig 3c (accuracy vs bits) comes from the bits_up column of the CSVs.");
+    Ok(())
+}
+
+/// Fig. 7: 1-/∞-SignSGD under different noise scales on the same workload.
+fn sweep_sigma(args: &Args) -> anyhow::Result<()> {
+    banner("Figure 7 — noise-scale sweep on non-iid MNIST");
+    let rounds = args.usize_or("rounds", 80);
+    let repeats = args.usize_or("repeats", 2);
+    let sigmas: Vec<f32> = args
+        .flag("sigmas")
+        .map(|s| s.split(',').map(|v| v.parse().unwrap()).collect())
+        .unwrap_or_else(|| vec![0.0, 0.01, 0.05, 0.1, 0.3, 0.5]);
+    for z in [ZParam::Finite(1), ZParam::Inf] {
+        println!("\n-- z = {z} --");
+        for &sigma in &sigmas {
+            let algo = AlgorithmConfig::z_signsgd(z, sigma).with_lrs(0.01, 1.0);
+            let cfg = ServerConfig {
+                rounds,
+                eval_every: (rounds / 10).max(1),
+                ..Default::default()
+            };
+            let (agg, runs) = run_repeats(
+                || build_xla_backend(Workload::NoniidMnist, args).expect("backend"),
+                &algo,
+                &cfg,
+                repeats,
+            );
+            save_series(&format!("fig7_z{z}"), &format!("sigma{sigma}"), &agg, &runs);
+            print_summary_row(&format!("sigma = {sigma}"), &agg);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,129 @@
+//! Figure 5 (CIFAR-10) / Figure 8 (EMNIST) + the Appendix D.2 σ×E sweeps
+//! (Figures 9–13): z-SignFedAvg vs uncompressed FedAvg with multiple local
+//! steps and partial client participation.
+//!
+//! Paper settings (§4.3, Tables 4/5): EMNIST — 3579 clients, 100 sampled
+//! per round, client lr 0.05, server lr 0.03, σ = 0.01; CIFAR-10 — 100
+//! clients Dirichlet(1), 10 sampled, client lr 0.1, server lr 0.0032,
+//! σ = 0.0005. Both use the same CNN family; E ∈ {1, 5, 10}.
+//!
+//! Expected shape: both FedAvg and 1-SignFedAvg improve with E; 1-SignFedAvg
+//! tracks (sometimes beats) FedAvg per round while using 32× fewer uplink
+//! bits; 1- and ∞-SignFedAvg are nearly indistinguishable.
+
+use super::common::*;
+use crate::cli::Args;
+use crate::fl::server::ServerConfig;
+use crate::fl::AlgorithmConfig;
+use crate::rng::ZParam;
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let workload = Workload::parse(args.str_or("dataset", "cifar"))
+        .ok_or_else(|| anyhow::anyhow!("--dataset mnist|emnist|cifar"))?;
+    if args.has("sweep") {
+        return sweep_sigma_e(args, workload);
+    }
+    banner(&format!("Figure 5/8 — FedAvg vs z-SignFedAvg on {workload:?}"));
+    let rounds = args.usize_or("rounds", 60);
+    let repeats = args.usize_or("repeats", 1);
+    let local_steps: Vec<usize> = args
+        .flag("local-steps")
+        .map(|s| s.split(',').map(|v| v.parse().unwrap()).collect())
+        .unwrap_or_else(|| vec![1, 5]);
+    // Table 4/5 hyperparameters.
+    let (client_lr, server_lr, sigma) = match workload {
+        Workload::Emnist => (
+            args.f32_or("client-lr", 0.05),
+            args.f32_or("server-lr", 0.03),
+            args.f32_or("sigma", 0.01),
+        ),
+        _ => (
+            args.f32_or("client-lr", 0.1),
+            args.f32_or("server-lr", 0.0032),
+            args.f32_or("sigma", 0.0005),
+        ),
+    };
+    let cpr = clients_per_round(workload, args);
+
+    for &e in &local_steps {
+        println!("\n-- E = {e} (clients/round: {cpr:?}) --");
+        let algos = vec![
+            AlgorithmConfig::fedavg(e).with_lrs(client_lr, 1.0),
+            AlgorithmConfig::z_signfedavg(ZParam::Finite(1), sigma, e)
+                .with_lrs(client_lr, server_lr),
+            AlgorithmConfig::z_signfedavg(ZParam::Inf, sigma, e)
+                .with_lrs(client_lr, server_lr),
+            AlgorithmConfig::sign_fedavg(e).with_lrs(client_lr, server_lr),
+        ];
+        for algo in &algos {
+            let cfg = ServerConfig {
+                rounds,
+                clients_per_round: cpr,
+                eval_every: (rounds / 20).max(1),
+                ..Default::default()
+            };
+            let (agg, runs) = run_repeats(
+                || build_xla_backend(workload, args).expect("backend"),
+                algo,
+                &cfg,
+                repeats,
+            );
+            save_series(
+                &format!("fig5_{}_e{e}", args.str_or("dataset", "cifar")),
+                &algo.name,
+                &agg,
+                &runs,
+            );
+            print_summary_row(&format!("{} (E={e})", algo.name), &agg);
+        }
+    }
+    Ok(())
+}
+
+/// Figures 9–13: σ × E grid for z ∈ {1, ∞}.
+fn sweep_sigma_e(args: &Args, workload: Workload) -> anyhow::Result<()> {
+    banner(&format!("Figures 9-13 — sigma x E sweep on {workload:?}"));
+    let rounds = args.usize_or("rounds", 60);
+    let repeats = args.usize_or("repeats", 1);
+    let sigmas: Vec<f32> = args
+        .flag("sigmas")
+        .map(|s| s.split(',').map(|v| v.parse().unwrap()).collect())
+        .unwrap_or_else(|| vec![0.0, 0.0005, 0.005, 0.05]);
+    let es: Vec<usize> = args
+        .flag("local-steps")
+        .map(|s| s.split(',').map(|v| v.parse().unwrap()).collect())
+        .unwrap_or_else(|| vec![1, 5]);
+    let (client_lr, server_lr) = match workload {
+        Workload::Emnist => (0.05, 0.03),
+        _ => (0.1, 0.0032),
+    };
+    let cpr = clients_per_round(workload, args);
+    for z in [ZParam::Finite(1), ZParam::Inf] {
+        for &e in &es {
+            for &sigma in &sigmas {
+                let algo =
+                    AlgorithmConfig::z_signfedavg(z, sigma, e).with_lrs(client_lr, server_lr);
+                let cfg = ServerConfig {
+                    rounds,
+                    clients_per_round: cpr,
+                    eval_every: (rounds / 10).max(1),
+                    ..Default::default()
+                };
+                let (agg, runs) = run_repeats(
+                    || build_xla_backend(workload, args).expect("backend"),
+                    &algo,
+                    &cfg,
+                    repeats,
+                );
+                save_series(
+                    &format!("fig9_13_{}_z{z}", args.str_or("dataset", "cifar")),
+                    &format!("e{e}_sigma{sigma}"),
+                    &agg,
+                    &runs,
+                );
+                print_summary_row(&format!("z={z} E={e} sigma={sigma}"), &agg);
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! Figure 6 (+14/15): the Plateau criterion for adaptive noise scaling.
+//!
+//! Compares 1-SignSGD / 1-SignFedAvg with the tuned fixed σ against the
+//! plateau-scheduled σ (Table 6 hyperparameters) on the three dataset
+//! settings. Also emits the σ trajectory (Fig. 15).
+//!
+//! Expected shape: the plateau run converges more slowly mid-training (it
+//! must discover the right σ) but reaches the same final objective as the
+//! tuned fixed σ.
+
+use super::common::*;
+use crate::cli::Args;
+use crate::fl::plateau::PlateauConfig;
+use crate::fl::server::ServerConfig;
+use crate::fl::AlgorithmConfig;
+use crate::rng::ZParam;
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let workload = Workload::parse(args.str_or("dataset", "mnist"))
+        .ok_or_else(|| anyhow::anyhow!("--dataset mnist|emnist|cifar"))?;
+    banner(&format!("Figure 6 — Plateau criterion on {workload:?}"));
+    let rounds = args.usize_or("rounds", 120);
+    let repeats = args.usize_or("repeats", 2);
+
+    // Per-dataset tuned σ (from Fig. 3/5) and Table 6 plateau presets.
+    let (fixed_sigma, plateau, client_lr, server_lr, e) = match workload {
+        Workload::NoniidMnist => (0.05f32, PlateauConfig::mnist(), 0.01f32, 1.0f32, 1usize),
+        Workload::Emnist => (0.01, PlateauConfig::emnist(), 0.05, 0.03, 5),
+        Workload::Cifar => (0.0005, PlateauConfig::cifar(), 0.1, 0.0032, 5),
+    };
+    let cpr = clients_per_round(workload, args);
+
+    let fixed = AlgorithmConfig::z_signfedavg(ZParam::Finite(1), fixed_sigma, e)
+        .with_lrs(client_lr, server_lr);
+    let adaptive = {
+        let mut a = AlgorithmConfig::z_signfedavg(ZParam::Finite(1), plateau.sigma_init, e)
+            .with_lrs(client_lr, server_lr);
+        a.name = format!("{}-plateau", a.name);
+        a
+    };
+
+    let base_cfg = ServerConfig {
+        rounds,
+        clients_per_round: cpr,
+        eval_every: (rounds / 20).max(1),
+        ..Default::default()
+    };
+    for (algo, use_plateau) in [(&fixed, false), (&adaptive, true)] {
+        let cfg = ServerConfig {
+            plateau: use_plateau.then_some(plateau),
+            ..base_cfg.clone()
+        };
+        let (agg, runs) = run_repeats(
+            || build_xla_backend(workload, args).expect("backend"),
+            algo,
+            &cfg,
+            repeats,
+        );
+        save_series(
+            &format!("fig6_{}", args.str_or("dataset", "mnist")),
+            &algo.name,
+            &agg,
+            &runs,
+        );
+        print_summary_row(&algo.name, &agg);
+        if use_plateau {
+            // Fig. 15: sigma trajectory of the first run.
+            let sigmas: Vec<f32> = runs[0].records.iter().map(|r| r.sigma).collect();
+            println!(
+                "  sigma trajectory: start {:.4} -> end {:.4} ({} distinct values)",
+                sigmas.first().unwrap(),
+                sigmas.last().unwrap(),
+                {
+                    let mut v: Vec<_> = sigmas.iter().map(|s| s.to_bits()).collect();
+                    v.dedup();
+                    v.len()
+                }
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,11 @@
+//! Reproduction drivers: one per paper figure/table (see DESIGN.md §5).
+
+pub mod common;
+pub mod fig1_consensus;
+pub mod fig2_noise;
+pub mod fig3_mnist;
+pub mod fig5_fedavg;
+pub mod fig6_plateau;
+pub mod fig16_qsgd;
+pub mod fig17_dp;
+pub mod table2_rates;

@@ -1,0 +1,175 @@
+//! HLO module audit: op-count / fusion / FLOP analysis of the AOT artifacts.
+//!
+//! The L2 performance deliverable (DESIGN.md §7): verify the lowered module
+//! has no redundant recomputation and that XLA fused what it should. This
+//! parses the HLO *text* (the same artifact the runtime loads), counts
+//! instructions by opcode, and estimates FLOPs for `dot`/`convolution` from
+//! their shapes — enough to compare artifact variants (e.g. the scan-fused
+//! local_update vs the unrolled train_step) and catch op-count regressions.
+//!
+//! Exposed on the CLI as `zsfa inspect --hlo <artifact>`.
+
+use std::collections::BTreeMap;
+
+/// Audit result for one HLO module.
+#[derive(Debug, Clone, Default)]
+pub struct HloAudit {
+    /// instruction opcode -> count (across all computations).
+    pub op_counts: BTreeMap<String, usize>,
+    /// Number of fusion computations.
+    pub fusions: usize,
+    /// Estimated FLOPs of dot/convolution instructions (2·prod(out)·K).
+    pub est_flops: f64,
+    /// Total instruction count.
+    pub total_ops: usize,
+}
+
+impl HloAudit {
+    pub fn count(&self, op: &str) -> usize {
+        self.op_counts.get(op).copied().unwrap_or(0)
+    }
+
+    /// Render as a compact table.
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "total instructions: {}   fusions: {}   est. FLOPs: {:.3e}\n",
+            self.total_ops, self.fusions, self.est_flops
+        );
+        let mut rows: Vec<(&String, &usize)> = self.op_counts.iter().collect();
+        rows.sort_by(|a, b| b.1.cmp(a.1));
+        for (op, n) in rows.iter().take(18) {
+            s.push_str(&format!("  {op:<28} {n}\n"));
+        }
+        s
+    }
+}
+
+/// Parse the shape prefix of an HLO instruction line: `f32[2,3]{...}`.
+/// Returns element count (1 for scalars), or None for tuples.
+fn shape_elements(shape: &str) -> Option<f64> {
+    let open = shape.find('[')?;
+    let close = shape[open..].find(']')? + open;
+    let dims = &shape[open + 1..close];
+    if dims.trim().is_empty() {
+        return Some(1.0);
+    }
+    let mut n = 1.0f64;
+    for d in dims.split(',') {
+        n *= d.trim().parse::<f64>().ok()?;
+    }
+    Some(n)
+}
+
+/// Audit HLO text.
+pub fn audit(hlo_text: &str) -> HloAudit {
+    let mut a = HloAudit::default();
+    for raw in hlo_text.lines() {
+        let line = raw.trim();
+        // Instruction lines look like `name.1 = f32[..]{..} opcode(...)`,
+        // optionally prefixed with `ROOT ` and/or `%` (both HLO text dialects
+        // appear in the wild; jax's as_hlo_text emits bare identifiers).
+        let rest = line.strip_prefix("ROOT ").unwrap_or(line);
+        let rest = rest.strip_prefix('%').unwrap_or(rest);
+        // lhs must be a plain identifier (rejects module/computation headers).
+        let Some(eq) = rest.find(" = ") else { continue };
+        if !rest[..eq]
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '.' || c == '-')
+            || rest[..eq].is_empty()
+        {
+            continue;
+        }
+        let after = &rest[eq + 3..];
+        // after = "<shape> <opcode>(args...)" — shape may contain spaces only
+        // inside tuple shapes; split on the last space before '('.
+        let Some(paren) = after.find('(') else { continue };
+        let head = &after[..paren];
+        let Some(sp) = head.rfind(' ') else { continue };
+        let shape = &head[..sp];
+        let opcode = head[sp + 1..].trim().to_string();
+        if opcode.is_empty() {
+            continue;
+        }
+        *a.op_counts.entry(opcode.clone()).or_insert(0) += 1;
+        a.total_ops += 1;
+        if opcode == "fusion" {
+            a.fusions += 1;
+        }
+        if opcode == "dot" || opcode == "convolution" {
+            // FLOPs ≈ 2 · |out| · contraction length; the contraction length
+            // is not recoverable from the out shape alone, so approximate
+            // with |out| · |lhs-ish| via the first operand's element count
+            // when present in the args. Cheap heuristic: use 2·|out| as a
+            // lower bound and record it; relative comparisons between
+            // artifact variants remain meaningful because the same ops
+            // appear in both.
+            if let Some(n) = shape_elements(shape) {
+                a.est_flops += 2.0 * n;
+            }
+        }
+    }
+    a
+}
+
+/// Audit an artifact file by name.
+pub fn audit_file(path: &std::path::Path) -> std::io::Result<HloAudit> {
+    Ok(audit(&std::fs::read_to_string(path)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+HloModule jit_f
+
+ENTRY %main (p0: f32[4,4], p1: f32[4,4]) -> (f32[4,4]) {
+  %p0 = f32[4,4]{1,0} parameter(0)
+  %p1 = f32[4,4]{1,0} parameter(1)
+  %dot.1 = f32[4,4]{1,0} dot(%p0, %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %const = f32[] constant(2)
+  %bc = f32[4,4]{1,0} broadcast(%const), dimensions={}
+  ROOT %add.2 = f32[4,4]{1,0} add(%dot.1, %bc)
+}
+"#;
+
+    #[test]
+    fn counts_ops() {
+        let a = audit(SAMPLE);
+        assert_eq!(a.count("dot"), 1);
+        assert_eq!(a.count("add"), 1);
+        assert_eq!(a.count("parameter"), 2);
+        assert_eq!(a.count("broadcast"), 1);
+        assert!(a.total_ops >= 5);
+        // dot flops lower bound: 2*16
+        assert!((a.est_flops - 32.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shape_parsing() {
+        assert_eq!(shape_elements("f32[4,4]{1,0}"), Some(16.0));
+        assert_eq!(shape_elements("f32[]"), Some(1.0));
+        assert_eq!(shape_elements("s8[100]{0}"), Some(100.0));
+        assert_eq!(shape_elements("pred"), None);
+    }
+
+    #[test]
+    fn audits_real_artifact_when_present() {
+        let p = std::path::Path::new("artifacts/mnist_mlp_train_step.hlo.txt");
+        if !p.exists() {
+            return;
+        }
+        let a = audit_file(p).unwrap();
+        // A train step must contain dots (dense layers) and their gradients.
+        assert!(a.count("dot") >= 4, "{}", a.report());
+        assert!(a.total_ops > 30);
+    }
+
+    #[test]
+    fn report_renders() {
+        let a = audit(SAMPLE);
+        let r = a.report();
+        assert!(r.contains("total instructions"));
+        assert!(r.contains("dot"));
+    }
+}

