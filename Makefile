@@ -1,0 +1,42 @@
+# z-SignFedAvg reproduction — top-level build entry points.
+#
+#   make build     release build of the coordinator (lib + zsfa binary)
+#   make test      full Rust test suite (tier-1 verify = build + test)
+#   make bench     run every registered micro/round bench
+#   make fmt       rustfmt check (what CI enforces)
+#   make lint      clippy with warnings denied (what CI enforces)
+#   make python    editable-install the compile package + kernel tests
+#   make artifacts AOT-lower the L2/L1 stack to HLO text (needs jax)
+#   make ci        everything CI runs, locally
+
+CARGO ?= cargo
+PYTHON ?= python3
+
+.PHONY: build test bench bench-build fmt lint python artifacts ci clean
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+bench:
+	$(CARGO) bench
+
+bench-build:
+	$(CARGO) bench --no-run
+
+fmt:
+	$(CARGO) fmt --all -- --check
+
+lint:
+	$(CARGO) clippy --all-targets -- -D warnings
+
+python:
+	$(PYTHON) -m pip install -e python
+	$(PYTHON) -m pytest python/tests -q
+
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts
+
+ci: build test fmt lint bench-build python

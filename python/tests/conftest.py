@@ -1,5 +1,18 @@
+import importlib.util
 import os
 import sys
 
 # Make `compile` importable when pytest runs from the repo root or python/.
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+# The kernel/model/AOT suites exercise the JAX/Pallas stack. When JAX wheels
+# are unavailable (some CI platforms), skip those modules at collection time
+# so the pure-NumPy reference tests still gate the build.
+collect_ignore = []
+if importlib.util.find_spec("jax") is None:
+    collect_ignore = [
+        "test_kernels.py",
+        "test_model.py",
+        "test_aot.py",
+        "test_zdist.py",
+    ]

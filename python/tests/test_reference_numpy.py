@@ -1,0 +1,85 @@
+"""Pure-NumPy reference tests — the always-on CI gate.
+
+These pin down the cross-language contracts between the Python compile path
+and the Rust coordinator *without* importing JAX, so they run (and block CI)
+even on platforms where JAX/Pallas wheels are unavailable:
+
+* the dequantization constant ``eta_z = 2^{1/(2z)} Gamma(1 + 1/(2z))``
+  (paper Lemma 1) against closed forms;
+* the paper's Sign convention (``Sign(0) = +1``, never 0);
+* the u32 bit-pack layout the Pallas packed-compress artifact emits and
+  ``PackedSigns::from_u32_words`` consumes on the Rust side: coordinate
+  ``j`` lives at word ``j // 32``, bit ``j % 32``; trailing bits are zero.
+"""
+
+import math
+
+import numpy as np
+
+
+def eta_z(z: int) -> float:
+    """Reference eta_z without JAX (z = 0 encodes z = inf)."""
+    if z == 0:
+        return 1.0
+    inv = 1.0 / (2.0 * z)
+    return 2.0 ** inv * math.gamma(1.0 + inv)
+
+
+def sign_pm1(x: np.ndarray) -> np.ndarray:
+    """The paper's Sign: +1 for x >= 0, -1 otherwise (never 0)."""
+    return np.where(x >= 0, 1, -1).astype(np.int8)
+
+
+def pack_signs_u32(signs: np.ndarray) -> np.ndarray:
+    """The wire layout contract: bit j%32 of word j//32, +1 -> 1, -1 -> 0."""
+    d = signs.shape[0]
+    words = np.zeros((d + 31) // 32, dtype=np.uint32)
+    for j in range(d):
+        if signs[j] > 0:
+            words[j // 32] |= np.uint32(1) << np.uint32(j % 32)
+    return words
+
+
+def test_eta_z_closed_forms():
+    assert eta_z(1) == pytest_approx(math.sqrt(math.pi / 2))
+    assert eta_z(0) == 1.0
+    vals = [eta_z(z) for z in (1, 2, 3, 5, 10, 50)]
+    assert all(a > b for a, b in zip(vals, vals[1:]))
+    assert abs(vals[-1] - 1.0) < 0.02
+
+
+def pytest_approx(x, rel=1e-12):
+    import pytest
+
+    return pytest.approx(x, rel=rel)
+
+
+def test_sign_convention():
+    x = np.array([0.0, -0.0, 1.5, -1.5, np.finfo(np.float32).tiny], dtype=np.float32)
+    s = sign_pm1(x)
+    assert s.dtype == np.int8
+    # IEEE: -0.0 >= 0.0, so Sign(-0.0) = +1 — the Rust codec relies on this.
+    assert s.tolist() == [1, 1, 1, -1, 1]
+    assert set(np.unique(s)).issubset({-1, 1})
+
+
+def test_pack_layout_roundtrip():
+    rng = np.random.default_rng(7)
+    for d in (1, 31, 32, 33, 257, 4096):
+        signs = sign_pm1(rng.standard_normal(d).astype(np.float32))
+        words = pack_signs_u32(signs)
+        assert words.dtype == np.uint32
+        assert len(words) == (d + 31) // 32
+        for j in range(d):
+            bit = (int(words[j // 32]) >> (j % 32)) & 1
+            assert bit == (1 if signs[j] > 0 else 0), f"d={d} j={j}"
+        if d % 32:
+            assert int(words[-1]) >> (d % 32) == 0, "trailing bits must be zero"
+
+
+def test_pack_popcount_matches_plus_count():
+    rng = np.random.default_rng(3)
+    signs = sign_pm1(rng.standard_normal(1000).astype(np.float32))
+    words = pack_signs_u32(signs)
+    popcount = sum(bin(int(w)).count("1") for w in words)
+    assert popcount == int((signs > 0).sum())

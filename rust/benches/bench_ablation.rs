@@ -66,7 +66,9 @@ fn main() {
     println!("\n== ablation: downlink compression (1-SignSGD) ==");
     // The downlink payload is the mean-vote vector (entries in [-1, 1]), so
     // its noise scale is matched to that magnitude, not the gradients'.
-    for (label, downlink) in [("dense downlink", None), ("sign downlink", Some((ZParam::Finite(1), 0.5f32)))] {
+    let downlinks =
+        [("dense downlink", None), ("sign downlink", Some((ZParam::Finite(1), 0.5f32)))];
+    for (label, downlink) in downlinks {
         let mut b = AnalyticBackend::new(Consensus::gaussian(n, d, 21));
         let algo = AlgorithmConfig::z_signsgd(ZParam::Finite(1), 3.0).with_lrs(0.02, 1.0);
         let c = ServerConfig { downlink_sign: downlink, ..cfg.clone() };

@@ -1,0 +1,59 @@
+//! Bench: RoundEngine thread scaling — the wall-clock side of the parallel
+//! determinism contract (the bit-exactness side lives in `fl::engine`
+//! tests).
+//!
+//! Measures whole coordinator rounds on an n = 64-client consensus problem
+//! across `parallelism` ∈ {1, 2, 4, 8}, for the two compressor families the
+//! engine reduces differently: the z = 1 stochastic sign (vote shards,
+//! z-noise sampling dominates per-client cost) and QSGD (dense payloads,
+//! participant-order reduce). Expected shape: near-linear speedup up to the
+//! machine's core count, with the sign path scaling best because its
+//! per-client work is heaviest relative to the serial reduce.
+//!
+//! Run with `cargo bench --bench bench_parallel`.
+
+use zsignfedavg::bench::{bench, BenchConfig};
+use zsignfedavg::fl::backend::AnalyticBackend;
+use zsignfedavg::fl::server::{run_experiment, ServerConfig};
+use zsignfedavg::fl::AlgorithmConfig;
+use zsignfedavg::problems::consensus::Consensus;
+use zsignfedavg::rng::ZParam;
+
+fn main() {
+    let cfg = BenchConfig { warmup_time_s: 0.3, samples: 12, min_batch_time_s: 0.05 };
+    let n = 64;
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    println!("== parallel round engine: n = {n} clients, {cores} cores available ==");
+
+    let cases = [
+        (
+            "1-SignFedAvg(E=2)",
+            AlgorithmConfig::z_signfedavg(ZParam::Finite(1), 1.0, 2).with_lrs(0.01, 1.0),
+        ),
+        ("QSGD(s=4)", AlgorithmConfig::qsgd(4).with_lrs(0.01, 1.0)),
+    ];
+    for &d in &[16_384usize, 131_072] {
+        for (label, algo) in &cases {
+            let mut base_median = f64::NAN;
+            for &par in &[1usize, 2, 4, 8] {
+                let sc = ServerConfig {
+                    rounds: 1,
+                    eval_every: 1000,
+                    parallelism: par,
+                    ..Default::default()
+                };
+                let mut backend = AnalyticBackend::new(Consensus::gaussian(n, d, 7));
+                let r = bench(&format!("round/{label}/d={d}/par={par}"), cfg, || {
+                    std::hint::black_box(run_experiment(&mut backend, algo, &sc));
+                });
+                let med = r.median_s();
+                if par == 1 {
+                    base_median = med;
+                }
+                println!("{}   speedup {:.2}x", r.report(), base_median / med);
+            }
+            println!();
+        }
+    }
+    println!("(results are bit-identical across par — see fl::engine tests)");
+}

@@ -23,7 +23,11 @@ fn main() {
         let d = rt.param_count;
         println!("== {model} (d = {d}) ==");
         let mut params = rt.load_init().unwrap();
-        let spec = if model == "cifar_cnn" { synth::SynthSpec::cifar() } else { synth::SynthSpec::mnist() };
+        let spec = if model == "cifar_cnn" {
+            synth::SynthSpec::cifar()
+        } else {
+            synth::SynthSpec::mnist()
+        };
         let (train, _) = synth::train_test(spec, 256, 8);
         let b = rt.train_batch;
         let l = train.sample_len();

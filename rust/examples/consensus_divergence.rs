@@ -43,7 +43,8 @@ fn main() {
     println!("{:<52} objective trajectory (f - f*)", "");
     for (label, algo) in cases {
         let traj = trajectory(&algo, 1000);
-        let s: Vec<String> = traj.iter().step_by(2).map(|f| format!("{:7.3}", f - f_star)).collect();
+        let s: Vec<String> =
+            traj.iter().step_by(2).map(|f| format!("{:7.3}", f - f_star)).collect();
         println!("{label:<52} {}", s.join(" "));
     }
     println!("\nRows 1-2 are pinned at the initial gap: the sign votes cancel exactly.");

@@ -81,6 +81,13 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// The `--parallelism` knob shared by every experiment driver: worker
+    /// threads for per-client round work (`ServerConfig::parallelism`).
+    /// Results are bit-identical for any value (see `fl::engine`).
+    pub fn parallelism_or(&self, default: usize) -> usize {
+        self.usize_or("parallelism", default)
+    }
+
     /// Apply all `--key value` pairs as config overrides.
     pub fn apply_overrides(&self, cfg: &mut crate::config::Config) {
         for (k, v) in &self.flags {
@@ -112,6 +119,12 @@ mod tests {
         assert!(a.has("verbose"));
         assert_eq!(a.str_or("verbose", "false"), "true");
         assert_eq!(a.u64_or("seed", 0), 7);
+    }
+
+    #[test]
+    fn parallelism_flag() {
+        assert_eq!(parse("run --parallelism 8").parallelism_or(1), 8);
+        assert_eq!(parse("run").parallelism_or(1), 1);
     }
 
     #[test]

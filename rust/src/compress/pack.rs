@@ -164,6 +164,20 @@ impl VoteAccumulator {
         self.n += 1;
     }
 
+    /// Fold another accumulator's votes into this one (shard reduction).
+    ///
+    /// The parallel round engine gives each worker thread its own shard and
+    /// reduces them here; vote counts are integers, so the merge is exact
+    /// and order-independent — the foundation of the engine's bit-exact
+    /// determinism guarantee across thread counts.
+    pub fn merge(&mut self, other: &VoteAccumulator) {
+        assert_eq!(other.len, self.len, "vote length mismatch");
+        for (c, &o) in self.counts.iter_mut().zip(&other.counts) {
+            *c += o;
+        }
+        self.n += other.n;
+    }
+
     /// The raw vote counts (`sum_i s_i[j]`).
     pub fn counts(&self) -> &[i32] {
         &self.counts
@@ -275,6 +289,42 @@ mod tests {
         }
         assert_eq!(acc.counts(), &naive[..]);
         assert_eq!(acc.num_votes(), n as u32);
+    }
+
+    #[test]
+    fn merge_matches_sequential_accumulation() {
+        // Shard-merge over random sign vectors must equal one sequential
+        // accumulator, for any split of the clients across shards.
+        let mut rng = Pcg64::seeded(17);
+        let d = 257;
+        let n = 23;
+        let signs: Vec<PackedSigns> =
+            (0..n).map(|_| PackedSigns::from_signs(&random_signs(&mut rng, d))).collect();
+        let mut sequential = VoteAccumulator::new(d);
+        for s in &signs {
+            sequential.add(s);
+        }
+        for shards in [1usize, 2, 5, 23] {
+            let mut parts: Vec<VoteAccumulator> =
+                (0..shards).map(|_| VoteAccumulator::new(d)).collect();
+            for (i, s) in signs.iter().enumerate() {
+                parts[i % shards].add(s);
+            }
+            let mut merged = VoteAccumulator::new(d);
+            for p in &parts {
+                merged.merge(p);
+            }
+            assert_eq!(merged.counts(), sequential.counts(), "shards={shards}");
+            assert_eq!(merged.num_votes(), sequential.num_votes());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "vote length mismatch")]
+    fn merge_rejects_length_mismatch() {
+        let mut a = VoteAccumulator::new(4);
+        let b = VoteAccumulator::new(5);
+        a.merge(&b);
     }
 
     #[test]

@@ -196,9 +196,11 @@ mod tests {
 
     #[test]
     fn bits_accounting() {
-        let s = SparseMessage { dim: 1000, idx: vec![1, 2], vals: vec![0.5, -0.5], sign_coded: true };
+        let s =
+            SparseMessage { dim: 1000, idx: vec![1, 2], vals: vec![0.5, -0.5], sign_coded: true };
         assert_eq!(s.bits_on_wire(), 64 + 2 + 32);
-        let t = SparseMessage { dim: 1000, idx: vec![1, 2], vals: vec![0.5, -0.5], sign_coded: false };
+        let t =
+            SparseMessage { dim: 1000, idx: vec![1, 2], vals: vec![0.5, -0.5], sign_coded: false };
         assert_eq!(t.bits_on_wire(), 64 + 64);
     }
 

@@ -232,7 +232,9 @@ pub fn decode(bytes: &[u8]) -> Result<Message, WireError> {
                 return Err(WireError::Truncated);
             }
             let idx: Vec<u32> = (0..k)
-                .map(|j| u32::from_le_bytes(payload[pos + 4 * j..pos + 4 * j + 4].try_into().unwrap()))
+                .map(|j| {
+                    u32::from_le_bytes(payload[pos + 4 * j..pos + 4 * j + 4].try_into().unwrap())
+                })
                 .collect();
             pos += 4 * k;
             let vals: Vec<f32> = if sign_coded {
@@ -251,7 +253,8 @@ pub fn decode(bytes: &[u8]) -> Result<Message, WireError> {
                 }
                 (0..k)
                     .map(|j| {
-                        f32::from_le_bytes(payload[pos + 4 * j..pos + 4 * j + 4].try_into().unwrap())
+                        let raw = payload[pos + 4 * j..pos + 4 * j + 4].try_into().unwrap();
+                        f32::from_le_bytes(raw)
                     })
                     .collect()
             };

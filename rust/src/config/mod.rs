@@ -75,19 +75,27 @@ impl Config {
     }
 
     pub fn usize_or(&self, key: &str, default: usize) -> usize {
-        self.raw(key).map(|s| s.parse().unwrap_or_else(|_| panic!("config {key}: bad usize {s:?}"))).unwrap_or(default)
+        self.raw(key)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("config {key}: bad usize {s:?}")))
+            .unwrap_or(default)
     }
 
     pub fn u64_or(&self, key: &str, default: u64) -> u64 {
-        self.raw(key).map(|s| s.parse().unwrap_or_else(|_| panic!("config {key}: bad u64 {s:?}"))).unwrap_or(default)
+        self.raw(key)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("config {key}: bad u64 {s:?}")))
+            .unwrap_or(default)
     }
 
     pub fn f32_or(&self, key: &str, default: f32) -> f32 {
-        self.raw(key).map(|s| s.parse().unwrap_or_else(|_| panic!("config {key}: bad f32 {s:?}"))).unwrap_or(default)
+        self.raw(key)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("config {key}: bad f32 {s:?}")))
+            .unwrap_or(default)
     }
 
     pub fn f64_or(&self, key: &str, default: f64) -> f64 {
-        self.raw(key).map(|s| s.parse().unwrap_or_else(|_| panic!("config {key}: bad f64 {s:?}"))).unwrap_or(default)
+        self.raw(key)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("config {key}: bad f64 {s:?}")))
+            .unwrap_or(default)
     }
 
     pub fn bool_or(&self, key: &str, default: bool) -> bool {
@@ -98,6 +106,12 @@ impl Config {
                 other => panic!("config {key}: bad bool {other:?}"),
             })
             .unwrap_or(default)
+    }
+
+    /// The `parallelism` key shared by every experiment config: worker
+    /// threads for per-client round work (`ServerConfig::parallelism`).
+    pub fn parallelism_or(&self, default: usize) -> usize {
+        self.usize_or("parallelism", default)
     }
 
     pub fn opt_usize(&self, key: &str) -> Option<usize> {

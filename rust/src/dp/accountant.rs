@@ -239,7 +239,8 @@ mod tests {
         // land in the same ballpark (within ~25%) and must preserve the
         // ordering/ratios.
         let (q, t, delta) = (100.0 / 3579.0, 500u64, 1.0 / 3579.0);
-        let paper = [(1.0, 2.77), (2.0, 1.57), (4.0, 1.02), (6.0, 0.845), (8.0, 0.75), (10.0, 0.685)];
+        let paper =
+            [(1.0, 2.77), (2.0, 1.57), (4.0, 1.02), (6.0, 0.845), (8.0, 0.75), (10.0, 0.685)];
         let mut prev = f64::INFINITY;
         for (eps, sigma_paper) in paper {
             let sigma = calibrate_noise(q, t, delta, eps);

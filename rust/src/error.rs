@@ -1,0 +1,137 @@
+//! Minimal error plumbing (the vendor set has no `anyhow`).
+//!
+//! A drop-in subset of the anyhow API used by the drivers and the runtime:
+//! [`Error`], [`Result`], the [`anyhow!`]/[`bail!`] macros and the
+//! [`Context`] extension trait. The error carries a plain message string —
+//! the coordinator reports errors to humans; nothing matches on error kinds.
+
+use std::fmt;
+
+/// A human-readable error message.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(msg: impl fmt::Display) -> Error {
+        Error { msg: msg.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `main` exits through the Debug impl: keep it readable.
+        f.write_str(&self.msg)
+    }
+}
+
+// `Error` deliberately does not implement `std::error::Error`, which keeps
+// this blanket conversion coherent (the same trick anyhow uses): every
+// std-error type works with `?` in a `Result<_, Error>` function.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to an error, anyhow-style.
+pub trait Context<T> {
+    /// Wrap the error as `"{ctx}: {error}"`.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+
+    /// Like [`Context::context`], evaluating the message lazily.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format_args!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format_args!("{}: {e}", f())))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::error::Error::msg(::core::format_args!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::error::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::error::Error::msg(::core::format_args!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+pub use crate::{anyhow, bail};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn macro_forms() {
+        assert_eq!(anyhow!("plain").to_string(), "plain");
+        let x = 3;
+        assert_eq!(anyhow!("inline {x}").to_string(), "inline 3");
+        assert_eq!(anyhow!("fmt {} {}", 1, "b").to_string(), "fmt 1 b");
+        assert_eq!(anyhow!(String::from("owned")).to_string(), "owned");
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("boom {}", 7);
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(f(true).unwrap_err().to_string(), "boom 7");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/path")?;
+            Ok(s)
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn context_wraps() {
+        let r: std::result::Result<(), &str> = Err("inner");
+        assert_eq!(r.context("outer").unwrap_err().to_string(), "outer: inner");
+        let r: std::result::Result<(), &str> = Err("inner");
+        let e = r.with_context(|| format!("round {}", 2)).unwrap_err();
+        assert_eq!(e.to_string(), "round 2: inner");
+    }
+
+    #[test]
+    fn debug_is_message() {
+        assert_eq!(format!("{:?}", anyhow!("msg")), "msg");
+    }
+}

@@ -60,6 +60,13 @@ pub trait TrainBackend {
     /// through the AOT-compiled Pallas kernel, preferring the bit-packed
     /// artifact variant; analytic backends return `None` and the server
     /// falls back to the Rust reference compressor).
+    ///
+    /// Contract: the hook is honored only on the engine's sequential path.
+    /// A backend that returns `Some` from [`TrainBackend::as_parallel`]
+    /// must NOT also override this hook — on the parallel path the engine
+    /// always uses the Rust reference compressor, so an overridden hook
+    /// would be silently ignored (and its different RNG consumption would
+    /// change seeded results between the two paths).
     fn compress_hook(
         &mut self,
         _delta: &[f32],
@@ -69,6 +76,37 @@ pub trait TrainBackend {
     ) -> Option<crate::compress::pack::PackedSigns> {
         None
     }
+
+    /// Sync-safe view for concurrent per-client work, when the backend
+    /// supports it.
+    ///
+    /// Backends whose per-client update is a pure function of `(client,
+    /// params, rng)` — the analytic problems — return `Some`, and
+    /// `fl::engine::RoundEngine` fans client tasks across worker threads.
+    /// Stateful backends (the PJRT runtime with its executable cache and
+    /// scratch buffers) keep the default `None` and run sequentially; either
+    /// way the round results are bit-identical for every `parallelism`
+    /// setting (see `ServerConfig::parallelism`).
+    fn as_parallel(&self) -> Option<&dyn ParallelBackend> {
+        None
+    }
+}
+
+/// Shared-state per-client entry point used by the parallel round engine.
+///
+/// Implementors must be safe to call from many threads at once: `rng` is the
+/// caller-owned per-(round, client) stream, so a correct implementation
+/// draws randomness only from it and mutates nothing shared.
+pub trait ParallelBackend: Sync {
+    /// Exactly [`TrainBackend::local_update`], through a shared reference.
+    fn local_update_shared(
+        &self,
+        client: usize,
+        params: &[f32],
+        local_steps: usize,
+        gamma: f32,
+        rng: &mut Pcg64,
+    ) -> LocalOutcome;
 }
 
 /// Backend over an analytic problem. `stochastic` switches the gradient
@@ -91,23 +129,11 @@ impl<P: AnalyticProblem> AnalyticBackend<P> {
         self.stochastic = true;
         self
     }
-}
 
-impl<P: AnalyticProblem> TrainBackend for AnalyticBackend<P> {
-    fn dim(&self) -> usize {
-        self.problem.dim()
-    }
-
-    fn num_clients(&self) -> usize {
-        self.problem.num_clients()
-    }
-
-    fn init_params(&mut self) -> Vec<f32> {
-        self.x0.clone()
-    }
-
-    fn local_update(
-        &mut self,
+    /// The E-step local SGD body. Pure given `rng` (the problem is immutable
+    /// data), which is what makes the parallel view below sound.
+    fn local_update_impl(
+        &self,
         client: usize,
         params: &[f32],
         local_steps: usize,
@@ -132,6 +158,48 @@ impl<P: AnalyticProblem> TrainBackend for AnalyticBackend<P> {
             *dl = (p - xe) / gamma;
         }
         LocalOutcome { delta, mean_loss: self.problem.objective(&x) }
+    }
+}
+
+impl<P: AnalyticProblem> ParallelBackend for AnalyticBackend<P> {
+    fn local_update_shared(
+        &self,
+        client: usize,
+        params: &[f32],
+        local_steps: usize,
+        gamma: f32,
+        rng: &mut Pcg64,
+    ) -> LocalOutcome {
+        self.local_update_impl(client, params, local_steps, gamma, rng)
+    }
+}
+
+impl<P: AnalyticProblem> TrainBackend for AnalyticBackend<P> {
+    fn dim(&self) -> usize {
+        self.problem.dim()
+    }
+
+    fn num_clients(&self) -> usize {
+        self.problem.num_clients()
+    }
+
+    fn init_params(&mut self) -> Vec<f32> {
+        self.x0.clone()
+    }
+
+    fn local_update(
+        &mut self,
+        client: usize,
+        params: &[f32],
+        local_steps: usize,
+        gamma: f32,
+        rng: &mut Pcg64,
+    ) -> LocalOutcome {
+        self.local_update_impl(client, params, local_steps, gamma, rng)
+    }
+
+    fn as_parallel(&self) -> Option<&dyn ParallelBackend> {
+        Some(self)
     }
 
     fn evaluate(&mut self, params: &[f32]) -> EvalResult {

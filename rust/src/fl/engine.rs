@@ -1,0 +1,741 @@
+//! The parallel round engine — Algorithm 1's per-round execution machinery.
+//!
+//! `server::run_experiment` owns *what* an experiment means; this module
+//! owns the round loop and, in particular, *how* the per-client work inside
+//! a round is executed:
+//!
+//! * each participant becomes a [`ClientTask`] — local update → uplink
+//!   compression → `ClientMsg` — driven entirely by its pre-split `Pcg64`
+//!   stream, so task execution order is irrelevant to the result;
+//! * tasks fan out across a scoped thread pool of `ServerConfig::parallelism`
+//!   workers when the backend offers a [`ParallelBackend`] view, each worker
+//!   folding packed-sign votes into its own `VoteAccumulator` shard (the
+//!   popcount hot path stays allocation-free);
+//! * the coordinator then reduces deterministically: vote shards merge via
+//!   `VoteAccumulator::merge` (integer counts — exact in any order), while
+//!   dense/QSGD/sparse contributions and client losses are applied in
+//!   participant order so every f32/f64 reduction tree is independent of the
+//!   thread count.
+//!
+//! Determinism contract: for any backend with a parallel view, the
+//! `RunResult` is **bit-identical** for every `parallelism` value (tested
+//! below and in `tests/integration_fl.rs`); stateful backends (PJRT) run on
+//! the sequential path, where the compression hook may call back into the
+//! backend, and the knob is a no-op.
+
+use super::algorithms::{AlgorithmConfig, Compression, ServerOpt};
+use super::backend::{LocalOutcome, ParallelBackend, TrainBackend};
+use super::metrics::{RoundRecord, RunResult};
+use super::plateau::PlateauController;
+use super::server::ServerConfig;
+use crate::compress::error_feedback::EfState;
+use crate::compress::pack::{PackedSigns, VoteAccumulator};
+use crate::compress::qsgd::Qsgd;
+use crate::compress::sign::{SigmaRule, StochasticSign};
+use crate::compress::sparsify::{SparseSign, TopK};
+use crate::compress::{Compressor, Message};
+use crate::rng::Pcg64;
+use crate::tensor;
+use crate::util::Timer;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// One client's unit of work for a round: the participant slot it fills
+/// (which fixes the reduce order), the client id, and the pre-split RNG
+/// stream. Everything else a worker needs is shared round state.
+#[derive(Debug, Clone)]
+pub struct ClientTask {
+    /// Index into the round's participant list.
+    pub pos: usize,
+    /// Global client id.
+    pub client: usize,
+    /// The client's private PCG stream for this round.
+    pub rng: Pcg64,
+}
+
+impl ClientTask {
+    /// Build the task for participant slot `pos` of round `t`.
+    ///
+    /// The stream derivation is part of the reproducibility contract:
+    /// changing it changes every seeded experiment in the repo.
+    pub fn new(root: &Pcg64, t: usize, pos: usize, client: usize) -> ClientTask {
+        let rng = root.split(((t as u64) << 20) ^ (client as u64) ^ 0x5eed);
+        ClientTask { pos, client, rng }
+    }
+}
+
+/// What a finished client task hands back to the coordinator.
+enum Payload {
+    /// Sign-family vote, already folded into the worker's accumulator shard.
+    Voted,
+    /// Dense contribution: the coordinator axpys `weight * v` in
+    /// participant order.
+    Dense { v: Vec<f32>, weight: f32 },
+}
+
+struct ClientMsg {
+    loss: f64,
+    bits: u64,
+    payload: Payload,
+}
+
+/// Per-worker state reused across rounds: a vote-accumulator shard plus the
+/// i8 sign scratch, so the packed-sign hot path allocates nothing per call.
+struct WorkerShard {
+    votes: VoteAccumulator,
+    signs_buf: Vec<i8>,
+}
+
+/// The round loop: server state + per-round client execution machinery.
+pub struct RoundEngine<'a> {
+    algo: &'a AlgorithmConfig,
+    cfg: &'a ServerConfig,
+    d: usize,
+    n: usize,
+    // Server-optimizer state.
+    momentum_buf: Vec<f32>,
+    adam_v: Vec<f32>,
+    adam_t: u32,
+    plateau: Option<PlateauController>,
+    /// Per-client EF residuals. The Mutex only satisfies the borrow checker
+    /// across worker threads: distinct clients touch distinct entries, so
+    /// there is never contention.
+    ef: Vec<Mutex<EfState>>,
+    // Aggregation state, reused across rounds.
+    votes: VoteAccumulator,
+    dense_acc: Vec<f32>,
+    update: Vec<f32>,
+    signs_buf: Vec<i8>,
+    workers: Vec<WorkerShard>,
+    slots: Vec<Mutex<Option<ClientMsg>>>,
+    bits_up: u64,
+    bits_down: u64,
+}
+
+impl<'a> RoundEngine<'a> {
+    /// `d` / `n`: the backend's parameter dimension and client count.
+    pub fn new(algo: &'a AlgorithmConfig, cfg: &'a ServerConfig, d: usize, n: usize) -> Self {
+        RoundEngine {
+            algo,
+            cfg,
+            d,
+            n,
+            momentum_buf: vec![0.0; d],
+            adam_v: vec![0.0; d],
+            adam_t: 0,
+            plateau: None,
+            ef: Vec::new(),
+            votes: VoteAccumulator::new(d),
+            dense_acc: vec![0.0; d],
+            update: vec![0.0; d],
+            signs_buf: vec![0i8; d],
+            workers: Vec::new(),
+            slots: Vec::new(),
+            bits_up: 0,
+            bits_down: 0,
+        }
+    }
+
+    /// Run the full experiment (Algorithm 1 / Algorithm 2 round loop).
+    pub fn run(&mut self, backend: &mut dyn TrainBackend) -> RunResult {
+        let n = self.n;
+        let m_per_round = self.cfg.clients_per_round.unwrap_or(n).min(n);
+        assert!(m_per_round >= 1);
+        if matches!(self.algo.compression, Compression::ErrorFeedback) {
+            assert!(
+                m_per_round == n,
+                "EF-SignSGD cannot track residuals under partial participation (paper §1.1)"
+            );
+        }
+
+        // (Re)initialize all run-scoped state so the engine can be reused.
+        self.momentum_buf.iter_mut().for_each(|v| *v = 0.0);
+        self.adam_v.iter_mut().for_each(|v| *v = 0.0);
+        self.adam_t = 0;
+        self.plateau = self.cfg.plateau.map(PlateauController::new);
+        self.ef = match self.algo.compression {
+            Compression::ErrorFeedback => {
+                (0..n).map(|_| Mutex::new(EfState::new(self.d))).collect()
+            }
+            _ => Vec::new(),
+        };
+        self.bits_up = 0;
+        self.bits_down = 0;
+
+        let mut params = backend.init_params();
+        assert_eq!(params.len(), self.d);
+        let root = Pcg64::new(self.cfg.seed, 0xa11ce);
+        let mut records = Vec::new();
+
+        for t in 0..self.cfg.rounds {
+            let timer = Timer::start();
+            // 1. Participant sampling (uniform, without replacement).
+            let mut sample_rng = root.split(t as u64 * 2 + 1);
+            let participants: Vec<usize> = if m_per_round == n {
+                (0..n).collect()
+            } else {
+                sample_rng.sample_without_replacement(n, m_per_round)
+            };
+
+            // Effective sigma this round (plateau overrides the fixed value).
+            let round_sigma = effective_sigma(self.algo, self.plateau.as_ref());
+
+            // 2–4. Local updates + compression + deterministic reduce.
+            let loss_sum =
+                self.run_clients(backend, &root, t, &params, &participants, round_sigma);
+
+            // 5. Aggregate + server step.
+            let step_scale = match &self.algo.compression {
+                // Alg. 2 applies η to the mean sign of *model diffs* (no γ).
+                Compression::DpSign { .. } => self.algo.server_lr,
+                // DP-FedAvg likewise averages model diffs directly.
+                Compression::DpDense { .. } => self.algo.server_lr,
+                // Alg. 1 line 15: η·γ·mean(Δ).
+                _ => self.algo.server_lr * self.algo.client_lr,
+            };
+            if self.algo.compression.is_sign() {
+                self.votes.mean_into(1.0, &mut self.update);
+            } else {
+                self.update.copy_from_slice(&self.dense_acc);
+            }
+            // Optional downlink compression: broadcast the update itself as
+            // a dequantized stochastic sign (applied server-side too, so the
+            // global iterate equals what the clients reconstruct).
+            if let Some((z, sigma_d)) = self.cfg.downlink_sign {
+                let mut drng = root.split((t as u64) | 0x4000_0000_0000_0000);
+                let mut comp = StochasticSign::new(z, SigmaRule::Fixed(sigma_d));
+                comp.compress_into(&self.update.clone(), &mut drng, &mut self.signs_buf);
+                let scale = (z.eta() as f32) * sigma_d;
+                for (u, &s) in self.update.iter_mut().zip(&self.signs_buf) {
+                    *u = scale * s as f32;
+                }
+                self.bits_down += (participants.len() * self.d) as u64;
+            } else {
+                self.bits_down += (participants.len() * self.d * 32) as u64;
+            }
+            match self.algo.server_opt {
+                ServerOpt::Sgd => tensor::axpy(-step_scale, &self.update, &mut params),
+                ServerOpt::Momentum(beta) => {
+                    // Server momentum: m ← β·m + agg; x ← x − scale·m.
+                    for (mb, &u) in self.momentum_buf.iter_mut().zip(&self.update) {
+                        *mb = beta * *mb + u;
+                    }
+                    tensor::axpy(-step_scale, &self.momentum_buf, &mut params);
+                }
+                ServerOpt::Adam { beta1, beta2, eps } => {
+                    // FedAdam (Reddi et al. '20) with bias correction.
+                    self.adam_t += 1;
+                    let bc1 = 1.0 - beta1.powi(self.adam_t as i32);
+                    let bc2 = 1.0 - beta2.powi(self.adam_t as i32);
+                    for ((p, mb), (vb, &u)) in params
+                        .iter_mut()
+                        .zip(self.momentum_buf.iter_mut())
+                        .zip(self.adam_v.iter_mut().zip(&self.update))
+                    {
+                        *mb = beta1 * *mb + (1.0 - beta1) * u;
+                        *vb = beta2 * *vb + (1.0 - beta2) * u * u;
+                        let mhat = *mb / bc1;
+                        let vhat = *vb / bc2;
+                        *p -= step_scale * mhat / (vhat.sqrt() + eps);
+                    }
+                }
+            }
+
+            // 6. Plateau + evaluation.
+            let mean_local_loss = loss_sum / participants.len() as f64;
+            if let Some(p) = self.plateau.as_mut() {
+                p.observe(mean_local_loss);
+            }
+            if t % self.cfg.eval_every == 0 || t + 1 == self.cfg.rounds {
+                let eval = backend.evaluate(&params);
+                records.push(RoundRecord {
+                    round: t,
+                    objective: eval.objective,
+                    accuracy: eval.accuracy,
+                    grad_norm_sq: eval.grad_norm_sq,
+                    bits_up: self.bits_up,
+                    bits_down: self.bits_down,
+                    sigma: round_sigma,
+                    wall_ms: timer.elapsed_ms(),
+                });
+            }
+        }
+
+        RunResult { algorithm: self.algo.name.clone(), records }
+    }
+
+    /// Execute every participant's task for round `t`, then reduce. Returns
+    /// the sum of client losses (accumulated in participant order).
+    fn run_clients(
+        &mut self,
+        backend: &mut dyn TrainBackend,
+        root: &Pcg64,
+        t: usize,
+        params: &[f32],
+        participants: &[usize],
+        round_sigma: f32,
+    ) -> f64 {
+        let m = participants.len();
+        let inv_m = 1.0f32 / m as f32;
+
+        // Reset round aggregation state.
+        self.votes.reset();
+        self.dense_acc.iter_mut().for_each(|v| *v = 0.0);
+        self.slots.clear();
+        self.slots.resize_with(m, || Mutex::new(None));
+        let threads = self.cfg.parallelism.max(1).min(m);
+        while self.workers.len() < threads {
+            self.workers.push(WorkerShard {
+                votes: VoteAccumulator::new(self.d),
+                signs_buf: vec![0i8; self.d],
+            });
+        }
+        for w in self.workers.iter_mut() {
+            w.votes.reset();
+        }
+
+        // The parallel path runs iff the backend is Sync-safe; which path
+        // runs never depends on `parallelism`, so a given backend always
+        // produces the same per-client messages.
+        if backend.as_parallel().is_some() {
+            let par = backend.as_parallel().unwrap();
+            self.run_clients_shared(
+                par,
+                root,
+                t,
+                params,
+                participants,
+                round_sigma,
+                inv_m,
+                threads,
+            );
+        } else {
+            self.run_clients_exclusive(backend, root, t, params, participants, round_sigma, inv_m);
+        }
+
+        // Deterministic reduce. Vote shards merge exactly (integer counts);
+        // dense payloads and losses apply in participant order, so the
+        // floating-point reduction tree is independent of the thread count.
+        for w in &self.workers[..threads] {
+            self.votes.merge(&w.votes);
+        }
+        let mut loss_sum = 0.0f64;
+        for slot in self.slots.iter_mut() {
+            let msg = slot.get_mut().unwrap().take().expect("client task produced no message");
+            loss_sum += msg.loss;
+            self.bits_up += msg.bits;
+            if let Payload::Dense { v, weight } = msg.payload {
+                tensor::axpy(weight, &v, &mut self.dense_acc);
+            }
+        }
+        loss_sum
+    }
+
+    /// Fan client tasks across scoped worker threads (shared backend view).
+    #[allow(clippy::too_many_arguments)]
+    fn run_clients_shared(
+        &mut self,
+        par: &dyn ParallelBackend,
+        root: &Pcg64,
+        t: usize,
+        params: &[f32],
+        participants: &[usize],
+        round_sigma: f32,
+        inv_m: f32,
+        threads: usize,
+    ) {
+        let next = AtomicUsize::new(0);
+        let ctx = RoundCtx {
+            par,
+            algo: self.algo,
+            root,
+            t,
+            params,
+            participants,
+            round_sigma,
+            inv_m,
+            ef: &self.ef,
+            slots: &self.slots,
+            next: &next,
+        };
+        if threads <= 1 {
+            worker_loop(&ctx, &mut self.workers[0]);
+        } else {
+            let ctx = &ctx;
+            std::thread::scope(|s| {
+                for shard in self.workers[..threads].iter_mut() {
+                    s.spawn(move || worker_loop(ctx, shard));
+                }
+            });
+        }
+    }
+
+    /// Sequential path for stateful backends; the compression hook may call
+    /// back into the backend (the PJRT Pallas kernel route).
+    #[allow(clippy::too_many_arguments)]
+    fn run_clients_exclusive(
+        &mut self,
+        backend: &mut dyn TrainBackend,
+        root: &Pcg64,
+        t: usize,
+        params: &[f32],
+        participants: &[usize],
+        round_sigma: f32,
+        inv_m: f32,
+    ) {
+        let shard = &mut self.workers[0];
+        for (i, &client) in participants.iter().enumerate() {
+            let mut task = ClientTask::new(root, t, i, client);
+            let outcome = backend.local_update(
+                client,
+                params,
+                self.algo.local_steps,
+                self.algo.client_lr,
+                &mut task.rng,
+            );
+            let msg = compress_outcome(
+                outcome,
+                &mut task.rng,
+                self.algo,
+                round_sigma,
+                inv_m,
+                &mut shard.votes,
+                &mut shard.signs_buf,
+                self.ef.get(client),
+                Some(&mut *backend),
+            );
+            *self.slots[i].lock().unwrap() = Some(msg);
+        }
+    }
+}
+
+/// Shared, read-only round state for worker threads (Sync by construction:
+/// every field is a shared reference to Sync data).
+struct RoundCtx<'c> {
+    par: &'c dyn ParallelBackend,
+    algo: &'c AlgorithmConfig,
+    root: &'c Pcg64,
+    t: usize,
+    params: &'c [f32],
+    participants: &'c [usize],
+    round_sigma: f32,
+    inv_m: f32,
+    ef: &'c [Mutex<EfState>],
+    slots: &'c [Mutex<Option<ClientMsg>>],
+    next: &'c AtomicUsize,
+}
+
+/// Worker body: pull the next task index off the shared queue, run the
+/// client task against the worker's own shard, park the message in its
+/// participant slot.
+fn worker_loop(ctx: &RoundCtx<'_>, shard: &mut WorkerShard) {
+    let m = ctx.participants.len();
+    loop {
+        let i = ctx.next.fetch_add(1, Ordering::Relaxed);
+        if i >= m {
+            break;
+        }
+        let client = ctx.participants[i];
+        let mut task = ClientTask::new(ctx.root, ctx.t, i, client);
+        let outcome = ctx.par.local_update_shared(
+            client,
+            ctx.params,
+            ctx.algo.local_steps,
+            ctx.algo.client_lr,
+            &mut task.rng,
+        );
+        let msg = compress_outcome(
+            outcome,
+            &mut task.rng,
+            ctx.algo,
+            ctx.round_sigma,
+            ctx.inv_m,
+            &mut shard.votes,
+            &mut shard.signs_buf,
+            ctx.ef.get(client),
+            None,
+        );
+        *ctx.slots[i].lock().unwrap() = Some(msg);
+    }
+}
+
+/// Compress one client's local outcome into its uplink message — Algorithm
+/// 1 lines 11–13 (and the Algorithm 2 clip-perturb-sign variant). Pure in
+/// `(outcome, rng)` apart from the worker-local vote shard / EF residual it
+/// updates, which is what makes task order irrelevant.
+#[allow(clippy::too_many_arguments)]
+fn compress_outcome(
+    outcome: LocalOutcome,
+    rng: &mut Pcg64,
+    algo: &AlgorithmConfig,
+    round_sigma: f32,
+    inv_m: f32,
+    votes: &mut VoteAccumulator,
+    signs_buf: &mut [i8],
+    ef: Option<&Mutex<EfState>>,
+    mut hook: Option<&mut dyn TrainBackend>,
+) -> ClientMsg {
+    let d = outcome.delta.len();
+    let loss = outcome.mean_loss;
+    let (bits, payload) = match &algo.compression {
+        Compression::None => (32 * d as u64, Payload::Dense { v: outcome.delta, weight: inv_m }),
+        Compression::ZSign { z, sigma } => {
+            let s = match sigma {
+                SigmaRule::Fixed(_) => round_sigma,
+                SigmaRule::L2Norm => tensor::norm2(&outcome.delta) as f32,
+                SigmaRule::InfNorm => tensor::norm_inf(&outcome.delta) as f32,
+            };
+            // Prefer the backend's AOT Pallas kernel (sequential path only);
+            // fall back to the Rust reference compressor.
+            let hooked = hook.as_mut().and_then(|b| b.compress_hook(&outcome.delta, *z, s, rng));
+            let packed = match hooked {
+                Some(packed) => packed,
+                None => {
+                    let mut comp = StochasticSign::new(*z, SigmaRule::Fixed(s));
+                    comp.compress_into(&outcome.delta, rng, signs_buf);
+                    PackedSigns::from_signs(signs_buf)
+                }
+            };
+            votes.add(&packed);
+            (d as u64, Payload::Voted)
+        }
+        Compression::ErrorFeedback => {
+            // EF compresses the stepsize-scaled update γ·Σg.
+            let mut scaled = outcome.delta;
+            tensor::scale(algo.client_lr, &mut scaled);
+            let msg = ef.expect("EF residual missing").lock().unwrap().step(&scaled);
+            let bits = msg.bits_on_wire();
+            let mut dec = vec![0.0f32; d];
+            msg.decode_into(&mut dec);
+            // Undo the γ scaling so the server step stays η·γ·agg.
+            (bits, Payload::Dense { v: dec, weight: inv_m / algo.client_lr })
+        }
+        Compression::Qsgd { s } => {
+            let q = Qsgd::new(*s).quantize(&outcome.delta, rng);
+            let bits = q.bits_on_wire();
+            let mut dec = vec![0.0f32; d];
+            q.decode_into(&mut dec);
+            (bits, Payload::Dense { v: dec, weight: inv_m })
+        }
+        Compression::DpSign { clip, noise_mult } => {
+            // Alg. 2 line 11: clip the *model diff*, perturb, sign.
+            let mut diff = outcome.delta;
+            tensor::scale(algo.client_lr, &mut diff); // γ·Σg = x_{t-1} − x_E
+            tensor::clip_l2(&mut diff, *clip as f64);
+            let noise_std = noise_mult * clip;
+            for v in diff.iter_mut() {
+                *v += noise_std * rng.normal() as f32;
+            }
+            votes.add(&PackedSigns::from_f32_signs(&diff));
+            (d as u64, Payload::Voted)
+        }
+        Compression::DpDense { clip, noise_mult } => {
+            let mut diff = outcome.delta;
+            tensor::scale(algo.client_lr, &mut diff);
+            tensor::clip_l2(&mut diff, *clip as f64);
+            let noise_std = noise_mult * clip;
+            for v in diff.iter_mut() {
+                *v += noise_std * rng.normal() as f32;
+            }
+            (32 * d as u64, Payload::Dense { v: diff, weight: inv_m })
+        }
+        Compression::TopK { frac } => {
+            let msg = TopK::new(*frac).compress(&outcome.delta, rng);
+            let bits = msg.bits_on_wire();
+            let mut dec = vec![0.0f32; d];
+            if let Message::Sparse(sp) = &msg {
+                sp.decode_into(&mut dec);
+            }
+            (bits, Payload::Dense { v: dec, weight: inv_m })
+        }
+        Compression::SparseSign { frac, z, sigma } => {
+            let msg = SparseSign::new(*frac, *z, *sigma).compress(&outcome.delta, rng);
+            let bits = msg.bits_on_wire();
+            let mut dec = vec![0.0f32; d];
+            if let Message::Sparse(sp) = &msg {
+                sp.decode_into(&mut dec);
+            }
+            (bits, Payload::Dense { v: dec, weight: inv_m })
+        }
+    };
+    ClientMsg { loss, bits, payload }
+}
+
+/// The σ actually applied this round: the plateau controller overrides a
+/// fixed σ; input-dependent rules resolve per client inside
+/// [`compress_outcome`].
+pub(super) fn effective_sigma(
+    algo: &AlgorithmConfig,
+    plateau: Option<&PlateauController>,
+) -> f32 {
+    match (&algo.compression, plateau) {
+        (Compression::ZSign { sigma: SigmaRule::Fixed(_), .. }, Some(p)) => p.sigma(),
+        (Compression::ZSign { sigma: SigmaRule::Fixed(s), .. }, None) => *s,
+        _ => 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::backend::AnalyticBackend;
+    use crate::fl::plateau::PlateauConfig;
+    use crate::fl::server::run_experiment;
+    use crate::problems::consensus::Consensus;
+    use crate::rng::ZParam;
+
+    fn run_with(
+        algo: &AlgorithmConfig,
+        parallelism: usize,
+        clients_per_round: Option<usize>,
+    ) -> RunResult {
+        let mut b = AnalyticBackend::new(Consensus::gaussian(16, 37, 1234));
+        let cfg = ServerConfig {
+            rounds: 8,
+            seed: 9,
+            eval_every: 1,
+            parallelism,
+            clients_per_round,
+            ..Default::default()
+        };
+        run_experiment(&mut b, algo, &cfg)
+    }
+
+    /// Byte-level equality over everything except the measured wall time.
+    fn assert_identical(a: &RunResult, b: &RunResult, what: &str) {
+        assert_eq!(a.algorithm, b.algorithm, "{what}");
+        assert_eq!(a.records.len(), b.records.len(), "{what}");
+        for (x, y) in a.records.iter().zip(&b.records) {
+            assert_eq!(x.round, y.round, "{what}");
+            assert_eq!(x.objective.to_bits(), y.objective.to_bits(), "{what} round {}", x.round);
+            assert_eq!(x.accuracy.map(f64::to_bits), y.accuracy.map(f64::to_bits), "{what}");
+            assert_eq!(
+                x.grad_norm_sq.map(f64::to_bits),
+                y.grad_norm_sq.map(f64::to_bits),
+                "{what}"
+            );
+            assert_eq!(x.bits_up, y.bits_up, "{what}");
+            assert_eq!(x.bits_down, y.bits_down, "{what}");
+            assert_eq!(x.sigma.to_bits(), y.sigma.to_bits(), "{what}");
+        }
+    }
+
+    #[test]
+    fn every_compressor_is_bit_exact_across_thread_counts() {
+        // Every Compression variant the server tests cover, full
+        // participation: parallelism must never change the result.
+        let algos = vec![
+            AlgorithmConfig::gd().with_lrs(0.05, 1.0),
+            AlgorithmConfig::fedavg(3).with_lrs(0.05, 1.0),
+            AlgorithmConfig::signsgd().with_lrs(0.05, 1.0),
+            AlgorithmConfig::z_signsgd(ZParam::Finite(1), 2.0).with_lrs(0.05, 1.0),
+            AlgorithmConfig::z_signsgd(ZParam::Inf, 2.0).with_lrs(0.05, 1.0),
+            AlgorithmConfig::sto_signsgd().with_lrs(0.05, 1.0),
+            AlgorithmConfig::ef_signsgd().with_lrs(0.05, 1.0),
+            AlgorithmConfig::qsgd(2).with_lrs(0.05, 1.0),
+            AlgorithmConfig::topk(0.25, 1).with_lrs(0.05, 1.0),
+            AlgorithmConfig::sparse_sign(0.25, ZParam::Finite(1), 1.0, 1).with_lrs(0.05, 1.0),
+            AlgorithmConfig::dp_signfedavg(0.5, 1.0, 2).with_lrs(0.05, 0.5),
+            AlgorithmConfig::dp_fedavg(0.5, 1.0, 2).with_lrs(0.05, 0.5),
+        ];
+        for algo in &algos {
+            let base = run_with(algo, 1, None);
+            for par in [2usize, 8] {
+                let run = run_with(algo, par, None);
+                assert_identical(&base, &run, &format!("{} par={par}", algo.name));
+            }
+        }
+    }
+
+    #[test]
+    fn partial_participation_is_bit_exact_across_thread_counts() {
+        for algo in [
+            AlgorithmConfig::z_signfedavg(ZParam::Finite(1), 2.0, 2).with_lrs(0.05, 1.0),
+            AlgorithmConfig::qsgd(4).with_lrs(0.05, 1.0),
+            AlgorithmConfig::topk(0.25, 1).with_lrs(0.05, 1.0),
+        ] {
+            let base = run_with(&algo, 1, Some(5));
+            for par in [2usize, 8] {
+                let run = run_with(&algo, par, Some(5));
+                assert_identical(&base, &run, &format!("{} partial par={par}", algo.name));
+            }
+        }
+    }
+
+    #[test]
+    fn server_optimizers_and_plateau_are_bit_exact() {
+        // Momentum/Adam fold thread-count-sensitive sums into persistent
+        // state; the plateau controller feeds the loss back into sigma. All
+        // of it must stay identical under parallelism.
+        let adam = AlgorithmConfig::z_signfedavg(ZParam::Finite(1), 2.0, 2)
+            .with_lrs(0.05, 0.3)
+            .with_server_adam();
+        let momentum = AlgorithmConfig::z_signsgd(ZParam::Finite(1), 2.0)
+            .with_lrs(0.05, 0.5)
+            .with_momentum(0.9);
+        for algo in [adam, momentum] {
+            let mk = |par: usize| {
+                let mut b = AnalyticBackend::new(Consensus::gaussian(12, 29, 5));
+                let plateau =
+                    PlateauConfig { sigma_init: 0.5, sigma_bound: 8.0, kappa: 3, beta: 2.0 };
+                let cfg = ServerConfig {
+                    rounds: 12,
+                    seed: 4,
+                    eval_every: 1,
+                    parallelism: par,
+                    plateau: Some(plateau),
+                    downlink_sign: Some((ZParam::Finite(1), 0.5)),
+                    ..Default::default()
+                };
+                run_experiment(&mut b, &algo, &cfg)
+            };
+            let base = mk(1);
+            for par in [3usize, 8] {
+                assert_identical(&base, &mk(par), &format!("{} par={par}", algo.name));
+            }
+        }
+    }
+
+    #[test]
+    fn oversubscribed_parallelism_is_capped_and_exact() {
+        // More threads than clients must neither crash nor change results.
+        let algo = AlgorithmConfig::z_signsgd(ZParam::Finite(1), 1.0).with_lrs(0.05, 1.0);
+        let base = run_with(&algo, 1, Some(4));
+        let wide = run_with(&algo, 64, Some(4));
+        assert_identical(&base, &wide, "oversubscribed");
+    }
+
+    #[test]
+    fn parallelism_zero_is_treated_as_one() {
+        let algo = AlgorithmConfig::qsgd(2).with_lrs(0.05, 1.0);
+        assert_identical(&run_with(&algo, 0, None), &run_with(&algo, 1, None), "par=0");
+    }
+
+    #[test]
+    fn client_task_rng_depends_on_round_and_client() {
+        let root = Pcg64::new(7, 0xa11ce);
+        let mut a = ClientTask::new(&root, 0, 0, 3).rng;
+        let mut b = ClientTask::new(&root, 1, 0, 3).rng;
+        let mut c = ClientTask::new(&root, 0, 1, 4).rng;
+        let (x, y, z) = (a.next_u64(), b.next_u64(), c.next_u64());
+        assert_ne!(x, y);
+        assert_ne!(x, z);
+        // Same (round, client) => same stream, independent of slot position.
+        let mut d = ClientTask::new(&root, 0, 9, 3).rng;
+        assert_eq!(d.next_u64(), x);
+    }
+
+    #[test]
+    fn engine_is_reusable_across_runs() {
+        // A second run on a fresh backend must match a fresh engine's run
+        // (all run-scoped state is reinitialized).
+        let algo = AlgorithmConfig::z_signsgd(ZParam::Finite(1), 1.0).with_lrs(0.05, 1.0);
+        let cfg = ServerConfig { rounds: 5, seed: 11, parallelism: 4, ..Default::default() };
+        let mut engine = RoundEngine::new(&algo, &cfg, 23, 6);
+        let mut b1 = AnalyticBackend::new(Consensus::gaussian(6, 23, 3));
+        let first = engine.run(&mut b1);
+        let mut b2 = AnalyticBackend::new(Consensus::gaussian(6, 23, 3));
+        let second = engine.run(&mut b2);
+        assert_identical(&first, &second, "engine reuse");
+    }
+}

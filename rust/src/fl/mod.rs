@@ -5,20 +5,25 @@
 //!   1-/∞-SignSGD, z-SignFedAvg, Sto-SignSGD(wM), EF-SignSGDwM, QSGD,
 //!   FedPAQ, and the DP variants.
 //! * [`backend`] — the `TrainBackend` abstraction: analytic problems
-//!   (Fig. 1/2) vs. AOT-compiled neural workloads over PJRT (Fig. 3–17).
-//! * [`server`] — Algorithm 1's round loop: client sampling, local updates,
-//!   uplink compression, sign-vote aggregation, server momentum, the
-//!   plateau σ-controller, and exact bits-on-the-wire accounting.
+//!   (Fig. 1/2) vs. AOT-compiled neural workloads over PJRT (Fig. 3–17),
+//!   plus the `ParallelBackend` view for Sync-safe per-client work.
+//! * [`server`] — the experiment configuration and `run_experiment` entry
+//!   point (client sampling cadence, plateau, downlink, parallelism knob).
+//! * [`engine`] — the round loop proper: per-client tasks fanned across a
+//!   scoped thread pool, sharded sign-vote accumulation, deterministic
+//!   reduction (bit-identical results for every thread count).
 //! * [`plateau`] — §4.4's Plateau criterion for the adaptive noise scale.
 //! * [`metrics`] — round records, repeat aggregation (mean ± std), CSV.
 
 pub mod algorithms;
 pub mod backend;
+pub mod engine;
 pub mod metrics;
 pub mod plateau;
 pub mod server;
 
 pub use algorithms::{AlgorithmConfig, Compression};
-pub use backend::{EvalResult, LocalOutcome, TrainBackend};
+pub use backend::{EvalResult, LocalOutcome, ParallelBackend, TrainBackend};
+pub use engine::{ClientTask, RoundEngine};
 pub use metrics::{RoundRecord, RunResult};
 pub use server::{run_experiment, ServerConfig};

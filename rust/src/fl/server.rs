@@ -1,35 +1,33 @@
-//! Algorithm 1's round loop — the coordinator proper.
+//! Algorithm 1's coordinator entry point: experiment configuration plus
+//! [`run_experiment`].
 //!
-//! Responsibilities per communication round t:
+//! Responsibilities per communication round t (executed by
+//! [`super::engine::RoundEngine`] — this module is the stable public API):
+//!
 //!   1. sample the participant set (full or uniform partial participation);
-//!   2. orchestrate each participant's E local SGD steps via the backend;
+//!   2. orchestrate each participant's E local SGD steps via the backend,
+//!      fanning clients across worker threads when the backend allows it;
 //!   3. apply the configured uplink compressor to each client's update
 //!      direction `(x_{t-1} − x^i_{t-1,E})/γ` and account the exact bits;
 //!   4. aggregate: packed-sign **vote accumulation** for the sign family
-//!      (the hot path — see `compress::pack::VoteAccumulator`), dense mean
-//!      otherwise;
+//!      (worker-sharded `compress::pack::VoteAccumulator`s merged exactly),
+//!      dense mean otherwise;
 //!   5. server step `x_t = x_{t-1} − η·γ·agg` (Alg. 1 line 15), with
 //!      optional server momentum (the paper's "wM" baselines) and the DP
 //!      variant's γ-free step (Alg. 2 line 15);
 //!   6. feed the plateau controller and periodically evaluate.
 //!
 //! Determinism: every (round, client) pair gets its own PCG stream derived
-//! from the experiment seed, so runs are bit-reproducible regardless of
-//! participant order.
+//! from the experiment seed, and the engine reduces client messages in a
+//! thread-count-independent order, so runs are bit-reproducible regardless
+//! of participant order *and* of [`ServerConfig::parallelism`].
 
-use super::algorithms::{AlgorithmConfig, Compression, ServerOpt};
+use super::algorithms::AlgorithmConfig;
 use super::backend::TrainBackend;
-use super::metrics::{RoundRecord, RunResult};
-use super::plateau::{PlateauConfig, PlateauController};
-use crate::compress::error_feedback::EfState;
-use crate::compress::pack::{PackedSigns, VoteAccumulator};
-use crate::compress::qsgd::Qsgd;
-use crate::compress::sign::{SigmaRule, StochasticSign};
-use crate::compress::sparsify::{SparseSign, TopK};
-use crate::compress::{Compressor, Message};
-use crate::rng::{Pcg64, ZParam};
-use crate::tensor;
-use crate::util::Timer;
+use super::engine::RoundEngine;
+use super::metrics::RunResult;
+use super::plateau::PlateauConfig;
+use crate::rng::ZParam;
 
 /// Server-side experiment configuration (everything that is not the
 /// algorithm itself).
@@ -50,6 +48,13 @@ pub struct ServerConfig {
     /// The server applies the compressed update itself, so server and
     /// clients stay consistent; downlink costs d bits per client per round.
     pub downlink_sign: Option<(ZParam, f32)>,
+    /// Worker threads for per-client work (local update + compression).
+    ///
+    /// Determinism contract: for any backend exposing a parallel view
+    /// (`TrainBackend::as_parallel` — all analytic backends), the
+    /// `RunResult` is bit-identical for every value of this knob. Stateful
+    /// backends (the PJRT runtime) serialize and ignore it. 0 means 1.
+    pub parallelism: usize,
 }
 
 impl Default for ServerConfig {
@@ -61,6 +66,7 @@ impl Default for ServerConfig {
             seed: 0,
             plateau: None,
             downlink_sign: None,
+            parallelism: 1,
         }
     }
 }
@@ -73,233 +79,7 @@ pub fn run_experiment(
 ) -> RunResult {
     let d = backend.dim();
     let n = backend.num_clients();
-    let m_per_round = cfg.clients_per_round.unwrap_or(n).min(n);
-    assert!(m_per_round >= 1);
-    if matches!(algo.compression, Compression::ErrorFeedback) {
-        assert!(
-            m_per_round == n,
-            "EF-SignSGD cannot track residuals under partial participation (paper §1.1)"
-        );
-    }
-
-    let mut params = backend.init_params();
-    assert_eq!(params.len(), d);
-    let root = Pcg64::new(cfg.seed, 0xa11ce);
-
-    // Server state.
-    let mut momentum_buf = vec![0.0f32; d];
-    let mut adam_v = vec![0.0f32; d];
-    let mut adam_t = 0u32;
-    let mut plateau = cfg.plateau.map(PlateauController::new);
-    let mut ef_states: Vec<EfState> = match algo.compression {
-        Compression::ErrorFeedback => (0..n).map(|_| EfState::new(d)).collect(),
-        _ => Vec::new(),
-    };
-
-    // Scratch buffers reused across rounds (no allocation on the hot loop).
-    let mut votes = VoteAccumulator::new(d);
-    let mut dense_acc = vec![0.0f32; d];
-    let mut update = vec![0.0f32; d];
-    let mut signs_buf = vec![0i8; d];
-    let mut decode_buf = vec![0.0f32; d];
-
-    let mut bits_up: u64 = 0;
-    let mut bits_down: u64 = 0;
-    let mut records = Vec::new();
-
-    for t in 0..cfg.rounds {
-        let timer = Timer::start();
-        // 1. Participant sampling (uniform, without replacement).
-        let mut sample_rng = root.split(t as u64 * 2 + 1);
-        let participants: Vec<usize> = if m_per_round == n {
-            (0..n).collect()
-        } else {
-            sample_rng.sample_without_replacement(n, m_per_round)
-        };
-
-        // Effective sigma this round (plateau overrides the fixed value).
-        let round_sigma = effective_sigma(algo, plateau.as_ref());
-
-        votes.reset();
-        dense_acc.iter_mut().for_each(|v| *v = 0.0);
-        let inv_m = 1.0f32 / participants.len() as f32;
-        let mut loss_sum = 0.0f64;
-
-        // 2–3. Local updates + compression.
-        for &client in &participants {
-            let mut crng = root.split(((t as u64) << 20) ^ (client as u64) ^ 0x5eed);
-            let outcome =
-                backend.local_update(client, &params, algo.local_steps, algo.client_lr, &mut crng);
-            loss_sum += outcome.mean_loss;
-            match &algo.compression {
-                Compression::None => {
-                    tensor::axpy(inv_m, &outcome.delta, &mut dense_acc);
-                    bits_up += 32 * d as u64;
-                }
-                Compression::ZSign { z, sigma } => {
-                    let s = match sigma {
-                        SigmaRule::Fixed(_) => round_sigma,
-                        SigmaRule::L2Norm => tensor::norm2(&outcome.delta) as f32,
-                        SigmaRule::InfNorm => tensor::norm_inf(&outcome.delta) as f32,
-                    };
-                    // Prefer the backend's AOT Pallas kernel; fall back to
-                    // the Rust reference compressor (analytic problems).
-                    let packed = match backend.compress_hook(&outcome.delta, *z, s, &mut crng) {
-                        Some(packed) => packed,
-                        None => {
-                            let mut comp = StochasticSign::new(*z, SigmaRule::Fixed(s));
-                            comp.compress_into(&outcome.delta, &mut crng, &mut signs_buf);
-                            PackedSigns::from_signs(&signs_buf)
-                        }
-                    };
-                    votes.add(&packed);
-                    bits_up += d as u64;
-                }
-                Compression::ErrorFeedback => {
-                    // EF compresses the stepsize-scaled update γ·Σg.
-                    let mut scaled = outcome.delta.clone();
-                    tensor::scale(algo.client_lr, &mut scaled);
-                    let msg = ef_states[client].step(&scaled);
-                    bits_up += msg.bits_on_wire();
-                    msg.decode_into(&mut decode_buf);
-                    // Undo the γ scaling so the server step stays η·γ·agg.
-                    tensor::axpy(inv_m / algo.client_lr, &decode_buf, &mut dense_acc);
-                }
-                Compression::Qsgd { s } => {
-                    let q = Qsgd::new(*s).quantize(&outcome.delta, &mut crng);
-                    bits_up += q.bits_on_wire();
-                    q.decode_into(&mut decode_buf);
-                    tensor::axpy(inv_m, &decode_buf, &mut dense_acc);
-                }
-                Compression::DpSign { clip, noise_mult } => {
-                    // Alg. 2 line 11: clip the *model diff*, perturb, sign.
-                    let mut diff = outcome.delta.clone();
-                    tensor::scale(algo.client_lr, &mut diff); // γ·Σg = x_{t-1} − x_E
-                    tensor::clip_l2(&mut diff, *clip as f64);
-                    let noise_std = noise_mult * clip;
-                    for v in diff.iter_mut() {
-                        *v += noise_std * crng.normal() as f32;
-                    }
-                    votes.add(&PackedSigns::from_f32_signs(&diff));
-                    bits_up += d as u64;
-                }
-                Compression::DpDense { clip, noise_mult } => {
-                    let mut diff = outcome.delta.clone();
-                    tensor::scale(algo.client_lr, &mut diff);
-                    tensor::clip_l2(&mut diff, *clip as f64);
-                    let noise_std = noise_mult * clip;
-                    for v in diff.iter_mut() {
-                        *v += noise_std * crng.normal() as f32;
-                    }
-                    tensor::axpy(inv_m, &diff, &mut dense_acc);
-                    bits_up += 32 * d as u64;
-                }
-                Compression::TopK { frac } => {
-                    let msg = TopK::new(*frac).compress(&outcome.delta, &mut crng);
-                    bits_up += msg.bits_on_wire();
-                    if let Message::Sparse(s) = &msg {
-                        s.decode_into(&mut decode_buf);
-                    }
-                    tensor::axpy(inv_m, &decode_buf, &mut dense_acc);
-                }
-                Compression::SparseSign { frac, z, sigma } => {
-                    let msg =
-                        SparseSign::new(*frac, *z, *sigma).compress(&outcome.delta, &mut crng);
-                    bits_up += msg.bits_on_wire();
-                    if let Message::Sparse(s) = &msg {
-                        s.decode_into(&mut decode_buf);
-                    }
-                    tensor::axpy(inv_m, &decode_buf, &mut dense_acc);
-                }
-            }
-        }
-
-        // 4–5. Aggregate + server step.
-        let step_scale = match &algo.compression {
-            // Alg. 2 applies η to the mean sign of *model diffs* (no γ).
-            Compression::DpSign { .. } => algo.server_lr,
-            // DP-FedAvg likewise averages model diffs directly.
-            Compression::DpDense { .. } => algo.server_lr,
-            // Alg. 1 line 15: η·γ·mean(Δ).
-            _ => algo.server_lr * algo.client_lr,
-        };
-        if algo.compression.is_sign() {
-            votes.mean_into(1.0, &mut update);
-        } else {
-            update.copy_from_slice(&dense_acc);
-        }
-        // Optional downlink compression: broadcast the update itself as a
-        // dequantized stochastic sign (applied server-side too, so the
-        // global iterate equals what the clients reconstruct).
-        if let Some((z, sigma_d)) = cfg.downlink_sign {
-            let mut drng = root.split((t as u64) | 0x4000_0000_0000_0000);
-            let mut comp = StochasticSign::new(z, SigmaRule::Fixed(sigma_d));
-            comp.compress_into(&update.clone(), &mut drng, &mut signs_buf);
-            let scale = (z.eta() as f32) * sigma_d;
-            for (u, &s) in update.iter_mut().zip(&signs_buf) {
-                *u = scale * s as f32;
-            }
-            bits_down += (participants.len() * d) as u64;
-        } else {
-            bits_down += (participants.len() * d * 32) as u64;
-        }
-        match algo.server_opt {
-            ServerOpt::Sgd => tensor::axpy(-step_scale, &update, &mut params),
-            ServerOpt::Momentum(beta) => {
-                // Server momentum: m ← β·m + agg; x ← x − scale·m.
-                for (mb, &u) in momentum_buf.iter_mut().zip(&update) {
-                    *mb = beta * *mb + u;
-                }
-                tensor::axpy(-step_scale, &momentum_buf, &mut params);
-            }
-            ServerOpt::Adam { beta1, beta2, eps } => {
-                // FedAdam (Reddi et al. '20) with bias correction.
-                adam_t += 1;
-                let bc1 = 1.0 - beta1.powi(adam_t as i32);
-                let bc2 = 1.0 - beta2.powi(adam_t as i32);
-                for ((p, mb), (vb, &u)) in params
-                    .iter_mut()
-                    .zip(momentum_buf.iter_mut())
-                    .zip(adam_v.iter_mut().zip(&update))
-                {
-                    *mb = beta1 * *mb + (1.0 - beta1) * u;
-                    *vb = beta2 * *vb + (1.0 - beta2) * u * u;
-                    let mhat = *mb / bc1;
-                    let vhat = *vb / bc2;
-                    *p -= step_scale * mhat / (vhat.sqrt() + eps);
-                }
-            }
-        }
-
-        // 6. Plateau + evaluation.
-        let mean_local_loss = loss_sum / participants.len() as f64;
-        if let Some(p) = plateau.as_mut() {
-            p.observe(mean_local_loss);
-        }
-        if t % cfg.eval_every == 0 || t + 1 == cfg.rounds {
-            let eval = backend.evaluate(&params);
-            records.push(RoundRecord {
-                round: t,
-                objective: eval.objective,
-                accuracy: eval.accuracy,
-                grad_norm_sq: eval.grad_norm_sq,
-                bits_up,
-                bits_down,
-                sigma: round_sigma,
-                wall_ms: timer.elapsed_ms(),
-            });
-        }
-    }
-
-    RunResult { algorithm: algo.name.clone(), records }
-}
-
-fn effective_sigma(algo: &AlgorithmConfig, plateau: Option<&PlateauController>) -> f32 {
-    match (&algo.compression, plateau) {
-        (Compression::ZSign { sigma: SigmaRule::Fixed(_), .. }, Some(p)) => p.sigma(),
-        (Compression::ZSign { sigma: SigmaRule::Fixed(s), .. }, None) => *s,
-        _ => 0.0,
-    }
+    RoundEngine::new(algo, cfg, d, n).run(backend)
 }
 
 #[cfg(test)]

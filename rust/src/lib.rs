@@ -24,6 +24,7 @@ pub mod compress;
 pub mod config;
 pub mod data;
 pub mod dp;
+pub mod error;
 pub mod fl;
 pub mod net;
 pub mod problems;

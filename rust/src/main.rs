@@ -8,12 +8,12 @@
 //!   bench               in-process micro-bench smoke (full benches: `cargo bench`)
 //!   version             print version
 
-use anyhow::Result;
 use zsignfedavg::cli::Args;
+use zsignfedavg::error::{anyhow, bail, Result};
 use zsignfedavg::repro;
 
 fn main() -> Result<()> {
-    let args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
+    let args = Args::from_env().map_err(|e| anyhow!(e))?;
     match args.subcommand.as_deref() {
         Some("fig1") => repro::fig1_consensus::run(&args),
         Some("fig2") => repro::fig2_noise::run(&args),
@@ -60,6 +60,7 @@ SUBCOMMANDS
 
 COMMON FLAGS
   --rounds N --repeats N --seed N --paper-scale
+  --parallelism N (client worker threads; bit-identical results for any N)
   --artifacts DIR (default: artifacts)
   figures 3-17 need `make artifacts` first",
         zsignfedavg::version()
@@ -68,11 +69,10 @@ COMMON FLAGS
 
 fn inspect(args: &Args) -> Result<()> {
     let dir = std::path::Path::new(args.str_or("artifacts", "artifacts"));
-    let man = zsignfedavg::runtime::manifest::Manifest::load(dir)
-        .map_err(|e| anyhow::anyhow!(e))?;
+    let man = zsignfedavg::runtime::manifest::Manifest::load(dir).map_err(|e| anyhow!(e))?;
     if let Some(name) = args.flag("hlo") {
         // Op-count / FLOP audit of one artifact (L2 perf tooling).
-        let info = man.get(name).map_err(|e| anyhow::anyhow!(e))?;
+        let info = man.get(name).map_err(|e| anyhow!(e))?;
         let audit = zsignfedavg::runtime::hlo_audit::audit_file(&info.file)?;
         println!("HLO audit for {name}:\n{}", audit.report());
         return Ok(());
@@ -104,12 +104,12 @@ fn run_config(args: &Args) -> Result<()> {
 
     let mut cfg = Config::new();
     if let Some(path) = args.flag("config") {
-        cfg = Config::load(std::path::Path::new(path)).map_err(|e| anyhow::anyhow!(e))?;
+        cfg = Config::load(std::path::Path::new(path)).map_err(|e| anyhow!(e))?;
     }
     args.apply_overrides(&mut cfg);
 
     let workload = Workload::parse(cfg.str_or("dataset", "mnist"))
-        .ok_or_else(|| anyhow::anyhow!("dataset must be mnist|emnist|cifar"))?;
+        .ok_or_else(|| anyhow!("dataset must be mnist|emnist|cifar"))?;
     let algo_name = cfg.str_or("algorithm", "1-signfedavg").to_string();
     let sigma = cfg.f32_or("sigma", 0.05);
     let e = cfg.usize_or("local_steps", 1);
@@ -122,7 +122,7 @@ fn run_config(args: &Args) -> Result<()> {
         "sto-signsgd" => AlgorithmConfig::sto_signsgd(),
         "ef-signsgd" => AlgorithmConfig::ef_signsgd(),
         "qsgd" => AlgorithmConfig::qsgd(cfg.usize_or("qsgd_levels", 2) as u32),
-        other => anyhow::bail!("unknown algorithm {other:?}"),
+        other => bail!("unknown algorithm {other:?}"),
     }
     .with_lrs(cfg.f32_or("client_lr", 0.01), cfg.f32_or("server_lr", 1.0))
     .with_momentum(cfg.f32_or("momentum", 0.0));
@@ -134,6 +134,7 @@ fn run_config(args: &Args) -> Result<()> {
         seed: cfg.u64_or("seed", 0),
         plateau: None,
         downlink_sign: None,
+        parallelism: cfg.parallelism_or(1),
     };
     let repeats = cfg.usize_or("repeats", 1);
     println!(

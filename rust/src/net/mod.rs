@@ -58,7 +58,11 @@ pub struct TimedRecord {
 ///
 /// `clients_per_round` must match the experiment (bits are totals across
 /// participants; the model needs per-client payloads).
-pub fn simulate_timeline(run: &RunResult, link: &LinkModel, clients_per_round: usize) -> Vec<TimedRecord> {
+pub fn simulate_timeline(
+    run: &RunResult,
+    link: &LinkModel,
+    clients_per_round: usize,
+) -> Vec<TimedRecord> {
     assert!(clients_per_round >= 1);
     let mut out = Vec::with_capacity(run.records.len());
     let mut prev_up = 0u64;
@@ -122,7 +126,8 @@ mod tests {
     fn round_time_decomposes() {
         // 1 client, 1e6 bits up per round @1e6 bps = 1 s, latency 0.5, no
         // compute, downlink free.
-        let link = LinkModel { uplink_bps: 1e6, downlink_bps: 1e12, latency_s: 0.5, compute_s: 0.0 };
+        let link =
+            LinkModel { uplink_bps: 1e6, downlink_bps: 1e12, latency_s: 0.5, compute_s: 0.0 };
         let run = mk_run(1_000_000, 0, &[0.1, 0.2, 0.3]);
         let tl = simulate_timeline(&run, &link, 1);
         assert!((tl[0].sim_time_s - 1.5).abs() < 1e-9);

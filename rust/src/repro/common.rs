@@ -114,7 +114,7 @@ impl Workload {
 }
 
 /// Build the PJRT-backed federated workload from CLI flags.
-pub fn build_xla_backend(workload: Workload, args: &Args) -> anyhow::Result<XlaBackend> {
+pub fn build_xla_backend(workload: Workload, args: &Args) -> crate::error::Result<XlaBackend> {
     let artifacts = Path::new(args.str_or("artifacts", "artifacts"));
     let runtime = ModelRuntime::open(artifacts, workload.model())?;
     let paper_scale = args.has("paper-scale");

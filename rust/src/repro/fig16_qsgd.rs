@@ -13,9 +13,9 @@ use crate::fl::server::ServerConfig;
 use crate::fl::AlgorithmConfig;
 use crate::rng::ZParam;
 
-pub fn run(args: &Args) -> anyhow::Result<()> {
+pub fn run(args: &Args) -> crate::error::Result<()> {
     let workload = Workload::parse(args.str_or("dataset", "mnist"))
-        .ok_or_else(|| anyhow::anyhow!("--dataset mnist|emnist|cifar"))?;
+        .ok_or_else(|| crate::anyhow!("--dataset mnist|emnist|cifar"))?;
     banner(&format!("Figure 16 — sign vs unbiased quantization on {workload:?}"));
     let rounds = args.usize_or("rounds", 100);
     let repeats = args.usize_or("repeats", 2);
@@ -54,6 +54,7 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
             rounds,
             clients_per_round: cpr,
             eval_every: (rounds / 20).max(1),
+            parallelism: args.parallelism_or(1),
             ..Default::default()
         };
         let (agg, runs) = run_repeats(

@@ -16,7 +16,7 @@ use crate::dp::calibrate_noise;
 use crate::fl::server::ServerConfig;
 use crate::fl::AlgorithmConfig;
 
-pub fn run(args: &Args) -> anyhow::Result<()> {
+pub fn run(args: &Args) -> crate::error::Result<()> {
     banner("Figure 17 — DP-SignFedAvg vs DP-FedAvg on EMNIST");
     let workload = Workload::parse(args.str_or("dataset", "emnist")).unwrap();
     let rounds = args.usize_or("rounds", 100);
@@ -53,6 +53,7 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
                 rounds,
                 clients_per_round: cpr,
                 eval_every: (rounds / 10).max(1),
+                parallelism: args.parallelism_or(1),
                 ..Default::default()
             };
             let (agg, runs) = run_repeats(

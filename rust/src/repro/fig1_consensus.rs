@@ -21,7 +21,7 @@ use crate::problems::consensus::Consensus;
 use crate::problems::AnalyticProblem;
 use crate::rng::ZParam;
 
-pub fn run(args: &Args) -> anyhow::Result<()> {
+pub fn run(args: &Args) -> crate::error::Result<()> {
     banner("Figure 1 — consensus problem, varying dimension");
     let rounds = args.usize_or("rounds", 600);
     let repeats = args.usize_or("repeats", 5);
@@ -51,6 +51,7 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
             let cfg = ServerConfig {
                 rounds,
                 eval_every: (rounds / 100).max(1),
+                parallelism: args.parallelism_or(1),
                 ..Default::default()
             };
             let (mut agg, runs) = run_repeats(
@@ -95,7 +96,12 @@ fn counterexample_report(args: &Args) {
     for (label, algo) in cases {
         let mut b = AnalyticBackend::new(Consensus::counterexample(a));
         b.x0 = vec![a / 2.0];
-        let cfg = ServerConfig { rounds, eval_every: (rounds / 50).max(1), ..Default::default() };
+        let cfg = ServerConfig {
+            rounds,
+            eval_every: (rounds / 50).max(1),
+            parallelism: args.parallelism_or(1),
+            ..Default::default()
+        };
         let run = crate::fl::server::run_experiment(&mut b, &algo, &cfg);
         let first = run.records.first().unwrap().objective;
         let last = run.records.last().unwrap().objective;

@@ -15,7 +15,7 @@ use crate::problems::consensus::Consensus;
 use crate::problems::AnalyticProblem;
 use crate::rng::ZParam;
 
-pub fn run(args: &Args) -> anyhow::Result<()> {
+pub fn run(args: &Args) -> crate::error::Result<()> {
     banner("Figure 2 — bias/variance trade-off over noise scales");
     let rounds = args.usize_or("rounds", 800);
     let repeats = args.usize_or("repeats", 5);
@@ -36,6 +36,7 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
             let cfg = ServerConfig {
                 rounds,
                 eval_every: (rounds / 100).max(1),
+                parallelism: args.parallelism_or(1),
                 ..Default::default()
             };
             let (mut agg, runs) = run_repeats(

@@ -25,7 +25,7 @@ use crate::fl::server::ServerConfig;
 use crate::fl::AlgorithmConfig;
 use crate::rng::ZParam;
 
-pub fn run(args: &Args) -> anyhow::Result<()> {
+pub fn run(args: &Args) -> crate::error::Result<()> {
     if args.has("sweep-sigma") {
         return sweep_sigma(args);
     }
@@ -48,6 +48,7 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
         let cfg = ServerConfig {
             rounds,
             eval_every: (rounds / 20).max(1),
+            parallelism: args.parallelism_or(1),
             ..Default::default()
         };
         let (agg, runs) = run_repeats(
@@ -64,7 +65,7 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
 }
 
 /// Fig. 7: 1-/∞-SignSGD under different noise scales on the same workload.
-fn sweep_sigma(args: &Args) -> anyhow::Result<()> {
+fn sweep_sigma(args: &Args) -> crate::error::Result<()> {
     banner("Figure 7 — noise-scale sweep on non-iid MNIST");
     let rounds = args.usize_or("rounds", 80);
     let repeats = args.usize_or("repeats", 2);
@@ -79,6 +80,7 @@ fn sweep_sigma(args: &Args) -> anyhow::Result<()> {
             let cfg = ServerConfig {
                 rounds,
                 eval_every: (rounds / 10).max(1),
+                parallelism: args.parallelism_or(1),
                 ..Default::default()
             };
             let (agg, runs) = run_repeats(

@@ -17,9 +17,9 @@ use crate::fl::server::ServerConfig;
 use crate::fl::AlgorithmConfig;
 use crate::rng::ZParam;
 
-pub fn run(args: &Args) -> anyhow::Result<()> {
+pub fn run(args: &Args) -> crate::error::Result<()> {
     let workload = Workload::parse(args.str_or("dataset", "cifar"))
-        .ok_or_else(|| anyhow::anyhow!("--dataset mnist|emnist|cifar"))?;
+        .ok_or_else(|| crate::anyhow!("--dataset mnist|emnist|cifar"))?;
     if args.has("sweep") {
         return sweep_sigma_e(args, workload);
     }
@@ -60,6 +60,7 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
                 rounds,
                 clients_per_round: cpr,
                 eval_every: (rounds / 20).max(1),
+                parallelism: args.parallelism_or(1),
                 ..Default::default()
             };
             let (agg, runs) = run_repeats(
@@ -81,7 +82,7 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
 }
 
 /// Figures 9–13: σ × E grid for z ∈ {1, ∞}.
-fn sweep_sigma_e(args: &Args, workload: Workload) -> anyhow::Result<()> {
+fn sweep_sigma_e(args: &Args, workload: Workload) -> crate::error::Result<()> {
     banner(&format!("Figures 9-13 — sigma x E sweep on {workload:?}"));
     let rounds = args.usize_or("rounds", 60);
     let repeats = args.usize_or("repeats", 1);
@@ -107,6 +108,7 @@ fn sweep_sigma_e(args: &Args, workload: Workload) -> anyhow::Result<()> {
                     rounds,
                     clients_per_round: cpr,
                     eval_every: (rounds / 10).max(1),
+                    parallelism: args.parallelism_or(1),
                     ..Default::default()
                 };
                 let (agg, runs) = run_repeats(

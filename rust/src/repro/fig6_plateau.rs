@@ -15,9 +15,9 @@ use crate::fl::server::ServerConfig;
 use crate::fl::AlgorithmConfig;
 use crate::rng::ZParam;
 
-pub fn run(args: &Args) -> anyhow::Result<()> {
+pub fn run(args: &Args) -> crate::error::Result<()> {
     let workload = Workload::parse(args.str_or("dataset", "mnist"))
-        .ok_or_else(|| anyhow::anyhow!("--dataset mnist|emnist|cifar"))?;
+        .ok_or_else(|| crate::anyhow!("--dataset mnist|emnist|cifar"))?;
     banner(&format!("Figure 6 — Plateau criterion on {workload:?}"));
     let rounds = args.usize_or("rounds", 120);
     let repeats = args.usize_or("repeats", 2);
@@ -43,6 +43,7 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
         rounds,
         clients_per_round: cpr,
         eval_every: (rounds / 20).max(1),
+        parallelism: args.parallelism_or(1),
         ..Default::default()
     };
     for (algo, use_plateau) in [(&fixed, false), (&adaptive, true)] {

@@ -18,9 +18,12 @@ use crate::problems::least_squares::LeastSquares;
 use crate::rng::ZParam;
 use crate::util::stats::ols_slope;
 
-pub fn run(args: &Args) -> anyhow::Result<()> {
+pub fn run(args: &Args) -> crate::error::Result<()> {
     banner("Table 2 — stochastic sign-based methods: rates & uplink bits");
-    println!("{:<22} {:>18} {:>16} {:>14} {:>13}", "algorithm", "rate (metric)", "bits/round", "linear speedup", "local steps");
+    println!(
+        "{:<22} {:>18} {:>16} {:>14} {:>13}",
+        "algorithm", "rate (metric)", "bits/round", "linear speedup", "local steps"
+    );
     let rows = [
         ("SGD [22]", "O(t^-1/2) (sq l2)", "32d", "yes", "no"),
         ("FedAvg [37,55]", "O(t^-1/2) (sq l2)", "32d", "yes", "yes"),
@@ -41,7 +44,7 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
     empirical_rate_fit(args)
 }
 
-fn empirical_rate_fit(args: &Args) -> anyhow::Result<()> {
+fn empirical_rate_fit(args: &Args) -> crate::error::Result<()> {
     banner("Empirical rate fit: log E min_t ||grad f||^2 vs log tau");
     let repeats = args.usize_or("repeats", 3);
     let horizons: Vec<usize> = args
@@ -76,6 +79,7 @@ fn empirical_rate_fit(args: &Args) -> anyhow::Result<()> {
                     rounds: t,
                     eval_every: (t / 20).max(1),
                     seed: r as u64,
+                    parallelism: args.parallelism_or(1),
                     ..Default::default()
                 };
                 let run = run_experiment(&mut b, &algo, &cfg);

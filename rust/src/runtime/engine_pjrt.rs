@@ -1,0 +1,119 @@
+//! The real PJRT execution engine (feature `pjrt`).
+//!
+//! Pattern (see `/opt/xla-example/load_hlo/`): HLO *text* →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`. Executables are compiled once per
+//! artifact and cached for the lifetime of the [`Engine`].
+//!
+//! This module is the only place the `xla` crate is named; enabling the
+//! `pjrt` feature requires adding that dependency to `Cargo.toml` locally
+//! (it is not vendorable offline — see DESIGN.md §Runtime).
+
+use super::manifest::{ArtifactInfo, Dtype, Manifest};
+use super::Arg;
+use crate::error::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// PJRT engine: client + manifest + executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Cumulative PJRT execute calls (perf accounting).
+    pub num_executions: u64,
+}
+
+impl Engine {
+    /// Open the artifacts directory (must contain `manifest.json`).
+    pub fn open(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir).map_err(|e| anyhow!(e))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, manifest, cache: HashMap::new(), num_executions: 0 })
+    }
+
+    /// Compile (or fetch from cache) the executable for `name`.
+    fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let info = self.manifest.get(name).map_err(|e| anyhow!(e))?;
+        let proto = xla::HloModuleProto::from_text_file(
+            info.file.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text for {name}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe =
+            self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Validate `args` against the manifest signature.
+    fn check_args(info: &ArtifactInfo, args: &[Arg]) -> Result<()> {
+        if info.inputs.len() != args.len() {
+            bail!("{}: expected {} inputs, got {}", info.name, info.inputs.len(), args.len());
+        }
+        for (sig, arg) in info.inputs.iter().zip(args) {
+            let (dtype, len) = match arg {
+                Arg::F32(v) => (Dtype::F32, v.len()),
+                Arg::I32(v) => (Dtype::I32, v.len()),
+                Arg::U32(v) => (Dtype::U32, v.len()),
+                Arg::ScalarF32(_) => (Dtype::F32, 1),
+            };
+            if sig.dtype != dtype {
+                bail!("{}: input {:?} dtype mismatch", info.name, sig.name);
+            }
+            if sig.element_count() != len {
+                bail!(
+                    "{}: input {:?} expects {} elements, got {len}",
+                    info.name,
+                    sig.name,
+                    sig.element_count()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    fn to_literal(sig: &super::manifest::TensorSig, arg: &Arg) -> Result<xla::Literal> {
+        let dims: Vec<i64> = sig.shape.iter().map(|&s| s as i64).collect();
+        let lit = match arg {
+            Arg::F32(v) => xla::Literal::vec1(v),
+            Arg::I32(v) => xla::Literal::vec1(v),
+            Arg::U32(v) => xla::Literal::vec1(v),
+            Arg::ScalarF32(s) => return Ok(xla::Literal::scalar(*s)),
+        };
+        if dims.len() == 1 {
+            Ok(lit)
+        } else {
+            lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e}"))
+        }
+    }
+
+    /// Execute artifact `name` with `args`; returns the output literals
+    /// (tuple already decomposed).
+    pub fn run(&mut self, name: &str, args: &[Arg]) -> Result<Vec<xla::Literal>> {
+        self.ensure_compiled(name)?;
+        let info = self.manifest.get(name).map_err(|e| anyhow!(e))?.clone();
+        Self::check_args(&info, args)?;
+        let literals: Vec<xla::Literal> = info
+            .inputs
+            .iter()
+            .zip(args)
+            .map(|(sig, arg)| Self::to_literal(sig, arg))
+            .collect::<Result<_>>()?;
+        let exe = self.cache.get(name).unwrap();
+        let outs = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {name}"))?;
+        self.num_executions += 1;
+        // Lowered with return_tuple=True: single tuple output buffer.
+        let tuple = outs[0][0].to_literal_sync().context("fetching output")?;
+        let parts = tuple.to_tuple().map_err(|e| anyhow!("to_tuple: {e}"))?;
+        if parts.len() != info.outputs.len() {
+            bail!("{name}: expected {} outputs, got {}", info.outputs.len(), parts.len());
+        }
+        Ok(parts)
+    }
+}

@@ -1,0 +1,77 @@
+//! Offline execution engine: the default when the `pjrt` feature is off.
+//!
+//! The crate must build and test green with no external dependencies, so
+//! the PJRT client is stubbed out: manifest/metadata operations (everything
+//! `zsfa inspect` and the artifact tooling need) work normally, while any
+//! attempt to *execute* an artifact returns a descriptive error. Neural
+//! workloads (Fig. 3–17 drivers, `e2e_train`) need the real engine; the
+//! analytic-problem stack (Fig. 1/2, all unit/integration tests) never
+//! touches this path.
+
+use super::manifest::Manifest;
+use super::Arg;
+use crate::error::{anyhow, Result};
+use std::path::Path;
+
+/// Stand-in for `xla::Literal`. Never constructed: [`Engine::run`] always
+/// errors first, so the accessors exist purely to typecheck shared callers.
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    /// Matches `xla::Literal::to_vec`; unreachable without the pjrt feature.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(anyhow!("built without the `pjrt` feature: no literal data"))
+    }
+}
+
+/// Engine stub: manifest access without a PJRT client.
+pub struct Engine {
+    pub manifest: Manifest,
+    /// Cumulative PJRT execute calls (always 0 here).
+    pub num_executions: u64,
+}
+
+impl Engine {
+    /// Open the artifacts directory (must contain `manifest.json`).
+    pub fn open(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir).map_err(|e| anyhow!(e))?;
+        Ok(Engine { manifest, num_executions: 0 })
+    }
+
+    /// Always errors: executing artifacts needs the `pjrt` feature (which
+    /// requires the `xla` dependency — see DESIGN.md §Runtime).
+    pub fn run(&mut self, name: &str, _args: &[Arg]) -> Result<Vec<Literal>> {
+        Err(anyhow!(
+            "cannot execute artifact {name:?}: built without the `pjrt` feature \
+             (rebuild with `--features pjrt` after adding the xla dependency)"
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_missing_dir_is_error() {
+        assert!(Engine::open(Path::new("/definitely/not/artifacts")).is_err());
+    }
+
+    #[test]
+    fn run_reports_missing_feature() {
+        let dir = std::env::temp_dir().join("zsfa_stub_engine_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version": 1, "artifacts": []}"#,
+        )
+        .unwrap();
+        let mut engine = Engine::open(&dir).unwrap();
+        assert_eq!(engine.num_executions, 0);
+        let err = engine.run("anything", &[]).unwrap_err().to_string();
+        assert!(err.contains("pjrt"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

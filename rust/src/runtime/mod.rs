@@ -2,22 +2,36 @@
 //! client — the bridge between the Rust coordinator (L3) and the JAX/Pallas
 //! compute (L2/L1).
 //!
-//! Pattern (see `/opt/xla-example/load_hlo/`): HLO *text* →
-//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
-//! `PjRtClient::compile` → `execute`. Executables are compiled once per
-//! artifact and cached for the lifetime of the [`Engine`].
+//! The execution engine has two builds selected by the `pjrt` cargo feature:
+//!
+//! * [`engine_pjrt`] (feature on) — the real PJRT client over the `xla`
+//!   crate; compiles HLO text once per artifact and caches the executable.
+//! * [`engine_stub`] (default) — a dependency-free stand-in: manifest and
+//!   metadata tooling work, artifact *execution* returns an error. This
+//!   keeps the crate buildable offline; the analytic experiment stack never
+//!   executes artifacts.
+//!
+//! [`ModelRuntime`] and [`XlaBackend`] are engine-agnostic and compile
+//! against whichever `Engine` is selected.
 
 pub mod hlo_audit;
 pub mod manifest;
 
-use anyhow::{anyhow, bail, Context, Result};
-use manifest::{ArtifactInfo, Dtype, Manifest};
-use std::collections::HashMap;
-use std::path::Path;
+#[cfg(feature = "pjrt")]
+mod engine_pjrt;
+#[cfg(feature = "pjrt")]
+pub use engine_pjrt::Engine;
+
+#[cfg(not(feature = "pjrt"))]
+mod engine_stub;
+#[cfg(not(feature = "pjrt"))]
+pub use engine_stub::{Engine, Literal};
 
 use crate::data::{Dataset, FederatedDataset};
+use crate::error::{anyhow, bail, Result};
 use crate::fl::backend::{EvalResult, LocalOutcome, TrainBackend};
 use crate::rng::{Pcg64, ZParam};
+use std::path::Path;
 
 /// A typed input value for an artifact call.
 pub enum Arg<'a> {
@@ -25,107 +39,6 @@ pub enum Arg<'a> {
     I32(&'a [i32]),
     U32(&'a [u32]),
     ScalarF32(f32),
-}
-
-/// PJRT engine: client + manifest + executable cache.
-pub struct Engine {
-    client: xla::PjRtClient,
-    pub manifest: Manifest,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
-    /// Cumulative PJRT execute calls (perf accounting).
-    pub num_executions: u64,
-}
-
-impl Engine {
-    /// Open the artifacts directory (must contain `manifest.json`).
-    pub fn open(artifacts_dir: &Path) -> Result<Engine> {
-        let manifest = Manifest::load(artifacts_dir).map_err(|e| anyhow!(e))?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Engine { client, manifest, cache: HashMap::new(), num_executions: 0 })
-    }
-
-    /// Compile (or fetch from cache) the executable for `name`.
-    fn ensure_compiled(&mut self, name: &str) -> Result<()> {
-        if self.cache.contains_key(name) {
-            return Ok(());
-        }
-        let info = self.manifest.get(name).map_err(|e| anyhow!(e))?;
-        let proto = xla::HloModuleProto::from_text_file(
-            info.file.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .with_context(|| format!("parsing HLO text for {name}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe =
-            self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
-        self.cache.insert(name.to_string(), exe);
-        Ok(())
-    }
-
-    /// Validate `args` against the manifest signature.
-    fn check_args(info: &ArtifactInfo, args: &[Arg]) -> Result<()> {
-        if info.inputs.len() != args.len() {
-            bail!("{}: expected {} inputs, got {}", info.name, info.inputs.len(), args.len());
-        }
-        for (sig, arg) in info.inputs.iter().zip(args) {
-            let (dtype, len) = match arg {
-                Arg::F32(v) => (Dtype::F32, v.len()),
-                Arg::I32(v) => (Dtype::I32, v.len()),
-                Arg::U32(v) => (Dtype::U32, v.len()),
-                Arg::ScalarF32(_) => (Dtype::F32, 1),
-            };
-            if sig.dtype != dtype {
-                bail!("{}: input {:?} dtype mismatch", info.name, sig.name);
-            }
-            if sig.element_count() != len {
-                bail!(
-                    "{}: input {:?} expects {} elements, got {len}",
-                    info.name,
-                    sig.name,
-                    sig.element_count()
-                );
-            }
-        }
-        Ok(())
-    }
-
-    fn to_literal(sig: &manifest::TensorSig, arg: &Arg) -> Result<xla::Literal> {
-        let dims: Vec<i64> = sig.shape.iter().map(|&s| s as i64).collect();
-        let lit = match arg {
-            Arg::F32(v) => xla::Literal::vec1(v),
-            Arg::I32(v) => xla::Literal::vec1(v),
-            Arg::U32(v) => xla::Literal::vec1(v),
-            Arg::ScalarF32(s) => return Ok(xla::Literal::scalar(*s)),
-        };
-        if dims.len() == 1 {
-            Ok(lit)
-        } else {
-            lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e}"))
-        }
-    }
-
-    /// Execute artifact `name` with `args`; returns the output literals
-    /// (tuple already decomposed).
-    pub fn run(&mut self, name: &str, args: &[Arg]) -> Result<Vec<xla::Literal>> {
-        self.ensure_compiled(name)?;
-        let info = self.manifest.get(name).map_err(|e| anyhow!(e))?.clone();
-        Self::check_args(&info, args)?;
-        let literals: Vec<xla::Literal> = info
-            .inputs
-            .iter()
-            .zip(args)
-            .map(|(sig, arg)| Self::to_literal(sig, arg))
-            .collect::<Result<_>>()?;
-        let exe = self.cache.get(name).unwrap();
-        let outs = exe.execute::<xla::Literal>(&literals).with_context(|| format!("executing {name}"))?;
-        self.num_executions += 1;
-        // Lowered with return_tuple=True: single tuple output buffer.
-        let tuple = outs[0][0].to_literal_sync().context("fetching output")?;
-        let parts = tuple.to_tuple().map_err(|e| anyhow!("to_tuple: {e}"))?;
-        if parts.len() != info.outputs.len() {
-            bail!("{name}: expected {} outputs, got {}", info.outputs.len(), parts.len());
-        }
-        Ok(parts)
-    }
 }
 
 /// High-level handle over one model variant's artifacts.
@@ -203,7 +116,13 @@ impl ModelRuntime {
     }
 
     /// One SGD step; `params` is updated in place; returns the batch loss.
-    pub fn train_step(&mut self, params: &mut Vec<f32>, x: &[f32], y: &[i32], lr: f32) -> Result<f64> {
+    pub fn train_step(
+        &mut self,
+        params: &mut Vec<f32>,
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+    ) -> Result<f64> {
         let name = format!("{}_train_step", self.model);
         let outs = self.engine.run(
             &name,
@@ -245,7 +164,13 @@ impl ModelRuntime {
     /// Stochastic sign compression through the AOT Pallas kernel.
     /// `z`: `ZParam::Finite(k)` needs a `compress_z{k}` artifact; `Inf` maps
     /// to the `z0` (uniform) artifact.
-    pub fn compress(&mut self, delta: &[f32], z: ZParam, sigma: f32, rng: &mut Pcg64) -> Result<Vec<i8>> {
+    pub fn compress(
+        &mut self,
+        delta: &[f32],
+        z: ZParam,
+        sigma: f32,
+        rng: &mut Pcg64,
+    ) -> Result<Vec<i8>> {
         let name = format!("{}_compress_z{}", self.model, z_tag(z));
         let key = [rng.next_u32(), rng.next_u32()];
         let outs =
@@ -281,6 +206,10 @@ fn z_tag(z: ZParam) -> u32 {
 
 /// `TrainBackend` over a [`ModelRuntime`] plus a federated dataset — the
 /// neural-workload backend used by the Fig. 3–17 drivers.
+///
+/// Inherently stateful (executable cache, scratch batch buffers), so it does
+/// not expose a parallel view: `fl::engine::RoundEngine` runs its clients on
+/// the deterministic sequential path and the `parallelism` knob is a no-op.
 pub struct XlaBackend {
     pub runtime: ModelRuntime,
     pub fed: FederatedDataset,
@@ -298,7 +227,12 @@ pub struct XlaBackend {
 }
 
 impl XlaBackend {
-    pub fn new(runtime: ModelRuntime, fed: FederatedDataset, test: Dataset, init: Vec<f32>) -> Self {
+    pub fn new(
+        runtime: ModelRuntime,
+        fed: FederatedDataset,
+        test: Dataset,
+        init: Vec<f32>,
+    ) -> Self {
         assert_eq!(init.len(), runtime.param_count);
         let (h, w, c) = runtime.input_shape;
         assert_eq!(fed.data.shape, (h, w, c), "dataset/model shape mismatch");

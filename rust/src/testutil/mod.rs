@@ -42,7 +42,8 @@ where
         let input = gen(&mut rng, size);
         if let Err(msg) = prop(&input) {
             panic!(
-                "property failed at case {case}/{} (seed {:#x}, size {size}):\n  {msg}\n  input: {input:?}",
+                "property failed at case {case}/{} (seed {:#x}, size {size}):\n  \
+                 {msg}\n  input: {input:?}",
                 cfg.cases, cfg.seed
             );
         }

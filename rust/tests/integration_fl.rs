@@ -10,6 +10,7 @@ use zsignfedavg::fl::metrics::aggregate;
 use zsignfedavg::fl::server::{run_experiment, ServerConfig};
 use zsignfedavg::fl::AlgorithmConfig;
 use zsignfedavg::problems::consensus::Consensus;
+use zsignfedavg::problems::least_squares::LeastSquares;
 use zsignfedavg::problems::logistic::Logistic;
 use zsignfedavg::problems::AnalyticProblem;
 use zsignfedavg::rng::{Pcg64, ZParam};
@@ -200,6 +201,43 @@ fn repeats_aggregate_sanely() {
     assert!(same.objective_std.iter().all(|&s| s == 0.0));
     let diff = aggregate(&[run_seed(1), run_seed(2), run_seed(3)]);
     assert!(diff.objective_std.iter().skip(1).any(|&s| s > 0.0));
+}
+
+/// The round engine's cross-module contract: the `parallelism` knob never
+/// changes the result — here with stochastic minibatch gradients, E > 1
+/// local steps *and* partial participation in the mix, the adversarial case
+/// for any hidden execution-order dependence.
+#[test]
+fn parallelism_never_changes_results() {
+    let algo = AlgorithmConfig::z_signfedavg(ZParam::Finite(1), 2.0, 3).with_lrs(0.02, 1.0);
+    let run = |par: usize| {
+        let mut b =
+            AnalyticBackend::new(LeastSquares::generate(12, 40, 15, 0.5, 0.5, 3)).stochastic();
+        let cfg = ServerConfig {
+            rounds: 10,
+            eval_every: 2,
+            seed: 21,
+            parallelism: par,
+            clients_per_round: Some(6),
+            ..Default::default()
+        };
+        run_experiment(&mut b, &algo, &cfg)
+    };
+    let base = run(1);
+    assert!(base.final_objective().is_finite());
+    for par in [2usize, 8] {
+        let r = run(par);
+        assert_eq!(base.records.len(), r.records.len());
+        for (a, b) in base.records.iter().zip(&r.records) {
+            assert_eq!(a.objective.to_bits(), b.objective.to_bits(), "par={par}");
+            assert_eq!(
+                a.grad_norm_sq.map(f64::to_bits),
+                b.grad_norm_sq.map(f64::to_bits),
+                "par={par}"
+            );
+            assert_eq!(a.bits_up, b.bits_up, "par={par}");
+        }
+    }
 }
 
 /// DP pipeline on a convex problem: smaller noise (=> larger eps) gives a

@@ -67,7 +67,11 @@ fn compress_artifact_statistics_match_theory() {
     let x0 = 1.0f32;
     let sigma = 10.0f32;
     let delta = vec![x0; d];
-    for (name, z) in [("test_compress_d4096_z1", ZParam::Finite(1)), ("test_compress_d4096_z0", ZParam::Inf), ("test_compress_d4096_z2", ZParam::Finite(2))] {
+    for (name, z) in [
+        ("test_compress_d4096_z1", ZParam::Finite(1)),
+        ("test_compress_d4096_z0", ZParam::Inf),
+        ("test_compress_d4096_z2", ZParam::Finite(2)),
+    ] {
         let mut plus = 0usize;
         let reps = 8;
         for k in 0..reps {
@@ -135,10 +139,8 @@ fn fused_local_update_matches_unrolled_steps() {
     let mut p_loop = init;
     let mut losses = Vec::new();
     for s in 0..e {
-        losses.push(
-            rt.train_step(&mut p_loop, &xs[s * b * l..(s + 1) * b * l], &ys[s * b..(s + 1) * b], 0.05)
-                .unwrap(),
-        );
+        let (xb, yb) = (&xs[s * b * l..(s + 1) * b * l], &ys[s * b..(s + 1) * b]);
+        losses.push(rt.train_step(&mut p_loop, xb, yb, 0.05).unwrap());
     }
     let max_diff = p_fused
         .iter()
