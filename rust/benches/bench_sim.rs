@@ -1,0 +1,45 @@
+//! Bench: scenario-planning throughput — events/second through the
+//! deterministic discrete-event queue when a round over-selects a
+//! 13k-candidate cohort (10k target) from a 20k-device fleet.
+//!
+//! Each planned round pushes every reachable candidate through the
+//! download → compute → upload chain (3 events) plus dropout events, so a
+//! round is ~40k scheduler operations. This is the coordinator-side cost
+//! of scenario participation; it must stay negligible next to the clients'
+//! local updates.
+//!
+//! Run with `cargo bench --bench bench_sim`.
+
+use zsignfedavg::bench::{bench, BenchConfig};
+use zsignfedavg::fl::engine::ParticipationPolicy;
+use zsignfedavg::rng::Pcg64;
+use zsignfedavg::sim::{ByzantineMode, FleetPreset, ScenarioConfig, ScenarioPolicy};
+
+fn main() {
+    let cfg = BenchConfig { warmup_time_s: 0.3, samples: 12, min_batch_time_s: 0.05 };
+    let n = 20_000;
+    let sc = ScenarioConfig {
+        target_cohort: 10_000,
+        overselect: 1.3,
+        deadline_s: 10.0,
+        round_latency_s: 0.3,
+        dropout_prob: 0.1,
+        byzantine_frac: 0.1,
+        byzantine_mode: ByzantineMode::SignFlip,
+        fleet: FleetPreset::CrossDevice,
+    };
+    let root = Pcg64::new(7, 0xa11ce);
+    // 100 kbit sign uplink, 3.2 Mbit dense downlink (d = 100k coords).
+    let mut policy = ScenarioPolicy::new(sc, n, 2, 100_000, 3_200_000, &root);
+    let mut rounds = 0usize;
+    let r = bench("sim/plan_round/10k-cohort", cfg, || {
+        let plan = policy.plan_round(rounds, &root);
+        std::hint::black_box(plan.participants.len());
+        rounds += 1;
+    });
+    let events_per_round = policy.events_processed() as f64 / rounds.max(1) as f64;
+    println!("{}", r.report_throughput(events_per_round, "events"));
+    println!(
+        "({events_per_round:.0} events per planned round; cohort 13000 of {n} devices)"
+    );
+}

@@ -75,6 +75,12 @@ impl Args {
             .unwrap_or(default)
     }
 
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.flag(key)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{key}: bad float {s:?}")))
+            .unwrap_or(default)
+    }
+
     pub fn u64_or(&self, key: &str, default: u64) -> u64 {
         self.flag(key)
             .map(|s| s.parse().unwrap_or_else(|_| panic!("--{key}: bad integer {s:?}")))
@@ -116,6 +122,8 @@ mod tests {
         let a = parse("run --rounds 100 --sigma=0.05 --verbose --seed 7");
         assert_eq!(a.usize_or("rounds", 0), 100);
         assert_eq!(a.f32_or("sigma", 0.0), 0.05);
+        assert_eq!(a.f64_or("sigma", 0.0), 0.05);
+        assert_eq!(a.f64_or("missing", 2.5), 2.5);
         assert!(a.has("verbose"));
         assert_eq!(a.str_or("verbose", "false"), "true");
         assert_eq!(a.u64_or("seed", 0), 7);

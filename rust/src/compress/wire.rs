@@ -42,6 +42,9 @@ pub enum WireError {
     Truncated,
     BadChecksum,
     BadTag(u8),
+    /// Frame is well-sized and checksummed but its contents are
+    /// unrepresentable (e.g. a sparse index outside the claimed dimension).
+    Corrupt,
 }
 
 impl std::fmt::Display for WireError {
@@ -50,6 +53,7 @@ impl std::fmt::Display for WireError {
             WireError::Truncated => write!(f, "truncated frame"),
             WireError::BadChecksum => write!(f, "checksum mismatch"),
             WireError::BadTag(t) => write!(f, "unknown message tag {t}"),
+            WireError::Corrupt => write!(f, "malformed frame contents"),
         }
     }
 }
@@ -170,6 +174,17 @@ pub fn encode(msg: &Message) -> Vec<u8> {
 }
 
 /// Parse a framed byte buffer back into a message.
+///
+/// Hardened against adversarial frames: every length field is validated
+/// against the actual payload size in wide (u128) arithmetic *before* any
+/// allocation or slicing, so a hostile 2^64-element length can neither
+/// overflow an offset computation nor make *this function* allocate
+/// beyond O(payload). A frame that survives the checksum but lies about
+/// its lengths is `Truncated`; one whose sparse indices fall outside the
+/// claimed dimension is `Corrupt` (so `SparseMessage::decode_into` can
+/// never scatter out of bounds). The sparse `dim` itself is metadata the
+/// frame cannot prove — callers sizing dense buffers from it must still
+/// bound it against their model dimension.
 pub fn decode(bytes: &[u8]) -> Result<Message, WireError> {
     if bytes.len() < 13 {
         return Err(WireError::Truncated);
@@ -180,14 +195,17 @@ pub fn decode(bytes: &[u8]) -> Result<Message, WireError> {
         return Err(WireError::BadChecksum);
     }
     let tag = body[0];
-    let d = u64::from_le_bytes(body[1..9].try_into().unwrap()) as usize;
+    let d64 = u64::from_le_bytes(body[1..9].try_into().unwrap());
     let payload = &body[9..];
+    let avail = payload.len() as u128;
     match tag {
         TAG_SIGNS => {
-            let words = d.div_ceil(64);
-            if payload.len() != words * 8 {
+            // ceil(d/64) whole u64 words; validates d before the alloc.
+            let words = (d64 as u128).div_ceil(64);
+            if avail != words * 8 {
                 return Err(WireError::Truncated);
             }
+            let d = d64 as usize;
             let mut signs = vec![0i8; d];
             for (j, s) in signs.iter_mut().enumerate() {
                 let w = u64::from_le_bytes(payload[j / 64 * 8..j / 64 * 8 + 8].try_into().unwrap());
@@ -202,8 +220,13 @@ pub fn decode(bytes: &[u8]) -> Result<Message, WireError> {
             let norm = f32::from_le_bytes(payload[0..4].try_into().unwrap());
             let s = u32::from_le_bytes(payload[4..8].try_into().unwrap());
             let nbits = 1 + bits_per_level(s) as u32;
+            // d levels at nbits each must fit the remaining bytes (the
+            // encoder pads to a whole byte, hence `>` not `!=`).
+            if d64 as u128 * nbits as u128 > (avail - 8) * 8 {
+                return Err(WireError::Truncated);
+            }
             let mut br = BitReader::new(&payload[8..]);
-            let mut levels = vec![0i16; d];
+            let mut levels = vec![0i16; d64 as usize];
             for l in levels.iter_mut() {
                 let v = br.pull(nbits)?;
                 let mag = (v >> 1) as i16;
@@ -212,7 +235,7 @@ pub fn decode(bytes: &[u8]) -> Result<Message, WireError> {
             Ok(Message::Quantized(Quantized { norm, levels, s }))
         }
         TAG_DENSE => {
-            if payload.len() != d * 4 {
+            if avail != d64 as u128 * 4 {
                 return Err(WireError::Truncated);
             }
             let v = payload
@@ -225,22 +248,30 @@ pub fn decode(bytes: &[u8]) -> Result<Message, WireError> {
             if payload.len() < 9 {
                 return Err(WireError::Truncated);
             }
-            let k = u64::from_le_bytes(payload[0..8].try_into().unwrap()) as usize;
+            let k64 = u64::from_le_bytes(payload[0..8].try_into().unwrap());
             let sign_coded = payload[8] != 0;
-            let mut pos = 9;
-            if payload.len() < pos + 4 * k {
+            // Minimum size before touching any offset: k u32 indices plus
+            // either (shared scale + k sign bits) or k f32 values.
+            let need = if sign_coded {
+                9 + k64 as u128 * 4 + 4 + (k64 as u128).div_ceil(8)
+            } else {
+                9 + k64 as u128 * 8
+            };
+            if need > avail || k64 as u128 > d64 as u128 {
                 return Err(WireError::Truncated);
             }
+            let k = k64 as usize;
+            let mut pos = 9;
             let idx: Vec<u32> = (0..k)
                 .map(|j| {
                     u32::from_le_bytes(payload[pos + 4 * j..pos + 4 * j + 4].try_into().unwrap())
                 })
                 .collect();
+            if idx.iter().any(|&i| i as u64 >= d64) {
+                return Err(WireError::Corrupt);
+            }
             pos += 4 * k;
             let vals: Vec<f32> = if sign_coded {
-                if payload.len() < pos + 4 {
-                    return Err(WireError::Truncated);
-                }
                 let scale = f32::from_le_bytes(payload[pos..pos + 4].try_into().unwrap());
                 pos += 4;
                 let mut br = BitReader::new(&payload[pos..]);
@@ -248,9 +279,6 @@ pub fn decode(bytes: &[u8]) -> Result<Message, WireError> {
                     .map(|_| br.pull(1).map(|b| if b == 1 { -scale } else { scale }))
                     .collect::<Result<_, _>>()?
             } else {
-                if payload.len() < pos + 4 * k {
-                    return Err(WireError::Truncated);
-                }
                 (0..k)
                     .map(|j| {
                         let raw = payload[pos + 4 * j..pos + 4 * j + 4].try_into().unwrap();
@@ -259,7 +287,7 @@ pub fn decode(bytes: &[u8]) -> Result<Message, WireError> {
                     .collect()
             };
             Ok(Message::Sparse(crate::compress::sparsify::SparseMessage {
-                dim: d,
+                dim: d64 as usize,
                 idx,
                 vals,
                 sign_coded,
@@ -386,6 +414,172 @@ mod tests {
                 _ => panic!(),
             }
         }
+    }
+
+    /// One valid frame per tag (signs, qsgd, dense, sparse sign-coded,
+    /// sparse raw-valued) for the adversarial suites below.
+    fn frames_of_every_tag() -> Vec<Vec<u8>> {
+        use crate::compress::sparsify::{SparseSign, TopK};
+        use crate::rng::ZParam;
+        let mut rng = Pcg64::seeded(0xad5e_c0de);
+        let x = gen_vec_f32(&mut rng, 130, 2.0);
+        vec![
+            encode(&StochasticSign::deterministic().compress(&x, &mut rng)),
+            encode(&Qsgd::new(4).compress(&x, &mut rng)),
+            encode(&Message::Dense(x.clone())),
+            encode(&SparseSign::new(0.1, ZParam::Finite(1), 0.2).compress(&x, &mut rng)),
+            encode(&TopK::new(0.1).compress(&x, &mut rng)),
+        ]
+    }
+
+    /// Frame a raw body (tag + length + payload) with a valid checksum, so
+    /// tests reach the per-tag validation rather than the checksum gate.
+    fn frame_with_valid_checksum(body: &[u8]) -> Vec<u8> {
+        let mut out = body.to_vec();
+        out.extend_from_slice(&super::fnv1a(body).to_le_bytes());
+        out
+    }
+
+    #[test]
+    fn truncated_at_every_length_is_an_error() {
+        // Every proper prefix of every tag's frame must decode to Err —
+        // never a panic, never a bogus Ok.
+        for frame in frames_of_every_tag() {
+            for len in 0..frame.len() {
+                assert!(
+                    decode(&frame[..len]).is_err(),
+                    "prefix {len}/{} of tag {} decoded",
+                    frame.len(),
+                    frame[0]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn every_single_byte_flip_is_detected() {
+        // FNV-1a folds every byte, so any single-byte corruption —
+        // including in the checksum itself — must surface as an error.
+        // Covers all four tags (TAG_SPARSE in both value codings).
+        for frame in frames_of_every_tag() {
+            for pos in 0..frame.len() {
+                for mask in [0x01u8, 0x80] {
+                    let mut bad = frame.clone();
+                    bad[pos] ^= mask;
+                    assert!(
+                        decode(&bad).is_err(),
+                        "flip {mask:#x} at {pos} in tag {} went undetected",
+                        frame[0]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn flipped_checksum_bytes_report_bad_checksum() {
+        let frame = &frames_of_every_tag()[0];
+        for back in 1..=4 {
+            let mut bad = frame.clone();
+            let pos = frame.len() - back;
+            bad[pos] ^= 0xff;
+            assert_eq!(decode(&bad).unwrap_err(), WireError::BadChecksum, "byte -{back}");
+        }
+    }
+
+    #[test]
+    fn unknown_tags_rejected_for_any_tag_byte() {
+        for tag in [0u8, 5, 77, 255] {
+            let mut body = vec![tag];
+            body.extend_from_slice(&0u64.to_le_bytes());
+            let frame = frame_with_valid_checksum(&body);
+            assert_eq!(decode(&frame).unwrap_err(), WireError::BadTag(tag), "tag {tag}");
+        }
+    }
+
+    #[test]
+    fn length_field_overflow_cannot_allocate_or_wrap() {
+        // d = u64::MAX with a tiny payload and a *valid* checksum: the
+        // length validation must reject it before any offset arithmetic
+        // (usize overflow) or allocation (OOM) can happen. (TAG_SPARSE's
+        // second length field gets its own overflow test below.)
+        for tag in [TAG_SIGNS, TAG_QSGD, TAG_DENSE] {
+            for d in [u64::MAX, u64::MAX / 4, (u32::MAX as u64) + 1] {
+                let mut body = vec![tag];
+                body.extend_from_slice(&d.to_le_bytes());
+                // Enough payload to pass the per-tag minimum-size checks.
+                body.extend_from_slice(&[0u8; 16]);
+                let frame = frame_with_valid_checksum(&body);
+                assert_eq!(
+                    decode(&frame).unwrap_err(),
+                    WireError::Truncated,
+                    "tag {tag} d {d}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_count_field_overflow_rejected() {
+        // TAG_SPARSE carries a second length (k): a hostile k near
+        // u64::MAX must be caught by the wide-arithmetic size check, in
+        // both value codings.
+        for sign_coded in [0u8, 1] {
+            for k in [u64::MAX, u64::MAX / 4 - 2, 1u64 << 62] {
+                let mut body = vec![TAG_SPARSE];
+                body.extend_from_slice(&1000u64.to_le_bytes()); // plausible d
+                body.extend_from_slice(&k.to_le_bytes());
+                body.push(sign_coded);
+                body.extend_from_slice(&[0u8; 64]);
+                let frame = frame_with_valid_checksum(&body);
+                assert_eq!(
+                    decode(&frame).unwrap_err(),
+                    WireError::Truncated,
+                    "sign_coded {sign_coded} k {k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_out_of_range_index_rejected() {
+        // A checksummed frame claiming dim = 100 but carrying idx = 5000
+        // must fail decode, or SparseMessage::decode_into would scatter
+        // out of bounds in the consumer.
+        let mut body = vec![TAG_SPARSE];
+        body.extend_from_slice(&100u64.to_le_bytes()); // d = 100
+        body.extend_from_slice(&1u64.to_le_bytes()); // k = 1
+        body.push(0); // raw f32 coding
+        body.extend_from_slice(&5000u32.to_le_bytes()); // idx out of range
+        body.extend_from_slice(&1.5f32.to_le_bytes()); // value
+        let frame = frame_with_valid_checksum(&body);
+        assert_eq!(decode(&frame).unwrap_err(), WireError::Corrupt);
+    }
+
+    #[test]
+    fn sparse_count_exceeding_dim_rejected() {
+        // k > d is unrepresentable by any honest encoder (top-k of d
+        // coordinates): a frame claiming it must not decode.
+        let mut body = vec![TAG_SPARSE];
+        body.extend_from_slice(&2u64.to_le_bytes()); // d = 2
+        body.extend_from_slice(&3u64.to_le_bytes()); // k = 3 > d
+        body.push(0);
+        body.extend_from_slice(&[0u8; 24]); // 3 idx + 3 vals = 24 bytes
+        let frame = frame_with_valid_checksum(&body);
+        assert_eq!(decode(&frame).unwrap_err(), WireError::Truncated);
+    }
+
+    #[test]
+    fn qsgd_undersized_bitstream_rejected() {
+        // Claim d = 1000 levels but ship only 4 payload bytes of stream:
+        // the bit-budget check must fire before the level alloc.
+        let mut body = vec![TAG_QSGD];
+        body.extend_from_slice(&1000u64.to_le_bytes());
+        body.extend_from_slice(&1.0f32.to_le_bytes()); // norm
+        body.extend_from_slice(&4u32.to_le_bytes()); // s
+        body.extend_from_slice(&[0u8; 4]);
+        let frame = frame_with_valid_checksum(&body);
+        assert_eq!(decode(&frame).unwrap_err(), WireError::Truncated);
     }
 
     #[test]

@@ -22,12 +22,19 @@
 //! below and in `tests/integration_fl.rs`); stateful backends (PJRT) run on
 //! the sequential path, where the compression hook may call back into the
 //! backend, and the knob is a no-op.
+//!
+//! Who participates each round is delegated to a [`ParticipationPolicy`]:
+//! [`UniformPolicy`] reproduces the historical `clients_per_round` shuffle
+//! bit-for-bit, and `sim::ScenarioPolicy` plans rounds through the
+//! client-lifecycle simulator (deadlines, dropouts, byzantine clients).
+//! Policies run sequentially on the coordinator before any task is
+//! spawned, so they cannot break the parallelism contract.
 
 use super::algorithms::{AlgorithmConfig, Compression, ServerOpt};
 use super::backend::{LocalOutcome, ParallelBackend, TrainBackend};
 use super::metrics::{RoundRecord, RunResult};
 use super::plateau::PlateauController;
-use super::server::ServerConfig;
+use super::server::{Participation, ServerConfig};
 use crate::compress::error_feedback::EfState;
 use crate::compress::pack::{PackedSigns, VoteAccumulator};
 use crate::compress::qsgd::Qsgd;
@@ -35,10 +42,91 @@ use crate::compress::sign::{SigmaRule, StochasticSign};
 use crate::compress::sparsify::{SparseSign, TopK};
 use crate::compress::{Compressor, Message};
 use crate::rng::Pcg64;
+use crate::sim::{ByzantineMode, ScenarioPolicy};
 use crate::tensor;
 use crate::util::Timer;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+
+/// What happened to one *selected* client by the time its round closed.
+///
+/// Only `Arrived` clients are aggregated; the other outcomes exist so
+/// scenario drivers can report cohort attrition (and so `RoundRecord` can
+/// count `arrived` vs `selected`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ClientOutcome {
+    /// Report landed in time and was aggregated (arrival time, sim s).
+    Arrived { at_s: f64 },
+    /// Still mid-round when the round closed: a deadline miss, or an
+    /// over-selected report discarded by an early close.
+    Straggler { projected_s: f64 },
+    /// Aborted mid-round (connection loss, app evicted, battery).
+    DroppedOut { at_s: f64 },
+    /// Unreachable when the cohort was drawn; never started.
+    Unavailable,
+}
+
+/// One aggregated participant: the global client id plus the fault (if
+/// any) the client applies to its own update before compressing. The fault
+/// is applied inside the client task — a pure per-`(round, client)`
+/// transform — so it composes with the parallelism contract.
+#[derive(Debug, Clone, Copy)]
+pub struct Participant {
+    pub client: usize,
+    pub fault: Option<ByzantineMode>,
+}
+
+/// A planned round: who reports (in deterministic aggregation order), what
+/// happened to every selected client, and how long the round took in
+/// simulated time.
+#[derive(Debug, Clone)]
+pub struct RoundPlan {
+    /// Clients whose reports are aggregated, in reduce order.
+    pub participants: Vec<Participant>,
+    /// Every selected client with its outcome (superset of participants).
+    pub outcomes: Vec<(usize, ClientOutcome)>,
+    /// Selected clients that completed the model download before the round
+    /// closed — the number the engine bills downlink traffic for.
+    pub downloads: usize,
+    /// Simulated duration of the round, seconds (0 for `UniformPolicy`).
+    pub duration_s: f64,
+}
+
+/// Strategy deciding, per round, which clients participate. Implementors
+/// must be deterministic given `(t, root)` — the engine calls this once per
+/// round on the coordinator thread, before any client task runs.
+pub trait ParticipationPolicy {
+    fn plan_round(&mut self, t: usize, root: &Pcg64) -> RoundPlan;
+}
+
+/// The historical sampler: `m` of `n` clients uniformly without
+/// replacement (everyone when `m == n`), every report arrives instantly.
+/// Stream derivation (`root.split(2t + 1)`) is part of the reproducibility
+/// contract — every seeded experiment in the repo depends on it.
+pub struct UniformPolicy {
+    pub n: usize,
+    pub m: usize,
+}
+
+impl ParticipationPolicy for UniformPolicy {
+    fn plan_round(&mut self, t: usize, root: &Pcg64) -> RoundPlan {
+        let mut sample_rng = root.split(t as u64 * 2 + 1);
+        let ids: Vec<usize> = if self.m == self.n {
+            (0..self.n).collect()
+        } else {
+            sample_rng.sample_without_replacement(self.n, self.m)
+        };
+        RoundPlan {
+            outcomes: ids.iter().map(|&c| (c, ClientOutcome::Arrived { at_s: 0.0 })).collect(),
+            downloads: ids.len(),
+            participants: ids
+                .into_iter()
+                .map(|client| Participant { client, fault: None })
+                .collect(),
+            duration_s: 0.0,
+        }
+    }
+}
 
 /// One client's unit of work for a round: the participant slot it fills
 /// (which fixes the reduce order), the client id, and the pre-split RNG
@@ -142,8 +230,10 @@ impl<'a> RoundEngine<'a> {
         let m_per_round = self.cfg.clients_per_round.unwrap_or(n).min(n);
         assert!(m_per_round >= 1);
         if matches!(self.algo.compression, Compression::ErrorFeedback) {
+            let full = matches!(self.cfg.participation, Participation::Uniform)
+                && m_per_round == n;
             assert!(
-                m_per_round == n,
+                full,
                 "EF-SignSGD cannot track residuals under partial participation (paper §1.1)"
             );
         }
@@ -165,87 +255,123 @@ impl<'a> RoundEngine<'a> {
         let mut params = backend.init_params();
         assert_eq!(params.len(), self.d);
         let root = Pcg64::new(self.cfg.seed, 0xa11ce);
+        let mut policy: Box<dyn ParticipationPolicy> = match &self.cfg.participation {
+            Participation::Uniform => Box::new(UniformPolicy { n, m: m_per_round }),
+            Participation::Simulated(sc) => {
+                let up_bits = crate::sim::nominal_uplink_bits(&self.algo.compression, self.d);
+                let down_bits = if self.cfg.downlink_sign.is_some() {
+                    self.d as u64
+                } else {
+                    32 * self.d as u64
+                };
+                Box::new(ScenarioPolicy::new(
+                    sc.clone(),
+                    n,
+                    self.algo.local_steps,
+                    up_bits,
+                    down_bits,
+                    &root,
+                ))
+            }
+        };
         let mut records = Vec::new();
+        let mut sim_time_s = 0.0f64;
 
         for t in 0..self.cfg.rounds {
             let timer = Timer::start();
-            // 1. Participant sampling (uniform, without replacement).
-            let mut sample_rng = root.split(t as u64 * 2 + 1);
-            let participants: Vec<usize> = if m_per_round == n {
-                (0..n).collect()
+            // 1. Participation: the policy decides who reports this round
+            //    (and what happened to everyone else it selected).
+            let plan = policy.plan_round(t, &root);
+            let arrived = plan.participants.len();
+            let selected = plan.outcomes.len();
+            sim_time_s += plan.duration_s;
+
+            // Downlink accounting: bill only clients that actually finished
+            // downloading the model before the round closed (d bits per
+            // coordinate compressed, 32·d uncompressed) — not unreachable
+            // candidates, and not clients cut off mid-download.
+            let down_per_client = if self.cfg.downlink_sign.is_some() {
+                self.d
             } else {
-                sample_rng.sample_without_replacement(n, m_per_round)
+                32 * self.d
             };
+            self.bits_down += (plan.downloads * down_per_client) as u64;
 
             // Effective sigma this round (plateau overrides the fixed value).
             let round_sigma = effective_sigma(self.algo, self.plateau.as_ref());
 
             // 2–4. Local updates + compression + deterministic reduce.
-            let loss_sum =
-                self.run_clients(backend, &root, t, &params, &participants, round_sigma);
-
-            // 5. Aggregate + server step.
-            let step_scale = match &self.algo.compression {
-                // Alg. 2 applies η to the mean sign of *model diffs* (no γ).
-                Compression::DpSign { .. } => self.algo.server_lr,
-                // DP-FedAvg likewise averages model diffs directly.
-                Compression::DpDense { .. } => self.algo.server_lr,
-                // Alg. 1 line 15: η·γ·mean(Δ).
-                _ => self.algo.server_lr * self.algo.client_lr,
+            let loss_sum = if arrived > 0 {
+                self.run_clients(backend, &root, t, &params, &plan.participants, round_sigma)
+            } else {
+                0.0
             };
-            if self.algo.compression.is_sign() {
-                self.votes.mean_into(1.0, &mut self.update);
-            } else {
-                self.update.copy_from_slice(&self.dense_acc);
-            }
-            // Optional downlink compression: broadcast the update itself as
-            // a dequantized stochastic sign (applied server-side too, so the
-            // global iterate equals what the clients reconstruct).
-            if let Some((z, sigma_d)) = self.cfg.downlink_sign {
-                let mut drng = root.split((t as u64) | 0x4000_0000_0000_0000);
-                let mut comp = StochasticSign::new(z, SigmaRule::Fixed(sigma_d));
-                comp.compress_into(&self.update.clone(), &mut drng, &mut self.signs_buf);
-                let scale = (z.eta() as f32) * sigma_d;
-                for (u, &s) in self.update.iter_mut().zip(&self.signs_buf) {
-                    *u = scale * s as f32;
+
+            // 5. Aggregate + server step. When nobody reported (every
+            //    selected client dropped, missed the deadline or was
+            //    unreachable) the model simply doesn't move this round.
+            if arrived > 0 {
+                let step_scale = match &self.algo.compression {
+                    // Alg. 2 applies η to the mean sign of *model diffs* (no γ).
+                    Compression::DpSign { .. } => self.algo.server_lr,
+                    // DP-FedAvg likewise averages model diffs directly.
+                    Compression::DpDense { .. } => self.algo.server_lr,
+                    // Alg. 1 line 15: η·γ·mean(Δ).
+                    _ => self.algo.server_lr * self.algo.client_lr,
+                };
+                if self.algo.compression.is_sign() {
+                    self.votes.mean_into(1.0, &mut self.update);
+                } else {
+                    self.update.copy_from_slice(&self.dense_acc);
                 }
-                self.bits_down += (participants.len() * self.d) as u64;
-            } else {
-                self.bits_down += (participants.len() * self.d * 32) as u64;
-            }
-            match self.algo.server_opt {
-                ServerOpt::Sgd => tensor::axpy(-step_scale, &self.update, &mut params),
-                ServerOpt::Momentum(beta) => {
-                    // Server momentum: m ← β·m + agg; x ← x − scale·m.
-                    for (mb, &u) in self.momentum_buf.iter_mut().zip(&self.update) {
-                        *mb = beta * *mb + u;
+                // Optional downlink compression: broadcast the update itself
+                // as a dequantized stochastic sign (applied server-side too,
+                // so the global iterate equals what the clients reconstruct).
+                if let Some((z, sigma_d)) = self.cfg.downlink_sign {
+                    let mut drng = root.split((t as u64) | 0x4000_0000_0000_0000);
+                    let mut comp = StochasticSign::new(z, SigmaRule::Fixed(sigma_d));
+                    comp.compress_into(&self.update.clone(), &mut drng, &mut self.signs_buf);
+                    let scale = (z.eta() as f32) * sigma_d;
+                    for (u, &s) in self.update.iter_mut().zip(&self.signs_buf) {
+                        *u = scale * s as f32;
                     }
-                    tensor::axpy(-step_scale, &self.momentum_buf, &mut params);
                 }
-                ServerOpt::Adam { beta1, beta2, eps } => {
-                    // FedAdam (Reddi et al. '20) with bias correction.
-                    self.adam_t += 1;
-                    let bc1 = 1.0 - beta1.powi(self.adam_t as i32);
-                    let bc2 = 1.0 - beta2.powi(self.adam_t as i32);
-                    for ((p, mb), (vb, &u)) in params
-                        .iter_mut()
-                        .zip(self.momentum_buf.iter_mut())
-                        .zip(self.adam_v.iter_mut().zip(&self.update))
-                    {
-                        *mb = beta1 * *mb + (1.0 - beta1) * u;
-                        *vb = beta2 * *vb + (1.0 - beta2) * u * u;
-                        let mhat = *mb / bc1;
-                        let vhat = *vb / bc2;
-                        *p -= step_scale * mhat / (vhat.sqrt() + eps);
+                match self.algo.server_opt {
+                    ServerOpt::Sgd => tensor::axpy(-step_scale, &self.update, &mut params),
+                    ServerOpt::Momentum(beta) => {
+                        // Server momentum: m ← β·m + agg; x ← x − scale·m.
+                        for (mb, &u) in self.momentum_buf.iter_mut().zip(&self.update) {
+                            *mb = beta * *mb + u;
+                        }
+                        tensor::axpy(-step_scale, &self.momentum_buf, &mut params);
                     }
+                    ServerOpt::Adam { beta1, beta2, eps } => {
+                        // FedAdam (Reddi et al. '20) with bias correction.
+                        self.adam_t += 1;
+                        let bc1 = 1.0 - beta1.powi(self.adam_t as i32);
+                        let bc2 = 1.0 - beta2.powi(self.adam_t as i32);
+                        for ((p, mb), (vb, &u)) in params
+                            .iter_mut()
+                            .zip(self.momentum_buf.iter_mut())
+                            .zip(self.adam_v.iter_mut().zip(&self.update))
+                        {
+                            *mb = beta1 * *mb + (1.0 - beta1) * u;
+                            *vb = beta2 * *vb + (1.0 - beta2) * u * u;
+                            let mhat = *mb / bc1;
+                            let vhat = *vb / bc2;
+                            *p -= step_scale * mhat / (vhat.sqrt() + eps);
+                        }
+                    }
+                }
+
+                // 6. Plateau feedback (mean loss over *arrived* clients).
+                let mean_local_loss = loss_sum / arrived as f64;
+                if let Some(p) = self.plateau.as_mut() {
+                    p.observe(mean_local_loss);
                 }
             }
 
-            // 6. Plateau + evaluation.
-            let mean_local_loss = loss_sum / participants.len() as f64;
-            if let Some(p) = self.plateau.as_mut() {
-                p.observe(mean_local_loss);
-            }
+            // 7. Evaluation.
             if t % self.cfg.eval_every == 0 || t + 1 == self.cfg.rounds {
                 let eval = backend.evaluate(&params);
                 records.push(RoundRecord {
@@ -257,6 +383,9 @@ impl<'a> RoundEngine<'a> {
                     bits_down: self.bits_down,
                     sigma: round_sigma,
                     wall_ms: timer.elapsed_ms(),
+                    sim_time_s,
+                    arrived: arrived as u32,
+                    selected: selected as u32,
                 });
             }
         }
@@ -272,7 +401,7 @@ impl<'a> RoundEngine<'a> {
         root: &Pcg64,
         t: usize,
         params: &[f32],
-        participants: &[usize],
+        participants: &[Participant],
         round_sigma: f32,
     ) -> f64 {
         let m = participants.len();
@@ -339,7 +468,7 @@ impl<'a> RoundEngine<'a> {
         root: &Pcg64,
         t: usize,
         params: &[f32],
-        participants: &[usize],
+        participants: &[Participant],
         round_sigma: f32,
         inv_m: f32,
         threads: usize,
@@ -379,12 +508,13 @@ impl<'a> RoundEngine<'a> {
         root: &Pcg64,
         t: usize,
         params: &[f32],
-        participants: &[usize],
+        participants: &[Participant],
         round_sigma: f32,
         inv_m: f32,
     ) {
         let shard = &mut self.workers[0];
-        for (i, &client) in participants.iter().enumerate() {
+        for (i, part) in participants.iter().enumerate() {
+            let client = part.client;
             let mut task = ClientTask::new(root, t, i, client);
             let outcome = backend.local_update(
                 client,
@@ -395,6 +525,7 @@ impl<'a> RoundEngine<'a> {
             );
             let msg = compress_outcome(
                 outcome,
+                part.fault,
                 &mut task.rng,
                 self.algo,
                 round_sigma,
@@ -417,7 +548,7 @@ struct RoundCtx<'c> {
     root: &'c Pcg64,
     t: usize,
     params: &'c [f32],
-    participants: &'c [usize],
+    participants: &'c [Participant],
     round_sigma: f32,
     inv_m: f32,
     ef: &'c [Mutex<EfState>],
@@ -435,7 +566,8 @@ fn worker_loop(ctx: &RoundCtx<'_>, shard: &mut WorkerShard) {
         if i >= m {
             break;
         }
-        let client = ctx.participants[i];
+        let part = ctx.participants[i];
+        let client = part.client;
         let mut task = ClientTask::new(ctx.root, ctx.t, i, client);
         let outcome = ctx.par.local_update_shared(
             client,
@@ -446,6 +578,7 @@ fn worker_loop(ctx: &RoundCtx<'_>, shard: &mut WorkerShard) {
         );
         let msg = compress_outcome(
             outcome,
+            part.fault,
             &mut task.rng,
             ctx.algo,
             ctx.round_sigma,
@@ -461,11 +594,17 @@ fn worker_loop(ctx: &RoundCtx<'_>, shard: &mut WorkerShard) {
 
 /// Compress one client's local outcome into its uplink message — Algorithm
 /// 1 lines 11–13 (and the Algorithm 2 clip-perturb-sign variant). Pure in
-/// `(outcome, rng)` apart from the worker-local vote shard / EF residual it
-/// updates, which is what makes task order irrelevant.
+/// `(outcome, fault, rng)` apart from the worker-local vote shard / EF
+/// residual it updates, which is what makes task order irrelevant.
+///
+/// A byzantine `fault` corrupts the update direction *before* compression:
+/// the attacker follows the protocol's wire format but lies about its
+/// local result, which is exactly the threat model majority-vote
+/// aggregation is claimed to absorb.
 #[allow(clippy::too_many_arguments)]
 fn compress_outcome(
-    outcome: LocalOutcome,
+    mut outcome: LocalOutcome,
+    fault: Option<ByzantineMode>,
     rng: &mut Pcg64,
     algo: &AlgorithmConfig,
     round_sigma: f32,
@@ -475,6 +614,9 @@ fn compress_outcome(
     ef: Option<&Mutex<EfState>>,
     mut hook: Option<&mut dyn TrainBackend>,
 ) -> ClientMsg {
+    if let Some(mode) = fault {
+        mode.apply(&mut outcome.delta);
+    }
     let d = outcome.delta.len();
     let loss = outcome.mean_loss;
     let (bits, payload) = match &algo.compression {
@@ -617,6 +759,9 @@ mod tests {
             assert_eq!(x.bits_up, y.bits_up, "{what}");
             assert_eq!(x.bits_down, y.bits_down, "{what}");
             assert_eq!(x.sigma.to_bits(), y.sigma.to_bits(), "{what}");
+            assert_eq!(x.sim_time_s.to_bits(), y.sim_time_s.to_bits(), "{what}");
+            assert_eq!(x.arrived, y.arrived, "{what}");
+            assert_eq!(x.selected, y.selected, "{what}");
         }
     }
 
@@ -723,6 +868,110 @@ mod tests {
         // Same (round, client) => same stream, independent of slot position.
         let mut d = ClientTask::new(&root, 0, 9, 3).rng;
         assert_eq!(d.next_u64(), x);
+    }
+
+    fn scenario(byz_frac: f32) -> crate::sim::ScenarioConfig {
+        crate::sim::ScenarioConfig {
+            target_cohort: 6,
+            overselect: 1.5,
+            deadline_s: 0.6,
+            round_latency_s: 0.1,
+            dropout_prob: 0.2,
+            byzantine_frac: byz_frac,
+            byzantine_mode: crate::sim::ByzantineMode::SignFlip,
+            fleet: crate::sim::FleetPreset::CrossDevice,
+        }
+    }
+
+    fn run_sim_with(
+        algo: &AlgorithmConfig,
+        parallelism: usize,
+        sc: crate::sim::ScenarioConfig,
+    ) -> RunResult {
+        let mut b = AnalyticBackend::new(Consensus::gaussian(24, 16, 77));
+        let cfg = ServerConfig {
+            rounds: 10,
+            seed: 5,
+            eval_every: 1,
+            parallelism,
+            participation: crate::fl::server::Participation::Simulated(sc),
+            ..Default::default()
+        };
+        run_experiment(&mut b, algo, &cfg)
+    }
+
+    #[test]
+    fn simulated_participation_is_bit_exact_across_thread_counts() {
+        // Stragglers + dropouts + byzantine sign-flippers in the mix: the
+        // lifecycle plan is coordinator-side and faults are per-task pure,
+        // so the parallelism contract must survive the whole scenario.
+        for algo in [
+            AlgorithmConfig::z_signfedavg(ZParam::Finite(1), 2.0, 2).with_lrs(0.05, 1.0),
+            AlgorithmConfig::fedavg(2).with_lrs(0.05, 1.0),
+            AlgorithmConfig::qsgd(2).with_lrs(0.05, 1.0),
+        ] {
+            let base = run_sim_with(&algo, 1, scenario(0.25));
+            for par in [2usize, 8] {
+                let run = run_sim_with(&algo, par, scenario(0.25));
+                assert_identical(&base, &run, &format!("sim {} par={par}", algo.name));
+            }
+        }
+    }
+
+    #[test]
+    fn simulated_rounds_report_attrition_and_sim_time() {
+        let algo = AlgorithmConfig::z_signsgd(ZParam::Finite(1), 1.0).with_lrs(0.05, 1.0);
+        let run = run_sim_with(&algo, 1, scenario(0.0));
+        // ceil(1.5 * 6) = 9 candidates per round; arrivals never exceed the
+        // target and the simulated clock moves by >= latency every round.
+        let mut prev_time = 0.0;
+        for rec in &run.records {
+            assert_eq!(rec.selected, 9, "round {}", rec.round);
+            assert!(rec.arrived <= 6, "round {}", rec.round);
+            assert!(rec.sim_time_s >= prev_time + 0.1, "round {}", rec.round);
+            prev_time = rec.sim_time_s;
+        }
+    }
+
+    #[test]
+    fn impossible_deadline_freezes_the_model() {
+        // Nobody can report in 1 µs: every round is empty and the iterate
+        // must not move (no update, no plateau feedback, no uplink bits).
+        let mut sc = scenario(0.0);
+        sc.deadline_s = 1e-6;
+        let algo = AlgorithmConfig::z_signsgd(ZParam::Finite(1), 1.0).with_lrs(0.05, 1.0);
+        let run = run_sim_with(&algo, 4, sc);
+        let first = run.records.first().unwrap();
+        assert_eq!(first.arrived, 0);
+        assert_eq!(first.bits_up, 0);
+        // Nobody even finished downloading, so no downlink is billed.
+        assert_eq!(first.bits_down, 0);
+        for rec in &run.records {
+            assert_eq!(rec.objective.to_bits(), first.objective.to_bits());
+        }
+    }
+
+    #[test]
+    fn byzantine_clients_change_the_trajectory() {
+        // 25% sign-flippers must actually flow through compression: the
+        // run must differ from the byzantine-free run with the same seed.
+        let algo = AlgorithmConfig::z_signfedavg(ZParam::Finite(1), 2.0, 2).with_lrs(0.05, 1.0);
+        let honest = run_sim_with(&algo, 1, scenario(0.0));
+        let attacked = run_sim_with(&algo, 1, scenario(0.25));
+        let last_h = honest.records.last().unwrap().objective;
+        let last_a = attacked.records.last().unwrap().objective;
+        assert_ne!(last_h.to_bits(), last_a.to_bits());
+    }
+
+    #[test]
+    fn uniform_policy_reports_full_arrival() {
+        let algo = AlgorithmConfig::qsgd(2).with_lrs(0.05, 1.0);
+        let run = run_with(&algo, 1, Some(5));
+        for rec in &run.records {
+            assert_eq!(rec.arrived, 5);
+            assert_eq!(rec.selected, 5);
+            assert_eq!(rec.sim_time_s, 0.0);
+        }
     }
 
     #[test]

@@ -24,6 +24,14 @@ pub struct RoundRecord {
     pub sigma: f32,
     /// Wall-clock milliseconds spent on this round.
     pub wall_ms: f64,
+    /// Cumulative *simulated* seconds (client-lifecycle scenarios; 0 under
+    /// uniform participation, where rounds take no modeled time).
+    pub sim_time_s: f64,
+    /// Clients whose reports were aggregated this round.
+    pub arrived: u32,
+    /// Clients the coordinator selected this round (≥ `arrived`; the gap
+    /// is stragglers + dropouts + unreachable devices).
+    pub selected: u32,
 }
 
 /// A complete run: algorithm name + its round records.
@@ -56,7 +64,12 @@ pub struct Aggregated {
     pub objective_std: Vec<f64>,
     pub accuracy_mean: Vec<f64>,
     pub accuracy_std: Vec<f64>,
+    /// Mean cumulative uplink bits across repeats (rounded). Identical to
+    /// every repeat's counter under uniform participation; under scenario
+    /// participation arrivals — and therefore bits — vary per seed.
     pub bits_up: Vec<u64>,
+    /// Mean cumulative simulated seconds across repeats (scenario runs).
+    pub sim_time_mean: Vec<f64>,
 }
 
 /// Aggregate repeats; all runs must share round structure.
@@ -72,12 +85,17 @@ pub fn aggregate(runs: &[RunResult]) -> Aggregated {
         accuracy_mean: Vec::new(),
         accuracy_std: Vec::new(),
         bits_up: Vec::new(),
+        sim_time_mean: Vec::new(),
     };
     for t in 0..n_rounds {
         let mut obj = Summary::new();
         let mut acc = Summary::new();
+        let mut sim = Summary::new();
+        let mut up = Summary::new();
         for r in runs {
             obj.push(r.records[t].objective);
+            sim.push(r.records[t].sim_time_s);
+            up.push(r.records[t].bits_up as f64);
             if let Some(a) = r.records[t].accuracy {
                 acc.push(a);
             }
@@ -87,7 +105,8 @@ pub fn aggregate(runs: &[RunResult]) -> Aggregated {
         out.objective_std.push(obj.std());
         out.accuracy_mean.push(if acc.count() > 0 { acc.mean() } else { f64::NAN });
         out.accuracy_std.push(if acc.count() > 0 { acc.std() } else { f64::NAN });
-        out.bits_up.push(runs[0].records[t].bits_up);
+        out.bits_up.push(up.mean().round() as u64);
+        out.sim_time_mean.push(sim.mean());
     }
     out
 }
@@ -99,17 +118,21 @@ pub fn write_csv(path: &Path, agg: &Aggregated) -> std::io::Result<()> {
         std::fs::create_dir_all(dir)?;
     }
     let mut f = std::fs::File::create(path)?;
-    writeln!(f, "round,objective_mean,objective_std,accuracy_mean,accuracy_std,bits_up")?;
+    writeln!(
+        f,
+        "round,objective_mean,objective_std,accuracy_mean,accuracy_std,bits_up,sim_time_s"
+    )?;
     for t in 0..agg.rounds.len() {
         writeln!(
             f,
-            "{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{}",
             agg.rounds[t],
             agg.objective_mean[t],
             agg.objective_std[t],
             agg.accuracy_mean[t],
             agg.accuracy_std[t],
-            agg.bits_up[t]
+            agg.bits_up[t],
+            agg.sim_time_mean[t]
         )?;
     }
     Ok(())
@@ -121,12 +144,16 @@ pub fn write_runs_csv(path: &Path, runs: &[RunResult]) -> std::io::Result<()> {
         std::fs::create_dir_all(dir)?;
     }
     let mut f = std::fs::File::create(path)?;
-    writeln!(f, "run,round,objective,accuracy,grad_norm_sq,bits_up,bits_down,sigma,wall_ms")?;
+    writeln!(
+        f,
+        "run,round,objective,accuracy,grad_norm_sq,bits_up,bits_down,sigma,wall_ms,\
+         sim_time_s,arrived,selected"
+    )?;
     for (k, run) in runs.iter().enumerate() {
         for r in &run.records {
             writeln!(
                 f,
-                "{},{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{},{},{},{}",
                 k,
                 r.round,
                 r.objective,
@@ -135,7 +162,10 @@ pub fn write_runs_csv(path: &Path, runs: &[RunResult]) -> std::io::Result<()> {
                 r.bits_up,
                 r.bits_down,
                 r.sigma,
-                r.wall_ms
+                r.wall_ms,
+                r.sim_time_s,
+                r.arrived,
+                r.selected
             )?;
         }
     }
@@ -161,6 +191,9 @@ mod tests {
                     bits_down: 0,
                     sigma: 0.0,
                     wall_ms: 0.0,
+                    sim_time_s: (i as f64 + 1.0) * 2.0,
+                    arrived: 4,
+                    selected: 5,
                 })
                 .collect(),
         }
@@ -174,6 +207,7 @@ mod tests {
         // std of {1,3} = sqrt(2)
         assert!((agg.objective_std[0] - 2f64.sqrt()).abs() < 1e-12);
         assert_eq!(agg.bits_up, vec![100, 200]);
+        assert_eq!(agg.sim_time_mean, vec![2.0, 4.0]);
     }
 
     #[test]

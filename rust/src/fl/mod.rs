@@ -8,10 +8,12 @@
 //!   (Fig. 1/2) vs. AOT-compiled neural workloads over PJRT (Fig. 3–17),
 //!   plus the `ParallelBackend` view for Sync-safe per-client work.
 //! * [`server`] — the experiment configuration and `run_experiment` entry
-//!   point (client sampling cadence, plateau, downlink, parallelism knob).
+//!   point (client sampling cadence, plateau, downlink, parallelism knob,
+//!   participation mode).
 //! * [`engine`] — the round loop proper: per-client tasks fanned across a
 //!   scoped thread pool, sharded sign-vote accumulation, deterministic
-//!   reduction (bit-identical results for every thread count).
+//!   reduction (bit-identical results for every thread count), and the
+//!   `ParticipationPolicy` seam the `sim/` scenario engine plugs into.
 //! * [`plateau`] — §4.4's Plateau criterion for the adaptive noise scale.
 //! * [`metrics`] — round records, repeat aggregation (mean ± std), CSV.
 
@@ -24,6 +26,6 @@ pub mod server;
 
 pub use algorithms::{AlgorithmConfig, Compression};
 pub use backend::{EvalResult, LocalOutcome, ParallelBackend, TrainBackend};
-pub use engine::{ClientTask, RoundEngine};
+pub use engine::{ClientOutcome, ClientTask, ParticipationPolicy, RoundEngine, RoundPlan};
 pub use metrics::{RoundRecord, RunResult};
-pub use server::{run_experiment, ServerConfig};
+pub use server::{run_experiment, Participation, ServerConfig};

@@ -28,6 +28,22 @@ use super::engine::RoundEngine;
 use super::metrics::RunResult;
 use super::plateau::PlateauConfig;
 use crate::rng::ZParam;
+use crate::sim::ScenarioConfig;
+
+/// How each round's participants are chosen (see
+/// `fl::engine::ParticipationPolicy`).
+#[derive(Debug, Clone, Default)]
+pub enum Participation {
+    /// The historical sampler: `clients_per_round` uniformly without
+    /// replacement (everyone when unset), every report arrives.
+    #[default]
+    Uniform,
+    /// Client-lifecycle simulation (`sim::ScenarioPolicy`): heterogeneous
+    /// devices, report deadlines, dropouts and byzantine clients. The
+    /// cohort size comes from `ScenarioConfig::target_cohort`;
+    /// `clients_per_round` is ignored.
+    Simulated(ScenarioConfig),
+}
 
 /// Server-side experiment configuration (everything that is not the
 /// algorithm itself).
@@ -35,7 +51,8 @@ use crate::rng::ZParam;
 pub struct ServerConfig {
     /// Communication rounds T.
     pub rounds: usize,
-    /// Clients sampled per round (None = full participation).
+    /// Clients sampled per round (None = full participation). Only
+    /// consulted by `Participation::Uniform`.
     pub clients_per_round: Option<usize>,
     /// Evaluate every k rounds (records are emitted only on eval rounds).
     pub eval_every: usize,
@@ -55,6 +72,9 @@ pub struct ServerConfig {
     /// `RunResult` is bit-identical for every value of this knob. Stateful
     /// backends (the PJRT runtime) serialize and ignore it. 0 means 1.
     pub parallelism: usize,
+    /// Participant selection: the uniform shuffle, or the `sim/` scenario
+    /// engine. Bit-identical across `parallelism` either way.
+    pub participation: Participation,
 }
 
 impl Default for ServerConfig {
@@ -67,6 +87,7 @@ impl Default for ServerConfig {
             plateau: None,
             downlink_sign: None,
             parallelism: 1,
+            participation: Participation::Uniform,
         }
     }
 }

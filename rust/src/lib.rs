@@ -31,6 +31,7 @@ pub mod problems;
 pub mod repro;
 pub mod rng;
 pub mod runtime;
+pub mod sim;
 pub mod tensor;
 pub mod testutil;
 pub mod util;

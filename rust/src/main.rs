@@ -4,6 +4,8 @@
 //!   run                 config-driven experiment (`--config configs/x.cfg`)
 //!   fig1 fig2 fig3 fig5 fig6 fig16 fig17 table2
 //!                       reproduce the paper's figures/tables (DESIGN.md §5)
+//!   scenarios           client-lifecycle simulation: deadlines, dropouts,
+//!                       byzantine robustness (DESIGN.md §2.5)
 //!   inspect             list artifacts from the manifest
 //!   bench               in-process micro-bench smoke (full benches: `cargo bench`)
 //!   version             print version
@@ -23,6 +25,7 @@ fn main() -> Result<()> {
         Some("fig16") => repro::fig16_qsgd::run(&args),
         Some("fig17") => repro::fig17_dp::run(&args),
         Some("table2") => repro::table2_rates::run(&args),
+        Some("scenarios") => repro::figx_scenarios::run(&args),
         Some("run") => run_config(&args),
         Some("inspect") => inspect(&args),
         Some("version") => {
@@ -55,7 +58,10 @@ SUBCOMMANDS
   fig16   sign vs QSGD/FedPAQ accuracy-per-bit
   fig17   DP-SignFedAvg vs DP-FedAvg across privacy budgets
   table2  rate summary + empirical rate fit
+  scenarios client-lifecycle sim: stragglers/dropouts (time-to-target) and
+          byzantine robustness curves (--sim_* flags, see sim/)
   run     config-driven experiment: --config configs/<f>.cfg
+          (set sim = true + sim_* keys for scenario participation)
   inspect list AOT artifacts
 
 COMMON FLAGS
@@ -127,6 +133,12 @@ fn run_config(args: &Args) -> Result<()> {
     .with_lrs(cfg.f32_or("client_lr", 0.01), cfg.f32_or("server_lr", 1.0))
     .with_momentum(cfg.f32_or("momentum", 0.0));
 
+    let participation = if cfg.bool_or("sim", false) {
+        let sc = zsignfedavg::sim::ScenarioConfig::from_config(&cfg).map_err(|e| anyhow!(e))?;
+        zsignfedavg::fl::server::Participation::Simulated(sc)
+    } else {
+        zsignfedavg::fl::server::Participation::Uniform
+    };
     let server = ServerConfig {
         rounds: cfg.usize_or("rounds", 100),
         clients_per_round: cfg.opt_usize("clients_per_round"),
@@ -135,6 +147,7 @@ fn run_config(args: &Args) -> Result<()> {
         plateau: None,
         downlink_sign: None,
         parallelism: cfg.parallelism_or(1),
+        participation,
     };
     let repeats = cfg.usize_or("repeats", 1);
     println!(

@@ -1,4 +1,4 @@
-//! Communication-time simulation.
+//! Communication-time replay of *finished* runs.
 //!
 //! The paper's whole pitch is communication cost, so the drivers report a
 //! *simulated wall-clock* axis alongside rounds and bits: given a link
@@ -6,8 +6,7 @@
 //! counts the coordinator recorded, this module turns a run into a
 //! time-to-accuracy series — the figure real FL deployments care about.
 //!
-//! The model is deliberately simple and standard (cf. FedScale-style
-//! simulators): per round,
+//! The model is standard (cf. FedScale-style simulators): per round,
 //!
 //! ```text
 //! t_round = latency
@@ -16,10 +15,21 @@
 //!         + compute_time
 //! ```
 //!
-//! With uniform client payloads (every algorithm here sends equal-size
-//! messages per round), max_i = per-client bits.
+//! [`replay`] takes explicit **per-client** payloads ([`RoundLoad`]) and
+//! finds the gating upload by draining a `sim::EventQueue` — the same
+//! scheduler that plans live scenario rounds. [`simulate_timeline`] is the
+//! historical entry point, kept as a compatibility shim: it divides each
+//! record's bit totals evenly across `clients_per_round`, which is correct
+//! only when every client ships the same payload (true for the fixed-rate
+//! compressors here, wrong in general — callers with per-client payload
+//! sizes should build `RoundLoad`s and call `replay`).
+//!
+//! For rounds simulated *while they run* — heterogeneous devices, report
+//! deadlines, dropouts — see `sim::ScenarioPolicy`; its timeline lands in
+//! `RoundRecord::sim_time_s` directly and needs no replay.
 
 use crate::fl::metrics::{RoundRecord, RunResult};
+use crate::sim::EventQueue;
 
 /// A symmetric-ish WAN link model.
 #[derive(Debug, Clone, Copy)]
@@ -54,40 +64,86 @@ pub struct TimedRecord {
     pub record: RoundRecord,
 }
 
-/// Replay a run through the link model.
+/// Per-client payloads for the rounds one record covers.
+///
+/// Bits are `f64` because a record spanning several rounds (eval_every > 1)
+/// carries *average* per-round payloads, which need not be whole bits.
+#[derive(Debug, Clone)]
+pub struct RoundLoad {
+    /// Uplink bits per participating client; the slowest uploader gates
+    /// the round. One entry per participant.
+    pub up_bits: Vec<f64>,
+    /// Broadcast bits each client downloads.
+    pub down_bits: f64,
+}
+
+/// Replay a run through the link model with explicit per-client payloads —
+/// `loads[i]` describes the rounds covered by `run.records[i]`.
+///
+/// The upload phase pushes every client's completion through the event
+/// queue and takes the last arrival, so heterogeneous payloads are gated
+/// by the slowest uploader instead of a (wrong) even split.
+pub fn replay(run: &RunResult, link: &LinkModel, loads: &[RoundLoad]) -> Vec<TimedRecord> {
+    assert_eq!(loads.len(), run.records.len(), "one RoundLoad per record");
+    let mut out = Vec::with_capacity(run.records.len());
+    let mut prev_round = 0usize;
+    let mut t = 0.0f64;
+    for (rec, load) in run.records.iter().zip(loads) {
+        // Rounds since the previous *evaluated* record (records may be
+        // sparse when eval_every > 1).
+        let rounds = (rec.round + 1).saturating_sub(prev_round).max(1);
+        let mut q: EventQueue<usize> = EventQueue::new();
+        for (i, &bits) in load.up_bits.iter().enumerate() {
+            q.schedule(bits / link.uplink_bps, i);
+        }
+        let mut upload_s = 0.0;
+        while let Some((at, _)) = q.pop() {
+            upload_s = at;
+        }
+        let per_round = link.latency_s
+            + upload_s
+            + load.down_bits / link.downlink_bps
+            + link.compute_s;
+        t += per_round * rounds as f64;
+        prev_round = rec.round + 1;
+        out.push(TimedRecord { sim_time_s: t, record: *rec });
+    }
+    out
+}
+
+/// Even-split [`RoundLoad`]s from a run's aggregate bit counters — the
+/// uniform-payload assumption, stated explicitly.
+pub fn uniform_loads(run: &RunResult, clients_per_round: usize) -> Vec<RoundLoad> {
+    assert!(clients_per_round >= 1);
+    let mut prev_up = 0u64;
+    let mut prev_down = 0u64;
+    let mut prev_round = 0usize;
+    run.records
+        .iter()
+        .map(|rec| {
+            let rounds = (rec.round + 1).saturating_sub(prev_round).max(1);
+            let up = (rec.bits_up - prev_up) as f64 / (rounds * clients_per_round) as f64;
+            let down = (rec.bits_down - prev_down) as f64 / (rounds * clients_per_round) as f64;
+            prev_up = rec.bits_up;
+            prev_down = rec.bits_down;
+            prev_round = rec.round + 1;
+            RoundLoad { up_bits: vec![up; clients_per_round], down_bits: down }
+        })
+        .collect()
+}
+
+/// Replay a run through the link model (compatibility shim).
 ///
 /// `clients_per_round` must match the experiment (bits are totals across
-/// participants; the model needs per-client payloads).
+/// participants). **Assumes uniform payloads**: totals are divided evenly
+/// across clients, which is wrong once payloads differ — build per-client
+/// [`RoundLoad`]s and call [`replay`] instead.
 pub fn simulate_timeline(
     run: &RunResult,
     link: &LinkModel,
     clients_per_round: usize,
 ) -> Vec<TimedRecord> {
-    assert!(clients_per_round >= 1);
-    let mut out = Vec::with_capacity(run.records.len());
-    let mut prev_up = 0u64;
-    let mut prev_down = 0u64;
-    let mut prev_round = 0usize;
-    let mut t = 0.0f64;
-    for rec in &run.records {
-        // Bits accrued since the previous *evaluated* record, averaged over
-        // the rounds in between (records may be sparse when eval_every > 1).
-        let rounds = (rec.round + 1).saturating_sub(prev_round).max(1);
-        let up_per_client_round =
-            (rec.bits_up - prev_up) as f64 / (rounds * clients_per_round) as f64;
-        let down_per_client_round =
-            (rec.bits_down - prev_down) as f64 / (rounds * clients_per_round) as f64;
-        let per_round = link.latency_s
-            + up_per_client_round / link.uplink_bps
-            + down_per_client_round / link.downlink_bps
-            + link.compute_s;
-        t += per_round * rounds as f64;
-        prev_up = rec.bits_up;
-        prev_down = rec.bits_down;
-        prev_round = rec.round + 1;
-        out.push(TimedRecord { sim_time_s: t, record: *rec });
-    }
-    out
+    replay(run, link, &uniform_loads(run, clients_per_round))
 }
 
 /// Simulated seconds to first reach `target` accuracy (None if never).
@@ -117,6 +173,9 @@ mod tests {
                     bits_down: bits_per_round_down * (i as u64 + 1),
                     sigma: 0.0,
                     wall_ms: 0.0,
+                    sim_time_s: 0.0,
+                    arrived: 1,
+                    selected: 1,
                 })
                 .collect(),
         }
@@ -145,6 +204,33 @@ mod tests {
         let td = time_to_accuracy(&dense, 0.9).unwrap();
         let ts = time_to_accuracy(&signs, 0.9).unwrap();
         assert!((td / ts - 32.0).abs() < 1e-6, "{td} vs {ts}");
+    }
+
+    #[test]
+    fn heterogeneous_payloads_gate_on_slowest() {
+        // 1 Mbit total over 4 clients @1 Mbit/s: the even split claims
+        // 0.25 s/round, but a 750k/250k/0/0 split is gated at 0.75 s —
+        // exactly the error the uniform-payload shim bakes in.
+        let link =
+            LinkModel { uplink_bps: 1e6, downlink_bps: 1e12, latency_s: 0.0, compute_s: 0.0 };
+        let run = mk_run(1_000_000, 0, &[0.5]);
+        let even = simulate_timeline(&run, &link, 4);
+        assert!((even[0].sim_time_s - 0.25).abs() < 1e-9);
+        let loads =
+            vec![RoundLoad { up_bits: vec![750_000.0, 250_000.0, 0.0, 0.0], down_bits: 0.0 }];
+        let het = replay(&run, &link, &loads);
+        assert!((het[0].sim_time_s - 0.75).abs() < 1e-9, "{}", het[0].sim_time_s);
+    }
+
+    #[test]
+    fn shim_equals_explicit_uniform_replay() {
+        let link = LinkModel::cross_device();
+        let run = mk_run(123_456, 7_890, &[0.1, 0.4, 0.8]);
+        let shim = simulate_timeline(&run, &link, 3);
+        let explicit = replay(&run, &link, &uniform_loads(&run, 3));
+        for (a, b) in shim.iter().zip(&explicit) {
+            assert_eq!(a.sim_time_s.to_bits(), b.sim_time_s.to_bits());
+        }
     }
 
     #[test]

@@ -8,4 +8,5 @@ pub mod fig5_fedavg;
 pub mod fig6_plateau;
 pub mod fig16_qsgd;
 pub mod fig17_dp;
+pub mod figx_scenarios;
 pub mod table2_rates;

@@ -1,0 +1,200 @@
+//! Heterogeneous device profiles: what one client's hardware and network
+//! look like to the event scheduler.
+//!
+//! A fleet is sampled once per run from the experiment's own `Pcg64` stream
+//! (so a seed pins every device, not just the algorithmic randomness).
+//! Profiles follow the FedScale-style cross-device shape: a small number of
+//! device classes (cellular phones, wifi phones, plugged-in workstations)
+//! with log-normal jitter on rates and compute, and a per-device
+//! availability rate — the probability the device is reachable when a
+//! cohort is drawn.
+
+use crate::rng::Pcg64;
+
+/// One client's device, as the scheduler sees it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceProfile {
+    /// Client upload bandwidth, bits/second.
+    pub uplink_bps: f64,
+    /// Server-to-client download bandwidth, bits/second.
+    pub downlink_bps: f64,
+    /// Seconds per local SGD step (model fwd+bwd at this device's speed).
+    pub step_time_s: f64,
+    /// Probability the device is reachable when a cohort is drawn.
+    pub availability: f64,
+}
+
+impl DeviceProfile {
+    /// Wall-clock seconds for this device to finish one round: download the
+    /// model, run `local_steps`, upload its compressed payload.
+    pub fn round_time_s(&self, down_bits: u64, local_steps: usize, up_bits: u64) -> f64 {
+        self.download_s(down_bits) + self.compute_s(local_steps) + self.upload_s(up_bits)
+    }
+
+    pub fn download_s(&self, bits: u64) -> f64 {
+        bits as f64 / self.downlink_bps
+    }
+
+    pub fn compute_s(&self, local_steps: usize) -> f64 {
+        local_steps as f64 * self.step_time_s
+    }
+
+    pub fn upload_s(&self, bits: u64) -> f64 {
+        bits as f64 / self.uplink_bps
+    }
+}
+
+/// Named fleet shapes (config key `sim_fleet`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FleetPreset {
+    /// Every device identical and always available: isolates deadline /
+    /// dropout / byzantine effects from hardware heterogeneity.
+    Uniform,
+    /// Three-tier cross-device mix with jitter and partial availability.
+    CrossDevice,
+}
+
+impl FleetPreset {
+    pub fn parse(s: &str) -> Option<FleetPreset> {
+        match s {
+            "uniform" => Some(FleetPreset::Uniform),
+            "cross_device" | "cross-device" => Some(FleetPreset::CrossDevice),
+            _ => None,
+        }
+    }
+}
+
+/// The `Uniform` profile (matches `net::LinkModel::cross_device` rates).
+fn uniform_profile() -> DeviceProfile {
+    DeviceProfile {
+        uplink_bps: 10e6,
+        downlink_bps: 50e6,
+        step_time_s: 0.05,
+        availability: 1.0,
+    }
+}
+
+/// (base profile, sampling weight) for each cross-device tier.
+const CROSS_DEVICE_TIERS: [(DeviceProfile, f64); 3] = [
+    // Phone on cellular: slow links, slow compute, often unreachable.
+    (
+        DeviceProfile {
+            uplink_bps: 5e6,
+            downlink_bps: 20e6,
+            step_time_s: 0.08,
+            availability: 0.70,
+        },
+        0.5,
+    ),
+    // Phone on wifi.
+    (
+        DeviceProfile {
+            uplink_bps: 20e6,
+            downlink_bps: 80e6,
+            step_time_s: 0.05,
+            availability: 0.85,
+        },
+        0.3,
+    ),
+    // Plugged-in workstation.
+    (
+        DeviceProfile {
+            uplink_bps: 100e6,
+            downlink_bps: 100e6,
+            step_time_s: 0.01,
+            availability: 0.95,
+        },
+        0.2,
+    ),
+];
+
+/// Sample a fleet of `n` device profiles from `rng`.
+pub fn sample_fleet(preset: FleetPreset, n: usize, rng: &mut Pcg64) -> Vec<DeviceProfile> {
+    match preset {
+        FleetPreset::Uniform => vec![uniform_profile(); n],
+        FleetPreset::CrossDevice => (0..n).map(|_| sample_cross_device(rng)).collect(),
+    }
+}
+
+fn sample_cross_device(rng: &mut Pcg64) -> DeviceProfile {
+    let mut pick = rng.uniform();
+    let mut base = CROSS_DEVICE_TIERS[CROSS_DEVICE_TIERS.len() - 1].0;
+    for (profile, weight) in CROSS_DEVICE_TIERS {
+        if pick < weight {
+            base = profile;
+            break;
+        }
+        pick -= weight;
+    }
+    // Log-normal jitter: real rate distributions are right-skewed, and a
+    // multiplicative perturbation can never go negative.
+    let rate_jitter = (0.25 * rng.normal()).exp();
+    let compute_jitter = (0.30 * rng.normal()).exp();
+    DeviceProfile {
+        uplink_bps: base.uplink_bps * rate_jitter,
+        downlink_bps: base.downlink_bps * rate_jitter,
+        step_time_s: base.step_time_s * compute_jitter,
+        availability: (base.availability + 0.05 * rng.normal()).clamp(0.05, 1.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_weights_sum_to_one() {
+        let total: f64 = CROSS_DEVICE_TIERS.iter().map(|(_, w)| w).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fleet_sampling_is_deterministic() {
+        let mk = || {
+            let mut rng = Pcg64::seeded(42);
+            sample_fleet(FleetPreset::CrossDevice, 64, &mut rng)
+        };
+        assert_eq!(mk(), mk());
+    }
+
+    #[test]
+    fn uniform_fleet_is_identical_and_available() {
+        let mut rng = Pcg64::seeded(1);
+        let fleet = sample_fleet(FleetPreset::Uniform, 8, &mut rng);
+        assert!(fleet.iter().all(|p| *p == fleet[0]));
+        assert_eq!(fleet[0].availability, 1.0);
+    }
+
+    #[test]
+    fn cross_device_fleet_is_heterogeneous_and_sane() {
+        let mut rng = Pcg64::seeded(7);
+        let fleet = sample_fleet(FleetPreset::CrossDevice, 200, &mut rng);
+        for p in &fleet {
+            assert!(p.uplink_bps > 0.0 && p.downlink_bps > 0.0);
+            assert!(p.step_time_s > 0.0);
+            assert!((0.05..=1.0).contains(&p.availability));
+        }
+        let min_up = fleet.iter().map(|p| p.uplink_bps).fold(f64::INFINITY, f64::min);
+        let max_up = fleet.iter().map(|p| p.uplink_bps).fold(0.0, f64::max);
+        assert!(max_up / min_up > 4.0, "fleet should span device tiers");
+    }
+
+    #[test]
+    fn round_time_decomposes() {
+        let p = DeviceProfile {
+            uplink_bps: 1e6,
+            downlink_bps: 2e6,
+            step_time_s: 0.25,
+            availability: 1.0,
+        };
+        // 2e6 bits down @2e6 = 1 s, 2 steps = 0.5 s, 1e6 bits up @1e6 = 1 s.
+        assert!((p.round_time_s(2_000_000, 2, 1_000_000) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn preset_parse() {
+        assert_eq!(FleetPreset::parse("uniform"), Some(FleetPreset::Uniform));
+        assert_eq!(FleetPreset::parse("cross_device"), Some(FleetPreset::CrossDevice));
+        assert_eq!(FleetPreset::parse("bogus"), None);
+    }
+}

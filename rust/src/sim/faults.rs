@@ -1,0 +1,121 @@
+//! Fault injection: byzantine clients that corrupt their own uplink.
+//!
+//! The attacker model is the standard one for sign-robustness studies
+//! (Jin et al., Stochastic-Sign SGD; Xiang & Su, one-bit compressors on
+//! heterogeneous data): a fixed, seed-pinned subset of clients follows the
+//! protocol — participates, trains, compresses — but corrupts the update
+//! direction it reports. Because the corruption is applied to the client's
+//! local outcome *before* compression, it is a pure function of the
+//! `(round, client)` task and preserves the engine's any-`parallelism`
+//! determinism contract.
+
+use crate::rng::Pcg64;
+
+/// What a byzantine client does to its update direction `delta`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ByzantineMode {
+    /// Report `-delta`: flips every transmitted sign. Bounded influence
+    /// under majority vote (each attacker still casts ±1 per coordinate).
+    SignFlip,
+    /// Report `-boost·delta`: the classic magnitude attack. Catastrophic
+    /// for a dense mean, but sign compression clips it back to ±1 votes.
+    GradNegate { boost: f32 },
+}
+
+impl ByzantineMode {
+    /// Parse config values `signflip` / `gradnegate` (boost set separately).
+    pub fn parse(s: &str, boost: f32) -> Option<ByzantineMode> {
+        match s {
+            "signflip" | "sign-flip" => Some(ByzantineMode::SignFlip),
+            "gradnegate" | "grad-negate" => Some(ByzantineMode::GradNegate { boost }),
+            _ => None,
+        }
+    }
+
+    /// Corrupt `delta` in place.
+    pub fn apply(self, delta: &mut [f32]) {
+        match self {
+            ByzantineMode::SignFlip => {
+                for v in delta.iter_mut() {
+                    *v = -*v;
+                }
+            }
+            ByzantineMode::GradNegate { boost } => {
+                for v in delta.iter_mut() {
+                    *v *= -boost;
+                }
+            }
+        }
+    }
+}
+
+/// Assign `round(frac·n)` byzantine clients, sampled without replacement
+/// from `rng`. Returns one entry per client; honest clients get `None`.
+pub fn assign_byzantine(
+    n: usize,
+    frac: f32,
+    mode: ByzantineMode,
+    rng: &mut Pcg64,
+) -> Vec<Option<ByzantineMode>> {
+    assert!((0.0..=1.0).contains(&frac), "byzantine_frac {frac} outside [0, 1]");
+    let k = ((frac as f64 * n as f64).round() as usize).min(n);
+    let mut out = vec![None; n];
+    for c in rng.sample_without_replacement(n, k) {
+        out[c] = Some(mode);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sign_flip_negates() {
+        let mut d = vec![1.0f32, -2.0, 0.5];
+        ByzantineMode::SignFlip.apply(&mut d);
+        assert_eq!(d, vec![-1.0, 2.0, -0.5]);
+    }
+
+    #[test]
+    fn grad_negate_scales() {
+        let mut d = vec![1.0f32, -2.0];
+        ByzantineMode::GradNegate { boost: 10.0 }.apply(&mut d);
+        assert_eq!(d, vec![-10.0, 20.0]);
+    }
+
+    #[test]
+    fn assignment_count_and_determinism() {
+        let mk = || {
+            let mut rng = Pcg64::seeded(5);
+            assign_byzantine(40, 0.25, ByzantineMode::SignFlip, &mut rng)
+        };
+        let a = mk();
+        assert_eq!(a.iter().filter(|m| m.is_some()).count(), 10);
+        assert_eq!(a, mk());
+    }
+
+    #[test]
+    fn zero_fraction_is_all_honest() {
+        let mut rng = Pcg64::seeded(1);
+        let a = assign_byzantine(10, 0.0, ByzantineMode::SignFlip, &mut rng);
+        assert!(a.iter().all(|m| m.is_none()));
+    }
+
+    #[test]
+    fn full_fraction_is_all_byzantine() {
+        let mut rng = Pcg64::seeded(1);
+        let a = assign_byzantine(10, 1.0, ByzantineMode::SignFlip, &mut rng);
+        assert!(a.iter().all(|m| m.is_some()));
+    }
+
+    #[test]
+    fn mode_parse() {
+        assert_eq!(ByzantineMode::parse("signflip", 1.0), Some(ByzantineMode::SignFlip));
+        assert_eq!(
+            ByzantineMode::parse("gradnegate", 5.0),
+            Some(ByzantineMode::GradNegate { boost: 5.0 })
+        );
+        assert_eq!(ByzantineMode::parse("nope", 1.0), None);
+    }
+}

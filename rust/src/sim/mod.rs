@@ -1,0 +1,153 @@
+//! Client-lifecycle simulation: heterogeneous devices, deadlines, dropouts
+//! and byzantine clients over a deterministic discrete-event scheduler.
+//!
+//! The paper's claims are about communication, but real cross-device FL is
+//! gated by *which clients report at all*: stragglers miss deadlines,
+//! devices go offline mid-round, and sign-based majority voting is pitched
+//! (Jin et al.; Xiang & Su) as robust to clients that actively lie. This
+//! module turns those regimes into first-class, reproducible experiments:
+//!
+//! * [`event::EventQueue`] — a deterministic discrete-event queue
+//!   (`(time, seq)`-ordered, reused by `net::replay`);
+//! * [`device`] — per-client [`DeviceProfile`]s (bandwidths, compute speed,
+//!   availability) sampled from the run's `Pcg64` stream;
+//! * [`faults`] — seed-pinned byzantine assignment ([`ByzantineMode`]:
+//!   sign-flipping or gradient-negating clients);
+//! * [`policy::ScenarioPolicy`] — the `fl::engine::ParticipationPolicy`
+//!   that over-selects a cohort, simulates every candidate's
+//!   download → compute → upload chain, closes the round at the deadline
+//!   (or early at the target report count) and aggregates only arrivals.
+//!
+//! Scenario runs preserve the engine's determinism contract: all lifecycle
+//! decisions happen sequentially on the coordinator, so the `RunResult`
+//! stays bit-identical for every `ServerConfig::parallelism` value.
+//!
+//! Driver: `zsfa scenarios` (`repro::figx_scenarios`).
+
+pub mod device;
+pub mod event;
+pub mod faults;
+pub mod policy;
+
+pub use device::{DeviceProfile, FleetPreset};
+pub use event::EventQueue;
+pub use faults::ByzantineMode;
+pub use policy::{nominal_uplink_bits, ScenarioPolicy};
+
+use crate::config::Config;
+use crate::fl::metrics::RunResult;
+
+/// Everything a scenario run adds on top of `ServerConfig` (which carries
+/// it as `Participation::Simulated`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioConfig {
+    /// Reports to aggregate per round; the round closes early once this
+    /// many arrive.
+    pub target_cohort: usize,
+    /// Over-selection factor (≥ 1): `ceil(overselect · target)` candidates
+    /// are drawn to absorb unavailability and stragglers.
+    pub overselect: f64,
+    /// Report deadline per round, simulated seconds.
+    pub deadline_s: f64,
+    /// Fixed per-round overhead (cohort negotiation, connection setup).
+    pub round_latency_s: f64,
+    /// Probability a reachable candidate aborts mid-round.
+    pub dropout_prob: f32,
+    /// Fraction of the *population* that is byzantine (seed-pinned subset).
+    pub byzantine_frac: f32,
+    /// What byzantine clients do to their update.
+    pub byzantine_mode: ByzantineMode,
+    /// Device fleet shape.
+    pub fleet: FleetPreset,
+}
+
+impl Default for ScenarioConfig {
+    fn default() -> Self {
+        ScenarioConfig {
+            target_cohort: 10,
+            overselect: 1.3,
+            deadline_s: 5.0,
+            round_latency_s: 0.3,
+            dropout_prob: 0.05,
+            byzantine_frac: 0.0,
+            byzantine_mode: ByzantineMode::SignFlip,
+            fleet: FleetPreset::CrossDevice,
+        }
+    }
+}
+
+impl ScenarioConfig {
+    /// Read the `sim_*` keys (any omitted key keeps its default):
+    ///
+    /// ```text
+    /// sim_target_cohort = 10      sim_overselect = 1.3
+    /// sim_deadline_s = 5.0        sim_latency_s = 0.3
+    /// sim_dropout = 0.05          sim_fleet = cross_device | uniform
+    /// sim_byzantine_frac = 0.1    sim_byzantine_mode = signflip | gradnegate
+    /// sim_byzantine_boost = 10.0
+    /// ```
+    pub fn from_config(c: &Config) -> Result<ScenarioConfig, String> {
+        let d = ScenarioConfig::default();
+        let boost = c.f32_or("sim_byzantine_boost", 10.0);
+        let mode_str = c.str_or("sim_byzantine_mode", "signflip").to_string();
+        let byzantine_mode = ByzantineMode::parse(&mode_str, boost)
+            .ok_or_else(|| format!("sim_byzantine_mode: unknown mode {mode_str:?}"))?;
+        let fleet_str = c.str_or("sim_fleet", "cross_device").to_string();
+        let fleet = FleetPreset::parse(&fleet_str)
+            .ok_or_else(|| format!("sim_fleet: unknown fleet {fleet_str:?}"))?;
+        Ok(ScenarioConfig {
+            target_cohort: c.usize_or("sim_target_cohort", d.target_cohort),
+            overselect: c.f64_or("sim_overselect", d.overselect),
+            deadline_s: c.f64_or("sim_deadline_s", d.deadline_s),
+            round_latency_s: c.f64_or("sim_latency_s", d.round_latency_s),
+            dropout_prob: c.f32_or("sim_dropout", d.dropout_prob),
+            byzantine_frac: c.f32_or("sim_byzantine_frac", d.byzantine_frac),
+            byzantine_mode,
+            fleet,
+        })
+    }
+}
+
+/// Simulated seconds until the objective first reaches `target` (the
+/// time-to-accuracy axis for analytic workloads, which report no accuracy).
+pub fn time_to_objective(run: &RunResult, target: f64) -> Option<f64> {
+    run.records.iter().find(|r| r.objective <= target).map(|r| r.sim_time_s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_defaults_round_trip() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(ScenarioConfig::from_config(&c).unwrap(), ScenarioConfig::default());
+    }
+
+    #[test]
+    fn config_keys_parse() {
+        let c = Config::parse(
+            "sim_target_cohort = 32\nsim_overselect = 2.0\nsim_deadline_s = 1.5\n\
+             sim_dropout = 0.2\nsim_byzantine_frac = 0.1\n\
+             sim_byzantine_mode = gradnegate\nsim_byzantine_boost = 5.0\n\
+             sim_fleet = uniform\nsim_latency_s = 0.0\n",
+        )
+        .unwrap();
+        let sc = ScenarioConfig::from_config(&c).unwrap();
+        assert_eq!(sc.target_cohort, 32);
+        assert_eq!(sc.overselect, 2.0);
+        assert_eq!(sc.deadline_s, 1.5);
+        assert_eq!(sc.byzantine_mode, ByzantineMode::GradNegate { boost: 5.0 });
+        assert_eq!(sc.fleet, FleetPreset::Uniform);
+        assert_eq!(sc.round_latency_s, 0.0);
+        assert!(c.unused_keys().is_empty());
+    }
+
+    #[test]
+    fn bad_mode_and_fleet_rejected() {
+        let c = Config::parse("sim_byzantine_mode = lie").unwrap();
+        assert!(ScenarioConfig::from_config(&c).is_err());
+        let c = Config::parse("sim_fleet = mainframe").unwrap();
+        assert!(ScenarioConfig::from_config(&c).is_err());
+    }
+}

@@ -1,0 +1,381 @@
+//! The scenario participation policy: one round of cross-device FL as a
+//! discrete-event simulation.
+//!
+//! Per round the policy mirrors what a production coordinator (Google's
+//! cross-device system, FedScale) actually does:
+//!
+//! 1. **Over-select** a candidate cohort: `ceil(overselect · target)`
+//!    clients sampled without replacement, because some will be
+//!    unreachable or too slow.
+//! 2. **Availability check** — each candidate is reachable with its
+//!    device's availability probability; unreachable candidates never
+//!    start.
+//! 3. **Lifecycle simulation** — every reachable candidate runs the
+//!    download → compute → upload chain through the [`EventQueue`], with
+//!    per-device bandwidths and step times; a `dropout_prob` fraction
+//!    abort at a random point mid-round.
+//! 4. **Close the round** at the report deadline, or early once `target`
+//!    reports have arrived. Only arrivals are aggregated, in arrival
+//!    order (which fixes the engine's deterministic reduce order).
+//!
+//! Everything is drawn from per-round `Pcg64` streams split off the run's
+//! root, and the whole plan is computed sequentially on the coordinator —
+//! so a scenario run keeps the engine's bit-identical-for-any-`parallelism`
+//! contract (tested in `fl::engine` and `tests/integration_fl.rs`).
+
+use super::device::{sample_fleet, DeviceProfile};
+use super::event::EventQueue;
+use super::faults::{assign_byzantine, ByzantineMode};
+use super::ScenarioConfig;
+use crate::compress::qsgd::bits_per_level;
+use crate::compress::sparsify::TopK;
+use crate::fl::algorithms::Compression;
+use crate::fl::engine::{ClientOutcome, Participant, ParticipationPolicy, RoundPlan};
+use crate::rng::Pcg64;
+
+/// Nominal uplink payload per client per round, in bits (the scheduler's
+/// transfer-size model; exact per-message accounting stays with the
+/// engine's `bits_up`).
+pub fn nominal_uplink_bits(c: &Compression, d: usize) -> u64 {
+    match c {
+        Compression::None | Compression::DpDense { .. } => 32 * d as u64,
+        Compression::ZSign { .. } | Compression::DpSign { .. } => d as u64,
+        // Scaled sign: d sign bits + one f32 scale.
+        Compression::ErrorFeedback => 32 + d as u64,
+        Compression::Qsgd { s } => 32 + (d as u64) * (1 + bits_per_level(*s) as u64),
+        Compression::TopK { frac } => {
+            let k = TopK::new(*frac).k_for(d) as u64;
+            32 * k + 32 * k
+        }
+        Compression::SparseSign { frac, .. } => {
+            let k = TopK::new(*frac).k_for(d) as u64;
+            32 * k + k + 32
+        }
+    }
+}
+
+/// Lifecycle events for one candidate (index into the round's cohort).
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    DownlinkDone(u32),
+    ComputeDone(u32),
+    UploadDone(u32),
+    Dropout(u32),
+}
+
+/// Per-candidate state while the round's events drain.
+#[derive(Debug, Clone, Copy)]
+enum St {
+    /// Never reachable this round.
+    Unavailable,
+    /// Somewhere in the download → compute → upload chain.
+    Pending,
+    /// Aborted mid-round at the given time.
+    Dead(f64),
+    /// Report arrived (and was aggregated) at the given time.
+    Done(f64),
+}
+
+/// A [`ParticipationPolicy`] driven by the device fleet + event queue.
+pub struct ScenarioPolicy {
+    cfg: ScenarioConfig,
+    fleet: Vec<DeviceProfile>,
+    byzantine: Vec<Option<ByzantineMode>>,
+    local_steps: usize,
+    up_bits: u64,
+    down_bits: u64,
+    events_processed: u64,
+}
+
+impl ScenarioPolicy {
+    /// Build the per-run state: the device fleet and the byzantine subset,
+    /// both pinned by the run's root RNG (stream tags disjoint from the
+    /// engine's per-client and downlink tags).
+    pub fn new(
+        cfg: ScenarioConfig,
+        n: usize,
+        local_steps: usize,
+        up_bits: u64,
+        down_bits: u64,
+        root: &Pcg64,
+    ) -> ScenarioPolicy {
+        assert!(n >= 1);
+        assert!(cfg.target_cohort >= 1, "sim target cohort must be >= 1");
+        assert!(cfg.overselect >= 1.0, "overselect factor must be >= 1");
+        assert!(cfg.deadline_s > 0.0, "report deadline must be positive");
+        assert!((0.0..=1.0).contains(&cfg.dropout_prob));
+        // Tag layout: the engine's downlink stream is `t | 1<<62` and its
+        // client tasks stay below 2^62, so the run-scoped constants here
+        // live under bit 63 and the per-round stream under bit 61 —
+        // disjoint for any realistic round count.
+        let mut fleet_rng = root.split((1u64 << 63) | 0x0f1e);
+        let fleet = sample_fleet(cfg.fleet, n, &mut fleet_rng);
+        let mut byz_rng = root.split((1u64 << 63) | 0xb42);
+        let byzantine = assign_byzantine(n, cfg.byzantine_frac, cfg.byzantine_mode, &mut byz_rng);
+        ScenarioPolicy {
+            cfg,
+            fleet,
+            byzantine,
+            local_steps,
+            up_bits,
+            down_bits,
+            events_processed: 0,
+        }
+    }
+
+    /// Total events popped across all planned rounds (`bench_sim` meters
+    /// this as events/second).
+    pub fn events_processed(&self) -> u64 {
+        self.events_processed
+    }
+
+    /// The sampled fleet (inspection / tests).
+    pub fn fleet(&self) -> &[DeviceProfile] {
+        &self.fleet
+    }
+
+    /// Per-client byzantine assignment (inspection / tests).
+    pub fn byzantine(&self) -> &[Option<ByzantineMode>] {
+        &self.byzantine
+    }
+}
+
+impl ParticipationPolicy for ScenarioPolicy {
+    fn plan_round(&mut self, t: usize, root: &Pcg64) -> RoundPlan {
+        let n = self.fleet.len();
+        let target = self.cfg.target_cohort.min(n);
+        // The (1 - 1e-6) guard keeps binary representation error in the
+        // factor from inflating the ceiling (cf. `TopK::k_for`): 1.1 × 10
+        // must select 11 candidates, not 12.
+        let want = ((self.cfg.overselect * target as f64) * (1.0 - 1e-6)).ceil() as usize;
+        let cohort_size = want.clamp(target, n);
+        let mut rng = root.split((1u64 << 61) | ((t as u64) << 1));
+        let cohort = rng.sample_without_replacement(n, cohort_size);
+
+        // Availability + dropout draws, then the per-device time constants.
+        let mut st = vec![St::Pending; cohort_size];
+        let mut total_s = vec![0.0f64; cohort_size];
+        let mut q: EventQueue<Ev> = EventQueue::new();
+        for (i, &c) in cohort.iter().enumerate() {
+            let dev = &self.fleet[c];
+            if rng.uniform() >= dev.availability {
+                st[i] = St::Unavailable;
+                continue;
+            }
+            let total = dev.round_time_s(self.down_bits, self.local_steps, self.up_bits);
+            total_s[i] = total;
+            if (rng.uniform() as f32) < self.cfg.dropout_prob {
+                // Abort at a uniformly random point of this client's round.
+                q.schedule(rng.uniform() * total, Ev::Dropout(i as u32));
+            }
+            q.schedule(dev.download_s(self.down_bits), Ev::DownlinkDone(i as u32));
+        }
+
+        // Drain: close at the deadline, or early once `target` reports are
+        // in. Events at exactly the deadline still count.
+        let mut arrivals: Vec<u32> = Vec::with_capacity(target);
+        let mut downloads = 0usize;
+        let mut close_s = self.cfg.deadline_s;
+        while let Some((at, ev)) = q.pop() {
+            if at > self.cfg.deadline_s {
+                break;
+            }
+            let i = match ev {
+                Ev::DownlinkDone(i) | Ev::ComputeDone(i) | Ev::UploadDone(i) | Ev::Dropout(i) => {
+                    i as usize
+                }
+            };
+            if !matches!(st[i], St::Pending) {
+                continue;
+            }
+            let dev = &self.fleet[cohort[i]];
+            match ev {
+                Ev::Dropout(_) => st[i] = St::Dead(at),
+                Ev::DownlinkDone(_) => {
+                    downloads += 1;
+                    q.schedule(at + dev.compute_s(self.local_steps), Ev::ComputeDone(i as u32));
+                }
+                Ev::ComputeDone(_) => {
+                    q.schedule(at + dev.upload_s(self.up_bits), Ev::UploadDone(i as u32));
+                }
+                Ev::UploadDone(_) => {
+                    st[i] = St::Done(at);
+                    arrivals.push(i as u32);
+                    if arrivals.len() == target {
+                        close_s = at;
+                        break;
+                    }
+                }
+            }
+        }
+        self.events_processed += q.processed();
+
+        // Arrival order fixes the aggregation (reduce) order.
+        let participants: Vec<Participant> = arrivals
+            .iter()
+            .map(|&i| {
+                let client = cohort[i as usize];
+                Participant { client, fault: self.byzantine[client] }
+            })
+            .collect();
+        let outcomes: Vec<(usize, ClientOutcome)> = cohort
+            .iter()
+            .enumerate()
+            .map(|(i, &client)| {
+                let outcome = match st[i] {
+                    St::Unavailable => ClientOutcome::Unavailable,
+                    St::Dead(at_s) => ClientOutcome::DroppedOut { at_s },
+                    St::Done(at_s) => ClientOutcome::Arrived { at_s },
+                    // Still mid-chain when the round closed: a deadline miss,
+                    // or an over-selected report the early close discarded.
+                    St::Pending => ClientOutcome::Straggler { projected_s: total_s[i] },
+                };
+                (client, outcome)
+            })
+            .collect();
+        RoundPlan {
+            participants,
+            outcomes,
+            downloads,
+            duration_s: self.cfg.round_latency_s + close_s,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::device::FleetPreset;
+
+    fn cfg() -> ScenarioConfig {
+        ScenarioConfig {
+            target_cohort: 8,
+            overselect: 1.5,
+            deadline_s: 5.0,
+            round_latency_s: 0.0,
+            dropout_prob: 0.0,
+            byzantine_frac: 0.0,
+            byzantine_mode: ByzantineMode::SignFlip,
+            fleet: FleetPreset::Uniform,
+        }
+    }
+
+    fn policy(cfg: ScenarioConfig, n: usize, root: &Pcg64) -> ScenarioPolicy {
+        // 1 Mbit down, 1 local step, 1 Mbit up against the uniform fleet
+        // (10 Mbit/s up, 50 Mbit/s down, 0.05 s/step): ~0.17 s per client.
+        ScenarioPolicy::new(cfg, n, 1, 1_000_000, 1_000_000, root)
+    }
+
+    #[test]
+    fn uniform_fleet_hits_target_exactly() {
+        let root = Pcg64::new(3, 0xa11ce);
+        let mut p = policy(cfg(), 40, &root);
+        let plan = p.plan_round(0, &root);
+        assert_eq!(plan.participants.len(), 8);
+        assert_eq!(plan.outcomes.len(), 12); // ceil(1.5 * 8)
+        // Identical devices: every candidate finishes its download (at
+        // 0.02 s, before the 0.17 s close), and the round closes when the
+        // 8th report lands.
+        assert_eq!(plan.downloads, 12);
+        assert!(plan.duration_s > 0.0 && plan.duration_s < 5.0);
+        assert!(p.events_processed() > 0);
+    }
+
+    #[test]
+    fn plans_are_deterministic() {
+        let root = Pcg64::new(7, 0xa11ce);
+        let mut c = cfg();
+        c.fleet = FleetPreset::CrossDevice;
+        c.dropout_prob = 0.2;
+        c.byzantine_frac = 0.25;
+        let plan_at = |t: usize| {
+            let mut p = policy(c.clone(), 64, &root);
+            let plan = p.plan_round(t, &root);
+            (plan.participants, plan.outcomes, plan.duration_s)
+        };
+        let (pa, oa, da) = plan_at(3);
+        let (pb, ob, db) = plan_at(3);
+        assert_eq!(pa.len(), pb.len());
+        for (x, y) in pa.iter().zip(&pb) {
+            assert_eq!(x.client, y.client);
+            assert_eq!(x.fault, y.fault);
+        }
+        assert_eq!(oa, ob);
+        assert_eq!(da.to_bits(), db.to_bits());
+        // Different rounds draw different cohorts.
+        let (pc, _, _) = plan_at(4);
+        let ids = |ps: &[Participant]| ps.iter().map(|p| p.client).collect::<Vec<_>>();
+        assert_ne!(ids(&pa), ids(&pc));
+    }
+
+    #[test]
+    fn impossible_deadline_drops_everyone() {
+        let root = Pcg64::new(11, 0xa11ce);
+        let mut c = cfg();
+        c.deadline_s = 1e-6;
+        let mut p = policy(c, 20, &root);
+        let plan = p.plan_round(0, &root);
+        assert!(plan.participants.is_empty());
+        assert!(plan
+            .outcomes
+            .iter()
+            .all(|(_, o)| matches!(o, ClientOutcome::Straggler { .. })));
+        assert!((plan.duration_s - 1e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dropouts_and_unavailability_shrink_arrivals() {
+        let root = Pcg64::new(13, 0xa11ce);
+        let mut c = cfg();
+        c.target_cohort = 30;
+        c.overselect = 1.0;
+        c.dropout_prob = 1.0; // every reachable client aborts mid-round
+        let mut p = policy(c, 30, &root);
+        let plan = p.plan_round(0, &root);
+        assert!(plan.participants.is_empty());
+        assert!(plan
+            .outcomes
+            .iter()
+            .all(|(_, o)| matches!(o, ClientOutcome::DroppedOut { .. })));
+    }
+
+    #[test]
+    fn byzantine_flags_follow_assignment() {
+        let root = Pcg64::new(17, 0xa11ce);
+        let mut c = cfg();
+        c.target_cohort = 20;
+        c.overselect = 1.0;
+        c.byzantine_frac = 0.5;
+        let mut p = policy(c, 20, &root);
+        let byz = p.byzantine().to_vec();
+        let plan = p.plan_round(0, &root);
+        assert_eq!(plan.participants.len(), 20);
+        for part in &plan.participants {
+            assert_eq!(part.fault, byz[part.client]);
+        }
+        let flagged = plan.participants.iter().filter(|p| p.fault.is_some()).count();
+        assert_eq!(flagged, 10);
+    }
+
+    #[test]
+    fn nominal_bits_match_compressors() {
+        use crate::rng::ZParam;
+        let d = 1000;
+        assert_eq!(nominal_uplink_bits(&Compression::None, d), 32_000);
+        assert_eq!(
+            nominal_uplink_bits(
+                &Compression::ZSign {
+                    z: ZParam::Finite(1),
+                    sigma: crate::compress::sign::SigmaRule::Fixed(1.0)
+                },
+                d
+            ),
+            1000
+        );
+        assert_eq!(nominal_uplink_bits(&Compression::ErrorFeedback, d), 1032);
+        // QSGD s=1: 1 sign bit + 1 level bit per coord + f32 norm.
+        assert_eq!(nominal_uplink_bits(&Compression::Qsgd { s: 1 }, d), 32 + 2 * 1000);
+        // TopK 10%: 100 coords at 32-bit index + 32-bit value.
+        assert_eq!(nominal_uplink_bits(&Compression::TopK { frac: 0.1 }, d), 6400);
+    }
+}

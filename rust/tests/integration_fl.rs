@@ -7,13 +7,14 @@ use zsignfedavg::compress::pack::PackedSigns;
 use zsignfedavg::compress::sign::{SigmaRule, StochasticSign};
 use zsignfedavg::fl::backend::AnalyticBackend;
 use zsignfedavg::fl::metrics::aggregate;
-use zsignfedavg::fl::server::{run_experiment, ServerConfig};
+use zsignfedavg::fl::server::{run_experiment, Participation, ServerConfig};
 use zsignfedavg::fl::AlgorithmConfig;
 use zsignfedavg::problems::consensus::Consensus;
 use zsignfedavg::problems::least_squares::LeastSquares;
 use zsignfedavg::problems::logistic::Logistic;
 use zsignfedavg::problems::AnalyticProblem;
 use zsignfedavg::rng::{Pcg64, ZParam};
+use zsignfedavg::sim::{ByzantineMode, FleetPreset, ScenarioConfig};
 use zsignfedavg::testutil::{gen_vec_f32, prop_check, PropConfig};
 
 /// Fig. 1 shape: at high dimension, Sto-SignSGD's input-dependent noise
@@ -236,6 +237,110 @@ fn parallelism_never_changes_results() {
                 "par={par}"
             );
             assert_eq!(a.bits_up, b.bits_up, "par={par}");
+        }
+    }
+}
+
+/// A full-strength byzantine scenario: every selected client reports
+/// (uniform fleet, no deadline pressure), a seed-pinned subset lies.
+fn byz_scenario(n: usize, frac: f32, mode: ByzantineMode) -> ScenarioConfig {
+    ScenarioConfig {
+        target_cohort: n,
+        overselect: 1.0,
+        deadline_s: 1e6,
+        round_latency_s: 0.0,
+        dropout_prob: 0.0,
+        byzantine_frac: frac,
+        byzantine_mode: mode,
+        fleet: FleetPreset::Uniform,
+    }
+}
+
+/// Final optimality gap of `algo` on consensus under a byzantine scenario.
+fn byz_gap(algo: &AlgorithmConfig, n: usize, frac: f32, mode: ByzantineMode) -> f64 {
+    let mut b = AnalyticBackend::new(Consensus::gaussian(n, 30, 5));
+    let f_star = b.problem.optimal_value().unwrap();
+    let cfg = ServerConfig {
+        rounds: 300,
+        eval_every: 299,
+        seed: 11,
+        participation: Participation::Simulated(byz_scenario(n, frac, mode)),
+        ..Default::default()
+    };
+    run_experiment(&mut b, algo, &cfg).final_objective() - f_star
+}
+
+/// The scenario subsystem's acceptance claim (Jin et al.; Xiang & Su):
+/// majority-vote sign aggregation degrades more gracefully than the dense
+/// mean under ≥10% byzantine sign-flippers — each attacker is worth ±1 per
+/// coordinate, while the dense mean inherits whatever it reports.
+#[test]
+fn sign_votes_degrade_more_gracefully_under_byzantine_clients() {
+    let n = 20; // 10% => exactly 2 seed-pinned sign-flippers
+    let sign = AlgorithmConfig::z_signfedavg(ZParam::Finite(1), 2.0, 2).with_lrs(0.05, 1.0);
+    let dense = AlgorithmConfig::fedavg(2).with_lrs(0.05, 1.0);
+
+    // Relative degradation vs each algorithm's own byzantine-free floor.
+    let flip = ByzantineMode::SignFlip;
+    let deg_sign = byz_gap(&sign, n, 0.1, flip) / byz_gap(&sign, n, 0.0, flip).max(1e-12);
+    let deg_dense = byz_gap(&dense, n, 0.1, flip) / byz_gap(&dense, n, 0.0, flip).max(1e-12);
+    assert!(
+        deg_sign < deg_dense,
+        "sign degradation {deg_sign:.3e} should be below dense {deg_dense:.3e}"
+    );
+
+    // Magnitude attack: a 10x-boosted negated gradient flips the dense
+    // mean's direction outright; the sign vote clips it to one vote.
+    let boost = ByzantineMode::GradNegate { boost: 10.0 };
+    let g_sign = byz_gap(&sign, n, 0.1, boost);
+    let g_dense = byz_gap(&dense, n, 0.1, boost);
+    assert!(g_sign.is_finite());
+    assert!(
+        !g_dense.is_finite() || g_sign < g_dense,
+        "boosted attack: sign gap {g_sign:.3e} vs dense {g_dense:.3e}"
+    );
+}
+
+/// Scenario runs (stragglers + dropouts + byzantine clients) keep the
+/// engine's cross-module contract: `parallelism` never changes the result,
+/// including the new lifecycle fields.
+#[test]
+fn scenario_parallelism_never_changes_results() {
+    let algo = AlgorithmConfig::z_signfedavg(ZParam::Finite(1), 2.0, 3).with_lrs(0.02, 1.0);
+    let sc = ScenarioConfig {
+        target_cohort: 6,
+        overselect: 1.5,
+        deadline_s: 0.5,
+        round_latency_s: 0.1,
+        dropout_prob: 0.2,
+        byzantine_frac: 0.2,
+        byzantine_mode: ByzantineMode::SignFlip,
+        fleet: FleetPreset::CrossDevice,
+    };
+    let run = |par: usize| {
+        let mut b =
+            AnalyticBackend::new(LeastSquares::generate(12, 40, 15, 0.5, 0.5, 3)).stochastic();
+        let cfg = ServerConfig {
+            rounds: 10,
+            eval_every: 2,
+            seed: 21,
+            parallelism: par,
+            participation: Participation::Simulated(sc.clone()),
+            ..Default::default()
+        };
+        run_experiment(&mut b, &algo, &cfg)
+    };
+    let base = run(1);
+    assert!(base.final_objective().is_finite());
+    for par in [2usize, 8] {
+        let r = run(par);
+        assert_eq!(base.records.len(), r.records.len());
+        for (a, b) in base.records.iter().zip(&r.records) {
+            assert_eq!(a.objective.to_bits(), b.objective.to_bits(), "par={par}");
+            assert_eq!(a.bits_up, b.bits_up, "par={par}");
+            assert_eq!(a.sim_time_s.to_bits(), b.sim_time_s.to_bits(), "par={par}");
+            assert_eq!(a.arrived, b.arrived, "par={par}");
+            assert_eq!(a.selected, b.selected, "par={par}");
         }
     }
 }
