@@ -3,6 +3,8 @@
 #   make build     release build of the coordinator (lib + zsfa binary)
 #   make test      full Rust test suite (tier-1 verify = build + test)
 #   make bench     run every registered micro/round bench
+#   make bench-json  streamed-vs-buffered aggregation bench -> BENCH_aggregate.json
+#   make determinism parallelism-1 vs -8 scenario CSV byte-diff (what CI runs)
 #   make fmt       rustfmt check (what CI enforces)
 #   make lint      clippy with warnings denied (what CI enforces)
 #   make python    editable-install the compile package + kernel tests
@@ -12,7 +14,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test bench bench-build fmt lint python artifacts ci clean
+.PHONY: build test bench bench-build bench-json determinism fmt lint python artifacts ci clean
 
 build:
 	$(CARGO) build --release
@@ -25,6 +27,28 @@ bench:
 
 bench-build:
 	$(CARGO) bench --no-run
+
+# Machine-readable aggregation-perf trajectory (streamed vs buffered dense
+# reduce at m in {64, 512, 4096}).
+bench-json:
+	$(CARGO) bench --bench bench_dense_reduce -- --json BENCH_aggregate.json
+
+# Reduce-order regression smoke: one scenario config at parallelism 1 and 8
+# must produce byte-identical CSVs (raw CSVs carry wall-clock, so excluded).
+# --reduce-lanes 3 < cohort forces multi-slot lanes, so the streamed in-lane
+# fold (not its m <= L degenerate form) is what gets diffed. Runs in scratch
+# dirs so ./results is never touched.
+determinism: build
+	rm -rf results_det_p1 results_det_p8
+	mkdir -p results_det_p1 results_det_p8
+	cd results_det_p1 && ../target/release/zsfa scenarios --rounds 30 \
+	  --byz-rounds 30 --clients 24 --dim 1000 --repeats 1 \
+	  --sim_target_cohort 8 --reduce-lanes 3 --parallelism 1
+	cd results_det_p8 && ../target/release/zsfa scenarios --rounds 30 \
+	  --byz-rounds 30 --clients 24 --dim 1000 --repeats 1 \
+	  --sim_target_cohort 8 --reduce-lanes 3 --parallelism 8
+	diff -r -x '*_raw.csv' results_det_p1 results_det_p8
+	@echo "determinism: parallelism 1 vs 8 CSVs are byte-identical"
 
 fmt:
 	$(CARGO) fmt --all -- --check

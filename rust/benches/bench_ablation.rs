@@ -9,7 +9,7 @@
 use zsignfedavg::fl::backend::AnalyticBackend;
 use zsignfedavg::fl::server::{run_experiment, ServerConfig};
 use zsignfedavg::fl::AlgorithmConfig;
-use zsignfedavg::net::{simulate_timeline, LinkModel};
+use zsignfedavg::net::{arrival_loads, replay, LinkModel};
 use zsignfedavg::problems::consensus::Consensus;
 use zsignfedavg::problems::AnalyticProblem;
 use zsignfedavg::rng::ZParam;
@@ -45,9 +45,10 @@ fn main() {
         let gap = run.final_objective() - f_star;
         let bits = run.total_bits();
         let per_coord = bits as f64 / (rounds * n * d) as f64;
-        // Simulated time until gap < 1.0 under the cross-device link (use
-        // the objective as the "accuracy" channel via a shim).
-        let timeline = simulate_timeline(&run, &link, n);
+        // Simulated time until gap < 1.0 under the cross-device link,
+        // billed per the aggregator's recorded arrivals (== the uniform
+        // split here: full participation, fixed-rate compressors).
+        let timeline = replay(&run, &link, &arrival_loads(&run));
         let t_hit = timeline
             .iter()
             .find(|t| t.record.objective - f_star < target_gap)

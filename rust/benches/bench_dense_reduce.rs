@@ -1,0 +1,229 @@
+//! Streamed vs. buffered dense aggregation — the memory cliff, measured.
+//!
+//! The historical round reduce buffered one decoded vector **per client**
+//! until end-of-round (m·d floats at the high-water mark); the unified
+//! aggregation seam (`compress::agg`) streams each contribution into L =
+//! `reduce_lanes` lane accumulators instead (L·d floats, independent of
+//! m). This bench measures both sides of that trade at m ∈ {64, 512,
+//! 4096}:
+//!
+//! * **throughput** — folded coordinates/second for one full round
+//!   aggregation (decode + fold), buffered vs. streamed;
+//! * **peak resident delta** — bytes of live heap above the pre-round
+//!   baseline during one aggregation pass, via a counting global
+//!   allocator.
+//!
+//! `--json PATH` additionally writes machine-readable results (see `make
+//! bench-json`, which emits `BENCH_aggregate.json` for the perf
+//! trajectory).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use zsignfedavg::bench::{bench, BenchConfig};
+use zsignfedavg::compress::agg::{AbsorbCtx, Aggregator, LaneAcc, ReduceTopology, Scratch};
+use zsignfedavg::fl::server::DEFAULT_REDUCE_LANES;
+use zsignfedavg::fl::Compression;
+use zsignfedavg::rng::Pcg64;
+use zsignfedavg::tensor;
+use zsignfedavg::util::json::Json;
+
+// --- counting allocator -----------------------------------------------------
+
+struct CountingAlloc;
+
+static LIVE: AtomicUsize = AtomicUsize::new(0);
+static PEAK: AtomicUsize = AtomicUsize::new(0);
+
+fn note_alloc(size: usize) {
+    let live = LIVE.fetch_add(size, Ordering::Relaxed) + size;
+    PEAK.fetch_max(live, Ordering::Relaxed);
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            note_alloc(layout.size());
+        }
+        p
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc_zeroed(layout);
+        if !p.is_null() {
+            note_alloc(layout.size());
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        LIVE.fetch_sub(layout.size(), Ordering::Relaxed);
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = System.realloc(ptr, layout, new_size);
+        if !p.is_null() {
+            LIVE.fetch_sub(layout.size(), Ordering::Relaxed);
+            note_alloc(new_size);
+        }
+        p
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Live-heap high-water mark of `f()` relative to entry, in bytes.
+fn peak_delta(mut f: impl FnMut()) -> usize {
+    let base = LIVE.load(Ordering::Relaxed);
+    PEAK.store(base, Ordering::Relaxed);
+    f();
+    PEAK.load(Ordering::Relaxed).saturating_sub(base)
+}
+
+// --- the two reduction strategies -------------------------------------------
+
+/// A synthetic "client": its decoded dense contribution, generated on the
+/// fly from its own stream (mirrors the engine: the decoded vector is
+/// transient in both strategies; what differs is the aggregation state).
+fn client_delta(seed: u64, slot: usize, d: usize) -> Vec<f32> {
+    let mut rng = Pcg64::new(seed, slot as u64);
+    (0..d).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect()
+}
+
+/// The historical reduce: park every client's vector, fold at end-of-round
+/// in slot order. High-water: m·d floats.
+fn buffered_round(seed: u64, m: usize, d: usize, out: &mut [f32]) {
+    let inv_m = 1.0 / m as f32;
+    let mut parked: Vec<Vec<f32>> = Vec::with_capacity(m);
+    for slot in 0..m {
+        parked.push(client_delta(seed, slot, d));
+    }
+    out.iter_mut().for_each(|x| *x = 0.0);
+    for v in &parked {
+        tensor::axpy(inv_m, v, out);
+    }
+}
+
+/// The streamed reduce: absorb each vector into its lane the moment it is
+/// produced, fold lanes at end-of-round. High-water: L·d floats.
+fn streamed_round(
+    agg: &dyn Aggregator,
+    lanes: &[Mutex<LaneAcc>],
+    scratch: &mut Scratch,
+    seed: u64,
+    m: usize,
+    d: usize,
+    out: &mut [f32],
+) {
+    let inv_m = 1.0 / m as f32;
+    let topo = ReduceTopology::new(lanes.len(), m);
+    for lane in lanes {
+        lane.lock().unwrap().reset();
+    }
+    for lane_i in 0..topo.lanes() {
+        let mut lane = lanes[lane_i].lock().unwrap();
+        for slot in topo.lane_slots(lane_i) {
+            let delta = client_delta(seed, slot, d);
+            let mut rng = Pcg64::new(seed ^ 0xabc, slot as u64);
+            let ctx = AbsorbCtx { rng: &mut rng, round_sigma: 0.0, inv_m, ef: None, hook: None };
+            agg.absorb(delta, 0.0, ctx, &mut lane, scratch);
+        }
+    }
+    agg.reduce(&lanes[..topo.lanes()], out);
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+
+    let d = 1024usize;
+    let lanes_n = DEFAULT_REDUCE_LANES;
+    let agg = Compression::None.aggregator(1.0);
+    let cfg = BenchConfig { warmup_time_s: 0.2, samples: 15, min_batch_time_s: 0.01 };
+    let mut results: BTreeMap<String, Json> = BTreeMap::new();
+
+    println!("== dense round reduce: buffered (m·d) vs streamed ({lanes_n} lanes) — d={d} ==");
+    for m in [64usize, 512, 4096] {
+        let coords = (m * d) as f64;
+        let mut out = vec![0.0f32; d];
+
+        // Correctness cross-check at full lane width (L >= m the fold is
+        // identical; beyond that the topologies differ by design).
+        if m <= lanes_n {
+            let mut out2 = vec![0.0f32; d];
+            let lanes: Vec<Mutex<LaneAcc>> =
+                (0..lanes_n.min(m)).map(|_| Mutex::new(LaneAcc::new(d))).collect();
+            let mut scratch = Scratch::new(d);
+            buffered_round(7, m, d, &mut out);
+            streamed_round(&*agg, &lanes, &mut scratch, 7, m, d, &mut out2);
+            assert!(
+                out.iter().zip(&out2).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "m={m}: streamed fold must match the historical fold when L >= m"
+            );
+        }
+
+        let buf = bench(&format!("buffered m={m}"), cfg, || {
+            buffered_round(7, m, d, &mut out);
+            std::hint::black_box(&out);
+        });
+        let lanes: Vec<Mutex<LaneAcc>> =
+            (0..lanes_n.min(m)).map(|_| Mutex::new(LaneAcc::new(d))).collect();
+        let mut scratch = Scratch::new(d);
+        let stream = bench(&format!("streamed m={m}"), cfg, || {
+            streamed_round(&*agg, &lanes, &mut scratch, 7, m, d, &mut out);
+            std::hint::black_box(&out);
+        });
+
+        // Peak resident, measured outside the timing loop. Streamed lanes
+        // are warm (allocated) at this point — exactly the engine's steady
+        // state — so its delta is the transient per-client vector only.
+        let peak_buf = peak_delta(|| buffered_round(7, m, d, &mut out));
+        let peak_stream =
+            peak_delta(|| streamed_round(&*agg, &lanes, &mut scratch, 7, m, d, &mut out));
+        let lane_state_bytes: usize =
+            lanes.iter().map(|l| l.lock().unwrap().dense_floats() * 4).sum();
+
+        println!("{}", buf.report_throughput(coords, "coord"));
+        println!("{}", stream.report_throughput(coords, "coord"));
+        println!(
+            "  peak resident delta: buffered {:>12} B   streamed {:>8} B (+{} B lane state)",
+            peak_buf, peak_stream, lane_state_bytes
+        );
+        assert!(
+            peak_stream + lane_state_bytes < peak_buf || m <= lanes_n,
+            "streamed high-water must beat buffered once m >> lanes"
+        );
+
+        let mut entry = BTreeMap::new();
+        entry.insert("m".into(), Json::Num(m as f64));
+        entry.insert("d".into(), Json::Num(d as f64));
+        entry.insert("lanes".into(), Json::Num(lanes_n.min(m) as f64));
+        entry.insert("buffered_median_s".into(), Json::Num(buf.median_s()));
+        entry.insert("streamed_median_s".into(), Json::Num(stream.median_s()));
+        entry.insert("buffered_coords_per_s".into(), Json::Num(buf.throughput(coords)));
+        entry.insert("streamed_coords_per_s".into(), Json::Num(stream.throughput(coords)));
+        entry.insert("buffered_peak_bytes".into(), Json::Num(peak_buf as f64));
+        entry.insert("streamed_peak_bytes".into(), Json::Num(peak_stream as f64));
+        entry.insert("streamed_lane_state_bytes".into(), Json::Num(lane_state_bytes as f64));
+        results.insert(format!("m{m}"), Json::Obj(entry));
+    }
+
+    if let Some(path) = json_path {
+        let mut doc = BTreeMap::new();
+        doc.insert("bench".into(), Json::Str("dense_reduce".into()));
+        doc.insert("dim".into(), Json::Num(d as f64));
+        doc.insert("reduce_lanes".into(), Json::Num(lanes_n as f64));
+        doc.insert("results".into(), Json::Obj(results));
+        std::fs::write(&path, Json::Obj(doc).to_string_compact())
+            .expect("writing bench json");
+        println!("wrote {path}");
+    }
+}

@@ -4,11 +4,12 @@
 //!
 //! Measures whole coordinator rounds on an n = 64-client consensus problem
 //! across `parallelism` ∈ {1, 2, 4, 8}, for the two compressor families the
-//! engine reduces differently: the z = 1 stochastic sign (vote shards,
-//! z-noise sampling dominates per-client cost) and QSGD (dense payloads,
-//! participant-order reduce). Expected shape: near-linear speedup up to the
-//! machine's core count, with the sign path scaling best because its
-//! per-client work is heaviest relative to the serial reduce.
+//! unified aggregator folds differently: the z = 1 stochastic sign (lane
+//! vote accumulators, z-noise sampling dominates per-client cost) and QSGD
+//! (dense lane fold under the fixed reduce-lanes topology). Expected shape:
+//! near-linear speedup up to the machine's core count, with the sign path
+//! scaling best because its per-client work is heaviest relative to the
+//! serial reduce.
 //!
 //! Run with `cargo bench --bench bench_parallel`.
 

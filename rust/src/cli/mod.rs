@@ -94,6 +94,13 @@ impl Args {
         self.usize_or("parallelism", default)
     }
 
+    /// The `--reduce-lanes` knob: lanes of the fixed reduction topology
+    /// (`ServerConfig::reduce_lanes`). Part of the reproducibility
+    /// contract, like the seed — NOT a performance-only knob.
+    pub fn reduce_lanes_or(&self, default: usize) -> usize {
+        self.usize_or("reduce-lanes", default)
+    }
+
     /// Apply all `--key value` pairs as config overrides.
     pub fn apply_overrides(&self, cfg: &mut crate::config::Config) {
         for (k, v) in &self.flags {

@@ -1,0 +1,831 @@
+//! The unified streaming aggregation seam: one [`Aggregator`] per
+//! compressor family, absorbing client messages *as they arrive* into
+//! lane-sharded state and reducing through a fixed, parallelism-independent
+//! topology.
+//!
+//! ## Why a seam
+//!
+//! The round reduce used to be two code paths: packed-sign votes streamed
+//! through worker-sharded `VoteAccumulator`s, while every dense-family
+//! compressor (None/QSGD/TopK/SparseSign/DP-dense/EF) buffered one decoded
+//! vector **per client** until end-of-round so the f32 fold could run in
+//! participant order — an O(m·d) high-water mark that caps cohort size.
+//! This module replaces both with one abstraction: per-compressor
+//! [`Aggregator`]s that fold each client's contribution into a
+//! [`LaneAcc`] the moment it is produced, so peak aggregation memory is
+//! O(L·d) for L = [`ReduceTopology`] lanes — independent of the cohort
+//! size m.
+//!
+//! ## The reduction-topology contract
+//!
+//! The aggregate is a pure function of the participant slots and the lane
+//! count L (`ServerConfig::reduce_lanes`), never of thread count or
+//! scheduling:
+//!
+//! * slot `s` folds into lane `s mod L`;
+//! * within a lane, contributions fold in increasing slot order (each lane
+//!   is processed by exactly one worker, walking its slots in order);
+//! * the coordinator folds lane accumulators in lane-index order.
+//!
+//! Sign-family votes are integer counts, so their merge is exact in *any*
+//! order (associative + commutative — property-tested below). Dense f32
+//! folds are order-sensitive, which is exactly what the fixed lane
+//! topology pins down. When `m <= L` every lane holds one slot and the
+//! fold degenerates to the historical slot-ordered reduce, bit for bit.
+
+use super::error_feedback::EfState;
+use super::pack::{PackedSigns, VoteAccumulator};
+use super::qsgd::{bits_per_level, Qsgd};
+use super::sign::{SigmaRule, StochasticSign};
+use super::sparsify::{SparseSign, TopK};
+use super::{Compressor, Message};
+use crate::rng::{Pcg64, ZParam};
+use crate::tensor;
+use std::sync::Mutex;
+
+/// The fixed reduce topology for one round: `L = min(reduce_lanes, m)`
+/// lanes over `m` participant slots. Copyable round-scoped metadata.
+#[derive(Debug, Clone, Copy)]
+pub struct ReduceTopology {
+    lanes: usize,
+    m: usize,
+}
+
+impl ReduceTopology {
+    pub fn new(reduce_lanes: usize, m: usize) -> ReduceTopology {
+        ReduceTopology { lanes: reduce_lanes.max(1).min(m.max(1)), m }
+    }
+
+    /// Number of lanes L (also the maximum useful worker count).
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// The lane slot `s` folds into.
+    pub fn lane_of(&self, slot: usize) -> usize {
+        slot % self.lanes
+    }
+
+    /// The slots of one lane, in the order they must fold.
+    pub fn lane_slots(&self, lane: usize) -> impl Iterator<Item = usize> {
+        debug_assert!(lane < self.lanes);
+        (lane..self.m).step_by(self.lanes)
+    }
+}
+
+/// One lane's accumulated state: the per-family fold target plus the
+/// side-channel tallies (loss, exact wire bits, arrivals) that used to ride
+/// per-client messages. Buffers are lazily allocated per family and reused
+/// across rounds.
+#[derive(Debug)]
+pub struct LaneAcc {
+    d: usize,
+    votes: Option<VoteAccumulator>,
+    dense: Option<Vec<f32>>,
+    loss: f64,
+    bits: u64,
+    arrived: u32,
+}
+
+impl LaneAcc {
+    pub fn new(d: usize) -> LaneAcc {
+        LaneAcc { d, votes: None, dense: None, loss: 0.0, bits: 0, arrived: 0 }
+    }
+
+    /// Clear tallies and fold state, keeping allocations for reuse.
+    pub fn reset(&mut self) {
+        if let Some(v) = self.votes.as_mut() {
+            v.reset();
+        }
+        if let Some(b) = self.dense.as_mut() {
+            b.iter_mut().for_each(|x| *x = 0.0);
+        }
+        self.loss = 0.0;
+        self.bits = 0;
+        self.arrived = 0;
+    }
+
+    /// Fold one client's packed-sign vote (exact integer counts).
+    pub fn add_signs(&mut self, signs: &PackedSigns, bits: u64, loss: f64) {
+        self.votes.get_or_insert_with(|| VoteAccumulator::new(self.d)).add(signs);
+        self.tally(bits, loss);
+    }
+
+    /// Fold one client's dense contribution: `lane += weight * v`.
+    pub fn add_dense(&mut self, v: &[f32], weight: f32, bits: u64, loss: f64) {
+        assert_eq!(v.len(), self.d, "dense contribution length mismatch");
+        let acc = self.dense.get_or_insert_with(|| vec![0.0f32; self.d]);
+        tensor::axpy(weight, v, acc);
+        self.tally(bits, loss);
+    }
+
+    fn tally(&mut self, bits: u64, loss: f64) {
+        self.loss += loss;
+        self.bits += bits;
+        self.arrived += 1;
+    }
+
+    pub fn bits(&self) -> u64 {
+        self.bits
+    }
+
+    pub fn arrived(&self) -> u32 {
+        self.arrived
+    }
+
+    /// f32s currently allocated for the dense fold (0 on the sign path) —
+    /// the quantity the high-water regression tests pin to O(L·d).
+    pub fn dense_floats(&self) -> usize {
+        self.dense.as_ref().map_or(0, |b| b.len())
+    }
+}
+
+/// Per-worker scratch reused across every client a worker processes: the
+/// i8 sign buffer for the packed-sign hot path and the f32 decode buffer
+/// for dense-family wire formats. Keeps the absorb path allocation-light
+/// (QSGD/TopK/SparseSign still build their transient wire message).
+#[derive(Debug)]
+pub struct Scratch {
+    pub signs: Vec<i8>,
+    pub dense: Vec<f32>,
+}
+
+impl Scratch {
+    pub fn new(d: usize) -> Scratch {
+        Scratch { signs: vec![0i8; d], dense: vec![0.0f32; d] }
+    }
+}
+
+/// Backend-accelerated stochastic-sign compression (the PJRT Pallas kernel
+/// route). Only honored on the engine's sequential path; `None` falls back
+/// to the Rust reference compressor.
+pub trait SignKernelHook {
+    fn packed_sign(
+        &mut self,
+        delta: &[f32],
+        z: ZParam,
+        sigma: f32,
+        rng: &mut Pcg64,
+    ) -> Option<PackedSigns>;
+}
+
+/// Everything an [`Aggregator::absorb`] call may consult besides the
+/// client's own update: the client's RNG stream, round-scoped scalars, the
+/// client's EF residual (EF-SignSGD only) and the optional kernel hook.
+pub struct AbsorbCtx<'a> {
+    pub rng: &'a mut Pcg64,
+    /// σ in effect this round (plateau controller included); per-client
+    /// input-dependent rules resolve inside the aggregator.
+    pub round_sigma: f32,
+    /// 1/m for the round's arrived-participant count m.
+    pub inv_m: f32,
+    pub ef: Option<&'a Mutex<EfState>>,
+    pub hook: Option<&'a mut dyn SignKernelHook>,
+}
+
+/// What the coordinator learns from the lane fold: the exact tallies that
+/// feed `RoundRecord` (bits from actual arrivals — an empty round bills
+/// zero because `reduce` is never reached) and the loss fed back to the
+/// plateau controller.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ReduceStats {
+    /// Sum of client losses, folded lane-by-lane in lane order.
+    pub loss_sum: f64,
+    /// Exact uplink bits across every absorbed message.
+    pub bits: u64,
+    /// Number of absorbed messages (cross-checked against the round plan).
+    pub arrived: u32,
+}
+
+/// The aggregation seam both compressor families implement: compress one
+/// client's update and fold it into a lane (`absorb`, called from worker
+/// threads), then fold the lanes into the round update (`reduce`, called
+/// once on the coordinator).
+///
+/// Implementations are stateless parameter structs (EF residuals stay with
+/// the engine, keyed by client), so they are `Send + Sync` and shared by
+/// every worker.
+pub trait Aggregator: Send + Sync {
+    /// Exact wire bits one client's message occupies at dimension `d`
+    /// (fixed-rate formula; the scheduler's transfer-size model and the
+    /// `net` billing helpers read this).
+    fn nominal_client_bits(&self, d: usize) -> u64;
+
+    /// Compress `delta` (the client's update direction, faults already
+    /// applied) and fold it into `lane`. Pure in `(delta, loss, ctx.rng)`
+    /// apart from the lane/EF state it updates — what makes lane dispatch
+    /// order irrelevant.
+    fn absorb(
+        &self,
+        delta: Vec<f32>,
+        loss: f64,
+        ctx: AbsorbCtx<'_>,
+        lane: &mut LaneAcc,
+        scratch: &mut Scratch,
+    );
+
+    /// Fold lanes `0..L` in lane order into `update` (the dequantized
+    /// aggregate the server steps with). Must only be called after at
+    /// least one `absorb`.
+    fn reduce(&self, lanes: &[Mutex<LaneAcc>], update: &mut [f32]) -> ReduceStats;
+}
+
+/// Lane fold for the sign family: merge lane vote shards (exact integer
+/// counts, order-independent — lane order is used anyway) and write the
+/// mean vote. The merged accumulator is returned to lane 0 so its
+/// allocation is reused next round.
+fn reduce_votes(lanes: &[Mutex<LaneAcc>], update: &mut [f32]) -> ReduceStats {
+    let mut stats = ReduceStats::default();
+    let mut total: Option<VoteAccumulator> = None;
+    for lane in lanes {
+        let mut lane = lane.lock().unwrap();
+        stats.loss_sum += lane.loss;
+        stats.bits += lane.bits;
+        stats.arrived += lane.arrived;
+        if total.is_none() {
+            total = lane.votes.take();
+        } else if let (Some(t), Some(v)) = (total.as_mut(), lane.votes.as_ref()) {
+            t.merge(v);
+        }
+    }
+    let total = total.expect("sign reduce with no votes absorbed");
+    total.mean_into(1.0, update);
+    lanes[0].lock().unwrap().votes = Some(total);
+    stats
+}
+
+/// Lane fold for the dense family: `update = Σ_lane lane.dense`, strictly
+/// in lane-index order (per-client weights were applied at absorb time).
+fn reduce_dense(lanes: &[Mutex<LaneAcc>], update: &mut [f32]) -> ReduceStats {
+    let mut stats = ReduceStats::default();
+    update.iter_mut().for_each(|u| *u = 0.0);
+    for lane in lanes {
+        let lane = lane.lock().unwrap();
+        stats.loss_sum += lane.loss;
+        stats.bits += lane.bits;
+        stats.arrived += lane.arrived;
+        if let Some(acc) = lane.dense.as_ref() {
+            for (u, &a) in update.iter_mut().zip(acc) {
+                *u += a;
+            }
+        }
+    }
+    stats
+}
+
+// ---------------------------------------------------------------------------
+// Per-compressor implementations
+// ---------------------------------------------------------------------------
+
+/// Uncompressed f32 updates (FedAvg / distributed SGD / GD).
+pub struct DenseAgg;
+
+impl Aggregator for DenseAgg {
+    fn nominal_client_bits(&self, d: usize) -> u64 {
+        32 * d as u64
+    }
+
+    fn absorb(
+        &self,
+        delta: Vec<f32>,
+        loss: f64,
+        ctx: AbsorbCtx<'_>,
+        lane: &mut LaneAcc,
+        _scratch: &mut Scratch,
+    ) {
+        let bits = 32 * delta.len() as u64;
+        lane.add_dense(&delta, ctx.inv_m, bits, loss);
+    }
+
+    fn reduce(&self, lanes: &[Mutex<LaneAcc>], update: &mut [f32]) -> ReduceStats {
+        reduce_dense(lanes, update)
+    }
+}
+
+/// The paper's stochastic sign `Sign(delta + σ·ξ_z)` — Algorithm 1's
+/// packed-vote path (d bits per client).
+pub struct ZSignAgg {
+    pub z: ZParam,
+    pub sigma: SigmaRule,
+}
+
+impl Aggregator for ZSignAgg {
+    fn nominal_client_bits(&self, d: usize) -> u64 {
+        d as u64
+    }
+
+    fn absorb(
+        &self,
+        delta: Vec<f32>,
+        loss: f64,
+        ctx: AbsorbCtx<'_>,
+        lane: &mut LaneAcc,
+        scratch: &mut Scratch,
+    ) {
+        let AbsorbCtx { rng, round_sigma, hook, .. } = ctx;
+        let s = match self.sigma {
+            SigmaRule::Fixed(_) => round_sigma,
+            SigmaRule::L2Norm => tensor::norm2(&delta) as f32,
+            SigmaRule::InfNorm => tensor::norm_inf(&delta) as f32,
+        };
+        // Prefer the backend's AOT Pallas kernel (sequential path only);
+        // fall back to the Rust reference compressor.
+        let hooked = hook.and_then(|h| h.packed_sign(&delta, self.z, s, &mut *rng));
+        let packed = match hooked {
+            Some(packed) => packed,
+            None => {
+                let mut comp = StochasticSign::new(self.z, SigmaRule::Fixed(s));
+                comp.compress_into(&delta, rng, &mut scratch.signs);
+                PackedSigns::from_signs(&scratch.signs)
+            }
+        };
+        lane.add_signs(&packed, delta.len() as u64, loss);
+    }
+
+    fn reduce(&self, lanes: &[Mutex<LaneAcc>], update: &mut [f32]) -> ReduceStats {
+        reduce_votes(lanes, update)
+    }
+}
+
+/// EF-SignSGD: compress the stepsize-scaled update γ·Σg through the
+/// client's residual state, then fold the decoded scaled sign.
+pub struct EfAgg {
+    pub client_lr: f32,
+}
+
+impl Aggregator for EfAgg {
+    fn nominal_client_bits(&self, d: usize) -> u64 {
+        // d sign bits + one f32 scale.
+        32 + d as u64
+    }
+
+    fn absorb(
+        &self,
+        mut delta: Vec<f32>,
+        loss: f64,
+        ctx: AbsorbCtx<'_>,
+        lane: &mut LaneAcc,
+        scratch: &mut Scratch,
+    ) {
+        tensor::scale(self.client_lr, &mut delta);
+        let msg = ctx.ef.expect("EF residual missing").lock().unwrap().step(&delta);
+        let bits = msg.bits_on_wire();
+        msg.decode_into(&mut scratch.dense);
+        // Undo the γ scaling so the server step stays η·γ·agg.
+        lane.add_dense(&scratch.dense, ctx.inv_m / self.client_lr, bits, loss);
+    }
+
+    fn reduce(&self, lanes: &[Mutex<LaneAcc>], update: &mut [f32]) -> ReduceStats {
+        reduce_dense(lanes, update)
+    }
+}
+
+/// QSGD / FedPAQ unbiased quantizer with `s` levels.
+pub struct QsgdAgg {
+    pub s: u32,
+}
+
+impl Aggregator for QsgdAgg {
+    fn nominal_client_bits(&self, d: usize) -> u64 {
+        32 + (d as u64) * (1 + bits_per_level(self.s))
+    }
+
+    fn absorb(
+        &self,
+        delta: Vec<f32>,
+        loss: f64,
+        ctx: AbsorbCtx<'_>,
+        lane: &mut LaneAcc,
+        scratch: &mut Scratch,
+    ) {
+        let q = Qsgd::new(self.s).quantize(&delta, ctx.rng);
+        let bits = q.bits_on_wire();
+        q.decode_into(&mut scratch.dense);
+        lane.add_dense(&scratch.dense, ctx.inv_m, bits, loss);
+    }
+
+    fn reduce(&self, lanes: &[Mutex<LaneAcc>], update: &mut [f32]) -> ReduceStats {
+        reduce_dense(lanes, update)
+    }
+}
+
+/// DP-SignFedAvg (Algorithm 2): clip the *model diff*, perturb, sign.
+pub struct DpSignAgg {
+    pub clip: f32,
+    pub noise_mult: f32,
+    pub client_lr: f32,
+}
+
+impl Aggregator for DpSignAgg {
+    fn nominal_client_bits(&self, d: usize) -> u64 {
+        d as u64
+    }
+
+    fn absorb(
+        &self,
+        mut delta: Vec<f32>,
+        loss: f64,
+        ctx: AbsorbCtx<'_>,
+        lane: &mut LaneAcc,
+        _scratch: &mut Scratch,
+    ) {
+        tensor::scale(self.client_lr, &mut delta); // γ·Σg = x_{t-1} − x_E
+        tensor::clip_l2(&mut delta, self.clip as f64);
+        let noise_std = self.noise_mult * self.clip;
+        for v in delta.iter_mut() {
+            *v += noise_std * ctx.rng.normal() as f32;
+        }
+        lane.add_signs(&PackedSigns::from_f32_signs(&delta), delta.len() as u64, loss);
+    }
+
+    fn reduce(&self, lanes: &[Mutex<LaneAcc>], update: &mut [f32]) -> ReduceStats {
+        reduce_votes(lanes, update)
+    }
+}
+
+/// Uncompressed DP-FedAvg baseline (clip + Gaussian noise, no sign).
+pub struct DpDenseAgg {
+    pub clip: f32,
+    pub noise_mult: f32,
+    pub client_lr: f32,
+}
+
+impl Aggregator for DpDenseAgg {
+    fn nominal_client_bits(&self, d: usize) -> u64 {
+        32 * d as u64
+    }
+
+    fn absorb(
+        &self,
+        mut delta: Vec<f32>,
+        loss: f64,
+        ctx: AbsorbCtx<'_>,
+        lane: &mut LaneAcc,
+        _scratch: &mut Scratch,
+    ) {
+        tensor::scale(self.client_lr, &mut delta);
+        tensor::clip_l2(&mut delta, self.clip as f64);
+        let noise_std = self.noise_mult * self.clip;
+        for v in delta.iter_mut() {
+            *v += noise_std * ctx.rng.normal() as f32;
+        }
+        let bits = 32 * delta.len() as u64;
+        lane.add_dense(&delta, ctx.inv_m, bits, loss);
+    }
+
+    fn reduce(&self, lanes: &[Mutex<LaneAcc>], update: &mut [f32]) -> ReduceStats {
+        reduce_dense(lanes, update)
+    }
+}
+
+/// Magnitude top-k sparsification.
+pub struct TopKAgg {
+    pub frac: f32,
+}
+
+impl Aggregator for TopKAgg {
+    fn nominal_client_bits(&self, d: usize) -> u64 {
+        let k = TopK::new(self.frac).k_for(d) as u64;
+        32 * k + 32 * k
+    }
+
+    fn absorb(
+        &self,
+        delta: Vec<f32>,
+        loss: f64,
+        ctx: AbsorbCtx<'_>,
+        lane: &mut LaneAcc,
+        scratch: &mut Scratch,
+    ) {
+        let msg = TopK::new(self.frac).compress(&delta, ctx.rng);
+        let bits = msg.bits_on_wire();
+        if let Message::Sparse(sp) = &msg {
+            sp.decode_into(&mut scratch.dense);
+        }
+        lane.add_dense(&scratch.dense, ctx.inv_m, bits, loss);
+    }
+
+    fn reduce(&self, lanes: &[Mutex<LaneAcc>], update: &mut [f32]) -> ReduceStats {
+        reduce_dense(lanes, update)
+    }
+}
+
+/// Top-k support + stochastic sign of values — the paper conclusion's
+/// "sign + sparsification" combination.
+pub struct SparseSignAgg {
+    pub frac: f32,
+    pub z: ZParam,
+    pub sigma: f32,
+}
+
+impl Aggregator for SparseSignAgg {
+    fn nominal_client_bits(&self, d: usize) -> u64 {
+        let k = TopK::new(self.frac).k_for(d) as u64;
+        32 * k + k + 32
+    }
+
+    fn absorb(
+        &self,
+        delta: Vec<f32>,
+        loss: f64,
+        ctx: AbsorbCtx<'_>,
+        lane: &mut LaneAcc,
+        scratch: &mut Scratch,
+    ) {
+        let msg = SparseSign::new(self.frac, self.z, self.sigma).compress(&delta, ctx.rng);
+        let bits = msg.bits_on_wire();
+        if let Message::Sparse(sp) = &msg {
+            sp.decode_into(&mut scratch.dense);
+        }
+        lane.add_dense(&scratch.dense, ctx.inv_m, bits, loss);
+    }
+
+    fn reduce(&self, lanes: &[Mutex<LaneAcc>], update: &mut [f32]) -> ReduceStats {
+        reduce_dense(lanes, update)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(rng: &mut Pcg64) -> AbsorbCtx<'_> {
+        AbsorbCtx { rng, round_sigma: 1.0, inv_m: 0.25, ef: None, hook: None }
+    }
+
+    fn mk_lanes(l: usize, d: usize) -> Vec<Mutex<LaneAcc>> {
+        (0..l).map(|_| Mutex::new(LaneAcc::new(d))).collect()
+    }
+
+    fn random_delta(rng: &mut Pcg64, d: usize) -> Vec<f32> {
+        (0..d).map(|_| rng.uniform_in(-2.0, 2.0) as f32).collect()
+    }
+
+    #[test]
+    fn topology_partitions_all_slots_once() {
+        for (lanes, m) in [(1usize, 7usize), (4, 7), (7, 7), (16, 7), (64, 1000)] {
+            let topo = ReduceTopology::new(lanes, m);
+            let mut seen = vec![0u32; m];
+            for lane in 0..topo.lanes() {
+                let mut prev = None;
+                for s in topo.lane_slots(lane) {
+                    assert_eq!(topo.lane_of(s), lane);
+                    // In-lane order must be increasing (the fold order).
+                    assert!(prev.map(|p| p < s).unwrap_or(true));
+                    prev = Some(s);
+                    seen[s] += 1;
+                }
+            }
+            assert!(seen.iter().all(|&c| c == 1), "lanes={lanes} m={m}");
+        }
+    }
+
+    #[test]
+    fn topology_caps_lanes_at_cohort() {
+        assert_eq!(ReduceTopology::new(64, 5).lanes(), 5);
+        assert_eq!(ReduceTopology::new(4, 100).lanes(), 4);
+        assert_eq!(ReduceTopology::new(0, 3).lanes(), 1); // 0 means 1
+    }
+
+    /// Sign votes are integer counts: the aggregate is invariant under any
+    /// permutation of clients across slots/lanes (the "where claimed" part
+    /// of the merge property — dense folds only claim lane-dispatch
+    /// invariance, tested in `fl::engine`).
+    #[test]
+    fn sign_reduce_is_slot_permutation_invariant() {
+        let d = 130;
+        let m = 12;
+        let agg = ZSignAgg { z: ZParam::Finite(1), sigma: SigmaRule::Fixed(1.0) };
+        let mut rng = Pcg64::seeded(5);
+        // One fixed (delta, rng stream) per *client*; permuting slots
+        // re-orders absorption but not any client's own randomness.
+        let deltas: Vec<Vec<f32>> = (0..m).map(|_| random_delta(&mut rng, d)).collect();
+        let run = |perm: &[usize], lanes_n: usize| {
+            let lanes = mk_lanes(lanes_n, d);
+            let topo = ReduceTopology::new(lanes_n, m);
+            for lane in 0..topo.lanes() {
+                for slot in topo.lane_slots(lane) {
+                    let client = perm[slot];
+                    let mut crng = Pcg64::new(77, client as u64);
+                    let mut scratch = Scratch::new(d);
+                    agg.absorb(
+                        deltas[client].clone(),
+                        client as f64,
+                        ctx(&mut crng),
+                        &mut lanes[lane].lock().unwrap(),
+                        &mut scratch,
+                    );
+                }
+            }
+            let mut update = vec![0.0f32; d];
+            let stats = agg.reduce(&lanes, &mut update);
+            (update, stats)
+        };
+        let id: Vec<usize> = (0..m).collect();
+        let (base, base_stats) = run(&id, 3);
+        let mut perm = id.clone();
+        perm.reverse();
+        perm.swap(2, 7);
+        for lanes_n in [1usize, 2, 5, 12] {
+            let (u, stats) = run(&perm, lanes_n);
+            let bits_eq = u.iter().zip(&base).all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(bits_eq, "lanes={lanes_n}");
+            assert_eq!(stats.bits, base_stats.bits);
+            assert_eq!(stats.arrived, base_stats.arrived);
+            // f64 loss sum over a permutation is NOT claimed bit-equal in
+            // general; here it is exact (small integers), so check it too.
+            assert_eq!(stats.loss_sum, base_stats.loss_sum);
+        }
+    }
+
+    /// The dense reduce is a pure function of (slot contents, lane count):
+    /// the order in which *lanes* are populated — i.e. which worker claims
+    /// which lane, in any order — never changes the folded update.
+    #[test]
+    fn dense_reduce_is_lane_dispatch_invariant() {
+        let d = 97;
+        let m = 23;
+        let lanes_n = 5;
+        let agg = QsgdAgg { s: 2 };
+        let mut rng = Pcg64::seeded(9);
+        let deltas: Vec<Vec<f32>> = (0..m).map(|_| random_delta(&mut rng, d)).collect();
+        let topo = ReduceTopology::new(lanes_n, m);
+        let run = |lane_order: &[usize]| {
+            let lanes = mk_lanes(topo.lanes(), d);
+            let mut scratch = Scratch::new(d);
+            for &lane in lane_order {
+                for slot in topo.lane_slots(lane) {
+                    let mut crng = Pcg64::new(3, slot as u64);
+                    agg.absorb(
+                        deltas[slot].clone(),
+                        0.5 * slot as f64,
+                        ctx(&mut crng),
+                        &mut lanes[lane].lock().unwrap(),
+                        &mut scratch,
+                    );
+                }
+            }
+            let mut update = vec![0.0f32; d];
+            let stats = agg.reduce(&lanes, &mut update);
+            (update, stats)
+        };
+        let (base, bstats) = run(&[0, 1, 2, 3, 4]);
+        for order in [[4usize, 3, 2, 1, 0], [2, 0, 4, 1, 3]] {
+            let (u, stats) = run(&order);
+            assert!(u.iter().zip(&base).all(|(a, b)| a.to_bits() == b.to_bits()));
+            assert_eq!(stats.loss_sum.to_bits(), bstats.loss_sum.to_bits());
+            assert_eq!(stats.bits, bstats.bits);
+        }
+    }
+
+    /// With one slot per lane (m <= L) the lane fold IS the historical
+    /// slot-ordered fold, bit for bit.
+    #[test]
+    fn dense_reduce_matches_slot_ordered_fold_when_lanes_cover_slots() {
+        let d = 61;
+        let m = 8;
+        let inv_m = 1.0f32 / m as f32;
+        let mut rng = Pcg64::seeded(11);
+        let deltas: Vec<Vec<f32>> = (0..m).map(|_| random_delta(&mut rng, d)).collect();
+        // Historical reduce: acc += inv_m * v, slot order.
+        let mut want = vec![0.0f32; d];
+        for v in &deltas {
+            tensor::axpy(inv_m, v, &mut want);
+        }
+        let agg = DenseAgg;
+        let lanes = mk_lanes(m, d);
+        let topo = ReduceTopology::new(64, m);
+        assert_eq!(topo.lanes(), m);
+        let mut scratch = Scratch::new(d);
+        for slot in 0..m {
+            let mut crng = Pcg64::new(1, slot as u64);
+            let c = AbsorbCtx {
+                rng: &mut crng,
+                round_sigma: 0.0,
+                inv_m,
+                ef: None,
+                hook: None,
+            };
+            agg.absorb(
+                deltas[slot].clone(),
+                0.0,
+                c,
+                &mut lanes[topo.lane_of(slot)].lock().unwrap(),
+                &mut scratch,
+            );
+        }
+        let mut update = vec![0.0f32; d];
+        agg.reduce(&lanes, &mut update);
+        assert!(update.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    /// The high-water regression: folding m dense clients through L lanes
+    /// allocates exactly L·d floats of aggregation state — never Θ(m·d).
+    #[test]
+    fn dense_lane_memory_is_lanes_times_d_not_m_times_d() {
+        let d = 128;
+        let m = 64;
+        let lanes_n = 4;
+        let agg = DenseAgg;
+        let lanes = mk_lanes(lanes_n, d);
+        let topo = ReduceTopology::new(lanes_n, m);
+        let mut scratch = Scratch::new(d);
+        let mut rng = Pcg64::seeded(2);
+        for slot in 0..m {
+            let delta = random_delta(&mut rng, d);
+            let mut crng = Pcg64::new(4, slot as u64);
+            agg.absorb(
+                delta,
+                0.0,
+                ctx(&mut crng),
+                &mut lanes[topo.lane_of(slot)].lock().unwrap(),
+                &mut scratch,
+            );
+        }
+        let total: usize = lanes.iter().map(|l| l.lock().unwrap().dense_floats()).sum();
+        assert_eq!(total, lanes_n * d);
+        assert!(total < m * d);
+    }
+
+    /// Sign lanes allocate no dense state at all.
+    #[test]
+    fn sign_lanes_allocate_no_dense_state() {
+        let d = 96;
+        let agg = ZSignAgg { z: ZParam::Finite(1), sigma: SigmaRule::Fixed(0.5) };
+        let lanes = mk_lanes(2, d);
+        let mut scratch = Scratch::new(d);
+        for slot in 0..6usize {
+            let mut crng = Pcg64::new(8, slot as u64);
+            let delta = random_delta(&mut crng.split(1), d);
+            agg.absorb(
+                delta,
+                0.0,
+                ctx(&mut crng),
+                &mut lanes[slot % 2].lock().unwrap(),
+                &mut scratch,
+            );
+        }
+        assert!(lanes.iter().all(|l| l.lock().unwrap().dense_floats() == 0));
+    }
+
+    /// Every fixed-rate aggregator's absorbed wire bits match its nominal
+    /// formula — the single source the scheduler and the billing read.
+    #[test]
+    fn absorbed_bits_match_nominal_formula() {
+        let d = 100;
+        let aggs: Vec<Box<dyn Aggregator>> = vec![
+            Box::new(DenseAgg),
+            Box::new(ZSignAgg { z: ZParam::Finite(1), sigma: SigmaRule::Fixed(1.0) }),
+            Box::new(QsgdAgg { s: 1 }),
+            Box::new(QsgdAgg { s: 4 }),
+            Box::new(DpSignAgg { clip: 0.5, noise_mult: 1.0, client_lr: 0.1 }),
+            Box::new(DpDenseAgg { clip: 0.5, noise_mult: 1.0, client_lr: 0.1 }),
+            Box::new(TopKAgg { frac: 0.1 }),
+            Box::new(SparseSignAgg { frac: 0.1, z: ZParam::Finite(1), sigma: 1.0 }),
+        ];
+        for agg in &aggs {
+            let lanes = mk_lanes(1, d);
+            let mut scratch = Scratch::new(d);
+            let mut rng = Pcg64::seeded(3);
+            let delta = random_delta(&mut rng.split(9), d);
+            agg.absorb(delta, 0.0, ctx(&mut rng), &mut lanes[0].lock().unwrap(), &mut scratch);
+            assert_eq!(lanes[0].lock().unwrap().bits(), agg.nominal_client_bits(d));
+        }
+        // EF separately (needs a residual).
+        let ef_agg = EfAgg { client_lr: 0.1 };
+        let ef = Mutex::new(EfState::new(d));
+        let lanes = mk_lanes(1, d);
+        let mut scratch = Scratch::new(d);
+        let mut rng = Pcg64::seeded(4);
+        let delta = random_delta(&mut rng.split(2), d);
+        let c = AbsorbCtx {
+            rng: &mut rng,
+            round_sigma: 0.0,
+            inv_m: 1.0,
+            ef: Some(&ef),
+            hook: None,
+        };
+        ef_agg.absorb(delta, 0.0, c, &mut lanes[0].lock().unwrap(), &mut scratch);
+        assert_eq!(lanes[0].lock().unwrap().bits(), ef_agg.nominal_client_bits(d));
+    }
+
+    /// `reset` keeps allocations but clears all fold state and tallies.
+    #[test]
+    fn lane_reset_clears_state() {
+        let d = 32;
+        let agg = QsgdAgg { s: 2 };
+        let lanes = mk_lanes(1, d);
+        let mut scratch = Scratch::new(d);
+        let mut rng = Pcg64::seeded(6);
+        let delta = random_delta(&mut rng.split(7), d);
+        agg.absorb(delta, 1.5, ctx(&mut rng), &mut lanes[0].lock().unwrap(), &mut scratch);
+        let mut lane = lanes[0].lock().unwrap();
+        assert!(lane.bits() > 0 && lane.arrived() == 1);
+        lane.reset();
+        assert_eq!(lane.bits(), 0);
+        assert_eq!(lane.arrived(), 0);
+        assert_eq!(lane.loss, 0.0);
+        assert_eq!(lane.dense_floats(), d); // allocation retained...
+        assert!(lane.dense.as_ref().unwrap().iter().all(|&x| x == 0.0)); // ...but zeroed
+    }
+}

@@ -13,11 +13,15 @@
 //!   baselines of Appendix E.
 //! * [`error_feedback`] — the EF-SignSGD residual state (Karimireddy et
 //!   al. '19), the paper's strongest sign-based baseline.
+//! * [`agg`] — the server-side aggregation seam: per-compressor
+//!   [`agg::Aggregator`]s that stream client messages into lane-sharded
+//!   state under a fixed, parallelism-independent reduction topology.
 //!
 //! The [`Compressor`] trait unifies them for the FL server; every message
 //! reports its exact wire size so the accuracy-vs-bits figures (Fig. 3c,
 //! Fig. 16) are byte-accurate.
 
+pub mod agg;
 pub mod error_feedback;
 pub mod pack;
 pub mod qsgd;

@@ -320,6 +320,32 @@ mod tests {
     }
 
     #[test]
+    fn merge_is_associative() {
+        // (a ⊕ b) ⊕ c == a ⊕ (b ⊕ c): integer counts make the shard merge
+        // associative, which is what lets the aggregation seam fold lane
+        // accumulators in any grouping without changing the result.
+        let mut rng = Pcg64::seeded(41);
+        let d = 129;
+        let mk = |rng: &mut Pcg64, k: usize| {
+            let mut acc = VoteAccumulator::new(d);
+            for _ in 0..k {
+                acc.add(&PackedSigns::from_signs(&random_signs(rng, d)));
+            }
+            acc
+        };
+        let (a, b, c) = (mk(&mut rng, 3), mk(&mut rng, 1), mk(&mut rng, 4));
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut right = a.clone();
+        right.merge(&bc);
+        assert_eq!(left.counts(), right.counts());
+        assert_eq!(left.num_votes(), right.num_votes());
+    }
+
+    #[test]
     #[should_panic(expected = "vote length mismatch")]
     fn merge_rejects_length_mismatch() {
         let mut a = VoteAccumulator::new(4);

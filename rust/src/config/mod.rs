@@ -114,6 +114,16 @@ impl Config {
         self.usize_or("parallelism", default)
     }
 
+    /// The `reduce_lanes` key (`--reduce-lanes` on the CLI): lanes of the
+    /// fixed reduction topology (`ServerConfig::reduce_lanes`). Part of the
+    /// reproducibility contract, like the seed.
+    pub fn reduce_lanes_or(&self, default: usize) -> usize {
+        // Accept both spellings: config files use `reduce_lanes`, CLI
+        // overrides arrive as `reduce-lanes`.
+        let d = self.usize_or("reduce_lanes", default);
+        self.usize_or("reduce-lanes", d)
+    }
+
     pub fn opt_usize(&self, key: &str) -> Option<usize> {
         self.raw(key).map(|s| s.parse().unwrap_or_else(|_| panic!("config {key}: bad usize {s:?}")))
     }

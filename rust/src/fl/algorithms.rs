@@ -2,6 +2,10 @@
 //! curve in Figures 1–17, expressed as `(compression, server optimizer)`
 //! configurations over the shared round loop in [`super::server`].
 
+use crate::compress::agg::{
+    Aggregator, DenseAgg, DpDenseAgg, DpSignAgg, EfAgg, QsgdAgg, SparseSignAgg, TopKAgg,
+    ZSignAgg,
+};
 use crate::compress::sign::SigmaRule;
 use crate::rng::ZParam;
 
@@ -35,6 +39,30 @@ impl Compression {
     /// Does this compressor transmit packed signs (d bits)?
     pub fn is_sign(&self) -> bool {
         matches!(self, Compression::ZSign { .. } | Compression::DpSign { .. })
+    }
+
+    /// Build this family's server-side aggregation seam (see
+    /// `compress::agg`): how one client's update is compressed and streamed
+    /// into lane-sharded state, and how the lanes reduce into the round
+    /// update. `client_lr` is γ for the families that compress the
+    /// stepsize-scaled model diff (EF, the DP variants).
+    pub fn aggregator(&self, client_lr: f32) -> Box<dyn Aggregator> {
+        match *self {
+            Compression::None => Box::new(DenseAgg),
+            Compression::ZSign { z, sigma } => Box::new(ZSignAgg { z, sigma }),
+            Compression::ErrorFeedback => Box::new(EfAgg { client_lr }),
+            Compression::Qsgd { s } => Box::new(QsgdAgg { s }),
+            Compression::DpSign { clip, noise_mult } => {
+                Box::new(DpSignAgg { clip, noise_mult, client_lr })
+            }
+            Compression::DpDense { clip, noise_mult } => {
+                Box::new(DpDenseAgg { clip, noise_mult, client_lr })
+            }
+            Compression::TopK { frac } => Box::new(TopKAgg { frac }),
+            Compression::SparseSign { frac, z, sigma } => {
+                Box::new(SparseSignAgg { frac, z, sigma })
+            }
+        }
     }
 }
 

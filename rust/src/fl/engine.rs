@@ -5,23 +5,27 @@
 //! a round is executed:
 //!
 //! * each participant becomes a [`ClientTask`] — local update → uplink
-//!   compression → `ClientMsg` — driven entirely by its pre-split `Pcg64`
+//!   compression → lane fold — driven entirely by its pre-split `Pcg64`
 //!   stream, so task execution order is irrelevant to the result;
-//! * tasks fan out across a scoped thread pool of `ServerConfig::parallelism`
-//!   workers when the backend offers a [`ParallelBackend`] view, each worker
-//!   folding packed-sign votes into its own `VoteAccumulator` shard (the
-//!   popcount hot path stays allocation-free);
-//! * the coordinator then reduces deterministically: vote shards merge via
-//!   `VoteAccumulator::merge` (integer counts — exact in any order), while
-//!   dense/QSGD/sparse contributions and client losses are applied in
-//!   participant order so every f32/f64 reduction tree is independent of the
-//!   thread count.
+//! * the round reduce is one seam for every compressor family: the
+//!   algorithm's `compress::agg::Aggregator` streams each client's message
+//!   into a per-lane `LaneAcc` the moment it is produced (votes *and*
+//!   dense payloads — nothing is buffered per client), then folds the
+//!   lanes into the round update on the coordinator;
+//! * when the backend offers a [`ParallelBackend`] view, worker threads
+//!   claim whole lanes off an atomic queue (at most `reduce_lanes` workers
+//!   are useful) and process each lane's slots in increasing order.
 //!
-//! Determinism contract: for any backend with a parallel view, the
-//! `RunResult` is **bit-identical** for every `parallelism` value (tested
-//! below and in `tests/integration_fl.rs`); stateful backends (PJRT) run on
-//! the sequential path, where the compression hook may call back into the
-//! backend, and the knob is a no-op.
+//! Reduction-topology contract: the aggregate is a pure function of the
+//! participant slots and `ServerConfig::reduce_lanes` (L): slot `s` folds
+//! into lane `s mod L` in increasing slot order, and lanes fold in lane
+//! order. Vote counts are integers (exact in any order); dense f32 folds
+//! are pinned by the topology. Hence the `RunResult` is **bit-identical**
+//! for every `parallelism` value (tested below and in
+//! `tests/integration_fl.rs`), and peak aggregation memory is
+//! O(min(L, m)·d), never O(m·d). Stateful backends (PJRT) run on the
+//! sequential path — same topology, same result — where the compression
+//! hook may call back into the backend.
 //!
 //! Who participates each round is delegated to a [`ParticipationPolicy`]:
 //! [`UniformPolicy`] reproduces the historical `clients_per_round` shuffle
@@ -31,17 +35,17 @@
 //! spawned, so they cannot break the parallelism contract.
 
 use super::algorithms::{AlgorithmConfig, Compression, ServerOpt};
-use super::backend::{LocalOutcome, ParallelBackend, TrainBackend};
+use super::backend::{ParallelBackend, TrainBackend};
 use super::metrics::{RoundRecord, RunResult};
 use super::plateau::PlateauController;
 use super::server::{Participation, ServerConfig};
+use crate::compress::agg::{
+    AbsorbCtx, Aggregator, LaneAcc, ReduceStats, ReduceTopology, Scratch, SignKernelHook,
+};
 use crate::compress::error_feedback::EfState;
-use crate::compress::pack::{PackedSigns, VoteAccumulator};
-use crate::compress::qsgd::Qsgd;
+use crate::compress::pack::PackedSigns;
 use crate::compress::sign::{SigmaRule, StochasticSign};
-use crate::compress::sparsify::{SparseSign, TopK};
-use crate::compress::{Compressor, Message};
-use crate::rng::Pcg64;
+use crate::rng::{Pcg64, ZParam};
 use crate::sim::{ByzantineMode, ScenarioPolicy};
 use crate::tensor;
 use crate::util::Timer;
@@ -152,26 +156,22 @@ impl ClientTask {
     }
 }
 
-/// What a finished client task hands back to the coordinator.
-enum Payload {
-    /// Sign-family vote, already folded into the worker's accumulator shard.
-    Voted,
-    /// Dense contribution: the coordinator axpys `weight * v` in
-    /// participant order.
-    Dense { v: Vec<f32>, weight: f32 },
+/// Adapter exposing the backend's AOT kernel route to the aggregation seam
+/// (sequential path only — see `TrainBackend::compress_hook`).
+struct BackendHook<'b> {
+    backend: &'b mut dyn TrainBackend,
 }
 
-struct ClientMsg {
-    loss: f64,
-    bits: u64,
-    payload: Payload,
-}
-
-/// Per-worker state reused across rounds: a vote-accumulator shard plus the
-/// i8 sign scratch, so the packed-sign hot path allocates nothing per call.
-struct WorkerShard {
-    votes: VoteAccumulator,
-    signs_buf: Vec<i8>,
+impl SignKernelHook for BackendHook<'_> {
+    fn packed_sign(
+        &mut self,
+        delta: &[f32],
+        z: ZParam,
+        sigma: f32,
+        rng: &mut Pcg64,
+    ) -> Option<PackedSigns> {
+        self.backend.compress_hook(delta, z, sigma, rng)
+    }
 }
 
 /// The round loop: server state + per-round client execution machinery.
@@ -180,6 +180,8 @@ pub struct RoundEngine<'a> {
     cfg: &'a ServerConfig,
     d: usize,
     n: usize,
+    /// The algorithm's aggregation seam (stateless; shared by workers).
+    agg: Box<dyn Aggregator>,
     // Server-optimizer state.
     momentum_buf: Vec<f32>,
     adam_v: Vec<f32>,
@@ -189,13 +191,14 @@ pub struct RoundEngine<'a> {
     /// across worker threads: distinct clients touch distinct entries, so
     /// there is never contention.
     ef: Vec<Mutex<EfState>>,
-    // Aggregation state, reused across rounds.
-    votes: VoteAccumulator,
-    dense_acc: Vec<f32>,
+    /// Lane-sharded aggregation state, reused across rounds. Lanes are
+    /// locked by the one worker that claims them — never contended.
+    lanes: Vec<Mutex<LaneAcc>>,
+    /// Per-worker compression scratch, reused across rounds.
+    scratches: Vec<Scratch>,
     update: Vec<f32>,
+    /// Downlink-compression sign scratch.
     signs_buf: Vec<i8>,
-    workers: Vec<WorkerShard>,
-    slots: Vec<Mutex<Option<ClientMsg>>>,
     bits_up: u64,
     bits_down: u64,
 }
@@ -204,6 +207,7 @@ impl<'a> RoundEngine<'a> {
     /// `d` / `n`: the backend's parameter dimension and client count.
     pub fn new(algo: &'a AlgorithmConfig, cfg: &'a ServerConfig, d: usize, n: usize) -> Self {
         RoundEngine {
+            agg: algo.compression.aggregator(algo.client_lr),
             algo,
             cfg,
             d,
@@ -213,15 +217,20 @@ impl<'a> RoundEngine<'a> {
             adam_t: 0,
             plateau: None,
             ef: Vec::new(),
-            votes: VoteAccumulator::new(d),
-            dense_acc: vec![0.0; d],
+            lanes: Vec::new(),
+            scratches: Vec::new(),
             update: vec![0.0; d],
             signs_buf: vec![0i8; d],
-            workers: Vec::new(),
-            slots: Vec::new(),
             bits_up: 0,
             bits_down: 0,
         }
+    }
+
+    /// Total f32s currently allocated across dense lane accumulators. The
+    /// streamed reduce's high-water mark is O(min(reduce_lanes, m)·d) —
+    /// never O(m·d) — which the regression tests pin through this.
+    pub fn lane_dense_floats(&self) -> usize {
+        self.lanes.iter().map(|l| l.lock().unwrap().dense_floats()).sum()
     }
 
     /// Run the full experiment (Algorithm 1 / Algorithm 2 round loop).
@@ -258,7 +267,9 @@ impl<'a> RoundEngine<'a> {
         let mut policy: Box<dyn ParticipationPolicy> = match &self.cfg.participation {
             Participation::Uniform => Box::new(UniformPolicy { n, m: m_per_round }),
             Participation::Simulated(sc) => {
-                let up_bits = crate::sim::nominal_uplink_bits(&self.algo.compression, self.d);
+                // The scheduler's transfer-size model reads the
+                // aggregator's exact per-client wire cost.
+                let up_bits = self.agg.nominal_client_bits(self.d);
                 let down_bits = if self.cfg.downlink_sign.is_some() {
                     self.d as u64
                 } else {
@@ -300,17 +311,19 @@ impl<'a> RoundEngine<'a> {
             // Effective sigma this round (plateau overrides the fixed value).
             let round_sigma = effective_sigma(self.algo, self.plateau.as_ref());
 
-            // 2–4. Local updates + compression + deterministic reduce.
-            let loss_sum = if arrived > 0 {
-                self.run_clients(backend, &root, t, &params, &plan.participants, round_sigma)
-            } else {
-                0.0
-            };
-
-            // 5. Aggregate + server step. When nobody reported (every
-            //    selected client dropped, missed the deadline or was
-            //    unreachable) the model simply doesn't move this round.
+            // 2–5. Local updates + streamed compression + lane reduce +
+            //    server step. When nobody reported (every selected client
+            //    dropped, missed the deadline or was unreachable) the model
+            //    simply doesn't move this round — and zero uplink is billed,
+            //    because no aggregator tally exists.
             if arrived > 0 {
+                let stats =
+                    self.run_clients(backend, &root, t, &params, &plan.participants, round_sigma);
+                debug_assert_eq!(stats.arrived as usize, arrived);
+                // Uplink billing comes from the aggregator's tally: exact
+                // wire bits of the messages actually absorbed.
+                self.bits_up += stats.bits;
+
                 let step_scale = match &self.algo.compression {
                     // Alg. 2 applies η to the mean sign of *model diffs* (no γ).
                     Compression::DpSign { .. } => self.algo.server_lr,
@@ -319,11 +332,6 @@ impl<'a> RoundEngine<'a> {
                     // Alg. 1 line 15: η·γ·mean(Δ).
                     _ => self.algo.server_lr * self.algo.client_lr,
                 };
-                if self.algo.compression.is_sign() {
-                    self.votes.mean_into(1.0, &mut self.update);
-                } else {
-                    self.update.copy_from_slice(&self.dense_acc);
-                }
                 // Optional downlink compression: broadcast the update itself
                 // as a dequantized stochastic sign (applied server-side too,
                 // so the global iterate equals what the clients reconstruct).
@@ -364,8 +372,9 @@ impl<'a> RoundEngine<'a> {
                     }
                 }
 
-                // 6. Plateau feedback (mean loss over *arrived* clients).
-                let mean_local_loss = loss_sum / arrived as f64;
+                // 6. Plateau feedback (mean loss over *arrived* clients,
+                //    folded lane-by-lane in the fixed lane order).
+                let mean_local_loss = stats.loss_sum / arrived as f64;
                 if let Some(p) = self.plateau.as_mut() {
                     p.observe(mean_local_loss);
                 }
@@ -393,8 +402,9 @@ impl<'a> RoundEngine<'a> {
         RunResult { algorithm: self.algo.name.clone(), records }
     }
 
-    /// Execute every participant's task for round `t`, then reduce. Returns
-    /// the sum of client losses (accumulated in participant order).
+    /// Execute every participant's task for round `t` through the
+    /// aggregation seam, then fold the lanes. Fills `self.update` with the
+    /// aggregated round update and returns the seam's tallies.
     fn run_clients(
         &mut self,
         backend: &mut dyn TrainBackend,
@@ -403,24 +413,22 @@ impl<'a> RoundEngine<'a> {
         params: &[f32],
         participants: &[Participant],
         round_sigma: f32,
-    ) -> f64 {
+    ) -> ReduceStats {
         let m = participants.len();
         let inv_m = 1.0f32 / m as f32;
+        let topo = ReduceTopology::new(self.cfg.reduce_lanes, m);
+        let lanes_n = topo.lanes();
 
-        // Reset round aggregation state.
-        self.votes.reset();
-        self.dense_acc.iter_mut().for_each(|v| *v = 0.0);
-        self.slots.clear();
-        self.slots.resize_with(m, || Mutex::new(None));
-        let threads = self.cfg.parallelism.max(1).min(m);
-        while self.workers.len() < threads {
-            self.workers.push(WorkerShard {
-                votes: VoteAccumulator::new(self.d),
-                signs_buf: vec![0i8; self.d],
-            });
+        // Reset round aggregation state (lazily grown, reused across rounds).
+        while self.lanes.len() < lanes_n {
+            self.lanes.push(Mutex::new(LaneAcc::new(self.d)));
         }
-        for w in self.workers.iter_mut() {
-            w.votes.reset();
+        for lane in self.lanes[..lanes_n].iter_mut() {
+            lane.get_mut().unwrap().reset();
+        }
+        let threads = self.cfg.parallelism.max(1).min(lanes_n);
+        while self.scratches.len() < threads {
+            self.scratches.push(Scratch::new(self.d));
         }
 
         // The parallel path runs iff the backend is Sync-safe; which path
@@ -428,79 +436,54 @@ impl<'a> RoundEngine<'a> {
         // produces the same per-client messages.
         if backend.as_parallel().is_some() {
             let par = backend.as_parallel().unwrap();
-            self.run_clients_shared(
+            let next = AtomicUsize::new(0);
+            let ctx = RoundCtx {
                 par,
+                agg: &*self.agg,
+                algo: self.algo,
+                topo,
                 root,
                 t,
                 params,
                 participants,
                 round_sigma,
                 inv_m,
-                threads,
-            );
-        } else {
-            self.run_clients_exclusive(backend, root, t, params, participants, round_sigma, inv_m);
-        }
-
-        // Deterministic reduce. Vote shards merge exactly (integer counts);
-        // dense payloads and losses apply in participant order, so the
-        // floating-point reduction tree is independent of the thread count.
-        for w in &self.workers[..threads] {
-            self.votes.merge(&w.votes);
-        }
-        let mut loss_sum = 0.0f64;
-        for slot in self.slots.iter_mut() {
-            let msg = slot.get_mut().unwrap().take().expect("client task produced no message");
-            loss_sum += msg.loss;
-            self.bits_up += msg.bits;
-            if let Payload::Dense { v, weight } = msg.payload {
-                tensor::axpy(weight, &v, &mut self.dense_acc);
+                ef: &self.ef,
+                lanes: &self.lanes[..lanes_n],
+                next: &next,
+            };
+            if threads <= 1 {
+                worker_loop(&ctx, &mut self.scratches[0]);
+            } else {
+                let ctx = &ctx;
+                std::thread::scope(|s| {
+                    for scratch in self.scratches[..threads].iter_mut() {
+                        s.spawn(move || worker_loop(ctx, scratch));
+                    }
+                });
             }
-        }
-        loss_sum
-    }
-
-    /// Fan client tasks across scoped worker threads (shared backend view).
-    #[allow(clippy::too_many_arguments)]
-    fn run_clients_shared(
-        &mut self,
-        par: &dyn ParallelBackend,
-        root: &Pcg64,
-        t: usize,
-        params: &[f32],
-        participants: &[Participant],
-        round_sigma: f32,
-        inv_m: f32,
-        threads: usize,
-    ) {
-        let next = AtomicUsize::new(0);
-        let ctx = RoundCtx {
-            par,
-            algo: self.algo,
-            root,
-            t,
-            params,
-            participants,
-            round_sigma,
-            inv_m,
-            ef: &self.ef,
-            slots: &self.slots,
-            next: &next,
-        };
-        if threads <= 1 {
-            worker_loop(&ctx, &mut self.workers[0]);
         } else {
-            let ctx = &ctx;
-            std::thread::scope(|s| {
-                for shard in self.workers[..threads].iter_mut() {
-                    s.spawn(move || worker_loop(ctx, shard));
-                }
-            });
+            self.run_clients_exclusive(
+                backend,
+                root,
+                t,
+                params,
+                participants,
+                round_sigma,
+                inv_m,
+                topo,
+            );
         }
+
+        // Fixed-topology coordinator fold: lanes in lane-index order.
+        self.agg.reduce(&self.lanes[..lanes_n], &mut self.update)
     }
 
     /// Sequential path for stateful backends; the compression hook may call
-    /// back into the backend (the PJRT Pallas kernel route).
+    /// back into the backend (the PJRT Pallas kernel route). Walking slots
+    /// in natural order visits every lane's slots in increasing order, so
+    /// the lane contents — and therefore the reduce — equal the parallel
+    /// path's exactly.
     #[allow(clippy::too_many_arguments)]
     fn run_clients_exclusive(
         &mut self,
@@ -511,31 +494,35 @@ impl<'a> RoundEngine<'a> {
         participants: &[Participant],
         round_sigma: f32,
         inv_m: f32,
+        topo: ReduceTopology,
     ) {
-        let shard = &mut self.workers[0];
-        for (i, part) in participants.iter().enumerate() {
-            let client = part.client;
-            let mut task = ClientTask::new(root, t, i, client);
-            let outcome = backend.local_update(
-                client,
+        let mut hook = BackendHook { backend };
+        for (slot, part) in participants.iter().enumerate() {
+            let mut task = ClientTask::new(root, t, slot, part.client);
+            let mut outcome = hook.backend.local_update(
+                part.client,
                 params,
                 self.algo.local_steps,
                 self.algo.client_lr,
                 &mut task.rng,
             );
-            let msg = compress_outcome(
-                outcome,
-                part.fault,
-                &mut task.rng,
-                self.algo,
-                round_sigma,
-                inv_m,
-                &mut shard.votes,
-                &mut shard.signs_buf,
-                self.ef.get(client),
-                Some(&mut *backend),
+            if let Some(mode) = part.fault {
+                mode.apply(&mut outcome.delta);
+            }
+            let lane = self.lanes[topo.lane_of(slot)].get_mut().unwrap();
+            self.agg.absorb(
+                outcome.delta,
+                outcome.mean_loss,
+                AbsorbCtx {
+                    rng: &mut task.rng,
+                    round_sigma,
+                    inv_m,
+                    ef: self.ef.get(part.client),
+                    hook: Some(&mut hook),
+                },
+                lane,
+                &mut self.scratches[0],
             );
-            *self.slots[i].lock().unwrap() = Some(msg);
         }
     }
 }
@@ -544,7 +531,9 @@ impl<'a> RoundEngine<'a> {
 /// every field is a shared reference to Sync data).
 struct RoundCtx<'c> {
     par: &'c dyn ParallelBackend,
+    agg: &'c dyn Aggregator,
     algo: &'c AlgorithmConfig,
+    topo: ReduceTopology,
     root: &'c Pcg64,
     t: usize,
     params: &'c [f32],
@@ -552,160 +541,58 @@ struct RoundCtx<'c> {
     round_sigma: f32,
     inv_m: f32,
     ef: &'c [Mutex<EfState>],
-    slots: &'c [Mutex<Option<ClientMsg>>],
+    lanes: &'c [Mutex<LaneAcc>],
     next: &'c AtomicUsize,
 }
 
-/// Worker body: pull the next task index off the shared queue, run the
-/// client task against the worker's own shard, park the message in its
-/// participant slot.
-fn worker_loop(ctx: &RoundCtx<'_>, shard: &mut WorkerShard) {
-    let m = ctx.participants.len();
+/// Worker body: claim the next lane off the shared queue, run its client
+/// tasks in slot order, folding each message straight into the lane — no
+/// per-client parking, no end-of-round buffer.
+fn worker_loop(ctx: &RoundCtx<'_>, scratch: &mut Scratch) {
     loop {
-        let i = ctx.next.fetch_add(1, Ordering::Relaxed);
-        if i >= m {
+        let lane_i = ctx.next.fetch_add(1, Ordering::Relaxed);
+        if lane_i >= ctx.topo.lanes() {
             break;
         }
-        let part = ctx.participants[i];
-        let client = part.client;
-        let mut task = ClientTask::new(ctx.root, ctx.t, i, client);
-        let outcome = ctx.par.local_update_shared(
-            client,
-            ctx.params,
-            ctx.algo.local_steps,
-            ctx.algo.client_lr,
-            &mut task.rng,
-        );
-        let msg = compress_outcome(
-            outcome,
-            part.fault,
-            &mut task.rng,
-            ctx.algo,
-            ctx.round_sigma,
-            ctx.inv_m,
-            &mut shard.votes,
-            &mut shard.signs_buf,
-            ctx.ef.get(client),
-            None,
-        );
-        *ctx.slots[i].lock().unwrap() = Some(msg);
+        // Uncontended: each lane is claimed by exactly one worker.
+        let mut lane = ctx.lanes[lane_i].lock().unwrap();
+        for slot in ctx.topo.lane_slots(lane_i) {
+            let part = ctx.participants[slot];
+            let mut task = ClientTask::new(ctx.root, ctx.t, slot, part.client);
+            let mut outcome = ctx.par.local_update_shared(
+                part.client,
+                ctx.params,
+                ctx.algo.local_steps,
+                ctx.algo.client_lr,
+                &mut task.rng,
+            );
+            // A byzantine fault corrupts the update direction *before*
+            // compression: the attacker follows the wire format but lies
+            // about its local result — exactly the threat model
+            // majority-vote aggregation is claimed to absorb.
+            if let Some(mode) = part.fault {
+                mode.apply(&mut outcome.delta);
+            }
+            ctx.agg.absorb(
+                outcome.delta,
+                outcome.mean_loss,
+                AbsorbCtx {
+                    rng: &mut task.rng,
+                    round_sigma: ctx.round_sigma,
+                    inv_m: ctx.inv_m,
+                    ef: ctx.ef.get(part.client),
+                    hook: None,
+                },
+                &mut lane,
+                scratch,
+            );
+        }
     }
-}
-
-/// Compress one client's local outcome into its uplink message — Algorithm
-/// 1 lines 11–13 (and the Algorithm 2 clip-perturb-sign variant). Pure in
-/// `(outcome, fault, rng)` apart from the worker-local vote shard / EF
-/// residual it updates, which is what makes task order irrelevant.
-///
-/// A byzantine `fault` corrupts the update direction *before* compression:
-/// the attacker follows the protocol's wire format but lies about its
-/// local result, which is exactly the threat model majority-vote
-/// aggregation is claimed to absorb.
-#[allow(clippy::too_many_arguments)]
-fn compress_outcome(
-    mut outcome: LocalOutcome,
-    fault: Option<ByzantineMode>,
-    rng: &mut Pcg64,
-    algo: &AlgorithmConfig,
-    round_sigma: f32,
-    inv_m: f32,
-    votes: &mut VoteAccumulator,
-    signs_buf: &mut [i8],
-    ef: Option<&Mutex<EfState>>,
-    mut hook: Option<&mut dyn TrainBackend>,
-) -> ClientMsg {
-    if let Some(mode) = fault {
-        mode.apply(&mut outcome.delta);
-    }
-    let d = outcome.delta.len();
-    let loss = outcome.mean_loss;
-    let (bits, payload) = match &algo.compression {
-        Compression::None => (32 * d as u64, Payload::Dense { v: outcome.delta, weight: inv_m }),
-        Compression::ZSign { z, sigma } => {
-            let s = match sigma {
-                SigmaRule::Fixed(_) => round_sigma,
-                SigmaRule::L2Norm => tensor::norm2(&outcome.delta) as f32,
-                SigmaRule::InfNorm => tensor::norm_inf(&outcome.delta) as f32,
-            };
-            // Prefer the backend's AOT Pallas kernel (sequential path only);
-            // fall back to the Rust reference compressor.
-            let hooked = hook.as_mut().and_then(|b| b.compress_hook(&outcome.delta, *z, s, rng));
-            let packed = match hooked {
-                Some(packed) => packed,
-                None => {
-                    let mut comp = StochasticSign::new(*z, SigmaRule::Fixed(s));
-                    comp.compress_into(&outcome.delta, rng, signs_buf);
-                    PackedSigns::from_signs(signs_buf)
-                }
-            };
-            votes.add(&packed);
-            (d as u64, Payload::Voted)
-        }
-        Compression::ErrorFeedback => {
-            // EF compresses the stepsize-scaled update γ·Σg.
-            let mut scaled = outcome.delta;
-            tensor::scale(algo.client_lr, &mut scaled);
-            let msg = ef.expect("EF residual missing").lock().unwrap().step(&scaled);
-            let bits = msg.bits_on_wire();
-            let mut dec = vec![0.0f32; d];
-            msg.decode_into(&mut dec);
-            // Undo the γ scaling so the server step stays η·γ·agg.
-            (bits, Payload::Dense { v: dec, weight: inv_m / algo.client_lr })
-        }
-        Compression::Qsgd { s } => {
-            let q = Qsgd::new(*s).quantize(&outcome.delta, rng);
-            let bits = q.bits_on_wire();
-            let mut dec = vec![0.0f32; d];
-            q.decode_into(&mut dec);
-            (bits, Payload::Dense { v: dec, weight: inv_m })
-        }
-        Compression::DpSign { clip, noise_mult } => {
-            // Alg. 2 line 11: clip the *model diff*, perturb, sign.
-            let mut diff = outcome.delta;
-            tensor::scale(algo.client_lr, &mut diff); // γ·Σg = x_{t-1} − x_E
-            tensor::clip_l2(&mut diff, *clip as f64);
-            let noise_std = noise_mult * clip;
-            for v in diff.iter_mut() {
-                *v += noise_std * rng.normal() as f32;
-            }
-            votes.add(&PackedSigns::from_f32_signs(&diff));
-            (d as u64, Payload::Voted)
-        }
-        Compression::DpDense { clip, noise_mult } => {
-            let mut diff = outcome.delta;
-            tensor::scale(algo.client_lr, &mut diff);
-            tensor::clip_l2(&mut diff, *clip as f64);
-            let noise_std = noise_mult * clip;
-            for v in diff.iter_mut() {
-                *v += noise_std * rng.normal() as f32;
-            }
-            (32 * d as u64, Payload::Dense { v: diff, weight: inv_m })
-        }
-        Compression::TopK { frac } => {
-            let msg = TopK::new(*frac).compress(&outcome.delta, rng);
-            let bits = msg.bits_on_wire();
-            let mut dec = vec![0.0f32; d];
-            if let Message::Sparse(sp) = &msg {
-                sp.decode_into(&mut dec);
-            }
-            (bits, Payload::Dense { v: dec, weight: inv_m })
-        }
-        Compression::SparseSign { frac, z, sigma } => {
-            let msg = SparseSign::new(*frac, *z, *sigma).compress(&outcome.delta, rng);
-            let bits = msg.bits_on_wire();
-            let mut dec = vec![0.0f32; d];
-            if let Message::Sparse(sp) = &msg {
-                sp.decode_into(&mut dec);
-            }
-            (bits, Payload::Dense { v: dec, weight: inv_m })
-        }
-    };
-    ClientMsg { loss, bits, payload }
 }
 
 /// The σ actually applied this round: the plateau controller overrides a
-/// fixed σ; input-dependent rules resolve per client inside
-/// [`compress_outcome`].
+/// fixed σ; input-dependent rules resolve per client inside the
+/// aggregator's `absorb`.
 pub(super) fn effective_sigma(
     algo: &AlgorithmConfig,
     plateau: Option<&PlateauController>,
@@ -765,11 +652,8 @@ mod tests {
         }
     }
 
-    #[test]
-    fn every_compressor_is_bit_exact_across_thread_counts() {
-        // Every Compression variant the server tests cover, full
-        // participation: parallelism must never change the result.
-        let algos = vec![
+    fn all_compressors() -> Vec<AlgorithmConfig> {
+        vec![
             AlgorithmConfig::gd().with_lrs(0.05, 1.0),
             AlgorithmConfig::fedavg(3).with_lrs(0.05, 1.0),
             AlgorithmConfig::signsgd().with_lrs(0.05, 1.0),
@@ -782,13 +666,75 @@ mod tests {
             AlgorithmConfig::sparse_sign(0.25, ZParam::Finite(1), 1.0, 1).with_lrs(0.05, 1.0),
             AlgorithmConfig::dp_signfedavg(0.5, 1.0, 2).with_lrs(0.05, 0.5),
             AlgorithmConfig::dp_fedavg(0.5, 1.0, 2).with_lrs(0.05, 0.5),
-        ];
-        for algo in &algos {
+        ]
+    }
+
+    #[test]
+    fn every_compressor_is_bit_exact_across_thread_counts() {
+        // Every Compression variant the server tests cover, full
+        // participation: parallelism must never change the result.
+        for algo in &all_compressors() {
             let base = run_with(algo, 1, None);
             for par in [2usize, 8] {
                 let run = run_with(algo, par, None);
                 assert_identical(&base, &run, &format!("{} par={par}", algo.name));
             }
+        }
+    }
+
+    #[test]
+    fn multi_slot_lanes_are_bit_exact_across_thread_counts() {
+        // reduce_lanes < m forces multi-slot lanes (the streamed fold with
+        // in-lane ordering actually exercised); parallelism must still be
+        // invisible, for every compressor family.
+        for algo in &all_compressors() {
+            let mk = |par: usize| {
+                let mut b = AnalyticBackend::new(Consensus::gaussian(16, 37, 1234));
+                let cfg = ServerConfig {
+                    rounds: 6,
+                    seed: 13,
+                    eval_every: 1,
+                    parallelism: par,
+                    reduce_lanes: 3,
+                    ..Default::default()
+                };
+                run_experiment(&mut b, algo, &cfg)
+            };
+            let base = mk(1);
+            for par in [2usize, 3, 8] {
+                assert_identical(&base, &mk(par), &format!("{} lanes=3 par={par}", algo.name));
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_lanes_is_part_of_the_topology_not_the_schedule() {
+        // Different lane counts are *allowed* to produce different dense
+        // trajectories (the fold tree changes, like changing the seed) but
+        // each must be internally deterministic. Sign votes are integers,
+        // so absent plateau feedback (the f64 loss fold IS lane-grouped)
+        // the sign trajectory does not depend on the lane count either.
+        let dense = AlgorithmConfig::qsgd(2).with_lrs(0.05, 1.0);
+        let sign = AlgorithmConfig::z_signsgd(ZParam::Finite(1), 2.0).with_lrs(0.05, 1.0);
+        let mk = |algo: &AlgorithmConfig, lanes: usize, par: usize| {
+            let mut b = AnalyticBackend::new(Consensus::gaussian(16, 37, 1234));
+            let cfg = ServerConfig {
+                rounds: 6,
+                seed: 21,
+                eval_every: 1,
+                parallelism: par,
+                reduce_lanes: lanes,
+                ..Default::default()
+            };
+            run_experiment(&mut b, algo, &cfg)
+        };
+        for lanes in [2usize, 7, 64] {
+            assert_identical(
+                &mk(&dense, lanes, 1),
+                &mk(&dense, lanes, 8),
+                &format!("qsgd lanes={lanes}"),
+            );
+            assert_identical(&mk(&sign, 64, 1), &mk(&sign, lanes, 4), "sign lane-count");
         }
     }
 
@@ -843,7 +789,7 @@ mod tests {
 
     #[test]
     fn oversubscribed_parallelism_is_capped_and_exact() {
-        // More threads than clients must neither crash nor change results.
+        // More threads than lanes must neither crash nor change results.
         let algo = AlgorithmConfig::z_signsgd(ZParam::Finite(1), 1.0).with_lrs(0.05, 1.0);
         let base = run_with(&algo, 1, Some(4));
         let wide = run_with(&algo, 64, Some(4));
@@ -854,6 +800,63 @@ mod tests {
     fn parallelism_zero_is_treated_as_one() {
         let algo = AlgorithmConfig::qsgd(2).with_lrs(0.05, 1.0);
         assert_identical(&run_with(&algo, 0, None), &run_with(&algo, 1, None), "par=0");
+    }
+
+    #[test]
+    fn dense_high_water_is_lanes_not_cohort() {
+        // 48 clients streamed through 4 lanes: dense aggregation state must
+        // be exactly 4·d floats, not 48·d — the Θ(m·d) cliff is gone.
+        let n = 48;
+        let d = 37;
+        for algo in [
+            AlgorithmConfig::fedavg(2).with_lrs(0.05, 1.0),
+            AlgorithmConfig::qsgd(2).with_lrs(0.05, 1.0),
+        ] {
+            let cfg = ServerConfig {
+                rounds: 3,
+                seed: 7,
+                parallelism: 4,
+                reduce_lanes: 4,
+                ..Default::default()
+            };
+            let mut engine = RoundEngine::new(&algo, &cfg, d, n);
+            let mut b = AnalyticBackend::new(Consensus::gaussian(n, d, 3));
+            engine.run(&mut b);
+            assert_eq!(engine.lane_dense_floats(), 4 * d, "{}", algo.name);
+        }
+        // The sign family allocates no dense lane state at all.
+        let algo = AlgorithmConfig::z_signsgd(ZParam::Finite(1), 1.0).with_lrs(0.05, 1.0);
+        let cfg =
+            ServerConfig { rounds: 3, seed: 7, parallelism: 4, ..Default::default() };
+        let mut engine = RoundEngine::new(&algo, &cfg, d, n);
+        let mut b = AnalyticBackend::new(Consensus::gaussian(n, d, 3));
+        engine.run(&mut b);
+        assert_eq!(engine.lane_dense_floats(), 0);
+    }
+
+    #[test]
+    fn bits_billing_comes_from_the_aggregator_tally() {
+        // Per-round uplink billing pinned per family: sign = d bits/client,
+        // QSGD(s=1) = 32 + 2d, dense = 32d — exactly what the aggregator
+        // absorbed, scaled by actual arrivals.
+        let n = 6;
+        let d = 33;
+        let rounds = 4;
+        let cases: Vec<(AlgorithmConfig, u64)> = vec![
+            (AlgorithmConfig::signsgd().with_lrs(0.01, 1.0), d as u64),
+            (AlgorithmConfig::qsgd(1).with_lrs(0.01, 1.0), 32 + 2 * d as u64),
+            (AlgorithmConfig::gd().with_lrs(0.01, 1.0), 32 * d as u64),
+            (AlgorithmConfig::ef_signsgd().with_lrs(0.01, 1.0), 32 + d as u64),
+        ];
+        for (algo, per_client) in cases {
+            let mut b = AnalyticBackend::new(Consensus::gaussian(n, d, 17));
+            let cfg = ServerConfig { rounds, seed: 1, eval_every: 1, ..Default::default() };
+            let run = run_experiment(&mut b, &algo, &cfg);
+            for rec in &run.records {
+                let expect = per_client * n as u64 * (rec.round as u64 + 1);
+                assert_eq!(rec.bits_up, expect, "{} round {}", algo.name, rec.round);
+            }
+        }
     }
 
     #[test]
@@ -936,7 +939,8 @@ mod tests {
     #[test]
     fn impossible_deadline_freezes_the_model() {
         // Nobody can report in 1 µs: every round is empty and the iterate
-        // must not move (no update, no plateau feedback, no uplink bits).
+        // must not move (no update, no plateau feedback, no uplink bits —
+        // empty rounds bill zero because no aggregator tally exists).
         let mut sc = scenario(0.0);
         sc.deadline_s = 1e-6;
         let algo = AlgorithmConfig::z_signsgd(ZParam::Finite(1), 1.0).with_lrs(0.05, 1.0);

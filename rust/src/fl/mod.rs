@@ -11,9 +11,11 @@
 //!   point (client sampling cadence, plateau, downlink, parallelism knob,
 //!   participation mode).
 //! * [`engine`] — the round loop proper: per-client tasks fanned across a
-//!   scoped thread pool, sharded sign-vote accumulation, deterministic
-//!   reduction (bit-identical results for every thread count), and the
-//!   `ParticipationPolicy` seam the `sim/` scenario engine plugs into.
+//!   scoped thread pool, every compressor family streamed through the
+//!   unified `compress::agg::Aggregator` seam under a fixed lane-sharded
+//!   reduction topology (bit-identical results for every thread count, no
+//!   per-client buffering), and the `ParticipationPolicy` seam the `sim/`
+//!   scenario engine plugs into.
 //! * [`plateau`] — §4.4's Plateau criterion for the adaptive noise scale.
 //! * [`metrics`] — round records, repeat aggregation (mean ± std), CSV.
 

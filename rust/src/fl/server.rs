@@ -9,9 +9,10 @@
 //!      fanning clients across worker threads when the backend allows it;
 //!   3. apply the configured uplink compressor to each client's update
 //!      direction `(x_{t-1} − x^i_{t-1,E})/γ` and account the exact bits;
-//!   4. aggregate: packed-sign **vote accumulation** for the sign family
-//!      (worker-sharded `compress::pack::VoteAccumulator`s merged exactly),
-//!      dense mean otherwise;
+//!   4. aggregate through the unified `compress::agg::Aggregator` seam:
+//!      every family streams client messages into lane-sharded state
+//!      (packed-sign votes merged exactly; dense payloads folded under the
+//!      fixed `reduce_lanes` topology — nothing buffered per client);
 //!   5. server step `x_t = x_{t-1} − η·γ·agg` (Alg. 1 line 15), with
 //!      optional server momentum (the paper's "wM" baselines) and the DP
 //!      variant's γ-free step (Alg. 2 line 15);
@@ -72,10 +73,29 @@ pub struct ServerConfig {
     /// `RunResult` is bit-identical for every value of this knob. Stateful
     /// backends (the PJRT runtime) serialize and ignore it. 0 means 1.
     pub parallelism: usize,
+    /// Lanes L of the fixed reduction topology (see `compress::agg`):
+    /// participant slot `s` folds into lane `s mod L`, in increasing slot
+    /// order within a lane, and lanes fold in lane order. Like the seed,
+    /// this is part of the reproducibility contract — changing it changes
+    /// dense-family trajectories (a different, equally valid fold tree),
+    /// and with the plateau controller on it can also shift sign-family
+    /// runs at m > L (the f64 loss fold feeding the controller is
+    /// lane-grouped) — but for any fixed value the result is bit-identical
+    /// across `parallelism`. Effective worker threads are capped at L.
+    /// Peak dense aggregation memory is O(min(L, m)·d). With m ≤ L the
+    /// fold equals the historical slot-ordered reduce bit for bit.
+    /// 0 means 1.
+    pub reduce_lanes: usize,
     /// Participant selection: the uniform shuffle, or the `sim/` scenario
     /// engine. Bit-identical across `parallelism` either way.
     pub participation: Participation,
 }
+
+/// Default lane count: wide enough that every default-scale experiment
+/// (m ≤ 64) keeps its historical slot-ordered fold bit for bit, and that
+/// up to 64 workers stay busy on the dense path. (`--paper-scale` EMNIST
+/// samples m = 100 > L and therefore adopts the lane fold tree.)
+pub const DEFAULT_REDUCE_LANES: usize = 64;
 
 impl Default for ServerConfig {
     fn default() -> Self {
@@ -87,6 +107,7 @@ impl Default for ServerConfig {
             plateau: None,
             downlink_sign: None,
             parallelism: 1,
+            reduce_lanes: DEFAULT_REDUCE_LANES,
             participation: Participation::Uniform,
         }
     }

@@ -67,6 +67,9 @@ SUBCOMMANDS
 COMMON FLAGS
   --rounds N --repeats N --seed N --paper-scale
   --parallelism N (client worker threads; bit-identical results for any N)
+  --reduce-lanes L (fixed reduction topology; reproducibility knob like
+                    --seed — results identical across --parallelism for
+                    any fixed L; default 64)
   --artifacts DIR (default: artifacts)
   figures 3-17 need `make artifacts` first",
         zsignfedavg::version()
@@ -147,6 +150,7 @@ fn run_config(args: &Args) -> Result<()> {
         plateau: None,
         downlink_sign: None,
         parallelism: cfg.parallelism_or(1),
+        reduce_lanes: cfg.reduce_lanes_or(zsignfedavg::fl::server::DEFAULT_REDUCE_LANES),
         participation,
     };
     let repeats = cfg.usize_or("repeats", 1);

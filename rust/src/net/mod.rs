@@ -17,12 +17,13 @@
 //!
 //! [`replay`] takes explicit **per-client** payloads ([`RoundLoad`]) and
 //! finds the gating upload by draining a `sim::EventQueue` — the same
-//! scheduler that plans live scenario rounds. [`simulate_timeline`] is the
-//! historical entry point, kept as a compatibility shim: it divides each
-//! record's bit totals evenly across `clients_per_round`, which is correct
-//! only when every client ships the same payload (true for the fixed-rate
-//! compressors here, wrong in general — callers with per-client payload
-//! sizes should build `RoundLoad`s and call `replay`).
+//! scheduler that plans live scenario rounds. Loads come from one of two
+//! builders over the aggregator-recorded bit counters: [`uniform_loads`]
+//! (an explicit uniform-payload assumption over `clients_per_round`) or
+//! [`arrival_loads`] (bits divided across the clients that *actually
+//! arrived* each record, billing empty rounds zero). The historical
+//! `simulate_timeline` shim — which hard-wired the even split — is gone;
+//! its callers route through `replay` directly.
 //!
 //! For rounds simulated *while they run* — heterogeneous devices, report
 //! deadlines, dropouts — see `sim::ScenarioPolicy`; its timeline lands in
@@ -132,18 +133,41 @@ pub fn uniform_loads(run: &RunResult, clients_per_round: usize) -> Vec<RoundLoad
         .collect()
 }
 
-/// Replay a run through the link model (compatibility shim).
-///
-/// `clients_per_round` must match the experiment (bits are totals across
-/// participants). **Assumes uniform payloads**: totals are divided evenly
-/// across clients, which is wrong once payloads differ — build per-client
-/// [`RoundLoad`]s and call [`replay`] instead.
-pub fn simulate_timeline(
-    run: &RunResult,
-    link: &LinkModel,
-    clients_per_round: usize,
-) -> Vec<TimedRecord> {
-    replay(run, link, &uniform_loads(run, clients_per_round))
+/// [`RoundLoad`]s from the aggregator's recorded tallies: each record's
+/// bit deltas are divided across the clients that **actually arrived**
+/// (`RoundRecord::arrived`), so partial rounds bill their real cohort and
+/// empty rounds bill zero transfer time (latency + compute only — the
+/// record's counters still advance, the unattributable bits are simply not
+/// charged as link time). Records spanning several rounds (eval_every > 1)
+/// use the last round's arrival count as the per-round cohort — exact
+/// under uniform participation, an approximation under scenarios.
+pub fn arrival_loads(run: &RunResult) -> Vec<RoundLoad> {
+    let mut prev_up = 0u64;
+    let mut prev_down = 0u64;
+    let mut prev_round = 0usize;
+    run.records
+        .iter()
+        .map(|rec| {
+            let rounds = (rec.round + 1).saturating_sub(prev_round).max(1);
+            let up_delta = (rec.bits_up - prev_up) as f64 / rounds as f64;
+            let down_delta = (rec.bits_down - prev_down) as f64 / rounds as f64;
+            prev_up = rec.bits_up;
+            prev_down = rec.bits_down;
+            prev_round = rec.round + 1;
+            let m = rec.arrived as usize;
+            if m == 0 {
+                // No per-client attribution exists; `down_bits` is a
+                // *per-client* payload everywhere else, so billing the raw
+                // cohort total here would inflate the round ~m-fold.
+                RoundLoad { up_bits: Vec::new(), down_bits: 0.0 }
+            } else {
+                RoundLoad {
+                    up_bits: vec![up_delta / m as f64; m],
+                    down_bits: down_delta / m as f64,
+                }
+            }
+        })
+        .collect()
 }
 
 /// Simulated seconds to first reach `target` accuracy (None if never).
@@ -188,7 +212,7 @@ mod tests {
         let link =
             LinkModel { uplink_bps: 1e6, downlink_bps: 1e12, latency_s: 0.5, compute_s: 0.0 };
         let run = mk_run(1_000_000, 0, &[0.1, 0.2, 0.3]);
-        let tl = simulate_timeline(&run, &link, 1);
+        let tl = replay(&run, &link, &uniform_loads(&run, 1));
         assert!((tl[0].sim_time_s - 1.5).abs() < 1e-9);
         assert!((tl[2].sim_time_s - 4.5).abs() < 1e-9);
     }
@@ -199,8 +223,10 @@ mod tests {
         // on a slow uplink.
         let link = LinkModel { uplink_bps: 1e6, downlink_bps: 1e9, latency_s: 0.0, compute_s: 0.0 };
         let accs = [0.1, 0.5, 0.9];
-        let dense = simulate_timeline(&mk_run(32_000_000, 0, &accs), &link, 1);
-        let signs = simulate_timeline(&mk_run(1_000_000, 0, &accs), &link, 1);
+        let dense_run = mk_run(32_000_000, 0, &accs);
+        let sign_run = mk_run(1_000_000, 0, &accs);
+        let dense = replay(&dense_run, &link, &uniform_loads(&dense_run, 1));
+        let signs = replay(&sign_run, &link, &uniform_loads(&sign_run, 1));
         let td = time_to_accuracy(&dense, 0.9).unwrap();
         let ts = time_to_accuracy(&signs, 0.9).unwrap();
         assert!((td / ts - 32.0).abs() < 1e-6, "{td} vs {ts}");
@@ -210,11 +236,11 @@ mod tests {
     fn heterogeneous_payloads_gate_on_slowest() {
         // 1 Mbit total over 4 clients @1 Mbit/s: the even split claims
         // 0.25 s/round, but a 750k/250k/0/0 split is gated at 0.75 s —
-        // exactly the error the uniform-payload shim bakes in.
+        // exactly the error the retired uniform-payload shim baked in.
         let link =
             LinkModel { uplink_bps: 1e6, downlink_bps: 1e12, latency_s: 0.0, compute_s: 0.0 };
         let run = mk_run(1_000_000, 0, &[0.5]);
-        let even = simulate_timeline(&run, &link, 4);
+        let even = replay(&run, &link, &uniform_loads(&run, 4));
         assert!((even[0].sim_time_s - 0.25).abs() < 1e-9);
         let loads =
             vec![RoundLoad { up_bits: vec![750_000.0, 250_000.0, 0.0, 0.0], down_bits: 0.0 }];
@@ -223,20 +249,34 @@ mod tests {
     }
 
     #[test]
-    fn shim_equals_explicit_uniform_replay() {
-        let link = LinkModel::cross_device();
-        let run = mk_run(123_456, 7_890, &[0.1, 0.4, 0.8]);
-        let shim = simulate_timeline(&run, &link, 3);
-        let explicit = replay(&run, &link, &uniform_loads(&run, 3));
-        for (a, b) in shim.iter().zip(&explicit) {
-            assert_eq!(a.sim_time_s.to_bits(), b.sim_time_s.to_bits());
-        }
+    fn arrival_loads_bill_actual_cohorts() {
+        // Round 0: 4 arrivals, 1 Mbit total. Round 1: an empty round — no
+        // uplink delta, zero clients to bill. Round 2: 2 arrivals, 1 Mbit.
+        let mut run = mk_run(0, 1000, &[0.1, 0.2, 0.3]);
+        run.records[0].arrived = 4;
+        run.records[0].bits_up = 1_000_000;
+        run.records[1].arrived = 0;
+        run.records[1].bits_up = 1_000_000;
+        run.records[2].arrived = 2;
+        run.records[2].bits_up = 2_000_000;
+        let loads = arrival_loads(&run);
+        assert_eq!(loads[0].up_bits, vec![250_000.0; 4]);
+        assert_eq!(loads[0].down_bits, 250.0); // 1000 bits over 4 clients
+        assert!(loads[1].up_bits.is_empty()); // empty round bills zero...
+        assert_eq!(loads[1].down_bits, 0.0); // ...in both directions
+        assert_eq!(loads[2].up_bits, vec![500_000.0; 2]);
+        // An empty round costs only latency + compute through replay.
+        let link =
+            LinkModel { uplink_bps: 1e6, downlink_bps: 1e12, latency_s: 0.5, compute_s: 0.0 };
+        let tl = replay(&run, &link, &loads);
+        assert!((tl[1].sim_time_s - tl[0].sim_time_s - 0.5).abs() < 1e-9);
     }
 
     #[test]
     fn target_never_reached() {
         let link = LinkModel::cross_device();
-        let tl = simulate_timeline(&mk_run(1000, 1000, &[0.1, 0.2]), &link, 1);
+        let run = mk_run(1000, 1000, &[0.1, 0.2]);
+        let tl = replay(&run, &link, &uniform_loads(&run, 1));
         assert!(time_to_accuracy(&tl, 0.99).is_none());
     }
 

@@ -54,6 +54,7 @@ pub fn run(args: &Args) -> crate::error::Result<()> {
                 clients_per_round: cpr,
                 eval_every: (rounds / 10).max(1),
                 parallelism: args.parallelism_or(1),
+                reduce_lanes: args.reduce_lanes_or(ServerConfig::default().reduce_lanes),
                 ..Default::default()
             };
             let (agg, runs) = run_repeats(

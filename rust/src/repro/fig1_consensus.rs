@@ -52,6 +52,7 @@ pub fn run(args: &Args) -> crate::error::Result<()> {
                 rounds,
                 eval_every: (rounds / 100).max(1),
                 parallelism: args.parallelism_or(1),
+                reduce_lanes: args.reduce_lanes_or(ServerConfig::default().reduce_lanes),
                 ..Default::default()
             };
             let (mut agg, runs) = run_repeats(
@@ -100,6 +101,7 @@ fn counterexample_report(args: &Args) {
             rounds,
             eval_every: (rounds / 50).max(1),
             parallelism: args.parallelism_or(1),
+            reduce_lanes: args.reduce_lanes_or(ServerConfig::default().reduce_lanes),
             ..Default::default()
         };
         let run = crate::fl::server::run_experiment(&mut b, &algo, &cfg);

@@ -37,6 +37,7 @@ pub fn run(args: &Args) -> crate::error::Result<()> {
                 rounds,
                 eval_every: (rounds / 100).max(1),
                 parallelism: args.parallelism_or(1),
+                reduce_lanes: args.reduce_lanes_or(ServerConfig::default().reduce_lanes),
                 ..Default::default()
             };
             let (mut agg, runs) = run_repeats(

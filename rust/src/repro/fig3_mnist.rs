@@ -49,6 +49,7 @@ pub fn run(args: &Args) -> crate::error::Result<()> {
             rounds,
             eval_every: (rounds / 20).max(1),
             parallelism: args.parallelism_or(1),
+            reduce_lanes: args.reduce_lanes_or(ServerConfig::default().reduce_lanes),
             ..Default::default()
         };
         let (agg, runs) = run_repeats(
@@ -81,6 +82,7 @@ fn sweep_sigma(args: &Args) -> crate::error::Result<()> {
                 rounds,
                 eval_every: (rounds / 10).max(1),
                 parallelism: args.parallelism_or(1),
+                reduce_lanes: args.reduce_lanes_or(ServerConfig::default().reduce_lanes),
                 ..Default::default()
             };
             let (agg, runs) = run_repeats(

@@ -61,6 +61,7 @@ pub fn run(args: &Args) -> crate::error::Result<()> {
                 clients_per_round: cpr,
                 eval_every: (rounds / 20).max(1),
                 parallelism: args.parallelism_or(1),
+                reduce_lanes: args.reduce_lanes_or(ServerConfig::default().reduce_lanes),
                 ..Default::default()
             };
             let (agg, runs) = run_repeats(
@@ -109,6 +110,7 @@ fn sweep_sigma_e(args: &Args, workload: Workload) -> crate::error::Result<()> {
                     clients_per_round: cpr,
                     eval_every: (rounds / 10).max(1),
                     parallelism: args.parallelism_or(1),
+                    reduce_lanes: args.reduce_lanes_or(ServerConfig::default().reduce_lanes),
                     ..Default::default()
                 };
                 let (agg, runs) = run_repeats(

@@ -69,6 +69,7 @@ fn lifecycle_time_to_target(args: &Args, base: &ScenarioConfig) {
             eval_every: (rounds / 100).max(1),
             seed: args.u64_or("seed", 0),
             parallelism: args.parallelism_or(1),
+            reduce_lanes: args.reduce_lanes_or(ServerConfig::default().reduce_lanes),
             participation: Participation::Simulated(sc.clone()),
             ..Default::default()
         };
@@ -153,6 +154,7 @@ fn byzantine_robustness(args: &Args, base: &ScenarioConfig) {
                     eval_every: (rounds / 50).max(1),
                     seed: args.u64_or("seed", 0),
                     parallelism: args.parallelism_or(1),
+                    reduce_lanes: args.reduce_lanes_or(ServerConfig::default().reduce_lanes),
                     participation: Participation::Simulated(sc),
                     ..Default::default()
                 };

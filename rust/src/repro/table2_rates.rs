@@ -80,6 +80,7 @@ fn empirical_rate_fit(args: &Args) -> crate::error::Result<()> {
                     eval_every: (t / 20).max(1),
                     seed: r as u64,
                     parallelism: args.parallelism_or(1),
+                    reduce_lanes: args.reduce_lanes_or(ServerConfig::default().reduce_lanes),
                     ..Default::default()
                 };
                 let run = run_experiment(&mut b, &algo, &cfg);

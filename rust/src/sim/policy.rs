@@ -27,31 +27,16 @@ use super::device::{sample_fleet, DeviceProfile};
 use super::event::EventQueue;
 use super::faults::{assign_byzantine, ByzantineMode};
 use super::ScenarioConfig;
-use crate::compress::qsgd::bits_per_level;
-use crate::compress::sparsify::TopK;
 use crate::fl::algorithms::Compression;
 use crate::fl::engine::{ClientOutcome, Participant, ParticipationPolicy, RoundPlan};
 use crate::rng::Pcg64;
 
-/// Nominal uplink payload per client per round, in bits (the scheduler's
-/// transfer-size model; exact per-message accounting stays with the
-/// engine's `bits_up`).
+/// Nominal uplink payload per client per round, in bits — read straight
+/// off the family's `compress::agg::Aggregator`, so the scheduler's
+/// transfer-size model and the engine's `bits_up` billing share one source
+/// (γ is irrelevant to wire size).
 pub fn nominal_uplink_bits(c: &Compression, d: usize) -> u64 {
-    match c {
-        Compression::None | Compression::DpDense { .. } => 32 * d as u64,
-        Compression::ZSign { .. } | Compression::DpSign { .. } => d as u64,
-        // Scaled sign: d sign bits + one f32 scale.
-        Compression::ErrorFeedback => 32 + d as u64,
-        Compression::Qsgd { s } => 32 + (d as u64) * (1 + bits_per_level(*s) as u64),
-        Compression::TopK { frac } => {
-            let k = TopK::new(*frac).k_for(d) as u64;
-            32 * k + 32 * k
-        }
-        Compression::SparseSign { frac, .. } => {
-            let k = TopK::new(*frac).k_for(d) as u64;
-            32 * k + k + 32
-        }
-    }
+    c.aggregator(1.0).nominal_client_bits(d)
 }
 
 /// Lifecycle events for one candidate (index into the round's cohort).

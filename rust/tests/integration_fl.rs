@@ -345,6 +345,60 @@ fn scenario_parallelism_never_changes_results() {
     }
 }
 
+/// The streamed lane reduce, cross-module: with `reduce_lanes` far below
+/// the cohort (multi-slot lanes — the fold the unified aggregator actually
+/// streams), stochastic minibatch gradients and a lifecycle scenario in the
+/// mix, the result is still a pure function of the plan — bit-identical
+/// across `parallelism`, for a sign and a dense family member alike.
+#[test]
+fn streamed_lane_reduce_is_parallelism_invariant_end_to_end() {
+    let sc = ScenarioConfig {
+        target_cohort: 10,
+        overselect: 1.4,
+        deadline_s: 0.6,
+        round_latency_s: 0.1,
+        dropout_prob: 0.15,
+        byzantine_frac: 0.1,
+        byzantine_mode: ByzantineMode::SignFlip,
+        fleet: FleetPreset::CrossDevice,
+    };
+    for algo in [
+        AlgorithmConfig::z_signfedavg(ZParam::Finite(1), 2.0, 2).with_lrs(0.02, 1.0),
+        AlgorithmConfig::qsgd(2).with_lrs(0.02, 1.0),
+    ] {
+        let run = |par: usize| {
+            let mut b = AnalyticBackend::new(LeastSquares::generate(16, 40, 15, 0.5, 0.5, 3))
+                .stochastic();
+            let cfg = ServerConfig {
+                rounds: 8,
+                eval_every: 1,
+                seed: 33,
+                parallelism: par,
+                reduce_lanes: 3,
+                participation: Participation::Simulated(sc.clone()),
+                ..Default::default()
+            };
+            run_experiment(&mut b, &algo, &cfg)
+        };
+        let base = run(1);
+        assert!(base.final_objective().is_finite());
+        for par in [2usize, 3, 8] {
+            let r = run(par);
+            assert_eq!(base.records.len(), r.records.len());
+            for (a, b) in base.records.iter().zip(&r.records) {
+                assert_eq!(
+                    a.objective.to_bits(),
+                    b.objective.to_bits(),
+                    "{} par={par}",
+                    algo.name
+                );
+                assert_eq!(a.bits_up, b.bits_up, "{} par={par}", algo.name);
+                assert_eq!(a.arrived, b.arrived, "{} par={par}", algo.name);
+            }
+        }
+    }
+}
+
 /// DP pipeline on a convex problem: smaller noise (=> larger eps) gives a
 /// better objective; the clip keeps updates finite even with huge noise.
 #[test]
