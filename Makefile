@@ -5,6 +5,8 @@
 #   make bench     run every registered micro/round bench
 #   make bench-json  streamed-vs-buffered aggregation bench -> BENCH_aggregate.json
 #   make determinism parallelism-1 vs -8 scenario CSV byte-diff (what CI runs)
+#   make spec-smoke  `zsfa run` example spec vs equivalent fig1 driver CSV
+#                    byte-diff at parallelism 1 and 8 (what CI runs)
 #   make fmt       rustfmt check (what CI enforces)
 #   make lint      clippy with warnings denied (what CI enforces)
 #   make python    editable-install the compile package + kernel tests
@@ -14,7 +16,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test bench bench-build bench-json determinism fmt lint python artifacts ci clean
+.PHONY: build test bench bench-build bench-json determinism spec-smoke fmt lint python artifacts ci clean
 
 build:
 	$(CARGO) build --release
@@ -49,6 +51,32 @@ determinism: build
 	  --sim_target_cohort 8 --reduce-lanes 3 --parallelism 8
 	diff -r -x '*_raw.csv' results_det_p1 results_det_p8
 	@echo "determinism: parallelism 1 vs 8 CSVs are byte-identical"
+
+# Spec-vs-driver equivalence smoke: `zsfa run examples/quickstart.json`
+# must reproduce the fig1 driver's CSVs byte-for-byte (aggregated files
+# exactly; raw files modulo the measured wall_ms column, which is
+# wall-clock — same rationale as the determinism target), at parallelism
+# 1 AND 8. Extends the determinism-job pattern to the new run surface.
+spec-smoke: build
+	rm -rf results_spec_driver results_spec_run_p1 results_spec_run_p8
+	mkdir -p results_spec_driver results_spec_run_p1 results_spec_run_p8
+	cd results_spec_driver && ../target/release/zsfa fig1 \
+	  --dims 50 --clients 8 --rounds 40 --repeats 2 --parallelism 1
+	cd results_spec_run_p1 && ../target/release/zsfa run \
+	  ../rust/examples/quickstart.json --parallelism 1
+	cd results_spec_run_p8 && ../target/release/zsfa run \
+	  ../rust/examples/quickstart.json --parallelism 8
+	diff -r -x '*_raw.csv' results_spec_driver results_spec_run_p1
+	diff -r -x '*_raw.csv' results_spec_driver results_spec_run_p8
+	@set -e; for f in results_spec_driver/results/fig1_d50/*_raw.csv; do \
+	  b=$$(basename $$f); \
+	  awk -F, -v OFS=, '{$$9="-"; print}' $$f > results_spec_driver/$$b.norm; \
+	  for alt in results_spec_run_p1 results_spec_run_p8; do \
+	    awk -F, -v OFS=, '{$$9="-"; print}' $$alt/results/fig1_d50/$$b > $$alt/$$b.norm; \
+	    cmp results_spec_driver/$$b.norm $$alt/$$b.norm; \
+	  done; \
+	done
+	@echo "spec-smoke: zsfa run CSVs byte-identical to the fig1 driver at parallelism 1 and 8"
 
 fmt:
 	$(CARGO) fmt --all -- --check

@@ -1,0 +1,30 @@
+//! The experiment API: one declarative run surface for every driver,
+//! sweep and scenario (DESIGN.md §4.5).
+//!
+//! * [`spec`] — [`ExperimentSpec`]: a typed, validated, JSON-serializable
+//!   description of a full experiment (workload, algorithm series/sweep,
+//!   server knobs, participation scenario, repeats, output), with the
+//!   builder API and the pinned [`seed_for_repeat`] convention.
+//! * [`session`] — [`Session`]: expands the grid and executes it through
+//!   the round engine, one repeat at a time, with bit-deterministic
+//!   results for any `parallelism`.
+//! * [`observer`] — [`RoundObserver`] and the composable sinks: CSV
+//!   (byte-identical to the historical driver layout), JSONL events,
+//!   console progress, in-memory collection.
+//!
+//! Every `repro::fig*` driver is a thin factory producing specs for this
+//! API, and `zsfa run <spec.json>` executes any experiment — including
+//! ones no driver ships — without recompiling.
+
+pub mod observer;
+pub mod session;
+pub mod spec;
+
+pub use observer::{
+    CollectedSeries, CsvSink, JsonlSink, MemorySink, ProgressSink, RoundObserver, SeriesCtx,
+};
+pub use session::{SeriesResult, Session, SessionResult};
+pub use spec::{
+    seed_for_repeat, Dataset, ExperimentSpec, NeuralSpec, OutputSpec, SeriesSpec, SpecError,
+    SweepSpec, WorkloadSpec,
+};

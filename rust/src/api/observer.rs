@@ -1,0 +1,240 @@
+//! [`RoundObserver`]: the composable output seam of the experiment API.
+//!
+//! A [`super::session::Session`] drives one or more observers through every
+//! run. The contract (pinned by `tests/integration_api.rs`):
+//!
+//! * `on_round` streams *during* the run — once per evaluated round record,
+//!   in round order, for each repeat (the engine invokes it as the record
+//!   is produced, so a progress sink sees a live experiment);
+//! * `on_run_end` fires after each repeat, with that repeat's `RunResult`;
+//! * `on_series_end` fires once per series, after all repeats, with the
+//!   mean-±-std aggregate (post `subtract_optimal` shift) and the raw runs.
+//!
+//! Sinks provided here:
+//!
+//! * [`CsvSink`] — the historical `results/<experiment>/<series>.csv` +
+//!   `<series>_raw.csv` layout, byte-identical to the pre-API drivers;
+//! * [`ProgressSink`] — the historical one-line series summary;
+//! * [`JsonlSink`] — a machine-readable event stream (one JSON per line);
+//! * [`MemorySink`] — an in-memory collector (clone it, run, then `take()`).
+
+use crate::fl::metrics::{
+    safe_series_name, write_csv, write_runs_csv, Aggregated, RoundRecord, RunResult,
+};
+use crate::util::json::Json;
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// What a sink knows about the series being run.
+#[derive(Debug, Clone)]
+pub struct SeriesCtx {
+    /// Experiment name (= output subdirectory).
+    pub experiment: String,
+    /// CSV file stem (sanitized via `safe_series_name` at write time).
+    pub label: String,
+    /// Console display name.
+    pub display: String,
+    /// The algorithm's preset name.
+    pub algorithm: String,
+    /// Position in the expanded series list.
+    pub index: usize,
+    /// Expanded series count.
+    pub total: usize,
+    /// Root results directory (`ExperimentSpec::output.dir`).
+    pub out_dir: PathBuf,
+}
+
+/// Observer of a session's progress. All methods default to no-ops so a
+/// sink implements only what it needs.
+pub trait RoundObserver {
+    /// One evaluated round record, streamed while the run executes.
+    fn on_round(&mut self, _ctx: &SeriesCtx, _repeat: usize, _rec: &RoundRecord) {}
+
+    /// One repeat finished.
+    fn on_run_end(&mut self, _ctx: &SeriesCtx, _repeat: usize, _run: &RunResult) {}
+
+    /// All repeats of one series finished and were aggregated.
+    fn on_series_end(&mut self, _ctx: &SeriesCtx, _agg: &Aggregated, _runs: &[RunResult]) {}
+}
+
+// ---------------------------------------------------------------------------
+// CSV
+// ---------------------------------------------------------------------------
+
+/// Writes the historical per-series CSV pair under
+/// `<out_dir>/<experiment>/`: `<label>.csv` (aggregated) and
+/// `<label>_raw.csv` (per-run records). Layout and naming are byte-
+/// compatible with the pre-API `save_series` plumbing.
+#[derive(Debug, Clone, Default)]
+pub struct CsvSink;
+
+impl CsvSink {
+    pub fn new() -> CsvSink {
+        CsvSink
+    }
+}
+
+impl RoundObserver for CsvSink {
+    fn on_series_end(&mut self, ctx: &SeriesCtx, agg: &Aggregated, runs: &[RunResult]) {
+        let dir = ctx.out_dir.join(&ctx.experiment);
+        let safe = safe_series_name(&ctx.label);
+        write_csv(&dir.join(format!("{safe}.csv")), agg).expect("writing csv");
+        write_runs_csv(&dir.join(format!("{safe}_raw.csv")), runs).expect("writing raw csv");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Console progress
+// ---------------------------------------------------------------------------
+
+/// Prints the historical compact per-series summary row.
+#[derive(Debug, Clone, Default)]
+pub struct ProgressSink;
+
+impl ProgressSink {
+    pub fn new() -> ProgressSink {
+        ProgressSink
+    }
+}
+
+impl RoundObserver for ProgressSink {
+    fn on_series_end(&mut self, ctx: &SeriesCtx, agg: &Aggregated, _runs: &[RunResult]) {
+        let last = agg.rounds.len() - 1;
+        let acc = if agg.accuracy_mean[last].is_nan() {
+            "      -".to_string()
+        } else {
+            format!("{:6.2}%", 100.0 * agg.accuracy_mean[last])
+        };
+        println!(
+            "  {:<28} final obj {:>12.6} ± {:>9.6}   acc {acc}   uplink {:>10.2} Mbit",
+            ctx.display,
+            agg.objective_mean[last],
+            agg.objective_std[last],
+            agg.bits_up[last] as f64 / 1e6,
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSONL event stream
+// ---------------------------------------------------------------------------
+
+/// Appends one compact JSON event per line: `round`, `run_end`,
+/// `series_end`. Non-finite numbers are written as `null` so every line is
+/// valid JSON.
+pub struct JsonlSink {
+    out: std::io::BufWriter<std::fs::File>,
+}
+
+impl JsonlSink {
+    /// Create (truncate) the event stream at `path`.
+    pub fn create(path: &Path) -> crate::error::Result<JsonlSink> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let f = std::fs::File::create(path)?;
+        Ok(JsonlSink { out: std::io::BufWriter::new(f) })
+    }
+
+    fn emit(&mut self, entries: Vec<(&str, Json)>) {
+        let obj = Json::Obj(
+            entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>(),
+        );
+        writeln!(self.out, "{}", obj.to_string_compact()).expect("writing jsonl event");
+    }
+}
+
+/// A JSON number, or `null` when not finite (NaN/inf are not JSON).
+fn jnum(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else {
+        Json::Null
+    }
+}
+
+impl RoundObserver for JsonlSink {
+    fn on_round(&mut self, ctx: &SeriesCtx, repeat: usize, rec: &RoundRecord) {
+        self.emit(vec![
+            ("event", Json::Str("round".into())),
+            ("experiment", Json::Str(ctx.experiment.clone())),
+            ("series", Json::Str(ctx.label.clone())),
+            ("repeat", Json::Num(repeat as f64)),
+            ("round", Json::Num(rec.round as f64)),
+            ("objective", jnum(rec.objective)),
+            ("accuracy", rec.accuracy.map(jnum).unwrap_or(Json::Null)),
+            ("bits_up", Json::Num(rec.bits_up as f64)),
+            ("sigma", jnum(rec.sigma as f64)),
+            ("sim_time_s", jnum(rec.sim_time_s)),
+            ("arrived", Json::Num(rec.arrived as f64)),
+        ]);
+    }
+
+    fn on_run_end(&mut self, ctx: &SeriesCtx, repeat: usize, run: &RunResult) {
+        self.emit(vec![
+            ("event", Json::Str("run_end".into())),
+            ("experiment", Json::Str(ctx.experiment.clone())),
+            ("series", Json::Str(ctx.label.clone())),
+            ("repeat", Json::Num(repeat as f64)),
+            ("records", Json::Num(run.records.len() as f64)),
+            ("final_objective", jnum(run.final_objective())),
+        ]);
+    }
+
+    fn on_series_end(&mut self, ctx: &SeriesCtx, agg: &Aggregated, runs: &[RunResult]) {
+        self.emit(vec![
+            ("event", Json::Str("series_end".into())),
+            ("experiment", Json::Str(ctx.experiment.clone())),
+            ("series", Json::Str(ctx.label.clone())),
+            ("repeats", Json::Num(runs.len() as f64)),
+            ("final_objective_mean", jnum(*agg.objective_mean.last().unwrap())),
+        ]);
+        self.out.flush().expect("flushing jsonl events");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// In-memory collector
+// ---------------------------------------------------------------------------
+
+/// One collected series (see [`MemorySink`]).
+#[derive(Debug, Clone)]
+pub struct CollectedSeries {
+    pub label: String,
+    pub algorithm: String,
+    pub aggregated: Aggregated,
+    pub runs: Vec<RunResult>,
+}
+
+/// Collects every finished series in memory. Clone the sink before handing
+/// it to the session; the clones share storage, so `take()` on the
+/// original returns what the session collected.
+#[derive(Debug, Clone, Default)]
+pub struct MemorySink {
+    inner: Rc<RefCell<Vec<CollectedSeries>>>,
+}
+
+impl MemorySink {
+    pub fn new() -> MemorySink {
+        MemorySink::default()
+    }
+
+    /// Drain everything collected so far.
+    pub fn take(&self) -> Vec<CollectedSeries> {
+        self.inner.borrow_mut().drain(..).collect()
+    }
+}
+
+impl RoundObserver for MemorySink {
+    fn on_series_end(&mut self, ctx: &SeriesCtx, agg: &Aggregated, runs: &[RunResult]) {
+        self.inner.borrow_mut().push(CollectedSeries {
+            label: ctx.label.clone(),
+            algorithm: ctx.algorithm.clone(),
+            aggregated: agg.clone(),
+            runs: runs.to_vec(),
+        });
+    }
+}

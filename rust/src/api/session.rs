@@ -1,0 +1,285 @@
+//! [`Session`]: executes an [`ExperimentSpec`] — grid expansion, backend
+//! construction, the repeat loop with the [`super::spec::seed_for_repeat`]
+//! convention, aggregation, and observer fan-out.
+//!
+//! Scheduling: series run sequentially through one scheduler; the
+//! configured `parallelism` (worker threads inside the round engine) is
+//! reused across every series and repeat, so a sweep never oversubscribes
+//! the machine. Results are bit-identical for any `parallelism` value —
+//! the engine's determinism contract — which is what lets `zsfa run
+//! spec.json --parallelism 8` reproduce archived CSVs byte-for-byte.
+
+use super::observer::{CsvSink, ProgressSink, RoundObserver, SeriesCtx};
+use super::spec::{ExperimentSpec, NeuralSpec, WorkloadSpec};
+use crate::data::{partition, synth};
+use crate::error::{bail, Result};
+use crate::fl::backend::{AnalyticBackend, TrainBackend};
+use crate::fl::metrics::{aggregate, Aggregated, RunResult};
+use crate::fl::server::run_experiment_observed;
+use crate::problems::consensus::Consensus;
+use crate::problems::least_squares::LeastSquares;
+use crate::runtime::{ModelRuntime, XlaBackend};
+
+impl WorkloadSpec {
+    /// Materialize a fresh backend for one repeat. Analytic workloads are
+    /// rebuilt per repeat (cheap, and keeps the paper's protocol of a
+    /// fixed problem with varying algorithmic randomness); neural
+    /// workloads load the AOT artifacts (`make artifacts` first).
+    pub fn build_backend(&self) -> Result<Box<dyn TrainBackend>> {
+        match self {
+            WorkloadSpec::Consensus { clients, dim, problem_seed } => Ok(Box::new(
+                AnalyticBackend::new(Consensus::gaussian(*clients, *dim, *problem_seed)),
+            )),
+            WorkloadSpec::Counterexample { a, x0 } => {
+                let mut b = AnalyticBackend::new(Consensus::counterexample(*a));
+                b.x0 = vec![*x0];
+                Ok(Box::new(b))
+            }
+            WorkloadSpec::LeastSquares {
+                clients,
+                dim,
+                rows_per_client,
+                heterogeneity,
+                noise,
+                problem_seed,
+                stochastic,
+            } => {
+                let b = AnalyticBackend::new(LeastSquares::generate(
+                    *clients,
+                    *dim,
+                    *rows_per_client,
+                    *heterogeneity,
+                    *noise,
+                    *problem_seed,
+                ));
+                Ok(Box::new(if *stochastic { b.stochastic() } else { b }))
+            }
+            WorkloadSpec::Neural(n) => Ok(Box::new(build_neural_backend(n)?)),
+        }
+    }
+}
+
+/// The PJRT workload construction (formerly `repro::common::build_xla_backend`).
+fn build_neural_backend(n: &NeuralSpec) -> Result<XlaBackend> {
+    let runtime = ModelRuntime::open(&n.artifacts, n.dataset.model())?;
+    let n_test = n.test_samples.unwrap_or(2 * runtime.eval_batch);
+
+    let spec = match n.dataset {
+        super::spec::Dataset::NoniidMnist => synth::SynthSpec::mnist(),
+        super::spec::Dataset::Emnist => synth::SynthSpec::emnist(),
+        super::spec::Dataset::Cifar => synth::SynthSpec::cifar(),
+    };
+    let (train, test) = synth::train_test(spec, n.train_samples, n_test);
+    let fed = match n.dataset {
+        super::spec::Dataset::NoniidMnist => partition::by_label(train, n.clients),
+        super::spec::Dataset::Emnist => partition::iid(train, n.clients, 42),
+        super::spec::Dataset::Cifar => partition::dirichlet(train, n.clients, 1.0, 42),
+    };
+    let init = runtime.load_init()?;
+    Ok(XlaBackend::new(runtime, fed, test, init))
+}
+
+/// One series' outcome.
+#[derive(Debug, Clone)]
+pub struct SeriesResult {
+    pub label: String,
+    pub display: String,
+    pub algorithm: String,
+    /// Mean ± std across repeats (objective mean already shifted by the
+    /// workload optimum when `output.subtract_optimal` is set).
+    pub aggregated: Aggregated,
+    /// The raw per-repeat runs (absolute objectives).
+    pub runs: Vec<RunResult>,
+}
+
+/// Everything a session produced, in expanded-series order.
+#[derive(Debug, Clone)]
+pub struct SessionResult {
+    pub series: Vec<SeriesResult>,
+}
+
+/// Executes specs through a set of composable observers. A bare
+/// `Session::new()` runs silently and only returns the [`SessionResult`];
+/// [`Session::console`] adds the historical driver behavior (CSV files +
+/// one summary line per series).
+#[derive(Default)]
+pub struct Session {
+    observers: Vec<Box<dyn RoundObserver>>,
+}
+
+impl Session {
+    /// A session with no observers.
+    pub fn new() -> Session {
+        Session::default()
+    }
+
+    /// The driver preset: CSV output + console progress.
+    pub fn console() -> Session {
+        Session::new().with(CsvSink::new()).with(ProgressSink::new())
+    }
+
+    /// Attach an observer (builder-style).
+    pub fn with(mut self, observer: impl RoundObserver + 'static) -> Session {
+        self.observers.push(Box::new(observer));
+        self
+    }
+
+    /// Validate and execute `spec`: every expanded series, `spec.repeats`
+    /// repeats each (repeat `r` seeded by `spec.seed_for_repeat(r)`),
+    /// streaming progress to the observers.
+    pub fn run(&mut self, spec: &ExperimentSpec) -> Result<SessionResult> {
+        if let Err(errs) = spec.validate() {
+            let msgs: Vec<String> = errs.iter().map(|e| e.to_string()).collect();
+            bail!("invalid experiment spec: {}", msgs.join("; "));
+        }
+        let f_star = if spec.output.subtract_optimal {
+            // validate() guarantees the workload has one.
+            spec.workload.optimal_value()
+        } else {
+            None
+        };
+
+        let expanded = spec.expanded_series();
+        let total = expanded.len();
+        let mut out = Vec::with_capacity(total);
+        for (index, s) in expanded.into_iter().enumerate() {
+            let ctx = SeriesCtx {
+                experiment: spec.name.clone(),
+                label: s.label.clone(),
+                display: s.display.clone(),
+                algorithm: s.algorithm.name.clone(),
+                index,
+                total,
+                out_dir: spec.output.dir.clone(),
+            };
+            let mut runs = Vec::with_capacity(spec.repeats);
+            for repeat in 0..spec.repeats {
+                let mut backend = spec.workload.build_backend()?;
+                let cfg = spec.server_config(repeat);
+                let observers = &mut self.observers;
+                let run = run_experiment_observed(
+                    backend.as_mut(),
+                    &s.algorithm,
+                    &cfg,
+                    &mut |rec| {
+                        for o in observers.iter_mut() {
+                            o.on_round(&ctx, repeat, rec);
+                        }
+                    },
+                );
+                for o in self.observers.iter_mut() {
+                    o.on_run_end(&ctx, repeat, &run);
+                }
+                runs.push(run);
+            }
+            let mut agg = aggregate(&runs);
+            if let Some(f_star) = f_star {
+                // Report optimality gaps like the historical drivers did:
+                // the aggregated mean is shifted, the std and the raw runs
+                // keep their absolute values.
+                for v in agg.objective_mean.iter_mut() {
+                    *v -= f_star;
+                }
+            }
+            for o in self.observers.iter_mut() {
+                o.on_series_end(&ctx, &agg, &runs);
+            }
+            out.push(SeriesResult {
+                label: s.label,
+                display: s.display,
+                algorithm: s.algorithm.name.clone(),
+                aggregated: agg,
+                runs,
+            });
+        }
+        Ok(SessionResult { series: out })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::spec::SweepSpec;
+    use crate::fl::AlgorithmConfig;
+    use crate::rng::ZParam;
+
+    fn spec() -> ExperimentSpec {
+        ExperimentSpec::new("session_test", WorkloadSpec::consensus(5, 8, 99))
+            .rounds(20)
+            .eval_every(5)
+            .repeats(2)
+            .series(AlgorithmConfig::gd().with_lrs(0.1, 1.0))
+    }
+
+    #[test]
+    fn run_produces_one_result_per_expanded_series() {
+        let s = spec().sweep(SweepSpec {
+            zs: vec![ZParam::Finite(1)],
+            local_steps: vec![1],
+            sigmas: vec![0.5, 1.0],
+            client_lr: 0.05,
+            server_lr: 1.0,
+        });
+        let result = Session::new().run(&s).unwrap();
+        assert_eq!(result.series.len(), 3);
+        assert_eq!(result.series[0].label, "GD");
+        assert_eq!(result.series[1].label, "sigma0.5");
+        assert_eq!(result.series[2].label, "sigma1");
+        for sr in &result.series {
+            assert_eq!(sr.runs.len(), 2);
+            // rounds 0, 5, 10, 15 and the forced final round 19.
+            assert_eq!(sr.aggregated.rounds.len(), 5);
+        }
+    }
+
+    #[test]
+    fn session_repeats_match_manual_seed_offsets() {
+        // The session's repeat loop must reproduce run_experiment with the
+        // seed_for_repeat convention exactly.
+        use crate::fl::server::{run_experiment, ServerConfig};
+        let s = spec();
+        let result = Session::new().run(&s).unwrap();
+        for (r, run) in result.series[0].runs.iter().enumerate() {
+            let mut b = AnalyticBackend::new(Consensus::gaussian(5, 8, 99));
+            let cfg = ServerConfig {
+                rounds: 20,
+                eval_every: 5,
+                seed: crate::api::spec::seed_for_repeat(0, r),
+                ..Default::default()
+            };
+            let expected =
+                run_experiment(&mut b, &AlgorithmConfig::gd().with_lrs(0.1, 1.0), &cfg);
+            let got: Vec<f64> = run.records.iter().map(|rec| rec.objective).collect();
+            let want: Vec<f64> = expected.records.iter().map(|rec| rec.objective).collect();
+            assert_eq!(got, want, "repeat {r}");
+        }
+    }
+
+    #[test]
+    fn invalid_spec_is_refused_with_field_paths() {
+        let bad = ExperimentSpec::new("x", WorkloadSpec::consensus(4, 4, 1)).rounds(0);
+        let err = Session::new().run(&bad).unwrap_err().to_string();
+        assert!(err.contains("invalid experiment spec"), "{err}");
+        assert!(err.contains("rounds"), "{err}");
+    }
+
+    #[test]
+    fn subtract_optimal_shifts_only_the_aggregated_mean() {
+        use crate::problems::AnalyticProblem;
+        let plain = Session::new().run(&spec()).unwrap();
+        let shifted = Session::new().run(&spec().subtract_optimal(true)).unwrap();
+        let f_star = Consensus::gaussian(5, 8, 99).optimal_value().unwrap();
+        let a = &plain.series[0];
+        let b = &shifted.series[0];
+        for t in 0..a.aggregated.rounds.len() {
+            let diff = a.aggregated.objective_mean[t] - b.aggregated.objective_mean[t];
+            assert!((diff - f_star).abs() < 1e-12);
+            assert_eq!(a.aggregated.objective_std[t], b.aggregated.objective_std[t]);
+        }
+        // Raw runs stay absolute.
+        assert_eq!(
+            a.runs[0].records[0].objective,
+            b.runs[0].records[0].objective
+        );
+    }
+}

@@ -1,0 +1,1660 @@
+//! [`ExperimentSpec`]: the typed, validated, JSON-serializable description
+//! of a full experiment — workload, algorithm series (explicit list and/or
+//! a sweep grid), server knobs, participation scenario, repeats and output
+//! layout.
+//!
+//! Design rules:
+//!
+//! * **One seam.** Everything a driver used to hand-roll (`ServerConfig`
+//!   literals, the seed-offset repeat loop, CSV naming) is expressed here
+//!   and executed by [`super::session::Session`]; drivers are thin spec
+//!   factories.
+//! * **Errors, not panics.** [`ExperimentSpec::validate`] returns
+//!   structured [`SpecError`]s; JSON decoding reports the exact field path
+//!   (`series[2].algorithm.compression.s`) and rejects unknown keys so
+//!   typos cannot silently no-op. Keys starting with `_` are comments.
+//! * **Lossless round-trip.** `from_json(to_json(spec)) == spec` for every
+//!   compression family, `ZParam`, participation, plateau and sweep
+//!   variant (pinned by `tests/integration_api.rs`). Floats are carried as
+//!   JSON numbers (f32 → f64 widening is exact); seeds above 2^53 are the
+//!   only values a JSON round-trip cannot represent.
+//! * **The repeat-seed convention lives here.** [`seed_for_repeat`] is the
+//!   single definition of "repeat r runs with seed base + 1000·r" that the
+//!   paper-protocol repeat loop has always used; a pinned test keeps it
+//!   from drifting.
+
+use crate::compress::sign::SigmaRule;
+use crate::fl::algorithms::ServerOpt;
+use crate::fl::plateau::PlateauConfig;
+use crate::fl::server::{Participation, ServerConfig, DEFAULT_REDUCE_LANES};
+use crate::fl::{AlgorithmConfig, Compression};
+use crate::problems::consensus::Consensus;
+use crate::problems::least_squares::LeastSquares;
+use crate::problems::AnalyticProblem;
+use crate::rng::ZParam;
+use crate::sim::{ByzantineMode, FleetPreset, ScenarioConfig};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+// ---------------------------------------------------------------------------
+// Seed convention
+// ---------------------------------------------------------------------------
+
+/// The repeat-seed convention: repeat `r` of an experiment with base seed
+/// `base` runs with seed `base + 1000·r` (wrapping). The offset keeps the
+/// per-round/per-client PCG streams of different repeats disjoint for any
+/// realistic round count while staying human-readable in logs.
+///
+/// This is the *only* definition of the convention — `Session` and any
+/// legacy path must call it — and it is pinned by a test so it can never
+/// silently drift (CSV archives depend on it).
+pub fn seed_for_repeat(base: u64, repeat: usize) -> u64 {
+    base.wrapping_add((repeat as u64).wrapping_mul(1000))
+}
+
+// ---------------------------------------------------------------------------
+// Errors
+// ---------------------------------------------------------------------------
+
+/// A structured spec problem: `at` is the field path (`"rounds"`,
+/// `"series[2].algorithm.compression"`), `reason` the human-readable rule
+/// that was violated.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpecError {
+    pub at: String,
+    pub reason: String,
+}
+
+impl SpecError {
+    pub fn new(at: impl Into<String>, reason: impl Into<String>) -> SpecError {
+        SpecError { at: at.into(), reason: reason.into() }
+    }
+}
+
+impl fmt::Display for SpecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.at, self.reason)
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+// ---------------------------------------------------------------------------
+// Workloads
+// ---------------------------------------------------------------------------
+
+/// A named neural dataset preset (the paper's three settings, scaled to
+/// the 1-core testbed — see DESIGN.md §3). Formerly `repro::common::Workload`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dataset {
+    /// §4.2 non-iid MNIST: 10 clients, one label each, full participation.
+    NoniidMnist,
+    /// §4.3 EMNIST: many clients (iid shards), partial participation.
+    Emnist,
+    /// §4.3 CIFAR-10: Dirichlet(1) skew, 10/100 clients per round.
+    Cifar,
+}
+
+impl Dataset {
+    pub fn parse(s: &str) -> Option<Dataset> {
+        match s {
+            "mnist" | "noniid-mnist" => Some(Dataset::NoniidMnist),
+            "emnist" => Some(Dataset::Emnist),
+            "cifar" | "cifar10" => Some(Dataset::Cifar),
+            _ => None,
+        }
+    }
+
+    /// Canonical config/JSON key.
+    pub fn key(self) -> &'static str {
+        match self {
+            Dataset::NoniidMnist => "mnist",
+            Dataset::Emnist => "emnist",
+            Dataset::Cifar => "cifar",
+        }
+    }
+
+    pub fn model(self) -> &'static str {
+        match self {
+            Dataset::NoniidMnist => "mnist_cnn",
+            Dataset::Emnist => "emnist_cnn",
+            Dataset::Cifar => "cifar_cnn",
+        }
+    }
+
+    /// (default clients, default clients-per-round, default train size)
+    /// Paper scale: EMNIST 3579 clients / 100 sampled; CIFAR 100 / 10.
+    /// Defaults are scaled ~10× down to fit the testbed; `paper_scale`
+    /// restores the paper's counts.
+    pub fn defaults(self, paper_scale: bool) -> (usize, Option<usize>, usize) {
+        match (self, paper_scale) {
+            (Dataset::NoniidMnist, _) => (10, None, 2000),
+            (Dataset::Emnist, false) => (358, Some(10), 3580),
+            (Dataset::Emnist, true) => (3579, Some(100), 35790),
+            (Dataset::Cifar, false) => (100, Some(10), 2000),
+            (Dataset::Cifar, true) => (100, Some(10), 20000),
+        }
+    }
+}
+
+/// A PJRT-backed neural workload: dataset preset + partition sizes +
+/// artifact location. Built into an `XlaBackend` by the session
+/// (`WorkloadSpec::build_backend`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NeuralSpec {
+    pub dataset: Dataset,
+    pub clients: usize,
+    pub train_samples: usize,
+    /// `None` → `2 × eval_batch` of the loaded model runtime.
+    pub test_samples: Option<usize>,
+    pub paper_scale: bool,
+    pub artifacts: PathBuf,
+}
+
+/// The problem an experiment optimizes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkloadSpec {
+    /// §4.1 consensus: `min_x (1/2n) Σ‖x − y_i‖²` with Gaussian targets.
+    Consensus { clients: usize, dim: usize, problem_seed: u64 },
+    /// The §1 two-client counterexample `min (x−A)² + (x+A)²`, scalar x.
+    Counterexample { a: f32, x0: f32 },
+    /// Heterogeneous stochastic least squares (Table 2's empirical fit).
+    LeastSquares {
+        clients: usize,
+        dim: usize,
+        rows_per_client: usize,
+        heterogeneity: f32,
+        noise: f32,
+        problem_seed: u64,
+        stochastic: bool,
+    },
+    /// AOT-compiled neural workload over PJRT (needs `make artifacts`).
+    Neural(NeuralSpec),
+}
+
+impl WorkloadSpec {
+    /// Shorthand for the most common analytic workload.
+    pub fn consensus(clients: usize, dim: usize, problem_seed: u64) -> WorkloadSpec {
+        WorkloadSpec::Consensus { clients, dim, problem_seed }
+    }
+
+    /// Client population size, when it is known without building a runtime.
+    pub fn num_clients(&self) -> Option<usize> {
+        match self {
+            WorkloadSpec::Consensus { clients, .. } => Some(*clients),
+            WorkloadSpec::Counterexample { .. } => Some(2),
+            WorkloadSpec::LeastSquares { clients, .. } => Some(*clients),
+            WorkloadSpec::Neural(n) => Some(n.clients),
+        }
+    }
+
+    /// Closed-form optimal value, for the workloads that have one (the
+    /// `subtract_optimal` output option reports optimality gaps).
+    pub fn optimal_value(&self) -> Option<f64> {
+        match self {
+            WorkloadSpec::Consensus { clients, dim, problem_seed } => {
+                Consensus::gaussian(*clients, *dim, *problem_seed).optimal_value()
+            }
+            WorkloadSpec::Counterexample { a, .. } => {
+                Consensus::counterexample(*a).optimal_value()
+            }
+            WorkloadSpec::LeastSquares {
+                clients,
+                dim,
+                rows_per_client,
+                heterogeneity,
+                noise,
+                problem_seed,
+                ..
+            } => LeastSquares::generate(
+                *clients,
+                *dim,
+                *rows_per_client,
+                *heterogeneity,
+                *noise,
+                *problem_seed,
+            )
+            .optimal_value(),
+            WorkloadSpec::Neural(_) => None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Series + sweep
+// ---------------------------------------------------------------------------
+
+/// One algorithm curve: `label` is the CSV file stem (sanitized at write
+/// time), `display` the console name.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SeriesSpec {
+    pub label: String,
+    pub display: String,
+    pub algorithm: AlgorithmConfig,
+}
+
+/// A `z × local_steps × σ` cross-product over `z-SignFedAvg` — the paper's
+/// Fig. 2/7/9–13 grids. Expansion appends to the explicit series list.
+///
+/// Labels follow the historical driver convention: an axis appears in the
+/// CSV stem only when it actually varies (`sigma` always does), so a
+/// σ-only sweep yields `sigma0.3`, a full grid `z1_e5_sigma0.3`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepSpec {
+    pub zs: Vec<ZParam>,
+    pub local_steps: Vec<usize>,
+    pub sigmas: Vec<f32>,
+    pub client_lr: f32,
+    pub server_lr: f32,
+}
+
+impl SweepSpec {
+    /// Expand the grid into labeled series (row-major: z, then E, then σ).
+    pub fn expand(&self) -> Vec<SeriesSpec> {
+        let mut out = Vec::new();
+        for &z in &self.zs {
+            for &e in &self.local_steps {
+                for &sigma in &self.sigmas {
+                    let mut label_parts = Vec::new();
+                    let mut disp_parts = Vec::new();
+                    if self.zs.len() > 1 {
+                        label_parts.push(format!("z{z}"));
+                        disp_parts.push(format!("z={z}"));
+                    }
+                    if self.local_steps.len() > 1 {
+                        label_parts.push(format!("e{e}"));
+                        disp_parts.push(format!("E={e}"));
+                    }
+                    label_parts.push(format!("sigma{sigma}"));
+                    let sigma_disp = if disp_parts.is_empty() {
+                        format!("sigma = {sigma}")
+                    } else {
+                        format!("sigma={sigma}")
+                    };
+                    disp_parts.push(sigma_disp);
+                    out.push(SeriesSpec {
+                        label: label_parts.join("_"),
+                        display: disp_parts.join(" "),
+                        algorithm: AlgorithmConfig::z_signfedavg(z, sigma, e)
+                            .with_lrs(self.client_lr, self.server_lr),
+                    });
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Where and how results are written.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OutputSpec {
+    /// Root results directory; series CSVs land in `<dir>/<name>/`.
+    pub dir: PathBuf,
+    /// Report optimality gaps: subtract the workload's closed-form optimum
+    /// from the aggregated objective mean (the paper's y-axis for the
+    /// analytic figures; raw per-run CSVs keep absolute objectives).
+    pub subtract_optimal: bool,
+}
+
+impl Default for OutputSpec {
+    fn default() -> Self {
+        OutputSpec { dir: PathBuf::from("results"), subtract_optimal: false }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The spec
+// ---------------------------------------------------------------------------
+
+/// A complete, executable experiment description. Construct with
+/// [`ExperimentSpec::new`] + builder methods, or [`ExperimentSpec::from_json`];
+/// execute with [`super::session::Session::run`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentSpec {
+    /// Experiment name = output subdirectory under `output.dir`.
+    pub name: String,
+    pub workload: WorkloadSpec,
+    /// Explicit algorithm series.
+    pub series: Vec<SeriesSpec>,
+    /// Optional sweep grid, expanded after the explicit series.
+    pub sweep: Option<SweepSpec>,
+    /// Communication rounds T.
+    pub rounds: usize,
+    /// Evaluate every k rounds.
+    pub eval_every: usize,
+    /// Clients sampled per round (None = full participation; only
+    /// consulted by uniform participation).
+    pub clients_per_round: Option<usize>,
+    /// Base seed; repeat `r` runs with [`seed_for_repeat`]`(seed, r)`.
+    pub seed: u64,
+    /// Independent repeats per series (the paper's mean ± std protocol).
+    pub repeats: usize,
+    /// Worker threads (bit-identical results for any value).
+    pub parallelism: usize,
+    /// Reduction-topology lanes (a reproducibility knob, like the seed).
+    pub reduce_lanes: usize,
+    /// Optional §4.4 plateau controller for the noise scale.
+    pub plateau: Option<PlateauConfig>,
+    /// Optional downlink sign compression `(z, σ_d)`.
+    pub downlink_sign: Option<(ZParam, f32)>,
+    /// Uniform sampling or the client-lifecycle scenario engine.
+    pub participation: Participation,
+    pub output: OutputSpec,
+}
+
+impl ExperimentSpec {
+    /// A spec with the historical driver defaults (they mirror
+    /// `ServerConfig::default()`): 100 rounds, eval every round, seed 0,
+    /// 1 repeat, uniform full participation, `results/` output.
+    pub fn new(name: impl Into<String>, workload: WorkloadSpec) -> ExperimentSpec {
+        ExperimentSpec {
+            name: name.into(),
+            workload,
+            series: Vec::new(),
+            sweep: None,
+            rounds: 100,
+            eval_every: 1,
+            clients_per_round: None,
+            seed: 0,
+            repeats: 1,
+            parallelism: 1,
+            reduce_lanes: DEFAULT_REDUCE_LANES,
+            plateau: None,
+            downlink_sign: None,
+            participation: Participation::Uniform,
+            output: OutputSpec::default(),
+        }
+    }
+
+    // -- builder ----------------------------------------------------------
+
+    pub fn rounds(mut self, rounds: usize) -> Self {
+        self.rounds = rounds;
+        self
+    }
+
+    pub fn eval_every(mut self, k: usize) -> Self {
+        self.eval_every = k;
+        self
+    }
+
+    pub fn clients_per_round(mut self, m: Option<usize>) -> Self {
+        self.clients_per_round = m;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn repeats(mut self, repeats: usize) -> Self {
+        self.repeats = repeats;
+        self
+    }
+
+    pub fn parallelism(mut self, workers: usize) -> Self {
+        self.parallelism = workers;
+        self
+    }
+
+    pub fn reduce_lanes(mut self, lanes: usize) -> Self {
+        self.reduce_lanes = lanes;
+        self
+    }
+
+    pub fn plateau(mut self, p: PlateauConfig) -> Self {
+        self.plateau = Some(p);
+        self
+    }
+
+    pub fn downlink_sign(mut self, z: ZParam, sigma: f32) -> Self {
+        self.downlink_sign = Some((z, sigma));
+        self
+    }
+
+    pub fn participation(mut self, p: Participation) -> Self {
+        self.participation = p;
+        self
+    }
+
+    /// Append a series labeled and displayed by the algorithm's name.
+    pub fn series(self, algorithm: AlgorithmConfig) -> Self {
+        let label = algorithm.name.clone();
+        let display = algorithm.name.clone();
+        self.series_labeled(label, display, algorithm)
+    }
+
+    /// Append a series with an explicit CSV stem and console name.
+    pub fn series_labeled(
+        mut self,
+        label: impl Into<String>,
+        display: impl Into<String>,
+        algorithm: AlgorithmConfig,
+    ) -> Self {
+        self.series.push(SeriesSpec {
+            label: label.into(),
+            display: display.into(),
+            algorithm,
+        });
+        self
+    }
+
+    pub fn sweep(mut self, sweep: SweepSpec) -> Self {
+        self.sweep = Some(sweep);
+        self
+    }
+
+    pub fn output_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.output.dir = dir.into();
+        self
+    }
+
+    pub fn subtract_optimal(mut self, yes: bool) -> Self {
+        self.output.subtract_optimal = yes;
+        self
+    }
+
+    // -- execution views --------------------------------------------------
+
+    /// The seed repeat `r` of this spec runs with (see [`seed_for_repeat`]).
+    pub fn seed_for_repeat(&self, repeat: usize) -> u64 {
+        seed_for_repeat(self.seed, repeat)
+    }
+
+    /// Explicit series followed by the expanded sweep grid.
+    pub fn expanded_series(&self) -> Vec<SeriesSpec> {
+        let mut out = self.series.clone();
+        if let Some(sweep) = &self.sweep {
+            out.extend(sweep.expand());
+        }
+        out
+    }
+
+    /// The engine configuration for repeat `r`. This is the only place a
+    /// `ServerConfig` is materialized on the spec path.
+    pub fn server_config(&self, repeat: usize) -> ServerConfig {
+        ServerConfig {
+            rounds: self.rounds,
+            clients_per_round: self.clients_per_round,
+            eval_every: self.eval_every,
+            seed: self.seed_for_repeat(repeat),
+            plateau: self.plateau,
+            downlink_sign: self.downlink_sign,
+            parallelism: self.parallelism,
+            reduce_lanes: self.reduce_lanes,
+            participation: self.participation.clone(),
+        }
+    }
+
+    // -- validation -------------------------------------------------------
+
+    /// Check every structural rule, returning all violations (never
+    /// panics). `Session::run` refuses invalid specs.
+    pub fn validate(&self) -> Result<(), Vec<SpecError>> {
+        let mut errs: Vec<SpecError> = Vec::new();
+
+        if self.name.is_empty() {
+            errs.push(SpecError::new("name", "must be non-empty"));
+        } else if self.name.contains('/') || self.name.contains('\\') || self.name.contains("..")
+        {
+            errs.push(SpecError::new(
+                "name",
+                format!("must not contain path separators (got {:?})", self.name),
+            ));
+        }
+        if self.rounds == 0 {
+            errs.push(SpecError::new("rounds", "must be >= 1"));
+        }
+        if self.eval_every == 0 {
+            errs.push(SpecError::new("eval_every", "must be >= 1"));
+        }
+        if self.repeats == 0 {
+            errs.push(SpecError::new("repeats", "must be >= 1"));
+        }
+
+        self.validate_workload(&mut errs);
+
+        let expanded = self.expanded_series();
+        if expanded.is_empty() {
+            errs.push(SpecError::new(
+                "series",
+                "at least one series (or a non-empty sweep) is required",
+            ));
+        }
+        let mut labels = std::collections::BTreeSet::new();
+        for (i, s) in expanded.iter().enumerate() {
+            // Series past the explicit list come from the sweep grid; a
+            // `series[i]` path would point at a JSON element that does not
+            // exist in the user's file.
+            let at = if i < self.series.len() {
+                format!("series[{i}]")
+            } else {
+                format!("sweep (expanded series {:?})", s.label)
+            };
+            if !labels.insert(s.label.clone()) {
+                errs.push(SpecError::new(
+                    at.clone(),
+                    format!("duplicate label {:?} would overwrite its CSV", s.label),
+                ));
+            }
+            self.validate_algorithm(&at, &s.algorithm, &mut errs);
+        }
+        if let Some(sweep) = &self.sweep {
+            for (axis, empty) in [
+                ("sweep.zs", sweep.zs.is_empty()),
+                ("sweep.local_steps", sweep.local_steps.is_empty()),
+                ("sweep.sigmas", sweep.sigmas.is_empty()),
+            ] {
+                if empty {
+                    errs.push(SpecError::new(axis, "must be non-empty"));
+                }
+            }
+            if sweep.local_steps.iter().any(|&e| e == 0) {
+                errs.push(SpecError::new("sweep.local_steps", "entries must be >= 1"));
+            }
+        }
+
+        if let Some(m) = self.clients_per_round {
+            if m == 0 {
+                errs.push(SpecError::new(
+                    "clients_per_round",
+                    "must be >= 1 (use null for full participation)",
+                ));
+            } else if let Some(n) = self.workload.num_clients() {
+                if m > n {
+                    errs.push(SpecError::new(
+                        "clients_per_round",
+                        format!("{m} exceeds the workload's {n} clients"),
+                    ));
+                }
+            }
+        }
+
+        if let Some(p) = &self.plateau {
+            // NaN must fail too, hence the explicit is_nan arms.
+            if p.sigma_init <= 0.0 || p.sigma_init.is_nan() {
+                errs.push(SpecError::new("plateau.sigma_init", "must be > 0"));
+            }
+            if p.sigma_bound < p.sigma_init || p.sigma_bound.is_nan() {
+                errs.push(SpecError::new("plateau.sigma_bound", "must be >= sigma_init"));
+            }
+            if p.beta <= 1.0 || p.beta.is_nan() {
+                errs.push(SpecError::new("plateau.beta", "must be > 1"));
+            }
+        }
+        if let Some((_, sigma)) = self.downlink_sign {
+            if !sigma.is_finite() || sigma < 0.0 {
+                errs.push(SpecError::new("downlink_sign.sigma", "must be finite and >= 0"));
+            }
+        }
+        if let Participation::Simulated(sc) = &self.participation {
+            self.validate_scenario(sc, &mut errs);
+        }
+        if self.output.subtract_optimal && self.workload.optimal_value().is_none() {
+            errs.push(SpecError::new(
+                "output.subtract_optimal",
+                "workload has no closed-form optimum",
+            ));
+        }
+
+        if errs.is_empty() {
+            Ok(())
+        } else {
+            Err(errs)
+        }
+    }
+
+    fn validate_workload(&self, errs: &mut Vec<SpecError>) {
+        let mut push = |at: &str, reason: &str| errs.push(SpecError::new(at, reason));
+        match &self.workload {
+            WorkloadSpec::Consensus { clients, dim, .. } => {
+                if *clients == 0 {
+                    push("workload.clients", "must be >= 1");
+                }
+                if *dim == 0 {
+                    push("workload.dim", "must be >= 1");
+                }
+            }
+            WorkloadSpec::Counterexample { a, .. } => {
+                if !(a.is_finite() && *a > 0.0) {
+                    push("workload.a", "must be finite and > 0");
+                }
+            }
+            WorkloadSpec::LeastSquares { clients, dim, rows_per_client, .. } => {
+                if *clients == 0 {
+                    push("workload.clients", "must be >= 1");
+                }
+                if *dim == 0 {
+                    push("workload.dim", "must be >= 1");
+                }
+                if *rows_per_client == 0 {
+                    push("workload.rows_per_client", "must be >= 1");
+                }
+            }
+            WorkloadSpec::Neural(n) => {
+                if n.clients == 0 {
+                    push("workload.clients", "must be >= 1");
+                }
+                if n.train_samples == 0 {
+                    push("workload.train_samples", "must be >= 1");
+                }
+            }
+        }
+    }
+
+    fn validate_algorithm(&self, at: &str, a: &AlgorithmConfig, errs: &mut Vec<SpecError>) {
+        let mut push = |field: &str, reason: String| {
+            errs.push(SpecError::new(format!("{at}.algorithm.{field}"), reason))
+        };
+        if a.local_steps == 0 {
+            push("local_steps", "must be >= 1".into());
+        }
+        if !(a.client_lr.is_finite() && a.client_lr > 0.0) {
+            push("client_lr", "must be finite and > 0".into());
+        }
+        if !a.server_lr.is_finite() {
+            push("server_lr", "must be finite".into());
+        }
+        match a.compression {
+            Compression::ZSign { sigma: SigmaRule::Fixed(s), .. } => {
+                if !(s.is_finite() && s >= 0.0) {
+                    push("compression.sigma", "fixed sigma must be finite and >= 0".into());
+                }
+            }
+            Compression::Qsgd { s } => {
+                if s == 0 {
+                    push("compression.s", "QSGD needs >= 1 quantization level".into());
+                }
+            }
+            Compression::TopK { frac } => {
+                if !(frac > 0.0 && frac <= 1.0) {
+                    push("compression.frac", "must be in (0, 1]".into());
+                }
+            }
+            Compression::SparseSign { frac, sigma, .. } => {
+                if !(frac > 0.0 && frac <= 1.0) {
+                    push("compression.frac", "must be in (0, 1]".into());
+                }
+                if !(sigma.is_finite() && sigma >= 0.0) {
+                    push("compression.sigma", "must be finite and >= 0".into());
+                }
+            }
+            Compression::DpSign { clip, noise_mult }
+            | Compression::DpDense { clip, noise_mult } => {
+                if !(clip.is_finite() && clip > 0.0) {
+                    push("compression.clip", "must be finite and > 0".into());
+                }
+                if !(noise_mult.is_finite() && noise_mult >= 0.0) {
+                    push("compression.noise_mult", "must be finite and >= 0".into());
+                }
+            }
+            Compression::ErrorFeedback => {
+                // The engine asserts this (paper §1.1); surface it as a
+                // SpecError instead of a panic. clients_per_round equal to
+                // the whole population IS full participation (the engine
+                // accepts it), so only a genuinely smaller cohort —
+                // or an unknowable one — counts as partial.
+                let partial_uniform = match (self.clients_per_round, self.workload.num_clients())
+                {
+                    (Some(m), Some(n)) => m < n,
+                    (Some(_), None) => true,
+                    (None, _) => false,
+                };
+                let partial = partial_uniform
+                    || !matches!(self.participation, Participation::Uniform);
+                if partial {
+                    push(
+                        "compression",
+                        "EF-SignSGD requires full uniform participation \
+                         (it tracks per-client residuals; paper §1.1)"
+                            .into(),
+                    );
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn validate_scenario(&self, sc: &ScenarioConfig, errs: &mut Vec<SpecError>) {
+        let mut push = |at: &str, reason: &str| {
+            errs.push(SpecError::new(format!("participation.{at}"), reason))
+        };
+        if sc.target_cohort == 0 {
+            push("target_cohort", "must be >= 1");
+        }
+        if !(sc.overselect.is_finite() && sc.overselect >= 1.0) {
+            push("overselect", "must be finite and >= 1");
+        }
+        if !(sc.deadline_s.is_finite() && sc.deadline_s > 0.0) {
+            push("deadline_s", "must be finite and > 0");
+        }
+        if !(sc.round_latency_s.is_finite() && sc.round_latency_s >= 0.0) {
+            push("round_latency_s", "must be finite and >= 0");
+        }
+        if !(0.0..=1.0).contains(&sc.dropout_prob) {
+            push("dropout_prob", "must be in [0, 1]");
+        }
+        if !(0.0..=1.0).contains(&sc.byzantine_frac) {
+            push("byzantine_frac", "must be in [0, 1]");
+        }
+        if let ByzantineMode::GradNegate { boost } = sc.byzantine_mode {
+            if !(boost.is_finite() && boost > 0.0) {
+                push("byzantine_mode.boost", "must be finite and > 0");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON codec
+// ---------------------------------------------------------------------------
+
+impl ExperimentSpec {
+    /// Compact JSON serialization. [`ExperimentSpec::from_json`] restores
+    /// it losslessly (f32 → f64 widening is exact; seeds above 2^53 are
+    /// the only values JSON numbers cannot carry).
+    pub fn to_json(&self) -> String {
+        let mut m: BTreeMap<String, Json> = BTreeMap::new();
+        m.insert("name".into(), jstr(&self.name));
+        m.insert("workload".into(), workload_json(&self.workload));
+        m.insert("rounds".into(), jus(self.rounds));
+        m.insert("eval_every".into(), jus(self.eval_every));
+        m.insert("seed".into(), jnum(self.seed as f64));
+        m.insert("repeats".into(), jus(self.repeats));
+        m.insert("parallelism".into(), jus(self.parallelism));
+        m.insert("reduce_lanes".into(), jus(self.reduce_lanes));
+        if let Some(cpr) = self.clients_per_round {
+            m.insert("clients_per_round".into(), jus(cpr));
+        }
+        if let Some(p) = &self.plateau {
+            m.insert("plateau".into(), plateau_json(p));
+        }
+        if let Some((z, s)) = self.downlink_sign {
+            m.insert(
+                "downlink_sign".into(),
+                jobj(vec![("z", zparam_json(z)), ("sigma", jf32(s))]),
+            );
+        }
+        m.insert("participation".into(), participation_json(&self.participation));
+        if !self.series.is_empty() {
+            m.insert("series".into(), Json::Arr(self.series.iter().map(series_json).collect()));
+        }
+        if let Some(sw) = &self.sweep {
+            m.insert("sweep".into(), sweep_json(sw));
+        }
+        m.insert("output".into(), output_json(&self.output));
+        Json::Obj(m).to_string_compact()
+    }
+
+    /// Parse a spec from JSON, reporting the exact field path on error.
+    /// Unknown keys are rejected (typo safety); keys starting with `_`
+    /// are comments.
+    pub fn from_json(text: &str) -> Result<ExperimentSpec, SpecError> {
+        let doc = Json::parse(text).map_err(|e| SpecError::new("json", e))?;
+        let o = Obj::new(&doc, "")?;
+        let name = o.req_str("name")?.to_string();
+        let workload = workload_from(o.req("workload")?, "workload")?;
+        let mut spec = ExperimentSpec::new(name, workload);
+        spec.rounds = o.usize_or("rounds", spec.rounds)?;
+        spec.eval_every = o.usize_or("eval_every", spec.eval_every)?;
+        spec.seed = o.u64_or("seed", spec.seed)?;
+        spec.repeats = o.usize_or("repeats", spec.repeats)?;
+        spec.clients_per_round = o.opt_usize("clients_per_round")?;
+        spec.parallelism = o.usize_or("parallelism", spec.parallelism)?;
+        spec.reduce_lanes = o.usize_or("reduce_lanes", spec.reduce_lanes)?;
+        if let Some(j) = o.get("plateau") {
+            spec.plateau = Some(plateau_from(j, "plateau")?);
+        }
+        if let Some(j) = o.get("downlink_sign") {
+            spec.downlink_sign = Some(downlink_from(j, "downlink_sign")?);
+        }
+        if let Some(j) = o.get("participation") {
+            spec.participation = participation_from(j, "participation")?;
+        }
+        if let Some(j) = o.get("series") {
+            let arr =
+                j.as_arr().ok_or_else(|| SpecError::new("series", "expected an array"))?;
+            for (i, sj) in arr.iter().enumerate() {
+                spec.series.push(series_from(sj, &format!("series[{i}]"))?);
+            }
+        }
+        if let Some(j) = o.get("sweep") {
+            spec.sweep = Some(sweep_from(j, "sweep")?);
+        }
+        if let Some(j) = o.get("output") {
+            spec.output = output_from(j, "output")?;
+        }
+        o.finish()?;
+        Ok(spec)
+    }
+
+    /// Load a spec from a `.json` file (the `zsfa run <spec.json>` path).
+    pub fn from_json_file(path: &Path) -> Result<ExperimentSpec, SpecError> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            SpecError::new(path.display().to_string(), format!("cannot read spec: {e}"))
+        })?;
+        Self::from_json(&text)
+    }
+}
+
+// -- writer helpers ---------------------------------------------------------
+
+fn jstr(s: &str) -> Json {
+    Json::Str(s.to_string())
+}
+
+fn jnum(x: f64) -> Json {
+    Json::Num(x)
+}
+
+fn jus(x: usize) -> Json {
+    Json::Num(x as f64)
+}
+
+fn jf32(x: f32) -> Json {
+    Json::Num(x as f64)
+}
+
+fn jobj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+// -- strict object reader ---------------------------------------------------
+
+/// A field-path-aware view of one JSON object: every access is recorded so
+/// [`Obj::finish`] can reject unknown (likely misspelled) keys. Explicit
+/// `null` counts as an absent field; keys starting with `_` are comments.
+struct Obj<'a> {
+    at: String,
+    map: &'a BTreeMap<String, Json>,
+    seen: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+impl<'a> Obj<'a> {
+    fn new(j: &'a Json, at: &str) -> Result<Obj<'a>, SpecError> {
+        match j {
+            Json::Obj(map) => Ok(Obj {
+                at: at.to_string(),
+                map,
+                seen: std::cell::RefCell::new(std::collections::BTreeSet::new()),
+            }),
+            _ => Err(SpecError::new(at, "expected a JSON object")),
+        }
+    }
+
+    fn path(&self, key: &str) -> String {
+        if self.at.is_empty() {
+            key.to_string()
+        } else {
+            format!("{}.{key}", self.at)
+        }
+    }
+
+    fn get(&self, key: &str) -> Option<&'a Json> {
+        self.seen.borrow_mut().insert(key.to_string());
+        match self.map.get(key) {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(v),
+        }
+    }
+
+    fn req(&self, key: &str) -> Result<&'a Json, SpecError> {
+        self.get(key)
+            .ok_or_else(|| SpecError::new(self.path(key), "missing required field"))
+    }
+
+    fn req_str(&self, key: &str) -> Result<&'a str, SpecError> {
+        self.req(key)?
+            .as_str()
+            .ok_or_else(|| SpecError::new(self.path(key), "expected a string"))
+    }
+
+    fn str_or<'b>(&self, key: &str, default: &'b str) -> Result<&'b str, SpecError>
+    where
+        'a: 'b,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_str()
+                .ok_or_else(|| SpecError::new(self.path(key), "expected a string")),
+        }
+    }
+
+    fn req_f64(&self, key: &str) -> Result<f64, SpecError> {
+        self.req(key)?
+            .as_f64()
+            .ok_or_else(|| SpecError::new(self.path(key), "expected a number"))
+    }
+
+    fn req_f32(&self, key: &str) -> Result<f32, SpecError> {
+        Ok(self.req_f64(key)? as f32)
+    }
+
+    fn f64_or(&self, key: &str, default: f64) -> Result<f64, SpecError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_f64()
+                .ok_or_else(|| SpecError::new(self.path(key), "expected a number")),
+        }
+    }
+
+    fn f32_or(&self, key: &str, default: f32) -> Result<f32, SpecError> {
+        Ok(self.f64_or(key, default as f64)? as f32)
+    }
+
+    fn req_usize(&self, key: &str) -> Result<usize, SpecError> {
+        self.req(key)?
+            .as_usize()
+            .ok_or_else(|| SpecError::new(self.path(key), "expected a non-negative integer"))
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> Result<usize, SpecError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.as_usize().ok_or_else(|| {
+                SpecError::new(self.path(key), "expected a non-negative integer")
+            }),
+        }
+    }
+
+    fn opt_usize(&self, key: &str) -> Result<Option<usize>, SpecError> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v.as_usize().map(Some).ok_or_else(|| {
+                SpecError::new(self.path(key), "expected a non-negative integer")
+            }),
+        }
+    }
+
+    fn u64_or(&self, key: &str, default: u64) -> Result<u64, SpecError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_f64()
+                .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+                .map(|n| n as u64)
+                .ok_or_else(|| {
+                    SpecError::new(self.path(key), "expected a non-negative integer")
+                }),
+        }
+    }
+
+    fn bool_or(&self, key: &str, default: bool) -> Result<bool, SpecError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_bool()
+                .ok_or_else(|| SpecError::new(self.path(key), "expected a boolean")),
+        }
+    }
+
+    fn finish(self) -> Result<(), SpecError> {
+        let seen = self.seen.borrow();
+        for k in self.map.keys() {
+            if !k.starts_with('_') && !seen.contains(k) {
+                return Err(SpecError::new(
+                    self.path(k),
+                    "unknown field (prefix a key with `_` for comments)",
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+// -- per-type encoders/decoders ---------------------------------------------
+
+fn zparam_json(z: ZParam) -> Json {
+    match z {
+        ZParam::Inf => Json::Str("inf".into()),
+        ZParam::Finite(k) => Json::Num(k as f64),
+    }
+}
+
+fn zparam_from(j: &Json, at: &str) -> Result<ZParam, SpecError> {
+    if let Some(s) = j.as_str() {
+        if s == "inf" {
+            return Ok(ZParam::Inf);
+        }
+        return Err(SpecError::new(at, format!("expected a z >= 1 or \"inf\" (got {s:?})")));
+    }
+    match j.as_f64() {
+        Some(n) if n >= 1.0 && n.fract() == 0.0 && n <= u32::MAX as f64 => {
+            Ok(ZParam::Finite(n as u32))
+        }
+        _ => Err(SpecError::new(at, "expected a z >= 1 or \"inf\"")),
+    }
+}
+
+fn sigma_rule_json(r: SigmaRule) -> Json {
+    match r {
+        SigmaRule::Fixed(v) => jobj(vec![("rule", jstr("fixed")), ("value", jf32(v))]),
+        SigmaRule::L2Norm => jobj(vec![("rule", jstr("l2norm"))]),
+        SigmaRule::InfNorm => jobj(vec![("rule", jstr("infnorm"))]),
+    }
+}
+
+fn sigma_rule_from(j: &Json, at: &str) -> Result<SigmaRule, SpecError> {
+    let o = Obj::new(j, at)?;
+    let rule = match o.req_str("rule")? {
+        "fixed" => SigmaRule::Fixed(o.req_f32("value")?),
+        "l2norm" => SigmaRule::L2Norm,
+        "infnorm" => SigmaRule::InfNorm,
+        other => {
+            return Err(SpecError::new(o.path("rule"), format!("unknown sigma rule {other:?}")))
+        }
+    };
+    o.finish()?;
+    Ok(rule)
+}
+
+fn compression_json(c: &Compression) -> Json {
+    match *c {
+        Compression::None => jobj(vec![("kind", jstr("none"))]),
+        Compression::ZSign { z, sigma } => jobj(vec![
+            ("kind", jstr("zsign")),
+            ("z", zparam_json(z)),
+            ("sigma", sigma_rule_json(sigma)),
+        ]),
+        Compression::ErrorFeedback => jobj(vec![("kind", jstr("error_feedback"))]),
+        Compression::Qsgd { s } => jobj(vec![("kind", jstr("qsgd")), ("s", jus(s as usize))]),
+        Compression::DpSign { clip, noise_mult } => jobj(vec![
+            ("kind", jstr("dp_sign")),
+            ("clip", jf32(clip)),
+            ("noise_mult", jf32(noise_mult)),
+        ]),
+        Compression::DpDense { clip, noise_mult } => jobj(vec![
+            ("kind", jstr("dp_dense")),
+            ("clip", jf32(clip)),
+            ("noise_mult", jf32(noise_mult)),
+        ]),
+        Compression::TopK { frac } => {
+            jobj(vec![("kind", jstr("topk")), ("frac", jf32(frac))])
+        }
+        Compression::SparseSign { frac, z, sigma } => jobj(vec![
+            ("kind", jstr("sparse_sign")),
+            ("frac", jf32(frac)),
+            ("z", zparam_json(z)),
+            ("sigma", jf32(sigma)),
+        ]),
+    }
+}
+
+fn compression_from(j: &Json, at: &str) -> Result<Compression, SpecError> {
+    let o = Obj::new(j, at)?;
+    let c = match o.req_str("kind")? {
+        "none" => Compression::None,
+        "zsign" => Compression::ZSign {
+            z: zparam_from(o.req("z")?, &o.path("z"))?,
+            sigma: sigma_rule_from(o.req("sigma")?, &o.path("sigma"))?,
+        },
+        "error_feedback" => Compression::ErrorFeedback,
+        "qsgd" => {
+            let s = o.req_usize("s")?;
+            if s > u32::MAX as usize {
+                return Err(SpecError::new(o.path("s"), "too many quantization levels"));
+            }
+            Compression::Qsgd { s: s as u32 }
+        }
+        "dp_sign" => Compression::DpSign {
+            clip: o.req_f32("clip")?,
+            noise_mult: o.req_f32("noise_mult")?,
+        },
+        "dp_dense" => Compression::DpDense {
+            clip: o.req_f32("clip")?,
+            noise_mult: o.req_f32("noise_mult")?,
+        },
+        "topk" => Compression::TopK { frac: o.req_f32("frac")? },
+        "sparse_sign" => Compression::SparseSign {
+            frac: o.req_f32("frac")?,
+            z: zparam_from(o.req("z")?, &o.path("z"))?,
+            sigma: o.req_f32("sigma")?,
+        },
+        other => {
+            return Err(SpecError::new(
+                o.path("kind"),
+                format!("unknown compression kind {other:?}"),
+            ))
+        }
+    };
+    o.finish()?;
+    Ok(c)
+}
+
+fn server_opt_json(s: &ServerOpt) -> Json {
+    match *s {
+        ServerOpt::Sgd => jobj(vec![("kind", jstr("sgd"))]),
+        ServerOpt::Momentum(m) => {
+            jobj(vec![("kind", jstr("momentum")), ("momentum", jf32(m))])
+        }
+        ServerOpt::Adam { beta1, beta2, eps } => jobj(vec![
+            ("kind", jstr("adam")),
+            ("beta1", jf32(beta1)),
+            ("beta2", jf32(beta2)),
+            ("eps", jf32(eps)),
+        ]),
+    }
+}
+
+fn server_opt_from(j: &Json, at: &str) -> Result<ServerOpt, SpecError> {
+    let o = Obj::new(j, at)?;
+    let s = match o.req_str("kind")? {
+        "sgd" => ServerOpt::Sgd,
+        "momentum" => ServerOpt::Momentum(o.req_f32("momentum")?),
+        "adam" => ServerOpt::Adam {
+            beta1: o.f32_or("beta1", 0.9)?,
+            beta2: o.f32_or("beta2", 0.99)?,
+            eps: o.f32_or("eps", 1e-3)?,
+        },
+        other => {
+            return Err(SpecError::new(o.path("kind"), format!("unknown server_opt {other:?}")))
+        }
+    };
+    o.finish()?;
+    Ok(s)
+}
+
+fn algorithm_json(a: &AlgorithmConfig) -> Json {
+    jobj(vec![
+        ("name", jstr(&a.name)),
+        ("compression", compression_json(&a.compression)),
+        ("client_lr", jf32(a.client_lr)),
+        ("server_lr", jf32(a.server_lr)),
+        ("server_opt", server_opt_json(&a.server_opt)),
+        ("local_steps", jus(a.local_steps)),
+    ])
+}
+
+fn algorithm_from(j: &Json, at: &str) -> Result<AlgorithmConfig, SpecError> {
+    let o = Obj::new(j, at)?;
+    let a = AlgorithmConfig {
+        name: o.req_str("name")?.to_string(),
+        compression: compression_from(o.req("compression")?, &o.path("compression"))?,
+        client_lr: o.f32_or("client_lr", 0.01)?,
+        server_lr: o.f32_or("server_lr", 1.0)?,
+        server_opt: match o.get("server_opt") {
+            None => ServerOpt::Sgd,
+            Some(v) => server_opt_from(v, &o.path("server_opt"))?,
+        },
+        local_steps: o.usize_or("local_steps", 1)?,
+    };
+    o.finish()?;
+    Ok(a)
+}
+
+fn series_json(s: &SeriesSpec) -> Json {
+    let mut v = Vec::new();
+    if s.label != s.algorithm.name {
+        v.push(("label", jstr(&s.label)));
+    }
+    if s.display != s.label {
+        v.push(("display", jstr(&s.display)));
+    }
+    v.push(("algorithm", algorithm_json(&s.algorithm)));
+    jobj(v)
+}
+
+fn series_from(j: &Json, at: &str) -> Result<SeriesSpec, SpecError> {
+    let o = Obj::new(j, at)?;
+    let algorithm = algorithm_from(o.req("algorithm")?, &o.path("algorithm"))?;
+    let label = o.str_or("label", &algorithm.name)?.to_string();
+    let display = o.str_or("display", &label)?.to_string();
+    o.finish()?;
+    Ok(SeriesSpec { label, display, algorithm })
+}
+
+fn plateau_json(p: &PlateauConfig) -> Json {
+    jobj(vec![
+        ("sigma_init", jf32(p.sigma_init)),
+        ("sigma_bound", jf32(p.sigma_bound)),
+        ("kappa", jus(p.kappa)),
+        ("beta", jf32(p.beta)),
+    ])
+}
+
+fn plateau_from(j: &Json, at: &str) -> Result<PlateauConfig, SpecError> {
+    let o = Obj::new(j, at)?;
+    let p = PlateauConfig {
+        sigma_init: o.req_f32("sigma_init")?,
+        sigma_bound: o.req_f32("sigma_bound")?,
+        kappa: o.req_usize("kappa")?,
+        beta: o.req_f32("beta")?,
+    };
+    o.finish()?;
+    Ok(p)
+}
+
+fn downlink_from(j: &Json, at: &str) -> Result<(ZParam, f32), SpecError> {
+    let o = Obj::new(j, at)?;
+    let z = zparam_from(o.req("z")?, &o.path("z"))?;
+    let sigma = o.req_f32("sigma")?;
+    o.finish()?;
+    Ok((z, sigma))
+}
+
+fn byzantine_json(m: ByzantineMode) -> Json {
+    match m {
+        ByzantineMode::SignFlip => jobj(vec![("kind", jstr("signflip"))]),
+        ByzantineMode::GradNegate { boost } => {
+            jobj(vec![("kind", jstr("gradnegate")), ("boost", jf32(boost))])
+        }
+    }
+}
+
+fn byzantine_from(j: &Json, at: &str) -> Result<ByzantineMode, SpecError> {
+    let o = Obj::new(j, at)?;
+    let m = match o.req_str("kind")? {
+        "signflip" | "sign-flip" => ByzantineMode::SignFlip,
+        "gradnegate" | "grad-negate" => {
+            ByzantineMode::GradNegate { boost: o.f32_or("boost", 10.0)? }
+        }
+        other => {
+            return Err(SpecError::new(
+                o.path("kind"),
+                format!("unknown byzantine mode {other:?}"),
+            ))
+        }
+    };
+    o.finish()?;
+    Ok(m)
+}
+
+fn participation_json(p: &Participation) -> Json {
+    match p {
+        Participation::Uniform => jobj(vec![("kind", jstr("uniform"))]),
+        Participation::Simulated(sc) => jobj(vec![
+            ("kind", jstr("simulated")),
+            ("target_cohort", jus(sc.target_cohort)),
+            ("overselect", jnum(sc.overselect)),
+            ("deadline_s", jnum(sc.deadline_s)),
+            ("round_latency_s", jnum(sc.round_latency_s)),
+            ("dropout_prob", jf32(sc.dropout_prob)),
+            ("byzantine_frac", jf32(sc.byzantine_frac)),
+            ("byzantine_mode", byzantine_json(sc.byzantine_mode)),
+            (
+                "fleet",
+                jstr(match sc.fleet {
+                    FleetPreset::Uniform => "uniform",
+                    FleetPreset::CrossDevice => "cross_device",
+                }),
+            ),
+        ]),
+    }
+}
+
+fn participation_from(j: &Json, at: &str) -> Result<Participation, SpecError> {
+    let o = Obj::new(j, at)?;
+    let p = match o.req_str("kind")? {
+        "uniform" => Participation::Uniform,
+        "simulated" => {
+            let d = ScenarioConfig::default();
+            let mode = match o.get("byzantine_mode") {
+                None => d.byzantine_mode,
+                Some(v) => byzantine_from(v, &o.path("byzantine_mode"))?,
+            };
+            let fleet_key = o.str_or("fleet", "cross_device")?;
+            let fleet = FleetPreset::parse(fleet_key).ok_or_else(|| {
+                SpecError::new(o.path("fleet"), format!("unknown fleet {fleet_key:?}"))
+            })?;
+            Participation::Simulated(ScenarioConfig {
+                target_cohort: o.usize_or("target_cohort", d.target_cohort)?,
+                overselect: o.f64_or("overselect", d.overselect)?,
+                deadline_s: o.f64_or("deadline_s", d.deadline_s)?,
+                round_latency_s: o.f64_or("round_latency_s", d.round_latency_s)?,
+                dropout_prob: o.f32_or("dropout_prob", d.dropout_prob)?,
+                byzantine_frac: o.f32_or("byzantine_frac", d.byzantine_frac)?,
+                byzantine_mode: mode,
+                fleet,
+            })
+        }
+        other => {
+            return Err(SpecError::new(
+                o.path("kind"),
+                format!("unknown participation kind {other:?}"),
+            ))
+        }
+    };
+    o.finish()?;
+    Ok(p)
+}
+
+fn workload_json(w: &WorkloadSpec) -> Json {
+    match w {
+        WorkloadSpec::Consensus { clients, dim, problem_seed } => jobj(vec![
+            ("kind", jstr("consensus")),
+            ("clients", jus(*clients)),
+            ("dim", jus(*dim)),
+            ("problem_seed", jnum(*problem_seed as f64)),
+        ]),
+        WorkloadSpec::Counterexample { a, x0 } => jobj(vec![
+            ("kind", jstr("counterexample")),
+            ("a", jf32(*a)),
+            ("x0", jf32(*x0)),
+        ]),
+        WorkloadSpec::LeastSquares {
+            clients,
+            dim,
+            rows_per_client,
+            heterogeneity,
+            noise,
+            problem_seed,
+            stochastic,
+        } => jobj(vec![
+            ("kind", jstr("least_squares")),
+            ("clients", jus(*clients)),
+            ("dim", jus(*dim)),
+            ("rows_per_client", jus(*rows_per_client)),
+            ("heterogeneity", jf32(*heterogeneity)),
+            ("noise", jf32(*noise)),
+            ("problem_seed", jnum(*problem_seed as f64)),
+            ("stochastic", Json::Bool(*stochastic)),
+        ]),
+        WorkloadSpec::Neural(n) => {
+            let mut v = vec![
+                ("kind", jstr("neural")),
+                ("dataset", jstr(n.dataset.key())),
+                ("clients", jus(n.clients)),
+                ("train_samples", jus(n.train_samples)),
+                ("paper_scale", Json::Bool(n.paper_scale)),
+                ("artifacts", jstr(&n.artifacts.to_string_lossy())),
+            ];
+            if let Some(t) = n.test_samples {
+                v.push(("test_samples", jus(t)));
+            }
+            jobj(v)
+        }
+    }
+}
+
+fn workload_from(j: &Json, at: &str) -> Result<WorkloadSpec, SpecError> {
+    let o = Obj::new(j, at)?;
+    let w = match o.req_str("kind")? {
+        "consensus" => WorkloadSpec::Consensus {
+            clients: o.req_usize("clients")?,
+            dim: o.req_usize("dim")?,
+            problem_seed: o.u64_or("problem_seed", 99)?,
+        },
+        "counterexample" => WorkloadSpec::Counterexample {
+            a: o.req_f32("a")?,
+            x0: o.f32_or("x0", 0.0)?,
+        },
+        "least_squares" => WorkloadSpec::LeastSquares {
+            clients: o.req_usize("clients")?,
+            dim: o.req_usize("dim")?,
+            rows_per_client: o.req_usize("rows_per_client")?,
+            heterogeneity: o.f32_or("heterogeneity", 0.5)?,
+            noise: o.f32_or("noise", 0.5)?,
+            problem_seed: o.u64_or("problem_seed", 11)?,
+            stochastic: o.bool_or("stochastic", true)?,
+        },
+        "neural" => {
+            let key = o.req_str("dataset")?;
+            let dataset = Dataset::parse(key).ok_or_else(|| {
+                SpecError::new(o.path("dataset"), format!("unknown dataset {key:?}"))
+            })?;
+            let paper_scale = o.bool_or("paper_scale", false)?;
+            let (clients_d, _, train_d) = dataset.defaults(paper_scale);
+            WorkloadSpec::Neural(NeuralSpec {
+                dataset,
+                clients: o.usize_or("clients", clients_d)?,
+                train_samples: o.usize_or("train_samples", train_d)?,
+                test_samples: o.opt_usize("test_samples")?,
+                paper_scale,
+                artifacts: PathBuf::from(o.str_or("artifacts", "artifacts")?),
+            })
+        }
+        other => {
+            return Err(SpecError::new(
+                o.path("kind"),
+                format!("unknown workload kind {other:?}"),
+            ))
+        }
+    };
+    o.finish()?;
+    Ok(w)
+}
+
+fn sweep_json(s: &SweepSpec) -> Json {
+    jobj(vec![
+        ("zs", Json::Arr(s.zs.iter().map(|&z| zparam_json(z)).collect())),
+        ("local_steps", Json::Arr(s.local_steps.iter().map(|&e| jus(e)).collect())),
+        ("sigmas", Json::Arr(s.sigmas.iter().map(|&v| jf32(v)).collect())),
+        ("client_lr", jf32(s.client_lr)),
+        ("server_lr", jf32(s.server_lr)),
+    ])
+}
+
+fn sweep_from(j: &Json, at: &str) -> Result<SweepSpec, SpecError> {
+    let o = Obj::new(j, at)?;
+    let zs = match o.get("zs") {
+        None => vec![ZParam::Finite(1)],
+        Some(v) => {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| SpecError::new(o.path("zs"), "expected an array"))?;
+            arr.iter()
+                .enumerate()
+                .map(|(i, zj)| zparam_from(zj, &format!("{}[{i}]", o.path("zs"))))
+                .collect::<Result<Vec<_>, _>>()?
+        }
+    };
+    let local_steps = match o.get("local_steps") {
+        None => vec![1],
+        Some(v) => {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| SpecError::new(o.path("local_steps"), "expected an array"))?;
+            arr.iter()
+                .enumerate()
+                .map(|(i, e)| {
+                    e.as_usize().ok_or_else(|| {
+                        SpecError::new(
+                            format!("{}[{i}]", o.path("local_steps")),
+                            "expected a non-negative integer",
+                        )
+                    })
+                })
+                .collect::<Result<Vec<_>, _>>()?
+        }
+    };
+    let sigmas = {
+        let v = o.req("sigmas")?;
+        let arr = v
+            .as_arr()
+            .ok_or_else(|| SpecError::new(o.path("sigmas"), "expected an array"))?;
+        arr.iter()
+            .enumerate()
+            .map(|(i, sj)| {
+                sj.as_f64().map(|x| x as f32).ok_or_else(|| {
+                    SpecError::new(format!("{}[{i}]", o.path("sigmas")), "expected a number")
+                })
+            })
+            .collect::<Result<Vec<_>, _>>()?
+    };
+    let sweep = SweepSpec {
+        zs,
+        local_steps,
+        sigmas,
+        client_lr: o.f32_or("client_lr", 0.01)?,
+        server_lr: o.f32_or("server_lr", 1.0)?,
+    };
+    o.finish()?;
+    Ok(sweep)
+}
+
+fn output_json(o: &OutputSpec) -> Json {
+    jobj(vec![
+        ("dir", jstr(&o.dir.to_string_lossy())),
+        ("subtract_optimal", Json::Bool(o.subtract_optimal)),
+    ])
+}
+
+fn output_from(j: &Json, at: &str) -> Result<OutputSpec, SpecError> {
+    let o = Obj::new(j, at)?;
+    let out = OutputSpec {
+        dir: PathBuf::from(o.str_or("dir", "results")?),
+        subtract_optimal: o.bool_or("subtract_optimal", false)?,
+    };
+    o.finish()?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seed_for_repeat_convention_pinned() {
+        // The historical repeat-seed offset: base + 1000·r. CSV archives
+        // depend on it — do not change without a migration note.
+        assert_eq!(seed_for_repeat(0, 0), 0);
+        assert_eq!(seed_for_repeat(7, 3), 3007);
+        assert_eq!(seed_for_repeat(42, 1), 1042);
+        // Wraps instead of panicking at the edge.
+        assert_eq!(seed_for_repeat(u64::MAX, 1), 999);
+    }
+
+    fn tiny_spec() -> ExperimentSpec {
+        ExperimentSpec::new("t", WorkloadSpec::consensus(4, 8, 99))
+            .rounds(10)
+            .series(AlgorithmConfig::gd().with_lrs(0.1, 1.0))
+    }
+
+    #[test]
+    fn builder_defaults_mirror_server_config_default() {
+        let spec = tiny_spec();
+        let cfg = spec.server_config(0);
+        let d = ServerConfig::default();
+        assert_eq!(cfg.eval_every, d.eval_every);
+        assert_eq!(cfg.seed, d.seed);
+        assert_eq!(cfg.parallelism, d.parallelism);
+        assert_eq!(cfg.reduce_lanes, d.reduce_lanes);
+        assert!(cfg.clients_per_round.is_none());
+        assert_eq!(spec.server_config(2).seed, seed_for_repeat(0, 2));
+    }
+
+    #[test]
+    fn sweep_expansion_labels_follow_driver_convention() {
+        let one_axis = SweepSpec {
+            zs: vec![ZParam::Finite(1)],
+            local_steps: vec![1],
+            sigmas: vec![0.0, 0.5],
+            client_lr: 0.01,
+            server_lr: 1.0,
+        };
+        let s = one_axis.expand();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[0].label, "sigma0");
+        assert_eq!(s[1].label, "sigma0.5");
+        assert_eq!(s[0].display, "sigma = 0");
+
+        let grid = SweepSpec {
+            zs: vec![ZParam::Finite(1), ZParam::Inf],
+            local_steps: vec![1, 5],
+            sigmas: vec![0.5],
+            client_lr: 0.01,
+            server_lr: 1.0,
+        };
+        let g = grid.expand();
+        assert_eq!(g.len(), 4);
+        assert_eq!(g[0].label, "z1_e1_sigma0.5");
+        assert_eq!(g[3].label, "zinf_e5_sigma0.5");
+        assert_eq!(g[3].display, "z=inf E=5 sigma=0.5");
+        assert_eq!(g[3].algorithm.local_steps, 5);
+    }
+
+    #[test]
+    fn validate_accepts_good_and_reports_bad() {
+        assert!(tiny_spec().validate().is_ok());
+
+        let bad = ExperimentSpec::new("", WorkloadSpec::consensus(0, 0, 1)).rounds(0);
+        let errs = bad.validate().unwrap_err();
+        let ats: Vec<&str> = errs.iter().map(|e| e.at.as_str()).collect();
+        assert!(ats.contains(&"name"), "{ats:?}");
+        assert!(ats.contains(&"rounds"), "{ats:?}");
+        assert!(ats.contains(&"workload.clients"), "{ats:?}");
+        assert!(ats.contains(&"series"), "{ats:?}");
+    }
+
+    #[test]
+    fn validate_rejects_ef_partial_participation() {
+        // The engine would panic on this (paper §1.1); the spec refuses it
+        // with a structured error instead.
+        let spec = ExperimentSpec::new("t", WorkloadSpec::consensus(8, 4, 99))
+            .clients_per_round(Some(4))
+            .series(AlgorithmConfig::ef_signsgd());
+        let errs = spec.validate().unwrap_err();
+        assert!(errs.iter().any(|e| e.reason.contains("EF-SignSGD")), "{errs:?}");
+
+        // clients_per_round == population IS full participation — the
+        // engine accepts it, so the spec must too.
+        let full = ExperimentSpec::new("t", WorkloadSpec::consensus(8, 4, 99))
+            .clients_per_round(Some(8))
+            .series(AlgorithmConfig::ef_signsgd());
+        assert!(full.validate().is_ok(), "{:?}", full.validate());
+    }
+
+    #[test]
+    fn validate_rejects_bad_sparse_sign_sigma() {
+        for sigma in [-5.0f32, f32::NAN] {
+            let spec = ExperimentSpec::new("t", WorkloadSpec::consensus(4, 8, 99))
+                .series(AlgorithmConfig::sparse_sign(0.1, ZParam::Finite(1), sigma, 1));
+            let errs = spec.validate().unwrap_err();
+            assert!(
+                errs.iter().any(|e| e.at.ends_with("compression.sigma")),
+                "sigma={sigma}: {errs:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn validate_rejects_cohort_larger_than_population() {
+        let spec = ExperimentSpec::new("t", WorkloadSpec::consensus(4, 4, 99))
+            .clients_per_round(Some(9))
+            .series(AlgorithmConfig::gd());
+        let errs = spec.validate().unwrap_err();
+        assert!(errs.iter().any(|e| e.at == "clients_per_round"), "{errs:?}");
+    }
+
+    #[test]
+    fn json_roundtrip_minimal() {
+        let spec = tiny_spec();
+        let back = ExperimentSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn json_rejects_unknown_keys_but_allows_comments() {
+        let good = r#"{"name":"t","_note":"a comment",
+            "workload":{"kind":"consensus","clients":2,"dim":2,"_why":"x"},
+            "series":[{"algorithm":{"name":"GD","compression":{"kind":"none"}}}]}"#;
+        assert!(ExperimentSpec::from_json(good).is_ok());
+        let bad = good.replace("\"_note\"", "\"rouns\"");
+        let err = ExperimentSpec::from_json(&bad).unwrap_err();
+        assert!(err.reason.contains("unknown field"), "{err}");
+        assert_eq!(err.at, "rouns");
+    }
+
+    #[test]
+    fn json_reports_field_paths() {
+        let doc = r#"{"name":"t","workload":{"kind":"consensus","clients":2,"dim":2},
+            "series":[{"algorithm":{"name":"x",
+                "compression":{"kind":"qsgd"}}}]}"#;
+        let err = ExperimentSpec::from_json(doc).unwrap_err();
+        assert_eq!(err.at, "series[0].algorithm.compression.s");
+        assert!(err.reason.contains("missing"), "{err}");
+    }
+
+    #[test]
+    fn zparam_json_forms() {
+        assert_eq!(zparam_from(&Json::parse("3").unwrap(), "z").unwrap(), ZParam::Finite(3));
+        assert_eq!(zparam_from(&Json::parse("\"inf\"").unwrap(), "z").unwrap(), ZParam::Inf);
+        assert!(zparam_from(&Json::parse("0").unwrap(), "z").is_err());
+        assert!(zparam_from(&Json::parse("1.5").unwrap(), "z").is_err());
+    }
+}

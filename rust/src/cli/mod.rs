@@ -2,7 +2,12 @@
 //!
 //! Grammar: `zsfa <subcommand> [--flag] [--key value] [positional...]`.
 //! `--key value` pairs double as config overrides (see `config::Config`).
+//!
+//! Typed accessors are fallible: a malformed value (`--rounds nope`,
+//! `--local-steps 1,x`) surfaces as a clean CLI error naming the flag —
+//! never a panic — so drivers propagate it with `?`.
 
+use crate::error::{Error, Result};
 use std::collections::BTreeMap;
 
 /// Parsed command line.
@@ -63,41 +68,68 @@ impl Args {
         self.flag(key).unwrap_or(default)
     }
 
-    pub fn usize_or(&self, key: &str, default: usize) -> usize {
-        self.flag(key)
-            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{key}: bad integer {s:?}")))
-            .unwrap_or(default)
+    /// Parse one flag's value, reporting the flag name on failure.
+    fn parse_typed<T: std::str::FromStr>(&self, key: &str, what: &str) -> Result<Option<T>> {
+        match self.flag(key) {
+            None => Ok(None),
+            Some(s) => match s.parse::<T>() {
+                Ok(v) => Ok(Some(v)),
+                Err(_) => Err(Error::msg(format!("--{key}: bad {what} {s:?}"))),
+            },
+        }
     }
 
-    pub fn f32_or(&self, key: &str, default: f32) -> f32 {
-        self.flag(key)
-            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{key}: bad float {s:?}")))
-            .unwrap_or(default)
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        Ok(self.parse_typed(key, "integer")?.unwrap_or(default))
     }
 
-    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
-        self.flag(key)
-            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{key}: bad float {s:?}")))
-            .unwrap_or(default)
+    pub fn f32_or(&self, key: &str, default: f32) -> Result<f32> {
+        Ok(self.parse_typed(key, "float")?.unwrap_or(default))
     }
 
-    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
-        self.flag(key)
-            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{key}: bad integer {s:?}")))
-            .unwrap_or(default)
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        Ok(self.parse_typed(key, "float")?.unwrap_or(default))
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        Ok(self.parse_typed(key, "integer")?.unwrap_or(default))
+    }
+
+    pub fn opt_usize(&self, key: &str) -> Result<Option<usize>> {
+        self.parse_typed(key, "integer")
+    }
+
+    /// A comma-separated list flag (`--dims 10,100,1000`); `default` when
+    /// the flag is absent, an error naming the bad element otherwise.
+    pub fn list_or<T: std::str::FromStr + Clone>(
+        &self,
+        key: &str,
+        default: &[T],
+    ) -> Result<Vec<T>> {
+        match self.flag(key) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(|v| {
+                    let v = v.trim();
+                    v.parse::<T>()
+                        .map_err(|_| Error::msg(format!("--{key}: bad list element {v:?}")))
+                })
+                .collect(),
+        }
     }
 
     /// The `--parallelism` knob shared by every experiment driver: worker
     /// threads for per-client round work (`ServerConfig::parallelism`).
     /// Results are bit-identical for any value (see `fl::engine`).
-    pub fn parallelism_or(&self, default: usize) -> usize {
+    pub fn parallelism_or(&self, default: usize) -> Result<usize> {
         self.usize_or("parallelism", default)
     }
 
     /// The `--reduce-lanes` knob: lanes of the fixed reduction topology
     /// (`ServerConfig::reduce_lanes`). Part of the reproducibility
     /// contract, like the seed — NOT a performance-only knob.
-    pub fn reduce_lanes_or(&self, default: usize) -> usize {
+    pub fn reduce_lanes_or(&self, default: usize) -> Result<usize> {
         self.usize_or("reduce-lanes", default)
     }
 
@@ -127,19 +159,63 @@ mod tests {
     #[test]
     fn flags_with_values() {
         let a = parse("run --rounds 100 --sigma=0.05 --verbose --seed 7");
-        assert_eq!(a.usize_or("rounds", 0), 100);
-        assert_eq!(a.f32_or("sigma", 0.0), 0.05);
-        assert_eq!(a.f64_or("sigma", 0.0), 0.05);
-        assert_eq!(a.f64_or("missing", 2.5), 2.5);
+        assert_eq!(a.usize_or("rounds", 0).unwrap(), 100);
+        assert_eq!(a.f32_or("sigma", 0.0).unwrap(), 0.05);
+        assert_eq!(a.f64_or("sigma", 0.0).unwrap(), 0.05);
+        assert_eq!(a.f64_or("missing", 2.5).unwrap(), 2.5);
         assert!(a.has("verbose"));
         assert_eq!(a.str_or("verbose", "false"), "true");
-        assert_eq!(a.u64_or("seed", 0), 7);
+        assert_eq!(a.u64_or("seed", 0).unwrap(), 7);
+        assert_eq!(a.opt_usize("rounds").unwrap(), Some(100));
+        assert_eq!(a.opt_usize("missing").unwrap(), None);
     }
 
     #[test]
     fn parallelism_flag() {
-        assert_eq!(parse("run --parallelism 8").parallelism_or(1), 8);
-        assert_eq!(parse("run").parallelism_or(1), 1);
+        assert_eq!(parse("run --parallelism 8").parallelism_or(1).unwrap(), 8);
+        assert_eq!(parse("run").parallelism_or(1).unwrap(), 1);
+    }
+
+    #[test]
+    fn list_flag_parses_and_defaults() {
+        let a = parse("fig1 --dims 10,100, 1000");
+        // note: "100, 1000" arrives as one whitespace-joined value only in
+        // shells; here the flag value is "10,100," + positional "1000".
+        let a2 = parse("fig1 --dims 10,100,1000");
+        assert_eq!(a2.list_or::<usize>("dims", &[1]).unwrap(), vec![10, 100, 1000]);
+        assert_eq!(a2.list_or::<usize>("missing", &[7, 8]).unwrap(), vec![7, 8]);
+        assert!(a.list_or::<usize>("dims", &[1]).is_err()); // trailing comma
+    }
+
+    // -- one test per bad-input case: these used to panic ------------------
+
+    #[test]
+    fn bad_integer_flag_is_an_error_not_a_panic() {
+        let a = parse("fig5 --rounds nope");
+        let err = a.usize_or("rounds", 1).unwrap_err().to_string();
+        assert!(err.contains("--rounds") && err.contains("nope"), "{err}");
+    }
+
+    #[test]
+    fn bad_u64_flag_is_an_error_not_a_panic() {
+        let a = parse("run --seed -3");
+        assert!(a.u64_or("seed", 0).is_err());
+    }
+
+    #[test]
+    fn bad_float_flag_is_an_error_not_a_panic() {
+        let a = parse("fig2 --sigma abc");
+        let err = a.f32_or("sigma", 0.0).unwrap_err().to_string();
+        assert!(err.contains("--sigma"), "{err}");
+        assert!(parse("fig2 --lr x").f64_or("lr", 0.0).is_err());
+    }
+
+    #[test]
+    fn bad_local_steps_list_is_an_error_not_a_panic() {
+        // The fig5 `--local-steps` path that used to `.parse().unwrap()`.
+        let a = parse("fig5 --local-steps 1,x,3");
+        let err = a.list_or::<usize>("local-steps", &[1]).unwrap_err().to_string();
+        assert!(err.contains("--local-steps") && err.contains("\"x\""), "{err}");
     }
 
     #[test]
@@ -147,7 +223,7 @@ mod tests {
         let a = parse("run --rounds 5");
         let mut cfg = crate::config::Config::new();
         a.apply_overrides(&mut cfg);
-        assert_eq!(cfg.usize_or("rounds", 0), 5);
+        assert_eq!(cfg.usize_or("rounds", 0).unwrap(), 5);
     }
 
     #[test]

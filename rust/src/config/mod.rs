@@ -7,7 +7,11 @@
 //!
 //! Precedence: built-in defaults < config file < CLI `--key value`
 //! overrides (`cli::Args::apply_overrides`).
+//!
+//! Typed accessors are fallible: a malformed value surfaces as an error
+//! naming the key — never a panic (mirrors `cli::Args`).
 
+use crate::error::{Error, Result};
 use std::collections::{BTreeMap, BTreeSet};
 use std::path::Path;
 
@@ -74,58 +78,60 @@ impl Config {
         self.raw(key).unwrap_or(default)
     }
 
-    pub fn usize_or(&self, key: &str, default: usize) -> usize {
-        self.raw(key)
-            .map(|s| s.parse().unwrap_or_else(|_| panic!("config {key}: bad usize {s:?}")))
-            .unwrap_or(default)
+    /// Parse one key's value, reporting the key on failure.
+    fn parse_typed<T: std::str::FromStr>(&self, key: &str, what: &str) -> Result<Option<T>> {
+        match self.raw(key) {
+            None => Ok(None),
+            Some(s) => match s.parse::<T>() {
+                Ok(v) => Ok(Some(v)),
+                Err(_) => Err(Error::msg(format!("config {key}: bad {what} {s:?}"))),
+            },
+        }
     }
 
-    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
-        self.raw(key)
-            .map(|s| s.parse().unwrap_or_else(|_| panic!("config {key}: bad u64 {s:?}")))
-            .unwrap_or(default)
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        Ok(self.parse_typed(key, "usize")?.unwrap_or(default))
     }
 
-    pub fn f32_or(&self, key: &str, default: f32) -> f32 {
-        self.raw(key)
-            .map(|s| s.parse().unwrap_or_else(|_| panic!("config {key}: bad f32 {s:?}")))
-            .unwrap_or(default)
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        Ok(self.parse_typed(key, "u64")?.unwrap_or(default))
     }
 
-    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
-        self.raw(key)
-            .map(|s| s.parse().unwrap_or_else(|_| panic!("config {key}: bad f64 {s:?}")))
-            .unwrap_or(default)
+    pub fn f32_or(&self, key: &str, default: f32) -> Result<f32> {
+        Ok(self.parse_typed(key, "f32")?.unwrap_or(default))
     }
 
-    pub fn bool_or(&self, key: &str, default: bool) -> bool {
-        self.raw(key)
-            .map(|s| match s {
-                "true" | "1" | "yes" => true,
-                "false" | "0" | "no" => false,
-                other => panic!("config {key}: bad bool {other:?}"),
-            })
-            .unwrap_or(default)
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        Ok(self.parse_typed(key, "f64")?.unwrap_or(default))
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.raw(key) {
+            None => Ok(default),
+            Some("true" | "1" | "yes") => Ok(true),
+            Some("false" | "0" | "no") => Ok(false),
+            Some(other) => Err(Error::msg(format!("config {key}: bad bool {other:?}"))),
+        }
     }
 
     /// The `parallelism` key shared by every experiment config: worker
     /// threads for per-client round work (`ServerConfig::parallelism`).
-    pub fn parallelism_or(&self, default: usize) -> usize {
+    pub fn parallelism_or(&self, default: usize) -> Result<usize> {
         self.usize_or("parallelism", default)
     }
 
     /// The `reduce_lanes` key (`--reduce-lanes` on the CLI): lanes of the
     /// fixed reduction topology (`ServerConfig::reduce_lanes`). Part of the
     /// reproducibility contract, like the seed.
-    pub fn reduce_lanes_or(&self, default: usize) -> usize {
+    pub fn reduce_lanes_or(&self, default: usize) -> Result<usize> {
         // Accept both spellings: config files use `reduce_lanes`, CLI
         // overrides arrive as `reduce-lanes`.
-        let d = self.usize_or("reduce_lanes", default);
+        let d = self.usize_or("reduce_lanes", default)?;
         self.usize_or("reduce-lanes", d)
     }
 
-    pub fn opt_usize(&self, key: &str) -> Option<usize> {
-        self.raw(key).map(|s| s.parse().unwrap_or_else(|_| panic!("config {key}: bad usize {s:?}")))
+    pub fn opt_usize(&self, key: &str) -> Result<Option<usize>> {
+        self.parse_typed(key, "usize")
     }
 
     /// Keys present in the file but never read (likely typos).
@@ -142,10 +148,10 @@ mod tests {
     #[test]
     fn parses_basic() {
         let c = Config::parse("a = 1\n# comment\nname = \"hello world\"\nlr=0.5\n").unwrap();
-        assert_eq!(c.usize_or("a", 0), 1);
+        assert_eq!(c.usize_or("a", 0).unwrap(), 1);
         assert_eq!(c.str_or("name", ""), "hello world");
-        assert_eq!(c.f32_or("lr", 0.0), 0.5);
-        assert_eq!(c.bool_or("missing", true), true);
+        assert_eq!(c.f32_or("lr", 0.0).unwrap(), 0.5);
+        assert_eq!(c.bool_or("missing", true).unwrap(), true);
     }
 
     #[test]
@@ -153,8 +159,8 @@ mod tests {
         let mut base = Config::parse("a = 1\nb = 2").unwrap();
         let over = Config::parse("b = 3").unwrap();
         base.overlay(&over);
-        assert_eq!(base.usize_or("a", 0), 1);
-        assert_eq!(base.usize_or("b", 0), 3);
+        assert_eq!(base.usize_or("a", 0).unwrap(), 1);
+        assert_eq!(base.usize_or("b", 0).unwrap(), 3);
     }
 
     #[test]
@@ -171,9 +177,14 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "bad usize")]
-    fn typed_access_panics_on_garbage() {
-        let c = Config::parse("n = zebra").unwrap();
-        c.usize_or("n", 0);
+    fn typed_access_errors_on_garbage() {
+        // These used to panic mid-run; now they surface as config errors.
+        let c = Config::parse("n = zebra\nb = maybe\nf = 1..2").unwrap();
+        let err = c.usize_or("n", 0).unwrap_err().to_string();
+        assert!(err.contains("config n") && err.contains("zebra"), "{err}");
+        assert!(c.bool_or("b", false).is_err());
+        assert!(c.f32_or("f", 0.0).is_err());
+        assert!(c.opt_usize("n").is_err());
+        assert!(c.u64_or("n", 0).is_err());
     }
 }

@@ -79,7 +79,7 @@ pub enum ServerOpt {
 }
 
 /// A fully-specified algorithm: compression + stepsizes + server optimizer.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct AlgorithmConfig {
     /// Display name for logs/CSV (matches the paper's legend strings).
     pub name: String,

@@ -235,6 +235,18 @@ impl<'a> RoundEngine<'a> {
 
     /// Run the full experiment (Algorithm 1 / Algorithm 2 round loop).
     pub fn run(&mut self, backend: &mut dyn TrainBackend) -> RunResult {
+        self.run_observed(backend, &mut |_| {})
+    }
+
+    /// Like [`RoundEngine::run`], additionally streaming every evaluated
+    /// [`RoundRecord`] to `on_record` as it is produced — the seam
+    /// `api::Session` feeds its `RoundObserver`s from (a progress sink
+    /// sees the experiment live, not after the fact).
+    pub fn run_observed(
+        &mut self,
+        backend: &mut dyn TrainBackend,
+        on_record: &mut dyn FnMut(&RoundRecord),
+    ) -> RunResult {
         let n = self.n;
         let m_per_round = self.cfg.clients_per_round.unwrap_or(n).min(n);
         assert!(m_per_round >= 1);
@@ -383,7 +395,7 @@ impl<'a> RoundEngine<'a> {
             // 7. Evaluation.
             if t % self.cfg.eval_every == 0 || t + 1 == self.cfg.rounds {
                 let eval = backend.evaluate(&params);
-                records.push(RoundRecord {
+                let rec = RoundRecord {
                     round: t,
                     objective: eval.objective,
                     accuracy: eval.accuracy,
@@ -395,7 +407,9 @@ impl<'a> RoundEngine<'a> {
                     sim_time_s,
                     arrived: arrived as u32,
                     selected: selected as u32,
-                });
+                };
+                on_record(&rec);
+                records.push(rec);
             }
         }
 

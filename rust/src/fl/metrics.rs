@@ -111,6 +111,13 @@ pub fn aggregate(runs: &[RunResult]) -> Aggregated {
     out
 }
 
+/// Filesystem-safe series file stem: the historical `save_series`
+/// replacement rule, shared by `api::CsvSink` and anything else that names
+/// per-series files, so file names can never drift between paths.
+pub fn safe_series_name(label: &str) -> String {
+    label.replace(['/', ' ', '(', ')', '=', ','], "_")
+}
+
 /// Write one aggregated series as CSV (`results/` convention: one file per
 /// algorithm per figure).
 pub fn write_csv(path: &Path, agg: &Aggregated) -> std::io::Result<()> {
@@ -220,6 +227,14 @@ mod tests {
         assert!(body.starts_with("round,"));
         assert_eq!(body.lines().count(), 3);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn safe_series_name_pinned() {
+        // File names in archived results depend on this exact rule.
+        assert_eq!(safe_series_name("QSGD(s=2)"), "QSGD_s_2_");
+        assert_eq!(safe_series_name("z=1 E=5, a/b"), "z_1_E_5__a_b");
+        assert_eq!(safe_series_name("1-SignSGD"), "1-SignSGD");
     }
 
     #[test]

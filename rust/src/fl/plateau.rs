@@ -6,7 +6,7 @@
 //! provided as presets.
 
 /// Plateau-criterion hyperparameters.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PlateauConfig {
     pub sigma_init: f32,
     pub sigma_bound: f32,

@@ -26,14 +26,14 @@
 use super::algorithms::AlgorithmConfig;
 use super::backend::TrainBackend;
 use super::engine::RoundEngine;
-use super::metrics::RunResult;
+use super::metrics::{RoundRecord, RunResult};
 use super::plateau::PlateauConfig;
 use crate::rng::ZParam;
 use crate::sim::ScenarioConfig;
 
 /// How each round's participants are chosen (see
 /// `fl::engine::ParticipationPolicy`).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub enum Participation {
     /// The historical sampler: `clients_per_round` uniformly without
     /// replacement (everyone when unset), every report arrives.
@@ -119,9 +119,20 @@ pub fn run_experiment(
     algo: &AlgorithmConfig,
     cfg: &ServerConfig,
 ) -> RunResult {
+    run_experiment_observed(backend, algo, cfg, &mut |_| {})
+}
+
+/// Like [`run_experiment`], streaming each evaluated round record to
+/// `on_record` while the run executes (the `api::Session` observer seam).
+pub fn run_experiment_observed(
+    backend: &mut dyn TrainBackend,
+    algo: &AlgorithmConfig,
+    cfg: &ServerConfig,
+    on_record: &mut dyn FnMut(&RoundRecord),
+) -> RunResult {
     let d = backend.dim();
     let n = backend.num_clients();
-    RoundEngine::new(algo, cfg, d, n).run(backend)
+    RoundEngine::new(algo, cfg, d, n).run_observed(backend, on_record)
 }
 
 #[cfg(test)]

@@ -15,9 +15,15 @@
 //! After `make artifacts`, the `zsfa` binary is self-contained: it loads the
 //! HLO artifacts through PJRT (the `xla` crate) and never touches Python.
 //!
+//! Experiments are described by the typed, JSON-serializable
+//! [`api::ExperimentSpec`] and executed by an observer-driven
+//! [`api::Session`] (`zsfa run spec.json`); the `repro::fig*` drivers are
+//! thin spec factories over the same seam.
+//!
 //! See `DESIGN.md` for the full system inventory and the experiment index
 //! mapping every figure/table of the paper to a driver.
 
+pub mod api;
 pub mod bench;
 pub mod cli;
 pub mod compress;

@@ -1,15 +1,19 @@
 //! `zsfa` — the z-SignFedAvg coordinator CLI.
 //!
 //! Subcommands:
-//!   run                 config-driven experiment (`--config configs/x.cfg`)
+//!   run <spec.json>     execute any ExperimentSpec without recompiling
+//!   run --config f.cfg  config-driven experiment (legacy key=value format)
 //!   fig1 fig2 fig3 fig5 fig6 fig16 fig17 table2
 //!                       reproduce the paper's figures/tables (DESIGN.md §5)
 //!   scenarios           client-lifecycle simulation: deadlines, dropouts,
 //!                       byzantine robustness (DESIGN.md §2.5)
 //!   inspect             list artifacts from the manifest
-//!   bench               in-process micro-bench smoke (full benches: `cargo bench`)
 //!   version             print version
+//!
+//! Every experiment — drivers included — flows through the typed
+//! `api::ExperimentSpec` + `api::Session` surface (DESIGN.md §4.5).
 
+use zsignfedavg::api::{Dataset, ExperimentSpec, Session, WorkloadSpec};
 use zsignfedavg::cli::Args;
 use zsignfedavg::error::{anyhow, bail, Result};
 use zsignfedavg::repro;
@@ -26,7 +30,7 @@ fn main() -> Result<()> {
         Some("fig17") => repro::fig17_dp::run(&args),
         Some("table2") => repro::table2_rates::run(&args),
         Some("scenarios") => repro::figx_scenarios::run(&args),
-        Some("run") => run_config(&args),
+        Some("run") => run_cmd(&args),
         Some("inspect") => inspect(&args),
         Some("version") => {
             println!("zsfa {}", zsignfedavg::version());
@@ -49,6 +53,12 @@ fn print_help() {
 USAGE: zsfa <subcommand> [--key value ...]
 
 SUBCOMMANDS
+  run     execute an experiment spec: zsfa run spec.json
+          (typed JSON: workload, algorithm series/sweep, scenario,
+           repeats — see rust/examples/quickstart.json and DESIGN.md §4.5;
+           --parallelism/--reduce-lanes/--out override execution knobs)
+          legacy key=value configs still work: --config configs/<f>.cfg
+          (set sim = true + sim_* keys for scenario participation)
   fig1    consensus problem across dimensions (+ §1 counterexample)
   fig2    noise-scale bias/variance trade-off
   fig3    non-iid MNIST sign-method comparison   (--sweep-sigma => fig7)
@@ -60,8 +70,6 @@ SUBCOMMANDS
   table2  rate summary + empirical rate fit
   scenarios client-lifecycle sim: stragglers/dropouts (time-to-target) and
           byzantine robustness curves (--sim_* flags, see sim/)
-  run     config-driven experiment: --config configs/<f>.cfg
-          (set sim = true + sim_* keys for scenario participation)
   inspect list AOT artifacts
 
 COMMON FLAGS
@@ -101,14 +109,43 @@ fn inspect(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Config-driven experiment runner (see `configs/*.cfg`).
+/// `zsfa run`: a spec file when a positional path is given, the legacy
+/// config format otherwise.
+fn run_cmd(args: &Args) -> Result<()> {
+    match args.positional.first() {
+        Some(path) => run_spec(args, path),
+        None => run_config(args),
+    }
+}
+
+/// Execute an `ExperimentSpec` JSON file. Execution knobs (and only those)
+/// can be overridden from the CLI: `--parallelism` and `--reduce-lanes`
+/// never change *what* the experiment is (determinism contract /
+/// reproducibility knob), `--out` only moves the results tree.
+fn run_spec(args: &Args, path: &str) -> Result<()> {
+    let mut spec = ExperimentSpec::from_json_file(std::path::Path::new(path))?;
+    spec = zsignfedavg::repro::common::apply_execution_flags(spec, args)?;
+    if let Some(dir) = args.flag("out") {
+        spec = spec.output_dir(dir);
+    }
+    println!(
+        "run: {} — {} series x {} repeats, {} rounds",
+        spec.name,
+        spec.expanded_series().len(),
+        spec.repeats,
+        spec.rounds
+    );
+    Session::console().run(&spec)?;
+    Ok(())
+}
+
+/// Config-driven experiment runner (see `configs/*.cfg`), routed through
+/// the same spec/session seam as everything else.
 fn run_config(args: &Args) -> Result<()> {
     use zsignfedavg::config::Config;
-    use zsignfedavg::fl::server::ServerConfig;
+    use zsignfedavg::fl::server::Participation;
     use zsignfedavg::fl::AlgorithmConfig;
-    use zsignfedavg::repro::common::{
-        build_xla_backend, print_summary_row, run_repeats, save_series, Workload,
-    };
+    use zsignfedavg::repro::common::neural_spec_from_args;
     use zsignfedavg::rng::ZParam;
 
     let mut cfg = Config::new();
@@ -117,11 +154,11 @@ fn run_config(args: &Args) -> Result<()> {
     }
     args.apply_overrides(&mut cfg);
 
-    let workload = Workload::parse(cfg.str_or("dataset", "mnist"))
+    let dataset = Dataset::parse(cfg.str_or("dataset", "mnist"))
         .ok_or_else(|| anyhow!("dataset must be mnist|emnist|cifar"))?;
     let algo_name = cfg.str_or("algorithm", "1-signfedavg").to_string();
-    let sigma = cfg.f32_or("sigma", 0.05);
-    let e = cfg.usize_or("local_steps", 1);
+    let sigma = cfg.f32_or("sigma", 0.05)?;
+    let e = cfg.usize_or("local_steps", 1)?;
     let algo = match algo_name.as_str() {
         "fedavg" => AlgorithmConfig::fedavg(e),
         "signsgd" => AlgorithmConfig::signsgd(),
@@ -130,42 +167,36 @@ fn run_config(args: &Args) -> Result<()> {
         "inf-signfedavg" => AlgorithmConfig::z_signfedavg(ZParam::Inf, sigma, e),
         "sto-signsgd" => AlgorithmConfig::sto_signsgd(),
         "ef-signsgd" => AlgorithmConfig::ef_signsgd(),
-        "qsgd" => AlgorithmConfig::qsgd(cfg.usize_or("qsgd_levels", 2) as u32),
+        "qsgd" => AlgorithmConfig::qsgd(cfg.usize_or("qsgd_levels", 2)? as u32),
         other => bail!("unknown algorithm {other:?}"),
     }
-    .with_lrs(cfg.f32_or("client_lr", 0.01), cfg.f32_or("server_lr", 1.0))
-    .with_momentum(cfg.f32_or("momentum", 0.0));
+    .with_lrs(cfg.f32_or("client_lr", 0.01)?, cfg.f32_or("server_lr", 1.0)?)
+    .with_momentum(cfg.f32_or("momentum", 0.0)?);
 
-    let participation = if cfg.bool_or("sim", false) {
-        let sc = zsignfedavg::sim::ScenarioConfig::from_config(&cfg).map_err(|e| anyhow!(e))?;
-        zsignfedavg::fl::server::Participation::Simulated(sc)
+    let participation = if cfg.bool_or("sim", false)? {
+        Participation::Simulated(zsignfedavg::sim::ScenarioConfig::from_config(&cfg)?)
     } else {
-        zsignfedavg::fl::server::Participation::Uniform
+        Participation::Uniform
     };
-    let server = ServerConfig {
-        rounds: cfg.usize_or("rounds", 100),
-        clients_per_round: cfg.opt_usize("clients_per_round"),
-        eval_every: cfg.usize_or("eval_every", 5),
-        seed: cfg.u64_or("seed", 0),
-        plateau: None,
-        downlink_sign: None,
-        parallelism: cfg.parallelism_or(1),
-        reduce_lanes: cfg.reduce_lanes_or(zsignfedavg::fl::server::DEFAULT_REDUCE_LANES),
-        participation,
-    };
-    let repeats = cfg.usize_or("repeats", 1);
+    let spec = ExperimentSpec::new(
+        "run",
+        WorkloadSpec::Neural(neural_spec_from_args(dataset, args)?),
+    )
+    .rounds(cfg.usize_or("rounds", 100)?)
+    .clients_per_round(cfg.opt_usize("clients_per_round")?)
+    .eval_every(cfg.usize_or("eval_every", 5)?)
+    .seed(cfg.u64_or("seed", 0)?)
+    .repeats(cfg.usize_or("repeats", 1)?)
+    .parallelism(cfg.parallelism_or(1)?)
+    .reduce_lanes(cfg.reduce_lanes_or(zsignfedavg::fl::server::DEFAULT_REDUCE_LANES)?)
+    .participation(participation)
+    .series(algo);
+
     println!(
-        "run: {} on {:?} — rounds={} E={} repeats={repeats}",
-        algo.name, workload, server.rounds, algo.local_steps
+        "run: {} on {dataset:?} — rounds={} E={e} repeats={}",
+        spec.series[0].algorithm.name, spec.rounds, spec.repeats
     );
-    let (agg, runs) = run_repeats(
-        || build_xla_backend(workload, args).expect("backend"),
-        &algo,
-        &server,
-        repeats,
-    );
-    save_series("run", &algo.name, &agg, &runs);
-    print_summary_row(&algo.name, &agg);
+    Session::console().run(&spec)?;
     for k in cfg.unused_keys() {
         eprintln!("warning: unused config key {k:?}");
     }

@@ -1,149 +1,57 @@
-//! Shared driver plumbing: repeat runner, result table printing, CSV layout.
+//! Shared driver plumbing: banners + CLI→spec helpers.
+//!
+//! The repeat loop, seed-offset convention, CSV writing and summary
+//! printing that used to live here moved behind the experiment API
+//! (`api::Session` + its observers); what remains is the translation from
+//! command-line flags to spec fields that every driver shares.
 
-use crate::fl::backend::TrainBackend;
-use crate::fl::metrics::{aggregate, write_csv, write_runs_csv, Aggregated, RunResult};
-use crate::fl::server::{run_experiment, ServerConfig};
-use crate::fl::AlgorithmConfig;
-use std::path::{Path, PathBuf};
-
-/// Run `repeats` independent seeds of one algorithm and aggregate.
-///
-/// `make_backend` is called once per repeat (backends can hold RNG-derived
-/// state); the paper's protocol keeps the problem/dataset fixed and varies
-/// only the algorithmic randomness, which is what the seed offset does.
-pub fn run_repeats<B: TrainBackend>(
-    mut make_backend: impl FnMut() -> B,
-    algo: &AlgorithmConfig,
-    cfg: &ServerConfig,
-    repeats: usize,
-) -> (Aggregated, Vec<RunResult>) {
-    let mut runs = Vec::with_capacity(repeats);
-    for r in 0..repeats {
-        let mut backend = make_backend();
-        let cfg_r = ServerConfig { seed: cfg.seed.wrapping_add(1000 * r as u64), ..cfg.clone() };
-        runs.push(run_experiment(&mut backend, algo, &cfg_r));
-    }
-    (aggregate(&runs), runs)
-}
-
-/// Results directory (`results/<figure>/`).
-pub fn results_dir(figure: &str) -> PathBuf {
-    Path::new("results").join(figure)
-}
-
-/// Persist aggregated + raw CSVs for one algorithm series.
-pub fn save_series(figure: &str, series: &str, agg: &Aggregated, runs: &[RunResult]) {
-    let dir = results_dir(figure);
-    let safe = series.replace(['/', ' ', '(', ')', '=', ','], "_");
-    write_csv(&dir.join(format!("{safe}.csv")), agg).expect("writing csv");
-    write_runs_csv(&dir.join(format!("{safe}_raw.csv")), runs).expect("writing raw csv");
-}
-
-/// Print a compact per-algorithm summary row.
-pub fn print_summary_row(series: &str, agg: &Aggregated) {
-    let last = agg.rounds.len() - 1;
-    let acc = if agg.accuracy_mean[last].is_nan() {
-        "      -".to_string()
-    } else {
-        format!("{:6.2}%", 100.0 * agg.accuracy_mean[last])
-    };
-    println!(
-        "  {series:<28} final obj {:>12.6} ± {:>9.6}   acc {acc}   uplink {:>10.2} Mbit",
-        agg.objective_mean[last],
-        agg.objective_std[last],
-        agg.bits_up[last] as f64 / 1e6,
-    );
-}
+use crate::api::{Dataset, ExperimentSpec, NeuralSpec};
+use crate::cli::Args;
+use crate::error::{anyhow, Result};
+use std::path::PathBuf;
 
 /// Markdown-style header for driver output.
 pub fn banner(title: &str) {
     println!("\n=== {title} ===");
 }
 
-// ---------------------------------------------------------------------------
-// Neural workloads: dataset + partition + PJRT backend wiring
-// ---------------------------------------------------------------------------
-
-use crate::cli::Args;
-use crate::data::{partition, synth};
-use crate::runtime::{ModelRuntime, XlaBackend};
-
-/// A named neural workload preset (the paper's three dataset settings,
-/// scaled to the 1-core testbed — see DESIGN.md §3).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Workload {
-    /// §4.2 non-iid MNIST: 10 clients, one label each, full participation.
-    NoniidMnist,
-    /// §4.3 EMNIST: many clients (iid shards), partial participation.
-    Emnist,
-    /// §4.3 CIFAR-10: Dirichlet(1) skew, 10/100 clients per round.
-    Cifar,
+/// Apply the execution knobs every driver exposes: `--parallelism` and
+/// `--reduce-lanes`. Both are result-preserving for any fixed lane count
+/// (the engine's determinism contract), so they ride on every spec without
+/// changing what the experiment *is*.
+pub fn apply_execution_flags(spec: ExperimentSpec, args: &Args) -> Result<ExperimentSpec> {
+    let lanes_default = spec.reduce_lanes;
+    let par_default = spec.parallelism;
+    Ok(spec
+        .parallelism(args.parallelism_or(par_default)?)
+        .reduce_lanes(args.reduce_lanes_or(lanes_default)?))
 }
 
-impl Workload {
-    pub fn parse(s: &str) -> Option<Workload> {
-        match s {
-            "mnist" | "noniid-mnist" => Some(Workload::NoniidMnist),
-            "emnist" => Some(Workload::Emnist),
-            "cifar" | "cifar10" => Some(Workload::Cifar),
-            _ => None,
-        }
-    }
-
-    pub fn model(self) -> &'static str {
-        match self {
-            Workload::NoniidMnist => "mnist_cnn",
-            Workload::Emnist => "emnist_cnn",
-            Workload::Cifar => "cifar_cnn",
-        }
-    }
-
-    /// (default clients, default clients-per-round, default train size)
-    /// Paper scale: EMNIST 3579 clients / 100 sampled; CIFAR 100 / 10.
-    /// Defaults are scaled ~10× down to fit the testbed; `--paper-scale`
-    /// restores the paper's counts.
-    pub fn defaults(self, paper_scale: bool) -> (usize, Option<usize>, usize) {
-        match (self, paper_scale) {
-            (Workload::NoniidMnist, _) => (10, None, 2000),
-            (Workload::Emnist, false) => (358, Some(10), 3580),
-            (Workload::Emnist, true) => (3579, Some(100), 35790),
-            (Workload::Cifar, false) => (100, Some(10), 2000),
-            (Workload::Cifar, true) => (100, Some(10), 20000),
-        }
-    }
-}
-
-/// Build the PJRT-backed federated workload from CLI flags.
-pub fn build_xla_backend(workload: Workload, args: &Args) -> crate::error::Result<XlaBackend> {
-    let artifacts = Path::new(args.str_or("artifacts", "artifacts"));
-    let runtime = ModelRuntime::open(artifacts, workload.model())?;
+/// Build the neural-workload spec from CLI flags (`--clients`,
+/// `--train-samples`, `--test-samples`, `--paper-scale`, `--artifacts`),
+/// falling back to the dataset's testbed defaults.
+pub fn neural_spec_from_args(dataset: Dataset, args: &Args) -> Result<NeuralSpec> {
     let paper_scale = args.has("paper-scale");
-    let (n_clients_d, _, n_train_d) = workload.defaults(paper_scale);
-    let n_clients = args.usize_or("clients", n_clients_d);
-    let n_train = args.usize_or("train-samples", n_train_d);
-    let n_test = args.usize_or("test-samples", 2 * runtime.eval_batch);
-
-    let spec = match workload {
-        Workload::NoniidMnist => synth::SynthSpec::mnist(),
-        Workload::Emnist => synth::SynthSpec::emnist(),
-        Workload::Cifar => synth::SynthSpec::cifar(),
-    };
-    let (train, test) = synth::train_test(spec, n_train, n_test);
-    let fed = match workload {
-        Workload::NoniidMnist => partition::by_label(train, n_clients),
-        Workload::Emnist => partition::iid(train, n_clients, 42),
-        Workload::Cifar => partition::dirichlet(train, n_clients, 1.0, 42),
-    };
-    let init = runtime.load_init()?;
-    Ok(XlaBackend::new(runtime, fed, test, init))
+    let (clients_d, _, train_d) = dataset.defaults(paper_scale);
+    Ok(NeuralSpec {
+        dataset,
+        clients: args.usize_or("clients", clients_d)?,
+        train_samples: args.usize_or("train-samples", train_d)?,
+        test_samples: args.opt_usize("test-samples")?,
+        paper_scale,
+        artifacts: PathBuf::from(args.str_or("artifacts", "artifacts")),
+    })
 }
 
-/// Clients-per-round default for a workload (None = full participation).
-pub fn clients_per_round(workload: Workload, args: &Args) -> Option<usize> {
-    let (_, default, _) = workload.defaults(args.has("paper-scale"));
-    match args.flag("clients-per-round") {
+/// Clients-per-round for a workload (None = full participation):
+/// `--clients-per-round N|all`, defaulting per dataset.
+pub fn clients_per_round(dataset: Dataset, args: &Args) -> Result<Option<usize>> {
+    let (_, default, _) = dataset.defaults(args.has("paper-scale"));
+    Ok(match args.flag("clients-per-round") {
         Some("all") => None,
-        Some(s) => Some(s.parse().expect("--clients-per-round")),
+        Some(s) => Some(
+            s.parse().map_err(|_| anyhow!("--clients-per-round: bad integer {s:?}"))?,
+        ),
         None => default,
-    }
+    })
 }

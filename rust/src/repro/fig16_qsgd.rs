@@ -8,22 +8,22 @@
 //! QSGD needs s ≥ 4 to come close on MNIST.
 
 use super::common::*;
+use crate::api::{Dataset, ExperimentSpec, Session, WorkloadSpec};
 use crate::cli::Args;
-use crate::fl::server::ServerConfig;
 use crate::fl::AlgorithmConfig;
 use crate::rng::ZParam;
 
 pub fn run(args: &Args) -> crate::error::Result<()> {
-    let workload = Workload::parse(args.str_or("dataset", "mnist"))
+    let dataset = Dataset::parse(args.str_or("dataset", "mnist"))
         .ok_or_else(|| crate::anyhow!("--dataset mnist|emnist|cifar"))?;
-    banner(&format!("Figure 16 — sign vs unbiased quantization on {workload:?}"));
-    let rounds = args.usize_or("rounds", 100);
-    let repeats = args.usize_or("repeats", 2);
-    let cpr = clients_per_round(workload, args);
+    banner(&format!("Figure 16 — sign vs unbiased quantization on {dataset:?}"));
+    let rounds = args.usize_or("rounds", 100)?;
+    let repeats = args.usize_or("repeats", 2)?;
+    let cpr = clients_per_round(dataset, args)?;
 
     let mut algos: Vec<AlgorithmConfig> = Vec::new();
-    match workload {
-        Workload::NoniidMnist => {
+    match dataset {
+        Dataset::NoniidMnist => {
             // E = 1: QSGD vs 1-SignSGD (Table 7 row 1).
             algos.push(
                 AlgorithmConfig::z_signsgd(ZParam::Finite(1), 0.05).with_lrs(0.01, 1.0),
@@ -32,8 +32,8 @@ pub fn run(args: &Args) -> crate::error::Result<()> {
                 algos.push(AlgorithmConfig::qsgd(s).with_lrs(lr, 1.0));
             }
         }
-        Workload::Emnist | Workload::Cifar => {
-            let (client_lr, server_lr, sigma, e) = if workload == Workload::Emnist {
+        Dataset::Emnist | Dataset::Cifar => {
+            let (client_lr, server_lr, sigma, e) = if dataset == Dataset::Emnist {
                 (0.05f32, 0.03f32, 0.01f32, 5usize)
             } else {
                 (0.1, 0.0032, 0.0005, 5)
@@ -49,31 +49,20 @@ pub fn run(args: &Args) -> crate::error::Result<()> {
         }
     }
 
-    for algo in &algos {
-        let cfg = ServerConfig {
-            rounds,
-            clients_per_round: cpr,
-            eval_every: (rounds / 20).max(1),
-            parallelism: args.parallelism_or(1),
-            reduce_lanes: args.reduce_lanes_or(ServerConfig::default().reduce_lanes),
-            ..Default::default()
-        };
-        let (agg, runs) = run_repeats(
-            || build_xla_backend(workload, args).expect("backend"),
-            algo,
-            &cfg,
-            repeats,
-        );
-        save_series(
-            &format!("fig16_{}", args.str_or("dataset", "mnist")),
-            &algo.name,
-            &agg,
-            &runs,
-        );
-        // Report accuracy *and* bits so the bit-efficiency ordering is visible
-        // directly in the console output.
-        print_summary_row(&algo.name, &agg);
+    let mut spec = ExperimentSpec::new(
+        format!("fig16_{}", args.str_or("dataset", "mnist")),
+        WorkloadSpec::Neural(neural_spec_from_args(dataset, args)?),
+    )
+    .rounds(rounds)
+    .eval_every((rounds / 20).max(1))
+    .repeats(repeats)
+    .clients_per_round(cpr);
+    for algo in algos {
+        spec = spec.series(algo);
     }
+    // The summary rows report accuracy *and* bits, so the bit-efficiency
+    // ordering is visible directly in the console output.
+    Session::console().run(&apply_execution_flags(spec, args)?)?;
     println!("\nShape check: at equal accuracy the sign rows should show ~s+1x fewer Mbit.");
     Ok(())
 }

@@ -11,61 +11,62 @@
 //! post-processing under DP).
 
 use super::common::*;
+use crate::api::{CsvSink, Dataset, ExperimentSpec, Session, WorkloadSpec};
 use crate::cli::Args;
 use crate::dp::calibrate_noise;
-use crate::fl::server::ServerConfig;
+use crate::error::anyhow;
 use crate::fl::AlgorithmConfig;
 
 pub fn run(args: &Args) -> crate::error::Result<()> {
     banner("Figure 17 — DP-SignFedAvg vs DP-FedAvg on EMNIST");
-    let workload = Workload::parse(args.str_or("dataset", "emnist")).unwrap();
-    let rounds = args.usize_or("rounds", 100);
-    let repeats = args.usize_or("repeats", 2);
-    let clip = args.f32_or("clip", 0.01);
-    let e = args.usize_or("local-steps", 5);
-    let epsilons: Vec<f64> = args
-        .flag("epsilons")
-        .map(|s| s.split(',').map(|v| v.parse().unwrap()).collect())
-        .unwrap_or_else(|| vec![1.0, 2.0, 4.0, 6.0, 8.0, 10.0]);
-    let cpr = clients_per_round(workload, args);
+    let dataset = Dataset::parse(args.str_or("dataset", "emnist"))
+        .ok_or_else(|| anyhow!("--dataset mnist|emnist|cifar"))?;
+    let rounds = args.usize_or("rounds", 100)?;
+    let repeats = args.usize_or("repeats", 2)?;
+    let clip = args.f32_or("clip", 0.01)?;
+    let e = args.usize_or("local-steps", 5)?;
+    let epsilons: Vec<f64> = args.list_or("epsilons", &[1.0, 2.0, 4.0, 6.0, 8.0, 10.0])?;
+    let cpr = clients_per_round(dataset, args)?;
+    let nspec = neural_spec_from_args(dataset, args)?;
 
     // Accounting uses the *actual* experiment's sampling rate and rounds.
-    let probe = build_xla_backend(workload, args)?;
-    let n_clients = probe.fed.num_clients();
-    drop(probe);
+    // The spec knows the population statically (partitioning always yields
+    // exactly `clients` shards) — no need to build a probe backend.
+    let n_clients = nspec.clients;
     let q = cpr.map(|m| m as f64 / n_clients as f64).unwrap_or(1.0);
     let delta = 1.0 / n_clients as f64;
     println!("accounting: q={q:.4}, T={rounds}, delta={delta:.2e}, clip={clip}");
 
-    println!("\n{:>6} {:>10} {:>22} {:>22}", "eps", "sigma", "DP-SignFedAvg acc", "DP-FedAvg acc");
+    println!(
+        "\n{:>6} {:>10} {:>22} {:>22}",
+        "eps", "sigma", "DP-SignFedAvg acc", "DP-FedAvg acc"
+    );
     for &eps in &epsilons {
         let noise_mult = calibrate_noise(q, rounds as u64, delta, eps) as f32;
         // Table 8 server stepsizes: 0.03–0.05 for sign, 1–5 for dense.
-        let sign_lr = args.f32_or("sign-server-lr", if eps < 1.5 { 0.03 } else { 0.05 });
-        let dense_lr = args.f32_or("dense-server-lr", if eps < 1.5 { 1.0 } else { 5.0 });
-        let algos = vec![
+        let sign_lr = args.f32_or("sign-server-lr", if eps < 1.5 { 0.03 } else { 0.05 })?;
+        let dense_lr = args.f32_or("dense-server-lr", if eps < 1.5 { 1.0 } else { 5.0 })?;
+        let mut spec =
+            ExperimentSpec::new("fig17", WorkloadSpec::Neural(nspec.clone()))
+                .rounds(rounds)
+                .eval_every((rounds / 10).max(1))
+                .repeats(repeats)
+                .clients_per_round(cpr);
+        for algo in [
             AlgorithmConfig::dp_signfedavg(clip, noise_mult, e).with_lrs(0.05, sign_lr),
             AlgorithmConfig::dp_fedavg(clip, noise_mult, e).with_lrs(0.05, dense_lr),
-        ];
-        let mut accs = Vec::new();
-        for algo in &algos {
-            let cfg = ServerConfig {
-                rounds,
-                clients_per_round: cpr,
-                eval_every: (rounds / 10).max(1),
-                parallelism: args.parallelism_or(1),
-                reduce_lanes: args.reduce_lanes_or(ServerConfig::default().reduce_lanes),
-                ..Default::default()
-            };
-            let (agg, runs) = run_repeats(
-                || build_xla_backend(workload, args).expect("backend"),
-                algo,
-                &cfg,
-                repeats,
-            );
-            save_series("fig17", &format!("{}_eps{eps}", algo.name), &agg, &runs);
-            accs.push(*agg.accuracy_mean.last().unwrap());
+        ] {
+            let label = format!("{}_eps{eps}", algo.name);
+            spec = spec.series_labeled(label.clone(), label, algo);
         }
+        // CSV only: the ε table below is this driver's console output.
+        let result =
+            Session::new().with(CsvSink::new()).run(&apply_execution_flags(spec, args)?)?;
+        let accs: Vec<f64> = result
+            .series
+            .iter()
+            .map(|s| *s.aggregated.accuracy_mean.last().unwrap())
+            .collect();
         println!(
             "{eps:>6.1} {noise_mult:>10.3} {:>21.2}% {:>21.2}%",
             100.0 * accs[0],

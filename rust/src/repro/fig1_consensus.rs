@@ -11,73 +11,70 @@
 //!
 //! Also runs the §1 two-client counterexample, reporting the stall of
 //! SignSGD and the σ-threshold of ∞-SignSGD (Theorem 2 / Remark 2).
+//!
+//! This driver is a thin spec factory: [`spec_for_dim`] is the preset, the
+//! `api::Session` does the running.
 
 use super::common::*;
+use crate::api::{ExperimentSpec, Session, WorkloadSpec};
 use crate::cli::Args;
-use crate::fl::backend::AnalyticBackend;
-use crate::fl::server::ServerConfig;
 use crate::fl::AlgorithmConfig;
 use crate::problems::consensus::Consensus;
 use crate::problems::AnalyticProblem;
 use crate::rng::ZParam;
 
+/// The Fig. 1 preset for one dimension `d`. `examples/quickstart.json` is
+/// exactly `spec_for_dim(8, 50, 40, 2, 0.01, 3.0)` — pinned by an
+/// integration test and byte-diffed against this driver by
+/// `make spec-smoke`.
+pub fn spec_for_dim(
+    n: usize,
+    d: usize,
+    rounds: usize,
+    repeats: usize,
+    lr: f32,
+    sigma: f32,
+) -> ExperimentSpec {
+    ExperimentSpec::new(format!("fig1_d{d}"), WorkloadSpec::consensus(n, d, 99))
+        .rounds(rounds)
+        .eval_every((rounds / 100).max(1))
+        .repeats(repeats)
+        .subtract_optimal(true)
+        .series(AlgorithmConfig::gd().with_lrs(lr, 1.0))
+        .series(AlgorithmConfig::signsgd().with_lrs(lr, 1.0))
+        .series(AlgorithmConfig::sto_signsgd().with_lrs(lr, 1.0))
+        .series(AlgorithmConfig::z_signsgd(ZParam::Finite(1), sigma).with_lrs(lr, 1.0))
+        .series(AlgorithmConfig::z_signsgd(ZParam::Inf, sigma).with_lrs(lr, 1.0))
+}
+
 pub fn run(args: &Args) -> crate::error::Result<()> {
     banner("Figure 1 — consensus problem, varying dimension");
-    let rounds = args.usize_or("rounds", 600);
-    let repeats = args.usize_or("repeats", 5);
-    let lr = args.f32_or("lr", 0.01);
-    let sigma = args.f32_or("sigma", 3.0);
-    let n = args.usize_or("clients", 10);
+    let rounds = args.usize_or("rounds", 600)?;
+    let repeats = args.usize_or("repeats", 5)?;
+    let lr = args.f32_or("lr", 0.01)?;
+    let sigma = args.f32_or("sigma", 3.0)?;
+    let n = args.usize_or("clients", 10)?;
     let dims: Vec<usize> = if args.has("paper-scale") {
         vec![10, 100, 1000, 10000]
     } else {
-        args.flag("dims")
-            .map(|s| s.split(',').map(|d| d.parse().unwrap()).collect())
-            .unwrap_or_else(|| vec![10, 100, 1000, 10000])
+        args.list_or("dims", &[10, 100, 1000, 10000])?
     };
 
     for &d in &dims {
         println!("\n-- dimension d = {d} --");
-        let algos = vec![
-            AlgorithmConfig::gd().with_lrs(lr, 1.0),
-            AlgorithmConfig::signsgd().with_lrs(lr, 1.0),
-            AlgorithmConfig::sto_signsgd().with_lrs(lr, 1.0),
-            AlgorithmConfig::z_signsgd(ZParam::Finite(1), sigma).with_lrs(lr, 1.0),
-            AlgorithmConfig::z_signsgd(ZParam::Inf, sigma).with_lrs(lr, 1.0),
-        ];
         let f_star = Consensus::gaussian(n, d, 99).optimal_value().unwrap();
         println!("  f* = {f_star:.6}");
-        for algo in &algos {
-            let cfg = ServerConfig {
-                rounds,
-                eval_every: (rounds / 100).max(1),
-                parallelism: args.parallelism_or(1),
-                reduce_lanes: args.reduce_lanes_or(ServerConfig::default().reduce_lanes),
-                ..Default::default()
-            };
-            let (mut agg, runs) = run_repeats(
-                || AnalyticBackend::new(Consensus::gaussian(n, d, 99)),
-                algo,
-                &cfg,
-                repeats,
-            );
-            // Report the optimality gap, matching the paper's y-axis.
-            for v in agg.objective_mean.iter_mut() {
-                *v -= f_star;
-            }
-            save_series(&format!("fig1_d{d}"), &algo.name, &agg, &runs);
-            print_summary_row(&algo.name, &agg);
-        }
+        let spec = apply_execution_flags(spec_for_dim(n, d, rounds, repeats, lr, sigma), args)?;
+        Session::console().run(&spec)?;
     }
 
-    counterexample_report(args);
-    Ok(())
+    counterexample_report(args)
 }
 
 /// The §1 counterexample + Theorem 2's σ-threshold, printed as a table.
-fn counterexample_report(args: &Args) {
+fn counterexample_report(args: &Args) -> crate::error::Result<()> {
     banner("§1 counterexample: min (x−A)² + (x+A)², A = 4, x0 = 2");
-    let rounds = args.usize_or("rounds", 600);
+    let rounds = args.usize_or("rounds", 600)?;
     let a = 4.0f32;
     let cases: Vec<(String, AlgorithmConfig)> = vec![
         ("SignSGD (stalls)".into(), AlgorithmConfig::signsgd().with_lrs(0.01, 1.0)),
@@ -95,18 +92,22 @@ fn counterexample_report(args: &Args) {
         ),
     ];
     for (label, algo) in cases {
-        let mut b = AnalyticBackend::new(Consensus::counterexample(a));
-        b.x0 = vec![a / 2.0];
-        let cfg = ServerConfig {
-            rounds,
-            eval_every: (rounds / 50).max(1),
-            parallelism: args.parallelism_or(1),
-            reduce_lanes: args.reduce_lanes_or(ServerConfig::default().reduce_lanes),
-            ..Default::default()
-        };
-        let run = crate::fl::server::run_experiment(&mut b, &algo, &cfg);
-        let first = run.records.first().unwrap().objective;
-        let last = run.records.last().unwrap().objective;
+        let spec = apply_execution_flags(
+            ExperimentSpec::new(
+                "fig1_counterexample",
+                WorkloadSpec::Counterexample { a, x0: a / 2.0 },
+            )
+            .rounds(rounds)
+            .eval_every((rounds / 50).max(1))
+            .series(algo),
+            args,
+        )?;
+        // No sinks: the report below is the output.
+        let result = Session::new().run(&spec)?;
+        let records = &result.series[0].runs[0].records;
+        let first = records.first().unwrap().objective;
+        let last = records.last().unwrap().objective;
         println!("  {label:<46} f: {first:>10.4} -> {last:>10.4}");
     }
+    Ok(())
 }

@@ -5,53 +5,46 @@
 //! converges fast to a mediocre floor; large σ converges more slowly but
 //! reaches a lower objective; very large σ is dominated by the injected
 //! variance. Both z = 1 and z = ∞ show the same trade-off.
+//!
+//! The σ grid runs as an `api::SweepSpec` (one spec per z, so each z keeps
+//! its own `fig2_z{z}` output directory, as always).
 
 use super::common::*;
+use crate::api::{ExperimentSpec, Session, SweepSpec, WorkloadSpec};
 use crate::cli::Args;
-use crate::fl::backend::AnalyticBackend;
-use crate::fl::server::ServerConfig;
-use crate::fl::AlgorithmConfig;
 use crate::problems::consensus::Consensus;
 use crate::problems::AnalyticProblem;
 use crate::rng::ZParam;
 
 pub fn run(args: &Args) -> crate::error::Result<()> {
     banner("Figure 2 — bias/variance trade-off over noise scales");
-    let rounds = args.usize_or("rounds", 800);
-    let repeats = args.usize_or("repeats", 5);
-    let d = args.usize_or("dim", 1000);
-    let n = args.usize_or("clients", 10);
-    let lr = args.f32_or("lr", 0.01);
-    let sigmas: Vec<f32> = args
-        .flag("sigmas")
-        .map(|s| s.split(',').map(|v| v.parse().unwrap()).collect())
-        .unwrap_or_else(|| vec![0.0, 0.3, 1.0, 3.0, 10.0, 30.0]);
+    let rounds = args.usize_or("rounds", 800)?;
+    let repeats = args.usize_or("repeats", 5)?;
+    let d = args.usize_or("dim", 1000)?;
+    let n = args.usize_or("clients", 10)?;
+    let lr = args.f32_or("lr", 0.01)?;
+    let sigmas: Vec<f32> = args.list_or("sigmas", &[0.0, 0.3, 1.0, 3.0, 10.0, 30.0])?;
 
     let f_star = Consensus::gaussian(n, d, 99).optimal_value().unwrap();
     println!("d = {d}, f* = {f_star:.6}");
     for z in [ZParam::Finite(1), ZParam::Inf] {
         println!("\n-- z = {z} --");
-        for &sigma in &sigmas {
-            let algo = AlgorithmConfig::z_signsgd(z, sigma).with_lrs(lr, 1.0);
-            let cfg = ServerConfig {
-                rounds,
-                eval_every: (rounds / 100).max(1),
-                parallelism: args.parallelism_or(1),
-                reduce_lanes: args.reduce_lanes_or(ServerConfig::default().reduce_lanes),
-                ..Default::default()
-            };
-            let (mut agg, runs) = run_repeats(
-                || AnalyticBackend::new(Consensus::gaussian(n, d, 99)),
-                &algo,
-                &cfg,
-                repeats,
-            );
-            for v in agg.objective_mean.iter_mut() {
-                *v -= f_star;
-            }
-            save_series(&format!("fig2_z{z}"), &format!("sigma{sigma}"), &agg, &runs);
-            print_summary_row(&format!("sigma = {sigma}"), &agg);
-        }
+        let spec = apply_execution_flags(
+            ExperimentSpec::new(format!("fig2_z{z}"), WorkloadSpec::consensus(n, d, 99))
+                .rounds(rounds)
+                .eval_every((rounds / 100).max(1))
+                .repeats(repeats)
+                .subtract_optimal(true)
+                .sweep(SweepSpec {
+                    zs: vec![z],
+                    local_steps: vec![1],
+                    sigmas: sigmas.clone(),
+                    client_lr: lr,
+                    server_lr: 1.0,
+                }),
+            args,
+        )?;
+        Session::console().run(&spec)?;
     }
     println!("\nShape check: the final gap should first fall then rise with sigma");
     println!("(small sigma = bias floor, large sigma = variance floor — Theorem 1).");

@@ -20,8 +20,8 @@
 //! above EF-SignSGDwM and Sto-SignSGDwM; in bits, the sign family dominates.
 
 use super::common::*;
+use crate::api::{Dataset, ExperimentSpec, Session, SweepSpec, WorkloadSpec};
 use crate::cli::Args;
-use crate::fl::server::ServerConfig;
 use crate::fl::AlgorithmConfig;
 use crate::rng::ZParam;
 
@@ -30,37 +30,26 @@ pub fn run(args: &Args) -> crate::error::Result<()> {
         return sweep_sigma(args);
     }
     banner("Figure 3 — non-iid MNIST (one digit per client)");
-    let rounds = args.usize_or("rounds", 120);
-    let repeats = args.usize_or("repeats", 2);
-    let sigma = args.f32_or("sigma", 0.05);
+    let rounds = args.usize_or("rounds", 120)?;
+    let repeats = args.usize_or("repeats", 2)?;
+    let sigma = args.f32_or("sigma", 0.05)?;
 
     // Table 3 hyperparameters.
-    let algos = vec![
-        AlgorithmConfig::sgdwm(0.9).with_lrs(0.05, 1.0),
-        AlgorithmConfig::ef_signsgd().with_momentum(0.9).with_lrs(0.05, 1.0),
-        AlgorithmConfig::sto_signsgd().with_momentum(0.9).with_lrs(0.01, 1.0),
-        AlgorithmConfig::signsgd().with_lrs(0.01, 1.0),
-        AlgorithmConfig::z_signsgd(ZParam::Finite(1), sigma).with_lrs(0.01, 1.0),
-        AlgorithmConfig::z_signsgd(ZParam::Inf, sigma).with_lrs(0.01, 1.0),
-    ];
-
-    for algo in &algos {
-        let cfg = ServerConfig {
-            rounds,
-            eval_every: (rounds / 20).max(1),
-            parallelism: args.parallelism_or(1),
-            reduce_lanes: args.reduce_lanes_or(ServerConfig::default().reduce_lanes),
-            ..Default::default()
-        };
-        let (agg, runs) = run_repeats(
-            || build_xla_backend(Workload::NoniidMnist, args).expect("backend"),
-            algo,
-            &cfg,
-            repeats,
-        );
-        save_series("fig3", &algo.name, &agg, &runs);
-        print_summary_row(&algo.name, &agg);
-    }
+    let workload = WorkloadSpec::Neural(neural_spec_from_args(Dataset::NoniidMnist, args)?);
+    let spec = apply_execution_flags(
+        ExperimentSpec::new("fig3", workload)
+            .rounds(rounds)
+            .eval_every((rounds / 20).max(1))
+            .repeats(repeats)
+            .series(AlgorithmConfig::sgdwm(0.9).with_lrs(0.05, 1.0))
+            .series(AlgorithmConfig::ef_signsgd().with_momentum(0.9).with_lrs(0.05, 1.0))
+            .series(AlgorithmConfig::sto_signsgd().with_momentum(0.9).with_lrs(0.01, 1.0))
+            .series(AlgorithmConfig::signsgd().with_lrs(0.01, 1.0))
+            .series(AlgorithmConfig::z_signsgd(ZParam::Finite(1), sigma).with_lrs(0.01, 1.0))
+            .series(AlgorithmConfig::z_signsgd(ZParam::Inf, sigma).with_lrs(0.01, 1.0)),
+        args,
+    )?;
+    Session::console().run(&spec)?;
     println!("\nFig 3c (accuracy vs bits) comes from the bits_up column of the CSVs.");
     Ok(())
 }
@@ -68,32 +57,28 @@ pub fn run(args: &Args) -> crate::error::Result<()> {
 /// Fig. 7: 1-/∞-SignSGD under different noise scales on the same workload.
 fn sweep_sigma(args: &Args) -> crate::error::Result<()> {
     banner("Figure 7 — noise-scale sweep on non-iid MNIST");
-    let rounds = args.usize_or("rounds", 80);
-    let repeats = args.usize_or("repeats", 2);
-    let sigmas: Vec<f32> = args
-        .flag("sigmas")
-        .map(|s| s.split(',').map(|v| v.parse().unwrap()).collect())
-        .unwrap_or_else(|| vec![0.0, 0.01, 0.05, 0.1, 0.3, 0.5]);
+    let rounds = args.usize_or("rounds", 80)?;
+    let repeats = args.usize_or("repeats", 2)?;
+    let sigmas: Vec<f32> = args.list_or("sigmas", &[0.0, 0.01, 0.05, 0.1, 0.3, 0.5])?;
     for z in [ZParam::Finite(1), ZParam::Inf] {
         println!("\n-- z = {z} --");
-        for &sigma in &sigmas {
-            let algo = AlgorithmConfig::z_signsgd(z, sigma).with_lrs(0.01, 1.0);
-            let cfg = ServerConfig {
-                rounds,
-                eval_every: (rounds / 10).max(1),
-                parallelism: args.parallelism_or(1),
-                reduce_lanes: args.reduce_lanes_or(ServerConfig::default().reduce_lanes),
-                ..Default::default()
-            };
-            let (agg, runs) = run_repeats(
-                || build_xla_backend(Workload::NoniidMnist, args).expect("backend"),
-                &algo,
-                &cfg,
-                repeats,
-            );
-            save_series(&format!("fig7_z{z}"), &format!("sigma{sigma}"), &agg, &runs);
-            print_summary_row(&format!("sigma = {sigma}"), &agg);
-        }
+        let workload =
+            WorkloadSpec::Neural(neural_spec_from_args(Dataset::NoniidMnist, args)?);
+        let spec = apply_execution_flags(
+            ExperimentSpec::new(format!("fig7_z{z}"), workload)
+                .rounds(rounds)
+                .eval_every((rounds / 10).max(1))
+                .repeats(repeats)
+                .sweep(SweepSpec {
+                    zs: vec![z],
+                    local_steps: vec![1],
+                    sigmas: sigmas.clone(),
+                    client_lr: 0.01,
+                    server_lr: 1.0,
+                }),
+            args,
+        )?;
+        Session::console().run(&spec)?;
     }
     Ok(())
 }

@@ -12,122 +12,95 @@
 //! bits; 1- and ∞-SignFedAvg are nearly indistinguishable.
 
 use super::common::*;
+use crate::api::{Dataset, ExperimentSpec, Session, WorkloadSpec};
 use crate::cli::Args;
-use crate::fl::server::ServerConfig;
 use crate::fl::AlgorithmConfig;
 use crate::rng::ZParam;
 
 pub fn run(args: &Args) -> crate::error::Result<()> {
-    let workload = Workload::parse(args.str_or("dataset", "cifar"))
+    let dataset = Dataset::parse(args.str_or("dataset", "cifar"))
         .ok_or_else(|| crate::anyhow!("--dataset mnist|emnist|cifar"))?;
     if args.has("sweep") {
-        return sweep_sigma_e(args, workload);
+        return sweep_sigma_e(args, dataset);
     }
-    banner(&format!("Figure 5/8 — FedAvg vs z-SignFedAvg on {workload:?}"));
-    let rounds = args.usize_or("rounds", 60);
-    let repeats = args.usize_or("repeats", 1);
-    let local_steps: Vec<usize> = args
-        .flag("local-steps")
-        .map(|s| s.split(',').map(|v| v.parse().unwrap()).collect())
-        .unwrap_or_else(|| vec![1, 5]);
+    banner(&format!("Figure 5/8 — FedAvg vs z-SignFedAvg on {dataset:?}"));
+    let rounds = args.usize_or("rounds", 60)?;
+    let repeats = args.usize_or("repeats", 1)?;
+    let local_steps: Vec<usize> = args.list_or("local-steps", &[1, 5])?;
     // Table 4/5 hyperparameters.
-    let (client_lr, server_lr, sigma) = match workload {
-        Workload::Emnist => (
-            args.f32_or("client-lr", 0.05),
-            args.f32_or("server-lr", 0.03),
-            args.f32_or("sigma", 0.01),
+    let (client_lr, server_lr, sigma) = match dataset {
+        Dataset::Emnist => (
+            args.f32_or("client-lr", 0.05)?,
+            args.f32_or("server-lr", 0.03)?,
+            args.f32_or("sigma", 0.01)?,
         ),
         _ => (
-            args.f32_or("client-lr", 0.1),
-            args.f32_or("server-lr", 0.0032),
-            args.f32_or("sigma", 0.0005),
+            args.f32_or("client-lr", 0.1)?,
+            args.f32_or("server-lr", 0.0032)?,
+            args.f32_or("sigma", 0.0005)?,
         ),
     };
-    let cpr = clients_per_round(workload, args);
+    let cpr = clients_per_round(dataset, args)?;
 
     for &e in &local_steps {
         println!("\n-- E = {e} (clients/round: {cpr:?}) --");
-        let algos = vec![
+        let mut spec = ExperimentSpec::new(
+            format!("fig5_{}_e{e}", args.str_or("dataset", "cifar")),
+            WorkloadSpec::Neural(neural_spec_from_args(dataset, args)?),
+        )
+        .rounds(rounds)
+        .eval_every((rounds / 20).max(1))
+        .repeats(repeats)
+        .clients_per_round(cpr);
+        for algo in [
             AlgorithmConfig::fedavg(e).with_lrs(client_lr, 1.0),
             AlgorithmConfig::z_signfedavg(ZParam::Finite(1), sigma, e)
                 .with_lrs(client_lr, server_lr),
             AlgorithmConfig::z_signfedavg(ZParam::Inf, sigma, e)
                 .with_lrs(client_lr, server_lr),
             AlgorithmConfig::sign_fedavg(e).with_lrs(client_lr, server_lr),
-        ];
-        for algo in &algos {
-            let cfg = ServerConfig {
-                rounds,
-                clients_per_round: cpr,
-                eval_every: (rounds / 20).max(1),
-                parallelism: args.parallelism_or(1),
-                reduce_lanes: args.reduce_lanes_or(ServerConfig::default().reduce_lanes),
-                ..Default::default()
-            };
-            let (agg, runs) = run_repeats(
-                || build_xla_backend(workload, args).expect("backend"),
-                algo,
-                &cfg,
-                repeats,
-            );
-            save_series(
-                &format!("fig5_{}_e{e}", args.str_or("dataset", "cifar")),
-                &algo.name,
-                &agg,
-                &runs,
-            );
-            print_summary_row(&format!("{} (E={e})", algo.name), &agg);
+        ] {
+            let display = format!("{} (E={e})", algo.name);
+            spec = spec.series_labeled(algo.name.clone(), display, algo);
         }
+        Session::console().run(&apply_execution_flags(spec, args)?)?;
     }
     Ok(())
 }
 
-/// Figures 9–13: σ × E grid for z ∈ {1, ∞}.
-fn sweep_sigma_e(args: &Args, workload: Workload) -> crate::error::Result<()> {
-    banner(&format!("Figures 9-13 — sigma x E sweep on {workload:?}"));
-    let rounds = args.usize_or("rounds", 60);
-    let repeats = args.usize_or("repeats", 1);
-    let sigmas: Vec<f32> = args
-        .flag("sigmas")
-        .map(|s| s.split(',').map(|v| v.parse().unwrap()).collect())
-        .unwrap_or_else(|| vec![0.0, 0.0005, 0.005, 0.05]);
-    let es: Vec<usize> = args
-        .flag("local-steps")
-        .map(|s| s.split(',').map(|v| v.parse().unwrap()).collect())
-        .unwrap_or_else(|| vec![1, 5]);
-    let (client_lr, server_lr) = match workload {
-        Workload::Emnist => (0.05, 0.03),
+/// Figures 9–13: σ × E grid for z ∈ {1, ∞}. Expanded explicitly so the
+/// historical `e{E}_sigma{σ}` file stems are preserved even for
+/// single-element axes.
+fn sweep_sigma_e(args: &Args, dataset: Dataset) -> crate::error::Result<()> {
+    banner(&format!("Figures 9-13 — sigma x E sweep on {dataset:?}"));
+    let rounds = args.usize_or("rounds", 60)?;
+    let repeats = args.usize_or("repeats", 1)?;
+    let sigmas: Vec<f32> = args.list_or("sigmas", &[0.0, 0.0005, 0.005, 0.05])?;
+    let es: Vec<usize> = args.list_or("local-steps", &[1, 5])?;
+    let (client_lr, server_lr) = match dataset {
+        Dataset::Emnist => (0.05, 0.03),
         _ => (0.1, 0.0032),
     };
-    let cpr = clients_per_round(workload, args);
+    let cpr = clients_per_round(dataset, args)?;
     for z in [ZParam::Finite(1), ZParam::Inf] {
+        let mut spec = ExperimentSpec::new(
+            format!("fig9_13_{}_z{z}", args.str_or("dataset", "cifar")),
+            WorkloadSpec::Neural(neural_spec_from_args(dataset, args)?),
+        )
+        .rounds(rounds)
+        .eval_every((rounds / 10).max(1))
+        .repeats(repeats)
+        .clients_per_round(cpr);
         for &e in &es {
             for &sigma in &sigmas {
-                let algo =
-                    AlgorithmConfig::z_signfedavg(z, sigma, e).with_lrs(client_lr, server_lr);
-                let cfg = ServerConfig {
-                    rounds,
-                    clients_per_round: cpr,
-                    eval_every: (rounds / 10).max(1),
-                    parallelism: args.parallelism_or(1),
-                    reduce_lanes: args.reduce_lanes_or(ServerConfig::default().reduce_lanes),
-                    ..Default::default()
-                };
-                let (agg, runs) = run_repeats(
-                    || build_xla_backend(workload, args).expect("backend"),
-                    &algo,
-                    &cfg,
-                    repeats,
+                spec = spec.series_labeled(
+                    format!("e{e}_sigma{sigma}"),
+                    format!("z={z} E={e} sigma={sigma}"),
+                    AlgorithmConfig::z_signfedavg(z, sigma, e).with_lrs(client_lr, server_lr),
                 );
-                save_series(
-                    &format!("fig9_13_{}_z{z}", args.str_or("dataset", "cifar")),
-                    &format!("e{e}_sigma{sigma}"),
-                    &agg,
-                    &runs,
-                );
-                print_summary_row(&format!("z={z} E={e} sigma={sigma}"), &agg);
             }
         }
+        Session::console().run(&apply_execution_flags(spec, args)?)?;
     }
     Ok(())
 }

@@ -7,28 +7,32 @@
 //! Expected shape: the plateau run converges more slowly mid-training (it
 //! must discover the right σ) but reaches the same final objective as the
 //! tuned fixed σ.
+//!
+//! Two specs share one output directory: the fixed-σ series and the
+//! plateau series differ in `ExperimentSpec::plateau`, which is a
+//! server-level knob, not a per-series one.
 
 use super::common::*;
+use crate::api::{Dataset, ExperimentSpec, Session, WorkloadSpec};
 use crate::cli::Args;
 use crate::fl::plateau::PlateauConfig;
-use crate::fl::server::ServerConfig;
 use crate::fl::AlgorithmConfig;
 use crate::rng::ZParam;
 
 pub fn run(args: &Args) -> crate::error::Result<()> {
-    let workload = Workload::parse(args.str_or("dataset", "mnist"))
+    let dataset = Dataset::parse(args.str_or("dataset", "mnist"))
         .ok_or_else(|| crate::anyhow!("--dataset mnist|emnist|cifar"))?;
-    banner(&format!("Figure 6 — Plateau criterion on {workload:?}"));
-    let rounds = args.usize_or("rounds", 120);
-    let repeats = args.usize_or("repeats", 2);
+    banner(&format!("Figure 6 — Plateau criterion on {dataset:?}"));
+    let rounds = args.usize_or("rounds", 120)?;
+    let repeats = args.usize_or("repeats", 2)?;
 
     // Per-dataset tuned σ (from Fig. 3/5) and Table 6 plateau presets.
-    let (fixed_sigma, plateau, client_lr, server_lr, e) = match workload {
-        Workload::NoniidMnist => (0.05f32, PlateauConfig::mnist(), 0.01f32, 1.0f32, 1usize),
-        Workload::Emnist => (0.01, PlateauConfig::emnist(), 0.05, 0.03, 5),
-        Workload::Cifar => (0.0005, PlateauConfig::cifar(), 0.1, 0.0032, 5),
+    let (fixed_sigma, plateau, client_lr, server_lr, e) = match dataset {
+        Dataset::NoniidMnist => (0.05f32, PlateauConfig::mnist(), 0.01f32, 1.0f32, 1usize),
+        Dataset::Emnist => (0.01, PlateauConfig::emnist(), 0.05, 0.03, 5),
+        Dataset::Cifar => (0.0005, PlateauConfig::cifar(), 0.1, 0.0032, 5),
     };
-    let cpr = clients_per_round(workload, args);
+    let cpr = clients_per_round(dataset, args)?;
 
     let fixed = AlgorithmConfig::z_signfedavg(ZParam::Finite(1), fixed_sigma, e)
         .with_lrs(client_lr, server_lr);
@@ -39,35 +43,25 @@ pub fn run(args: &Args) -> crate::error::Result<()> {
         a
     };
 
-    let base_cfg = ServerConfig {
-        rounds,
-        clients_per_round: cpr,
-        eval_every: (rounds / 20).max(1),
-        parallelism: args.parallelism_or(1),
-        reduce_lanes: args.reduce_lanes_or(ServerConfig::default().reduce_lanes),
-        ..Default::default()
-    };
-    for (algo, use_plateau) in [(&fixed, false), (&adaptive, true)] {
-        let cfg = ServerConfig {
-            plateau: use_plateau.then_some(plateau),
-            ..base_cfg.clone()
-        };
-        let (agg, runs) = run_repeats(
-            || build_xla_backend(workload, args).expect("backend"),
-            algo,
-            &cfg,
-            repeats,
-        );
-        save_series(
-            &format!("fig6_{}", args.str_or("dataset", "mnist")),
-            &algo.name,
-            &agg,
-            &runs,
-        );
-        print_summary_row(&algo.name, &agg);
+    let name = format!("fig6_{}", args.str_or("dataset", "mnist"));
+    for (algo, use_plateau) in [(fixed, false), (adaptive, true)] {
+        let mut spec = ExperimentSpec::new(
+            name.clone(),
+            WorkloadSpec::Neural(neural_spec_from_args(dataset, args)?),
+        )
+        .rounds(rounds)
+        .eval_every((rounds / 20).max(1))
+        .repeats(repeats)
+        .clients_per_round(cpr)
+        .series(algo);
+        if use_plateau {
+            spec = spec.plateau(plateau);
+        }
+        let result = Session::console().run(&apply_execution_flags(spec, args)?)?;
         if use_plateau {
             // Fig. 15: sigma trajectory of the first run.
-            let sigmas: Vec<f32> = runs[0].records.iter().map(|r| r.sigma).collect();
+            let sigmas: Vec<f32> =
+                result.series[0].runs[0].records.iter().map(|r| r.sigma).collect();
             println!(
                 "  sigma trajectory: start {:.4} -> end {:.4} ({} distinct values)",
                 sigmas.first().unwrap(),

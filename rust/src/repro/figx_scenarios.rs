@@ -20,10 +20,9 @@
 //! `--sim_*` flags (see `sim::ScenarioConfig::from_config`).
 
 use super::common::*;
+use crate::api::{CsvSink, ExperimentSpec, Session, WorkloadSpec};
 use crate::cli::Args;
-use crate::error::anyhow;
-use crate::fl::backend::AnalyticBackend;
-use crate::fl::server::{Participation, ServerConfig};
+use crate::fl::server::Participation;
 use crate::fl::AlgorithmConfig;
 use crate::problems::consensus::Consensus;
 use crate::problems::AnalyticProblem;
@@ -34,24 +33,23 @@ pub fn run(args: &Args) -> crate::error::Result<()> {
     // Scenario knobs: defaults overridden by any --sim_* flag.
     let mut overrides = crate::config::Config::new();
     args.apply_overrides(&mut overrides);
-    let base = ScenarioConfig::from_config(&overrides).map_err(|e| anyhow!(e))?;
+    let base = ScenarioConfig::from_config(&overrides)?;
 
-    lifecycle_time_to_target(args, &base);
-    byzantine_robustness(args, &base);
-    Ok(())
+    lifecycle_time_to_target(args, &base)?;
+    byzantine_robustness(args, &base)
 }
 
 /// Part A: stragglers, deadlines and dropouts — who wins on the simulated
 /// clock.
-fn lifecycle_time_to_target(args: &Args, base: &ScenarioConfig) {
+fn lifecycle_time_to_target(args: &Args, base: &ScenarioConfig) -> crate::error::Result<()> {
     banner("Scenarios A — cross-device lifecycle: time-to-target");
-    let rounds = args.usize_or("rounds", 300);
-    let repeats = args.usize_or("repeats", 3);
-    let n = args.usize_or("clients", 60);
+    let rounds = args.usize_or("rounds", 300)?;
+    let repeats = args.usize_or("repeats", 3)?;
+    let n = args.usize_or("clients", 60)?;
     // Large d so the uplink leg is visible next to compute + latency.
-    let d = args.usize_or("dim", 20_000);
-    let e = args.usize_or("local-steps", 2);
-    let sigma = args.f32_or("sigma", 2.0);
+    let d = args.usize_or("dim", 20_000)?;
+    let e = args.usize_or("local-steps", 2)?;
+    let sigma = args.f32_or("sigma", 2.0)?;
     let sc = ScenarioConfig { byzantine_frac: 0.0, ..base.clone() };
     println!(
         "  n={n} d={d} E={e}  fleet={:?} target={} overselect={} deadline={}s dropout={}",
@@ -59,65 +57,59 @@ fn lifecycle_time_to_target(args: &Args, base: &ScenarioConfig) {
     );
 
     let f_star = Consensus::gaussian(n, d, 99).optimal_value().unwrap();
-    let algos = vec![
-        AlgorithmConfig::fedavg(e).with_lrs(0.05, 1.0),
-        AlgorithmConfig::z_signfedavg(ZParam::Finite(1), sigma, e).with_lrs(0.05, 1.0),
-    ];
-    for algo in &algos {
-        let server = ServerConfig {
-            rounds,
-            eval_every: (rounds / 100).max(1),
-            seed: args.u64_or("seed", 0),
-            parallelism: args.parallelism_or(1),
-            reduce_lanes: args.reduce_lanes_or(ServerConfig::default().reduce_lanes),
-            participation: Participation::Simulated(sc.clone()),
-            ..Default::default()
-        };
-        let (mut agg, runs) = run_repeats(
-            || AnalyticBackend::new(Consensus::gaussian(n, d, 99)),
-            algo,
-            &server,
-            repeats,
-        );
-        for v in agg.objective_mean.iter_mut() {
-            *v -= f_star;
-        }
-        save_series("scenarios_lifecycle", &algo.name, &agg, &runs);
+    let spec = apply_execution_flags(
+        ExperimentSpec::new("scenarios_lifecycle", WorkloadSpec::consensus(n, d, 99))
+            .rounds(rounds)
+            .eval_every((rounds / 100).max(1))
+            .seed(args.u64_or("seed", 0)?)
+            .repeats(repeats)
+            .participation(Participation::Simulated(sc))
+            .subtract_optimal(true)
+            .series(AlgorithmConfig::fedavg(e).with_lrs(0.05, 1.0))
+            .series(AlgorithmConfig::z_signfedavg(ZParam::Finite(1), sigma, e).with_lrs(0.05, 1.0)),
+        args,
+    )?;
+    // CSV only: this driver prints its own time-to-target table.
+    let result = Session::new().with(CsvSink::new()).run(&spec)?;
 
+    for sr in &result.series {
         // Time to close 90% of the initial optimality gap, per repeat.
-        let gap0 = runs[0].records.first().map(|r| r.objective - f_star).unwrap_or(0.0);
+        let gap0 = sr.runs[0].records.first().map(|r| r.objective - f_star).unwrap_or(0.0);
         let target = f_star + 0.1 * gap0;
         let hits: Vec<f64> =
-            runs.iter().filter_map(|r| time_to_objective(r, target)).collect();
+            sr.runs.iter().filter_map(|r| time_to_objective(r, target)).collect();
         let ttt = if hits.is_empty() {
             "      -".to_string()
         } else {
             format!("{:7.1}", hits.iter().sum::<f64>() / hits.len() as f64)
         };
-        let last = runs[0].records.last().unwrap();
+        let last = sr.runs[0].records.last().unwrap();
         println!(
             "  {:<24} final gap {:>11.4e}   sim {:>7.1} s   to-90% {ttt} s   \
              arrivals {}/{} per round",
-            algo.name,
-            agg.objective_mean.last().unwrap(),
+            sr.algorithm,
+            sr.aggregated.objective_mean.last().unwrap(),
             last.sim_time_s,
             last.arrived,
             last.selected,
         );
     }
     println!("  (same rounds; the sign uplink shortens every simulated round)");
+    Ok(())
 }
 
-/// Part B: robustness curves over the byzantine fraction.
-fn byzantine_robustness(args: &Args, base: &ScenarioConfig) {
+/// Part B: robustness curves over the byzantine fraction. One spec per
+/// (attack mode, fraction) — the scenario is a server-level knob — with
+/// both algorithms as series.
+fn byzantine_robustness(args: &Args, base: &ScenarioConfig) -> crate::error::Result<()> {
     banner("Scenarios B — byzantine robustness: final gap vs attacker fraction");
-    let rounds = args.usize_or("byz-rounds", 400);
-    let n = args.usize_or("clients", 60);
+    let rounds = args.usize_or("byz-rounds", 400)?;
+    let n = args.usize_or("clients", 60)?;
     let d = 200; // the attack story is about aggregation, not payload size
-    let e = args.usize_or("local-steps", 2);
-    let sigma = args.f32_or("sigma", 2.0);
+    let e = args.usize_or("local-steps", 2)?;
+    let sigma = args.f32_or("sigma", 2.0)?;
+    let repeats = args.usize_or("repeats", 3)?;
     let fracs = [0.0f32, 0.1, 0.2, 0.3];
-    let f_star = Consensus::gaussian(n, d, 99).optimal_value().unwrap();
     let algos = vec![
         AlgorithmConfig::fedavg(e).with_lrs(0.05, 1.0),
         AlgorithmConfig::z_signfedavg(ZParam::Finite(1), sigma, e).with_lrs(0.05, 1.0),
@@ -141,49 +133,45 @@ fn byzantine_robustness(args: &Args, base: &ScenarioConfig) {
             print!(" {cell:>12}");
         }
         println!("   degradation@10%");
-        for algo in &algos {
-            let mut gaps = Vec::new();
-            for frac in fracs {
-                let sc = ScenarioConfig {
-                    byzantine_frac: frac,
-                    byzantine_mode: mode,
-                    ..base.clone()
-                };
-                let server = ServerConfig {
-                    rounds,
-                    eval_every: (rounds / 50).max(1),
-                    seed: args.u64_or("seed", 0),
-                    parallelism: args.parallelism_or(1),
-                    reduce_lanes: args.reduce_lanes_or(ServerConfig::default().reduce_lanes),
-                    participation: Participation::Simulated(sc),
-                    ..Default::default()
-                };
-                let (mut agg, runs) = run_repeats(
-                    || AnalyticBackend::new(Consensus::gaussian(n, d, 99)),
-                    algo,
-                    &server,
-                    args.usize_or("repeats", 3),
-                );
-                for v in agg.objective_mean.iter_mut() {
-                    *v -= f_star;
-                }
-                let safe = label.replace(['(', ')'], "_");
-                save_series(
-                    &format!("scenarios_byz_{safe}"),
-                    &format!("{}_f{frac}", algo.name),
-                    &agg,
-                    &runs,
-                );
-                gaps.push(*agg.objective_mean.last().unwrap());
+
+        // gaps[algo][frac], filled one fraction (= one spec) at a time.
+        let mut gaps: Vec<Vec<f64>> = vec![Vec::new(); algos.len()];
+        for frac in fracs {
+            let sc = ScenarioConfig {
+                byzantine_frac: frac,
+                byzantine_mode: mode,
+                ..base.clone()
+            };
+            let safe = label.replace(['(', ')'], "_");
+            let mut spec = ExperimentSpec::new(
+                format!("scenarios_byz_{safe}"),
+                WorkloadSpec::consensus(n, d, 99),
+            )
+            .rounds(rounds)
+            .eval_every((rounds / 50).max(1))
+            .seed(args.u64_or("seed", 0)?)
+            .repeats(repeats)
+            .participation(Participation::Simulated(sc))
+            .subtract_optimal(true);
+            for algo in &algos {
+                let series_label = format!("{}_f{frac}", algo.name);
+                spec = spec.series_labeled(series_label.clone(), series_label, algo.clone());
             }
+            let result =
+                Session::new().with(CsvSink::new()).run(&apply_execution_flags(spec, args)?)?;
+            for (i, sr) in result.series.iter().enumerate() {
+                gaps[i].push(*sr.aggregated.objective_mean.last().unwrap());
+            }
+        }
+        for (i, algo) in algos.iter().enumerate() {
             print!("  {:<24}", algo.name);
-            for g in &gaps {
-                print!(" {:>12.4e}", g);
+            for g in &gaps[i] {
+                print!(" {g:>12.4e}");
             }
             // Degradation: gap at 10% attackers relative to the byz-free
             // floor. Sign voting bounds each attacker to ±1 per coordinate,
             // so this ratio stays small; the dense mean does not.
-            let deg = gaps[1] / gaps[0].max(1e-12);
+            let deg = gaps[i][1] / gaps[i][0].max(1e-12);
             println!("   {deg:>12.2e}");
         }
     }
@@ -192,4 +180,5 @@ fn byzantine_robustness(args: &Args, base: &ScenarioConfig) {
          report is clipped to one vote per coordinate, while the dense mean\n  \
          inherits its (arbitrarily scaled) magnitude."
     );
+    Ok(())
 }

@@ -1,4 +1,9 @@
 //! Reproduction drivers: one per paper figure/table (see DESIGN.md §5).
+//!
+//! Every driver is a thin `api::ExperimentSpec` factory executed through
+//! `api::Session` (DESIGN.md §4.5) — none of them touch `ServerConfig`,
+//! the repeat loop, or CSV plumbing directly (pinned by
+//! `tests/integration_api.rs`).
 
 pub mod common;
 pub mod fig1_consensus;

@@ -9,12 +9,10 @@
 //! fine: quadratics are benign; the check is that the *ordering* and
 //! rough magnitudes hold and that vanilla SignSGD's curve flattens).
 
-use super::common::banner;
+use super::common::{apply_execution_flags, banner};
+use crate::api::{ExperimentSpec, Session, WorkloadSpec};
 use crate::cli::Args;
-use crate::fl::backend::AnalyticBackend;
-use crate::fl::server::{run_experiment, ServerConfig};
 use crate::fl::AlgorithmConfig;
-use crate::problems::least_squares::LeastSquares;
 use crate::rng::ZParam;
 use crate::util::stats::ols_slope;
 
@@ -46,11 +44,8 @@ pub fn run(args: &Args) -> crate::error::Result<()> {
 
 fn empirical_rate_fit(args: &Args) -> crate::error::Result<()> {
     banner("Empirical rate fit: log E min_t ||grad f||^2 vs log tau");
-    let repeats = args.usize_or("repeats", 3);
-    let horizons: Vec<usize> = args
-        .flag("horizons")
-        .map(|s| s.split(',').map(|v| v.parse().unwrap()).collect())
-        .unwrap_or_else(|| vec![100, 200, 400, 800, 1600]);
+    let repeats = args.usize_or("repeats", 3)?;
+    let horizons: Vec<usize> = args.list_or("horizons", &[100, 200, 400, 800, 1600])?;
     let algos = vec![
         ("GD-SGD", AlgorithmConfig::gd().with_lrs(0.02, 1.0)),
         (
@@ -70,22 +65,35 @@ fn empirical_rate_fit(args: &Args) -> crate::error::Result<()> {
         let mut mins = Vec::new();
         for &t in &horizons {
             let mut acc = 0.0f64;
+            // This driver has always seeded repeat r with the bare r (not
+            // the seed_for_repeat offset), so it pins seed r explicitly in
+            // a single-repeat spec — reproduced numbers must not drift
+            // across versions.
             for r in 0..repeats {
-                let mut b = AnalyticBackend::new(LeastSquares::generate(
-                    8, 50, 20, 0.5, 0.5, 11,
-                ))
-                .stochastic();
-                let cfg = ServerConfig {
-                    rounds: t,
-                    eval_every: (t / 20).max(1),
-                    seed: r as u64,
-                    parallelism: args.parallelism_or(1),
-                    reduce_lanes: args.reduce_lanes_or(ServerConfig::default().reduce_lanes),
-                    ..Default::default()
-                };
-                let run = run_experiment(&mut b, &algo, &cfg);
-                // "Best gradient norm so far" — the standard nonconvex metric.
-                let best = run
+                let spec = apply_execution_flags(
+                    ExperimentSpec::new(
+                        format!("table2_tau{t}"),
+                        WorkloadSpec::LeastSquares {
+                            clients: 8,
+                            dim: 50,
+                            rows_per_client: 20,
+                            heterogeneity: 0.5,
+                            noise: 0.5,
+                            problem_seed: 11,
+                            stochastic: true,
+                        },
+                    )
+                    .rounds(t)
+                    .eval_every((t / 20).max(1))
+                    .seed(r as u64)
+                    .series(algo.clone()),
+                    args,
+                )?;
+                // No sinks: the fitted-slope table below is the output.
+                let result = Session::new().run(&spec)?;
+                // "Best gradient norm so far" — the standard nonconvex
+                // metric.
+                let best = result.series[0].runs[0]
                     .records
                     .iter()
                     .filter_map(|rec| rec.grad_norm_sq)

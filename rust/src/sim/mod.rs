@@ -35,6 +35,7 @@ pub use faults::ByzantineMode;
 pub use policy::{nominal_uplink_bits, ScenarioPolicy};
 
 use crate::config::Config;
+use crate::error::{anyhow, Result};
 use crate::fl::metrics::RunResult;
 
 /// Everything a scenario run adds on top of `ServerConfig` (which carries
@@ -86,22 +87,22 @@ impl ScenarioConfig {
     /// sim_byzantine_frac = 0.1    sim_byzantine_mode = signflip | gradnegate
     /// sim_byzantine_boost = 10.0
     /// ```
-    pub fn from_config(c: &Config) -> Result<ScenarioConfig, String> {
+    pub fn from_config(c: &Config) -> Result<ScenarioConfig> {
         let d = ScenarioConfig::default();
-        let boost = c.f32_or("sim_byzantine_boost", 10.0);
+        let boost = c.f32_or("sim_byzantine_boost", 10.0)?;
         let mode_str = c.str_or("sim_byzantine_mode", "signflip").to_string();
         let byzantine_mode = ByzantineMode::parse(&mode_str, boost)
-            .ok_or_else(|| format!("sim_byzantine_mode: unknown mode {mode_str:?}"))?;
+            .ok_or_else(|| anyhow!("sim_byzantine_mode: unknown mode {mode_str:?}"))?;
         let fleet_str = c.str_or("sim_fleet", "cross_device").to_string();
         let fleet = FleetPreset::parse(&fleet_str)
-            .ok_or_else(|| format!("sim_fleet: unknown fleet {fleet_str:?}"))?;
+            .ok_or_else(|| anyhow!("sim_fleet: unknown fleet {fleet_str:?}"))?;
         Ok(ScenarioConfig {
-            target_cohort: c.usize_or("sim_target_cohort", d.target_cohort),
-            overselect: c.f64_or("sim_overselect", d.overselect),
-            deadline_s: c.f64_or("sim_deadline_s", d.deadline_s),
-            round_latency_s: c.f64_or("sim_latency_s", d.round_latency_s),
-            dropout_prob: c.f32_or("sim_dropout", d.dropout_prob),
-            byzantine_frac: c.f32_or("sim_byzantine_frac", d.byzantine_frac),
+            target_cohort: c.usize_or("sim_target_cohort", d.target_cohort)?,
+            overselect: c.f64_or("sim_overselect", d.overselect)?,
+            deadline_s: c.f64_or("sim_deadline_s", d.deadline_s)?,
+            round_latency_s: c.f64_or("sim_latency_s", d.round_latency_s)?,
+            dropout_prob: c.f32_or("sim_dropout", d.dropout_prob)?,
+            byzantine_frac: c.f32_or("sim_byzantine_frac", d.byzantine_frac)?,
             byzantine_mode,
             fleet,
         })

@@ -1,0 +1,451 @@
+//! Integration tests for the experiment API (DESIGN.md §4.5):
+//!
+//! * spec ↔ JSON round-trips are lossless for every compression family,
+//!   `ZParam`, participation, plateau, workload and sweep variant;
+//! * the golden spec files under `tests/specs/` exercise `from_json` /
+//!   `validate()` error messages;
+//! * `examples/quickstart.json` is pinned to the fig1 driver preset;
+//! * a `Session` with a `CsvSink` reproduces the pre-API driver plumbing
+//!   byte-for-byte at parallelism 1 and 8 on a pinned scenario;
+//! * observers stream in the documented order;
+//! * no repro driver constructs a `ServerConfig` literal anymore.
+
+use std::cell::RefCell;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use zsignfedavg::api::{
+    seed_for_repeat, CsvSink, ExperimentSpec, JsonlSink, MemorySink, RoundObserver, SeriesCtx,
+    Session, SweepSpec, WorkloadSpec,
+};
+use zsignfedavg::compress::sign::SigmaRule;
+use zsignfedavg::fl::backend::AnalyticBackend;
+use zsignfedavg::fl::metrics::{
+    aggregate, safe_series_name, write_csv, write_runs_csv, Aggregated, RoundRecord, RunResult,
+};
+use zsignfedavg::fl::plateau::PlateauConfig;
+use zsignfedavg::fl::server::{run_experiment, Participation, ServerConfig};
+use zsignfedavg::fl::{AlgorithmConfig, Compression};
+use zsignfedavg::problems::consensus::Consensus;
+use zsignfedavg::problems::AnalyticProblem;
+use zsignfedavg::rng::ZParam;
+use zsignfedavg::sim::{ByzantineMode, FleetPreset, ScenarioConfig};
+use zsignfedavg::util::json::Json;
+
+fn specs_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/specs")
+}
+
+fn roundtrip(spec: &ExperimentSpec) {
+    let json = spec.to_json();
+    let back = ExperimentSpec::from_json(&json).unwrap_or_else(|e| {
+        panic!("reparse failed for {json}: {e}");
+    });
+    assert_eq!(&back, spec, "lossy round-trip via {json}");
+}
+
+// ---------------------------------------------------------------------------
+// Round-trips
+// ---------------------------------------------------------------------------
+
+#[test]
+fn json_roundtrip_every_compression_and_server_opt() {
+    let algos = vec![
+        AlgorithmConfig::gd(),
+        AlgorithmConfig::sgdwm(0.9),
+        AlgorithmConfig::fedavg(5).with_lrs(0.05, 0.5),
+        AlgorithmConfig::signsgd(),
+        AlgorithmConfig::z_signsgd(ZParam::Finite(1), 0.05),
+        AlgorithmConfig::z_signsgd(ZParam::Inf, 3.0),
+        AlgorithmConfig::z_signfedavg(ZParam::Finite(2), 0.01, 5).with_server_adam(),
+        AlgorithmConfig::sign_fedavg(3),
+        AlgorithmConfig::sto_signsgd().with_momentum(0.9),
+        AlgorithmConfig::ef_signsgd(),
+        AlgorithmConfig::qsgd(4),
+        AlgorithmConfig::fedpaq(2, 5),
+        AlgorithmConfig::dp_signfedavg(0.01, 1.1, 2),
+        AlgorithmConfig::dp_fedavg(0.01, 1.1, 2),
+        AlgorithmConfig::topk(0.25, 1),
+        AlgorithmConfig::sparse_sign(0.1, ZParam::Inf, 0.5, 2),
+        // The InfNorm sigma rule has no named preset; cover it explicitly.
+        AlgorithmConfig {
+            name: "infnorm-ablation".into(),
+            compression: Compression::ZSign {
+                z: ZParam::Finite(3),
+                sigma: SigmaRule::InfNorm,
+            },
+            client_lr: 0.02,
+            server_lr: 0.7,
+            server_opt: zsignfedavg::fl::algorithms::ServerOpt::Sgd,
+            local_steps: 4,
+        },
+    ];
+    for algo in algos {
+        let spec = ExperimentSpec::new("rt", WorkloadSpec::consensus(8, 16, 99))
+            .rounds(10)
+            .series(algo);
+        roundtrip(&spec);
+    }
+}
+
+#[test]
+fn json_roundtrip_workloads_participation_plateau_downlink_sweep() {
+    let workloads = vec![
+        WorkloadSpec::consensus(10, 100, 7),
+        WorkloadSpec::Counterexample { a: 4.0, x0: 2.0 },
+        WorkloadSpec::LeastSquares {
+            clients: 8,
+            dim: 50,
+            rows_per_client: 20,
+            heterogeneity: 0.5,
+            noise: 0.5,
+            problem_seed: 11,
+            stochastic: true,
+        },
+        WorkloadSpec::Neural(zsignfedavg::api::NeuralSpec {
+            dataset: zsignfedavg::api::Dataset::Emnist,
+            clients: 358,
+            train_samples: 3580,
+            test_samples: Some(64),
+            paper_scale: false,
+            artifacts: PathBuf::from("artifacts"),
+        }),
+    ];
+    for w in workloads {
+        let spec = ExperimentSpec::new("rt", w)
+            .rounds(5)
+            .series(AlgorithmConfig::gd());
+        roundtrip(&spec);
+    }
+
+    let participations = vec![
+        Participation::Uniform,
+        Participation::Simulated(ScenarioConfig::default()),
+        Participation::Simulated(ScenarioConfig {
+            target_cohort: 32,
+            overselect: 2.0,
+            deadline_s: 1.5,
+            round_latency_s: 0.0,
+            dropout_prob: 0.2,
+            byzantine_frac: 0.1,
+            byzantine_mode: ByzantineMode::GradNegate { boost: 5.0 },
+            fleet: FleetPreset::Uniform,
+        }),
+        Participation::Simulated(ScenarioConfig {
+            byzantine_mode: ByzantineMode::SignFlip,
+            fleet: FleetPreset::CrossDevice,
+            ..ScenarioConfig::default()
+        }),
+    ];
+    for p in participations {
+        let spec = ExperimentSpec::new("rt", WorkloadSpec::consensus(40, 8, 99))
+            .rounds(5)
+            .participation(p)
+            .series(AlgorithmConfig::gd());
+        roundtrip(&spec);
+    }
+
+    for plateau in [PlateauConfig::mnist(), PlateauConfig::emnist(), PlateauConfig::cifar()] {
+        let spec = ExperimentSpec::new("rt", WorkloadSpec::consensus(4, 8, 99))
+            .rounds(5)
+            .plateau(plateau)
+            .downlink_sign(ZParam::Inf, 0.5)
+            .series(AlgorithmConfig::signsgd());
+        roundtrip(&spec);
+    }
+
+    let spec = ExperimentSpec::new("rt", WorkloadSpec::consensus(4, 8, 99))
+        .rounds(5)
+        .seed(12345)
+        .repeats(3)
+        .clients_per_round(Some(2))
+        .parallelism(8)
+        .reduce_lanes(3)
+        .output_dir("elsewhere")
+        .subtract_optimal(true)
+        .series_labeled("lbl", "display name", AlgorithmConfig::gd())
+        .sweep(SweepSpec {
+            zs: vec![ZParam::Finite(1), ZParam::Inf],
+            local_steps: vec![1, 5],
+            sigmas: vec![0.0, 0.5, 2.0],
+            client_lr: 0.05,
+            server_lr: 0.3,
+        });
+    roundtrip(&spec);
+}
+
+// ---------------------------------------------------------------------------
+// Golden files
+// ---------------------------------------------------------------------------
+
+#[test]
+fn quickstart_spec_is_pinned_to_the_fig1_preset() {
+    let parsed = ExperimentSpec::from_json_file(
+        &Path::new(env!("CARGO_MANIFEST_DIR")).join("examples/quickstart.json"),
+    )
+    .unwrap();
+    let preset = zsignfedavg::repro::fig1_consensus::spec_for_dim(8, 50, 40, 2, 0.01, 3.0);
+    assert_eq!(parsed, preset, "examples/quickstart.json drifted from the fig1 preset");
+    assert!(parsed.validate().is_ok());
+    roundtrip(&parsed);
+}
+
+#[test]
+fn golden_valid_spec_parses_validates_and_roundtrips() {
+    let spec = ExperimentSpec::from_json_file(&specs_dir().join("scenario_sweep.json")).unwrap();
+    assert!(spec.validate().is_ok(), "{:?}", spec.validate());
+    // 1 explicit series + 2 zs × 2 Es × 2 sigmas.
+    assert_eq!(spec.expanded_series().len(), 9);
+    assert!(matches!(spec.participation, Participation::Simulated(_)));
+    assert!(spec.plateau.is_some() && spec.downlink_sign.is_some());
+    roundtrip(&spec);
+}
+
+#[test]
+fn golden_error_messages_are_pinned() {
+    let dir = specs_dir();
+    let err = ExperimentSpec::from_json_file(&dir.join("bad_missing_workload.json"))
+        .unwrap_err();
+    assert_eq!(err.at, "workload");
+    assert!(err.reason.contains("missing required field"), "{err}");
+
+    let err = ExperimentSpec::from_json_file(&dir.join("bad_unknown_compression.json"))
+        .unwrap_err();
+    assert_eq!(err.at, "series[0].algorithm.compression.kind");
+    assert!(err.reason.contains("unknown compression kind \"zip\""), "{err}");
+
+    let err = ExperimentSpec::from_json_file(&dir.join("bad_unknown_key.json")).unwrap_err();
+    assert_eq!(err.at, "rouns");
+    assert!(err.reason.contains("unknown field"), "{err}");
+
+    let spec =
+        ExperimentSpec::from_json_file(&dir.join("bad_zero_rounds.json")).unwrap();
+    let errs = spec.validate().unwrap_err();
+    let msgs: Vec<String> = errs.iter().map(|e| e.to_string()).collect();
+    assert!(msgs.iter().any(|m| m == "rounds: must be >= 1"), "{msgs:?}");
+    assert!(msgs.iter().any(|m| m == "eval_every: must be >= 1"), "{msgs:?}");
+
+    let spec = ExperimentSpec::from_json_file(&dir.join("bad_ef_partial.json")).unwrap();
+    let errs = spec.validate().unwrap_err();
+    assert!(
+        errs.iter().any(|e| e.reason.contains("EF-SignSGD")),
+        "{errs:?}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// CSV byte-compatibility with the pre-API plumbing
+// ---------------------------------------------------------------------------
+
+/// The pinned scenario of the acceptance bar: a simulated cross-device
+/// cohort with multi-slot reduce lanes, two algorithm families (packed
+/// sign votes + dense), two repeats.
+fn pinned_spec(out: &Path, parallelism: usize) -> ExperimentSpec {
+    ExperimentSpec::new("pinned", WorkloadSpec::consensus(16, 64, 99))
+        .rounds(12)
+        .eval_every(3)
+        .seed(5)
+        .repeats(2)
+        .reduce_lanes(3)
+        .parallelism(parallelism)
+        .participation(Participation::Simulated(ScenarioConfig {
+            target_cohort: 6,
+            ..ScenarioConfig::default()
+        }))
+        .subtract_optimal(true)
+        .series(AlgorithmConfig::z_signfedavg(ZParam::Finite(1), 1.0, 2).with_lrs(0.05, 1.0))
+        .series(AlgorithmConfig::fedavg(2).with_lrs(0.05, 1.0))
+        .output_dir(out)
+}
+
+/// Blank the measured `wall_ms` column (index 8) — it is wall-clock time
+/// and can never be reproducible; everything else must match exactly.
+fn normalize_raw(body: &str) -> String {
+    body.lines()
+        .map(|l| {
+            let mut parts: Vec<&str> = l.split(',').collect();
+            if parts.len() >= 9 {
+                parts[8] = "-";
+            }
+            parts.join(",")
+        })
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+/// Replicate the retired `repro::common` plumbing (repeat loop + CSV
+/// naming) exactly as it was before the API redesign.
+fn legacy_reference(out: &Path) {
+    let f_star = Consensus::gaussian(16, 64, 99).optimal_value().unwrap();
+    for algo in [
+        AlgorithmConfig::z_signfedavg(ZParam::Finite(1), 1.0, 2).with_lrs(0.05, 1.0),
+        AlgorithmConfig::fedavg(2).with_lrs(0.05, 1.0),
+    ] {
+        let mut runs = Vec::new();
+        for r in 0..2usize {
+            let mut backend = AnalyticBackend::new(Consensus::gaussian(16, 64, 99));
+            let cfg = ServerConfig {
+                rounds: 12,
+                clients_per_round: None,
+                eval_every: 3,
+                seed: 5u64.wrapping_add(1000 * r as u64),
+                plateau: None,
+                downlink_sign: None,
+                parallelism: 1,
+                reduce_lanes: 3,
+                participation: Participation::Simulated(ScenarioConfig {
+                    target_cohort: 6,
+                    ..ScenarioConfig::default()
+                }),
+            };
+            runs.push(run_experiment(&mut backend, &algo, &cfg));
+        }
+        let mut agg = aggregate(&runs);
+        for v in agg.objective_mean.iter_mut() {
+            *v -= f_star;
+        }
+        let dir = out.join("pinned");
+        let safe = safe_series_name(&algo.name);
+        write_csv(&dir.join(format!("{safe}.csv")), &agg).unwrap();
+        write_runs_csv(&dir.join(format!("{safe}_raw.csv")), &runs).unwrap();
+    }
+}
+
+#[test]
+fn session_csvs_match_legacy_plumbing_at_parallelism_1_and_8() {
+    let root = std::env::temp_dir().join("zsfa_api_pinned_csv");
+    std::fs::remove_dir_all(&root).ok();
+    let (legacy, p1, p8) = (root.join("legacy"), root.join("p1"), root.join("p8"));
+
+    legacy_reference(&legacy);
+    Session::new().with(CsvSink::new()).run(&pinned_spec(&p1, 1)).unwrap();
+    Session::new().with(CsvSink::new()).run(&pinned_spec(&p8, 8)).unwrap();
+
+    for stem in ["1-SignFedAvg", "FedAvg"] {
+        for (kind, normalize) in [("", false), ("_raw", true)] {
+            let name = format!("pinned/{stem}{kind}.csv");
+            let want = std::fs::read_to_string(legacy.join(&name)).unwrap();
+            for alt in [&p1, &p8] {
+                let got = std::fs::read_to_string(alt.join(&name)).unwrap();
+                if normalize {
+                    assert_eq!(
+                        normalize_raw(&got),
+                        normalize_raw(&want),
+                        "{name} differs (modulo wall_ms) in {alt:?}"
+                    );
+                } else {
+                    assert_eq!(got, want, "{name} differs in {alt:?}");
+                }
+            }
+        }
+    }
+    std::fs::remove_dir_all(&root).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Observer contract
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Default)]
+struct Trace(Rc<RefCell<Vec<String>>>);
+
+impl RoundObserver for Trace {
+    fn on_round(&mut self, _ctx: &SeriesCtx, repeat: usize, rec: &RoundRecord) {
+        self.0.borrow_mut().push(format!("round:{repeat}:{}", rec.round));
+    }
+
+    fn on_run_end(&mut self, _ctx: &SeriesCtx, repeat: usize, _run: &RunResult) {
+        self.0.borrow_mut().push(format!("run_end:{repeat}"));
+    }
+
+    fn on_series_end(&mut self, ctx: &SeriesCtx, _agg: &Aggregated, _runs: &[RunResult]) {
+        self.0.borrow_mut().push(format!("series_end:{}", ctx.label));
+    }
+}
+
+#[test]
+fn observers_stream_rounds_in_order_then_run_end_then_series_end() {
+    let trace = Trace::default();
+    let spec = ExperimentSpec::new("obs", WorkloadSpec::consensus(4, 8, 99))
+        .rounds(6)
+        .eval_every(2)
+        .repeats(2)
+        .series(AlgorithmConfig::gd().with_lrs(0.1, 1.0));
+    Session::new().with(trace.clone()).run(&spec).unwrap();
+    // Evaluated rounds: 0, 2, 4 and the forced final round 5.
+    let want: Vec<String> = [
+        "round:0:0", "round:0:2", "round:0:4", "round:0:5", "run_end:0",
+        "round:1:0", "round:1:2", "round:1:4", "round:1:5", "run_end:1",
+        "series_end:GD",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    assert_eq!(*trace.0.borrow(), want);
+}
+
+#[test]
+fn memory_sink_collects_and_jsonl_sink_emits_valid_json() {
+    let root = std::env::temp_dir().join("zsfa_api_jsonl");
+    std::fs::remove_dir_all(&root).ok();
+    let events = root.join("events.jsonl");
+
+    let mem = MemorySink::new();
+    let spec = ExperimentSpec::new("sink", WorkloadSpec::consensus(4, 8, 99))
+        .rounds(4)
+        .eval_every(2)
+        .repeats(2)
+        .series(AlgorithmConfig::gd().with_lrs(0.1, 1.0))
+        .series(AlgorithmConfig::signsgd().with_lrs(0.1, 1.0));
+    Session::new()
+        .with(mem.clone())
+        .with(JsonlSink::create(&events).unwrap())
+        .run(&spec)
+        .unwrap();
+
+    let collected = mem.take();
+    assert_eq!(collected.len(), 2);
+    assert_eq!(collected[0].label, "GD");
+    assert_eq!(collected[0].runs.len(), 2);
+
+    let body = std::fs::read_to_string(&events).unwrap();
+    // Per series: 3 records × 2 repeats + 2 run_end + 1 series_end = 9.
+    assert_eq!(body.lines().count(), 18);
+    for line in body.lines() {
+        let j = Json::parse(line).unwrap();
+        assert!(j.get("event").is_some(), "{line}");
+    }
+    std::fs::remove_dir_all(&root).ok();
+}
+
+// ---------------------------------------------------------------------------
+// The acceptance bar: drivers are spec factories
+// ---------------------------------------------------------------------------
+
+#[test]
+fn repro_drivers_construct_no_server_config_literals() {
+    // Every run must flow through ExperimentSpec/Session; a ServerConfig
+    // literal in a driver is a regression to hand-rolled plumbing.
+    let repro = Path::new(env!("CARGO_MANIFEST_DIR")).join("src/repro");
+    for entry in std::fs::read_dir(&repro).unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().map(|e| e != "rs").unwrap_or(true) {
+            continue;
+        }
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(
+            !body.contains("ServerConfig {") && !body.contains("ServerConfig{"),
+            "{path:?} constructs a ServerConfig literal"
+        );
+    }
+}
+
+#[test]
+fn session_seed_convention_matches_exported_helper() {
+    let spec = ExperimentSpec::new("seeds", WorkloadSpec::consensus(2, 2, 1))
+        .seed(7)
+        .series(AlgorithmConfig::gd());
+    assert_eq!(spec.seed_for_repeat(0), 7);
+    assert_eq!(spec.seed_for_repeat(3), seed_for_repeat(7, 3));
+    assert_eq!(spec.seed_for_repeat(3), 3007);
+}
