@@ -3,7 +3,11 @@
 #   make build     release build of the coordinator (lib + zsfa binary)
 #   make test      full Rust test suite (tier-1 verify = build + test)
 #   make bench     run every registered micro/round bench
-#   make bench-json  streamed-vs-buffered aggregation bench -> BENCH_aggregate.json
+#   make bench-smoke every registered bench with a tiny iteration budget
+#                    (catches bench rot; bench-compile alone doesn't execute)
+#   make bench-json  perf trajectory -> BENCH_compress.json (fused vs scalar
+#                    sign kernels), BENCH_aggregate.json (CSA vs scalar vote
+#                    add), BENCH_dense_reduce.json (streamed vs buffered)
 #   make determinism parallelism-1 vs -8 scenario CSV byte-diff (what CI runs)
 #   make spec-smoke  `zsfa run` example spec vs equivalent fig1 driver CSV
 #                    byte-diff at parallelism 1 and 8 (what CI runs)
@@ -16,7 +20,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test bench bench-build bench-json determinism spec-smoke fmt lint python artifacts ci clean
+.PHONY: build test bench bench-build bench-smoke bench-json determinism spec-smoke fmt lint python artifacts ci clean
 
 build:
 	$(CARGO) build --release
@@ -30,10 +34,20 @@ bench:
 bench-build:
 	$(CARGO) bench --no-run
 
-# Machine-readable aggregation-perf trajectory (streamed vs buffered dense
-# reduce at m in {64, 512, 4096}).
+# Execute every registered bench with a tiny iteration budget (release
+# mode). The timings are meaningless; the point is that the bench *code*
+# runs on every PR, which `cargo bench --no-run` cannot guarantee.
+bench-smoke:
+	$(CARGO) bench -- --smoke
+
+# Machine-readable perf trajectory at the repo root (CI uploads these as
+# artifacts): fused-vs-scalar compress throughput, CSA-vs-scalar vote
+# accumulation at m in {64, 512, 4096}, and the streamed-vs-buffered dense
+# reduce. Paths are absolute because cargo runs benches from rust/.
 bench-json:
-	$(CARGO) bench --bench bench_dense_reduce -- --json BENCH_aggregate.json
+	$(CARGO) bench --bench bench_compress -- --json $(CURDIR)/BENCH_compress.json
+	$(CARGO) bench --bench bench_aggregate -- --json $(CURDIR)/BENCH_aggregate.json
+	$(CARGO) bench --bench bench_dense_reduce -- --json $(CURDIR)/BENCH_dense_reduce.json
 
 # Reduce-order regression smoke: one scenario config at parallelism 1 and 8
 # must produce byte-identical CSVs (raw CSVs carry wall-clock, so excluded).
@@ -91,4 +105,4 @@ python:
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts
 
-ci: build test fmt lint bench-build python
+ci: build test fmt lint bench-build bench-smoke python

@@ -15,9 +15,10 @@ use zsignfedavg::problems::AnalyticProblem;
 use zsignfedavg::rng::ZParam;
 
 fn main() {
+    let smoke = zsignfedavg::bench::smoke_mode();
     let n = 10;
-    let d = 2000;
-    let rounds = 1200;
+    let d = if smoke { 200 } else { 2000 };
+    let rounds = if smoke { 50 } else { 1200 };
     let f_star = Consensus::gaussian(n, d, 21).optimal_value().unwrap();
     let cfg = ServerConfig { rounds, eval_every: 25, ..Default::default() };
     let link = LinkModel::cross_device();

@@ -1,38 +1,127 @@
-//! Bench: server-side sign-vote aggregation — the L3 hot path that scales
-//! with n·d per round (Algorithm 1 line 15).
+//! Bench: server-side sign-vote aggregation — the hot path that scales
+//! with m·d per round (Algorithm 1 line 15).
 //!
-//! Compares the packed word-walking `VoteAccumulator` against a naive
-//! unpack-and-add baseline, plus the final dequantize (`mean_into`) and the
-//! dense-mean path used by FedAvg/QSGD.
+//! Compares the carry-save (Harley–Seal) bit-sliced `VoteAccumulator`
+//! against the pre-CSA implementation (blanket per-client decrement plus a
+//! `trailing_zeros` walk of the set bits, reproduced locally below as the
+//! frozen baseline) and a naive unpack-and-add floor, at cohort sizes
+//! m ∈ {64, 512, 4096}. Also measures the final dequantize (`mean_into`)
+//! and the dense-mean path used by FedAvg/QSGD.
+//!
+//! `--json PATH` writes the machine-readable perf trajectory (`make
+//! bench-json` → `BENCH_aggregate.json` at the repo root); `--smoke` runs a
+//! tiny-budget pass for CI (`make bench-smoke`).
 
-use zsignfedavg::bench::{bench, BenchConfig};
+use std::collections::BTreeMap;
+use zsignfedavg::bench::{bench, smoke_mode, BenchConfig};
 use zsignfedavg::compress::pack::{PackedSigns, VoteAccumulator};
 use zsignfedavg::rng::Pcg64;
 use zsignfedavg::tensor;
 use zsignfedavg::testutil::{gen_signs, gen_vec_f32};
+use zsignfedavg::util::json::Json;
+
+/// The pre-CSA accumulator, frozen here as the bench baseline: a blanket
+/// `counts[j] -= 1` per client plus `+= 2` at every set bit.
+struct ScalarVoteAccumulator {
+    counts: Vec<i32>,
+}
+
+impl ScalarVoteAccumulator {
+    fn new(len: usize) -> Self {
+        ScalarVoteAccumulator { counts: vec![0; len] }
+    }
+
+    fn reset(&mut self) {
+        self.counts.iter_mut().for_each(|c| *c = 0);
+    }
+
+    fn add(&mut self, signs: &PackedSigns) {
+        assert_eq!(signs.len(), self.counts.len());
+        for c in self.counts.iter_mut() {
+            *c -= 1;
+        }
+        for (wi, &w) in signs.words().iter().enumerate() {
+            let mut bits = w;
+            let base = wi * 64;
+            while bits != 0 {
+                let j = bits.trailing_zeros() as usize;
+                self.counts[base + j] += 2;
+                bits &= bits - 1;
+            }
+        }
+    }
+}
 
 fn main() {
-    let cfg = BenchConfig::default();
-    println!("== sign-vote aggregation (per-round server cost) ==");
-    for &(n, d) in &[(10usize, 1_048_576usize), (100, 65_536)] {
-        let mut rng = Pcg64::seeded(7);
-        let packed: Vec<PackedSigns> = (0..n)
-            .map(|_| PackedSigns::from_signs(&gen_signs(&mut rng, d)))
-            .collect();
-        let mut acc = VoteAccumulator::new(d);
+    let args: Vec<String> = std::env::args().collect();
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let smoke = smoke_mode();
+    let cfg = if smoke {
+        BenchConfig::smoke()
+    } else {
+        BenchConfig { warmup_time_s: 0.3, samples: 10, min_batch_time_s: 0.05 }
+    };
+    // (m, d): d shrinks at the largest cohort to bound bench wall time.
+    let cases: &[(usize, usize)] =
+        if smoke { &[(8, 4096)] } else { &[(64, 262_144), (512, 262_144), (4096, 65_536)] };
 
-        let r = bench(&format!("votes_packed/n={n},d={d}"), cfg, || {
+    let mut results: BTreeMap<String, Json> = BTreeMap::new();
+    println!("== sign-vote aggregation (per-round server cost) ==");
+    for &(m, d) in cases {
+        let mut rng = Pcg64::seeded(7);
+        let packed: Vec<PackedSigns> =
+            (0..m).map(|_| PackedSigns::from_signs(&gen_signs(&mut rng, d))).collect();
+        let mut acc = VoteAccumulator::new(d);
+        let mut scalar_acc = ScalarVoteAccumulator::new(d);
+
+        // Exactness cross-check: CSA == pre-CSA == naive, for this cohort.
+        {
+            acc.reset();
+            scalar_acc.reset();
+            let mut naive = vec![0i32; d];
+            for p in &packed {
+                acc.add(p);
+                scalar_acc.add(p);
+            }
+            let mut signs = vec![0i8; d];
+            for p in &packed {
+                p.unpack_into(&mut signs);
+                for (c, &s) in naive.iter_mut().zip(&signs) {
+                    *c += s as i32;
+                }
+            }
+            assert_eq!(acc.counts(), &scalar_acc.counts[..], "CSA vs scalar m={m} d={d}");
+            assert_eq!(acc.counts(), &naive[..], "CSA vs naive m={m} d={d}");
+        }
+
+        let csa = bench(&format!("votes_csa/m={m},d={d}"), cfg, || {
             acc.reset();
             for p in &packed {
                 acc.add(std::hint::black_box(p));
             }
         });
-        println!("{}", r.report_throughput((n * d) as f64, "vote"));
+        println!("{}", csa.report_throughput((m * d) as f64, "vote"));
 
-        // Naive baseline: unpack to i8 then add per coordinate.
+        let scalar = bench(&format!("votes_scalar/m={m},d={d}"), cfg, || {
+            scalar_acc.reset();
+            for p in &packed {
+                scalar_acc.add(std::hint::black_box(p));
+            }
+        });
+        let speedup = scalar.median_s() / csa.median_s();
+        println!(
+            "{}   (csa {speedup:.2}x)",
+            scalar.report_throughput((m * d) as f64, "vote")
+        );
+
+        // Naive floor: unpack to i8 then add per coordinate.
         let mut signs = vec![0i8; d];
         let mut counts = vec![0i32; d];
-        let r = bench(&format!("votes_naive/n={n},d={d}"), cfg, || {
+        let naive = bench(&format!("votes_naive/m={m},d={d}"), cfg, || {
             counts.iter_mut().for_each(|c| *c = 0);
             for p in &packed {
                 p.unpack_into(&mut signs);
@@ -41,7 +130,7 @@ fn main() {
                 }
             }
         });
-        println!("{}", r.report_throughput((n * d) as f64, "vote"));
+        println!("{}", naive.report_throughput((m * d) as f64, "vote"));
 
         let mut update = vec![0.0f32; d];
         let r = bench(&format!("mean_into/d={d}"), cfg, || {
@@ -49,16 +138,39 @@ fn main() {
         });
         println!("{}", r.report_throughput(d as f64, "elem"));
 
-        // Dense aggregation baseline (FedAvg path): n axpys.
-        let dense: Vec<Vec<f32>> = (0..n).map(|_| gen_vec_f32(&mut rng, d, 1.0)).collect();
+        // Dense aggregation baseline (FedAvg path): axpys over a small
+        // synthetic cohort (kept at 16 vectors so memory stays bounded).
+        let dn = 16.min(m);
+        let dense: Vec<Vec<f32>> = (0..dn).map(|_| gen_vec_f32(&mut rng, d, 1.0)).collect();
         let mut agg = vec![0.0f32; d];
-        let r = bench(&format!("dense_mean/n={n},d={d}"), cfg, || {
+        let r = bench(&format!("dense_mean/m={dn},d={d}"), cfg, || {
             agg.iter_mut().for_each(|v| *v = 0.0);
             for v in &dense {
-                tensor::axpy(1.0 / n as f32, std::hint::black_box(v), &mut agg);
+                tensor::axpy(1.0 / dn as f32, std::hint::black_box(v), &mut agg);
             }
         });
-        println!("{}", r.report_throughput((n * d) as f64, "elem"));
+        println!("{}", r.report_throughput((dn * d) as f64, "elem"));
         println!();
+
+        let mut entry = BTreeMap::new();
+        entry.insert("m".into(), Json::Num(m as f64));
+        entry.insert("d".into(), Json::Num(d as f64));
+        entry.insert("csa_votes_per_s".into(), Json::Num(csa.throughput((m * d) as f64)));
+        entry.insert(
+            "scalar_votes_per_s".into(),
+            Json::Num(scalar.throughput((m * d) as f64)),
+        );
+        entry.insert("naive_votes_per_s".into(), Json::Num(naive.throughput((m * d) as f64)));
+        entry.insert("speedup".into(), Json::Num(speedup));
+        results.insert(format!("m{m}"), Json::Obj(entry));
+    }
+
+    if let Some(path) = json_path {
+        let mut doc = BTreeMap::new();
+        doc.insert("bench".into(), Json::Str("aggregate".into()));
+        doc.insert("smoke".into(), Json::Num(if smoke { 1.0 } else { 0.0 }));
+        doc.insert("results".into(), Json::Obj(results));
+        std::fs::write(&path, Json::Obj(doc).to_string_compact()).expect("writing bench json");
+        println!("wrote {path}");
     }
 }

@@ -1,60 +1,134 @@
-//! Bench: the uplink compression hot path (Rust reference implementations).
+//! Bench: the uplink compression hot path — fused one-pass kernel vs the
+//! scalar reference path.
 //!
-//! Regenerates the per-coordinate cost rows behind the paper's Table 2
-//! bits-per-round column: stochastic sign (z = 1, z = ∞, z = 2), vanilla
-//! sign, 1-bit packing, and the QSGD quantizer across problem dimensions.
-//! Run with `cargo bench --bench bench_compress`.
+//! The scalar path is what production ran before the fused kernels landed:
+//! `StochasticSign::compress_into` (one z-noise draw per coordinate into an
+//! i8 buffer) followed by `PackedSigns::from_signs` (a second walk that
+//! packs and allocates). The fused path (`compress::kernel`) draws noise in
+//! 64-coordinate blocks and sets bits branchlessly straight into reused
+//! packed words — bit-identical output (cross-checked here and pinned by
+//! `tests/hotpath_exactness.rs`), measured side by side per z family at
+//! d ∈ {4096, 262144, 1M}.
+//!
+//! `--json PATH` writes the machine-readable perf trajectory (`make
+//! bench-json` → `BENCH_compress.json` at the repo root); `--smoke` runs a
+//! tiny-budget pass for CI (`make bench-smoke`).
 
-use zsignfedavg::bench::{bench, BenchConfig};
+use std::collections::BTreeMap;
+use zsignfedavg::bench::{bench, smoke_mode, BenchConfig};
+use zsignfedavg::compress::kernel;
 use zsignfedavg::compress::pack::PackedSigns;
 use zsignfedavg::compress::qsgd::Qsgd;
 use zsignfedavg::compress::sign::{SigmaRule, StochasticSign};
 use zsignfedavg::rng::{Pcg64, ZParam};
 use zsignfedavg::testutil::gen_vec_f32;
+use zsignfedavg::util::json::Json;
+
+/// The pre-PR production path: scalar compress into i8, then pack.
+fn scalar_pack(
+    comp: &mut StochasticSign,
+    x: &[f32],
+    rng: &mut Pcg64,
+    buf: &mut [i8],
+) -> PackedSigns {
+    comp.compress_into(x, rng, buf);
+    PackedSigns::from_signs(buf)
+}
 
 fn main() {
-    let cfg = BenchConfig::default();
-    println!("== compression hot path ==");
-    for &d in &[65_536usize, 1_048_576] {
+    let args: Vec<String> = std::env::args().collect();
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let smoke = smoke_mode();
+    let cfg = if smoke { BenchConfig::smoke() } else { BenchConfig::default() };
+    let dims: &[usize] = if smoke { &[4096] } else { &[4096, 262_144, 1_048_576] };
+
+    // (label, z, sigma): sigma = 0 is the deterministic SignSGD floor.
+    let variants: &[(&str, ZParam, f32)] = &[
+        ("sign_det", ZParam::Finite(1), 0.0),
+        ("z1", ZParam::Finite(1), 0.5),
+        ("z2", ZParam::Finite(2), 0.5),
+        ("zinf", ZParam::Inf, 0.5),
+    ];
+
+    let mut results: BTreeMap<String, Json> = BTreeMap::new();
+    println!("== fused sign kernel vs scalar reference path ==");
+    for &d in dims {
         let mut rng = Pcg64::seeded(42);
         let x = gen_vec_f32(&mut rng, d, 1.0);
-        let mut out = vec![0i8; d];
+        let mut i8buf = vec![0i8; d];
+        let mut packed = PackedSigns::zeroed(d);
 
-        // Vanilla sign (sigma = 0): the floor.
-        let mut det = StochasticSign::deterministic();
-        let r = bench(&format!("sign_det/d={d}"), cfg, || {
-            det.compress_into(std::hint::black_box(&x), &mut rng, &mut out);
-        });
-        println!("{}", r.report_throughput(d as f64, "elem"));
+        for &(label, z, sigma) in variants {
+            // Bit-exactness cross-check on identical RNG clones.
+            {
+                let mut ra = Pcg64::new(7, 1);
+                let mut rb = ra.clone();
+                let mut comp = StochasticSign::new(z, SigmaRule::Fixed(sigma));
+                let want = scalar_pack(&mut comp, &x, &mut ra, &mut i8buf);
+                kernel::stochastic_sign_packed(&x, z, sigma, &mut rb, &mut packed);
+                assert_eq!(packed, want, "fused/scalar divergence: {label} d={d}");
+            }
 
-        for z in [ZParam::Finite(1), ZParam::Inf, ZParam::Finite(2)] {
-            let mut c = StochasticSign::new(z, SigmaRule::Fixed(0.5));
-            let r = bench(&format!("stoch_sign_z{z}/d={d}"), cfg, || {
-                c.compress_into(std::hint::black_box(&x), &mut rng, &mut out);
+            let mut comp = StochasticSign::new(z, SigmaRule::Fixed(sigma));
+            let scalar = bench(&format!("scalar/{label}/d={d}"), cfg, || {
+                let p = scalar_pack(&mut comp, std::hint::black_box(&x), &mut rng, &mut i8buf);
+                std::hint::black_box(&p);
             });
-            println!("{}", r.report_throughput(d as f64, "elem"));
+            println!("{}", scalar.report_throughput(d as f64, "elem"));
+
+            let fused = bench(&format!("fused/{label}/d={d}"), cfg, || {
+                kernel::stochastic_sign_packed(
+                    std::hint::black_box(&x),
+                    z,
+                    sigma,
+                    &mut rng,
+                    &mut packed,
+                );
+                std::hint::black_box(&packed);
+            });
+            let speedup = scalar.median_s() / fused.median_s();
+            println!("{}   ({speedup:.2}x)", fused.report_throughput(d as f64, "elem"));
+
+            let mut entry = BTreeMap::new();
+            entry.insert("d".into(), Json::Num(d as f64));
+            entry.insert("scalar_elems_per_s".into(), Json::Num(scalar.throughput(d as f64)));
+            entry.insert("fused_elems_per_s".into(), Json::Num(fused.throughput(d as f64)));
+            entry.insert("speedup".into(), Json::Num(speedup));
+            results.insert(format!("{label}_d{d}"), Json::Obj(entry));
         }
 
-        // 1-bit packing + unpack round trip.
+        // Context rows: the packing/unpacking primitives and QSGD.
         let r = bench(&format!("pack/d={d}"), cfg, || {
-            std::hint::black_box(PackedSigns::from_signs(&out));
+            std::hint::black_box(PackedSigns::from_signs(&i8buf));
         });
         println!("{}", r.report_throughput(d as f64, "elem"));
-        let packed = PackedSigns::from_signs(&out);
+        let p = PackedSigns::from_signs(&i8buf);
         let mut unpacked = vec![0i8; d];
         let r = bench(&format!("unpack/d={d}"), cfg, || {
-            packed.unpack_into(std::hint::black_box(&mut unpacked));
+            p.unpack_into(std::hint::black_box(&mut unpacked));
         });
         println!("{}", r.report_throughput(d as f64, "elem"));
-
-        // QSGD quantize (s = 1 and s = 4).
         for s in [1u32, 4] {
             let q = Qsgd::new(s);
-            let r = bench(&format!("qsgd_s{s}/d={d}"), cfg, || {
-                std::hint::black_box(q.quantize(&x, &mut rng));
+            let mut out = vec![0.0f32; d];
+            let r = bench(&format!("qsgd_fused_s{s}/d={d}"), cfg, || {
+                q.quantize_dequantize_into(std::hint::black_box(&x), &mut rng, &mut out);
             });
             println!("{}", r.report_throughput(d as f64, "elem"));
         }
         println!();
+    }
+
+    if let Some(path) = json_path {
+        let mut doc = BTreeMap::new();
+        doc.insert("bench".into(), Json::Str("compress".into()));
+        doc.insert("smoke".into(), Json::Num(if smoke { 1.0 } else { 0.0 }));
+        doc.insert("results".into(), Json::Obj(results));
+        std::fs::write(&path, Json::Obj(doc).to_string_compact()).expect("writing bench json");
+        println!("wrote {path}");
     }
 }

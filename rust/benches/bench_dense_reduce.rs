@@ -127,10 +127,10 @@ fn streamed_round(
     for lane_i in 0..topo.lanes() {
         let mut lane = lanes[lane_i].lock().unwrap();
         for slot in topo.lane_slots(lane_i) {
-            let delta = client_delta(seed, slot, d);
+            let mut delta = client_delta(seed, slot, d);
             let mut rng = Pcg64::new(seed ^ 0xabc, slot as u64);
             let ctx = AbsorbCtx { rng: &mut rng, round_sigma: 0.0, inv_m, ef: None, hook: None };
-            agg.absorb(delta, 0.0, ctx, &mut lane, scratch);
+            agg.absorb(&mut delta, 0.0, ctx, &mut lane, scratch);
         }
     }
     agg.reduce(&lanes[..topo.lanes()], out);
@@ -147,11 +147,17 @@ fn main() {
     let d = 1024usize;
     let lanes_n = DEFAULT_REDUCE_LANES;
     let agg = Compression::None.aggregator(1.0);
-    let cfg = BenchConfig { warmup_time_s: 0.2, samples: 15, min_batch_time_s: 0.01 };
+    let smoke = zsignfedavg::bench::smoke_mode();
+    let cfg = if smoke {
+        BenchConfig::smoke()
+    } else {
+        BenchConfig { warmup_time_s: 0.2, samples: 15, min_batch_time_s: 0.01 }
+    };
+    let ms: &[usize] = if smoke { &[64] } else { &[64, 512, 4096] };
     let mut results: BTreeMap<String, Json> = BTreeMap::new();
 
     println!("== dense round reduce: buffered (m·d) vs streamed ({lanes_n} lanes) — d={d} ==");
-    for m in [64usize, 512, 4096] {
+    for &m in ms {
         let coords = (m * d) as f64;
         let mut out = vec![0.0f32; d];
 

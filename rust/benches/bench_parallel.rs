@@ -21,7 +21,12 @@ use zsignfedavg::problems::consensus::Consensus;
 use zsignfedavg::rng::ZParam;
 
 fn main() {
-    let cfg = BenchConfig { warmup_time_s: 0.3, samples: 12, min_batch_time_s: 0.05 };
+    let smoke = zsignfedavg::bench::smoke_mode();
+    let cfg = if smoke {
+        BenchConfig::smoke()
+    } else {
+        BenchConfig { warmup_time_s: 0.3, samples: 12, min_batch_time_s: 0.05 }
+    };
     let n = 64;
     let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
     println!("== parallel round engine: n = {n} clients, {cores} cores available ==");
@@ -33,7 +38,8 @@ fn main() {
         ),
         ("QSGD(s=4)", AlgorithmConfig::qsgd(4).with_lrs(0.01, 1.0)),
     ];
-    for &d in &[16_384usize, 131_072] {
+    let dims: &[usize] = if smoke { &[4096] } else { &[16_384, 131_072] };
+    for &d in dims {
         for (label, algo) in &cases {
             let mut base_median = f64::NAN;
             for &par in &[1usize, 2, 4, 8] {

@@ -17,11 +17,17 @@ use zsignfedavg::rng::ZParam;
 use zsignfedavg::runtime::{ModelRuntime, XlaBackend};
 
 fn main() {
-    let cfg = BenchConfig { warmup_time_s: 0.5, samples: 15, min_batch_time_s: 0.05 };
+    let smoke = zsignfedavg::bench::smoke_mode();
+    let cfg = if smoke {
+        BenchConfig::smoke()
+    } else {
+        BenchConfig { warmup_time_s: 0.5, samples: 15, min_batch_time_s: 0.05 }
+    };
     println!("== end-to-end coordinator rounds ==");
 
     // Analytic path: 10 clients, d = 100k, 1-SignSGD, one round per iter.
-    for &d in &[10_000usize, 100_000] {
+    let dims: &[usize] = if smoke { &[2_000] } else { &[10_000, 100_000] };
+    for &d in dims {
         let algo = AlgorithmConfig::z_signsgd(ZParam::Finite(1), 1.0).with_lrs(0.01, 1.0);
         let sc = ServerConfig { rounds: 1, eval_every: 1000, ..Default::default() };
         let mut backend = AnalyticBackend::new(Consensus::gaussian(10, d, 1));

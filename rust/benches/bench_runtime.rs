@@ -14,7 +14,11 @@ fn main() {
         println!("bench_runtime: no artifacts/ — run `make artifacts` first");
         return;
     }
-    let cfg = BenchConfig { warmup_time_s: 1.0, samples: 20, min_batch_time_s: 0.05 };
+    let cfg = if zsignfedavg::bench::smoke_mode() {
+        BenchConfig::smoke()
+    } else {
+        BenchConfig { warmup_time_s: 1.0, samples: 20, min_batch_time_s: 0.05 }
+    };
     for model in ["mnist_mlp", "mnist_cnn", "cifar_cnn"] {
         let Ok(mut rt) = ModelRuntime::open(dir, model) else {
             println!("skipping {model}: artifacts missing");

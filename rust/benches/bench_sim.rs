@@ -16,10 +16,15 @@ use zsignfedavg::rng::Pcg64;
 use zsignfedavg::sim::{ByzantineMode, FleetPreset, ScenarioConfig, ScenarioPolicy};
 
 fn main() {
-    let cfg = BenchConfig { warmup_time_s: 0.3, samples: 12, min_batch_time_s: 0.05 };
-    let n = 20_000;
+    let smoke = zsignfedavg::bench::smoke_mode();
+    let cfg = if smoke {
+        BenchConfig::smoke()
+    } else {
+        BenchConfig { warmup_time_s: 0.3, samples: 12, min_batch_time_s: 0.05 }
+    };
+    let n = if smoke { 2_000 } else { 20_000 };
     let sc = ScenarioConfig {
-        target_cohort: 10_000,
+        target_cohort: if smoke { 1_000 } else { 10_000 },
         overselect: 1.3,
         deadline_s: 10.0,
         round_latency_s: 0.3,

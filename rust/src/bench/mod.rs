@@ -24,6 +24,22 @@ impl Default for BenchConfig {
     }
 }
 
+impl BenchConfig {
+    /// Tiny iteration budget for `make bench-smoke`: every registered bench
+    /// executes end to end in CI (compiling alone doesn't catch bench rot),
+    /// with timings that are meaningless but code paths that are real.
+    pub fn smoke() -> BenchConfig {
+        BenchConfig { warmup_time_s: 0.01, samples: 2, min_batch_time_s: 0.001 }
+    }
+}
+
+/// True when the bench binary was invoked with `--smoke` (the
+/// `make bench-smoke` contract): benches shrink their problem sizes and use
+/// [`BenchConfig::smoke`] so the whole suite executes in seconds.
+pub fn smoke_mode() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+}
+
 /// One benchmark's results.
 #[derive(Debug, Clone)]
 pub struct BenchResult {

@@ -34,11 +34,11 @@
 //! fold degenerates to the historical slot-ordered reduce, bit for bit.
 
 use super::error_feedback::EfState;
+use super::kernel;
 use super::pack::{PackedSigns, VoteAccumulator};
 use super::qsgd::{bits_per_level, Qsgd};
-use super::sign::{SigmaRule, StochasticSign};
-use super::sparsify::{SparseSign, TopK};
-use super::{Compressor, Message};
+use super::sign::SigmaRule;
+use super::sparsify::{top_k_indices_into, TopK};
 use crate::rng::{Pcg64, ZParam};
 use crate::tensor;
 use std::sync::Mutex;
@@ -141,18 +141,21 @@ impl LaneAcc {
 }
 
 /// Per-worker scratch reused across every client a worker processes: the
-/// i8 sign buffer for the packed-sign hot path and the f32 decode buffer
-/// for dense-family wire formats. Keeps the absorb path allocation-light
-/// (QSGD/TopK/SparseSign still build their transient wire message).
+/// packed-sign buffer the fused kernels write into, the f32 dequantize
+/// buffer the dense families fold from, and the top-k index buffer. With
+/// these, **every** compressor family's `absorb` runs without a single
+/// per-client heap allocation in steady state (regression-tested by
+/// `tests/alloc_regression.rs`).
 #[derive(Debug)]
 pub struct Scratch {
-    pub signs: Vec<i8>,
+    pub packed: PackedSigns,
     pub dense: Vec<f32>,
+    pub idx: Vec<u32>,
 }
 
 impl Scratch {
     pub fn new(d: usize) -> Scratch {
-        Scratch { signs: vec![0i8; d], dense: vec![0.0f32; d] }
+        Scratch { packed: PackedSigns::zeroed(d), dense: vec![0.0f32; d], idx: Vec::new() }
     }
 }
 
@@ -214,10 +217,12 @@ pub trait Aggregator: Send + Sync {
     /// Compress `delta` (the client's update direction, faults already
     /// applied) and fold it into `lane`. Pure in `(delta, loss, ctx.rng)`
     /// apart from the lane/EF state it updates — what makes lane dispatch
-    /// order irrelevant.
+    /// order irrelevant. `delta` is a caller-owned scratch slice (the
+    /// engine's per-worker `RoundScratch` buffer, refilled per client):
+    /// implementations may clobber it freely but must not keep it.
     fn absorb(
         &self,
-        delta: Vec<f32>,
+        delta: &mut [f32],
         loss: f64,
         ctx: AbsorbCtx<'_>,
         lane: &mut LaneAcc,
@@ -248,7 +253,7 @@ fn reduce_votes(lanes: &[Mutex<LaneAcc>], update: &mut [f32]) -> ReduceStats {
             t.merge(v);
         }
     }
-    let total = total.expect("sign reduce with no votes absorbed");
+    let mut total = total.expect("sign reduce with no votes absorbed");
     total.mean_into(1.0, update);
     lanes[0].lock().unwrap().votes = Some(total);
     stats
@@ -287,14 +292,14 @@ impl Aggregator for DenseAgg {
 
     fn absorb(
         &self,
-        delta: Vec<f32>,
+        delta: &mut [f32],
         loss: f64,
         ctx: AbsorbCtx<'_>,
         lane: &mut LaneAcc,
         _scratch: &mut Scratch,
     ) {
         let bits = 32 * delta.len() as u64;
-        lane.add_dense(&delta, ctx.inv_m, bits, loss);
+        lane.add_dense(delta, ctx.inv_m, bits, loss);
     }
 
     fn reduce(&self, lanes: &[Mutex<LaneAcc>], update: &mut [f32]) -> ReduceStats {
@@ -316,7 +321,7 @@ impl Aggregator for ZSignAgg {
 
     fn absorb(
         &self,
-        delta: Vec<f32>,
+        delta: &mut [f32],
         loss: f64,
         ctx: AbsorbCtx<'_>,
         lane: &mut LaneAcc,
@@ -325,21 +330,20 @@ impl Aggregator for ZSignAgg {
         let AbsorbCtx { rng, round_sigma, hook, .. } = ctx;
         let s = match self.sigma {
             SigmaRule::Fixed(_) => round_sigma,
-            SigmaRule::L2Norm => tensor::norm2(&delta) as f32,
-            SigmaRule::InfNorm => tensor::norm_inf(&delta) as f32,
+            SigmaRule::L2Norm => tensor::norm2(delta) as f32,
+            SigmaRule::InfNorm => tensor::norm_inf(delta) as f32,
         };
         // Prefer the backend's AOT Pallas kernel (sequential path only);
-        // fall back to the Rust reference compressor.
-        let hooked = hook.and_then(|h| h.packed_sign(&delta, self.z, s, &mut *rng));
-        let packed = match hooked {
-            Some(packed) => packed,
+        // fall back to the fused Rust kernel (one pass, bit-identical to
+        // the scalar reference compressor, zero allocation).
+        let hooked = hook.and_then(|h| h.packed_sign(delta, self.z, s, &mut *rng));
+        match hooked {
+            Some(packed) => lane.add_signs(&packed, delta.len() as u64, loss),
             None => {
-                let mut comp = StochasticSign::new(self.z, SigmaRule::Fixed(s));
-                comp.compress_into(&delta, rng, &mut scratch.signs);
-                PackedSigns::from_signs(&scratch.signs)
+                kernel::stochastic_sign_packed(delta, self.z, s, rng, &mut scratch.packed);
+                lane.add_signs(&scratch.packed, delta.len() as u64, loss);
             }
-        };
-        lane.add_signs(&packed, delta.len() as u64, loss);
+        }
     }
 
     fn reduce(&self, lanes: &[Mutex<LaneAcc>], update: &mut [f32]) -> ReduceStats {
@@ -361,16 +365,20 @@ impl Aggregator for EfAgg {
 
     fn absorb(
         &self,
-        mut delta: Vec<f32>,
+        delta: &mut [f32],
         loss: f64,
         ctx: AbsorbCtx<'_>,
         lane: &mut LaneAcc,
         scratch: &mut Scratch,
     ) {
-        tensor::scale(self.client_lr, &mut delta);
-        let msg = ctx.ef.expect("EF residual missing").lock().unwrap().step(&delta);
-        let bits = msg.bits_on_wire();
-        msg.decode_into(&mut scratch.dense);
+        tensor::scale(self.client_lr, delta);
+        // Fused residual step + dequantize — no wire message materialized.
+        let bits = ctx
+            .ef
+            .expect("EF residual missing")
+            .lock()
+            .unwrap()
+            .step_dequantized_into(delta, &mut scratch.dense);
         // Undo the γ scaling so the server step stays η·γ·agg.
         lane.add_dense(&scratch.dense, ctx.inv_m / self.client_lr, bits, loss);
     }
@@ -392,15 +400,14 @@ impl Aggregator for QsgdAgg {
 
     fn absorb(
         &self,
-        delta: Vec<f32>,
+        delta: &mut [f32],
         loss: f64,
         ctx: AbsorbCtx<'_>,
         lane: &mut LaneAcc,
         scratch: &mut Scratch,
     ) {
-        let q = Qsgd::new(self.s).quantize(&delta, ctx.rng);
-        let bits = q.bits_on_wire();
-        q.decode_into(&mut scratch.dense);
+        let bits = self.nominal_client_bits(delta.len());
+        Qsgd::new(self.s).quantize_dequantize_into(delta, ctx.rng, &mut scratch.dense);
         lane.add_dense(&scratch.dense, ctx.inv_m, bits, loss);
     }
 
@@ -423,19 +430,20 @@ impl Aggregator for DpSignAgg {
 
     fn absorb(
         &self,
-        mut delta: Vec<f32>,
+        delta: &mut [f32],
         loss: f64,
         ctx: AbsorbCtx<'_>,
         lane: &mut LaneAcc,
-        _scratch: &mut Scratch,
+        scratch: &mut Scratch,
     ) {
-        tensor::scale(self.client_lr, &mut delta); // γ·Σg = x_{t-1} − x_E
-        tensor::clip_l2(&mut delta, self.clip as f64);
+        tensor::scale(self.client_lr, delta); // γ·Σg = x_{t-1} − x_E
+        tensor::clip_l2(delta, self.clip as f64);
         let noise_std = self.noise_mult * self.clip;
         for v in delta.iter_mut() {
             *v += noise_std * ctx.rng.normal() as f32;
         }
-        lane.add_signs(&PackedSigns::from_f32_signs(&delta), delta.len() as u64, loss);
+        kernel::pack_f32_signs_into(delta, &mut scratch.packed);
+        lane.add_signs(&scratch.packed, delta.len() as u64, loss);
     }
 
     fn reduce(&self, lanes: &[Mutex<LaneAcc>], update: &mut [f32]) -> ReduceStats {
@@ -457,20 +465,20 @@ impl Aggregator for DpDenseAgg {
 
     fn absorb(
         &self,
-        mut delta: Vec<f32>,
+        delta: &mut [f32],
         loss: f64,
         ctx: AbsorbCtx<'_>,
         lane: &mut LaneAcc,
         _scratch: &mut Scratch,
     ) {
-        tensor::scale(self.client_lr, &mut delta);
-        tensor::clip_l2(&mut delta, self.clip as f64);
+        tensor::scale(self.client_lr, delta);
+        tensor::clip_l2(delta, self.clip as f64);
         let noise_std = self.noise_mult * self.clip;
         for v in delta.iter_mut() {
             *v += noise_std * ctx.rng.normal() as f32;
         }
         let bits = 32 * delta.len() as u64;
-        lane.add_dense(&delta, ctx.inv_m, bits, loss);
+        lane.add_dense(delta, ctx.inv_m, bits, loss);
     }
 
     fn reduce(&self, lanes: &[Mutex<LaneAcc>], update: &mut [f32]) -> ReduceStats {
@@ -491,17 +499,21 @@ impl Aggregator for TopKAgg {
 
     fn absorb(
         &self,
-        delta: Vec<f32>,
+        delta: &mut [f32],
         loss: f64,
         ctx: AbsorbCtx<'_>,
         lane: &mut LaneAcc,
         scratch: &mut Scratch,
     ) {
-        let msg = TopK::new(self.frac).compress(&delta, ctx.rng);
-        let bits = msg.bits_on_wire();
-        if let Message::Sparse(sp) = &msg {
-            sp.decode_into(&mut scratch.dense);
+        // Fused select + scatter: what decode(compress(delta)) produces,
+        // without materializing the wire message.
+        let k = TopK::new(self.frac).k_for(delta.len());
+        top_k_indices_into(delta, k, &mut scratch.idx);
+        scratch.dense.iter_mut().for_each(|v| *v = 0.0);
+        for &i in &scratch.idx {
+            scratch.dense[i as usize] = delta[i as usize];
         }
+        let bits = self.nominal_client_bits(delta.len());
         lane.add_dense(&scratch.dense, ctx.inv_m, bits, loss);
     }
 
@@ -526,17 +538,24 @@ impl Aggregator for SparseSignAgg {
 
     fn absorb(
         &self,
-        delta: Vec<f32>,
+        delta: &mut [f32],
         loss: f64,
         ctx: AbsorbCtx<'_>,
         lane: &mut LaneAcc,
         scratch: &mut Scratch,
     ) {
-        let msg = SparseSign::new(self.frac, self.z, self.sigma).compress(&delta, ctx.rng);
-        let bits = msg.bits_on_wire();
-        if let Message::Sparse(sp) = &msg {
-            sp.decode_into(&mut scratch.dense);
+        // Fused select + stochastic-sign + scatter, RNG draws in the same
+        // (sorted-support) order the wire compressor uses.
+        let k = TopK::new(self.frac).k_for(delta.len());
+        top_k_indices_into(delta, k, &mut scratch.idx);
+        let scale = (scratch.idx.iter().map(|&i| delta[i as usize].abs() as f64).sum::<f64>()
+            / k as f64) as f32;
+        scratch.dense.iter_mut().for_each(|v| *v = 0.0);
+        for &i in &scratch.idx {
+            let v = delta[i as usize] as f64 + self.sigma as f64 * ctx.rng.z_noise(self.z);
+            scratch.dense[i as usize] = if v >= 0.0 { scale } else { -scale };
         }
+        let bits = self.nominal_client_bits(delta.len());
         lane.add_dense(&scratch.dense, ctx.inv_m, bits, loss);
     }
 
@@ -608,8 +627,9 @@ mod tests {
                     let client = perm[slot];
                     let mut crng = Pcg64::new(77, client as u64);
                     let mut scratch = Scratch::new(d);
+                    let mut delta = deltas[client].clone();
                     agg.absorb(
-                        deltas[client].clone(),
+                        &mut delta,
                         client as f64,
                         ctx(&mut crng),
                         &mut lanes[lane].lock().unwrap(),
@@ -656,8 +676,9 @@ mod tests {
             for &lane in lane_order {
                 for slot in topo.lane_slots(lane) {
                     let mut crng = Pcg64::new(3, slot as u64);
+                    let mut delta = deltas[slot].clone();
                     agg.absorb(
-                        deltas[slot].clone(),
+                        &mut delta,
                         0.5 * slot as f64,
                         ctx(&mut crng),
                         &mut lanes[lane].lock().unwrap(),
@@ -706,8 +727,9 @@ mod tests {
                 ef: None,
                 hook: None,
             };
+            let mut delta = deltas[slot].clone();
             agg.absorb(
-                deltas[slot].clone(),
+                &mut delta,
                 0.0,
                 c,
                 &mut lanes[topo.lane_of(slot)].lock().unwrap(),
@@ -732,10 +754,10 @@ mod tests {
         let mut scratch = Scratch::new(d);
         let mut rng = Pcg64::seeded(2);
         for slot in 0..m {
-            let delta = random_delta(&mut rng, d);
+            let mut delta = random_delta(&mut rng, d);
             let mut crng = Pcg64::new(4, slot as u64);
             agg.absorb(
-                delta,
+                &mut delta,
                 0.0,
                 ctx(&mut crng),
                 &mut lanes[topo.lane_of(slot)].lock().unwrap(),
@@ -756,9 +778,9 @@ mod tests {
         let mut scratch = Scratch::new(d);
         for slot in 0..6usize {
             let mut crng = Pcg64::new(8, slot as u64);
-            let delta = random_delta(&mut crng.split(1), d);
+            let mut delta = random_delta(&mut crng.split(1), d);
             agg.absorb(
-                delta,
+                &mut delta,
                 0.0,
                 ctx(&mut crng),
                 &mut lanes[slot % 2].lock().unwrap(),
@@ -787,8 +809,8 @@ mod tests {
             let lanes = mk_lanes(1, d);
             let mut scratch = Scratch::new(d);
             let mut rng = Pcg64::seeded(3);
-            let delta = random_delta(&mut rng.split(9), d);
-            agg.absorb(delta, 0.0, ctx(&mut rng), &mut lanes[0].lock().unwrap(), &mut scratch);
+            let mut delta = random_delta(&mut rng.split(9), d);
+            agg.absorb(&mut delta, 0.0, ctx(&mut rng), &mut lanes[0].lock().unwrap(), &mut scratch);
             assert_eq!(lanes[0].lock().unwrap().bits(), agg.nominal_client_bits(d));
         }
         // EF separately (needs a residual).
@@ -797,7 +819,7 @@ mod tests {
         let lanes = mk_lanes(1, d);
         let mut scratch = Scratch::new(d);
         let mut rng = Pcg64::seeded(4);
-        let delta = random_delta(&mut rng.split(2), d);
+        let mut delta = random_delta(&mut rng.split(2), d);
         let c = AbsorbCtx {
             rng: &mut rng,
             round_sigma: 0.0,
@@ -805,7 +827,7 @@ mod tests {
             ef: Some(&ef),
             hook: None,
         };
-        ef_agg.absorb(delta, 0.0, c, &mut lanes[0].lock().unwrap(), &mut scratch);
+        ef_agg.absorb(&mut delta, 0.0, c, &mut lanes[0].lock().unwrap(), &mut scratch);
         assert_eq!(lanes[0].lock().unwrap().bits(), ef_agg.nominal_client_bits(d));
     }
 
@@ -817,8 +839,8 @@ mod tests {
         let lanes = mk_lanes(1, d);
         let mut scratch = Scratch::new(d);
         let mut rng = Pcg64::seeded(6);
-        let delta = random_delta(&mut rng.split(7), d);
-        agg.absorb(delta, 1.5, ctx(&mut rng), &mut lanes[0].lock().unwrap(), &mut scratch);
+        let mut delta = random_delta(&mut rng.split(7), d);
+        agg.absorb(&mut delta, 1.5, ctx(&mut rng), &mut lanes[0].lock().unwrap(), &mut scratch);
         let mut lane = lanes[0].lock().unwrap();
         assert!(lane.bits() > 0 && lane.arrived() == 1);
         lane.reset();

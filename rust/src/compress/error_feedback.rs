@@ -43,12 +43,7 @@ impl EfMessage {
     }
 
     pub fn decode_into(&self, out: &mut [f32]) {
-        assert_eq!(out.len(), self.signs.len());
-        let mut s = vec![0i8; self.signs.len()];
-        self.signs.unpack_into(&mut s);
-        for (o, &si) in out.iter_mut().zip(&s) {
-            *o = self.scale * si as f32;
-        }
+        self.signs.decode_scaled_into(self.scale, out);
     }
 }
 
@@ -77,6 +72,31 @@ impl EfState {
             *r = u - scale * s;
         }
         EfMessage { scale, signs }
+    }
+
+    /// Fused step + dequantize: update the residual and write `decode(msg)`
+    /// straight into `out`, skipping the wire message entirely — the
+    /// aggregation seam folds the decoded vector anyway. Returns the exact
+    /// wire bits of the message that *would* have been sent (`d + 32`).
+    /// Bit-identical to `step` + `EfMessage::decode_into` (pinned below):
+    /// the decoded coordinate is `scale * (±1.0)`, exactly the product the
+    /// residual update already computes.
+    pub fn step_dequantized_into(&mut self, update: &[f32], out: &mut [f32]) -> u64 {
+        assert_eq!(update.len(), self.residual.len());
+        assert_eq!(out.len(), update.len());
+        let d = update.len();
+        // u = residual + update
+        for ((u, &r), &p) in self.u.iter_mut().zip(&self.residual).zip(update) {
+            *u = r + p;
+        }
+        let scale = (tensor::norm_p(&self.u, 1.0) / d as f64) as f32;
+        // residual = u - scale * sign(u);  out = scale * sign(u)
+        for ((r, o), &u) in self.residual.iter_mut().zip(out.iter_mut()).zip(&self.u) {
+            let dec = scale * if u >= 0.0 { 1.0f32 } else { -1.0 };
+            *o = dec;
+            *r = u - dec;
+        }
+        d as u64 + 32
     }
 }
 
@@ -122,6 +142,33 @@ mod tests {
                 let n2sq = tensor::norm2_sq(&u);
                 let delta = n1 * n1 / (d as f64 * n2sq);
                 assert!(err <= (1.0 - delta) * n2sq + 1e-6, "d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_step_matches_step_plus_decode() {
+        // The seam's fused path: identical residual trajectory and decoded
+        // vector, bit for bit, across multiple rounds of state.
+        let mut rng = Pcg64::seeded(8);
+        let d = 131;
+        let mut ef_a = EfState::new(d);
+        let mut ef_b = EfState::new(d);
+        let mut dec_a = vec![0.0f32; d];
+        let mut dec_b = vec![0.0f32; d];
+        for step in 0..10 {
+            let update: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let msg = ef_a.step(&update);
+            msg.decode_into(&mut dec_a);
+            let bits = ef_b.step_dequantized_into(&update, &mut dec_b);
+            assert_eq!(bits, msg.bits_on_wire(), "step={step}");
+            for j in 0..d {
+                assert_eq!(dec_a[j].to_bits(), dec_b[j].to_bits(), "step={step} j={j}");
+                assert_eq!(
+                    ef_a.residual()[j].to_bits(),
+                    ef_b.residual()[j].to_bits(),
+                    "step={step} j={j}"
+                );
             }
         }
     }

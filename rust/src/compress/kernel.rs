@@ -1,0 +1,130 @@
+//! Fused one-pass sign kernels: perturb → sign → pack without the i8 detour.
+//!
+//! The scalar reference path (`StochasticSign::compress_into` followed by
+//! `PackedSigns::from_signs`) walks the coordinates twice and materializes a
+//! d-byte i8 buffer between the walks. These kernels do the whole thing in
+//! one pass — draw the z-noise for a 64-coordinate block, compare, and set
+//! bits branchlessly straight into the packed `u64` words — with zero heap
+//! allocation when the output buffer is reused via [`PackedSigns::reset_for`].
+//!
+//! ## The RNG stream contract
+//!
+//! The kernels are **bit-identical** to the scalar reference path, which
+//! pins the contract both must obey:
+//!
+//! * exactly one z-noise value is drawn per coordinate, in coordinate
+//!   order, from the client's own `Pcg64` stream (block filling via
+//!   [`Pcg64::fill_z_noise_f64`] preserves the draw sequence, cached
+//!   Gaussian spare included);
+//! * the perturbation arithmetic is `x[j] as f64 + sigma as f64 * ξ[j]`
+//!   with the sign taken as `>= 0.0`;
+//! * `sigma == 0.0` draws nothing at all (the deterministic SignSGD path).
+//!
+//! Any change to either side breaks every seeded experiment in the repo;
+//! `tests/hotpath_exactness.rs` pins the equivalence across boundary
+//! lengths, all `ZParam` families and all `SigmaRule`s.
+
+use super::pack::PackedSigns;
+use crate::rng::{Pcg64, ZParam};
+
+/// Coordinates per noise block: one packed word, filled in one RNG call.
+const BLOCK: usize = 64;
+
+/// Fused `Sign(x + σ·ξ_z)` into a reusable packed buffer. Draws nothing
+/// when `sigma == 0.0` (vanilla SignSGD), exactly like the scalar path.
+pub fn stochastic_sign_packed(
+    x: &[f32],
+    z: ZParam,
+    sigma: f32,
+    rng: &mut Pcg64,
+    out: &mut PackedSigns,
+) {
+    out.reset_for(x.len());
+    if sigma == 0.0 {
+        pack_into_words(x, out);
+        return;
+    }
+    let s = sigma as f64;
+    let mut noise = [0.0f64; BLOCK];
+    let words = out.words_mut();
+    for (chunk, word) in x.chunks(BLOCK).zip(words.iter_mut()) {
+        let nb = &mut noise[..chunk.len()];
+        rng.fill_z_noise_f64(z, nb);
+        let mut w = 0u64;
+        for (b, (&xi, &nz)) in chunk.iter().zip(nb.iter()).enumerate() {
+            w |= ((xi as f64 + s * nz >= 0.0) as u64) << b;
+        }
+        *word = w;
+    }
+}
+
+/// Fused `Sign(x)` (Sign(0) = +1) into a reusable packed buffer — the
+/// allocation-free equivalent of [`PackedSigns::from_f32_signs`].
+pub fn pack_f32_signs_into(x: &[f32], out: &mut PackedSigns) {
+    out.reset_for(x.len());
+    pack_into_words(x, out);
+}
+
+/// Branchless sign-bit pack of `x` into `out`'s words (`out` already shaped
+/// for `x.len()`; trailing bits of a partial last block stay zero).
+fn pack_into_words(x: &[f32], out: &mut PackedSigns) {
+    let words = out.words_mut();
+    for (chunk, word) in x.chunks(BLOCK).zip(words.iter_mut()) {
+        let mut w = 0u64;
+        for (b, &xi) in chunk.iter().enumerate() {
+            w |= ((xi >= 0.0) as u64) << b;
+        }
+        *word = w;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::sign::{SigmaRule, StochasticSign};
+
+    fn gen(rng: &mut Pcg64, d: usize) -> Vec<f32> {
+        (0..d).map(|_| rng.uniform_in(-2.0, 2.0) as f32).collect()
+    }
+
+    #[test]
+    fn fused_matches_scalar_reference_path() {
+        // The in-module smoke version of the contract; the full matrix
+        // (all SigmaRules × boundary lengths) lives in
+        // tests/hotpath_exactness.rs.
+        for z in [ZParam::Finite(1), ZParam::Finite(2), ZParam::Inf] {
+            for sigma in [0.0f32, 0.8] {
+                for d in [0usize, 1, 64, 65, 130] {
+                    let mut data_rng = Pcg64::seeded(7);
+                    let x = gen(&mut data_rng, d);
+                    let mut ra = Pcg64::new(11, 3);
+                    let mut rb = ra.clone();
+                    let mut comp = StochasticSign::new(z, SigmaRule::Fixed(sigma));
+                    let mut signs = vec![0i8; d];
+                    comp.compress_into(&x, &mut ra, &mut signs);
+                    let want = PackedSigns::from_signs(&signs);
+                    let mut got = PackedSigns::zeroed(0);
+                    stochastic_sign_packed(&x, z, sigma, &mut rb, &mut got);
+                    assert_eq!(got, want, "z={z} sigma={sigma} d={d}");
+                    assert_eq!(ra.next_u64(), rb.next_u64(), "z={z} sigma={sigma} d={d}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_f32_signs_into_matches_naive_pack() {
+        // Compare against an independent i8-based pack (not from_f32_signs,
+        // which now routes through this very kernel).
+        let mut rng = Pcg64::seeded(5);
+        let mut out = PackedSigns::zeroed(0);
+        for d in [0usize, 1, 63, 64, 65, 200] {
+            let x = gen(&mut rng, d);
+            pack_f32_signs_into(&x, &mut out);
+            let signs: Vec<i8> =
+                x.iter().map(|&v| if v >= 0.0 { 1i8 } else { -1 }).collect();
+            assert_eq!(out, PackedSigns::from_signs(&signs), "d={d}");
+            assert_eq!(out.len(), d);
+        }
+    }
+}

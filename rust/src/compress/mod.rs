@@ -7,7 +7,11 @@
 //!   (Section 2), the deterministic SignSGD operator, and the
 //!   input-dependent Sto-SignSGD operator of Safaryan–Richtárik '21.
 //! * [`pack`] — the 1-bit wire codec (sign vector ↔ packed `u64` words) and
-//!   the popcount-based vote accumulator used by the server hot path.
+//!   the carry-save (Harley–Seal) bit-sliced vote accumulator used by the
+//!   server hot path.
+//! * [`kernel`] — the fused one-pass perturb→sign→pack client kernels
+//!   (bit-identical to the scalar reference path in [`sign`]; see the RNG
+//!   stream contract there and in DESIGN.md).
 //! * [`qsgd`] — the unbiased stochastic quantizer of Alistarh et al. '17
 //!   (Definition 2 in the paper's appendix), used by the QSGD/FedPAQ
 //!   baselines of Appendix E.
@@ -23,6 +27,7 @@
 
 pub mod agg;
 pub mod error_feedback;
+pub mod kernel;
 pub mod pack;
 pub mod qsgd;
 pub mod sign;

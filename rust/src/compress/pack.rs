@@ -35,13 +35,30 @@ impl PackedSigns {
 
     /// Pack directly from the sign of an f32 buffer (Sign(x) with Sign(0)=+1).
     pub fn from_f32_signs(x: &[f32]) -> Self {
-        let mut words = vec![0u64; x.len().div_ceil(64)];
-        for (j, &v) in x.iter().enumerate() {
-            if v >= 0.0 {
-                words[j / 64] |= 1u64 << (j % 64);
-            }
-        }
-        PackedSigns { words, len: x.len() }
+        let mut p = PackedSigns::zeroed(x.len());
+        super::kernel::pack_f32_signs_into(x, &mut p);
+        p
+    }
+
+    /// An all-(−1) buffer of `len` coordinates, intended for reuse through
+    /// [`PackedSigns::reset_for`] by the fused kernels (`compress::kernel`).
+    pub fn zeroed(len: usize) -> Self {
+        PackedSigns { words: vec![0u64; len.div_ceil(64)], len }
+    }
+
+    /// Re-shape for `len` coordinates and zero every word. Allocates only
+    /// when `len` grows past any previous capacity — the reuse seam that
+    /// keeps per-client compression allocation-free in the round loop.
+    pub fn reset_for(&mut self, len: usize) {
+        self.words.clear();
+        self.words.resize(len.div_ceil(64), 0);
+        self.len = len;
+    }
+
+    /// Mutable word access for the fused kernels. Invariant to uphold:
+    /// trailing bits of the last word beyond `len` must stay zero.
+    pub(crate) fn words_mut(&mut self) -> &mut [u64] {
+        &mut self.words
     }
 
     /// Build from u32 words as emitted by the AOT packed-compress artifact
@@ -99,30 +116,72 @@ impl PackedSigns {
     pub fn count_plus(&self) -> usize {
         self.words.iter().map(|w| w.count_ones() as usize).sum()
     }
+
+    /// Write `±scale` per coordinate directly from the packed words —
+    /// bit-identical to unpacking to i8 and multiplying (`scale * 1.0` is
+    /// `scale`, `scale * -1.0` is the exact IEEE negation), without the i8
+    /// round-trip.
+    pub fn decode_scaled_into(&self, scale: f32, out: &mut [f32]) {
+        assert_eq!(out.len(), self.len);
+        for (chunk, &w) in out.chunks_mut(64).zip(&self.words) {
+            for (b, o) in chunk.iter_mut().enumerate() {
+                *o = if w >> b & 1 == 1 { scale } else { -scale };
+            }
+        }
+    }
 }
 
 /// Server-side sign-vote accumulator.
 ///
-/// Accumulates `sum_i s_i[j]` (each `s_i[j] ∈ {−1,+1}`) for n clients. The
-/// trick: per word, track the number of participants `n` and the running
-/// count of +1 bits per coordinate in a byte-sliced counter when n is small,
-/// or a plain i32 buffer when unpacking is cheaper. We keep the simple exact
-/// i32 representation but *add* packed words 4-at-a-time with bit expansion,
-/// which profiles ~6× faster than `get()`-per-coordinate.
+/// Accumulates `sum_i s_i[j]` (each `s_i[j] ∈ {−1,+1}`) for n clients,
+/// Harley–Seal style: incoming packed words are folded into four bit-sliced
+/// carry-save planes (`ones/twos/fours/eights` — 64 independent 4-bit
+/// column counters per machine word, 8 SWAR ops per 64 votes), and the
+/// planes spill into the exact per-coordinate `i32` counts only every
+/// [`VoteAccumulator::SPILL_BATCH`] clients. That replaces the pre-CSA
+/// per-client blanket decrement + set-bit walk (which touched the whole
+/// 4·d-byte count buffer for every client) with d/8 bytes of plane traffic
+/// per client plus an amortized expansion — see `benches/bench_aggregate.rs`
+/// for the measured ratio. All arithmetic is exact integers, so spill
+/// timing, shard merging and lane order can never change the result.
+/// Number of carry-save planes: column counters saturate at 2^PLANES − 1,
+/// which sets the spill batch.
+const VOTE_PLANES: usize = 4;
+
 #[derive(Debug, Clone)]
 pub struct VoteAccumulator {
-    counts: Vec<i32>, // sum of ±1 votes per coordinate
+    counts: Vec<i32>, // sum of ±1 votes per coordinate (spilled state)
+    /// Carry-save planes: plane p holds bit p of each coordinate's count of
+    /// still-unspilled +1 votes. Trailing bits beyond `len` stay zero
+    /// because every absorbed `PackedSigns` keeps them zero.
+    planes: [Vec<u64>; VOTE_PLANES],
+    /// Clients folded into the planes since the last spill (≤ SPILL_BATCH).
+    pending: u32,
     n: u32,
     len: usize,
 }
 
 impl VoteAccumulator {
+    /// Clients per carry-save batch: 4 planes hold column counts up to 15.
+    pub const SPILL_BATCH: u32 = (1 << VOTE_PLANES) - 1;
+
     pub fn new(len: usize) -> Self {
-        VoteAccumulator { counts: vec![0; len], n: 0, len }
+        let nw = len.div_ceil(64);
+        VoteAccumulator {
+            counts: vec![0; len],
+            planes: std::array::from_fn(|_| vec![0u64; nw]),
+            pending: 0,
+            n: 0,
+            len,
+        }
     }
 
     pub fn reset(&mut self) {
         self.counts.iter_mut().for_each(|c| *c = 0);
+        for p in self.planes.iter_mut() {
+            p.iter_mut().for_each(|w| *w = 0);
+        }
+        self.pending = 0;
         self.n = 0;
     }
 
@@ -140,28 +199,55 @@ impl VoteAccumulator {
 
     /// Add one client's packed signs: counts[j] += ±1.
     ///
-    /// Implementation note: adding a ±1 vote is `counts[j] += 2*bit - 1`,
-    /// i.e. `+= 1` where the bit is set after a blanket `-= 1`. We walk the
-    /// set bits of each word (`trailing_zeros` loop), which is O(d/64 +
-    /// popcount) — for the near-balanced sign vectors this workload
-    /// produces, that's ~half the work of a per-coordinate loop, and the
-    /// blanket decrement vectorizes.
+    /// Carry-save add: ripple the incoming word through the planes
+    /// (`sum = a ^ b`, `carry = a & b` per plane). With at most
+    /// `SPILL_BATCH = 15` pending clients a column counter never exceeds
+    /// 15, so no carry ever leaves the top plane before the spill.
     pub fn add(&mut self, signs: &PackedSigns) {
         assert_eq!(signs.len(), self.len, "vote length mismatch");
-        for c in self.counts.iter_mut() {
-            *c -= 1;
-        }
         for (wi, &w) in signs.words.iter().enumerate() {
-            let mut bits = w;
-            let base = wi * 64;
-            while bits != 0 {
-                let j = bits.trailing_zeros() as usize;
-                // Safe: trailing bits of the last word are never set.
-                self.counts[base + j] += 2;
-                bits &= bits - 1;
+            let mut carry = w;
+            for plane in self.planes.iter_mut() {
+                let t = plane[wi];
+                plane[wi] = t ^ carry;
+                carry &= t;
+            }
+            debug_assert_eq!(carry, 0, "CSA overflow before spill");
+        }
+        self.pending += 1;
+        self.n += 1;
+        if self.pending == Self::SPILL_BATCH {
+            self.spill();
+        }
+    }
+
+    /// Expand `pending` clients' worth of planes into `counts`: a column
+    /// with `plus` set bits contributes `2·plus − pending` (each of the
+    /// `pending` votes is +1 or −1). Runs once per batch, so the blanket
+    /// `− pending` replaces the old per-client blanket decrement.
+    fn spill_planes_into(planes: &[Vec<u64>; VOTE_PLANES], pending: u32, counts: &mut [i32]) {
+        if pending == 0 {
+            return;
+        }
+        let pend = pending as i32;
+        for (wi, chunk) in counts.chunks_mut(64).enumerate() {
+            let (p0, p1) = (planes[0][wi], planes[1][wi]);
+            let (p2, p3) = (planes[2][wi], planes[3][wi]);
+            for (b, c) in chunk.iter_mut().enumerate() {
+                let plus = (p0 >> b & 1) + 2 * (p1 >> b & 1) + 4 * (p2 >> b & 1)
+                    + 8 * (p3 >> b & 1);
+                *c += 2 * plus as i32 - pend;
             }
         }
-        self.n += 1;
+    }
+
+    /// Spill the carry-save planes into the exact counts and clear them.
+    fn spill(&mut self) {
+        Self::spill_planes_into(&self.planes, self.pending, &mut self.counts);
+        for p in self.planes.iter_mut() {
+            p.iter_mut().for_each(|w| *w = 0);
+        }
+        self.pending = 0;
     }
 
     /// Fold another accumulator's votes into this one (shard reduction).
@@ -169,26 +255,31 @@ impl VoteAccumulator {
     /// The parallel round engine gives each worker thread its own shard and
     /// reduces them here; vote counts are integers, so the merge is exact
     /// and order-independent — the foundation of the engine's bit-exact
-    /// determinism guarantee across thread counts.
+    /// determinism guarantee across thread counts. `other`'s unspilled
+    /// planes are expanded on the fly without mutating it.
     pub fn merge(&mut self, other: &VoteAccumulator) {
         assert_eq!(other.len, self.len, "vote length mismatch");
+        self.spill();
         for (c, &o) in self.counts.iter_mut().zip(&other.counts) {
             *c += o;
         }
+        Self::spill_planes_into(&other.planes, other.pending, &mut self.counts);
         self.n += other.n;
     }
 
-    /// The raw vote counts (`sum_i s_i[j]`).
-    pub fn counts(&self) -> &[i32] {
+    /// The raw vote counts (`sum_i s_i[j]`); spills any pending batch first.
+    pub fn counts(&mut self) -> &[i32] {
+        self.spill();
         &self.counts
     }
 
     /// Write `scale * mean_vote[j]` into `out` — the server's dequantized
     /// aggregate `η_z σ · (1/n) Σ_i Sign(...)` (Algorithm 1, line 15 folds
     /// the η·γ stepsize into `scale`).
-    pub fn mean_into(&self, scale: f32, out: &mut [f32]) {
+    pub fn mean_into(&mut self, scale: f32, out: &mut [f32]) {
         assert_eq!(out.len(), self.len);
         assert!(self.n > 0, "no votes accumulated");
+        self.spill();
         let k = scale / self.n as f32;
         for (o, &c) in out.iter_mut().zip(&self.counts) {
             *o = k * c as f32;
@@ -196,13 +287,17 @@ impl VoteAccumulator {
     }
 
     /// Majority-vote signs (used by the SignSGD-with-majority-vote ablation;
-    /// ties resolve to +1, consistent with Sign(0) = +1).
-    pub fn majority(&self) -> PackedSigns {
-        let mut signs = vec![0i8; self.len];
-        for (s, &c) in signs.iter_mut().zip(&self.counts) {
-            *s = if c >= 0 { 1 } else { -1 };
+    /// ties resolve to +1, consistent with Sign(0) = +1). Builds the packed
+    /// words straight from the counts — no i8 round-trip.
+    pub fn majority(&mut self) -> PackedSigns {
+        self.spill();
+        let mut out = PackedSigns::zeroed(self.len);
+        for (w, chunk) in out.words.iter_mut().zip(self.counts.chunks(64)) {
+            for (b, &c) in chunk.iter().enumerate() {
+                *w |= ((c >= 0) as u64) << b;
+            }
         }
-        PackedSigns::from_signs(&signs)
+        out
     }
 }
 
@@ -289,6 +384,92 @@ mod tests {
         }
         assert_eq!(acc.counts(), &naive[..]);
         assert_eq!(acc.num_votes(), n as u32);
+    }
+
+    #[test]
+    fn csa_spill_batches_match_naive_counts() {
+        // n sweeps through 3× the carry-save batch so adds cross several
+        // spill boundaries; reads mid-batch must flush exactly.
+        let b = VoteAccumulator::SPILL_BATCH as usize;
+        let mut rng = Pcg64::seeded(71);
+        for d in [1usize, 63, 64, 65, 127, 128, 1000] {
+            let mut acc = VoteAccumulator::new(d);
+            let mut naive = vec![0i32; d];
+            for i in 1..=3 * b {
+                let s = random_signs(&mut rng, d);
+                for (c, &v) in naive.iter_mut().zip(&s) {
+                    *c += v as i32;
+                }
+                acc.add(&PackedSigns::from_signs(&s));
+                if i % 7 == 0 || i % b == 0 {
+                    assert_eq!(acc.counts(), &naive[..], "d={d} after {i} adds");
+                }
+            }
+            assert_eq!(acc.counts(), &naive[..], "d={d} final");
+            assert_eq!(acc.num_votes(), (3 * b) as u32);
+        }
+    }
+
+    #[test]
+    fn merge_flushes_pending_batches_on_both_sides() {
+        // Merge with unspilled planes on self *and* other must equal the
+        // sequential accumulation (merge expands other without mutating it).
+        let mut rng = Pcg64::seeded(72);
+        let d = 130;
+        let signs: Vec<PackedSigns> =
+            (0..11).map(|_| PackedSigns::from_signs(&random_signs(&mut rng, d))).collect();
+        let mut want = VoteAccumulator::new(d);
+        for s in &signs {
+            want.add(s);
+        }
+        let mut a = VoteAccumulator::new(d);
+        let mut b = VoteAccumulator::new(d);
+        for s in &signs[..4] {
+            a.add(s); // 4 pending, below the spill batch
+        }
+        for s in &signs[4..] {
+            b.add(s); // 7 pending
+        }
+        let b_counts_before: Vec<i32> = {
+            let mut probe = b.clone();
+            probe.counts().to_vec()
+        };
+        a.merge(&b);
+        assert_eq!(a.counts(), want.counts());
+        assert_eq!(a.num_votes(), 11);
+        // `other` was not mutated by the merge.
+        let mut b_after = b.clone();
+        assert_eq!(b_after.counts(), &b_counts_before[..]);
+    }
+
+    #[test]
+    fn decode_scaled_matches_unpack_multiply() {
+        let mut rng = Pcg64::seeded(73);
+        for d in [0usize, 1, 64, 65, 257] {
+            for scale in [0.0f32, 1.5, -0.25] {
+                let s = random_signs(&mut rng, d);
+                let p = PackedSigns::from_signs(&s);
+                let mut got = vec![0.0f32; d];
+                p.decode_scaled_into(scale, &mut got);
+                for (j, (&g, &si)) in got.iter().zip(&s).enumerate() {
+                    let want = scale * si as f32;
+                    assert_eq!(g.to_bits(), want.to_bits(), "d={d} scale={scale} j={j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reset_for_reuses_and_zeroes() {
+        let mut p = PackedSigns::from_signs(&[1, 1, 1]);
+        assert_eq!(p.count_plus(), 3);
+        p.reset_for(130);
+        assert_eq!(p.len(), 130);
+        assert_eq!(p.count_plus(), 0);
+        assert_eq!(p.words().len(), 3);
+        p.reset_for(2);
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.words().len(), 1);
     }
 
     #[test]

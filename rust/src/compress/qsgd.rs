@@ -72,6 +72,36 @@ impl Qsgd {
         }
         Quantized { norm, levels, s: self.s }
     }
+
+    /// Fused quantize + dequantize into `out` — what the aggregation seam
+    /// folds — without materializing the `Quantized` levels buffer. RNG
+    /// draws and arithmetic are exactly `quantize` followed by
+    /// `Quantized::decode_into` (pinned by `fused_matches_quantize_decode`),
+    /// so the streamed round reduce stays bit-identical while dropping the
+    /// per-client O(d) allocation.
+    pub fn quantize_dequantize_into(&self, x: &[f32], rng: &mut Pcg64, out: &mut [f32]) {
+        assert_eq!(out.len(), x.len());
+        let norm = tensor::norm2(x) as f32;
+        let k = norm / self.s as f32;
+        if norm > 0.0 {
+            let s = self.s as f32;
+            for (o, &xi) in out.iter_mut().zip(x) {
+                let r = xi.abs() / norm * s; // in [0, s]
+                let lo = r.floor();
+                let p_hi = (r - lo) as f64;
+                let mut lvl = lo as i16;
+                if rng.uniform() < p_hi {
+                    lvl += 1;
+                }
+                let l = if xi >= 0.0 { lvl } else { -lvl };
+                *o = k * l as f32;
+            }
+        } else {
+            // quantize leaves all levels 0 and draws nothing; decode then
+            // writes k·0 = +0.0 everywhere.
+            out.iter_mut().for_each(|o| *o = 0.0);
+        }
+    }
 }
 
 impl Compressor for Qsgd {
@@ -157,6 +187,37 @@ mod tests {
         let bound = (d as f64 / (s * s) as f64).min((d as f64).sqrt() / s as f64)
             * tensor::norm2_sq(&x);
         assert!(mean_err <= bound * 1.05, "mean_err={mean_err} bound={bound}");
+    }
+
+    #[test]
+    fn fused_matches_quantize_decode() {
+        // The seam's fused path must equal quantize → decode bit for bit,
+        // with identical RNG consumption.
+        for s in [1u32, 2, 4, 15] {
+            for d in [0usize, 1, 64, 65, 513] {
+                let q = Qsgd::new(s);
+                let mut data_rng = Pcg64::seeded(31);
+                let x: Vec<f32> = (0..d).map(|_| data_rng.normal() as f32).collect();
+                let mut ra = Pcg64::new(9, 1);
+                let mut rb = ra.clone();
+                let mut want = vec![0.0f32; d];
+                q.quantize(&x, &mut ra).decode_into(&mut want);
+                let mut got = vec![0.0f32; d];
+                q.quantize_dequantize_into(&x, &mut rb, &mut got);
+                for (j, (w, g)) in want.iter().zip(&got).enumerate() {
+                    assert_eq!(w.to_bits(), g.to_bits(), "s={s} d={d} j={j}");
+                }
+                assert_eq!(ra.next_u64(), rb.next_u64(), "s={s} d={d} rng state");
+            }
+        }
+        // Zero vector: no draws, all +0.0.
+        let q = Qsgd::new(2);
+        let mut rng = Pcg64::seeded(4);
+        let before = rng.clone().next_u64();
+        let mut out = [1.0f32; 4];
+        q.quantize_dequantize_into(&[0.0; 4], &mut rng, &mut out);
+        assert!(out.iter().all(|o| o.to_bits() == 0.0f32.to_bits()));
+        assert_eq!(rng.next_u64(), before);
     }
 
     #[test]

@@ -58,7 +58,14 @@ impl StochasticSign {
         }
     }
 
-    /// Compress into a reusable i8 buffer (no allocation on the hot path).
+    /// Compress into a reusable i8 buffer — the **scalar reference path**.
+    ///
+    /// The production hot path is the fused kernel
+    /// (`compress::kernel::stochastic_sign_packed`), which must stay
+    /// bit-identical to this loop: one z-noise draw per coordinate in
+    /// coordinate order, perturbation in f64, sign taken as `>= 0.0`, and
+    /// no draws at all when σ = 0. `tests/hotpath_exactness.rs` pins the
+    /// equivalence, so keep the two in lockstep when touching either.
     pub fn compress_into(&mut self, x: &[f32], rng: &mut Pcg64, out: &mut [i8]) {
         assert_eq!(x.len(), out.len());
         let sigma = self.effective_sigma(x);
@@ -77,22 +84,19 @@ impl StochasticSign {
 
 impl Compressor for StochasticSign {
     fn compress(&mut self, delta: &[f32], rng: &mut Pcg64) -> Message {
-        let mut signs = vec![0i8; delta.len()];
-        self.compress_into(delta, rng, &mut signs);
-        Message::Signs(PackedSigns::from_signs(&signs))
+        let sigma = self.effective_sigma(delta);
+        self.last_sigma = sigma;
+        let mut packed = PackedSigns::zeroed(delta.len());
+        super::kernel::stochastic_sign_packed(delta, self.z, sigma, rng, &mut packed);
+        Message::Signs(packed)
     }
 
     fn decode_into(&self, msg: &Message, out: &mut [f32]) {
-        // Dequantize a single message: η_z · σ · sign  (Lemma 1's estimator).
+        // Dequantize a single message: η_z · σ · sign  (Lemma 1's estimator),
+        // straight from the packed words — no i8 round-trip.
         let scale = (self.z.eta() as f32) * self.last_sigma;
         match msg {
-            Message::Signs(p) => {
-                let mut signs = vec![0i8; p.len()];
-                p.unpack_into(&mut signs);
-                for (o, s) in out.iter_mut().zip(&signs) {
-                    *o = scale * *s as f32;
-                }
-            }
+            Message::Signs(p) => p.decode_scaled_into(scale, out),
             _ => panic!("StochasticSign::decode_into on non-sign message"),
         }
     }

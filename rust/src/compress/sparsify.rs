@@ -48,8 +48,18 @@ impl SparseMessage {
 
 /// Indices of the k largest-|x| entries (O(d) selection via partial sort).
 pub fn top_k_indices(x: &[f32], k: usize) -> Vec<u32> {
+    let mut idx = Vec::new();
+    top_k_indices_into(x, k, &mut idx);
+    idx
+}
+
+/// [`top_k_indices`] into a reusable buffer: after warm-up the selection
+/// performs no heap allocation (the aggregation seam's per-worker scratch
+/// reuses `idx` across clients and rounds).
+pub fn top_k_indices_into(x: &[f32], k: usize, idx: &mut Vec<u32>) {
     let k = k.min(x.len());
-    let mut idx: Vec<u32> = (0..x.len() as u32).collect();
+    idx.clear();
+    idx.extend(0..x.len() as u32);
     idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
         x[b as usize]
             .abs()
@@ -58,7 +68,6 @@ pub fn top_k_indices(x: &[f32], k: usize) -> Vec<u32> {
     });
     idx.truncate(k);
     idx.sort_unstable(); // deterministic order for the wire
-    idx
 }
 
 /// Magnitude top-k compressor (k = ceil(frac·d)).

@@ -21,6 +21,33 @@ pub struct LocalOutcome {
     pub mean_loss: f64,
 }
 
+/// Reusable per-worker buffers for the `*_into` local-update entry points
+/// (the iterate and gradient of the E-step loop). Owned by the round
+/// engine's `RoundScratch` pool with round lifetime, so the steady-state
+/// round loop performs no per-client heap allocation.
+#[derive(Debug, Default)]
+pub struct LocalScratch {
+    x: Vec<f32>,
+    g: Vec<f32>,
+}
+
+impl LocalScratch {
+    pub fn new() -> LocalScratch {
+        LocalScratch::default()
+    }
+
+    /// Both buffers sized to `d` (allocating only on growth).
+    fn xg(&mut self, d: usize) -> (&mut [f32], &mut [f32]) {
+        if self.x.len() != d {
+            self.x.resize(d, 0.0);
+        }
+        if self.g.len() != d {
+            self.g.resize(d, 0.0);
+        }
+        (&mut self.x[..], &mut self.g[..])
+    }
+}
+
 /// Periodic evaluation of the global model.
 #[derive(Debug, Clone, Copy)]
 pub struct EvalResult {
@@ -52,6 +79,28 @@ pub trait TrainBackend {
         gamma: f32,
         rng: &mut Pcg64,
     ) -> LocalOutcome;
+
+    /// [`TrainBackend::local_update`] into a caller-owned `delta` buffer,
+    /// returning the mean local loss. The round engine's hot path: backends
+    /// that override this (the analytic problems do) run the whole local
+    /// update out of `scratch` with zero heap allocation. The default
+    /// delegates to `local_update` — identical values, one transient
+    /// allocation — so stateful backends (PJRT) need no change.
+    #[allow(clippy::too_many_arguments)]
+    fn local_update_into(
+        &mut self,
+        client: usize,
+        params: &[f32],
+        local_steps: usize,
+        gamma: f32,
+        rng: &mut Pcg64,
+        delta: &mut [f32],
+        _scratch: &mut LocalScratch,
+    ) -> f64 {
+        let out = self.local_update(client, params, local_steps, gamma, rng);
+        delta.copy_from_slice(&out.delta);
+        out.mean_loss
+    }
 
     /// Evaluate the global model.
     fn evaluate(&mut self, params: &[f32]) -> EvalResult;
@@ -96,17 +145,23 @@ pub trait TrainBackend {
 ///
 /// Implementors must be safe to call from many threads at once: `rng` is the
 /// caller-owned per-(round, client) stream, so a correct implementation
-/// draws randomness only from it and mutates nothing shared.
+/// draws randomness only from it and mutates nothing shared. `delta` and
+/// `scratch` belong to the calling worker (its `RoundScratch`), making the
+/// per-client fan-out allocation-free.
 pub trait ParallelBackend: Sync {
-    /// Exactly [`TrainBackend::local_update`], through a shared reference.
-    fn local_update_shared(
+    /// Exactly [`TrainBackend::local_update_into`], through a shared
+    /// reference.
+    #[allow(clippy::too_many_arguments)]
+    fn local_update_shared_into(
         &self,
         client: usize,
         params: &[f32],
         local_steps: usize,
         gamma: f32,
         rng: &mut Pcg64,
-    ) -> LocalOutcome;
+        delta: &mut [f32],
+        scratch: &mut LocalScratch,
+    ) -> f64;
 }
 
 /// Backend over an analytic problem. `stochastic` switches the gradient
@@ -130,47 +185,55 @@ impl<P: AnalyticProblem> AnalyticBackend<P> {
         self
     }
 
-    /// The E-step local SGD body. Pure given `rng` (the problem is immutable
-    /// data), which is what makes the parallel view below sound.
-    fn local_update_impl(
+    /// The E-step local SGD body, writing `delta` into a caller-owned
+    /// buffer and running the iterate/gradient loop out of `scratch` — zero
+    /// heap allocation per client. Pure given `rng` (the problem is
+    /// immutable data), which is what makes the parallel view below sound.
+    #[allow(clippy::too_many_arguments)]
+    fn local_update_into_impl(
         &self,
         client: usize,
         params: &[f32],
         local_steps: usize,
         gamma: f32,
         rng: &mut Pcg64,
-    ) -> LocalOutcome {
+        delta: &mut [f32],
+        scratch: &mut LocalScratch,
+    ) -> f64 {
         let d = params.len();
-        let mut x = params.to_vec();
-        let mut g = vec![0.0f32; d];
+        assert_eq!(delta.len(), d);
+        let (x, g) = scratch.xg(d);
+        x.copy_from_slice(params);
         for _ in 0..local_steps {
             self.problem.grad_into(
                 client,
-                &x,
-                &mut g,
-                if self.stochastic { Some(rng) } else { None },
+                x,
+                g,
+                if self.stochastic { Some(&mut *rng) } else { None },
             );
-            tensor::axpy(-gamma, &g, &mut x);
+            tensor::axpy(-gamma, g, x);
         }
         // delta = (params - x_E) / gamma = sum of the local gradients.
-        let mut delta = vec![0.0f32; d];
-        for ((dl, &p), &xe) in delta.iter_mut().zip(params).zip(&x) {
+        for ((dl, &p), &xe) in delta.iter_mut().zip(params).zip(x.iter()) {
             *dl = (p - xe) / gamma;
         }
-        LocalOutcome { delta, mean_loss: self.problem.objective(&x) }
+        self.problem.objective(x)
     }
 }
 
 impl<P: AnalyticProblem> ParallelBackend for AnalyticBackend<P> {
-    fn local_update_shared(
+    #[allow(clippy::too_many_arguments)]
+    fn local_update_shared_into(
         &self,
         client: usize,
         params: &[f32],
         local_steps: usize,
         gamma: f32,
         rng: &mut Pcg64,
-    ) -> LocalOutcome {
-        self.local_update_impl(client, params, local_steps, gamma, rng)
+        delta: &mut [f32],
+        scratch: &mut LocalScratch,
+    ) -> f64 {
+        self.local_update_into_impl(client, params, local_steps, gamma, rng, delta, scratch)
     }
 }
 
@@ -195,7 +258,32 @@ impl<P: AnalyticProblem> TrainBackend for AnalyticBackend<P> {
         gamma: f32,
         rng: &mut Pcg64,
     ) -> LocalOutcome {
-        self.local_update_impl(client, params, local_steps, gamma, rng)
+        let mut delta = vec![0.0f32; params.len()];
+        let mut scratch = LocalScratch::new();
+        let mean_loss = self.local_update_into_impl(
+            client,
+            params,
+            local_steps,
+            gamma,
+            rng,
+            &mut delta,
+            &mut scratch,
+        );
+        LocalOutcome { delta, mean_loss }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn local_update_into(
+        &mut self,
+        client: usize,
+        params: &[f32],
+        local_steps: usize,
+        gamma: f32,
+        rng: &mut Pcg64,
+        delta: &mut [f32],
+        scratch: &mut LocalScratch,
+    ) -> f64 {
+        self.local_update_into_impl(client, params, local_steps, gamma, rng, delta, scratch)
     }
 
     fn as_parallel(&self) -> Option<&dyn ParallelBackend> {
@@ -250,6 +338,29 @@ mod tests {
         }
         for (a, w) in out.delta.iter().zip(&acc) {
             assert!((a - w).abs() < 1e-3, "{a} vs {w}");
+        }
+    }
+
+    #[test]
+    fn into_path_matches_allocating_path_bit_for_bit() {
+        // The zero-alloc entry point must reproduce local_update exactly,
+        // including stochastic-gradient RNG consumption and stale-scratch
+        // reuse across clients.
+        let p = Consensus::gaussian(4, 7, 9);
+        let mut b = AnalyticBackend::new(p).stochastic();
+        let x = vec![0.25f32; 7];
+        let mut scratch = LocalScratch::new();
+        let mut delta = vec![0.0f32; 7];
+        for client in 0..4 {
+            let mut ra = Pcg64::new(5, client as u64);
+            let mut rb = ra.clone();
+            let want = b.local_update(client, &x, 3, 0.1, &mut ra);
+            let loss = b.local_update_into(client, &x, 3, 0.1, &mut rb, &mut delta, &mut scratch);
+            assert_eq!(loss.to_bits(), want.mean_loss.to_bits(), "client={client}");
+            for (a, w) in delta.iter().zip(&want.delta) {
+                assert_eq!(a.to_bits(), w.to_bits(), "client={client}");
+            }
+            assert_eq!(ra.next_u64(), rb.next_u64());
         }
     }
 

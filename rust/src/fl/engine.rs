@@ -35,7 +35,7 @@
 //! spawned, so they cannot break the parallelism contract.
 
 use super::algorithms::{AlgorithmConfig, Compression, ServerOpt};
-use super::backend::{ParallelBackend, TrainBackend};
+use super::backend::{LocalScratch, ParallelBackend, TrainBackend};
 use super::metrics::{RoundRecord, RunResult};
 use super::plateau::PlateauController;
 use super::server::{Participation, ServerConfig};
@@ -43,8 +43,9 @@ use crate::compress::agg::{
     AbsorbCtx, Aggregator, LaneAcc, ReduceStats, ReduceTopology, Scratch, SignKernelHook,
 };
 use crate::compress::error_feedback::EfState;
+use crate::compress::kernel;
 use crate::compress::pack::PackedSigns;
-use crate::compress::sign::{SigmaRule, StochasticSign};
+use crate::compress::sign::SigmaRule;
 use crate::rng::{Pcg64, ZParam};
 use crate::sim::{ByzantineMode, ScenarioPolicy};
 use crate::tensor;
@@ -156,6 +157,29 @@ impl ClientTask {
     }
 }
 
+/// Per-worker, round-lifetime scratch: the client-update buffer the backend
+/// fills, the backend's own local-step buffers, and the compression
+/// scratch. One per worker, reused across every client and every round —
+/// this pool is why the steady-state round loop performs **no per-client
+/// heap allocation** (pinned by `tests/alloc_regression.rs` via a counting
+/// global allocator).
+#[derive(Debug)]
+pub struct RoundScratch {
+    /// The client's update direction `(x_start − x_E)/γ` for the task in
+    /// flight; refilled by `local_update(_shared)_into` per client.
+    delta: Vec<f32>,
+    /// Iterate/gradient buffers for the backend's E-step loop.
+    local: LocalScratch,
+    /// Compression scratch (packed signs, dequantize buffer, top-k index).
+    agg: Scratch,
+}
+
+impl RoundScratch {
+    fn new(d: usize) -> RoundScratch {
+        RoundScratch { delta: vec![0.0; d], local: LocalScratch::new(), agg: Scratch::new(d) }
+    }
+}
+
 /// Adapter exposing the backend's AOT kernel route to the aggregation seam
 /// (sequential path only — see `TrainBackend::compress_hook`).
 struct BackendHook<'b> {
@@ -194,11 +218,12 @@ pub struct RoundEngine<'a> {
     /// Lane-sharded aggregation state, reused across rounds. Lanes are
     /// locked by the one worker that claims them — never contended.
     lanes: Vec<Mutex<LaneAcc>>,
-    /// Per-worker compression scratch, reused across rounds.
-    scratches: Vec<Scratch>,
+    /// Per-worker round scratch (update/delta/sign-word buffers), reused
+    /// across rounds.
+    scratches: Vec<RoundScratch>,
     update: Vec<f32>,
-    /// Downlink-compression sign scratch.
-    signs_buf: Vec<i8>,
+    /// Downlink-compression packed-sign scratch.
+    downlink_packed: PackedSigns,
     bits_up: u64,
     bits_down: u64,
 }
@@ -220,7 +245,7 @@ impl<'a> RoundEngine<'a> {
             lanes: Vec::new(),
             scratches: Vec::new(),
             update: vec![0.0; d],
-            signs_buf: vec![0i8; d],
+            downlink_packed: PackedSigns::zeroed(d),
             bits_up: 0,
             bits_down: 0,
         }
@@ -347,14 +372,19 @@ impl<'a> RoundEngine<'a> {
                 // Optional downlink compression: broadcast the update itself
                 // as a dequantized stochastic sign (applied server-side too,
                 // so the global iterate equals what the clients reconstruct).
+                // Fused kernel straight into the reusable packed buffer —
+                // no clone of the update, no i8 detour.
                 if let Some((z, sigma_d)) = self.cfg.downlink_sign {
                     let mut drng = root.split((t as u64) | 0x4000_0000_0000_0000);
-                    let mut comp = StochasticSign::new(z, SigmaRule::Fixed(sigma_d));
-                    comp.compress_into(&self.update.clone(), &mut drng, &mut self.signs_buf);
+                    kernel::stochastic_sign_packed(
+                        &self.update,
+                        z,
+                        sigma_d,
+                        &mut drng,
+                        &mut self.downlink_packed,
+                    );
                     let scale = (z.eta() as f32) * sigma_d;
-                    for (u, &s) in self.update.iter_mut().zip(&self.signs_buf) {
-                        *u = scale * s as f32;
-                    }
+                    self.downlink_packed.decode_scaled_into(scale, &mut self.update);
                 }
                 match self.algo.server_opt {
                     ServerOpt::Sgd => tensor::axpy(-step_scale, &self.update, &mut params),
@@ -442,7 +472,7 @@ impl<'a> RoundEngine<'a> {
         }
         let threads = self.cfg.parallelism.max(1).min(lanes_n);
         while self.scratches.len() < threads {
-            self.scratches.push(Scratch::new(self.d));
+            self.scratches.push(RoundScratch::new(self.d));
         }
 
         // The parallel path runs iff the backend is Sync-safe; which path
@@ -471,8 +501,8 @@ impl<'a> RoundEngine<'a> {
             } else {
                 let ctx = &ctx;
                 std::thread::scope(|s| {
-                    for scratch in self.scratches[..threads].iter_mut() {
-                        s.spawn(move || worker_loop(ctx, scratch));
+                    for rs in self.scratches[..threads].iter_mut() {
+                        s.spawn(move || worker_loop(ctx, rs));
                     }
                 });
             }
@@ -510,23 +540,26 @@ impl<'a> RoundEngine<'a> {
         inv_m: f32,
         topo: ReduceTopology,
     ) {
+        let RoundScratch { delta, local, agg: cscratch } = &mut self.scratches[0];
         let mut hook = BackendHook { backend };
         for (slot, part) in participants.iter().enumerate() {
             let mut task = ClientTask::new(root, t, slot, part.client);
-            let mut outcome = hook.backend.local_update(
+            let mean_loss = hook.backend.local_update_into(
                 part.client,
                 params,
                 self.algo.local_steps,
                 self.algo.client_lr,
                 &mut task.rng,
+                delta,
+                local,
             );
             if let Some(mode) = part.fault {
-                mode.apply(&mut outcome.delta);
+                mode.apply(delta);
             }
             let lane = self.lanes[topo.lane_of(slot)].get_mut().unwrap();
             self.agg.absorb(
-                outcome.delta,
-                outcome.mean_loss,
+                delta,
+                mean_loss,
                 AbsorbCtx {
                     rng: &mut task.rng,
                     round_sigma,
@@ -535,7 +568,7 @@ impl<'a> RoundEngine<'a> {
                     hook: Some(&mut hook),
                 },
                 lane,
-                &mut self.scratches[0],
+                cscratch,
             );
         }
     }
@@ -561,8 +594,10 @@ struct RoundCtx<'c> {
 
 /// Worker body: claim the next lane off the shared queue, run its client
 /// tasks in slot order, folding each message straight into the lane — no
-/// per-client parking, no end-of-round buffer.
-fn worker_loop(ctx: &RoundCtx<'_>, scratch: &mut Scratch) {
+/// per-client parking, no end-of-round buffer, and no per-client heap
+/// allocation (everything lives in the worker's `RoundScratch`).
+fn worker_loop(ctx: &RoundCtx<'_>, rs: &mut RoundScratch) {
+    let RoundScratch { delta, local, agg: scratch } = rs;
     loop {
         let lane_i = ctx.next.fetch_add(1, Ordering::Relaxed);
         if lane_i >= ctx.topo.lanes() {
@@ -573,23 +608,25 @@ fn worker_loop(ctx: &RoundCtx<'_>, scratch: &mut Scratch) {
         for slot in ctx.topo.lane_slots(lane_i) {
             let part = ctx.participants[slot];
             let mut task = ClientTask::new(ctx.root, ctx.t, slot, part.client);
-            let mut outcome = ctx.par.local_update_shared(
+            let mean_loss = ctx.par.local_update_shared_into(
                 part.client,
                 ctx.params,
                 ctx.algo.local_steps,
                 ctx.algo.client_lr,
                 &mut task.rng,
+                delta,
+                local,
             );
             // A byzantine fault corrupts the update direction *before*
             // compression: the attacker follows the wire format but lies
             // about its local result — exactly the threat model
             // majority-vote aggregation is claimed to absorb.
             if let Some(mode) = part.fault {
-                mode.apply(&mut outcome.delta);
+                mode.apply(delta);
             }
             ctx.agg.absorb(
-                outcome.delta,
-                outcome.mean_loss,
+                delta,
+                mean_loss,
                 AbsorbCtx {
                     rng: &mut task.rng,
                     round_sigma: ctx.round_sigma,

@@ -27,7 +27,7 @@ pub mod plateau;
 pub mod server;
 
 pub use algorithms::{AlgorithmConfig, Compression};
-pub use backend::{EvalResult, LocalOutcome, ParallelBackend, TrainBackend};
+pub use backend::{EvalResult, LocalOutcome, LocalScratch, ParallelBackend, TrainBackend};
 pub use engine::{ClientOutcome, ClientTask, ParticipationPolicy, RoundEngine, RoundPlan};
 pub use metrics::{RoundRecord, RunResult};
 pub use server::{run_experiment, Participation, ServerConfig};

@@ -197,6 +197,15 @@ impl Pcg64 {
         if let Some(s) = self.gauss_spare.take() {
             return s;
         }
+        let (a, b) = self.normal_pair();
+        self.gauss_spare = Some(b);
+        a
+    }
+
+    /// One polar-method rejection loop: both variates of the accepted pair,
+    /// bypassing the spare cache. The stream contract (`fill_normal_f64`)
+    /// depends on this being *exactly* the arithmetic `normal` performs.
+    fn normal_pair(&mut self) -> (f64, f64) {
         loop {
             let u = 2.0 * self.uniform() - 1.0;
             let v = 2.0 * self.uniform() - 1.0;
@@ -205,8 +214,60 @@ impl Pcg64 {
                 continue;
             }
             let k = (-2.0 * s.ln() / s).sqrt();
-            self.gauss_spare = Some(v * k);
-            return u * k;
+            return (u * k, v * k);
+        }
+    }
+
+    /// Fill `out` with standard normals, bit-identical to `out.len()`
+    /// sequential [`Pcg64::normal`] calls *including* the spare-cache
+    /// semantics: an incoming cached spare is emitted first, and an odd
+    /// tail leaves its partner cached for the next draw. This is the z = 1
+    /// block fast path of the fused sign kernel — it writes accepted pairs
+    /// straight into the buffer instead of round-tripping every second
+    /// variate through the `Option` cache.
+    pub fn fill_normal_f64(&mut self, out: &mut [f64]) {
+        if out.is_empty() {
+            return;
+        }
+        let mut i = 0usize;
+        if let Some(s) = self.gauss_spare.take() {
+            out[0] = s;
+            i = 1;
+        }
+        while i + 2 <= out.len() {
+            let (a, b) = self.normal_pair();
+            out[i] = a;
+            out[i + 1] = b;
+            i += 2;
+        }
+        if i < out.len() {
+            let (a, b) = self.normal_pair();
+            out[i] = a;
+            self.gauss_spare = Some(b);
+        }
+    }
+
+    /// Block-fill `out` with i.i.d. z-distribution noise in f64, bit-identical
+    /// to `out.len()` sequential [`Pcg64::z_noise`] calls (one draw per slot,
+    /// in slot order — the fused sign kernel's RNG stream contract). The
+    /// dispatch on `z` is hoisted out of the per-coordinate loop, and z = 1
+    /// routes through the paired normal filler.
+    pub fn fill_z_noise_f64(&mut self, z: ZParam, out: &mut [f64]) {
+        match z {
+            ZParam::Inf => {
+                for o in out.iter_mut() {
+                    *o = self.uniform_in(-1.0, 1.0);
+                }
+            }
+            ZParam::Finite(1) => self.fill_normal_f64(out),
+            ZParam::Finite(z) => {
+                let inv = 1.0 / (2.0 * z as f64);
+                for o in out.iter_mut() {
+                    let g = self.gamma(inv, 2.0);
+                    let mag = g.powf(inv);
+                    *o = if self.next_u64() & 1 == 0 { mag } else { -mag };
+                }
+            }
         }
     }
 
@@ -457,6 +518,38 @@ mod tests {
             sorted.dedup();
             assert_eq!(sorted.len(), 10);
             assert!(sorted.iter().all(|&i| i < 50));
+        }
+    }
+
+    #[test]
+    fn fill_z_noise_f64_matches_sequential_draws() {
+        // The fused-kernel stream contract: block filling must consume and
+        // produce the exact scalar draw sequence, for every z family, across
+        // lengths that exercise the pair filler's odd/even tails and an
+        // incoming cached spare.
+        for z in [ZParam::Finite(1), ZParam::Finite(2), ZParam::Finite(3), ZParam::Inf] {
+            for warmup in [0usize, 1] {
+                for len in [0usize, 1, 2, 63, 64, 65, 127, 130] {
+                    let mut a = Pcg64::seeded(99);
+                    let mut b = Pcg64::seeded(99);
+                    // An odd number of normal() warm-up draws parks a spare.
+                    for _ in 0..warmup {
+                        let (x, y) = (a.normal(), b.normal());
+                        assert_eq!(x.to_bits(), y.to_bits());
+                    }
+                    let want: Vec<f64> = (0..len).map(|_| a.z_noise(z)).collect();
+                    let mut got = vec![0.0f64; len];
+                    b.fill_z_noise_f64(z, &mut got);
+                    for (j, (w, g)) in want.iter().zip(&got).enumerate() {
+                        let (wb, gb) = (w.to_bits(), g.to_bits());
+                        assert_eq!(wb, gb, "z={z} warmup={warmup} len={len} j={j}");
+                    }
+                    // And the generators must be left in identical states
+                    // (spare cache included).
+                    assert_eq!(a.normal().to_bits(), b.normal().to_bits(), "z={z} len={len} state");
+                    assert_eq!(a.next_u64(), b.next_u64());
+                }
+            }
         }
     }
 

@@ -1,0 +1,110 @@
+//! Steady-state allocation regression for the round hot path.
+//!
+//! The round engine's `RoundScratch` pool plus the fused kernels are
+//! supposed to make the per-client work allocation-free: once buffers are
+//! warm, a whole experiment run allocates only run-scoped state (the
+//! initial iterate, participation plans, round records, eval temporaries) —
+//! never an O(d) buffer per client. This test pins that with a counting
+//! global allocator (same technique as `benches/bench_dense_reduce.rs`): a
+//! second run on a warmed engine must allocate far less than one d-sized
+//! buffer per client per round, for every compressor family.
+//!
+//! Kept to a single #[test] so no concurrent test thread pollutes the
+//! counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use zsignfedavg::fl::backend::AnalyticBackend;
+use zsignfedavg::fl::engine::RoundEngine;
+use zsignfedavg::fl::server::ServerConfig;
+use zsignfedavg::fl::AlgorithmConfig;
+use zsignfedavg::problems::consensus::Consensus;
+use zsignfedavg::rng::ZParam;
+
+struct CountingAlloc;
+
+/// Monotonic total bytes ever allocated (reallocs count the new size).
+static TOTAL: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            TOTAL.fetch_add(layout.size(), Ordering::Relaxed);
+        }
+        p
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc_zeroed(layout);
+        if !p.is_null() {
+            TOTAL.fetch_add(layout.size(), Ordering::Relaxed);
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = System.realloc(ptr, layout, new_size);
+        if !p.is_null() {
+            TOTAL.fetch_add(new_size, Ordering::Relaxed);
+        }
+        p
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_round_loop_has_no_per_client_allocation() {
+    let d = 8192usize;
+    let n = 16usize;
+    let rounds = 6usize;
+    let algos = vec![
+        AlgorithmConfig::gd().with_lrs(0.05, 1.0),
+        AlgorithmConfig::signsgd().with_lrs(0.05, 1.0),
+        AlgorithmConfig::z_signsgd(ZParam::Finite(1), 1.0).with_lrs(0.05, 1.0),
+        AlgorithmConfig::z_signsgd(ZParam::Inf, 1.0).with_lrs(0.05, 1.0),
+        AlgorithmConfig::qsgd(2).with_lrs(0.05, 1.0),
+        AlgorithmConfig::topk(0.1, 1).with_lrs(0.05, 1.0),
+        AlgorithmConfig::sparse_sign(0.1, ZParam::Finite(1), 1.0, 1).with_lrs(0.05, 1.0),
+        AlgorithmConfig::dp_signfedavg(0.5, 1.0, 2).with_lrs(0.05, 0.5),
+    ];
+    // What the old path would burn per run: >= 3 d-sized buffers per client
+    // per round (iterate clone, gradient, delta) plus per-client message
+    // allocations. The budget is ~20x below that and ~3x above the real
+    // run-scoped costs (init_params clone, 3 evals with O(d) temporaries,
+    // O(n) participation plans per round).
+    let old_path_floor = rounds * n * 3 * d * 4; // = 9.4 MB
+    let budget = 600_000usize;
+    assert!(budget * 10 < old_path_floor, "budget must separate the regimes");
+
+    for algo in &algos {
+        let cfg = ServerConfig {
+            rounds,
+            seed: 7,
+            eval_every: 4, // evals at t = 0, 4 and the final round
+            parallelism: 1,
+            ..Default::default()
+        };
+        let mut engine = RoundEngine::new(algo, &cfg, d, n);
+        // Warm-up run: lanes, scratch pool, vote planes, records all grow.
+        let mut b1 = AnalyticBackend::new(Consensus::gaussian(n, d, 3));
+        engine.run(&mut b1);
+        // Steady-state run on the warmed engine.
+        let mut b2 = AnalyticBackend::new(Consensus::gaussian(n, d, 3));
+        let before = TOTAL.load(Ordering::Relaxed);
+        engine.run(&mut b2);
+        let grown = TOTAL.load(Ordering::Relaxed) - before;
+        assert!(
+            grown < budget,
+            "{}: steady-state run allocated {grown} B (budget {budget} B, \
+             old-path floor {old_path_floor} B)",
+            algo.name
+        );
+    }
+}

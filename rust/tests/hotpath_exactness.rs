@@ -1,0 +1,271 @@
+//! Bit-exactness property tests for the fused hot-path kernels.
+//!
+//! The fused client kernel (`compress::kernel`), the carry-save vote
+//! accumulator (`compress::pack::VoteAccumulator`) and the fused
+//! dense-family absorb paths (`compress::agg`) all replace scalar reference
+//! implementations that every seeded experiment in the repo depends on.
+//! These tests pin each of them byte-identical to the reference across
+//! boundary lengths, all `ZParam` families and all `SigmaRule`s — the "RNG
+//! stream contract" of DESIGN.md.
+
+use std::sync::Mutex;
+use zsignfedavg::compress::agg::{
+    AbsorbCtx, Aggregator, LaneAcc, QsgdAgg, SparseSignAgg, TopKAgg, ZSignAgg,
+};
+use zsignfedavg::compress::kernel;
+use zsignfedavg::compress::pack::{PackedSigns, VoteAccumulator};
+use zsignfedavg::compress::qsgd::Qsgd;
+use zsignfedavg::compress::sign::{SigmaRule, StochasticSign};
+use zsignfedavg::compress::sparsify::{SparseSign, TopK};
+use zsignfedavg::compress::{Compressor, Message};
+use zsignfedavg::rng::{Pcg64, ZParam};
+use zsignfedavg::tensor;
+
+const BOUNDARY_DIMS: [usize; 8] = [0, 1, 63, 64, 65, 127, 128, 1000];
+
+fn gen_vec(rng: &mut Pcg64, d: usize) -> Vec<f32> {
+    (0..d).map(|_| rng.uniform_in(-2.0, 2.0) as f32).collect()
+}
+
+/// The fused client kernel must be bit-identical to the scalar reference
+/// path (compress_into + from_signs) — output *and* RNG stream — across
+/// boundary lengths, every z family and all three sigma rules.
+#[test]
+fn fused_kernel_bit_identical_to_scalar_reference() {
+    let zs = [ZParam::Finite(1), ZParam::Finite(2), ZParam::Finite(3), ZParam::Inf];
+    let rules = [
+        SigmaRule::Fixed(0.0),
+        SigmaRule::Fixed(0.7),
+        SigmaRule::L2Norm,
+        SigmaRule::InfNorm,
+    ];
+    let mut data_rng = Pcg64::seeded(0xfeed);
+    for &d in &BOUNDARY_DIMS {
+        let x = gen_vec(&mut data_rng, d);
+        for z in zs {
+            for rule in rules {
+                let mut ra = Pcg64::new(17, d as u64);
+                // Odd warm-up draw so the Gaussian spare cache is engaged.
+                ra.normal();
+                let mut rb = ra.clone();
+
+                let mut comp = StochasticSign::new(z, rule);
+                let mut signs = vec![0i8; d];
+                comp.compress_into(&x, &mut ra, &mut signs);
+                let want = PackedSigns::from_signs(&signs);
+
+                // Resolve sigma exactly as the aggregation seam does.
+                let sigma = match rule {
+                    SigmaRule::Fixed(s) => s,
+                    SigmaRule::L2Norm => tensor::norm2(&x) as f32,
+                    SigmaRule::InfNorm => tensor::norm_inf(&x) as f32,
+                };
+                assert_eq!(sigma.to_bits(), comp.last_sigma.to_bits(), "sigma resolution");
+                let mut got = PackedSigns::zeroed(0);
+                kernel::stochastic_sign_packed(&x, z, sigma, &mut rb, &mut got);
+
+                assert_eq!(got, want, "z={z} rule={rule:?} d={d}");
+                // Stream continuation: both generators in identical states.
+                assert_eq!(
+                    ra.normal().to_bits(),
+                    rb.normal().to_bits(),
+                    "z={z} rule={rule:?} d={d} spare"
+                );
+                assert_eq!(ra.next_u64(), rb.next_u64(), "z={z} rule={rule:?} d={d} state");
+            }
+        }
+    }
+}
+
+/// CSA vote counts equal the naive per-coordinate sums for cohort sizes up
+/// to 3× the spill batch, across boundary dimensions, including shard
+/// merges at arbitrary pending fill levels.
+#[test]
+fn csa_accumulator_equals_naive_votes() {
+    let batch = VoteAccumulator::SPILL_BATCH as usize;
+    let mut rng = Pcg64::seeded(0xc5a);
+    for &d in &BOUNDARY_DIMS {
+        let cohorts = [1usize, 2, batch - 1, batch, batch + 1, 2 * batch, 3 * batch];
+        for &n in cohorts.iter().filter(|&&n| n >= 1) {
+            let signs: Vec<Vec<i8>> = (0..n)
+                .map(|_| {
+                    (0..d)
+                        .map(|_| if rng.next_u64() & 1 == 0 { 1i8 } else { -1 })
+                        .collect()
+                })
+                .collect();
+            let mut naive = vec![0i32; d];
+            for s in &signs {
+                for (c, &v) in naive.iter_mut().zip(s) {
+                    *c += v as i32;
+                }
+            }
+            // Sequential.
+            let mut acc = VoteAccumulator::new(d);
+            for s in &signs {
+                acc.add(&PackedSigns::from_signs(s));
+            }
+            assert_eq!(acc.counts(), &naive[..], "sequential d={d} n={n}");
+            assert_eq!(acc.num_votes(), n as u32);
+            // Sharded: split at every prefix length, merge, compare.
+            for split in [n / 3, n / 2, n.saturating_sub(1)] {
+                let mut a = VoteAccumulator::new(d);
+                let mut b = VoteAccumulator::new(d);
+                for s in &signs[..split] {
+                    a.add(&PackedSigns::from_signs(s));
+                }
+                for s in &signs[split..] {
+                    b.add(&PackedSigns::from_signs(s));
+                }
+                a.merge(&b);
+                assert_eq!(a.counts(), &naive[..], "merged d={d} n={n} split={split}");
+                assert_eq!(a.num_votes(), n as u32);
+            }
+        }
+    }
+}
+
+/// majority() built from counts must match the i8 definition (ties → +1).
+#[test]
+fn majority_matches_signwise_definition() {
+    let mut rng = Pcg64::seeded(0x3a30);
+    for &d in &[1usize, 64, 65, 513] {
+        let mut acc = VoteAccumulator::new(d);
+        for _ in 0..7 {
+            let s: Vec<i8> =
+                (0..d).map(|_| if rng.next_u64() & 1 == 0 { 1i8 } else { -1 }).collect();
+            acc.add(&PackedSigns::from_signs(&s));
+        }
+        let counts = acc.counts().to_vec();
+        let m = acc.majority();
+        assert_eq!(m.len(), d);
+        for (j, &c) in counts.iter().enumerate() {
+            assert_eq!(m.get(j), if c >= 0 { 1 } else { -1 }, "d={d} j={j}");
+        }
+    }
+}
+
+fn absorb_one(agg: &dyn Aggregator, x: &[f32], rng: &mut Pcg64, d: usize) -> (Vec<f32>, u64) {
+    let lanes = vec![Mutex::new(LaneAcc::new(d))];
+    let mut scratch = zsignfedavg::compress::agg::Scratch::new(d);
+    let mut delta = x.to_vec();
+    let ctx = AbsorbCtx { rng, round_sigma: 0.6, inv_m: 1.0, ef: None, hook: None };
+    agg.absorb(&mut delta, 0.0, ctx, &mut lanes[0].lock().unwrap(), &mut scratch);
+    let bits = lanes[0].lock().unwrap().bits();
+    let mut update = vec![0.0f32; d];
+    agg.reduce(&lanes, &mut update);
+    (update, bits)
+}
+
+/// The fused dense-family absorb paths (QSGD, top-k, sparse-sign) must
+/// reproduce compress → decode of the wire compressors bit for bit, wire
+/// bits included.
+#[test]
+fn fused_dense_absorbs_match_wire_compress_decode() {
+    let mut data_rng = Pcg64::seeded(0xab5);
+    for &d in &[1usize, 64, 65, 200, 1000] {
+        let x = gen_vec(&mut data_rng, d);
+
+        // QSGD.
+        for s in [1u32, 4] {
+            let mut ra = Pcg64::new(3, d as u64);
+            let mut rb = ra.clone();
+            let msg = Qsgd::new(s).compress(&x, &mut ra);
+            let mut want = vec![0.0f32; d];
+            Qsgd::new(s).decode_into(&msg, &mut want);
+            let (got, bits) = absorb_one(&QsgdAgg { s }, &x, &mut rb, d);
+            assert_eq!(bits, msg.bits_on_wire(), "qsgd s={s} d={d} bits");
+            for (a, w) in got.iter().zip(&want) {
+                assert_eq!(a.to_bits(), w.to_bits(), "qsgd s={s} d={d}");
+            }
+        }
+
+        // Top-k.
+        let mut ra = Pcg64::new(4, d as u64);
+        let mut rb = ra.clone();
+        let mut topk = TopK::new(0.1);
+        let msg = topk.compress(&x, &mut ra);
+        let mut want = vec![0.0f32; d];
+        topk.decode_into(&msg, &mut want);
+        let (got, bits) = absorb_one(&TopKAgg { frac: 0.1 }, &x, &mut rb, d);
+        assert_eq!(bits, msg.bits_on_wire(), "topk d={d} bits");
+        for (a, w) in got.iter().zip(&want) {
+            assert_eq!(a.to_bits(), w.to_bits(), "topk d={d}");
+        }
+
+        // Sparse-sign (draws z-noise per kept coordinate: check the stream
+        // stays aligned too).
+        let mut ra = Pcg64::new(5, d as u64);
+        let mut rb = ra.clone();
+        let mut ss = SparseSign::new(0.1, ZParam::Finite(1), 0.6);
+        let msg = ss.compress(&x, &mut ra);
+        let mut want = vec![0.0f32; d];
+        ss.decode_into(&msg, &mut want);
+        let agg = SparseSignAgg { frac: 0.1, z: ZParam::Finite(1), sigma: 0.6 };
+        let (got, bits) = absorb_one(&agg, &x, &mut rb, d);
+        assert_eq!(bits, msg.bits_on_wire(), "sparse-sign d={d} bits");
+        for (a, w) in got.iter().zip(&want) {
+            assert_eq!(a.to_bits(), w.to_bits(), "sparse-sign d={d}");
+        }
+        assert_eq!(ra.next_u64(), rb.next_u64(), "sparse-sign d={d} stream");
+    }
+}
+
+/// The sign family absorb (fused kernel + CSA votes) must equal the scalar
+/// reference chain: compress_into → from_signs → per-coordinate counts.
+#[test]
+fn sign_absorb_chain_matches_scalar_chain() {
+    let d = 321;
+    let m = 23; // crosses one CSA spill boundary
+    let mut data_rng = Pcg64::seeded(0x51c);
+    let deltas: Vec<Vec<f32>> = (0..m).map(|_| gen_vec(&mut data_rng, d)).collect();
+    let agg = ZSignAgg { z: ZParam::Finite(1), sigma: SigmaRule::Fixed(0.6) };
+
+    // Reference: scalar compressor + naive vote counts.
+    let mut counts = vec![0i32; d];
+    for (i, x) in deltas.iter().enumerate() {
+        let mut rng = Pcg64::new(9, i as u64);
+        let mut comp = StochasticSign::new(ZParam::Finite(1), SigmaRule::Fixed(0.6));
+        let mut signs = vec![0i8; d];
+        comp.compress_into(x, &mut rng, &mut signs);
+        for (c, &s) in counts.iter_mut().zip(&signs) {
+            *c += s as i32;
+        }
+    }
+    let want: Vec<f32> = counts.iter().map(|&c| 1.0 / m as f32 * c as f32).collect();
+
+    // Fused: one lane, absorb all m clients, reduce.
+    let lanes = vec![Mutex::new(LaneAcc::new(d))];
+    let mut scratch = zsignfedavg::compress::agg::Scratch::new(d);
+    for (i, x) in deltas.iter().enumerate() {
+        let mut rng = Pcg64::new(9, i as u64);
+        let mut delta = x.clone();
+        let ctx = AbsorbCtx { rng: &mut rng, round_sigma: 0.6, inv_m: 0.0, ef: None, hook: None };
+        agg.absorb(&mut delta, 0.0, ctx, &mut lanes[0].lock().unwrap(), &mut scratch);
+    }
+    let mut got = vec![0.0f32; d];
+    agg.reduce(&lanes, &mut got);
+    for (j, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "j={j}");
+    }
+}
+
+/// Sanity: the fused deterministic sign (σ = 0) equals Message-level
+/// compression through the Compressor trait, which also routes the kernel.
+#[test]
+fn compressor_trait_routes_through_fused_kernel() {
+    let mut data_rng = Pcg64::seeded(2);
+    let x = gen_vec(&mut data_rng, 777);
+    let mut c = StochasticSign::deterministic();
+    let mut rng = Pcg64::seeded(5);
+    let msg = c.compress(&x, &mut rng);
+    assert_eq!(msg.bits_on_wire(), 777);
+    match msg {
+        Message::Signs(p) => {
+            for (j, &xi) in x.iter().enumerate() {
+                assert_eq!(p.get(j), if xi >= 0.0 { 1 } else { -1 });
+            }
+        }
+        _ => panic!("expected packed signs"),
+    }
+}
