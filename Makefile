@@ -11,6 +11,8 @@
 #   make determinism parallelism-1 vs -8 scenario CSV byte-diff (what CI runs)
 #   make spec-smoke  `zsfa run` example spec vs equivalent fig1 driver CSV
 #                    byte-diff at parallelism 1 and 8 (what CI runs)
+#   make service-smoke networked-service equivalence: engine vs loopback vs
+#                    a real TCP serve/join round trip, CSV byte-diff (CI)
 #   make fmt       rustfmt check (what CI enforces)
 #   make lint      clippy with warnings denied (what CI enforces)
 #   make python    editable-install the compile package + kernel tests
@@ -20,7 +22,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test bench bench-build bench-smoke bench-json determinism spec-smoke fmt lint python artifacts ci clean
+.PHONY: build test bench bench-build bench-smoke bench-json determinism spec-smoke service-smoke fmt lint python artifacts ci clean
 
 build:
 	$(CARGO) build --release
@@ -91,6 +93,40 @@ spec-smoke: build
 	  done; \
 	done
 	@echo "spec-smoke: zsfa run CSVs byte-identical to the fig1 driver at parallelism 1 and 8"
+
+# Networked-service equivalence smoke (DESIGN.md §5): the example spec run
+# three ways — in-process engine, the loopback service stack (full protocol
+# encode/decode, 4 workers), and a real TCP coordinator with two joined
+# participants on localhost — must produce byte-identical CSV trees
+# (aggregated files exactly; raw files modulo the measured wall_ms column,
+# same rationale as spec-smoke). `timeout` bounds the TCP leg so a
+# deadlocked round fails the job instead of hanging it.
+service-smoke: build
+	rm -rf results_svc_engine results_svc_loop results_svc_tcp
+	mkdir -p results_svc_engine results_svc_loop results_svc_tcp
+	cd results_svc_engine && ../target/release/zsfa run \
+	  ../rust/examples/quickstart.json --parallelism 1
+	cd results_svc_loop && ../target/release/zsfa run \
+	  ../rust/examples/quickstart.json --transport loopback --parallelism 4
+	diff -r -x '*_raw.csv' results_svc_engine results_svc_loop
+	@set -e; cd results_svc_tcp; \
+	  timeout 180 ../target/release/zsfa serve ../rust/examples/quickstart.json \
+	    --addr 127.0.0.1:7443 --min-participants 2 & srv=$$!; \
+	  timeout 180 ../target/release/zsfa join ../rust/examples/quickstart.json \
+	    --addr 127.0.0.1:7443 --patience-s 60 & j1=$$!; \
+	  timeout 180 ../target/release/zsfa join ../rust/examples/quickstart.json \
+	    --addr 127.0.0.1:7443 --patience-s 60 & j2=$$!; \
+	  wait $$srv && wait $$j1 && wait $$j2
+	diff -r -x '*_raw.csv' results_svc_engine results_svc_tcp
+	@set -e; for f in results_svc_engine/results/fig1_d50/*_raw.csv; do \
+	  b=$$(basename $$f); \
+	  awk -F, -v OFS=, '{$$9="-"; print}' $$f > results_svc_engine/$$b.norm; \
+	  for alt in results_svc_loop results_svc_tcp; do \
+	    awk -F, -v OFS=, '{$$9="-"; print}' $$alt/results/fig1_d50/$$b > $$alt/$$b.norm; \
+	    cmp results_svc_engine/$$b.norm $$alt/$$b.norm; \
+	  done; \
+	done
+	@echo "service-smoke: engine, loopback and TCP serve/join CSVs are byte-identical"
 
 fmt:
 	$(CARGO) fmt --all -- --check

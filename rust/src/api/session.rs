@@ -10,7 +10,7 @@
 //! spec.json --parallelism 8` reproduce archived CSVs byte-for-byte.
 
 use super::observer::{CsvSink, ProgressSink, RoundObserver, SeriesCtx};
-use super::spec::{ExperimentSpec, NeuralSpec, WorkloadSpec};
+use super::spec::{ExperimentSpec, NeuralSpec, TransportSpec, WorkloadSpec};
 use crate::data::{partition, synth};
 use crate::error::{bail, Result};
 use crate::fl::backend::{AnalyticBackend, TrainBackend};
@@ -19,6 +19,7 @@ use crate::fl::server::run_experiment_observed;
 use crate::problems::consensus::Consensus;
 use crate::problems::least_squares::LeastSquares;
 use crate::runtime::{ModelRuntime, XlaBackend};
+use crate::service::ServiceHost;
 
 impl WorkloadSpec {
     /// Materialize a fresh backend for one repeat. Analytic workloads are
@@ -139,6 +140,23 @@ impl Session {
             None
         };
 
+        // Service transports share one host (and one participant cohort)
+        // across every series and repeat; the engine path needs none.
+        let mut host = match &spec.transport {
+            TransportSpec::Engine => None,
+            TransportSpec::Loopback => {
+                Some(ServiceHost::loopback(spec, spec.parallelism.max(1)))
+            }
+            TransportSpec::Tcp { addr, heartbeat_ms, round_deadline_ms, min_participants } => {
+                let h =
+                    ServiceHost::tcp(addr, *heartbeat_ms, *round_deadline_ms, *min_participants)?;
+                if let Some(bound) = h.local_addr() {
+                    println!("serving rounds on {bound}");
+                }
+                Some(h)
+            }
+        };
+
         let expanded = spec.expanded_series();
         let total = expanded.len();
         let mut out = Vec::with_capacity(total);
@@ -157,16 +175,27 @@ impl Session {
                 let mut backend = spec.workload.build_backend()?;
                 let cfg = spec.server_config(repeat);
                 let observers = &mut self.observers;
-                let run = run_experiment_observed(
-                    backend.as_mut(),
-                    &s.algorithm,
-                    &cfg,
-                    &mut |rec| {
-                        for o in observers.iter_mut() {
-                            o.on_round(&ctx, repeat, rec);
-                        }
-                    },
-                );
+                let mut on_round = |rec: &crate::fl::RoundRecord| {
+                    for o in observers.iter_mut() {
+                        o.on_round(&ctx, repeat, rec);
+                    }
+                };
+                let run = match host.as_mut() {
+                    None => run_experiment_observed(
+                        backend.as_mut(),
+                        &s.algorithm,
+                        &cfg,
+                        &mut on_round,
+                    ),
+                    Some(h) => h.run_one(
+                        backend.as_mut(),
+                        &s.algorithm,
+                        &cfg,
+                        index as u32,
+                        repeat as u32,
+                        &mut on_round,
+                    )?,
+                };
                 for o in self.observers.iter_mut() {
                     o.on_run_end(&ctx, repeat, &run);
                 }
@@ -191,6 +220,9 @@ impl Session {
                 aggregated: agg,
                 runs,
             });
+        }
+        if let Some(mut h) = host {
+            h.shutdown()?;
         }
         Ok(SessionResult { series: out })
     }
@@ -252,6 +284,28 @@ mod tests {
             let got: Vec<f64> = run.records.iter().map(|rec| rec.objective).collect();
             let want: Vec<f64> = expected.records.iter().map(|rec| rec.objective).collect();
             assert_eq!(got, want, "repeat {r}");
+        }
+    }
+
+    #[test]
+    fn loopback_transport_session_is_bit_identical_to_engine_session() {
+        // The full Session surface — series loop, repeat seeds, observers,
+        // aggregation — must not care which transport ran the rounds.
+        let want = Session::new().run(&spec()).unwrap();
+        let got = Session::new()
+            .run(&spec().transport(TransportSpec::Loopback).parallelism(4))
+            .unwrap();
+        assert_eq!(want.series.len(), got.series.len());
+        for (a, b) in want.series.iter().zip(&got.series) {
+            assert_eq!(a.runs.len(), b.runs.len());
+            for (ra, rb) in a.runs.iter().zip(&b.runs) {
+                let oa: Vec<u64> = ra.records.iter().map(|r| r.objective.to_bits()).collect();
+                let ob: Vec<u64> = rb.records.iter().map(|r| r.objective.to_bits()).collect();
+                assert_eq!(oa, ob, "{}", a.label);
+                let ba: Vec<u64> = ra.records.iter().map(|r| r.bits_up).collect();
+                let bb: Vec<u64> = rb.records.iter().map(|r| r.bits_up).collect();
+                assert_eq!(ba, bb, "{}", a.label);
+            }
         }
     }
 

@@ -304,6 +304,47 @@ impl Default for OutputSpec {
     }
 }
 
+/// How the experiment's rounds execute: in-process, or through the
+/// networked coordinator/participant service (`service::ServiceHost`).
+///
+/// Every transport is bit-identical to [`TransportSpec::Engine`] when all
+/// offered work is submitted (the loopback tests pin this); `Tcp` adds
+/// real fault semantics — heartbeat expiry and a round deadline that turns
+/// silent dropouts into partial rounds.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub enum TransportSpec {
+    /// The in-process `RoundEngine` (the historical path; the default).
+    #[default]
+    Engine,
+    /// The service round loop over in-process participant threads
+    /// (one per `parallelism`), exercising the full protocol codec.
+    Loopback,
+    /// Serve rounds over TCP; participants join with `zsfa join`.
+    Tcp {
+        /// Listen address, e.g. `"127.0.0.1:7070"` (`:0` picks a port).
+        addr: String,
+        /// Heartbeat interval; a peer silent for 3× this is expired.
+        heartbeat_ms: u64,
+        /// Rounds close at full submission or after this deadline.
+        round_deadline_ms: u64,
+        /// Peers that must rendezvous before the first round is offered.
+        min_participants: usize,
+    },
+}
+
+impl TransportSpec {
+    /// A TCP transport with the default timing (500 ms heartbeats, 10 s
+    /// round deadline, one required participant).
+    pub fn tcp(addr: impl Into<String>) -> TransportSpec {
+        TransportSpec::Tcp {
+            addr: addr.into(),
+            heartbeat_ms: 500,
+            round_deadline_ms: 10_000,
+            min_participants: 1,
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // The spec
 // ---------------------------------------------------------------------------
@@ -341,6 +382,8 @@ pub struct ExperimentSpec {
     pub downlink_sign: Option<(ZParam, f32)>,
     /// Uniform sampling or the client-lifecycle scenario engine.
     pub participation: Participation,
+    /// In-process engine, loopback service, or TCP service.
+    pub transport: TransportSpec,
     pub output: OutputSpec,
 }
 
@@ -364,6 +407,7 @@ impl ExperimentSpec {
             plateau: None,
             downlink_sign: None,
             participation: Participation::Uniform,
+            transport: TransportSpec::Engine,
             output: OutputSpec::default(),
         }
     }
@@ -417,6 +461,11 @@ impl ExperimentSpec {
 
     pub fn participation(mut self, p: Participation) -> Self {
         self.participation = p;
+        self
+    }
+
+    pub fn transport(mut self, t: TransportSpec) -> Self {
+        self.transport = t;
         self
     }
 
@@ -592,6 +641,22 @@ impl ExperimentSpec {
         }
         if let Participation::Simulated(sc) = &self.participation {
             self.validate_scenario(sc, &mut errs);
+        }
+        if let TransportSpec::Tcp { addr, heartbeat_ms, round_deadline_ms, min_participants } =
+            &self.transport
+        {
+            if addr.is_empty() {
+                errs.push(SpecError::new("transport.addr", "must be non-empty"));
+            }
+            if *heartbeat_ms == 0 {
+                errs.push(SpecError::new("transport.heartbeat_ms", "must be >= 1"));
+            }
+            if *round_deadline_ms == 0 {
+                errs.push(SpecError::new("transport.round_deadline_ms", "must be >= 1"));
+            }
+            if *min_participants == 0 {
+                errs.push(SpecError::new("transport.min_participants", "must be >= 1"));
+            }
         }
         if self.output.subtract_optimal && self.workload.optimal_value().is_none() {
             errs.push(SpecError::new(
@@ -779,6 +844,11 @@ impl ExperimentSpec {
             );
         }
         m.insert("participation".into(), participation_json(&self.participation));
+        // The default engine transport is omitted, keeping pre-service
+        // spec files byte-identical through a round trip.
+        if self.transport != TransportSpec::Engine {
+            m.insert("transport".into(), transport_json(&self.transport));
+        }
         if !self.series.is_empty() {
             m.insert("series".into(), Json::Arr(self.series.iter().map(series_json).collect()));
         }
@@ -813,6 +883,9 @@ impl ExperimentSpec {
         }
         if let Some(j) = o.get("participation") {
             spec.participation = participation_from(j, "participation")?;
+        }
+        if let Some(j) = o.get("transport") {
+            spec.transport = transport_from(j, "transport")?;
         }
         if let Some(j) = o.get("series") {
             let arr =
@@ -1323,6 +1396,55 @@ fn participation_from(j: &Json, at: &str) -> Result<Participation, SpecError> {
     Ok(p)
 }
 
+fn transport_json(t: &TransportSpec) -> Json {
+    match t {
+        TransportSpec::Engine => jobj(vec![("kind", jstr("engine"))]),
+        TransportSpec::Loopback => jobj(vec![("kind", jstr("loopback"))]),
+        TransportSpec::Tcp { addr, heartbeat_ms, round_deadline_ms, min_participants } => {
+            jobj(vec![
+                ("kind", jstr("tcp")),
+                ("addr", jstr(addr)),
+                ("heartbeat_ms", jnum(*heartbeat_ms as f64)),
+                ("round_deadline_ms", jnum(*round_deadline_ms as f64)),
+                ("min_participants", jus(*min_participants)),
+            ])
+        }
+    }
+}
+
+fn transport_from(j: &Json, at: &str) -> Result<TransportSpec, SpecError> {
+    let o = Obj::new(j, at)?;
+    let t = match o.req_str("kind")? {
+        "engine" => TransportSpec::Engine,
+        "loopback" => TransportSpec::Loopback,
+        "tcp" => {
+            let TransportSpec::Tcp {
+                heartbeat_ms: d_hb,
+                round_deadline_ms: d_dl,
+                min_participants: d_min,
+                ..
+            } = TransportSpec::tcp("")
+            else {
+                unreachable!()
+            };
+            TransportSpec::Tcp {
+                addr: o.req_str("addr")?.to_string(),
+                heartbeat_ms: o.u64_or("heartbeat_ms", d_hb)?,
+                round_deadline_ms: o.u64_or("round_deadline_ms", d_dl)?,
+                min_participants: o.usize_or("min_participants", d_min)?,
+            }
+        }
+        other => {
+            return Err(SpecError::new(
+                o.path("kind"),
+                format!("unknown transport kind {other:?}"),
+            ))
+        }
+    };
+    o.finish()?;
+    Ok(t)
+}
+
 fn workload_json(w: &WorkloadSpec) -> Json {
     match w {
         WorkloadSpec::Consensus { clients, dim, problem_seed } => jobj(vec![
@@ -1656,5 +1778,79 @@ mod tests {
         assert_eq!(zparam_from(&Json::parse("\"inf\"").unwrap(), "z").unwrap(), ZParam::Inf);
         assert!(zparam_from(&Json::parse("0").unwrap(), "z").is_err());
         assert!(zparam_from(&Json::parse("1.5").unwrap(), "z").is_err());
+    }
+
+    #[test]
+    fn transport_json_round_trips_every_variant() {
+        for t in [
+            TransportSpec::Engine,
+            TransportSpec::Loopback,
+            TransportSpec::tcp("127.0.0.1:7070"),
+            TransportSpec::Tcp {
+                addr: "0.0.0.0:0".into(),
+                heartbeat_ms: 250,
+                round_deadline_ms: 60_000,
+                min_participants: 4,
+            },
+        ] {
+            let spec = tiny_spec().transport(t);
+            let back = ExperimentSpec::from_json(&spec.to_json()).unwrap();
+            assert_eq!(back, spec);
+        }
+    }
+
+    #[test]
+    fn default_engine_transport_is_absent_from_json() {
+        // Pre-service spec files must stay byte-compatible: the default
+        // transport adds no key, and loading such a file yields Engine.
+        let spec = tiny_spec();
+        assert!(!spec.to_json().contains("transport"));
+        let back = ExperimentSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back.transport, TransportSpec::Engine);
+    }
+
+    #[test]
+    fn tcp_transport_fills_timing_defaults() {
+        let spec = tiny_spec().transport(TransportSpec::tcp("127.0.0.1:7070"));
+        let json = spec.to_json().replace(
+            r#""heartbeat_ms":500,"kind":"tcp","min_participants":1,"round_deadline_ms":10000"#,
+            r#""kind":"tcp""#,
+        );
+        assert_ne!(json, spec.to_json(), "replace must have stripped the timing keys");
+        let back = ExperimentSpec::from_json(&json).unwrap();
+        assert_eq!(back.transport, TransportSpec::tcp("127.0.0.1:7070"));
+    }
+
+    #[test]
+    fn transport_rejects_unknown_kind_and_keys() {
+        let spec = tiny_spec().transport(TransportSpec::Loopback);
+        let bad_kind = spec.to_json().replace("\"loopback\"", "\"carrier-pigeon\"");
+        let err = ExperimentSpec::from_json(&bad_kind).unwrap_err();
+        assert_eq!(err.at, "transport.kind");
+        let bad_key = spec
+            .to_json()
+            .replace("\"kind\":\"loopback\"", "\"kind\":\"loopback\",\"adr\":\"x\"");
+        let err = ExperimentSpec::from_json(&bad_key).unwrap_err();
+        assert_eq!(err.at, "transport.adr");
+        assert!(err.reason.contains("unknown field"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_tcp_transport() {
+        let spec = tiny_spec().transport(TransportSpec::Tcp {
+            addr: String::new(),
+            heartbeat_ms: 0,
+            round_deadline_ms: 0,
+            min_participants: 0,
+        });
+        let errs = spec.validate().unwrap_err();
+        for at in [
+            "transport.addr",
+            "transport.heartbeat_ms",
+            "transport.round_deadline_ms",
+            "transport.min_participants",
+        ] {
+            assert!(errs.iter().any(|e| e.at == at), "missing {at}: {errs:?}");
+        }
     }
 }

@@ -38,7 +38,8 @@ use super::kernel;
 use super::pack::{PackedSigns, VoteAccumulator};
 use super::qsgd::{bits_per_level, Qsgd};
 use super::sign::SigmaRule;
-use super::sparsify::{top_k_indices_into, TopK};
+use super::sparsify::{top_k_indices_into, SparseMessage, TopK};
+use super::Message;
 use crate::rng::{Pcg64, ZParam};
 use crate::tensor;
 use std::sync::Mutex;
@@ -186,6 +187,54 @@ pub struct AbsorbCtx<'a> {
     pub hook: Option<&'a mut dyn SignKernelHook>,
 }
 
+/// One client's update as it crosses the service wire: the framed
+/// [`Message`] plus the EF scale sidecar (`EfMessage` is deliberately not a
+/// wire `Message` variant, so the scaled-sign family ships its f32 scale
+/// next to the sign frame — see `service::protocol`).
+#[derive(Debug, Clone)]
+pub struct RemoteUpdate {
+    pub msg: Message,
+    /// `Some(scale)` iff the family is EF-SignSGD.
+    pub ef_scale: Option<f32>,
+}
+
+/// Client-side context for [`Aggregator::compress_remote`] — the
+/// participant half of `absorb`: the same RNG stream and round scalars,
+/// minus the lane state and the server-only kernel hook.
+pub struct RemoteCtx<'a> {
+    pub rng: &'a mut Pcg64,
+    /// σ in effect this round, as published in the coordinator's offer.
+    pub round_sigma: f32,
+    /// The client's own EF residual (EF-SignSGD only).
+    pub ef: Option<&'a Mutex<EfState>>,
+}
+
+/// Why a remote submission cannot be folded. A frame can pass the wire
+/// checksum and still be unusable *for this round*: wrong compressor
+/// family, wrong dimension, or internally inconsistent contents.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RemoteError {
+    /// Message variant (or its parameters) do not match the aggregator.
+    WrongFamily,
+    /// Message dimension does not match the model dimension.
+    DimMismatch,
+    /// Message is self-inconsistent (index out of range, missing EF scale,
+    /// wrong support size).
+    Malformed,
+}
+
+impl std::fmt::Display for RemoteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RemoteError::WrongFamily => write!(f, "message family does not match aggregator"),
+            RemoteError::DimMismatch => write!(f, "message dimension mismatch"),
+            RemoteError::Malformed => write!(f, "malformed message contents"),
+        }
+    }
+}
+
+impl std::error::Error for RemoteError {}
+
 /// What the coordinator learns from the lane fold: the exact tallies that
 /// feed `RoundRecord` (bits from actual arrivals — an empty round bills
 /// zero because `reduce` is never reached) and the loss fed back to the
@@ -233,6 +282,94 @@ pub trait Aggregator: Send + Sync {
     /// aggregate the server steps with). Must only be called after at
     /// least one `absorb`.
     fn reduce(&self, lanes: &[Mutex<LaneAcc>], update: &mut [f32]) -> ReduceStats;
+
+    /// The participant half of `absorb`: compress `delta` into the wire
+    /// message a networked client submits. Consumes `ctx.rng` exactly as
+    /// `absorb` does, so a coordinator folding the result with
+    /// [`Aggregator::fold_remote`] reproduces the in-process round bit for
+    /// bit (pinned by the `remote_*` tests below).
+    fn compress_remote(
+        &self,
+        delta: &mut [f32],
+        ctx: RemoteCtx<'_>,
+        scratch: &mut Scratch,
+    ) -> RemoteUpdate;
+
+    /// The coordinator half: validate a submitted [`RemoteUpdate`] against
+    /// this aggregator/dimension and fold it into `lane` with the same
+    /// weights and bit tallies `absorb` would have used.
+    fn fold_remote(
+        &self,
+        upd: &RemoteUpdate,
+        loss: f64,
+        inv_m: f32,
+        lane: &mut LaneAcc,
+        scratch: &mut Scratch,
+    ) -> Result<(), RemoteError>;
+}
+
+/// Shared `fold_remote` validation for the packed-sign families.
+fn fold_remote_signs(upd: &RemoteUpdate, loss: f64, lane: &mut LaneAcc) -> Result<(), RemoteError> {
+    match &upd.msg {
+        Message::Signs(p) => {
+            if p.len() != lane.d {
+                return Err(RemoteError::DimMismatch);
+            }
+            lane.add_signs(p, p.len() as u64, loss);
+            Ok(())
+        }
+        _ => Err(RemoteError::WrongFamily),
+    }
+}
+
+/// Shared `fold_remote` validation for uncompressed f32 payloads.
+fn fold_remote_dense(
+    upd: &RemoteUpdate,
+    loss: f64,
+    inv_m: f32,
+    lane: &mut LaneAcc,
+) -> Result<(), RemoteError> {
+    match &upd.msg {
+        Message::Dense(v) => {
+            if v.len() != lane.d {
+                return Err(RemoteError::DimMismatch);
+            }
+            lane.add_dense(v, inv_m, 32 * v.len() as u64, loss);
+            Ok(())
+        }
+        _ => Err(RemoteError::WrongFamily),
+    }
+}
+
+/// Validate a sparse submission and scatter it into `scratch.dense`
+/// (zeroed first). `k_want` is the support size an honest client of this
+/// configuration always sends.
+fn scatter_sparse(
+    upd: &RemoteUpdate,
+    d: usize,
+    k_want: usize,
+    sign_coded: bool,
+    scratch: &mut Scratch,
+) -> Result<(), RemoteError> {
+    let s = match &upd.msg {
+        Message::Sparse(s) if s.sign_coded == sign_coded => s,
+        Message::Sparse(_) => return Err(RemoteError::WrongFamily),
+        _ => return Err(RemoteError::WrongFamily),
+    };
+    if s.dim != d {
+        return Err(RemoteError::DimMismatch);
+    }
+    if s.idx.len() != k_want || s.vals.len() != s.idx.len() {
+        return Err(RemoteError::Malformed);
+    }
+    if s.idx.iter().any(|&i| i as usize >= d) {
+        return Err(RemoteError::Malformed);
+    }
+    scratch.dense.iter_mut().for_each(|v| *v = 0.0);
+    for (&i, &v) in s.idx.iter().zip(&s.vals) {
+        scratch.dense[i as usize] = v;
+    }
+    Ok(())
 }
 
 /// Lane fold for the sign family: merge lane vote shards (exact integer
@@ -305,6 +442,26 @@ impl Aggregator for DenseAgg {
     fn reduce(&self, lanes: &[Mutex<LaneAcc>], update: &mut [f32]) -> ReduceStats {
         reduce_dense(lanes, update)
     }
+
+    fn compress_remote(
+        &self,
+        delta: &mut [f32],
+        _ctx: RemoteCtx<'_>,
+        _scratch: &mut Scratch,
+    ) -> RemoteUpdate {
+        RemoteUpdate { msg: Message::Dense(delta.to_vec()), ef_scale: None }
+    }
+
+    fn fold_remote(
+        &self,
+        upd: &RemoteUpdate,
+        loss: f64,
+        inv_m: f32,
+        lane: &mut LaneAcc,
+        _scratch: &mut Scratch,
+    ) -> Result<(), RemoteError> {
+        fold_remote_dense(upd, loss, inv_m, lane)
+    }
 }
 
 /// The paper's stochastic sign `Sign(delta + σ·ξ_z)` — Algorithm 1's
@@ -349,6 +506,34 @@ impl Aggregator for ZSignAgg {
     fn reduce(&self, lanes: &[Mutex<LaneAcc>], update: &mut [f32]) -> ReduceStats {
         reduce_votes(lanes, update)
     }
+
+    fn compress_remote(
+        &self,
+        delta: &mut [f32],
+        ctx: RemoteCtx<'_>,
+        scratch: &mut Scratch,
+    ) -> RemoteUpdate {
+        // Same σ resolution and fused kernel as `absorb` (no hook on the
+        // remote path — deployed clients run the Rust reference kernel).
+        let s = match self.sigma {
+            SigmaRule::Fixed(_) => ctx.round_sigma,
+            SigmaRule::L2Norm => tensor::norm2(delta) as f32,
+            SigmaRule::InfNorm => tensor::norm_inf(delta) as f32,
+        };
+        kernel::stochastic_sign_packed(delta, self.z, s, ctx.rng, &mut scratch.packed);
+        RemoteUpdate { msg: Message::Signs(scratch.packed.clone()), ef_scale: None }
+    }
+
+    fn fold_remote(
+        &self,
+        upd: &RemoteUpdate,
+        loss: f64,
+        _inv_m: f32,
+        lane: &mut LaneAcc,
+        _scratch: &mut Scratch,
+    ) -> Result<(), RemoteError> {
+        fold_remote_signs(upd, loss, lane)
+    }
 }
 
 /// EF-SignSGD: compress the stepsize-scaled update γ·Σg through the
@@ -386,6 +571,45 @@ impl Aggregator for EfAgg {
     fn reduce(&self, lanes: &[Mutex<LaneAcc>], update: &mut [f32]) -> ReduceStats {
         reduce_dense(lanes, update)
     }
+
+    fn compress_remote(
+        &self,
+        delta: &mut [f32],
+        ctx: RemoteCtx<'_>,
+        _scratch: &mut Scratch,
+    ) -> RemoteUpdate {
+        tensor::scale(self.client_lr, delta);
+        let msg = ctx
+            .ef
+            .expect("EF residual missing")
+            .lock()
+            .unwrap()
+            .step(delta);
+        RemoteUpdate { msg: Message::Signs(msg.signs), ef_scale: Some(msg.scale) }
+    }
+
+    fn fold_remote(
+        &self,
+        upd: &RemoteUpdate,
+        loss: f64,
+        inv_m: f32,
+        lane: &mut LaneAcc,
+        scratch: &mut Scratch,
+    ) -> Result<(), RemoteError> {
+        let scale = upd.ef_scale.ok_or(RemoteError::Malformed)?;
+        let p = match &upd.msg {
+            Message::Signs(p) => p,
+            _ => return Err(RemoteError::WrongFamily),
+        };
+        if p.len() != lane.d {
+            return Err(RemoteError::DimMismatch);
+        }
+        // decode(msg) is bit-identical to the fused `step_dequantized_into`
+        // output (pinned in `error_feedback`), so the fold matches `absorb`.
+        p.decode_scaled_into(scale, &mut scratch.dense);
+        lane.add_dense(&scratch.dense, inv_m / self.client_lr, 32 + p.len() as u64, loss);
+        Ok(())
+    }
 }
 
 /// QSGD / FedPAQ unbiased quantizer with `s` levels.
@@ -413,6 +637,42 @@ impl Aggregator for QsgdAgg {
 
     fn reduce(&self, lanes: &[Mutex<LaneAcc>], update: &mut [f32]) -> ReduceStats {
         reduce_dense(lanes, update)
+    }
+
+    fn compress_remote(
+        &self,
+        delta: &mut [f32],
+        ctx: RemoteCtx<'_>,
+        _scratch: &mut Scratch,
+    ) -> RemoteUpdate {
+        // `quantize` draws and rounds exactly like the fused
+        // `quantize_dequantize_into` the in-process absorb uses (pinned by
+        // `qsgd::fused_matches_quantize_decode`).
+        let q = Qsgd::new(self.s).quantize(delta, ctx.rng);
+        RemoteUpdate { msg: Message::Quantized(q), ef_scale: None }
+    }
+
+    fn fold_remote(
+        &self,
+        upd: &RemoteUpdate,
+        loss: f64,
+        inv_m: f32,
+        lane: &mut LaneAcc,
+        scratch: &mut Scratch,
+    ) -> Result<(), RemoteError> {
+        let q = match &upd.msg {
+            Message::Quantized(q) => q,
+            _ => return Err(RemoteError::WrongFamily),
+        };
+        if q.s != self.s {
+            return Err(RemoteError::WrongFamily);
+        }
+        if q.levels.len() != lane.d {
+            return Err(RemoteError::DimMismatch);
+        }
+        q.decode_into(&mut scratch.dense);
+        lane.add_dense(&scratch.dense, inv_m, self.nominal_client_bits(lane.d), loss);
+        Ok(())
     }
 }
 
@@ -449,6 +709,33 @@ impl Aggregator for DpSignAgg {
     fn reduce(&self, lanes: &[Mutex<LaneAcc>], update: &mut [f32]) -> ReduceStats {
         reduce_votes(lanes, update)
     }
+
+    fn compress_remote(
+        &self,
+        delta: &mut [f32],
+        ctx: RemoteCtx<'_>,
+        scratch: &mut Scratch,
+    ) -> RemoteUpdate {
+        tensor::scale(self.client_lr, delta);
+        tensor::clip_l2(delta, self.clip as f64);
+        let noise_std = self.noise_mult * self.clip;
+        for v in delta.iter_mut() {
+            *v += noise_std * ctx.rng.normal() as f32;
+        }
+        kernel::pack_f32_signs_into(delta, &mut scratch.packed);
+        RemoteUpdate { msg: Message::Signs(scratch.packed.clone()), ef_scale: None }
+    }
+
+    fn fold_remote(
+        &self,
+        upd: &RemoteUpdate,
+        loss: f64,
+        _inv_m: f32,
+        lane: &mut LaneAcc,
+        _scratch: &mut Scratch,
+    ) -> Result<(), RemoteError> {
+        fold_remote_signs(upd, loss, lane)
+    }
 }
 
 /// Uncompressed DP-FedAvg baseline (clip + Gaussian noise, no sign).
@@ -483,6 +770,32 @@ impl Aggregator for DpDenseAgg {
 
     fn reduce(&self, lanes: &[Mutex<LaneAcc>], update: &mut [f32]) -> ReduceStats {
         reduce_dense(lanes, update)
+    }
+
+    fn compress_remote(
+        &self,
+        delta: &mut [f32],
+        ctx: RemoteCtx<'_>,
+        _scratch: &mut Scratch,
+    ) -> RemoteUpdate {
+        tensor::scale(self.client_lr, delta);
+        tensor::clip_l2(delta, self.clip as f64);
+        let noise_std = self.noise_mult * self.clip;
+        for v in delta.iter_mut() {
+            *v += noise_std * ctx.rng.normal() as f32;
+        }
+        RemoteUpdate { msg: Message::Dense(delta.to_vec()), ef_scale: None }
+    }
+
+    fn fold_remote(
+        &self,
+        upd: &RemoteUpdate,
+        loss: f64,
+        inv_m: f32,
+        lane: &mut LaneAcc,
+        _scratch: &mut Scratch,
+    ) -> Result<(), RemoteError> {
+        fold_remote_dense(upd, loss, inv_m, lane)
     }
 }
 
@@ -519,6 +832,40 @@ impl Aggregator for TopKAgg {
 
     fn reduce(&self, lanes: &[Mutex<LaneAcc>], update: &mut [f32]) -> ReduceStats {
         reduce_dense(lanes, update)
+    }
+
+    fn compress_remote(
+        &self,
+        delta: &mut [f32],
+        _ctx: RemoteCtx<'_>,
+        scratch: &mut Scratch,
+    ) -> RemoteUpdate {
+        let k = TopK::new(self.frac).k_for(delta.len());
+        top_k_indices_into(delta, k, &mut scratch.idx);
+        let vals = scratch.idx.iter().map(|&i| delta[i as usize]).collect();
+        RemoteUpdate {
+            msg: Message::Sparse(SparseMessage {
+                dim: delta.len(),
+                idx: scratch.idx.clone(),
+                vals,
+                sign_coded: false,
+            }),
+            ef_scale: None,
+        }
+    }
+
+    fn fold_remote(
+        &self,
+        upd: &RemoteUpdate,
+        loss: f64,
+        inv_m: f32,
+        lane: &mut LaneAcc,
+        scratch: &mut Scratch,
+    ) -> Result<(), RemoteError> {
+        let k = TopK::new(self.frac).k_for(lane.d);
+        scatter_sparse(upd, lane.d, k, false, scratch)?;
+        lane.add_dense(&scratch.dense, inv_m, self.nominal_client_bits(lane.d), loss);
+        Ok(())
     }
 }
 
@@ -561,6 +908,55 @@ impl Aggregator for SparseSignAgg {
 
     fn reduce(&self, lanes: &[Mutex<LaneAcc>], update: &mut [f32]) -> ReduceStats {
         reduce_dense(lanes, update)
+    }
+
+    fn compress_remote(
+        &self,
+        delta: &mut [f32],
+        ctx: RemoteCtx<'_>,
+        scratch: &mut Scratch,
+    ) -> RemoteUpdate {
+        // Same sorted-support RNG draw order and scale arithmetic as
+        // `absorb` (and as the `sparsify::SparseSign` wire compressor).
+        let k = TopK::new(self.frac).k_for(delta.len());
+        top_k_indices_into(delta, k, &mut scratch.idx);
+        let scale = (scratch.idx.iter().map(|&i| delta[i as usize].abs() as f64).sum::<f64>()
+            / k as f64) as f32;
+        let vals = scratch
+            .idx
+            .iter()
+            .map(|&i| {
+                let v = delta[i as usize] as f64 + self.sigma as f64 * ctx.rng.z_noise(self.z);
+                if v >= 0.0 {
+                    scale
+                } else {
+                    -scale
+                }
+            })
+            .collect();
+        RemoteUpdate {
+            msg: Message::Sparse(SparseMessage {
+                dim: delta.len(),
+                idx: scratch.idx.clone(),
+                vals,
+                sign_coded: true,
+            }),
+            ef_scale: None,
+        }
+    }
+
+    fn fold_remote(
+        &self,
+        upd: &RemoteUpdate,
+        loss: f64,
+        inv_m: f32,
+        lane: &mut LaneAcc,
+        scratch: &mut Scratch,
+    ) -> Result<(), RemoteError> {
+        let k = TopK::new(self.frac).k_for(lane.d);
+        scatter_sparse(upd, lane.d, k, true, scratch)?;
+        lane.add_dense(&scratch.dense, inv_m, self.nominal_client_bits(lane.d), loss);
+        Ok(())
     }
 }
 
@@ -829,6 +1225,258 @@ mod tests {
         };
         ef_agg.absorb(&mut delta, 0.0, c, &mut lanes[0].lock().unwrap(), &mut scratch);
         assert_eq!(lanes[0].lock().unwrap().bits(), ef_agg.nominal_client_bits(d));
+    }
+
+    /// The service seam's keystone: for every stateless family,
+    /// `compress_remote` → wire encode/decode → `fold_remote` must
+    /// reproduce the in-process `absorb` fold bit for bit — same reduce
+    /// output, same loss/bits/arrived tallies.
+    #[test]
+    fn remote_fold_matches_absorb_for_every_family() {
+        use crate::compress::wire;
+        let d = 130;
+        let m = 7;
+        let inv_m = 1.0f32 / m as f32;
+        let aggs: Vec<Box<dyn Aggregator>> = vec![
+            Box::new(DenseAgg),
+            Box::new(ZSignAgg { z: ZParam::Finite(1), sigma: SigmaRule::Fixed(1.0) }),
+            Box::new(ZSignAgg { z: ZParam::Inf, sigma: SigmaRule::L2Norm }),
+            Box::new(QsgdAgg { s: 1 }),
+            Box::new(QsgdAgg { s: 4 }),
+            Box::new(DpSignAgg { clip: 0.5, noise_mult: 1.0, client_lr: 0.1 }),
+            Box::new(DpDenseAgg { clip: 0.5, noise_mult: 1.0, client_lr: 0.1 }),
+            Box::new(TopKAgg { frac: 0.1 }),
+            Box::new(SparseSignAgg { frac: 0.1, z: ZParam::Finite(1), sigma: 1.0 }),
+        ];
+        for (ai, agg) in aggs.iter().enumerate() {
+            let topo = ReduceTopology::new(3, m);
+            let mut data_rng = Pcg64::seeded(0x5e7 + ai as u64);
+            let deltas: Vec<Vec<f32>> = (0..m).map(|_| random_delta(&mut data_rng, d)).collect();
+
+            let lanes_a = mk_lanes(topo.lanes(), d);
+            let mut scratch = Scratch::new(d);
+            for slot in 0..m {
+                let mut rng = Pcg64::new(42, slot as u64);
+                let mut delta = deltas[slot].clone();
+                let c = AbsorbCtx { rng: &mut rng, round_sigma: 0.7, inv_m, ef: None, hook: None };
+                agg.absorb(
+                    &mut delta,
+                    slot as f64 * 0.25,
+                    c,
+                    &mut lanes_a[topo.lane_of(slot)].lock().unwrap(),
+                    &mut scratch,
+                );
+            }
+            let mut want = vec![0.0f32; d];
+            let want_stats = agg.reduce(&lanes_a, &mut want);
+
+            let lanes_b = mk_lanes(topo.lanes(), d);
+            for slot in 0..m {
+                let mut rng = Pcg64::new(42, slot as u64);
+                let mut delta = deltas[slot].clone();
+                let upd = agg.compress_remote(
+                    &mut delta,
+                    RemoteCtx { rng: &mut rng, round_sigma: 0.7, ef: None },
+                    &mut scratch,
+                );
+                // Round-trip through the actual wire frame — exactly what a
+                // networked coordinator decodes before folding.
+                let msg = wire::decode(&wire::encode(&upd.msg)).unwrap();
+                let upd = RemoteUpdate { msg, ef_scale: upd.ef_scale };
+                agg.fold_remote(
+                    &upd,
+                    slot as f64 * 0.25,
+                    inv_m,
+                    &mut lanes_b[topo.lane_of(slot)].lock().unwrap(),
+                    &mut scratch,
+                )
+                .unwrap();
+            }
+            let mut got = vec![0.0f32; d];
+            let got_stats = agg.reduce(&lanes_b, &mut got);
+
+            for (j, (w, g)) in want.iter().zip(&got).enumerate() {
+                assert_eq!(w.to_bits(), g.to_bits(), "agg #{ai} coord {j}");
+            }
+            assert_eq!(want_stats.loss_sum.to_bits(), got_stats.loss_sum.to_bits(), "agg #{ai}");
+            assert_eq!(want_stats.bits, got_stats.bits, "agg #{ai}");
+            assert_eq!(want_stats.arrived, got_stats.arrived, "agg #{ai}");
+        }
+    }
+
+    /// EF-SignSGD: the remote path must track the per-client residual
+    /// trajectory bit-for-bit across rounds (client-side state, server-side
+    /// fold of the decoded scaled sign).
+    #[test]
+    fn remote_fold_matches_absorb_for_error_feedback() {
+        use crate::compress::wire;
+        let d = 67;
+        let m = 3;
+        let inv_m = 1.0f32 / m as f32;
+        let agg = EfAgg { client_lr: 0.1 };
+        let ef_a: Vec<Mutex<EfState>> = (0..m).map(|_| Mutex::new(EfState::new(d))).collect();
+        let ef_b: Vec<Mutex<EfState>> = (0..m).map(|_| Mutex::new(EfState::new(d))).collect();
+        for round in 0..5u64 {
+            let topo = ReduceTopology::new(2, m);
+            let mut data_rng = Pcg64::seeded(900 + round);
+            let deltas: Vec<Vec<f32>> = (0..m).map(|_| random_delta(&mut data_rng, d)).collect();
+
+            let lanes_a = mk_lanes(topo.lanes(), d);
+            let mut scratch = Scratch::new(d);
+            for slot in 0..m {
+                let mut rng = Pcg64::new(7 + round, slot as u64);
+                let mut delta = deltas[slot].clone();
+                let c = AbsorbCtx {
+                    rng: &mut rng,
+                    round_sigma: 0.0,
+                    inv_m,
+                    ef: Some(&ef_a[slot]),
+                    hook: None,
+                };
+                agg.absorb(
+                    &mut delta,
+                    0.5,
+                    c,
+                    &mut lanes_a[topo.lane_of(slot)].lock().unwrap(),
+                    &mut scratch,
+                );
+            }
+            let mut want = vec![0.0f32; d];
+            let want_stats = agg.reduce(&lanes_a, &mut want);
+
+            let lanes_b = mk_lanes(topo.lanes(), d);
+            for slot in 0..m {
+                let mut rng = Pcg64::new(7 + round, slot as u64);
+                let mut delta = deltas[slot].clone();
+                let upd = agg.compress_remote(
+                    &mut delta,
+                    RemoteCtx { rng: &mut rng, round_sigma: 0.0, ef: Some(&ef_b[slot]) },
+                    &mut scratch,
+                );
+                let msg = wire::decode(&wire::encode(&upd.msg)).unwrap();
+                let upd = RemoteUpdate { msg, ef_scale: upd.ef_scale };
+                agg.fold_remote(
+                    &upd,
+                    0.5,
+                    inv_m,
+                    &mut lanes_b[topo.lane_of(slot)].lock().unwrap(),
+                    &mut scratch,
+                )
+                .unwrap();
+            }
+            let mut got = vec![0.0f32; d];
+            let got_stats = agg.reduce(&lanes_b, &mut got);
+
+            for (j, (w, g)) in want.iter().zip(&got).enumerate() {
+                assert_eq!(w.to_bits(), g.to_bits(), "round {round} coord {j}");
+            }
+            assert_eq!(want_stats, got_stats, "round {round}");
+            for slot in 0..m {
+                let ra = ef_a[slot].lock().unwrap();
+                let rb = ef_b[slot].lock().unwrap();
+                for (a, b) in ra.residual().iter().zip(rb.residual()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "round {round} slot {slot}");
+                }
+            }
+        }
+    }
+
+    /// `fold_remote` rejects — never panics on — submissions that are
+    /// valid frames but wrong for this round.
+    #[test]
+    fn fold_remote_validates_family_and_dimension() {
+        let d = 40;
+        let mut scratch = Scratch::new(d);
+        let mk_lane = || LaneAcc::new(d);
+
+        let sign = ZSignAgg { z: ZParam::Finite(1), sigma: SigmaRule::Fixed(1.0) };
+        let dense = DenseAgg;
+        let qsgd = QsgdAgg { s: 2 };
+        let topk = TopKAgg { frac: 0.1 };
+        let ef = EfAgg { client_lr: 0.1 };
+
+        let dense_msg = RemoteUpdate { msg: Message::Dense(vec![0.5; d]), ef_scale: None };
+        let short_dense = RemoteUpdate { msg: Message::Dense(vec![0.5; d - 1]), ef_scale: None };
+        let signs_msg = RemoteUpdate {
+            msg: Message::Signs(PackedSigns::from_signs(&vec![1i8; d])),
+            ef_scale: None,
+        };
+        let short_signs = RemoteUpdate {
+            msg: Message::Signs(PackedSigns::from_signs(&vec![1i8; d - 3])),
+            ef_scale: None,
+        };
+
+        // Family mismatches.
+        assert_eq!(
+            sign.fold_remote(&dense_msg, 0.0, 1.0, &mut mk_lane(), &mut scratch),
+            Err(RemoteError::WrongFamily)
+        );
+        assert_eq!(
+            dense.fold_remote(&signs_msg, 0.0, 1.0, &mut mk_lane(), &mut scratch),
+            Err(RemoteError::WrongFamily)
+        );
+        assert_eq!(
+            qsgd.fold_remote(&dense_msg, 0.0, 1.0, &mut mk_lane(), &mut scratch),
+            Err(RemoteError::WrongFamily)
+        );
+        // QSGD level-count (s) mismatch is a family error too.
+        let wrong_s = RemoteUpdate {
+            msg: Message::Quantized(crate::compress::qsgd::Quantized {
+                norm: 1.0,
+                levels: vec![0; d],
+                s: 7,
+            }),
+            ef_scale: None,
+        };
+        assert_eq!(
+            qsgd.fold_remote(&wrong_s, 0.0, 1.0, &mut mk_lane(), &mut scratch),
+            Err(RemoteError::WrongFamily)
+        );
+
+        // Dimension mismatches.
+        assert_eq!(
+            sign.fold_remote(&short_signs, 0.0, 1.0, &mut mk_lane(), &mut scratch),
+            Err(RemoteError::DimMismatch)
+        );
+        assert_eq!(
+            dense.fold_remote(&short_dense, 0.0, 1.0, &mut mk_lane(), &mut scratch),
+            Err(RemoteError::DimMismatch)
+        );
+
+        // EF requires the scale sidecar.
+        assert_eq!(
+            ef.fold_remote(&signs_msg, 0.0, 1.0, &mut mk_lane(), &mut scratch),
+            Err(RemoteError::Malformed)
+        );
+
+        // Sparse: out-of-range index and wrong support size.
+        let bad_idx = RemoteUpdate {
+            msg: Message::Sparse(SparseMessage {
+                dim: d,
+                idx: vec![0, 1, 2, (d as u32) + 5],
+                vals: vec![1.0; 4],
+                sign_coded: false,
+            }),
+            ef_scale: None,
+        };
+        assert_eq!(
+            topk.fold_remote(&bad_idx, 0.0, 1.0, &mut mk_lane(), &mut scratch),
+            Err(RemoteError::Malformed)
+        );
+        let wrong_k = RemoteUpdate {
+            msg: Message::Sparse(SparseMessage {
+                dim: d,
+                idx: vec![0],
+                vals: vec![1.0],
+                sign_coded: false,
+            }),
+            ef_scale: None,
+        };
+        // k_for(0.1, 40) = 4, so a 1-element support is malformed.
+        assert_eq!(
+            topk.fold_remote(&wrong_k, 0.0, 1.0, &mut mk_lane(), &mut scratch),
+            Err(RemoteError::Malformed)
+        );
     }
 
     /// `reset` keeps allocations but clears all fold state and tallies.

@@ -1,21 +1,74 @@
-//! Minimal error plumbing (the vendor set has no `anyhow`).
+//! The crate's one error surface (the vendor set has no `anyhow`).
 //!
 //! A drop-in subset of the anyhow API used by the drivers and the runtime:
 //! [`Error`], [`Result`], the [`anyhow!`]/[`bail!`] macros and the
-//! [`Context`] extension trait. The error carries a plain message string —
-//! the coordinator reports errors to humans; nothing matches on error kinds.
+//! [`Context`] extension trait — plus a coarse [`ErrorKind`] so the places
+//! that *do* need to branch (the service retry loop, spec validation
+//! reporting, CLI exit paths) can, without growing a per-module error enum
+//! zoo. `Session`, the coordinator/participant service and the CLI all
+//! return this same type.
+//!
+//! The kind taxonomy is deliberately small:
+//! * [`ErrorKind::Spec`] — an `ExperimentSpec` failed validation or JSON
+//!   decoding (field-path messages from `api::spec`);
+//! * [`ErrorKind::Protocol`] — a service message was malformed or a peer
+//!   violated the coordinator grammar;
+//! * [`ErrorKind::Timeout`] — a deadline expired (rendezvous patience,
+//!   round deadline);
+//! * [`ErrorKind::Other`] — everything else, including every error
+//!   converted from a std error type via `?`.
 
 use std::fmt;
 
-/// A human-readable error message.
+/// Coarse classification of an [`Error`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// Anything without a more specific classification.
+    Other,
+    /// Experiment-spec validation/decoding failure (field-path message).
+    Spec,
+    /// Service protocol violation (malformed frame, grammar breach).
+    Protocol,
+    /// A deadline expired.
+    Timeout,
+}
+
+/// A human-readable error message with a coarse kind.
 pub struct Error {
+    kind: ErrorKind,
     msg: String,
 }
 
 impl Error {
-    /// Build an error from anything displayable.
+    /// Build an `Other`-kind error from anything displayable.
     pub fn msg(msg: impl fmt::Display) -> Error {
-        Error { msg: msg.to_string() }
+        Error { kind: ErrorKind::Other, msg: msg.to_string() }
+    }
+
+    /// A spec validation/decoding error.
+    pub fn spec(msg: impl fmt::Display) -> Error {
+        Error { kind: ErrorKind::Spec, msg: msg.to_string() }
+    }
+
+    /// A service protocol violation.
+    pub fn protocol(msg: impl fmt::Display) -> Error {
+        Error { kind: ErrorKind::Protocol, msg: msg.to_string() }
+    }
+
+    /// An expired deadline.
+    pub fn timeout(msg: impl fmt::Display) -> Error {
+        Error { kind: ErrorKind::Timeout, msg: msg.to_string() }
+    }
+
+    pub fn kind(&self) -> ErrorKind {
+        self.kind
+    }
+
+    /// Re-wrap with a message prefix, preserving the kind (the [`Context`]
+    /// trait cannot — it accepts any `Display` error, so it defaults to
+    /// `Other`; use this when the kind must survive).
+    pub fn wrap(self, ctx: impl fmt::Display) -> Error {
+        Error { kind: self.kind, msg: format!("{ctx}: {}", self.msg) }
     }
 }
 
@@ -133,5 +186,20 @@ mod tests {
     #[test]
     fn debug_is_message() {
         assert_eq!(format!("{:?}", anyhow!("msg")), "msg");
+    }
+
+    #[test]
+    fn kinds_classify_and_survive_wrap() {
+        assert_eq!(anyhow!("x").kind(), ErrorKind::Other);
+        assert_eq!(Error::spec("series[0].rounds: must be >= 1").kind(), ErrorKind::Spec);
+        assert_eq!(Error::protocol("bad tag").kind(), ErrorKind::Protocol);
+        let t = Error::timeout("round deadline");
+        assert_eq!(t.kind(), ErrorKind::Timeout);
+        let wrapped = t.wrap("round 3");
+        assert_eq!(wrapped.kind(), ErrorKind::Timeout);
+        assert_eq!(wrapped.to_string(), "round 3: round deadline");
+        // Context on a foreign error type defaults to Other.
+        let r: std::result::Result<(), &str> = Err("inner");
+        assert_eq!(r.context("c").unwrap_err().kind(), ErrorKind::Other);
     }
 }

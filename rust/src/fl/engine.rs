@@ -40,7 +40,8 @@ use super::metrics::{RoundRecord, RunResult};
 use super::plateau::PlateauController;
 use super::server::{Participation, ServerConfig};
 use crate::compress::agg::{
-    AbsorbCtx, Aggregator, LaneAcc, ReduceStats, ReduceTopology, Scratch, SignKernelHook,
+    AbsorbCtx, Aggregator, LaneAcc, ReduceStats, ReduceTopology, RemoteError, RemoteUpdate,
+    Scratch, SignKernelHook,
 };
 use crate::compress::error_feedback::EfState;
 use crate::compress::kernel;
@@ -272,8 +273,87 @@ impl<'a> RoundEngine<'a> {
         backend: &mut dyn TrainBackend,
         on_record: &mut dyn FnMut(&RoundRecord),
     ) -> RunResult {
+        self.reset_run();
+        let mut params = backend.init_params();
+        assert_eq!(params.len(), self.d);
+        let root = self.root();
+        let mut policy = self.build_policy(&root);
+        let mut records = Vec::new();
+        let mut sim_time_s = 0.0f64;
+
+        for t in 0..self.cfg.rounds {
+            let timer = Timer::start();
+            // 1. Participation: the policy decides who reports this round
+            //    (and what happened to everyone else it selected).
+            let plan = policy.plan_round(t, &root);
+            let arrived = plan.participants.len();
+            let selected = plan.outcomes.len();
+            sim_time_s += plan.duration_s;
+            self.bill_downlink(plan.downloads);
+
+            // Effective sigma this round (plateau overrides the fixed value).
+            let round_sigma = self.round_sigma();
+
+            // 2–5. Local updates + streamed compression + lane reduce +
+            //    server step. When nobody reported (every selected client
+            //    dropped, missed the deadline or was unreachable) the model
+            //    simply doesn't move this round — and zero uplink is billed,
+            //    because no aggregator tally exists.
+            if arrived > 0 {
+                let stats =
+                    self.run_clients(backend, &root, t, &params, &plan.participants, round_sigma);
+                debug_assert_eq!(stats.arrived as usize, arrived);
+                self.apply_server_step(t, &root, &mut params, &stats);
+            }
+
+            // 7. Evaluation.
+            if self.should_eval(t) {
+                let rec = self.eval_record(
+                    backend,
+                    t,
+                    &params,
+                    round_sigma,
+                    timer.elapsed_ms(),
+                    sim_time_s,
+                    arrived as u32,
+                    selected as u32,
+                );
+                on_record(&rec);
+                records.push(rec);
+            }
+        }
+
+        RunResult { algorithm: self.algo.name.clone(), records }
+    }
+
+    // --- The round loop, exploded into stages. ---------------------------
+    //
+    // `run_observed` above composes these in-process; the networked
+    // coordinator (`service::ServiceHost`) composes the *same* stages
+    // around remotely-submitted updates, which is what makes the loopback
+    // service bit-identical to the engine by construction.
+
+    /// Effective cohort size per round (`clients_per_round`, clamped to
+    /// the population; the whole population when unset).
+    pub fn clients_per_round(&self) -> usize {
+        self.cfg.clients_per_round.unwrap_or(self.n).min(self.n)
+    }
+
+    /// The algorithm's display name (CSV series label).
+    pub fn algorithm_name(&self) -> &str {
+        &self.algo.name
+    }
+
+    /// Parameter dimension `d`.
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// (Re)initialize all run-scoped state so the engine can be reused,
+    /// and assert the run's preconditions.
+    pub fn reset_run(&mut self) {
         let n = self.n;
-        let m_per_round = self.cfg.clients_per_round.unwrap_or(n).min(n);
+        let m_per_round = self.clients_per_round();
         assert!(m_per_round >= 1);
         if matches!(self.algo.compression, Compression::ErrorFeedback) {
             let full = matches!(self.cfg.participation, Participation::Uniform)
@@ -283,8 +363,6 @@ impl<'a> RoundEngine<'a> {
                 "EF-SignSGD cannot track residuals under partial participation (paper §1.1)"
             );
         }
-
-        // (Re)initialize all run-scoped state so the engine can be reused.
         self.momentum_buf.iter_mut().for_each(|v| *v = 0.0);
         self.adam_v.iter_mut().for_each(|v| *v = 0.0);
         self.adam_t = 0;
@@ -297,12 +375,20 @@ impl<'a> RoundEngine<'a> {
         };
         self.bits_up = 0;
         self.bits_down = 0;
+    }
 
-        let mut params = backend.init_params();
-        assert_eq!(params.len(), self.d);
-        let root = Pcg64::new(self.cfg.seed, 0xa11ce);
-        let mut policy: Box<dyn ParticipationPolicy> = match &self.cfg.participation {
-            Participation::Uniform => Box::new(UniformPolicy { n, m: m_per_round }),
+    /// The run's root RNG. The `(seed, 0xa11ce)` derivation is part of the
+    /// reproducibility contract shared with every networked participant.
+    pub fn root(&self) -> Pcg64 {
+        Pcg64::new(self.cfg.seed, 0xa11ce)
+    }
+
+    /// Build the participation policy for one run.
+    pub fn build_policy(&self, root: &Pcg64) -> Box<dyn ParticipationPolicy> {
+        match &self.cfg.participation {
+            Participation::Uniform => {
+                Box::new(UniformPolicy { n: self.n, m: self.clients_per_round() })
+            }
             Participation::Simulated(sc) => {
                 // The scheduler's transfer-size model reads the
                 // aggregator's exact per-client wire cost.
@@ -314,136 +400,181 @@ impl<'a> RoundEngine<'a> {
                 };
                 Box::new(ScenarioPolicy::new(
                     sc.clone(),
-                    n,
+                    self.n,
                     self.algo.local_steps,
                     up_bits,
                     down_bits,
-                    &root,
+                    root,
                 ))
             }
+        }
+    }
+
+    /// Downlink accounting: bill only clients that actually finished
+    /// downloading the model before the round closed (d bits per
+    /// coordinate compressed, 32·d uncompressed) — not unreachable
+    /// candidates, and not clients cut off mid-download.
+    pub fn bill_downlink(&mut self, downloads: usize) {
+        let down_per_client = if self.cfg.downlink_sign.is_some() {
+            self.d
+        } else {
+            32 * self.d
         };
-        let mut records = Vec::new();
-        let mut sim_time_s = 0.0f64;
+        self.bits_down += (downloads * down_per_client) as u64;
+    }
 
-        for t in 0..self.cfg.rounds {
-            let timer = Timer::start();
-            // 1. Participation: the policy decides who reports this round
-            //    (and what happened to everyone else it selected).
-            let plan = policy.plan_round(t, &root);
-            let arrived = plan.participants.len();
-            let selected = plan.outcomes.len();
-            sim_time_s += plan.duration_s;
+    /// Effective σ this round (plateau overrides the fixed value).
+    pub fn round_sigma(&self) -> f32 {
+        effective_sigma(self.algo, self.plateau.as_ref())
+    }
 
-            // Downlink accounting: bill only clients that actually finished
-            // downloading the model before the round closed (d bits per
-            // coordinate compressed, 32·d uncompressed) — not unreachable
-            // candidates, and not clients cut off mid-download.
-            let down_per_client = if self.cfg.downlink_sign.is_some() {
-                self.d
-            } else {
-                32 * self.d
-            };
-            self.bits_down += (plan.downloads * down_per_client) as u64;
+    /// Open a round fed by remote submissions: reset the lane shards for a
+    /// cohort of `m` arrivals and return the fold topology. The coordinator
+    /// then folds each submission with [`RoundEngine::fold_remote_slot`]
+    /// (slots in increasing order per lane, exactly like the worker path)
+    /// and closes with [`RoundEngine::finish_remote_round`].
+    pub fn begin_remote_round(&mut self, m: usize) -> ReduceTopology {
+        let topo = ReduceTopology::new(self.cfg.reduce_lanes, m);
+        let lanes_n = topo.lanes();
+        while self.lanes.len() < lanes_n {
+            self.lanes.push(Mutex::new(LaneAcc::new(self.d)));
+        }
+        for lane in self.lanes[..lanes_n].iter_mut() {
+            lane.get_mut().unwrap().reset();
+        }
+        if self.scratches.is_empty() {
+            self.scratches.push(RoundScratch::new(self.d));
+        }
+        topo
+    }
 
-            // Effective sigma this round (plateau overrides the fixed value).
-            let round_sigma = effective_sigma(self.algo, self.plateau.as_ref());
+    /// Validate one remote submission and fold it into its lane with the
+    /// exact weights/tallies the in-process `absorb` would have used.
+    pub fn fold_remote_slot(
+        &mut self,
+        topo: &ReduceTopology,
+        slot: usize,
+        upd: &RemoteUpdate,
+        loss: f64,
+        inv_m: f32,
+    ) -> Result<(), RemoteError> {
+        let lane = self.lanes[topo.lane_of(slot)].get_mut().unwrap();
+        self.agg.fold_remote(upd, loss, inv_m, lane, &mut self.scratches[0].agg)
+    }
 
-            // 2–5. Local updates + streamed compression + lane reduce +
-            //    server step. When nobody reported (every selected client
-            //    dropped, missed the deadline or was unreachable) the model
-            //    simply doesn't move this round — and zero uplink is billed,
-            //    because no aggregator tally exists.
-            if arrived > 0 {
-                let stats =
-                    self.run_clients(backend, &root, t, &params, &plan.participants, round_sigma);
-                debug_assert_eq!(stats.arrived as usize, arrived);
-                // Uplink billing comes from the aggregator's tally: exact
-                // wire bits of the messages actually absorbed.
-                self.bits_up += stats.bits;
+    /// Close a remote round: fold the lanes (lane-index order) into the
+    /// round update and return the seam's tallies.
+    pub fn finish_remote_round(&mut self, topo: &ReduceTopology) -> ReduceStats {
+        self.agg.reduce(&self.lanes[..topo.lanes()], &mut self.update)
+    }
 
-                let step_scale = match &self.algo.compression {
-                    // Alg. 2 applies η to the mean sign of *model diffs* (no γ).
-                    Compression::DpSign { .. } => self.algo.server_lr,
-                    // DP-FedAvg likewise averages model diffs directly.
-                    Compression::DpDense { .. } => self.algo.server_lr,
-                    // Alg. 1 line 15: η·γ·mean(Δ).
-                    _ => self.algo.server_lr * self.algo.client_lr,
-                };
-                // Optional downlink compression: broadcast the update itself
-                // as a dequantized stochastic sign (applied server-side too,
-                // so the global iterate equals what the clients reconstruct).
-                // Fused kernel straight into the reusable packed buffer —
-                // no clone of the update, no i8 detour.
-                if let Some((z, sigma_d)) = self.cfg.downlink_sign {
-                    let mut drng = root.split((t as u64) | 0x4000_0000_0000_0000);
-                    kernel::stochastic_sign_packed(
-                        &self.update,
-                        z,
-                        sigma_d,
-                        &mut drng,
-                        &mut self.downlink_packed,
-                    );
-                    let scale = (z.eta() as f32) * sigma_d;
-                    self.downlink_packed.decode_scaled_into(scale, &mut self.update);
+    /// Steps 3–6 of the round: bill uplink, apply the (optionally
+    /// sign-compressed) aggregated update through the server optimizer, and
+    /// feed the plateau controller. Call only when `stats.arrived > 0`.
+    pub fn apply_server_step(
+        &mut self,
+        t: usize,
+        root: &Pcg64,
+        params: &mut [f32],
+        stats: &ReduceStats,
+    ) {
+        // Uplink billing comes from the aggregator's tally: exact
+        // wire bits of the messages actually absorbed.
+        self.bits_up += stats.bits;
+
+        let step_scale = match &self.algo.compression {
+            // Alg. 2 applies η to the mean sign of *model diffs* (no γ).
+            Compression::DpSign { .. } => self.algo.server_lr,
+            // DP-FedAvg likewise averages model diffs directly.
+            Compression::DpDense { .. } => self.algo.server_lr,
+            // Alg. 1 line 15: η·γ·mean(Δ).
+            _ => self.algo.server_lr * self.algo.client_lr,
+        };
+        // Optional downlink compression: broadcast the update itself
+        // as a dequantized stochastic sign (applied server-side too,
+        // so the global iterate equals what the clients reconstruct).
+        // Fused kernel straight into the reusable packed buffer —
+        // no clone of the update, no i8 detour.
+        if let Some((z, sigma_d)) = self.cfg.downlink_sign {
+            let mut drng = root.split((t as u64) | 0x4000_0000_0000_0000);
+            kernel::stochastic_sign_packed(
+                &self.update,
+                z,
+                sigma_d,
+                &mut drng,
+                &mut self.downlink_packed,
+            );
+            let scale = (z.eta() as f32) * sigma_d;
+            self.downlink_packed.decode_scaled_into(scale, &mut self.update);
+        }
+        match self.algo.server_opt {
+            ServerOpt::Sgd => tensor::axpy(-step_scale, &self.update, params),
+            ServerOpt::Momentum(beta) => {
+                // Server momentum: m ← β·m + agg; x ← x − scale·m.
+                for (mb, &u) in self.momentum_buf.iter_mut().zip(&self.update) {
+                    *mb = beta * *mb + u;
                 }
-                match self.algo.server_opt {
-                    ServerOpt::Sgd => tensor::axpy(-step_scale, &self.update, &mut params),
-                    ServerOpt::Momentum(beta) => {
-                        // Server momentum: m ← β·m + agg; x ← x − scale·m.
-                        for (mb, &u) in self.momentum_buf.iter_mut().zip(&self.update) {
-                            *mb = beta * *mb + u;
-                        }
-                        tensor::axpy(-step_scale, &self.momentum_buf, &mut params);
-                    }
-                    ServerOpt::Adam { beta1, beta2, eps } => {
-                        // FedAdam (Reddi et al. '20) with bias correction.
-                        self.adam_t += 1;
-                        let bc1 = 1.0 - beta1.powi(self.adam_t as i32);
-                        let bc2 = 1.0 - beta2.powi(self.adam_t as i32);
-                        for ((p, mb), (vb, &u)) in params
-                            .iter_mut()
-                            .zip(self.momentum_buf.iter_mut())
-                            .zip(self.adam_v.iter_mut().zip(&self.update))
-                        {
-                            *mb = beta1 * *mb + (1.0 - beta1) * u;
-                            *vb = beta2 * *vb + (1.0 - beta2) * u * u;
-                            let mhat = *mb / bc1;
-                            let vhat = *vb / bc2;
-                            *p -= step_scale * mhat / (vhat.sqrt() + eps);
-                        }
-                    }
-                }
-
-                // 6. Plateau feedback (mean loss over *arrived* clients,
-                //    folded lane-by-lane in the fixed lane order).
-                let mean_local_loss = stats.loss_sum / arrived as f64;
-                if let Some(p) = self.plateau.as_mut() {
-                    p.observe(mean_local_loss);
-                }
+                tensor::axpy(-step_scale, &self.momentum_buf, params);
             }
-
-            // 7. Evaluation.
-            if t % self.cfg.eval_every == 0 || t + 1 == self.cfg.rounds {
-                let eval = backend.evaluate(&params);
-                let rec = RoundRecord {
-                    round: t,
-                    objective: eval.objective,
-                    accuracy: eval.accuracy,
-                    grad_norm_sq: eval.grad_norm_sq,
-                    bits_up: self.bits_up,
-                    bits_down: self.bits_down,
-                    sigma: round_sigma,
-                    wall_ms: timer.elapsed_ms(),
-                    sim_time_s,
-                    arrived: arrived as u32,
-                    selected: selected as u32,
-                };
-                on_record(&rec);
-                records.push(rec);
+            ServerOpt::Adam { beta1, beta2, eps } => {
+                // FedAdam (Reddi et al. '20) with bias correction.
+                self.adam_t += 1;
+                let bc1 = 1.0 - beta1.powi(self.adam_t as i32);
+                let bc2 = 1.0 - beta2.powi(self.adam_t as i32);
+                for ((p, mb), (vb, &u)) in params
+                    .iter_mut()
+                    .zip(self.momentum_buf.iter_mut())
+                    .zip(self.adam_v.iter_mut().zip(&self.update))
+                {
+                    *mb = beta1 * *mb + (1.0 - beta1) * u;
+                    *vb = beta2 * *vb + (1.0 - beta2) * u * u;
+                    let mhat = *mb / bc1;
+                    let vhat = *vb / bc2;
+                    *p -= step_scale * mhat / (vhat.sqrt() + eps);
+                }
             }
         }
 
-        RunResult { algorithm: self.algo.name.clone(), records }
+        // Plateau feedback (mean loss over *arrived* clients, folded
+        // lane-by-lane in the fixed lane order).
+        let mean_local_loss = stats.loss_sum / stats.arrived as f64;
+        if let Some(p) = self.plateau.as_mut() {
+            p.observe(mean_local_loss);
+        }
+    }
+
+    /// Whether round `t` is an evaluation round.
+    pub fn should_eval(&self, t: usize) -> bool {
+        t % self.cfg.eval_every == 0 || t + 1 == self.cfg.rounds
+    }
+
+    /// Evaluate the model and assemble the round's record.
+    #[allow(clippy::too_many_arguments)]
+    pub fn eval_record(
+        &self,
+        backend: &mut dyn TrainBackend,
+        t: usize,
+        params: &[f32],
+        round_sigma: f32,
+        wall_ms: f64,
+        sim_time_s: f64,
+        arrived: u32,
+        selected: u32,
+    ) -> RoundRecord {
+        let eval = backend.evaluate(params);
+        RoundRecord {
+            round: t,
+            objective: eval.objective,
+            accuracy: eval.accuracy,
+            grad_norm_sq: eval.grad_norm_sq,
+            bits_up: self.bits_up,
+            bits_down: self.bits_down,
+            sigma: round_sigma,
+            wall_ms,
+            sim_time_s,
+            arrived,
+            selected,
+        }
     }
 
     /// Execute every participant's task for round `t` through the

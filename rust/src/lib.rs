@@ -18,7 +18,10 @@
 //! Experiments are described by the typed, JSON-serializable
 //! [`api::ExperimentSpec`] and executed by an observer-driven
 //! [`api::Session`] (`zsfa run spec.json`); the `repro::fig*` drivers are
-//! thin spec factories over the same seam.
+//! thin spec factories over the same seam. The same spec can run
+//! networked: [`service`] hosts the round loop behind a coordinator state
+//! machine with loopback/TCP transports (`zsfa serve` / `zsfa join`),
+//! selected by the spec's [`api::TransportSpec`].
 //!
 //! See `DESIGN.md` for the full system inventory and the experiment index
 //! mapping every figure/table of the paper to a driver.
@@ -37,10 +40,13 @@ pub mod problems;
 pub mod repro;
 pub mod rng;
 pub mod runtime;
+pub mod service;
 pub mod sim;
 pub mod tensor;
 pub mod testutil;
 pub mod util;
+
+pub use error::{Error, ErrorKind, Result};
 
 /// Crate version (mirrors Cargo.toml).
 pub fn version() -> &'static str {

@@ -3,8 +3,10 @@
 //! Subcommands:
 //!   run <spec.json>     execute any ExperimentSpec without recompiling
 //!   run --config f.cfg  config-driven experiment (legacy key=value format)
+//!   serve <spec.json>   host the rounds over TCP (networked coordinator)
+//!   join <spec.json>    work for a coordinator as a TCP participant
 //!   fig1 fig2 fig3 fig5 fig6 fig16 fig17 table2
-//!                       reproduce the paper's figures/tables (DESIGN.md §5)
+//!                       reproduce the paper's figures/tables (DESIGN.md §6)
 //!   scenarios           client-lifecycle simulation: deadlines, dropouts,
 //!                       byzantine robustness (DESIGN.md §2.5)
 //!   inspect             list artifacts from the manifest
@@ -13,7 +15,7 @@
 //! Every experiment — drivers included — flows through the typed
 //! `api::ExperimentSpec` + `api::Session` surface (DESIGN.md §4.5).
 
-use zsignfedavg::api::{Dataset, ExperimentSpec, Session, WorkloadSpec};
+use zsignfedavg::api::{Dataset, ExperimentSpec, Session, TransportSpec, WorkloadSpec};
 use zsignfedavg::cli::Args;
 use zsignfedavg::error::{anyhow, bail, Result};
 use zsignfedavg::repro;
@@ -31,6 +33,8 @@ fn main() -> Result<()> {
         Some("table2") => repro::table2_rates::run(&args),
         Some("scenarios") => repro::figx_scenarios::run(&args),
         Some("run") => run_cmd(&args),
+        Some("serve") => serve_cmd(&args),
+        Some("join") => join_cmd(&args),
         Some("inspect") => inspect(&args),
         Some("version") => {
             println!("zsfa {}", zsignfedavg::version());
@@ -59,6 +63,12 @@ SUBCOMMANDS
            --parallelism/--reduce-lanes/--out override execution knobs)
           legacy key=value configs still work: --config configs/<f>.cfg
           (set sim = true + sim_* keys for scenario participation)
+          --transport engine|loopback|tcp selects where rounds execute
+  serve   host a spec's rounds over TCP:  zsfa serve spec.json --addr :7070
+          (--heartbeat-ms/--round-deadline-ms/--min-participants tune
+           liveness; results are bit-identical to `zsfa run`)
+  join    work for a coordinator:  zsfa join spec.json --addr host:7070
+          (same spec file on both sides; exits when the run finishes)
   fig1    consensus problem across dimensions (+ §1 counterexample)
   fig2    noise-scale bias/variance trade-off
   fig3    non-iid MNIST sign-method comparison   (--sweep-sigma => fig7)
@@ -128,6 +138,16 @@ fn run_spec(args: &Args, path: &str) -> Result<()> {
     if let Some(dir) = args.flag("out") {
         spec = spec.output_dir(dir);
     }
+    // The transport is an execution knob too: every transport is
+    // bit-identical to the engine when all work is submitted.
+    if let Some(t) = args.flag("transport") {
+        spec = spec.transport(match t {
+            "engine" => TransportSpec::Engine,
+            "loopback" => TransportSpec::Loopback,
+            "tcp" => TransportSpec::tcp(args.str_or("addr", "127.0.0.1:7070")),
+            other => bail!("unknown transport {other:?} (expected engine|loopback|tcp)"),
+        });
+    }
     println!(
         "run: {} — {} series x {} repeats, {} rounds",
         spec.name,
@@ -136,6 +156,75 @@ fn run_spec(args: &Args, path: &str) -> Result<()> {
         spec.rounds
     );
     Session::console().run(&spec)?;
+    Ok(())
+}
+
+/// `zsfa serve`: host an experiment's rounds over TCP. The spec's TCP
+/// settings (when present) are the baseline; `--addr`, `--heartbeat-ms`,
+/// `--round-deadline-ms` and `--min-participants` override them.
+fn serve_cmd(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("usage: zsfa serve <spec.json> [--addr host:port]"))?;
+    let mut spec = ExperimentSpec::from_json_file(std::path::Path::new(path))?;
+    spec = zsignfedavg::repro::common::apply_execution_flags(spec, args)?;
+    if let Some(dir) = args.flag("out") {
+        spec = spec.output_dir(dir);
+    }
+    let (mut addr, d_hb, d_dl, d_min) = match spec.transport.clone() {
+        TransportSpec::Tcp { addr, heartbeat_ms, round_deadline_ms, min_participants } => {
+            (addr, heartbeat_ms, round_deadline_ms, min_participants)
+        }
+        _ => {
+            let TransportSpec::Tcp { addr, heartbeat_ms, round_deadline_ms, min_participants } =
+                TransportSpec::tcp("127.0.0.1:7070")
+            else {
+                unreachable!()
+            };
+            (addr, heartbeat_ms, round_deadline_ms, min_participants)
+        }
+    };
+    if let Some(a) = args.flag("addr") {
+        addr = a.to_string();
+    }
+    spec = spec.transport(TransportSpec::Tcp {
+        addr,
+        heartbeat_ms: args.u64_or("heartbeat-ms", d_hb)?,
+        round_deadline_ms: args.u64_or("round-deadline-ms", d_dl)?,
+        min_participants: args.usize_or("min-participants", d_min)?,
+    });
+    println!(
+        "serve: {} — {} series x {} repeats, {} rounds",
+        spec.name,
+        spec.expanded_series().len(),
+        spec.repeats,
+        spec.rounds
+    );
+    Session::console().run(&spec)?;
+    Ok(())
+}
+
+/// `zsfa join`: work for a coordinator as a TCP participant until the
+/// experiment finishes. Both sides must load the same spec file — that is
+/// how they agree on the workload, series algorithms and repeat seeds.
+fn join_cmd(args: &Args) -> Result<()> {
+    use zsignfedavg::service::{Participant, TcpTransport};
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("usage: zsfa join <spec.json> --addr host:port"))?;
+    let spec = ExperimentSpec::from_json_file(std::path::Path::new(path))?;
+    let addr = match (args.flag("addr"), &spec.transport) {
+        (Some(a), _) => a.to_string(),
+        (None, TransportSpec::Tcp { addr, .. }) => addr.clone(),
+        (None, _) => bail!("join needs --addr (or a tcp transport in the spec)"),
+    };
+    let patience = std::time::Duration::from_secs(args.u64_or("patience-s", 30)?);
+    println!("join: working for coordinator at {addr}");
+    let mut transport = TcpTransport::connect(&addr, patience)?;
+    Participant::new(spec).run(&mut transport)?;
+    println!("join: coordinator finished, exiting");
     Ok(())
 }
 

@@ -1,0 +1,661 @@
+//! The coordinator state machine: rendezvous → heartbeat → round-in-
+//! progress → finished, driven entirely by [`protocol`] messages.
+//!
+//! [`CoordState`] is *pure bookkeeping*: it owns no sockets, no threads
+//! and no clocks — every transition happens inside
+//! [`CoordState::handle`]`(request, now_ms)`, which makes the whole fault
+//! matrix (late arrival, duplicate submit, heartbeat expiry, empty round)
+//! unit-testable without any transport. [`Coordinator`] wraps the state in
+//! `Arc<(Mutex, Condvar)>` so transport threads call `handle` concurrently
+//! while the round driver (`service::ServiceHost`) blocks on the condvar
+//! for round completion.
+//!
+//! Round anatomy, mirroring the in-process engine exactly:
+//!
+//! 1. the driver plans a round (the engine's `ParticipationPolicy`) and
+//!    [`CoordState::offer_round`]s one slot per planned participant;
+//! 2. participants `PullRound` slots (sticky client→pid pinning keeps a
+//!    client's EF residual on the participant that owns it; a pin is
+//!    stolen only when its holder's heartbeat expired), run the client
+//!    update locally, and `Submit` a `compress::wire` frame;
+//! 3. each submission is validated on arrival — envelope checksum,
+//!    wire decode, then an aggregator probe-fold (`fold_remote` into a
+//!    throwaway lane) so a well-framed lie about family or dimension is
+//!    rejected as `Malformed` at the door, not at reduce time;
+//! 4. the driver closes the round ([`CoordState::close_round`]) and folds
+//!    the stored submissions in slot order through the *same*
+//!    `RoundEngine` stages the in-process path uses.
+
+use super::protocol::{
+    PhaseReply, Reply, RendezvousReply, Request, RoundReply, SubmitReply, WorkOrder,
+};
+use crate::compress::agg::{Aggregator, LaneAcc, RemoteUpdate, Scratch};
+use crate::compress::wire;
+use crate::fl::engine::Participant;
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// A validated, stored round submission.
+#[derive(Debug, Clone)]
+pub struct Submission {
+    pub update: RemoteUpdate,
+    pub loss: f64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SlotStatus {
+    Unassigned,
+    Assigned { pid: u64 },
+    Submitted,
+}
+
+struct Slot {
+    client: u64,
+    fault: Option<crate::sim::ByzantineMode>,
+    status: SlotStatus,
+    submission: Option<Submission>,
+}
+
+struct ActiveRound {
+    series: u32,
+    repeat: u32,
+    round: u64,
+    sigma: f32,
+    params: Vec<f32>,
+    slots: Vec<Slot>,
+    submitted: usize,
+}
+
+/// The coordinator's message-driven state. All methods are synchronous;
+/// share it through [`Coordinator`].
+pub struct CoordState {
+    /// Heartbeat interval participants are told to keep. A peer is
+    /// presumed dead `3 × heartbeat_ms` after its last message; `0`
+    /// disables liveness tracking entirely (the loopback transport, where
+    /// participants cannot vanish).
+    heartbeat_ms: u64,
+    next_pid: u64,
+    /// pid → last-seen timestamp (ms on the driver's clock).
+    peers: HashMap<u64, u64>,
+    /// client → pid stickiness across rounds.
+    pins: HashMap<u64, u64>,
+    finished: bool,
+    active: Option<ActiveRound>,
+    /// Run-scoped validation state: the aggregator family of the current
+    /// series plus a throwaway lane the probe-fold streams into.
+    agg: Option<Box<dyn Aggregator>>,
+    probe: Option<(LaneAcc, Scratch)>,
+}
+
+impl CoordState {
+    pub fn new(heartbeat_ms: u64) -> CoordState {
+        CoordState {
+            heartbeat_ms,
+            next_pid: 1,
+            peers: HashMap::new(),
+            pins: HashMap::new(),
+            finished: false,
+            active: None,
+            agg: None,
+            probe: None,
+        }
+    }
+
+    /// Arm submission validation for one (series, repeat) run: the
+    /// aggregator family whose `fold_remote` checks every submission, and
+    /// the model dimension the probe lane is sized for.
+    pub fn begin_run(&mut self, agg: Box<dyn Aggregator>, d: usize) {
+        self.agg = Some(agg);
+        self.probe = Some((LaneAcc::new(d), Scratch::new(d)));
+    }
+
+    /// Number of live registered participants.
+    pub fn roster_len(&self) -> usize {
+        self.peers.len()
+    }
+
+    /// The phase a heartbeat would report (sans pid check).
+    fn phase(&self) -> PhaseReply {
+        if self.finished {
+            PhaseReply::Finished
+        } else if self.active.is_some() {
+            PhaseReply::Round
+        } else {
+            PhaseReply::Standby
+        }
+    }
+
+    /// Open a round: one slot per planned participant, all unassigned.
+    pub fn offer_round(
+        &mut self,
+        series: u32,
+        repeat: u32,
+        round: u64,
+        sigma: f32,
+        params: &[f32],
+        participants: &[Participant],
+    ) {
+        assert!(self.active.is_none(), "round {round} offered while one is open");
+        if let Some((probe, _)) = self.probe.as_mut() {
+            probe.reset();
+        }
+        self.active = Some(ActiveRound {
+            series,
+            repeat,
+            round,
+            sigma,
+            params: params.to_vec(),
+            slots: participants
+                .iter()
+                .map(|p| Slot {
+                    client: p.client as u64,
+                    fault: p.fault,
+                    status: SlotStatus::Unassigned,
+                    submission: None,
+                })
+                .collect(),
+            submitted: 0,
+        })
+    }
+
+    /// True once every slot of the open round has a submission.
+    pub fn round_complete(&self) -> bool {
+        self.active.as_ref().is_some_and(|r| r.submitted == r.slots.len())
+    }
+
+    /// Close the open round and return the submissions that made it, in
+    /// slot order (the fold order). Slots that never submitted are simply
+    /// absent — an empty vec is the empty-round freeze.
+    pub fn close_round(&mut self) -> Vec<Submission> {
+        let r = self.active.take().expect("no round to close");
+        r.slots.into_iter().filter_map(|s| s.submission).collect()
+    }
+
+    /// Enter the terminal phase: heartbeats answer `Finished`, rendezvous
+    /// answers `Later`, and participants drain out.
+    pub fn finish(&mut self) {
+        self.finished = true;
+        self.active = None;
+    }
+
+    /// Drop peers whose heartbeat expired (no message for 3× the
+    /// interval), returning their assigned slots to the pool and clearing
+    /// their pins so another participant can steal the work.
+    pub fn expire_peers(&mut self, now_ms: u64) {
+        if self.heartbeat_ms == 0 {
+            return;
+        }
+        let deadline = 3 * self.heartbeat_ms;
+        let dead: Vec<u64> = self
+            .peers
+            .iter()
+            .filter(|(_, &seen)| now_ms.saturating_sub(seen) > deadline)
+            .map(|(&pid, _)| pid)
+            .collect();
+        for pid in dead {
+            self.peers.remove(&pid);
+            self.pins.retain(|_, &mut p| p != pid);
+            if let Some(r) = self.active.as_mut() {
+                for slot in r.slots.iter_mut() {
+                    if slot.status == (SlotStatus::Assigned { pid }) {
+                        slot.status = SlotStatus::Unassigned;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Process one request. `now_ms` is the driver's monotonic clock (any
+    /// value when liveness tracking is disabled).
+    pub fn handle(&mut self, req: &Request, now_ms: u64) -> Reply {
+        self.expire_peers(now_ms);
+        match req {
+            Request::Rendezvous => {
+                if self.finished {
+                    return Reply::Rendezvous(RendezvousReply::Later);
+                }
+                let pid = self.next_pid;
+                self.next_pid += 1;
+                self.peers.insert(pid, now_ms);
+                Reply::Rendezvous(RendezvousReply::Accept { pid })
+            }
+            Request::Heartbeat { pid } => {
+                if !self.peers.contains_key(pid) {
+                    // Unknown pids still learn the terminal phase, so a
+                    // participant that outlived its registration exits
+                    // instead of re-rendezvousing forever.
+                    if self.finished {
+                        return Reply::Heartbeat(PhaseReply::Finished);
+                    }
+                    return Reply::Heartbeat(PhaseReply::Unknown);
+                }
+                self.peers.insert(*pid, now_ms);
+                Reply::Heartbeat(self.phase())
+            }
+            Request::PullRound { pid } => {
+                if !self.peers.contains_key(pid) {
+                    return Reply::Round(RoundReply::NoWork);
+                }
+                self.peers.insert(*pid, now_ms);
+                let pins = &mut self.pins;
+                let peers = &self.peers;
+                let Some(r) = self.active.as_mut() else {
+                    return Reply::Round(RoundReply::NoWork);
+                };
+                // Prefer a slot whose client is already pinned to this
+                // participant (EF residual locality), then any slot whose
+                // client is unpinned or whose pin holder is gone.
+                let pick = r
+                    .slots
+                    .iter()
+                    .position(|s| {
+                        s.status == SlotStatus::Unassigned && pins.get(&s.client) == Some(pid)
+                    })
+                    .or_else(|| {
+                        r.slots.iter().position(|s| {
+                            s.status == SlotStatus::Unassigned
+                                && match pins.get(&s.client) {
+                                    None => true,
+                                    Some(holder) => !peers.contains_key(holder),
+                                }
+                        })
+                    });
+                let Some(i) = pick else {
+                    return Reply::Round(RoundReply::NoWork);
+                };
+                r.slots[i].status = SlotStatus::Assigned { pid: *pid };
+                pins.insert(r.slots[i].client, *pid);
+                Reply::Round(RoundReply::Work(Box::new(WorkOrder {
+                    series: r.series,
+                    repeat: r.repeat,
+                    round: r.round,
+                    sigma: r.sigma,
+                    slot: i as u64,
+                    client: r.slots[i].client,
+                    fault: r.slots[i].fault,
+                    params: r.params.clone(),
+                })))
+            }
+            Request::Submit { pid, round, slot, loss, ef_scale, payload } => {
+                if !self.peers.contains_key(pid) {
+                    return Reply::Submit(SubmitReply::Unknown);
+                }
+                self.peers.insert(*pid, now_ms);
+                let agg = self.agg.as_deref();
+                let probe = self.probe.as_mut();
+                let Some(r) = self.active.as_mut() else {
+                    return Reply::Submit(SubmitReply::Stale);
+                };
+                if *round != r.round {
+                    return Reply::Submit(SubmitReply::Stale);
+                }
+                let Some(s) = r.slots.get_mut(*slot as usize) else {
+                    return Reply::Submit(SubmitReply::Malformed);
+                };
+                if s.status == SlotStatus::Submitted {
+                    return Reply::Submit(SubmitReply::Duplicate);
+                }
+                let Ok(msg) = wire::decode(payload) else {
+                    return Reply::Submit(SubmitReply::Malformed);
+                };
+                let update = RemoteUpdate { msg, ef_scale: *ef_scale };
+                // Probe-fold: the aggregator's own validation (family,
+                // dimension, support size) against a throwaway lane. The
+                // real fold at close time then cannot fail.
+                if let (Some(agg), Some((lane, scratch))) = (agg, probe) {
+                    if agg.fold_remote(&update, *loss, 1.0, lane, scratch).is_err() {
+                        return Reply::Submit(SubmitReply::Malformed);
+                    }
+                }
+                s.submission = Some(Submission { update, loss: *loss });
+                s.status = SlotStatus::Submitted;
+                r.submitted += 1;
+                Reply::Submit(SubmitReply::Ok)
+            }
+        }
+    }
+}
+
+/// Thread-safe handle around [`CoordState`]: transports call
+/// [`Coordinator::handle`], the driver blocks in
+/// [`Coordinator::wait_until`]. Every state change notifies the condvar.
+#[derive(Clone)]
+pub struct Coordinator {
+    shared: Arc<(Mutex<CoordState>, Condvar)>,
+}
+
+impl Coordinator {
+    pub fn new(heartbeat_ms: u64) -> Coordinator {
+        Coordinator {
+            shared: Arc::new((Mutex::new(CoordState::new(heartbeat_ms)), Condvar::new())),
+        }
+    }
+
+    /// Process one request under the lock and wake any waiters.
+    pub fn handle(&self, req: &Request, now_ms: u64) -> Reply {
+        let (m, cv) = &*self.shared;
+        let reply = m.lock().unwrap().handle(req, now_ms);
+        cv.notify_all();
+        reply
+    }
+
+    /// Run `f` on the state under the lock and wake any waiters.
+    pub fn with_state<R>(&self, f: impl FnOnce(&mut CoordState) -> R) -> R {
+        let (m, cv) = &*self.shared;
+        let r = f(&mut m.lock().unwrap());
+        cv.notify_all();
+        r
+    }
+
+    /// Block until `pred` yields `Some` or `timeout` elapses, whichever
+    /// first; re-checks on every state change (and a coarse tick, so a
+    /// missed wakeup can only add latency, never deadlock).
+    pub fn wait_until<R>(
+        &self,
+        timeout: Duration,
+        mut pred: impl FnMut(&mut CoordState) -> Option<R>,
+    ) -> Option<R> {
+        let (m, cv) = &*self.shared;
+        let start = std::time::Instant::now();
+        let mut guard = m.lock().unwrap();
+        loop {
+            if let Some(r) = pred(&mut guard) {
+                return Some(r);
+            }
+            let elapsed = start.elapsed();
+            if elapsed >= timeout {
+                return None;
+            }
+            let tick = (timeout - elapsed).min(Duration::from_millis(20));
+            let (g, _) = cv.wait_timeout(guard, tick).unwrap();
+            guard = g;
+        }
+    }
+
+    /// Block until the coordinator state changes at all (used by the
+    /// loopback transport's idle wait).
+    pub fn wait_for_change(&self, timeout: Duration) {
+        let (m, cv) = &*self.shared;
+        let guard = m.lock().unwrap();
+        let _ = cv.wait_timeout(guard, timeout).unwrap();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::agg::ZSignAgg;
+    use crate::compress::kernel;
+    use crate::compress::pack::PackedSigns;
+    use crate::compress::sign::SigmaRule;
+    use crate::rng::{Pcg64, ZParam};
+
+    const D: usize = 24;
+
+    fn state() -> CoordState {
+        let mut st = CoordState::new(100);
+        st.begin_run(
+            Box::new(ZSignAgg { z: ZParam::Finite(1), sigma: SigmaRule::Fixed(1.0) }),
+            D,
+        );
+        st
+    }
+
+    fn rendezvous(st: &mut CoordState, now: u64) -> u64 {
+        match st.handle(&Request::Rendezvous, now) {
+            Reply::Rendezvous(RendezvousReply::Accept { pid }) => pid,
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    fn participants(n: usize) -> Vec<Participant> {
+        (0..n).map(|client| Participant { client, fault: None }).collect()
+    }
+
+    /// A valid d-dimensional sign submission payload.
+    fn sign_payload(seed: u64) -> Vec<u8> {
+        let mut rng = Pcg64::seeded(seed);
+        let delta: Vec<f32> = (0..D).map(|_| rng.normal() as f32).collect();
+        let mut packed = PackedSigns::zeroed(D);
+        kernel::stochastic_sign_packed(&delta, ZParam::Finite(1), 1.0, &mut rng, &mut packed);
+        wire::encode(&crate::compress::Message::Signs(packed))
+    }
+
+    fn submit(st: &mut CoordState, pid: u64, round: u64, slot: u64, now: u64) -> SubmitReply {
+        let req = Request::Submit {
+            pid,
+            round,
+            slot,
+            loss: 0.5,
+            ef_scale: None,
+            payload: sign_payload(slot + 100),
+        };
+        match st.handle(&req, now) {
+            Reply::Submit(r) => r,
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    fn pull(st: &mut CoordState, pid: u64, now: u64) -> RoundReply {
+        match st.handle(&Request::PullRound { pid }, now) {
+            Reply::Round(r) => r,
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rendezvous_assigns_distinct_pids_and_phase_flows() {
+        let mut st = state();
+        let a = rendezvous(&mut st, 0);
+        let b = rendezvous(&mut st, 0);
+        assert_ne!(a, b);
+        assert_eq!(st.roster_len(), 2);
+        assert_eq!(
+            st.handle(&Request::Heartbeat { pid: a }, 1),
+            Reply::Heartbeat(PhaseReply::Standby)
+        );
+        st.offer_round(0, 0, 0, 1.0, &[0.0; D], &participants(2));
+        assert_eq!(
+            st.handle(&Request::Heartbeat { pid: a }, 2),
+            Reply::Heartbeat(PhaseReply::Round)
+        );
+        st.finish();
+        assert_eq!(
+            st.handle(&Request::Heartbeat { pid: a }, 3),
+            Reply::Heartbeat(PhaseReply::Finished)
+        );
+        assert_eq!(st.handle(&Request::Rendezvous, 4), Reply::Rendezvous(RendezvousReply::Later));
+    }
+
+    #[test]
+    fn unknown_pid_is_told_so() {
+        let mut st = state();
+        assert_eq!(
+            st.handle(&Request::Heartbeat { pid: 99 }, 0),
+            Reply::Heartbeat(PhaseReply::Unknown)
+        );
+        st.offer_round(0, 0, 0, 1.0, &[0.0; D], &participants(1));
+        assert_eq!(pull(&mut st, 99, 0), RoundReply::NoWork);
+        assert_eq!(submit(&mut st, 99, 0, 0, 0), SubmitReply::Unknown);
+    }
+
+    #[test]
+    fn full_round_assign_submit_close() {
+        let mut st = state();
+        let a = rendezvous(&mut st, 0);
+        let b = rendezvous(&mut st, 0);
+        st.offer_round(0, 0, 7, 0.5, &[1.0; D], &participants(2));
+        let RoundReply::Work(w) = pull(&mut st, a, 1) else { panic!() };
+        assert_eq!((w.round, w.slot, w.client), (7, 0, 0));
+        assert_eq!(w.sigma, 0.5);
+        assert_eq!(w.params, vec![1.0; D]);
+        let RoundReply::Work(w2) = pull(&mut st, b, 1) else { panic!() };
+        assert_eq!(w2.slot, 1);
+        // All slots assigned: a third pull finds nothing.
+        assert_eq!(pull(&mut st, a, 2), RoundReply::NoWork);
+        assert!(!st.round_complete());
+        assert_eq!(submit(&mut st, a, 7, 0, 3), SubmitReply::Ok);
+        assert_eq!(submit(&mut st, b, 7, 1, 3), SubmitReply::Ok);
+        assert!(st.round_complete());
+        let subs = st.close_round();
+        assert_eq!(subs.len(), 2);
+        // Round closed: the state is Standby again.
+        assert_eq!(
+            st.handle(&Request::Heartbeat { pid: a }, 4),
+            Reply::Heartbeat(PhaseReply::Standby)
+        );
+    }
+
+    #[test]
+    fn late_arrival_joins_the_open_round() {
+        // A participant that rendezvouses *after* the round opened still
+        // gets a slot — late arrivals are absorbed, not rejected.
+        let mut st = state();
+        let a = rendezvous(&mut st, 0);
+        st.offer_round(0, 0, 0, 1.0, &[0.0; D], &participants(2));
+        let RoundReply::Work(_) = pull(&mut st, a, 1) else { panic!() };
+        let late = rendezvous(&mut st, 2);
+        let RoundReply::Work(w) = pull(&mut st, late, 3) else { panic!() };
+        assert_eq!(w.slot, 1);
+        assert_eq!(submit(&mut st, late, 0, 1, 4), SubmitReply::Ok);
+    }
+
+    #[test]
+    fn duplicate_submit_rejected() {
+        let mut st = state();
+        let a = rendezvous(&mut st, 0);
+        st.offer_round(0, 0, 0, 1.0, &[0.0; D], &participants(1));
+        let RoundReply::Work(_) = pull(&mut st, a, 1) else { panic!() };
+        assert_eq!(submit(&mut st, a, 0, 0, 2), SubmitReply::Ok);
+        assert_eq!(submit(&mut st, a, 0, 0, 3), SubmitReply::Duplicate);
+        assert_eq!(st.close_round().len(), 1);
+    }
+
+    #[test]
+    fn stale_and_malformed_submissions_rejected() {
+        let mut st = state();
+        let a = rendezvous(&mut st, 0);
+        st.offer_round(0, 0, 5, 1.0, &[0.0; D], &participants(1));
+        // Wrong round.
+        assert_eq!(submit(&mut st, a, 4, 0, 1), SubmitReply::Stale);
+        // Slot out of range.
+        assert_eq!(submit(&mut st, a, 5, 9, 1), SubmitReply::Malformed);
+        // Payload that is not a wire frame.
+        let req = Request::Submit {
+            pid: a,
+            round: 5,
+            slot: 0,
+            loss: 0.0,
+            ef_scale: None,
+            payload: vec![0xde, 0xad, 0xbe, 0xef],
+        };
+        assert_eq!(st.handle(&req, 2), Reply::Submit(SubmitReply::Malformed));
+        // Valid wire frame of the wrong family (dense vs sign aggregator):
+        // the probe-fold rejects it at the door.
+        let req = Request::Submit {
+            pid: a,
+            round: 5,
+            slot: 0,
+            loss: 0.0,
+            ef_scale: None,
+            payload: wire::encode(&crate::compress::Message::Dense(vec![0.0; D])),
+        };
+        assert_eq!(st.handle(&req, 3), Reply::Submit(SubmitReply::Malformed));
+        // Right family, wrong dimension.
+        let mut packed = PackedSigns::zeroed(D + 1);
+        let mut rng = Pcg64::seeded(1);
+        let delta: Vec<f32> = (0..D + 1).map(|_| rng.normal() as f32).collect();
+        kernel::stochastic_sign_packed(&delta, ZParam::Finite(1), 1.0, &mut rng, &mut packed);
+        let req = Request::Submit {
+            pid: a,
+            round: 5,
+            slot: 0,
+            loss: 0.0,
+            ef_scale: None,
+            payload: wire::encode(&crate::compress::Message::Signs(packed)),
+        };
+        assert_eq!(st.handle(&req, 4), Reply::Submit(SubmitReply::Malformed));
+        // The round is still waiting for an honest submission.
+        assert!(!st.round_complete());
+        assert_eq!(submit(&mut st, a, 5, 0, 5), SubmitReply::Ok);
+        assert!(st.round_complete());
+    }
+
+    #[test]
+    fn heartbeat_expiry_returns_work_to_the_pool() {
+        // Peer a claims the only slot, then goes silent past 3× the
+        // heartbeat interval. Peer b (alive) steals both the slot and the
+        // client pin.
+        let mut st = state();
+        let a = rendezvous(&mut st, 0);
+        let b = rendezvous(&mut st, 0);
+        st.offer_round(0, 0, 0, 1.0, &[0.0; D], &participants(1));
+        let RoundReply::Work(w) = pull(&mut st, a, 1) else { panic!() };
+        assert_eq!(w.slot, 0);
+        // b stays alive; nothing to pull while a holds the slot.
+        assert_eq!(pull(&mut st, b, 200), RoundReply::NoWork);
+        // a's last message was at t=1; at t=302 it is > 300ms stale.
+        let RoundReply::Work(w) = pull(&mut st, b, 302) else {
+            panic!("expired slot was not returned to the pool")
+        };
+        assert_eq!(w.slot, 0);
+        assert_eq!(st.roster_len(), 1);
+        assert_eq!(submit(&mut st, b, 0, 0, 303), SubmitReply::Ok);
+        // The dead pid is unknown now.
+        assert_eq!(
+            st.handle(&Request::Heartbeat { pid: a }, 304),
+            Reply::Heartbeat(PhaseReply::Unknown)
+        );
+    }
+
+    #[test]
+    fn sticky_pins_prefer_the_previous_owner() {
+        // Round 1: a takes client 0, b takes client 1. Round 2: b asks
+        // first but must NOT get client 0 — its pin belongs to the live a.
+        let mut st = state();
+        let a = rendezvous(&mut st, 0);
+        let b = rendezvous(&mut st, 0);
+        st.offer_round(0, 0, 0, 1.0, &[0.0; D], &participants(2));
+        let RoundReply::Work(wa) = pull(&mut st, a, 1) else { panic!() };
+        let RoundReply::Work(wb) = pull(&mut st, b, 1) else { panic!() };
+        assert_eq!((wa.client, wb.client), (0, 1));
+        submit(&mut st, a, 0, 0, 2);
+        submit(&mut st, b, 0, 1, 2);
+        st.close_round();
+        st.offer_round(0, 0, 1, 1.0, &[0.0; D], &participants(2));
+        let RoundReply::Work(wb) = pull(&mut st, b, 3) else { panic!() };
+        assert_eq!(wb.client, 1, "b must be routed to its pinned client");
+        let RoundReply::Work(wa) = pull(&mut st, a, 3) else { panic!() };
+        assert_eq!(wa.client, 0);
+    }
+
+    #[test]
+    fn empty_round_freezes_cleanly() {
+        // Nobody submits: closing the round yields nothing, the state
+        // returns to Standby, and the next round can open normally.
+        let mut st = state();
+        let _a = rendezvous(&mut st, 0);
+        st.offer_round(0, 0, 0, 1.0, &[0.0; D], &participants(3));
+        assert!(!st.round_complete());
+        assert!(st.close_round().is_empty());
+        st.offer_round(0, 0, 1, 1.0, &[0.0; D], &participants(3));
+        assert!(st.active.is_some());
+    }
+
+    #[test]
+    fn zero_heartbeat_disables_expiry() {
+        let mut st = CoordState::new(0);
+        st.begin_run(
+            Box::new(ZSignAgg { z: ZParam::Finite(1), sigma: SigmaRule::Fixed(1.0) }),
+            D,
+        );
+        let a = rendezvous(&mut st, 0);
+        st.offer_round(0, 0, 0, 1.0, &[0.0; D], &participants(1));
+        let RoundReply::Work(_) = pull(&mut st, a, 0) else { panic!() };
+        // An enormous clock jump must not expire anyone.
+        st.expire_peers(u64::MAX);
+        assert_eq!(st.roster_len(), 1);
+        assert_eq!(submit(&mut st, a, 0, 0, u64::MAX), SubmitReply::Ok);
+    }
+}

@@ -1,0 +1,441 @@
+//! The networked coordinator/participant service (DESIGN.md §5).
+//!
+//! The in-process [`RoundEngine`](crate::fl::engine::RoundEngine) runs
+//! clients on a thread pool it owns. This module runs the *same round
+//! stages* with the clients on the far side of a message protocol:
+//!
+//! * [`protocol`] — the request/reply envelope grammar (checksummed,
+//!   adversarially validated);
+//! * [`coordinator`] — the pure message-driven state machine
+//!   (rendezvous → standby → round-in-progress → finished) that assigns
+//!   slots, validates submissions at arrival, and tolerates late
+//!   arrivals, dropouts, duplicates and heartbeat expiry;
+//! * [`participant`] — the client SDK: pull a work order, run the local
+//!   update, compress through the `Aggregator` seam, submit over the
+//!   existing `compress::wire` format;
+//! * [`transport`] — the seam between them: in-process loopback (the
+//!   determinism substrate) and length-prefixed TCP over `std::net`,
+//!   behind one [`Transport`] trait.
+//!
+//! [`ServiceHost`] is the server-side driver: it owns the engine's
+//! server-side stages (participation planning, σ resolution, fold,
+//! server step, evaluation) and feeds the client-side stages to remote
+//! participants through a [`Coordinator`]. On loopback with full
+//! submission the result is **bit-identical** to `RoundEngine::run` —
+//! pinned by the tests at the bottom of this file for every compressor
+//! family, at 1 and 8 participant threads, under uniform and simulated
+//! (faulty) participation.
+
+pub mod coordinator;
+pub mod participant;
+pub mod protocol;
+pub mod transport;
+
+pub use coordinator::{CoordState, Coordinator, Submission};
+pub use participant::Participant;
+pub use transport::{LoopbackTransport, TcpServer, TcpTransport, Transport, MAX_FRAME_BYTES};
+
+use crate::api::spec::ExperimentSpec;
+use crate::error::{Error, Result};
+use crate::fl::engine::RoundEngine;
+use crate::fl::{AlgorithmConfig, RoundRecord, RunResult, ServerConfig, TrainBackend};
+use crate::util::Timer;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Server-side driver: the engine's round loop with the client stages
+/// outsourced to networked participants.
+///
+/// Construct with [`ServiceHost::loopback`] (spawns in-process participant
+/// threads; heartbeat expiry disabled, so the cohort is stable and every
+/// round sees full submission — the bit-identical configuration) or
+/// [`ServiceHost::tcp`] (binds a listener; real peers join with
+/// `zsfa join`, heartbeats gate liveness, and the round deadline turns
+/// silent dropouts into partial rounds).
+pub struct ServiceHost {
+    coord: Coordinator,
+    server: Option<TcpServer>,
+    round_deadline: Duration,
+    join_patience: Duration,
+    min_participants: usize,
+    loopback: Vec<JoinHandle<Result<()>>>,
+}
+
+impl ServiceHost {
+    /// In-process service: `workers` participant threads over the loopback
+    /// transport (full protocol codec, zero I/O).
+    pub fn loopback(spec: &ExperimentSpec, workers: usize) -> ServiceHost {
+        // heartbeat_ms = 0 disables expiry: a loopback participant cannot
+        // silently vanish, and a stable roster keeps EF residual pins fixed.
+        let coord = Coordinator::new(0);
+        let loopback = (0..workers.max(1))
+            .map(|_| {
+                let mut p = Participant::new(spec.clone());
+                let mut t = LoopbackTransport::new(coord.clone());
+                std::thread::spawn(move || p.run(&mut t))
+            })
+            .collect();
+        ServiceHost {
+            coord,
+            server: None,
+            // Loopback participants always submit; the deadline is only a
+            // backstop against a wedged participant thread.
+            round_deadline: Duration::from_secs(600),
+            join_patience: Duration::from_secs(60),
+            min_participants: 1,
+            loopback,
+        }
+    }
+
+    /// Networked service: bind `addr` and wait for `min_participants`
+    /// peers before the first round is offered.
+    pub fn tcp(
+        addr: &str,
+        heartbeat_ms: u64,
+        round_deadline_ms: u64,
+        min_participants: usize,
+    ) -> Result<ServiceHost> {
+        let coord = Coordinator::new(heartbeat_ms);
+        let server = TcpServer::bind(addr, coord.clone())?;
+        Ok(ServiceHost {
+            coord,
+            server: Some(server),
+            round_deadline: Duration::from_millis(round_deadline_ms),
+            join_patience: Duration::from_secs(60),
+            min_participants: min_participants.max(1),
+            loopback: Vec::new(),
+        })
+    }
+
+    /// The bound TCP address, when serving TCP (resolves `:0` requests).
+    pub fn local_addr(&self) -> Option<std::net::SocketAddr> {
+        self.server.as_ref().map(|s| s.local_addr())
+    }
+
+    /// Run one (series, repeat) experiment through the service — the exact
+    /// stage sequence of `RoundEngine::run_observed`, with the per-client
+    /// work replaced by offer/submit through the coordinator.
+    pub fn run_one(
+        &mut self,
+        backend: &mut dyn TrainBackend,
+        algo: &AlgorithmConfig,
+        cfg: &ServerConfig,
+        series: u32,
+        repeat: u32,
+        on_record: &mut dyn FnMut(&RoundRecord),
+    ) -> Result<RunResult> {
+        let d = backend.dim();
+        let n = backend.num_clients();
+        let mut engine = RoundEngine::new(algo, cfg, d, n);
+        engine.reset_run();
+        let mut params = backend.init_params();
+        let root = engine.root();
+        let mut policy = engine.build_policy(&root);
+
+        // Arm submission validation for this run's family, then wait for
+        // the minimum cohort to rendezvous.
+        self.coord.with_state(|st| st.begin_run(algo.compression.aggregator(algo.client_lr), d));
+        let min = self.min_participants;
+        self.coord
+            .wait_until(self.join_patience, |st| (st.roster_len() >= min).then_some(()))
+            .ok_or_else(|| {
+                Error::timeout(format!(
+                    "fewer than {min} participants joined within {:?}",
+                    self.join_patience
+                ))
+            })?;
+
+        let mut records = Vec::new();
+        let mut sim_time_s = 0.0f64;
+        for t in 0..cfg.rounds {
+            let timer = Timer::start();
+            // 1. Participation: planned server-side, exactly like the
+            //    engine; the plan's faults ride along in the work orders.
+            let plan = policy.plan_round(t, &root);
+            let selected = plan.outcomes.len() as u32;
+            sim_time_s += plan.duration_s;
+            engine.bill_downlink(plan.downloads);
+            let round_sigma = engine.round_sigma();
+
+            let mut arrived = 0u32;
+            if !plan.participants.is_empty() {
+                // 2. Offer the round; participants pull slots and submit.
+                self.coord.with_state(|st| {
+                    st.offer_round(
+                        series,
+                        repeat,
+                        t as u64,
+                        round_sigma,
+                        &params,
+                        &plan.participants,
+                    )
+                });
+                // 3. Close at full submission or at the deadline — a
+                //    partial round is the dropout semantics, not an error.
+                self.coord
+                    .wait_until(self.round_deadline, |st| st.round_complete().then_some(()));
+                let subs = self.coord.with_state(|st| st.close_round());
+
+                // 4–6. Fold in slot order and step, exactly like the
+                //    engine. Submissions were probe-validated at arrival,
+                //    so a fold failure here is a coordinator bug.
+                if !subs.is_empty() {
+                    let m = subs.len();
+                    arrived = m as u32;
+                    let inv_m = 1.0f32 / m as f32;
+                    let topo = engine.begin_remote_round(m);
+                    for (slot, sub) in subs.iter().enumerate() {
+                        engine
+                            .fold_remote_slot(&topo, slot, &sub.update, sub.loss, inv_m)
+                            .map_err(|e| {
+                                Error::protocol(format!(
+                                    "round {t} slot {slot}: validated submission failed to fold \
+                                     ({e:?})"
+                                ))
+                            })?;
+                    }
+                    let stats = engine.finish_remote_round(&topo);
+                    engine.apply_server_step(t, &root, &mut params, &stats);
+                }
+            }
+
+            // 7. Evaluation.
+            if engine.should_eval(t) {
+                let rec = engine.eval_record(
+                    backend,
+                    t,
+                    &params,
+                    round_sigma,
+                    timer.elapsed_ms(),
+                    sim_time_s,
+                    arrived,
+                    selected,
+                );
+                on_record(&rec);
+                records.push(rec);
+            }
+        }
+        Ok(RunResult { algorithm: engine.algorithm_name().to_string(), records })
+    }
+
+    /// Enter the terminal phase, drain loopback participants (propagating
+    /// the first participant error), and stop the TCP listener.
+    pub fn shutdown(&mut self) -> Result<()> {
+        self.coord.with_state(|st| st.finish());
+        let mut first_err: Option<Error> = None;
+        for h in self.loopback.drain(..) {
+            let outcome = match h.join() {
+                Ok(r) => r,
+                Err(_) => Err(Error::msg("loopback participant thread panicked")),
+            };
+            if let Err(e) = outcome {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
+        if let Some(mut s) = self.server.take() {
+            s.shutdown();
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for ServiceHost {
+    fn drop(&mut self) {
+        // Flip the terminal phase so participant threads drain even when
+        // `shutdown` was never called (an error path dropped the host).
+        self.coord.with_state(|st| st.finish());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::spec::WorkloadSpec;
+    use crate::rng::ZParam;
+    use crate::fl::server::{run_experiment, Participation};
+    use crate::sim::{ByzantineMode, FleetPreset, ScenarioConfig};
+
+    /// The engine test suite's identity check: every record field except
+    /// wall-clock must match to the bit.
+    fn assert_identical(a: &RunResult, b: &RunResult, what: &str) {
+        assert_eq!(a.algorithm, b.algorithm, "{what}");
+        assert_eq!(a.records.len(), b.records.len(), "{what}");
+        for (x, y) in a.records.iter().zip(&b.records) {
+            assert_eq!(x.round, y.round, "{what}");
+            assert_eq!(x.objective.to_bits(), y.objective.to_bits(), "{what} round {}", x.round);
+            assert_eq!(x.accuracy.map(f64::to_bits), y.accuracy.map(f64::to_bits), "{what}");
+            assert_eq!(
+                x.grad_norm_sq.map(f64::to_bits),
+                y.grad_norm_sq.map(f64::to_bits),
+                "{what}"
+            );
+            assert_eq!(x.bits_up, y.bits_up, "{what} round {}", x.round);
+            assert_eq!(x.bits_down, y.bits_down, "{what}");
+            assert_eq!(x.sigma.to_bits(), y.sigma.to_bits(), "{what}");
+            assert_eq!(x.sim_time_s.to_bits(), y.sim_time_s.to_bits(), "{what}");
+            assert_eq!(x.arrived, y.arrived, "{what} round {}", x.round);
+            assert_eq!(x.selected, y.selected, "{what}");
+        }
+    }
+
+    fn engine_run(spec: &ExperimentSpec, series: usize, repeat: usize) -> RunResult {
+        let mut backend = spec.workload.build_backend().unwrap();
+        let algo = spec.expanded_series()[series].algorithm.clone();
+        run_experiment(backend.as_mut(), &algo, &spec.server_config(repeat))
+    }
+
+    fn loopback_run(spec: &ExperimentSpec, workers: usize, series: u32, repeat: u32) -> RunResult {
+        let mut host = ServiceHost::loopback(spec, workers);
+        let mut backend = spec.workload.build_backend().unwrap();
+        let algo = spec.expanded_series()[series as usize].algorithm.clone();
+        let cfg = spec.server_config(repeat as usize);
+        let run = host
+            .run_one(backend.as_mut(), &algo, &cfg, series, repeat, &mut |_| {})
+            .unwrap();
+        host.shutdown().unwrap();
+        run
+    }
+
+    fn families() -> Vec<AlgorithmConfig> {
+        vec![
+            AlgorithmConfig::gd().with_lrs(0.05, 1.0),
+            AlgorithmConfig::fedavg(3).with_lrs(0.05, 1.0),
+            AlgorithmConfig::signsgd().with_lrs(0.05, 1.0),
+            AlgorithmConfig::z_signsgd(ZParam::Finite(1), 2.0).with_lrs(0.05, 1.0),
+            AlgorithmConfig::z_signsgd(ZParam::Inf, 2.0).with_lrs(0.05, 1.0),
+            AlgorithmConfig::sto_signsgd().with_lrs(0.05, 1.0),
+            AlgorithmConfig::ef_signsgd().with_lrs(0.05, 1.0),
+            AlgorithmConfig::qsgd(2).with_lrs(0.05, 1.0),
+            AlgorithmConfig::topk(0.25, 1).with_lrs(0.05, 1.0),
+            AlgorithmConfig::sparse_sign(0.25, ZParam::Finite(1), 1.0, 1).with_lrs(0.05, 1.0),
+            AlgorithmConfig::dp_signfedavg(0.5, 1.0, 2).with_lrs(0.05, 0.5),
+            AlgorithmConfig::dp_fedavg(0.5, 1.0, 2).with_lrs(0.05, 0.5),
+        ]
+    }
+
+    #[test]
+    fn loopback_service_is_bit_identical_to_engine_for_every_family() {
+        // reduce_lanes = 3 < m forces multi-slot lanes, so slot-order
+        // folding is actually exercised; 1 and 8 participant threads pin
+        // the parallelism contract on the service path too.
+        for algo in families() {
+            let spec = ExperimentSpec::new("svc", WorkloadSpec::consensus(16, 37, 1234))
+                .rounds(6)
+                .seed(13)
+                .reduce_lanes(3)
+                .series(algo);
+            let want = engine_run(&spec, 0, 0);
+            for workers in [1usize, 8] {
+                let got = loopback_run(&spec, workers, 0, 0);
+                assert_identical(&want, &got, &format!("{} workers={workers}", want.algorithm));
+            }
+        }
+    }
+
+    #[test]
+    fn loopback_service_is_bit_identical_under_partial_participation() {
+        let spec = ExperimentSpec::new("svc", WorkloadSpec::consensus(20, 24, 99))
+            .rounds(8)
+            .seed(7)
+            .clients_per_round(Some(5))
+            .series(AlgorithmConfig::z_signfedavg(ZParam::Finite(1), 2.0, 2).with_lrs(0.05, 1.0));
+        let want = engine_run(&spec, 0, 0);
+        for workers in [1usize, 8] {
+            let got = loopback_run(&spec, workers, 0, 0);
+            assert_identical(&want, &got, &format!("partial workers={workers}"));
+        }
+    }
+
+    #[test]
+    fn loopback_service_is_bit_identical_under_simulated_faults() {
+        // Stragglers, dropouts and byzantine sign-flippers: the lifecycle
+        // plan (and its faults) is host-side, so the service must replay
+        // the identical scenario — down to empty and partial rounds.
+        let sc = ScenarioConfig {
+            target_cohort: 6,
+            overselect: 1.5,
+            deadline_s: 0.6,
+            round_latency_s: 0.1,
+            dropout_prob: 0.2,
+            byzantine_frac: 0.25,
+            byzantine_mode: ByzantineMode::SignFlip,
+            fleet: FleetPreset::CrossDevice,
+        };
+        for algo in [
+            AlgorithmConfig::z_signfedavg(ZParam::Finite(1), 2.0, 2).with_lrs(0.05, 1.0),
+            AlgorithmConfig::fedavg(2).with_lrs(0.05, 1.0),
+            AlgorithmConfig::qsgd(2).with_lrs(0.05, 1.0),
+        ] {
+            let spec = ExperimentSpec::new("svc", WorkloadSpec::consensus(24, 16, 77))
+                .rounds(10)
+                .seed(5)
+                .participation(Participation::Simulated(sc.clone()))
+                .series(algo);
+            let want = engine_run(&spec, 0, 0);
+            for workers in [1usize, 8] {
+                let got = loopback_run(&spec, workers, 0, 0);
+                assert_identical(&want, &got, &format!("{} workers={workers}", want.algorithm));
+            }
+        }
+    }
+
+    #[test]
+    fn one_host_serves_multiple_series_and_repeats() {
+        // Participants must rebuild their run context when the work order
+        // names a new (series, repeat) — and stay bit-identical for each.
+        let spec = ExperimentSpec::new("svc", WorkloadSpec::consensus(12, 19, 42))
+            .rounds(5)
+            .seed(3)
+            .repeats(2)
+            .series(AlgorithmConfig::z_signfedavg(ZParam::Finite(1), 2.0, 2).with_lrs(0.05, 1.0))
+            .series(AlgorithmConfig::fedavg(2).with_lrs(0.05, 1.0));
+        let mut host = ServiceHost::loopback(&spec, 3);
+        for series in 0..2u32 {
+            for repeat in 0..2u32 {
+                let mut backend = spec.workload.build_backend().unwrap();
+                let algo = spec.expanded_series()[series as usize].algorithm.clone();
+                let cfg = spec.server_config(repeat as usize);
+                let got = host
+                    .run_one(backend.as_mut(), &algo, &cfg, series, repeat, &mut |_| {})
+                    .unwrap();
+                let want = engine_run(&spec, series as usize, repeat as usize);
+                assert_identical(&want, &got, &format!("series={series} repeat={repeat}"));
+            }
+        }
+        host.shutdown().unwrap();
+    }
+
+    #[test]
+    fn tcp_service_runs_end_to_end_and_matches_the_engine() {
+        let spec = ExperimentSpec::new("svc", WorkloadSpec::consensus(10, 13, 2024))
+            .rounds(4)
+            .seed(11)
+            .series(AlgorithmConfig::z_signfedavg(ZParam::Finite(1), 2.0, 2).with_lrs(0.05, 1.0));
+        let mut host = ServiceHost::tcp("127.0.0.1:0", 500, 30_000, 2).unwrap();
+        let addr = host.local_addr().unwrap().to_string();
+        let joiners: Vec<_> = (0..2)
+            .map(|_| {
+                let spec = spec.clone();
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let mut t = TcpTransport::connect(&addr, Duration::from_secs(10)).unwrap();
+                    Participant::new(spec).run(&mut t)
+                })
+            })
+            .collect();
+        let mut backend = spec.workload.build_backend().unwrap();
+        let algo = spec.expanded_series()[0].algorithm.clone();
+        let cfg = spec.server_config(0);
+        let got = host.run_one(backend.as_mut(), &algo, &cfg, 0, 0, &mut |_| {}).unwrap();
+        host.shutdown().unwrap();
+        for j in joiners {
+            j.join().unwrap().unwrap();
+        }
+        assert_identical(&engine_run(&spec, 0, 0), &got, "tcp");
+    }
+}

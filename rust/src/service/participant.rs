@@ -1,0 +1,228 @@
+//! The participant SDK: a networked client that executes the *same*
+//! per-client work as the in-process round engine.
+//!
+//! A [`Participant`] is built from the very [`ExperimentSpec`] the
+//! coordinator runs, which is how the two sides agree on everything the
+//! protocol does not carry per message: the workload (and therefore the
+//! local dataset partition), the algorithm of each series, and the
+//! repeat-seed convention. Each [`protocol::WorkOrder`](super::protocol)
+//! then pins the per-round scalars (round, σ, client, fault, params).
+//!
+//! Determinism: the client task RNG is derived from `(seed_for_repeat,
+//! round, client)` — never from the slot or the participant — so *which*
+//! participant serves a client cannot change the update it computes. That,
+//! plus the coordinator folding submissions in slot order, is the whole
+//! loopback-equals-engine argument.
+//!
+//! EF-SignSGD residuals live here, per client id, exactly like the
+//! engine's per-client `EfState` table. The coordinator's sticky
+//! client→participant pinning keeps a client on the participant that owns
+//! its residual.
+
+use super::protocol::{
+    PhaseReply, Reply, RendezvousReply, Request, RoundReply, SubmitReply, WorkOrder,
+};
+use super::transport::Transport;
+use crate::api::spec::{ExperimentSpec, SeriesSpec};
+use crate::compress::agg::{Aggregator, RemoteCtx, Scratch};
+use crate::compress::error_feedback::EfState;
+use crate::compress::wire;
+use crate::error::{Error, Result};
+use crate::fl::backend::{LocalScratch, TrainBackend};
+use crate::fl::engine::ClientTask;
+use crate::fl::{AlgorithmConfig, Compression};
+use crate::rng::Pcg64;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Everything scoped to one (series, repeat) run: the backend with this
+/// repeat's data, the series' aggregator, the run's root RNG stream, the
+/// EF residuals, and the reusable work buffers.
+struct RunCtx {
+    series: u32,
+    repeat: u32,
+    d: usize,
+    backend: Box<dyn TrainBackend>,
+    algo: AlgorithmConfig,
+    agg: Box<dyn Aggregator>,
+    root: Pcg64,
+    /// Per-client EF residuals (EF-SignSGD only), keyed by client id.
+    ef: HashMap<u64, Mutex<EfState>>,
+    delta: Vec<f32>,
+    local: LocalScratch,
+    scratch: Scratch,
+}
+
+/// A service client: rendezvous, pull work, run the local update, submit —
+/// until the coordinator reports `Finished`.
+pub struct Participant {
+    spec: ExperimentSpec,
+    series: Vec<SeriesSpec>,
+    run: Option<RunCtx>,
+}
+
+impl Participant {
+    /// Build from the experiment spec both sides share.
+    pub fn new(spec: ExperimentSpec) -> Participant {
+        let series = spec.expanded_series();
+        Participant { spec, series, run: None }
+    }
+
+    /// Join the coordinator and work until it finishes. Returns `Ok(())`
+    /// when the coordinator reports the terminal phase (or refuses the
+    /// rendezvous because the run is already over).
+    pub fn run(&mut self, transport: &mut dyn Transport) -> Result<()> {
+        let Some(mut pid) = rendezvous(transport)? else {
+            return Ok(()); // Nothing left to join.
+        };
+        loop {
+            match transport.request(&Request::PullRound { pid })? {
+                Reply::Round(RoundReply::Work(w)) => {
+                    match self.execute(transport, pid, &w)? {
+                        // Stale/Duplicate: the round closed (or the slot was
+                        // stolen and re-filled) while we computed — drop the
+                        // result and pull again.
+                        SubmitReply::Ok | SubmitReply::Stale | SubmitReply::Duplicate => {}
+                        // Our registration expired (heartbeat lapse): rejoin.
+                        SubmitReply::Unknown => match rendezvous(transport)? {
+                            Some(p) => pid = p,
+                            None => return Ok(()),
+                        },
+                        // An honest participant producing a malformed
+                        // submission means the two sides disagree about the
+                        // spec — not something a retry can fix.
+                        SubmitReply::Malformed => {
+                            return Err(Error::protocol(
+                                "coordinator rejected this participant's submission as \
+                                 malformed (spec mismatch between coordinator and participant?)",
+                            ))
+                        }
+                    }
+                }
+                Reply::Round(RoundReply::NoWork) => {
+                    match transport.request(&Request::Heartbeat { pid })? {
+                        Reply::Heartbeat(PhaseReply::Finished) => return Ok(()),
+                        Reply::Heartbeat(PhaseReply::Unknown) => match rendezvous(transport)? {
+                            Some(p) => pid = p,
+                            None => return Ok(()),
+                        },
+                        Reply::Heartbeat(_) => transport.idle_wait(),
+                        other => {
+                            return Err(Error::protocol(format!(
+                                "unexpected reply to heartbeat: {other:?}"
+                            )))
+                        }
+                    }
+                }
+                other => {
+                    return Err(Error::protocol(format!("unexpected reply to pull: {other:?}")))
+                }
+            }
+        }
+    }
+
+    /// Run one work order — the client side of the engine's per-slot task:
+    /// local update, fault, uplink compression — and submit the result.
+    fn execute(
+        &mut self,
+        transport: &mut dyn Transport,
+        pid: u64,
+        w: &WorkOrder,
+    ) -> Result<SubmitReply> {
+        let ctx = self.ensure_run(w.series, w.repeat)?;
+        if w.params.len() != ctx.d {
+            return Err(Error::protocol(format!(
+                "work order carries {} params, the workload has dimension {}",
+                w.params.len(),
+                ctx.d
+            )));
+        }
+        // The slot does not feed the stream derivation (`pos` is unused by
+        // ClientTask::new), so any participant computes the same update.
+        let mut task = ClientTask::new(&ctx.root, w.round as usize, 0, w.client as usize);
+        let loss = ctx.backend.local_update_into(
+            w.client as usize,
+            &w.params,
+            ctx.algo.local_steps,
+            ctx.algo.client_lr,
+            &mut task.rng,
+            &mut ctx.delta,
+            &mut ctx.local,
+        );
+        if let Some(mode) = w.fault {
+            mode.apply(&mut ctx.delta);
+        }
+        let ef = match ctx.algo.compression {
+            Compression::ErrorFeedback => Some(&*ctx
+                .ef
+                .entry(w.client)
+                .or_insert_with(|| Mutex::new(EfState::new(ctx.d)))),
+            _ => None,
+        };
+        let upd = ctx.agg.compress_remote(
+            &mut ctx.delta,
+            RemoteCtx { rng: &mut task.rng, round_sigma: w.sigma, ef },
+            &mut ctx.scratch,
+        );
+        let req = Request::Submit {
+            pid,
+            round: w.round,
+            slot: w.slot,
+            loss,
+            ef_scale: upd.ef_scale,
+            payload: wire::encode(&upd.msg),
+        };
+        match transport.request(&req)? {
+            Reply::Submit(r) => Ok(r),
+            other => Err(Error::protocol(format!("unexpected reply to submit: {other:?}"))),
+        }
+    }
+
+    /// (Re)build the run context when the work order names a different
+    /// (series, repeat) than the cached one — a fresh backend per repeat
+    /// and the `seed_for_repeat` root, exactly like `api::Session`.
+    fn ensure_run(&mut self, series: u32, repeat: u32) -> Result<&mut RunCtx> {
+        let stale = self.run.as_ref().map(|c| (c.series, c.repeat)) != Some((series, repeat));
+        if stale {
+            let s = self.series.get(series as usize).ok_or_else(|| {
+                Error::protocol(format!(
+                    "work order names series {series}, the spec has {}",
+                    self.series.len()
+                ))
+            })?;
+            let algo = s.algorithm.clone();
+            let backend = self
+                .spec
+                .workload
+                .build_backend()
+                .map_err(|e| e.wrap("participant backend"))?;
+            let d = backend.dim();
+            let seed = self.spec.seed_for_repeat(repeat as usize);
+            self.run = Some(RunCtx {
+                series,
+                repeat,
+                d,
+                backend,
+                agg: algo.compression.aggregator(algo.client_lr),
+                algo,
+                // The engine's root derivation — shared contract.
+                root: Pcg64::new(seed, 0xa11ce),
+                ef: HashMap::new(),
+                delta: vec![0.0; d],
+                local: LocalScratch::new(),
+                scratch: Scratch::new(d),
+            });
+        }
+        Ok(self.run.as_mut().unwrap())
+    }
+}
+
+/// One rendezvous attempt. `Ok(None)` means the coordinator already
+/// finished (`Later`) and there is nothing to join.
+fn rendezvous(transport: &mut dyn Transport) -> Result<Option<u64>> {
+    match transport.request(&Request::Rendezvous)? {
+        Reply::Rendezvous(RendezvousReply::Accept { pid }) => Ok(Some(pid)),
+        Reply::Rendezvous(RendezvousReply::Later) => Ok(None),
+        other => Err(Error::protocol(format!("unexpected reply to rendezvous: {other:?}"))),
+    }
+}

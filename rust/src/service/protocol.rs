@@ -1,0 +1,690 @@
+//! The coordinator⇄participant message grammar and its byte envelope.
+//!
+//! Every exchange is one request frame up, one reply frame back:
+//!
+//! ```text
+//!   [0]      u8   message tag (request 0x1x, reply 0x2x)
+//!   [1..]        tag-specific payload (little-endian fields)
+//!   [-4..]   u32  FNV-1a checksum of everything before it
+//! ```
+//!
+//! The *model update* inside [`Request::Submit`] is an opaque
+//! `compress/wire.rs` frame (its own tag + checksum), so the compression
+//! wire format stays the single source of truth for update bytes and this
+//! envelope only adds the round/slot bookkeeping around it.
+//!
+//! Decoding is hardened exactly like `compress::wire::decode`: every
+//! length field is validated against the actual payload size in wide
+//! (u128) arithmetic *before* any allocation or slicing, unknown tags and
+//! unknown enum codes are errors, and the adversarial suites below sweep
+//! truncations, bit flips and u64::MAX counts over every frame kind.
+
+use crate::compress::wire::WireError;
+use crate::sim::ByzantineMode;
+
+const TAG_RENDEZVOUS: u8 = 0x10;
+const TAG_HEARTBEAT: u8 = 0x11;
+const TAG_PULL_ROUND: u8 = 0x12;
+const TAG_SUBMIT: u8 = 0x13;
+
+const TAG_RENDEZVOUS_REPLY: u8 = 0x20;
+const TAG_HEARTBEAT_REPLY: u8 = 0x21;
+const TAG_ROUND_REPLY: u8 = 0x22;
+const TAG_SUBMIT_REPLY: u8 = 0x23;
+
+/// What a participant can ask the coordinator.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Join the fleet; the coordinator assigns a participant id.
+    Rendezvous,
+    /// Liveness ping; the reply carries the coordinator's phase.
+    Heartbeat { pid: u64 },
+    /// Ask for a unit of round work (an unassigned participant slot).
+    PullRound { pid: u64 },
+    /// Submit the result for an assigned slot. `payload` is a complete
+    /// `compress::wire` frame; `ef_scale` is the EF-SignSGD scale sidecar.
+    Submit {
+        pid: u64,
+        round: u64,
+        slot: u64,
+        loss: f64,
+        ef_scale: Option<f32>,
+        payload: Vec<u8>,
+    },
+}
+
+/// Rendezvous outcome (xaynet-style: accept now or ask back later).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RendezvousReply {
+    Accept { pid: u64 },
+    Later,
+}
+
+/// Coordinator phase as seen by a heartbeat.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PhaseReply {
+    /// Between rounds (or waiting for the fleet to assemble).
+    Standby,
+    /// A round is open — `PullRound` may yield work.
+    Round,
+    /// The experiment is over; participants should exit.
+    Finished,
+    /// The coordinator does not know this pid (expired or never joined) —
+    /// re-rendezvous.
+    Unknown,
+}
+
+/// One unit of round work: everything a participant needs to run a client
+/// update locally and submit it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkOrder {
+    /// Index of the expanded series within the experiment.
+    pub series: u32,
+    /// Repeat index within the series.
+    pub repeat: u32,
+    pub round: u64,
+    /// The coordinator-resolved σ for this round (plateau-adjusted).
+    pub sigma: f32,
+    /// Participant slot this work fills (fixes the reduce order).
+    pub slot: u64,
+    /// Global client id whose data/stream this slot runs.
+    pub client: u64,
+    /// Fault the client applies to its own update (byzantine simulation).
+    pub fault: Option<ByzantineMode>,
+    /// Current global model.
+    pub params: Vec<f32>,
+}
+
+/// Reply to `PullRound`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RoundReply {
+    /// Nothing to do right now (no open round, or all slots assigned).
+    NoWork,
+    Work(Box<WorkOrder>),
+}
+
+/// Reply to `Submit`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitReply {
+    Ok,
+    /// The submission names a round that is no longer open.
+    Stale,
+    /// The slot already has a submission (duplicate or double-assign).
+    Duplicate,
+    /// The update payload failed wire decoding or aggregator validation.
+    Malformed,
+    /// Unknown pid — re-rendezvous.
+    Unknown,
+}
+
+/// Any reply frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Reply {
+    Rendezvous(RendezvousReply),
+    Heartbeat(PhaseReply),
+    Round(RoundReply),
+    Submit(SubmitReply),
+}
+
+/// FNV-1a over a byte slice (same constants as `compress::wire`).
+fn fnv1a(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// Close a body into a checksummed frame.
+fn seal(mut body: Vec<u8>) -> Vec<u8> {
+    let ck = fnv1a(&body);
+    body.extend_from_slice(&ck.to_le_bytes());
+    body
+}
+
+/// Checksum-validate a frame and return its body (tag + payload).
+fn open(bytes: &[u8]) -> Result<&[u8], WireError> {
+    if bytes.len() < 5 {
+        return Err(WireError::Truncated);
+    }
+    let (body, ck_bytes) = bytes.split_at(bytes.len() - 4);
+    let ck = u32::from_le_bytes(ck_bytes.try_into().unwrap());
+    if fnv1a(body) != ck {
+        return Err(WireError::BadChecksum);
+    }
+    Ok(body)
+}
+
+/// Sequential little-endian field reader over a checksummed body. Every
+/// accessor bounds-checks before slicing; `bytes`/`f32s` validate their
+/// element count against the remaining bytes in u128 *before* allocating.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        let end = self.pos.checked_add(n).ok_or(WireError::Truncated)?;
+        if end > self.buf.len() {
+            return Err(WireError::Truncated);
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32, WireError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// A u64-counted byte blob, validated before allocation.
+    fn blob(&mut self) -> Result<Vec<u8>, WireError> {
+        let n = self.u64()?;
+        let avail = (self.buf.len() - self.pos) as u128;
+        if n as u128 > avail {
+            return Err(WireError::Truncated);
+        }
+        Ok(self.take(n as usize)?.to_vec())
+    }
+
+    /// A u64-counted f32 vector, validated before allocation.
+    fn f32s(&mut self) -> Result<Vec<f32>, WireError> {
+        let n = self.u64()?;
+        let avail = (self.buf.len() - self.pos) as u128;
+        if (n as u128) * 4 > avail {
+            return Err(WireError::Truncated);
+        }
+        let raw = self.take(n as usize * 4)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    /// Every field consumed — trailing garbage is an error (a frame that
+    /// checksums but carries extra bytes is not one we produced).
+    fn finish(self) -> Result<(), WireError> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(WireError::Corrupt)
+        }
+    }
+}
+
+fn push_blob(out: &mut Vec<u8>, bytes: &[u8]) {
+    out.extend_from_slice(&(bytes.len() as u64).to_le_bytes());
+    out.extend_from_slice(bytes);
+}
+
+fn push_f32s(out: &mut Vec<u8>, vals: &[f32]) {
+    out.extend_from_slice(&(vals.len() as u64).to_le_bytes());
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Fault codes: 0 = honest, 1 = sign flip, 2 = gradient negate (+ boost).
+fn push_fault(out: &mut Vec<u8>, fault: &Option<ByzantineMode>) {
+    let (code, boost) = match fault {
+        None => (0u8, 0.0f32),
+        Some(ByzantineMode::SignFlip) => (1, 0.0),
+        Some(ByzantineMode::GradNegate { boost }) => (2, *boost),
+    };
+    out.push(code);
+    out.extend_from_slice(&boost.to_le_bytes());
+}
+
+fn pull_fault(c: &mut Cursor<'_>) -> Result<Option<ByzantineMode>, WireError> {
+    let code = c.u8()?;
+    let boost = c.f32()?;
+    match code {
+        0 => Ok(None),
+        1 => Ok(Some(ByzantineMode::SignFlip)),
+        2 => Ok(Some(ByzantineMode::GradNegate { boost })),
+        _ => Err(WireError::Corrupt),
+    }
+}
+
+/// Serialize a request into a framed byte buffer.
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    let mut out = Vec::new();
+    match req {
+        Request::Rendezvous => out.push(TAG_RENDEZVOUS),
+        Request::Heartbeat { pid } => {
+            out.push(TAG_HEARTBEAT);
+            out.extend_from_slice(&pid.to_le_bytes());
+        }
+        Request::PullRound { pid } => {
+            out.push(TAG_PULL_ROUND);
+            out.extend_from_slice(&pid.to_le_bytes());
+        }
+        Request::Submit { pid, round, slot, loss, ef_scale, payload } => {
+            out.push(TAG_SUBMIT);
+            out.extend_from_slice(&pid.to_le_bytes());
+            out.extend_from_slice(&round.to_le_bytes());
+            out.extend_from_slice(&slot.to_le_bytes());
+            out.extend_from_slice(&loss.to_le_bytes());
+            out.push(ef_scale.is_some() as u8);
+            out.extend_from_slice(&ef_scale.unwrap_or(0.0).to_le_bytes());
+            push_blob(&mut out, payload);
+        }
+    }
+    seal(out)
+}
+
+/// Parse a framed request.
+pub fn decode_request(bytes: &[u8]) -> Result<Request, WireError> {
+    let body = open(bytes)?;
+    let mut c = Cursor::new(&body[1..]);
+    let req = match body[0] {
+        TAG_RENDEZVOUS => Request::Rendezvous,
+        TAG_HEARTBEAT => Request::Heartbeat { pid: c.u64()? },
+        TAG_PULL_ROUND => Request::PullRound { pid: c.u64()? },
+        TAG_SUBMIT => {
+            let pid = c.u64()?;
+            let round = c.u64()?;
+            let slot = c.u64()?;
+            let loss = c.f64()?;
+            let has_scale = match c.u8()? {
+                0 => false,
+                1 => true,
+                _ => return Err(WireError::Corrupt),
+            };
+            let scale = c.f32()?;
+            let payload = c.blob()?;
+            Request::Submit {
+                pid,
+                round,
+                slot,
+                loss,
+                ef_scale: has_scale.then_some(scale),
+                payload,
+            }
+        }
+        t => return Err(WireError::BadTag(t)),
+    };
+    c.finish()?;
+    Ok(req)
+}
+
+/// Serialize a reply into a framed byte buffer.
+pub fn encode_reply(reply: &Reply) -> Vec<u8> {
+    let mut out = Vec::new();
+    match reply {
+        Reply::Rendezvous(r) => {
+            out.push(TAG_RENDEZVOUS_REPLY);
+            match r {
+                RendezvousReply::Later => {
+                    out.push(0);
+                    out.extend_from_slice(&0u64.to_le_bytes());
+                }
+                RendezvousReply::Accept { pid } => {
+                    out.push(1);
+                    out.extend_from_slice(&pid.to_le_bytes());
+                }
+            }
+        }
+        Reply::Heartbeat(p) => {
+            out.push(TAG_HEARTBEAT_REPLY);
+            out.push(match p {
+                PhaseReply::Standby => 0,
+                PhaseReply::Round => 1,
+                PhaseReply::Finished => 2,
+                PhaseReply::Unknown => 3,
+            });
+        }
+        Reply::Round(r) => {
+            out.push(TAG_ROUND_REPLY);
+            match r {
+                RoundReply::NoWork => out.push(0),
+                RoundReply::Work(w) => {
+                    out.push(1);
+                    out.extend_from_slice(&w.series.to_le_bytes());
+                    out.extend_from_slice(&w.repeat.to_le_bytes());
+                    out.extend_from_slice(&w.round.to_le_bytes());
+                    out.extend_from_slice(&w.sigma.to_le_bytes());
+                    out.extend_from_slice(&w.slot.to_le_bytes());
+                    out.extend_from_slice(&w.client.to_le_bytes());
+                    push_fault(&mut out, &w.fault);
+                    push_f32s(&mut out, &w.params);
+                }
+            }
+        }
+        Reply::Submit(s) => {
+            out.push(TAG_SUBMIT_REPLY);
+            out.push(match s {
+                SubmitReply::Ok => 0,
+                SubmitReply::Stale => 1,
+                SubmitReply::Duplicate => 2,
+                SubmitReply::Malformed => 3,
+                SubmitReply::Unknown => 4,
+            });
+        }
+    }
+    seal(out)
+}
+
+/// Parse a framed reply.
+pub fn decode_reply(bytes: &[u8]) -> Result<Reply, WireError> {
+    let body = open(bytes)?;
+    let mut c = Cursor::new(&body[1..]);
+    let reply = match body[0] {
+        TAG_RENDEZVOUS_REPLY => {
+            let code = c.u8()?;
+            let pid = c.u64()?;
+            match code {
+                0 => Reply::Rendezvous(RendezvousReply::Later),
+                1 => Reply::Rendezvous(RendezvousReply::Accept { pid }),
+                _ => return Err(WireError::Corrupt),
+            }
+        }
+        TAG_HEARTBEAT_REPLY => Reply::Heartbeat(match c.u8()? {
+            0 => PhaseReply::Standby,
+            1 => PhaseReply::Round,
+            2 => PhaseReply::Finished,
+            3 => PhaseReply::Unknown,
+            _ => return Err(WireError::Corrupt),
+        }),
+        TAG_ROUND_REPLY => match c.u8()? {
+            0 => Reply::Round(RoundReply::NoWork),
+            1 => {
+                let series = c.u32()?;
+                let repeat = c.u32()?;
+                let round = c.u64()?;
+                let sigma = c.f32()?;
+                let slot = c.u64()?;
+                let client = c.u64()?;
+                let fault = pull_fault(&mut c)?;
+                let params = c.f32s()?;
+                Reply::Round(RoundReply::Work(Box::new(WorkOrder {
+                    series,
+                    repeat,
+                    round,
+                    sigma,
+                    slot,
+                    client,
+                    fault,
+                    params,
+                })))
+            }
+            _ => return Err(WireError::Corrupt),
+        },
+        TAG_SUBMIT_REPLY => Reply::Submit(match c.u8()? {
+            0 => SubmitReply::Ok,
+            1 => SubmitReply::Stale,
+            2 => SubmitReply::Duplicate,
+            3 => SubmitReply::Malformed,
+            4 => SubmitReply::Unknown,
+            _ => return Err(WireError::Corrupt),
+        }),
+        t => return Err(WireError::BadTag(t)),
+    };
+    c.finish()?;
+    Ok(reply)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_requests() -> Vec<Request> {
+        vec![
+            Request::Rendezvous,
+            Request::Heartbeat { pid: 7 },
+            Request::PullRound { pid: u64::MAX },
+            Request::Submit {
+                pid: 3,
+                round: 12,
+                slot: 5,
+                loss: 0.25,
+                ef_scale: None,
+                payload: vec![1, 2, 3, 4, 5],
+            },
+            Request::Submit {
+                pid: 0,
+                round: 0,
+                slot: 0,
+                loss: -1.5,
+                ef_scale: Some(0.125),
+                payload: Vec::new(),
+            },
+        ]
+    }
+
+    fn sample_replies() -> Vec<Reply> {
+        vec![
+            Reply::Rendezvous(RendezvousReply::Accept { pid: 42 }),
+            Reply::Rendezvous(RendezvousReply::Later),
+            Reply::Heartbeat(PhaseReply::Standby),
+            Reply::Heartbeat(PhaseReply::Round),
+            Reply::Heartbeat(PhaseReply::Finished),
+            Reply::Heartbeat(PhaseReply::Unknown),
+            Reply::Round(RoundReply::NoWork),
+            Reply::Round(RoundReply::Work(Box::new(WorkOrder {
+                series: 1,
+                repeat: 2,
+                round: 3,
+                sigma: 0.5,
+                slot: 4,
+                client: 9,
+                fault: Some(ByzantineMode::GradNegate { boost: 10.0 }),
+                params: vec![1.0, -2.5, 0.0, f32::MIN_POSITIVE],
+            }))),
+            Reply::Round(RoundReply::Work(Box::new(WorkOrder {
+                series: 0,
+                repeat: 0,
+                round: 0,
+                sigma: 0.0,
+                slot: 0,
+                client: 0,
+                fault: Some(ByzantineMode::SignFlip),
+                params: Vec::new(),
+            }))),
+            Reply::Submit(SubmitReply::Ok),
+            Reply::Submit(SubmitReply::Stale),
+            Reply::Submit(SubmitReply::Duplicate),
+            Reply::Submit(SubmitReply::Malformed),
+            Reply::Submit(SubmitReply::Unknown),
+        ]
+    }
+
+    #[test]
+    fn requests_roundtrip() {
+        for req in sample_requests() {
+            let back = decode_request(&encode_request(&req)).unwrap();
+            assert_eq!(req, back);
+        }
+    }
+
+    #[test]
+    fn replies_roundtrip() {
+        for reply in sample_replies() {
+            let back = decode_reply(&encode_reply(&reply)).unwrap();
+            assert_eq!(reply, back);
+        }
+    }
+
+    #[test]
+    fn truncated_at_every_length_is_an_error() {
+        // Every proper prefix of every frame must decode to Err — never a
+        // panic, never a bogus Ok.
+        for frame in sample_requests().iter().map(encode_request) {
+            for len in 0..frame.len() {
+                assert!(
+                    decode_request(&frame[..len]).is_err(),
+                    "request prefix {len}/{} of tag {:#x} decoded",
+                    frame.len(),
+                    frame[0]
+                );
+            }
+        }
+        for frame in sample_replies().iter().map(encode_reply) {
+            for len in 0..frame.len() {
+                assert!(
+                    decode_reply(&frame[..len]).is_err(),
+                    "reply prefix {len}/{} of tag {:#x} decoded",
+                    frame.len(),
+                    frame[0]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn every_single_byte_flip_is_detected() {
+        // FNV-1a folds every byte, so any single-byte corruption —
+        // including in the checksum itself — must surface as an error.
+        for frame in sample_requests().iter().map(encode_request) {
+            for pos in 0..frame.len() {
+                for mask in [0x01u8, 0x80] {
+                    let mut bad = frame.clone();
+                    bad[pos] ^= mask;
+                    assert!(
+                        decode_request(&bad).is_err(),
+                        "request flip {mask:#x} at {pos} in tag {:#x} went undetected",
+                        frame[0]
+                    );
+                }
+            }
+        }
+        for frame in sample_replies().iter().map(encode_reply) {
+            for pos in 0..frame.len() {
+                for mask in [0x01u8, 0x80] {
+                    let mut bad = frame.clone();
+                    bad[pos] ^= mask;
+                    assert!(
+                        decode_reply(&bad).is_err(),
+                        "reply flip {mask:#x} at {pos} in tag {:#x} went undetected",
+                        frame[0]
+                    );
+                }
+            }
+        }
+    }
+
+    /// Frame a raw body with a valid checksum, so tests reach the per-tag
+    /// validation rather than the checksum gate.
+    fn frame_with_valid_checksum(body: &[u8]) -> Vec<u8> {
+        seal(body.to_vec())
+    }
+
+    #[test]
+    fn unknown_tags_rejected() {
+        for tag in [0u8, 0x14, 0x1f, 0x24, 0xff] {
+            let frame = frame_with_valid_checksum(&[tag]);
+            assert_eq!(decode_request(&frame).unwrap_err(), WireError::BadTag(tag));
+            assert_eq!(decode_reply(&frame).unwrap_err(), WireError::BadTag(tag));
+        }
+    }
+
+    #[test]
+    fn unknown_enum_codes_rejected() {
+        // A submit-reply with code 9, a heartbeat phase 17, a fault code 3:
+        // valid checksums, unrepresentable contents.
+        let frame = frame_with_valid_checksum(&[TAG_SUBMIT_REPLY, 9]);
+        assert_eq!(decode_reply(&frame).unwrap_err(), WireError::Corrupt);
+        let frame = frame_with_valid_checksum(&[TAG_HEARTBEAT_REPLY, 17]);
+        assert_eq!(decode_reply(&frame).unwrap_err(), WireError::Corrupt);
+        let mut body = vec![TAG_ROUND_REPLY, 1];
+        body.extend_from_slice(&0u32.to_le_bytes()); // series
+        body.extend_from_slice(&0u32.to_le_bytes()); // repeat
+        body.extend_from_slice(&0u64.to_le_bytes()); // round
+        body.extend_from_slice(&0f32.to_le_bytes()); // sigma
+        body.extend_from_slice(&0u64.to_le_bytes()); // slot
+        body.extend_from_slice(&0u64.to_le_bytes()); // client
+        body.push(3); // bogus fault code
+        body.extend_from_slice(&0f32.to_le_bytes()); // boost
+        body.extend_from_slice(&0u64.to_le_bytes()); // params len
+        let frame = frame_with_valid_checksum(&body);
+        assert_eq!(decode_reply(&frame).unwrap_err(), WireError::Corrupt);
+    }
+
+    #[test]
+    fn length_field_overflow_cannot_allocate_or_wrap() {
+        // A submit whose payload length claims u64::MAX bytes (with a valid
+        // checksum): the wide-arithmetic validation must reject it before
+        // any allocation or offset math.
+        for n in [u64::MAX, u64::MAX / 2, (u32::MAX as u64) + 1] {
+            let mut body = vec![TAG_SUBMIT];
+            body.extend_from_slice(&1u64.to_le_bytes()); // pid
+            body.extend_from_slice(&0u64.to_le_bytes()); // round
+            body.extend_from_slice(&0u64.to_le_bytes()); // slot
+            body.extend_from_slice(&0f64.to_le_bytes()); // loss
+            body.push(0); // no ef scale
+            body.extend_from_slice(&0f32.to_le_bytes());
+            body.extend_from_slice(&n.to_le_bytes()); // hostile payload len
+            body.extend_from_slice(&[0u8; 8]); // a few actual bytes
+            let frame = frame_with_valid_checksum(&body);
+            assert_eq!(
+                decode_request(&frame).unwrap_err(),
+                WireError::Truncated,
+                "payload len {n}"
+            );
+        }
+        // Same for a work order's params count.
+        for n in [u64::MAX, u64::MAX / 4, (u32::MAX as u64) + 1] {
+            let mut body = vec![TAG_ROUND_REPLY, 1];
+            body.extend_from_slice(&0u32.to_le_bytes());
+            body.extend_from_slice(&0u32.to_le_bytes());
+            body.extend_from_slice(&0u64.to_le_bytes());
+            body.extend_from_slice(&0f32.to_le_bytes());
+            body.extend_from_slice(&0u64.to_le_bytes());
+            body.extend_from_slice(&0u64.to_le_bytes());
+            body.push(0);
+            body.extend_from_slice(&0f32.to_le_bytes());
+            body.extend_from_slice(&n.to_le_bytes()); // hostile params count
+            body.extend_from_slice(&[0u8; 16]);
+            let frame = frame_with_valid_checksum(&body);
+            assert_eq!(
+                decode_reply(&frame).unwrap_err(),
+                WireError::Truncated,
+                "params count {n}"
+            );
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_rejected() {
+        // A frame that checksums but carries extra bytes after its last
+        // field is not one our encoder produced.
+        let mut body = vec![TAG_HEARTBEAT];
+        body.extend_from_slice(&1u64.to_le_bytes());
+        body.extend_from_slice(&[0xab; 3]);
+        let frame = frame_with_valid_checksum(&body);
+        assert_eq!(decode_request(&frame).unwrap_err(), WireError::Corrupt);
+    }
+
+    #[test]
+    fn request_and_reply_tag_spaces_are_disjoint() {
+        // A reply frame fed to the request decoder (and vice versa) is a
+        // BadTag, never a misparse.
+        for reply in sample_replies() {
+            let frame = encode_reply(&reply);
+            assert!(matches!(decode_request(&frame).unwrap_err(), WireError::BadTag(_)));
+        }
+        for req in sample_requests() {
+            let frame = encode_request(&req);
+            assert!(matches!(decode_reply(&frame).unwrap_err(), WireError::BadTag(_)));
+        }
+    }
+}

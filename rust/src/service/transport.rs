@@ -1,0 +1,270 @@
+//! The transport seam: how a participant's request bytes reach the
+//! coordinator and the reply bytes come back.
+//!
+//! The coordinator state machine never sees a socket — it sees decoded
+//! [`Request`]s. Everything transport-specific lives behind [`Transport`]:
+//!
+//! * [`LoopbackTransport`] — in-process: the request is *encoded, decoded,
+//!   handled, encoded, decoded* so the full protocol codec is exercised on
+//!   every exchange, then handed to the shared [`Coordinator`] directly.
+//!   This is the substrate the byte-identical determinism tests run on.
+//! * [`TcpTransport`] / [`TcpServer`] — length-prefixed frames
+//!   (`[len u32 LE][envelope]`, capped at [`MAX_FRAME_BYTES`]) over
+//!   `std::net` blocking sockets; the server runs one accept loop plus one
+//!   thread per connection, all funneling into the same [`Coordinator`].
+
+use super::coordinator::Coordinator;
+use super::protocol::{decode_reply, decode_request, encode_reply, encode_request, Reply, Request};
+use crate::error::{anyhow, Context, Result};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Hard cap on a single framed message (envelope included). A hostile or
+/// corrupt length prefix can make us allocate at most this much.
+pub const MAX_FRAME_BYTES: u32 = 256 * 1024 * 1024;
+
+/// One request/reply exchange with the coordinator, plus how to wait when
+/// there is nothing to do.
+pub trait Transport: Send {
+    /// Send a request, block for the reply.
+    fn request(&mut self, req: &Request) -> Result<Reply>;
+
+    /// Block briefly when the coordinator had no work (NoWork/Standby) —
+    /// loopback waits on the coordinator's condvar, TCP just sleeps.
+    fn idle_wait(&mut self) {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// In-process transport: full codec round-trip, zero I/O.
+pub struct LoopbackTransport {
+    coord: Coordinator,
+}
+
+impl LoopbackTransport {
+    pub fn new(coord: Coordinator) -> LoopbackTransport {
+        LoopbackTransport { coord }
+    }
+}
+
+impl Transport for LoopbackTransport {
+    fn request(&mut self, req: &Request) -> Result<Reply> {
+        // Encode/decode both directions so loopback runs the exact same
+        // byte path as TCP — a codec bug cannot hide behind the shortcut.
+        let req = decode_request(&encode_request(req)).context("loopback request codec")?;
+        // now_ms = 0: liveness tracking is disabled on loopback (the
+        // coordinator is constructed with heartbeat_ms = 0).
+        let reply = self.coord.handle(&req, 0);
+        decode_reply(&encode_reply(&reply)).context("loopback reply codec")
+    }
+
+    fn idle_wait(&mut self) {
+        self.coord.wait_for_change(Duration::from_millis(20));
+    }
+}
+
+/// Write one `[len u32 LE][frame]` message.
+fn write_frame(w: &mut impl Write, frame: &[u8]) -> std::io::Result<()> {
+    let len = frame.len() as u64;
+    if len > MAX_FRAME_BYTES as u64 {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame of {len} bytes exceeds the {MAX_FRAME_BYTES}-byte cap"),
+        ));
+    }
+    w.write_all(&(len as u32).to_le_bytes())?;
+    w.write_all(frame)?;
+    w.flush()
+}
+
+/// Read one `[len u32 LE][frame]` message, validating the length prefix
+/// against the cap *before* allocating.
+fn read_frame(r: &mut impl Read) -> std::io::Result<Vec<u8>> {
+    let mut len_bytes = [0u8; 4];
+    r.read_exact(&mut len_bytes)?;
+    let len = u32::from_le_bytes(len_bytes);
+    if len > MAX_FRAME_BYTES {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("claimed frame length {len} exceeds the {MAX_FRAME_BYTES}-byte cap"),
+        ));
+    }
+    let mut buf = vec![0u8; len as usize];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+/// Client side of the TCP transport: one persistent connection.
+pub struct TcpTransport {
+    stream: TcpStream,
+    addr: String,
+}
+
+impl TcpTransport {
+    /// Connect, retrying for up to `patience` (covers `zsfa join` racing
+    /// `zsfa serve` to the port).
+    pub fn connect(addr: &str, patience: Duration) -> Result<TcpTransport> {
+        let start = Instant::now();
+        loop {
+            match TcpStream::connect(addr) {
+                Ok(stream) => {
+                    stream.set_nodelay(true).ok();
+                    return Ok(TcpTransport { stream, addr: addr.to_string() });
+                }
+                Err(e) => {
+                    if start.elapsed() >= patience {
+                        return Err(anyhow!("connect to {addr}: {e}"));
+                    }
+                    std::thread::sleep(Duration::from_millis(100));
+                }
+            }
+        }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn request(&mut self, req: &Request) -> Result<Reply> {
+        write_frame(&mut self.stream, &encode_request(req))
+            .with_context(|| format!("send to coordinator at {}", self.addr))?;
+        let frame = read_frame(&mut self.stream)
+            .with_context(|| format!("read reply from coordinator at {}", self.addr))?;
+        decode_reply(&frame).context("decode coordinator reply")
+    }
+}
+
+/// Server side: accept loop + one thread per connection, every decoded
+/// request funneled into the shared [`Coordinator`] with a timestamp from
+/// the server's monotonic clock (which drives heartbeat expiry).
+pub struct TcpServer {
+    accept_thread: Option<JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
+    local_addr: SocketAddr,
+}
+
+impl TcpServer {
+    pub fn bind(addr: &str, coord: Coordinator) -> Result<TcpServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        let local_addr = listener.local_addr().context("local_addr")?;
+        // Poll accept so the stop flag is honored without a self-connect.
+        listener.set_nonblocking(true).context("set_nonblocking")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let epoch = Instant::now();
+        let accept_thread = std::thread::spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        stream.set_nodelay(true).ok();
+                        stream.set_nonblocking(false).ok();
+                        let coord = coord.clone();
+                        // Connection threads exit on EOF when the client
+                        // disconnects; they are not joined.
+                        std::thread::spawn(move || serve_connection(stream, coord, epoch));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(TcpServer { accept_thread: Some(accept_thread), stop, local_addr })
+    }
+
+    /// The actually-bound address (resolves `:0` port requests).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Stop accepting connections and join the accept loop.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for TcpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// One connection's request loop. A malformed frame gets no reply and
+/// drops the connection (the client's decoder would reject garbage
+/// anyway); EOF means the participant left.
+fn serve_connection(mut stream: TcpStream, coord: Coordinator, epoch: Instant) {
+    loop {
+        let frame = match read_frame(&mut stream) {
+            Ok(f) => f,
+            Err(_) => return,
+        };
+        let req = match decode_request(&frame) {
+            Ok(r) => r,
+            Err(_) => return,
+        };
+        let now_ms = epoch.elapsed().as_millis() as u64;
+        let reply = coord.handle(&req, now_ms);
+        if write_frame(&mut stream, &encode_reply(&reply)).is_err() {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::protocol::{PhaseReply, RendezvousReply};
+
+    #[test]
+    fn loopback_round_trips_through_the_codec() {
+        let coord = Coordinator::new(0);
+        let mut t = LoopbackTransport::new(coord);
+        let Reply::Rendezvous(RendezvousReply::Accept { pid }) =
+            t.request(&Request::Rendezvous).unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!(
+            t.request(&Request::Heartbeat { pid }).unwrap(),
+            Reply::Heartbeat(PhaseReply::Standby)
+        );
+    }
+
+    #[test]
+    fn tcp_exchange_end_to_end() {
+        let coord = Coordinator::new(1000);
+        let mut server = TcpServer::bind("127.0.0.1:0", coord).unwrap();
+        let addr = server.local_addr().to_string();
+        let mut t = TcpTransport::connect(&addr, Duration::from_secs(2)).unwrap();
+        let Reply::Rendezvous(RendezvousReply::Accept { pid }) =
+            t.request(&Request::Rendezvous).unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!(
+            t.request(&Request::Heartbeat { pid }).unwrap(),
+            Reply::Heartbeat(PhaseReply::Standby)
+        );
+        // A second participant over its own connection.
+        let mut t2 = TcpTransport::connect(&addr, Duration::from_secs(2)).unwrap();
+        let Reply::Rendezvous(RendezvousReply::Accept { pid: pid2 }) =
+            t2.request(&Request::Rendezvous).unwrap()
+        else {
+            panic!()
+        };
+        assert_ne!(pid, pid2);
+        server.shutdown();
+    }
+
+    #[test]
+    fn oversized_length_prefix_rejected_before_allocation() {
+        let mut buf: &[u8] = &u32::MAX.to_le_bytes();
+        assert!(read_frame(&mut buf).is_err());
+    }
+}
