@@ -13,6 +13,12 @@
 #                    byte-diff at parallelism 1 and 8 (what CI runs)
 #   make service-smoke networked-service equivalence: engine vs loopback vs
 #                    a real TCP serve/join round trip, CSV byte-diff (CI)
+#   make metrics-smoke telemetry end-to-end: scrape GET /metrics during a
+#                    TCP session, check families + monotone counters, render
+#                    one `zsfa watch` frame, byte-diff vs telemetry-off (CI)
+#
+# The smoke targets export ZSFA_FIXED_CLOCK=0 (telemetry::Clock) so wall_ms
+# is pinned and whole result trees — raw CSVs included — byte-diff cleanly.
 #   make fmt       rustfmt check (what CI enforces)
 #   make lint      clippy with warnings denied (what CI enforces)
 #   make python    editable-install the compile package + kernel tests
@@ -22,7 +28,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test bench bench-build bench-smoke bench-json determinism spec-smoke service-smoke fmt lint python artifacts ci clean
+.PHONY: build test bench bench-build bench-smoke bench-json determinism spec-smoke service-smoke metrics-smoke fmt lint python artifacts ci clean
 
 build:
 	$(CARGO) build --release
@@ -52,81 +58,104 @@ bench-json:
 	$(CARGO) bench --bench bench_dense_reduce -- --json $(CURDIR)/BENCH_dense_reduce.json
 
 # Reduce-order regression smoke: one scenario config at parallelism 1 and 8
-# must produce byte-identical CSVs (raw CSVs carry wall-clock, so excluded).
-# --reduce-lanes 3 < cohort forces multi-slot lanes, so the streamed in-lane
-# fold (not its m <= L degenerate form) is what gets diffed. Runs in scratch
-# dirs so ./results is never touched.
+# must produce byte-identical CSVs — raw CSVs included, because the fixed
+# clock pins the wall_ms column. --reduce-lanes 3 < cohort forces
+# multi-slot lanes, so the streamed in-lane fold (not its m <= L degenerate
+# form) is what gets diffed. Runs in scratch dirs so ./results is never
+# touched.
 determinism: build
 	rm -rf results_det_p1 results_det_p8
 	mkdir -p results_det_p1 results_det_p8
-	cd results_det_p1 && ../target/release/zsfa scenarios --rounds 30 \
+	cd results_det_p1 && ZSFA_FIXED_CLOCK=0 ../target/release/zsfa scenarios --rounds 30 \
 	  --byz-rounds 30 --clients 24 --dim 1000 --repeats 1 \
 	  --sim_target_cohort 8 --reduce-lanes 3 --parallelism 1
-	cd results_det_p8 && ../target/release/zsfa scenarios --rounds 30 \
+	cd results_det_p8 && ZSFA_FIXED_CLOCK=0 ../target/release/zsfa scenarios --rounds 30 \
 	  --byz-rounds 30 --clients 24 --dim 1000 --repeats 1 \
 	  --sim_target_cohort 8 --reduce-lanes 3 --parallelism 8
-	diff -r -x '*_raw.csv' results_det_p1 results_det_p8
-	@echo "determinism: parallelism 1 vs 8 CSVs are byte-identical"
+	diff -r results_det_p1 results_det_p8
+	@echo "determinism: parallelism 1 vs 8 CSVs are byte-identical (raw CSVs included)"
 
 # Spec-vs-driver equivalence smoke: `zsfa run examples/quickstart.json`
-# must reproduce the fig1 driver's CSVs byte-for-byte (aggregated files
-# exactly; raw files modulo the measured wall_ms column, which is
-# wall-clock — same rationale as the determinism target), at parallelism
-# 1 AND 8. Extends the determinism-job pattern to the new run surface.
+# must reproduce the fig1 driver's CSVs byte-for-byte — raw files included,
+# since ZSFA_FIXED_CLOCK pins the wall_ms column — at parallelism 1 AND 8.
+# Extends the determinism-job pattern to the new run surface.
 spec-smoke: build
 	rm -rf results_spec_driver results_spec_run_p1 results_spec_run_p8
 	mkdir -p results_spec_driver results_spec_run_p1 results_spec_run_p8
-	cd results_spec_driver && ../target/release/zsfa fig1 \
+	cd results_spec_driver && ZSFA_FIXED_CLOCK=0 ../target/release/zsfa fig1 \
 	  --dims 50 --clients 8 --rounds 40 --repeats 2 --parallelism 1
-	cd results_spec_run_p1 && ../target/release/zsfa run \
+	cd results_spec_run_p1 && ZSFA_FIXED_CLOCK=0 ../target/release/zsfa run \
 	  ../rust/examples/quickstart.json --parallelism 1
-	cd results_spec_run_p8 && ../target/release/zsfa run \
+	cd results_spec_run_p8 && ZSFA_FIXED_CLOCK=0 ../target/release/zsfa run \
 	  ../rust/examples/quickstart.json --parallelism 8
-	diff -r -x '*_raw.csv' results_spec_driver results_spec_run_p1
-	diff -r -x '*_raw.csv' results_spec_driver results_spec_run_p8
-	@set -e; for f in results_spec_driver/results/fig1_d50/*_raw.csv; do \
-	  b=$$(basename $$f); \
-	  awk -F, -v OFS=, '{$$9="-"; print}' $$f > results_spec_driver/$$b.norm; \
-	  for alt in results_spec_run_p1 results_spec_run_p8; do \
-	    awk -F, -v OFS=, '{$$9="-"; print}' $$alt/results/fig1_d50/$$b > $$alt/$$b.norm; \
-	    cmp results_spec_driver/$$b.norm $$alt/$$b.norm; \
-	  done; \
-	done
+	diff -r results_spec_driver results_spec_run_p1
+	diff -r results_spec_driver results_spec_run_p8
 	@echo "spec-smoke: zsfa run CSVs byte-identical to the fig1 driver at parallelism 1 and 8"
 
 # Networked-service equivalence smoke (DESIGN.md §5): the example spec run
 # three ways — in-process engine, the loopback service stack (full protocol
 # encode/decode, 4 workers), and a real TCP coordinator with two joined
-# participants on localhost — must produce byte-identical CSV trees
-# (aggregated files exactly; raw files modulo the measured wall_ms column,
-# same rationale as spec-smoke). `timeout` bounds the TCP leg so a
-# deadlocked round fails the job instead of hanging it.
+# participants on localhost — must produce byte-identical CSV trees, raw
+# files included (ZSFA_FIXED_CLOCK pins wall_ms in every process).
+# `timeout` bounds the TCP leg so a deadlocked round fails the job instead
+# of hanging it.
 service-smoke: build
 	rm -rf results_svc_engine results_svc_loop results_svc_tcp
 	mkdir -p results_svc_engine results_svc_loop results_svc_tcp
-	cd results_svc_engine && ../target/release/zsfa run \
+	cd results_svc_engine && ZSFA_FIXED_CLOCK=0 ../target/release/zsfa run \
 	  ../rust/examples/quickstart.json --parallelism 1
-	cd results_svc_loop && ../target/release/zsfa run \
+	cd results_svc_loop && ZSFA_FIXED_CLOCK=0 ../target/release/zsfa run \
 	  ../rust/examples/quickstart.json --transport loopback --parallelism 4
-	diff -r -x '*_raw.csv' results_svc_engine results_svc_loop
+	diff -r results_svc_engine results_svc_loop
 	@set -e; cd results_svc_tcp; \
-	  timeout 180 ../target/release/zsfa serve ../rust/examples/quickstart.json \
+	  ZSFA_FIXED_CLOCK=0 timeout 180 ../target/release/zsfa serve ../rust/examples/quickstart.json \
 	    --addr 127.0.0.1:7443 --min-participants 2 & srv=$$!; \
 	  timeout 180 ../target/release/zsfa join ../rust/examples/quickstart.json \
 	    --addr 127.0.0.1:7443 --patience-s 60 & j1=$$!; \
 	  timeout 180 ../target/release/zsfa join ../rust/examples/quickstart.json \
 	    --addr 127.0.0.1:7443 --patience-s 60 & j2=$$!; \
 	  wait $$srv && wait $$j1 && wait $$j2
-	diff -r -x '*_raw.csv' results_svc_engine results_svc_tcp
-	@set -e; for f in results_svc_engine/results/fig1_d50/*_raw.csv; do \
-	  b=$$(basename $$f); \
-	  awk -F, -v OFS=, '{$$9="-"; print}' $$f > results_svc_engine/$$b.norm; \
-	  for alt in results_svc_loop results_svc_tcp; do \
-	    awk -F, -v OFS=, '{$$9="-"; print}' $$alt/results/fig1_d50/$$b > $$alt/$$b.norm; \
-	    cmp results_svc_engine/$$b.norm $$alt/$$b.norm; \
-	  done; \
-	done
+	diff -r results_svc_engine results_svc_tcp
 	@echo "service-smoke: engine, loopback and TCP serve/join CSVs are byte-identical"
+
+# Telemetry end-to-end smoke (DESIGN.md §6): one TCP serve/join session
+# with --telemetry must (1) answer GET /metrics on the coordinator port
+# with every required metric family while the session is live, (2) write a
+# final --dump-metrics snapshot whose rounds_total is positive and >= the
+# live scrape (counters are monotone), (3) render one `zsfa watch` frame
+# from the endpoint, and (4) leave result CSVs byte-identical to a
+# telemetry-off run — observability is strictly read-only.
+metrics-smoke: build
+	rm -rf results_metrics_off results_metrics_on metrics_scrape.txt metrics_dump.txt
+	mkdir -p results_metrics_off results_metrics_on
+	cd results_metrics_off && ZSFA_FIXED_CLOCK=0 ../target/release/zsfa run \
+	  ../rust/examples/quickstart.json --parallelism 1
+	@set -e; cd results_metrics_on; \
+	  ZSFA_FIXED_CLOCK=0 timeout 180 ../target/release/zsfa serve ../rust/examples/quickstart.json \
+	    --addr 127.0.0.1:7444 --min-participants 2 --telemetry \
+	    --dump-metrics ../metrics_dump.txt & srv=$$!; \
+	  for i in $$(seq 1 50); do \
+	    ../target/release/zsfa metrics --addr 127.0.0.1:7444 \
+	      > ../metrics_scrape.txt 2>/dev/null && break || sleep 0.2; \
+	  done; \
+	  ../target/release/zsfa watch --addr 127.0.0.1:7444 --once; \
+	  timeout 180 ../target/release/zsfa join ../rust/examples/quickstart.json \
+	    --addr 127.0.0.1:7444 --patience-s 60 & j1=$$!; \
+	  timeout 180 ../target/release/zsfa join ../rust/examples/quickstart.json \
+	    --addr 127.0.0.1:7444 --patience-s 60 & j2=$$!; \
+	  wait $$srv && wait $$j1 && wait $$j2
+	@set -e; for fam in zsfa_rounds_total zsfa_round_current zsfa_objective zsfa_sigma \
+	  zsfa_bits_up_total zsfa_bits_down_total zsfa_clients_arrived_total \
+	  zsfa_clients_selected_total zsfa_coord_replies_total zsfa_phase_ms zsfa_round_ms; do \
+	  grep -q "^# TYPE $$fam " metrics_scrape.txt || { echo "scrape missing $$fam"; exit 1; }; \
+	  grep -q "^# TYPE $$fam " metrics_dump.txt || { echo "dump missing $$fam"; exit 1; }; \
+	done
+	@set -e; s=$$(awk '$$1=="zsfa_rounds_total"{print $$2}' metrics_scrape.txt); \
+	  d=$$(awk '$$1=="zsfa_rounds_total"{print $$2}' metrics_dump.txt); \
+	  echo "metrics-smoke: rounds_total scrape=$$s dump=$$d"; \
+	  test -n "$$s" && test -n "$$d" && test "$$d" -ge "$$s" && test "$$d" -gt 0
+	diff -r results_metrics_off/results results_metrics_on/results
+	@echo "metrics-smoke: families served, counters monotone, watch rendered, results byte-identical"
 
 fmt:
 	$(CARGO) fmt --all -- --check

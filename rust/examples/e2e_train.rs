@@ -1,4 +1,4 @@
-//! END-TO-END VALIDATION DRIVER (DESIGN.md §6): the full three-layer stack
+//! END-TO-END VALIDATION DRIVER (DESIGN.md §7): the full three-layer stack
 //! on a real small workload.
 //!
 //! Trains the paper's 2-conv CNN on synthMNIST federated across 10
@@ -25,7 +25,7 @@ use zsignfedavg::fl::server::{run_experiment, ServerConfig};
 use zsignfedavg::fl::AlgorithmConfig;
 use zsignfedavg::rng::ZParam;
 use zsignfedavg::runtime::{ModelRuntime, XlaBackend};
-use zsignfedavg::util::Timer;
+use zsignfedavg::telemetry::Clock;
 
 fn build_backend() -> XlaBackend {
     let dir = Path::new("artifacts");
@@ -54,7 +54,7 @@ fn main() {
         let d = backend.dim();
         println!("-- {} (d = {d}) --", algo.name);
         let cfg = ServerConfig { rounds, eval_every: (rounds / 20).max(1), ..Default::default() };
-        let t = Timer::start();
+        let t = Clock::Monotonic.start();
         let run = run_experiment(&mut backend, &algo, &cfg);
         let secs = t.elapsed_secs();
         println!("round   loss     acc      cumulative uplink");

@@ -26,5 +26,5 @@ pub use observer::{
 pub use session::{SeriesResult, Session, SessionResult};
 pub use spec::{
     seed_for_repeat, Dataset, ExperimentSpec, NeuralSpec, OutputSpec, SeriesSpec, SpecError,
-    SweepSpec, TransportSpec, WorkloadSpec,
+    SweepSpec, TelemetrySpec, TransportSpec, WorkloadSpec,
 };

@@ -21,6 +21,7 @@
 use crate::fl::metrics::{
     safe_series_name, write_csv, write_runs_csv, Aggregated, RoundRecord, RunResult,
 };
+use crate::telemetry::{Phase, Telemetry};
 use crate::util::json::Json;
 use std::cell::RefCell;
 use std::collections::BTreeMap;
@@ -125,8 +126,15 @@ impl RoundObserver for ProgressSink {
 /// Appends one compact JSON event per line: `round`, `run_end`,
 /// `series_end`. Non-finite numbers are written as `null` so every line is
 /// valid JSON.
+///
+/// With an attached telemetry handle ([`JsonlSink::with_telemetry`]),
+/// `round` events carry four extra keys — `bits_down`, `phase_ms` (an
+/// object with one entry per round phase), `selected` and `wall_ms` — the
+/// structured-log counterpart of the Prometheus endpoint. The base schema
+/// is unchanged, and pinned by `tests/jsonl_schema.rs` either way.
 pub struct JsonlSink {
     out: std::io::BufWriter<std::fs::File>,
+    tele: Telemetry,
 }
 
 impl JsonlSink {
@@ -136,7 +144,13 @@ impl JsonlSink {
             std::fs::create_dir_all(dir)?;
         }
         let f = std::fs::File::create(path)?;
-        Ok(JsonlSink { out: std::io::BufWriter::new(f) })
+        Ok(JsonlSink { out: std::io::BufWriter::new(f), tele: Telemetry::disabled() })
+    }
+
+    /// Extend `round` events with the telemetry keys (builder-style).
+    pub fn with_telemetry(mut self, tele: Telemetry) -> JsonlSink {
+        self.tele = tele;
+        self
     }
 
     fn emit(&mut self, entries: Vec<(&str, Json)>) {
@@ -158,7 +172,7 @@ fn jnum(x: f64) -> Json {
 
 impl RoundObserver for JsonlSink {
     fn on_round(&mut self, ctx: &SeriesCtx, repeat: usize, rec: &RoundRecord) {
-        self.emit(vec![
+        let mut entries = vec![
             ("event", Json::Str("round".into())),
             ("experiment", Json::Str(ctx.experiment.clone())),
             ("series", Json::Str(ctx.label.clone())),
@@ -170,7 +184,18 @@ impl RoundObserver for JsonlSink {
             ("sigma", jnum(rec.sigma as f64)),
             ("sim_time_s", jnum(rec.sim_time_s)),
             ("arrived", Json::Num(rec.arrived as f64)),
-        ]);
+        ];
+        if self.tele.is_enabled() {
+            let phases: BTreeMap<String, Json> = Phase::ALL
+                .iter()
+                .map(|&p| (p.label().to_string(), jnum(self.tele.phase_ms_last(p))))
+                .collect();
+            entries.push(("bits_down", Json::Num(rec.bits_down as f64)));
+            entries.push(("phase_ms", Json::Obj(phases)));
+            entries.push(("selected", Json::Num(rec.selected as f64)));
+            entries.push(("wall_ms", jnum(rec.wall_ms)));
+        }
+        self.emit(entries);
     }
 
     fn on_run_end(&mut self, ctx: &SeriesCtx, repeat: usize, run: &RunResult) {

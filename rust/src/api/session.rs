@@ -15,11 +15,12 @@ use crate::data::{partition, synth};
 use crate::error::{bail, Result};
 use crate::fl::backend::{AnalyticBackend, TrainBackend};
 use crate::fl::metrics::{aggregate, Aggregated, RunResult};
-use crate::fl::server::run_experiment_observed;
+use crate::fl::server::run_experiment_instrumented;
 use crate::problems::consensus::Consensus;
 use crate::problems::least_squares::LeastSquares;
 use crate::runtime::{ModelRuntime, XlaBackend};
 use crate::service::ServiceHost;
+use crate::telemetry::Telemetry;
 
 impl WorkloadSpec {
     /// Materialize a fresh backend for one repeat. Analytic workloads are
@@ -106,6 +107,7 @@ pub struct SessionResult {
 #[derive(Default)]
 pub struct Session {
     observers: Vec<Box<dyn RoundObserver>>,
+    telemetry: Option<Telemetry>,
 }
 
 impl Session {
@@ -125,6 +127,14 @@ impl Session {
         self
     }
 
+    /// Use an externally owned telemetry handle instead of building one
+    /// from the spec's `telemetry` block (the CLI does this so the TCP
+    /// metrics endpoint and the final dump share one registry).
+    pub fn with_telemetry(mut self, tele: Telemetry) -> Session {
+        self.telemetry = Some(tele);
+        self
+    }
+
     /// Validate and execute `spec`: every expanded series, `spec.repeats`
     /// repeats each (repeat `r` seeded by `spec.seed_for_repeat(r)`),
     /// streaming progress to the observers.
@@ -140,16 +150,31 @@ impl Session {
             None
         };
 
+        // One telemetry handle for the whole session: every series and
+        // repeat records into the same registry. The session owner can
+        // inject one; otherwise the spec's telemetry block decides.
+        let tele = match &self.telemetry {
+            Some(t) => t.clone(),
+            None => spec.telemetry.handle(),
+        };
+
         // Service transports share one host (and one participant cohort)
         // across every series and repeat; the engine path needs none.
         let mut host = match &spec.transport {
             TransportSpec::Engine => None,
             TransportSpec::Loopback => {
-                Some(ServiceHost::loopback(spec, spec.parallelism.max(1)))
+                let mut h = ServiceHost::loopback(spec, spec.parallelism.max(1));
+                h.set_telemetry(tele.clone());
+                Some(h)
             }
             TransportSpec::Tcp { addr, heartbeat_ms, round_deadline_ms, min_participants } => {
-                let h =
-                    ServiceHost::tcp(addr, *heartbeat_ms, *round_deadline_ms, *min_participants)?;
+                let h = ServiceHost::tcp(
+                    addr,
+                    *heartbeat_ms,
+                    *round_deadline_ms,
+                    *min_participants,
+                    &tele,
+                )?;
                 if let Some(bound) = h.local_addr() {
                     println!("serving rounds on {bound}");
                 }
@@ -181,10 +206,11 @@ impl Session {
                     }
                 };
                 let run = match host.as_mut() {
-                    None => run_experiment_observed(
+                    None => run_experiment_instrumented(
                         backend.as_mut(),
                         &s.algorithm,
                         &cfg,
+                        &tele,
                         &mut on_round,
                     ),
                     Some(h) => h.run_one(
@@ -223,6 +249,17 @@ impl Session {
         }
         if let Some(mut h) = host {
             h.shutdown()?;
+        }
+        if let Some(path) = &spec.telemetry.dump_path {
+            if tele.is_enabled() {
+                if let Some(dir) = std::path::Path::new(path).parent() {
+                    if !dir.as_os_str().is_empty() {
+                        std::fs::create_dir_all(dir).ok();
+                    }
+                }
+                std::fs::write(path, tele.export_prometheus())
+                    .map_err(|e| crate::error::Error::msg(format!("dump metrics {path}: {e}")))?;
+            }
         }
         Ok(SessionResult { series: out })
     }
@@ -307,6 +344,45 @@ mod tests {
                 assert_eq!(ba, bb, "{}", a.label);
             }
         }
+    }
+
+    #[test]
+    fn telemetry_enabled_session_is_bit_identical_and_dumps_metrics() {
+        use crate::api::spec::TelemetrySpec;
+        let want = Session::new().run(&spec()).unwrap();
+        let dump = std::env::temp_dir().join("zsfa_session_tele_test").join("metrics.prom");
+        let dump_str = dump.to_string_lossy().to_string();
+        let tele_spec = TelemetrySpec {
+            enabled: true,
+            event_capacity: 512,
+            dump_path: Some(dump_str.clone()),
+        };
+        for transport in [TransportSpec::Engine, TransportSpec::Loopback] {
+            std::fs::remove_file(&dump).ok();
+            let s = spec().transport(transport.clone()).telemetry(tele_spec.clone());
+            let got = Session::new().run(&s).unwrap();
+            for (a, b) in want.series.iter().zip(&got.series) {
+                for (ra, rb) in a.runs.iter().zip(&b.runs) {
+                    let oa: Vec<u64> =
+                        ra.records.iter().map(|r| r.objective.to_bits()).collect();
+                    let ob: Vec<u64> =
+                        rb.records.iter().map(|r| r.objective.to_bits()).collect();
+                    assert_eq!(oa, ob, "{transport:?} {}", a.label);
+                }
+            }
+            let text = std::fs::read_to_string(&dump).unwrap();
+            // 1 series × 2 repeats × 20 rounds.
+            assert!(text.contains("zsfa_rounds_total 40"), "{transport:?}:\n{text}");
+            assert!(text.contains("zsfa_bits_up_total"), "{transport:?}");
+        }
+        std::fs::remove_dir_all(dump.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn injected_telemetry_handle_wins_over_the_spec() {
+        let tele = crate::telemetry::Telemetry::with_capacity(64);
+        Session::new().with_telemetry(tele.clone()).run(&spec()).unwrap();
+        assert_eq!(tele.metrics().unwrap().rounds_total.get(), 40);
     }
 
     #[test]

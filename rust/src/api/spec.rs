@@ -33,6 +33,7 @@ use crate::problems::least_squares::LeastSquares;
 use crate::problems::AnalyticProblem;
 use crate::rng::ZParam;
 use crate::sim::{ByzantineMode, FleetPreset, ScenarioConfig};
+use crate::telemetry::Telemetry;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::fmt;
@@ -345,6 +346,43 @@ impl TransportSpec {
     }
 }
 
+/// Observability configuration (see [`crate::telemetry`]). Off by
+/// default — and strictly read-only when on: enabling telemetry never
+/// changes a single result byte (pinned by the session tests and
+/// `make metrics-smoke`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TelemetrySpec {
+    /// Record phase spans, the metrics registry and coordinator events.
+    pub enabled: bool,
+    /// Events retained by the in-memory ring (oldest overwritten).
+    pub event_capacity: usize,
+    /// Write the final Prometheus exposition text here when the session
+    /// finishes (scrape-free capture for CI and one-shot runs).
+    pub dump_path: Option<String>,
+}
+
+impl Default for TelemetrySpec {
+    fn default() -> Self {
+        TelemetrySpec { enabled: false, event_capacity: 4096, dump_path: None }
+    }
+}
+
+impl TelemetrySpec {
+    /// An enabled spec with the default ring capacity.
+    pub fn on() -> TelemetrySpec {
+        TelemetrySpec { enabled: true, ..TelemetrySpec::default() }
+    }
+
+    /// Build the runtime handle this spec describes.
+    pub fn handle(&self) -> Telemetry {
+        if self.enabled {
+            Telemetry::with_capacity(self.event_capacity)
+        } else {
+            Telemetry::disabled()
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // The spec
 // ---------------------------------------------------------------------------
@@ -384,6 +422,8 @@ pub struct ExperimentSpec {
     pub participation: Participation,
     /// In-process engine, loopback service, or TCP service.
     pub transport: TransportSpec,
+    /// Observability (off by default; read-only when on).
+    pub telemetry: TelemetrySpec,
     pub output: OutputSpec,
 }
 
@@ -408,6 +448,7 @@ impl ExperimentSpec {
             downlink_sign: None,
             participation: Participation::Uniform,
             transport: TransportSpec::Engine,
+            telemetry: TelemetrySpec::default(),
             output: OutputSpec::default(),
         }
     }
@@ -466,6 +507,11 @@ impl ExperimentSpec {
 
     pub fn transport(mut self, t: TransportSpec) -> Self {
         self.transport = t;
+        self
+    }
+
+    pub fn telemetry(mut self, t: TelemetrySpec) -> Self {
+        self.telemetry = t;
         self
     }
 
@@ -658,6 +704,9 @@ impl ExperimentSpec {
                 errs.push(SpecError::new("transport.min_participants", "must be >= 1"));
             }
         }
+        if self.telemetry.enabled && self.telemetry.event_capacity == 0 {
+            errs.push(SpecError::new("telemetry.event_capacity", "must be >= 1 when enabled"));
+        }
         if self.output.subtract_optimal && self.workload.optimal_value().is_none() {
             errs.push(SpecError::new(
                 "output.subtract_optimal",
@@ -849,6 +898,11 @@ impl ExperimentSpec {
         if self.transport != TransportSpec::Engine {
             m.insert("transport".into(), transport_json(&self.transport));
         }
+        // Likewise telemetry: the default (off) adds no key, so every
+        // pre-telemetry spec file round-trips byte-identically.
+        if self.telemetry != TelemetrySpec::default() {
+            m.insert("telemetry".into(), telemetry_json(&self.telemetry));
+        }
         if !self.series.is_empty() {
             m.insert("series".into(), Json::Arr(self.series.iter().map(series_json).collect()));
         }
@@ -886,6 +940,9 @@ impl ExperimentSpec {
         }
         if let Some(j) = o.get("transport") {
             spec.transport = transport_from(j, "transport")?;
+        }
+        if let Some(j) = o.get("telemetry") {
+            spec.telemetry = telemetry_from(j, "telemetry")?;
         }
         if let Some(j) = o.get("series") {
             let arr =
@@ -1445,6 +1502,38 @@ fn transport_from(j: &Json, at: &str) -> Result<TransportSpec, SpecError> {
     Ok(t)
 }
 
+fn telemetry_json(t: &TelemetrySpec) -> Json {
+    let mut v = vec![
+        ("enabled", Json::Bool(t.enabled)),
+        ("event_capacity", jus(t.event_capacity)),
+    ];
+    if let Some(p) = &t.dump_path {
+        v.push(("dump_path", jstr(p)));
+    }
+    jobj(v)
+}
+
+fn telemetry_from(j: &Json, at: &str) -> Result<TelemetrySpec, SpecError> {
+    let o = Obj::new(j, at)?;
+    let d = TelemetrySpec::default();
+    let dump_path = match o.get("dump_path") {
+        None => None,
+        Some(v) => Some(
+            v.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| SpecError::new(o.path("dump_path"), "expected a string"))?,
+        ),
+    };
+    let t = TelemetrySpec {
+        // A present-but-sparse telemetry block means "turn it on".
+        enabled: o.bool_or("enabled", true)?,
+        event_capacity: o.usize_or("event_capacity", d.event_capacity)?,
+        dump_path,
+    };
+    o.finish()?;
+    Ok(t)
+}
+
 fn workload_json(w: &WorkloadSpec) -> Json {
     match w {
         WorkloadSpec::Consensus { clients, dim, problem_seed } => jobj(vec![
@@ -1833,6 +1922,62 @@ mod tests {
         let err = ExperimentSpec::from_json(&bad_key).unwrap_err();
         assert_eq!(err.at, "transport.adr");
         assert!(err.reason.contains("unknown field"), "{err}");
+    }
+
+    #[test]
+    fn telemetry_json_round_trips_and_default_is_absent() {
+        // Pre-telemetry spec files must stay byte-compatible.
+        let spec = tiny_spec();
+        assert!(!spec.to_json().contains("telemetry"));
+        assert_eq!(
+            ExperimentSpec::from_json(&spec.to_json()).unwrap().telemetry,
+            TelemetrySpec::default()
+        );
+        for t in [
+            TelemetrySpec::on(),
+            TelemetrySpec { enabled: true, event_capacity: 64, dump_path: None },
+            TelemetrySpec {
+                enabled: true,
+                event_capacity: 4096,
+                dump_path: Some("metrics.prom".into()),
+            },
+            TelemetrySpec { enabled: false, event_capacity: 128, dump_path: None },
+        ] {
+            let spec = tiny_spec().telemetry(t.clone());
+            let back = ExperimentSpec::from_json(&spec.to_json()).unwrap();
+            assert_eq!(back, spec, "{t:?}");
+        }
+        // A bare block means "on with defaults".
+        let sparse = tiny_spec().to_json().replace(
+            "\"output\":",
+            "\"telemetry\":{},\"output\":",
+        );
+        let back = ExperimentSpec::from_json(&sparse).unwrap();
+        assert_eq!(back.telemetry, TelemetrySpec::on());
+    }
+
+    #[test]
+    fn validate_rejects_zero_capacity_enabled_telemetry() {
+        let spec = tiny_spec().telemetry(TelemetrySpec {
+            enabled: true,
+            event_capacity: 0,
+            dump_path: None,
+        });
+        let errs = spec.validate().unwrap_err();
+        assert!(errs.iter().any(|e| e.at == "telemetry.event_capacity"), "{errs:?}");
+        // Disabled telemetry does not care about the capacity.
+        let off = tiny_spec().telemetry(TelemetrySpec {
+            enabled: false,
+            event_capacity: 0,
+            dump_path: None,
+        });
+        assert!(off.validate().is_ok());
+    }
+
+    #[test]
+    fn telemetry_spec_builds_the_matching_handle() {
+        assert!(!TelemetrySpec::default().handle().is_enabled());
+        assert!(TelemetrySpec::on().handle().is_enabled());
     }
 
     #[test]

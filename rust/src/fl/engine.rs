@@ -49,8 +49,8 @@ use crate::compress::pack::PackedSigns;
 use crate::compress::sign::SigmaRule;
 use crate::rng::{Pcg64, ZParam};
 use crate::sim::{ByzantineMode, ScenarioPolicy};
+use crate::telemetry::{Clock, Phase, Stopwatch, Telemetry};
 use crate::tensor;
-use crate::util::Timer;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
@@ -227,6 +227,14 @@ pub struct RoundEngine<'a> {
     downlink_packed: PackedSigns,
     bits_up: u64,
     bits_down: u64,
+    /// Round-timing source (`wall_ms`). [`Clock::from_env`] by default so
+    /// CI smokes can pin it process-wide; override with
+    /// [`RoundEngine::set_clock`].
+    clock: Clock,
+    /// Observability recorder; disabled (free) unless injected via
+    /// [`RoundEngine::set_telemetry`]. Read-only with respect to the run:
+    /// results are byte-identical either way.
+    tele: Telemetry,
 }
 
 impl<'a> RoundEngine<'a> {
@@ -249,7 +257,22 @@ impl<'a> RoundEngine<'a> {
             downlink_packed: PackedSigns::zeroed(d),
             bits_up: 0,
             bits_down: 0,
+            clock: Clock::from_env(),
+            tele: Telemetry::disabled(),
         }
+    }
+
+    /// Override the round-timing clock (tests and CI pin
+    /// [`Clock::Fixed`]; the env default covers the CLI processes).
+    pub fn set_clock(&mut self, clock: Clock) {
+        self.clock = clock;
+    }
+
+    /// Attach a telemetry recorder. The engine only ever *writes* to it —
+    /// phase spans, round/bit counters, eval gauges — so an enabled handle
+    /// cannot perturb the seeded run.
+    pub fn set_telemetry(&mut self, tele: Telemetry) {
+        self.tele = tele;
     }
 
     /// Total f32s currently allocated across dense lane accumulators. The
@@ -282,7 +305,7 @@ impl<'a> RoundEngine<'a> {
         let mut sim_time_s = 0.0f64;
 
         for t in 0..self.cfg.rounds {
-            let timer = Timer::start();
+            let sw = self.clock.start();
             // 1. Participation: the policy decides who reports this round
             //    (and what happened to everyone else it selected).
             let plan = policy.plan_round(t, &root);
@@ -293,6 +316,7 @@ impl<'a> RoundEngine<'a> {
 
             // Effective sigma this round (plateau overrides the fixed value).
             let round_sigma = self.round_sigma();
+            self.tele.round_begin(t as u64, round_sigma);
 
             // 2–5. Local updates + streamed compression + lane reduce +
             //    server step. When nobody reported (every selected client
@@ -306,14 +330,15 @@ impl<'a> RoundEngine<'a> {
                 self.apply_server_step(t, &root, &mut params, &stats);
             }
 
-            // 7. Evaluation.
+            // 7. Evaluation (inside the round span: `wall_ms` covers the
+            //    full round, evaluation included — see `RoundRecord`).
             if self.should_eval(t) {
                 let rec = self.eval_record(
                     backend,
                     t,
                     &params,
                     round_sigma,
-                    timer.elapsed_ms(),
+                    &sw,
                     sim_time_s,
                     arrived as u32,
                     selected as u32,
@@ -321,6 +346,7 @@ impl<'a> RoundEngine<'a> {
                 on_record(&rec);
                 records.push(rec);
             }
+            self.tele.round_end(t as u64, arrived as u64, selected as u64, sw.elapsed_ms());
         }
 
         RunResult { algorithm: self.algo.name.clone(), records }
@@ -420,7 +446,9 @@ impl<'a> RoundEngine<'a> {
         } else {
             32 * self.d
         };
-        self.bits_down += (downloads * down_per_client) as u64;
+        let added = (downloads * down_per_client) as u64;
+        self.bits_down += added;
+        self.tele.add_bits_down(added);
     }
 
     /// Effective σ this round (plateau overrides the fixed value).
@@ -459,7 +487,11 @@ impl<'a> RoundEngine<'a> {
         inv_m: f32,
     ) -> Result<(), RemoteError> {
         let lane = self.lanes[topo.lane_of(slot)].get_mut().unwrap();
-        self.agg.fold_remote(upd, loss, inv_m, lane, &mut self.scratches[0].agg)
+        let out = self.agg.fold_remote(upd, loss, inv_m, lane, &mut self.scratches[0].agg);
+        if out.is_ok() {
+            self.tele.count_fold();
+        }
+        out
     }
 
     /// Close a remote round: fold the lanes (lane-index order) into the
@@ -478,9 +510,11 @@ impl<'a> RoundEngine<'a> {
         params: &mut [f32],
         stats: &ReduceStats,
     ) {
+        let span = self.tele.span_start();
         // Uplink billing comes from the aggregator's tally: exact
         // wire bits of the messages actually absorbed.
         self.bits_up += stats.bits;
+        self.tele.add_bits_up(stats.bits);
 
         let step_scale = match &self.algo.compression {
             // Alg. 2 applies η to the mean sign of *model diffs* (no γ).
@@ -541,6 +575,7 @@ impl<'a> RoundEngine<'a> {
         if let Some(p) = self.plateau.as_mut() {
             p.observe(mean_local_loss);
         }
+        self.tele.span_end(Phase::ServerStep, span, t as u64);
     }
 
     /// Whether round `t` is an evaluation round.
@@ -549,6 +584,12 @@ impl<'a> RoundEngine<'a> {
     }
 
     /// Evaluate the model and assemble the round's record.
+    ///
+    /// `sw` is the round stopwatch started before participation planning:
+    /// `wall_ms` is read *after* the evaluation returns, so the record
+    /// covers the full round — plan, client work, fold, server step and
+    /// evaluation — identically in the in-process engine and the
+    /// networked `ServiceHost` (see `RoundRecord::wall_ms`).
     #[allow(clippy::too_many_arguments)]
     pub fn eval_record(
         &self,
@@ -556,12 +597,15 @@ impl<'a> RoundEngine<'a> {
         t: usize,
         params: &[f32],
         round_sigma: f32,
-        wall_ms: f64,
+        sw: &Stopwatch,
         sim_time_s: f64,
         arrived: u32,
         selected: u32,
     ) -> RoundRecord {
+        let span = self.tele.span_start();
         let eval = backend.evaluate(params);
+        self.tele.span_end(Phase::Eval, span, t as u64);
+        self.tele.observe_eval(t as u64, eval.objective);
         RoundRecord {
             round: t,
             objective: eval.objective,
@@ -570,7 +614,7 @@ impl<'a> RoundEngine<'a> {
             bits_up: self.bits_up,
             bits_down: self.bits_down,
             sigma: round_sigma,
-            wall_ms,
+            wall_ms: sw.elapsed_ms(),
             sim_time_s,
             arrived,
             selected,
@@ -606,6 +650,9 @@ impl<'a> RoundEngine<'a> {
             self.scratches.push(RoundScratch::new(self.d));
         }
 
+        // Phase span: perturb + sign + pack + streamed in-lane fold (the
+        // fused kernel path) across every participant.
+        let span = self.tele.span_start();
         // The parallel path runs iff the backend is Sync-safe; which path
         // runs never depends on `parallelism`, so a given backend always
         // produces the same per-client messages.
@@ -650,8 +697,14 @@ impl<'a> RoundEngine<'a> {
             );
         }
 
+        self.tele.span_end(Phase::Clients, span, t as u64);
+        self.tele.count_client_updates(m as u64);
+
         // Fixed-topology coordinator fold: lanes in lane-index order.
-        self.agg.reduce(&self.lanes[..lanes_n], &mut self.update)
+        let span = self.tele.span_start();
+        let stats = self.agg.reduce(&self.lanes[..lanes_n], &mut self.update);
+        self.tele.span_end(Phase::Fold, span, t as u64);
+        stats
     }
 
     /// Sequential path for stateful backends; the compression hook may call
@@ -1172,5 +1225,120 @@ mod tests {
         let mut b2 = AnalyticBackend::new(Consensus::gaussian(6, 23, 3));
         let second = engine.run(&mut b2);
         assert_identical(&first, &second, "engine reuse");
+    }
+
+    #[test]
+    fn fixed_clock_pins_wall_ms_on_every_record() {
+        let algo = AlgorithmConfig::z_signsgd(ZParam::Finite(1), 1.0).with_lrs(0.05, 1.0);
+        let cfg = ServerConfig { rounds: 4, seed: 3, eval_every: 1, ..Default::default() };
+        let mut engine = RoundEngine::new(&algo, &cfg, 23, 6);
+        engine.set_clock(Clock::Fixed(7));
+        let mut b = AnalyticBackend::new(Consensus::gaussian(6, 23, 3));
+        let run = engine.run(&mut b);
+        assert_eq!(run.records.len(), 4);
+        for rec in &run.records {
+            assert_eq!(rec.wall_ms, 7.0, "round {}", rec.round);
+        }
+    }
+
+    #[test]
+    fn telemetry_enabled_is_byte_identical_and_populates_the_registry() {
+        let algo = AlgorithmConfig::z_signsgd(ZParam::Finite(1), 2.0).with_lrs(0.05, 1.0);
+        let cfg = ServerConfig {
+            rounds: 6,
+            seed: 9,
+            eval_every: 1,
+            parallelism: 4,
+            ..Default::default()
+        };
+        let (n, d) = (8usize, 19usize);
+        let mut quiet_engine = RoundEngine::new(&algo, &cfg, d, n);
+        let mut b1 = AnalyticBackend::new(Consensus::gaussian(n, d, 2));
+        let quiet = quiet_engine.run(&mut b1);
+
+        let tele = Telemetry::with_capacity(256);
+        let mut engine = RoundEngine::new(&algo, &cfg, d, n);
+        engine.set_telemetry(tele.clone());
+        let mut b2 = AnalyticBackend::new(Consensus::gaussian(n, d, 2));
+        let watched = engine.run(&mut b2);
+
+        // Recording must not perturb the run in any way.
+        assert_identical(&quiet, &watched, "telemetry on/off");
+
+        // And the registry must reflect exactly what the records say.
+        let m = tele.metrics().unwrap();
+        assert_eq!(m.rounds_total.get(), 6);
+        assert_eq!(m.round_current.get(), 5.0);
+        let last = watched.records.last().unwrap();
+        assert_eq!(m.bits_up_total.get(), last.bits_up);
+        assert_eq!(m.bits_down_total.get(), last.bits_down);
+        assert_eq!(m.arrived_total.get(), 6 * n as u64);
+        assert_eq!(m.client_updates_total.get(), 6 * n as u64);
+        assert_eq!(m.objective.get(), last.objective);
+        assert_eq!(m.sigma.get(), 2.0);
+        for p in Phase::ALL {
+            assert_eq!(m.phase_ms[p as usize].snapshot().count, 6, "{}", p.label());
+        }
+        assert_eq!(m.round_ms.snapshot().count, 6);
+        assert!(!tele.events().is_empty());
+        let text = tele.export_prometheus();
+        assert!(text.contains("zsfa_rounds_total 6"));
+    }
+
+    /// Delegating backend whose `evaluate` sleeps, to pin what `wall_ms`
+    /// covers.
+    struct SlowEval<B: TrainBackend> {
+        inner: B,
+        sleep_ms: u64,
+    }
+
+    impl<B: TrainBackend> TrainBackend for SlowEval<B> {
+        fn dim(&self) -> usize {
+            self.inner.dim()
+        }
+        fn num_clients(&self) -> usize {
+            self.inner.num_clients()
+        }
+        fn init_params(&mut self) -> Vec<f32> {
+            self.inner.init_params()
+        }
+        fn local_update(
+            &mut self,
+            client: usize,
+            params: &[f32],
+            local_steps: usize,
+            gamma: f32,
+            rng: &mut Pcg64,
+        ) -> crate::fl::backend::LocalOutcome {
+            self.inner.local_update(client, params, local_steps, gamma, rng)
+        }
+        fn evaluate(&mut self, params: &[f32]) -> crate::fl::backend::EvalResult {
+            std::thread::sleep(std::time::Duration::from_millis(self.sleep_ms));
+            self.inner.evaluate(params)
+        }
+        fn as_parallel(&self) -> Option<&dyn ParallelBackend> {
+            self.inner.as_parallel()
+        }
+    }
+
+    #[test]
+    fn wall_ms_covers_the_evaluation_phase() {
+        // The doc/accounting contract on `RoundRecord::wall_ms`: the round
+        // stopwatch is read *after* evaluation, so a slow evaluator must
+        // show up in the record (generous margin to stay unflaky).
+        let algo = AlgorithmConfig::gd().with_lrs(0.05, 1.0);
+        let cfg = ServerConfig { rounds: 1, seed: 1, eval_every: 1, ..Default::default() };
+        let mut engine = RoundEngine::new(&algo, &cfg, 11, 4);
+        engine.set_clock(Clock::Monotonic);
+        let mut b = SlowEval {
+            inner: AnalyticBackend::new(Consensus::gaussian(4, 11, 8)),
+            sleep_ms: 40,
+        };
+        let run = engine.run(&mut b);
+        assert!(
+            run.records[0].wall_ms >= 25.0,
+            "wall_ms {} must include the 40 ms evaluation",
+            run.records[0].wall_ms
+        );
     }
 }

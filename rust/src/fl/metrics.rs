@@ -22,7 +22,14 @@ pub struct RoundRecord {
     pub bits_down: u64,
     /// Noise scale σ in effect this round (tracks the plateau controller).
     pub sigma: f32,
-    /// Wall-clock milliseconds spent on this round.
+    /// Milliseconds spent on the **full** round: participation planning,
+    /// client work (in the networked service, the offer/collect window),
+    /// lane/slot fold, server step and the evaluation itself — the
+    /// stopwatch is read after `evaluate` returns. The in-process engine
+    /// and `service::ServiceHost` time this identical span (pinned by
+    /// engine/service tests). The source is the injectable
+    /// `telemetry::Clock`: under `Clock::Fixed` (`ZSFA_FIXED_CLOCK`) every
+    /// record carries the pinned value, so CI byte-diffs raw CSVs whole.
     pub wall_ms: f64,
     /// Cumulative *simulated* seconds (client-lifecycle scenarios; 0 under
     /// uniform participation, where rounds take no modeled time).

@@ -30,6 +30,7 @@ use super::metrics::{RoundRecord, RunResult};
 use super::plateau::PlateauConfig;
 use crate::rng::ZParam;
 use crate::sim::ScenarioConfig;
+use crate::telemetry::Telemetry;
 
 /// How each round's participants are chosen (see
 /// `fl::engine::ParticipationPolicy`).
@@ -130,9 +131,25 @@ pub fn run_experiment_observed(
     cfg: &ServerConfig,
     on_record: &mut dyn FnMut(&RoundRecord),
 ) -> RunResult {
+    run_experiment_instrumented(backend, algo, cfg, &Telemetry::disabled(), on_record)
+}
+
+/// Like [`run_experiment_observed`], with an attached telemetry recorder
+/// (phase spans, round/bit counters, eval gauges — see [`crate::telemetry`]).
+/// Telemetry is read-only with respect to the run: for any handle the
+/// `RunResult` is bit-identical to [`run_experiment_observed`]'s.
+pub fn run_experiment_instrumented(
+    backend: &mut dyn TrainBackend,
+    algo: &AlgorithmConfig,
+    cfg: &ServerConfig,
+    tele: &Telemetry,
+    on_record: &mut dyn FnMut(&RoundRecord),
+) -> RunResult {
     let d = backend.dim();
     let n = backend.num_clients();
-    RoundEngine::new(algo, cfg, d, n).run_observed(backend, on_record)
+    let mut engine = RoundEngine::new(algo, cfg, d, n);
+    engine.set_telemetry(tele.clone());
+    engine.run_observed(backend, on_record)
 }
 
 #[cfg(test)]

@@ -42,6 +42,7 @@ pub mod rng;
 pub mod runtime;
 pub mod service;
 pub mod sim;
+pub mod telemetry;
 pub mod tensor;
 pub mod testutil;
 pub mod util;

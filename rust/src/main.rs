@@ -5,8 +5,10 @@
 //!   run --config f.cfg  config-driven experiment (legacy key=value format)
 //!   serve <spec.json>   host the rounds over TCP (networked coordinator)
 //!   join <spec.json>    work for a coordinator as a TCP participant
+//!   watch               live telemetry dashboard (endpoint or JSONL tail)
+//!   metrics             scrape a coordinator's Prometheus endpoint
 //!   fig1 fig2 fig3 fig5 fig6 fig16 fig17 table2
-//!                       reproduce the paper's figures/tables (DESIGN.md §6)
+//!                       reproduce the paper's figures/tables (DESIGN.md §7)
 //!   scenarios           client-lifecycle simulation: deadlines, dropouts,
 //!                       byzantine robustness (DESIGN.md §2.5)
 //!   inspect             list artifacts from the manifest
@@ -35,6 +37,8 @@ fn main() -> Result<()> {
         Some("run") => run_cmd(&args),
         Some("serve") => serve_cmd(&args),
         Some("join") => join_cmd(&args),
+        Some("watch") => watch_cmd(&args),
+        Some("metrics") => metrics_cmd(&args),
         Some("inspect") => inspect(&args),
         Some("version") => {
             println!("zsfa {}", zsignfedavg::version());
@@ -66,9 +70,15 @@ SUBCOMMANDS
           --transport engine|loopback|tcp selects where rounds execute
   serve   host a spec's rounds over TCP:  zsfa serve spec.json --addr :7070
           (--heartbeat-ms/--round-deadline-ms/--min-participants tune
-           liveness; results are bit-identical to `zsfa run`)
+           liveness; results are bit-identical to `zsfa run`; with
+           --telemetry the coordinator port also answers GET /metrics)
   join    work for a coordinator:  zsfa join spec.json --addr host:7070
           (same spec file on both sides; exits when the run finishes)
+  watch   live dashboard:  zsfa watch --addr host:7070  (poll endpoint)
+                           zsfa watch --jsonl events.jsonl  (tail a log)
+          (--interval-ms N refresh rate, --once prints one frame)
+  metrics scrape Prometheus text:  zsfa metrics --addr host:7070
+          (--json fetches the /metrics.json registry snapshot instead)
   fig1    consensus problem across dimensions (+ §1 counterexample)
   fig2    noise-scale bias/variance trade-off
   fig3    non-iid MNIST sign-method comparison   (--sweep-sigma => fig7)
@@ -81,6 +91,14 @@ SUBCOMMANDS
   scenarios client-lifecycle sim: stragglers/dropouts (time-to-target) and
           byzantine robustness curves (--sim_* flags, see sim/)
   inspect list AOT artifacts
+
+COMMON FLAGS (run/serve)
+  --telemetry (enable the metrics registry + event ring; results stay
+               byte-identical — telemetry is read-only, DESIGN.md §6)
+  --dump-metrics FILE (write a Prometheus snapshot at exit; implies
+                       --telemetry)
+  --jsonl FILE (stream round events as JSON lines; carries phase
+                timings when telemetry is on)
 
 COMMON FLAGS
   --rounds N --repeats N --seed N --paper-scale
@@ -128,6 +146,59 @@ fn run_cmd(args: &Args) -> Result<()> {
     }
 }
 
+/// Apply the observability flags (`--telemetry`, `--dump-metrics`,
+/// `--jsonl`) to `spec` and build the driver session. The JSONL sink and
+/// the session share one telemetry handle so phase timings reach both the
+/// event log and the endpoint/dump exporters.
+fn console_session(args: &Args, spec: &mut ExperimentSpec) -> Result<Session> {
+    use zsignfedavg::api::{JsonlSink, TelemetrySpec};
+    if args.has("telemetry") || args.has("dump-metrics") {
+        let mut t =
+            if spec.telemetry.enabled { spec.telemetry.clone() } else { TelemetrySpec::on() };
+        if let Some(path) = args.flag("dump-metrics") {
+            t.dump_path = Some(path.to_string());
+        }
+        spec.telemetry = t;
+    }
+    let tele = spec.telemetry.handle();
+    let mut session = Session::console().with_telemetry(tele.clone());
+    if let Some(path) = args.flag("jsonl") {
+        let sink = JsonlSink::create(std::path::Path::new(path))?.with_telemetry(tele);
+        session = session.with(sink);
+    }
+    Ok(session)
+}
+
+/// `zsfa watch`: the live terminal dashboard (DESIGN.md §6.4).
+fn watch_cmd(args: &Args) -> Result<()> {
+    use zsignfedavg::telemetry::watch::{self, WatchOpts};
+    let opts = WatchOpts {
+        addr: args.flag("addr").map(String::from),
+        jsonl: args.flag("jsonl").map(String::from),
+        interval_ms: args.u64_or("interval-ms", 1_000)?,
+        once: args.has("once"),
+    };
+    if opts.addr.is_none() && opts.jsonl.is_none() {
+        bail!("usage: zsfa watch --addr host:port | --jsonl events.jsonl [--once]");
+    }
+    watch::run(&opts).map_err(|e| anyhow!("watch: {e}"))
+}
+
+/// `zsfa metrics`: one-shot scrape of a serving coordinator's metrics
+/// endpoint (Prometheus text, or the JSON registry snapshot with
+/// `--json`). The coordinator must be running `serve --telemetry`.
+fn metrics_cmd(args: &Args) -> Result<()> {
+    let addr = args
+        .flag("addr")
+        .ok_or_else(|| anyhow!("usage: zsfa metrics --addr host:port [--json]"))?;
+    let path = if args.has("json") { "/metrics.json" } else { "/metrics" };
+    let timeout_ms = args.u64_or("timeout-ms", 2_000)?;
+    let body = zsignfedavg::telemetry::watch::http_get(addr, path, timeout_ms)
+        .map_err(|e| anyhow!("metrics: {e}"))?;
+    print!("{body}");
+    Ok(())
+}
+
 /// Execute an `ExperimentSpec` JSON file. Execution knobs (and only those)
 /// can be overridden from the CLI: `--parallelism` and `--reduce-lanes`
 /// never change *what* the experiment is (determinism contract /
@@ -148,6 +219,7 @@ fn run_spec(args: &Args, path: &str) -> Result<()> {
             other => bail!("unknown transport {other:?} (expected engine|loopback|tcp)"),
         });
     }
+    let mut session = console_session(args, &mut spec)?;
     println!(
         "run: {} — {} series x {} repeats, {} rounds",
         spec.name,
@@ -155,7 +227,7 @@ fn run_spec(args: &Args, path: &str) -> Result<()> {
         spec.repeats,
         spec.rounds
     );
-    Session::console().run(&spec)?;
+    session.run(&spec)?;
     Ok(())
 }
 
@@ -194,6 +266,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
         round_deadline_ms: args.u64_or("round-deadline-ms", d_dl)?,
         min_participants: args.usize_or("min-participants", d_min)?,
     });
+    let mut session = console_session(args, &mut spec)?;
     println!(
         "serve: {} — {} series x {} repeats, {} rounds",
         spec.name,
@@ -201,7 +274,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
         spec.repeats,
         spec.rounds
     );
-    Session::console().run(&spec)?;
+    session.run(&spec)?;
     Ok(())
 }
 

@@ -32,6 +32,7 @@ use super::protocol::{
 use crate::compress::agg::{Aggregator, LaneAcc, RemoteUpdate, Scratch};
 use crate::compress::wire;
 use crate::fl::engine::Participant;
+use crate::telemetry::{EventKind, Telemetry};
 use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
@@ -86,6 +87,9 @@ pub struct CoordState {
     /// series plus a throwaway lane the probe-fold streams into.
     agg: Option<Box<dyn Aggregator>>,
     probe: Option<(LaneAcc, Scratch)>,
+    /// Protocol observability: per-reply-code counters + transition
+    /// events. Disabled by default; the state machine never reads it.
+    tele: Telemetry,
 }
 
 impl CoordState {
@@ -99,7 +103,15 @@ impl CoordState {
             active: None,
             agg: None,
             probe: None,
+            tele: Telemetry::disabled(),
         }
+    }
+
+    /// Attach a telemetry recorder. Every reply [`CoordState::handle`]
+    /// produces bumps its per-reply-code counter and lands in the event
+    /// ring; peer expiry records the number of reclaimed slots.
+    pub fn set_telemetry(&mut self, tele: Telemetry) {
+        self.tele = tele;
     }
 
     /// Arm submission validation for one (series, repeat) run: the
@@ -196,19 +208,55 @@ impl CoordState {
         for pid in dead {
             self.peers.remove(&pid);
             self.pins.retain(|_, &mut p| p != pid);
+            let mut reclaimed = 0u32;
             if let Some(r) = self.active.as_mut() {
                 for slot in r.slots.iter_mut() {
                     if slot.status == (SlotStatus::Assigned { pid }) {
                         slot.status = SlotStatus::Unassigned;
+                        reclaimed += 1;
                     }
                 }
             }
+            let round = self.active.as_ref().map(|r| r.round).unwrap_or(0);
+            self.tele.coord_event(EventKind::PeerExpired, round, reclaimed as f64);
         }
     }
 
     /// Process one request. `now_ms` is the driver's monotonic clock (any
     /// value when liveness tracking is disabled).
     pub fn handle(&mut self, req: &Request, now_ms: u64) -> Reply {
+        let reply = self.handle_inner(req, now_ms);
+        if self.tele.is_enabled() {
+            let round = self.active.as_ref().map(|r| r.round).unwrap_or(0);
+            let (kind, value) = match &reply {
+                Reply::Rendezvous(RendezvousReply::Accept { .. }) => {
+                    (EventKind::Rendezvous, self.peers.len() as f64)
+                }
+                Reply::Rendezvous(RendezvousReply::Later) => (EventKind::RendezvousDeferred, 0.0),
+                Reply::Heartbeat(PhaseReply::Unknown) => (EventKind::SubmitUnknown, 0.0),
+                Reply::Heartbeat(_) => (EventKind::Heartbeat, 0.0),
+                Reply::Round(RoundReply::Work(w)) => (EventKind::PullWork, w.slot as f64),
+                Reply::Round(RoundReply::NoWork) => (EventKind::PullNoWork, 0.0),
+                Reply::Submit(SubmitReply::Ok) => {
+                    // A folded submission is one remote client update.
+                    self.tele.count_client_updates(1);
+                    let slot = match req {
+                        Request::Submit { slot, .. } => *slot as f64,
+                        _ => 0.0,
+                    };
+                    (EventKind::SubmitOk, slot)
+                }
+                Reply::Submit(SubmitReply::Stale) => (EventKind::SubmitStale, 0.0),
+                Reply::Submit(SubmitReply::Duplicate) => (EventKind::SubmitDuplicate, 0.0),
+                Reply::Submit(SubmitReply::Malformed) => (EventKind::SubmitMalformed, 0.0),
+                Reply::Submit(SubmitReply::Unknown) => (EventKind::SubmitUnknown, 0.0),
+            };
+            self.tele.coord_event(kind, round, value);
+        }
+        reply
+    }
+
+    fn handle_inner(&mut self, req: &Request, now_ms: u64) -> Reply {
         self.expire_peers(now_ms);
         match req {
             Request::Rendezvous => {
@@ -641,6 +689,55 @@ mod tests {
         assert!(st.close_round().is_empty());
         st.offer_round(0, 0, 1, 1.0, &[0.0; D], &participants(3));
         assert!(st.active.is_some());
+    }
+
+    #[test]
+    fn telemetry_counts_every_reply_code() {
+        let idx = |k| crate::telemetry::registry::coord_index(k).unwrap();
+        let mut st = state();
+        let tele = Telemetry::with_capacity(64);
+        st.set_telemetry(tele.clone());
+        let a = rendezvous(&mut st, 0);
+        st.offer_round(0, 0, 0, 1.0, &[0.0; D], &participants(1));
+        let RoundReply::Work(_) = pull(&mut st, a, 1) else { panic!() };
+        assert_eq!(pull(&mut st, a, 2), RoundReply::NoWork);
+        assert_eq!(submit(&mut st, a, 0, 0, 3), SubmitReply::Ok);
+        assert_eq!(submit(&mut st, a, 0, 0, 4), SubmitReply::Duplicate);
+        assert_eq!(submit(&mut st, a, 9, 0, 5), SubmitReply::Stale);
+        assert_eq!(submit(&mut st, 777, 0, 0, 6), SubmitReply::Unknown);
+        st.handle(&Request::Heartbeat { pid: a }, 7);
+        let m = tele.metrics().unwrap();
+        assert_eq!(m.coord[idx(EventKind::Rendezvous)].get(), 1);
+        assert_eq!(m.coord[idx(EventKind::PullWork)].get(), 1);
+        assert_eq!(m.coord[idx(EventKind::PullNoWork)].get(), 1);
+        assert_eq!(m.coord[idx(EventKind::SubmitOk)].get(), 1);
+        assert_eq!(m.coord[idx(EventKind::SubmitDuplicate)].get(), 1);
+        assert_eq!(m.coord[idx(EventKind::SubmitStale)].get(), 1);
+        assert_eq!(m.coord[idx(EventKind::SubmitUnknown)].get(), 1);
+        assert_eq!(m.coord[idx(EventKind::Heartbeat)].get(), 1);
+        // A folded submission counts as one remote client update.
+        assert_eq!(m.client_updates_total.get(), 1);
+    }
+
+    #[test]
+    fn telemetry_records_peer_expiry_with_reclaimed_slots() {
+        let mut st = state();
+        let tele = Telemetry::with_capacity(64);
+        st.set_telemetry(tele.clone());
+        let a = rendezvous(&mut st, 0);
+        st.offer_round(0, 0, 3, 1.0, &[0.0; D], &participants(1));
+        let RoundReply::Work(_) = pull(&mut st, a, 1) else { panic!() };
+        st.expire_peers(10_000);
+        assert_eq!(st.roster_len(), 0);
+        let idx = crate::telemetry::registry::coord_index(EventKind::PeerExpired).unwrap();
+        assert_eq!(tele.metrics().unwrap().coord[idx].get(), 1);
+        let ev = tele
+            .events()
+            .into_iter()
+            .find(|e| e.kind == EventKind::PeerExpired)
+            .expect("no expiry event");
+        assert_eq!(ev.round, 3);
+        assert_eq!(ev.value, 1.0, "one reclaimed slot");
     }
 
     #[test]

@@ -39,7 +39,7 @@ use crate::api::spec::ExperimentSpec;
 use crate::error::{Error, Result};
 use crate::fl::engine::RoundEngine;
 use crate::fl::{AlgorithmConfig, RoundRecord, RunResult, ServerConfig, TrainBackend};
-use crate::util::Timer;
+use crate::telemetry::{Clock, Phase, Telemetry};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
@@ -59,6 +59,8 @@ pub struct ServiceHost {
     join_patience: Duration,
     min_participants: usize,
     loopback: Vec<JoinHandle<Result<()>>>,
+    clock: Clock,
+    tele: Telemetry,
 }
 
 impl ServiceHost {
@@ -84,19 +86,26 @@ impl ServiceHost {
             join_patience: Duration::from_secs(60),
             min_participants: 1,
             loopback,
+            clock: Clock::from_env(),
+            tele: Telemetry::disabled(),
         }
     }
 
     /// Networked service: bind `addr` and wait for `min_participants`
-    /// peers before the first round is offered.
+    /// peers before the first round is offered. The telemetry handle is
+    /// shared with the coordinator (protocol counters) and the TCP server
+    /// (the `/metrics` HTTP endpoint); pass `Telemetry::disabled()` to
+    /// serve without observability.
     pub fn tcp(
         addr: &str,
         heartbeat_ms: u64,
         round_deadline_ms: u64,
         min_participants: usize,
+        tele: &Telemetry,
     ) -> Result<ServiceHost> {
         let coord = Coordinator::new(heartbeat_ms);
-        let server = TcpServer::bind(addr, coord.clone())?;
+        coord.with_state(|st| st.set_telemetry(tele.clone()));
+        let server = TcpServer::bind_with(addr, coord.clone(), tele.clone())?;
         Ok(ServiceHost {
             coord,
             server: Some(server),
@@ -104,7 +113,24 @@ impl ServiceHost {
             join_patience: Duration::from_secs(60),
             min_participants: min_participants.max(1),
             loopback: Vec::new(),
+            clock: Clock::from_env(),
+            tele: tele.clone(),
         })
+    }
+
+    /// Override the wall-clock source (`Clock::Fixed` pins every record's
+    /// `wall_ms` — the CI byte-diff configuration). Defaults to
+    /// [`Clock::from_env`].
+    pub fn set_clock(&mut self, clock: Clock) {
+        self.clock = clock;
+    }
+
+    /// Attach a telemetry recorder after construction (loopback hosts are
+    /// built without one). Shared with the coordinator so protocol events
+    /// (rendezvous, heartbeats, stale/duplicate submissions) are counted.
+    pub fn set_telemetry(&mut self, tele: Telemetry) {
+        self.coord.with_state(|st| st.set_telemetry(tele.clone()));
+        self.tele = tele;
     }
 
     /// The bound TCP address, when serving TCP (resolves `:0` requests).
@@ -127,6 +153,11 @@ impl ServiceHost {
         let d = backend.dim();
         let n = backend.num_clients();
         let mut engine = RoundEngine::new(algo, cfg, d, n);
+        // Share the host's telemetry and clock so ServerStep/Eval spans and
+        // bit counters (recorded inside the engine's stage methods) land in
+        // the same registry, and wall_ms uses the same injectable source.
+        engine.set_telemetry(self.tele.clone());
+        engine.set_clock(self.clock);
         engine.reset_run();
         let mut params = backend.init_params();
         let root = engine.root();
@@ -148,7 +179,7 @@ impl ServiceHost {
         let mut records = Vec::new();
         let mut sim_time_s = 0.0f64;
         for t in 0..cfg.rounds {
-            let timer = Timer::start();
+            let sw = self.clock.start();
             // 1. Participation: planned server-side, exactly like the
             //    engine; the plan's faults ride along in the work orders.
             let plan = policy.plan_round(t, &root);
@@ -156,10 +187,14 @@ impl ServiceHost {
             sim_time_s += plan.duration_s;
             engine.bill_downlink(plan.downloads);
             let round_sigma = engine.round_sigma();
+            self.tele.round_begin(t as u64, round_sigma);
 
             let mut arrived = 0u32;
             if !plan.participants.is_empty() {
                 // 2. Offer the round; participants pull slots and submit.
+                // The Clients span is the offer→close window: remote local
+                // updates (perturb + sign + pack) happen inside it.
+                let span = self.tele.span_start();
                 self.coord.with_state(|st| {
                     st.offer_round(
                         series,
@@ -175,6 +210,7 @@ impl ServiceHost {
                 self.coord
                     .wait_until(self.round_deadline, |st| st.round_complete().then_some(()));
                 let subs = self.coord.with_state(|st| st.close_round());
+                self.tele.span_end(Phase::Clients, span, t as u64);
 
                 // 4–6. Fold in slot order and step, exactly like the
                 //    engine. Submissions were probe-validated at arrival,
@@ -183,6 +219,7 @@ impl ServiceHost {
                     let m = subs.len();
                     arrived = m as u32;
                     let inv_m = 1.0f32 / m as f32;
+                    let span = self.tele.span_start();
                     let topo = engine.begin_remote_round(m);
                     for (slot, sub) in subs.iter().enumerate() {
                         engine
@@ -195,18 +232,21 @@ impl ServiceHost {
                             })?;
                     }
                     let stats = engine.finish_remote_round(&topo);
+                    self.tele.span_end(Phase::Fold, span, t as u64);
                     engine.apply_server_step(t, &root, &mut params, &stats);
                 }
             }
 
-            // 7. Evaluation.
+            // 7. Evaluation. The stopwatch is read inside `eval_record`
+            //    after `evaluate` returns, so wall_ms spans the full round
+            //    (see `RoundRecord::wall_ms`) — same contract as the engine.
             if engine.should_eval(t) {
                 let rec = engine.eval_record(
                     backend,
                     t,
                     &params,
                     round_sigma,
-                    timer.elapsed_ms(),
+                    &sw,
                     sim_time_s,
                     arrived,
                     selected,
@@ -214,6 +254,7 @@ impl ServiceHost {
                 on_record(&rec);
                 records.push(rec);
             }
+            self.tele.round_end(t as u64, arrived as u64, selected as u64, sw.elapsed_ms());
         }
         Ok(RunResult { algorithm: engine.algorithm_name().to_string(), records })
     }
@@ -411,12 +452,47 @@ mod tests {
     }
 
     #[test]
+    fn fixed_clock_pins_service_wall_ms_and_telemetry_is_inert() {
+        // Under Clock::Fixed every service record carries the pinned
+        // wall_ms (the byte-diff CI configuration), and attaching a live
+        // telemetry recorder changes nothing about the run itself.
+        let spec = ExperimentSpec::new("svc", WorkloadSpec::consensus(12, 17, 321))
+            .rounds(5)
+            .seed(9)
+            .series(AlgorithmConfig::z_signfedavg(ZParam::Finite(1), 2.0, 2).with_lrs(0.05, 1.0));
+        let want = engine_run(&spec, 0, 0);
+
+        let mut host = ServiceHost::loopback(&spec, 2);
+        host.set_clock(Clock::Fixed(42));
+        let tele = Telemetry::with_capacity(256);
+        host.set_telemetry(tele.clone());
+        let mut backend = spec.workload.build_backend().unwrap();
+        let algo = spec.expanded_series()[0].algorithm.clone();
+        let cfg = spec.server_config(0);
+        let got = host.run_one(backend.as_mut(), &algo, &cfg, 0, 0, &mut |_| {}).unwrap();
+        host.shutdown().unwrap();
+
+        assert_identical(&want, &got, "fixed-clock loopback");
+        for r in &got.records {
+            assert_eq!(r.wall_ms, 42.0, "round {}", r.round);
+        }
+        let m = tele.metrics().unwrap();
+        assert_eq!(m.rounds_total.get(), 5);
+        assert!(m.bits_up_total.get() > 0);
+        assert!(m.folds_total.get() > 0);
+        // Protocol counters: every loopback worker rendezvoused.
+        let prom = tele.export_prometheus();
+        assert!(prom.contains("zsfa_rounds_total 5"), "{prom}");
+    }
+
+    #[test]
     fn tcp_service_runs_end_to_end_and_matches_the_engine() {
         let spec = ExperimentSpec::new("svc", WorkloadSpec::consensus(10, 13, 2024))
             .rounds(4)
             .seed(11)
             .series(AlgorithmConfig::z_signfedavg(ZParam::Finite(1), 2.0, 2).with_lrs(0.05, 1.0));
-        let mut host = ServiceHost::tcp("127.0.0.1:0", 500, 30_000, 2).unwrap();
+        let mut host =
+            ServiceHost::tcp("127.0.0.1:0", 500, 30_000, 2, &Telemetry::disabled()).unwrap();
         let addr = host.local_addr().unwrap().to_string();
         let joiners: Vec<_> = (0..2)
             .map(|_| {

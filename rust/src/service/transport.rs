@@ -16,6 +16,7 @@
 use super::coordinator::Coordinator;
 use super::protocol::{decode_reply, decode_request, encode_reply, encode_request, Reply, Request};
 use crate::error::{anyhow, Context, Result};
+use crate::telemetry::Telemetry;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -86,7 +87,11 @@ fn write_frame(w: &mut impl Write, frame: &[u8]) -> std::io::Result<()> {
 fn read_frame(r: &mut impl Read) -> std::io::Result<Vec<u8>> {
     let mut len_bytes = [0u8; 4];
     r.read_exact(&mut len_bytes)?;
-    let len = u32::from_le_bytes(len_bytes);
+    read_frame_body(r, u32::from_le_bytes(len_bytes))
+}
+
+/// Read a frame body whose length prefix was already consumed.
+fn read_frame_body(r: &mut impl Read, len: u32) -> std::io::Result<Vec<u8>> {
     if len > MAX_FRAME_BYTES {
         return Err(std::io::Error::new(
             std::io::ErrorKind::InvalidData,
@@ -146,7 +151,17 @@ pub struct TcpServer {
 }
 
 impl TcpServer {
+    /// Bind without an HTTP metrics endpoint (framed protocol only).
     pub fn bind(addr: &str, coord: Coordinator) -> Result<TcpServer> {
+        TcpServer::bind_with(addr, coord, Telemetry::disabled())
+    }
+
+    /// Bind, also answering plain HTTP GETs on the same port: `/metrics`
+    /// serves the Prometheus exposition text and `/metrics.json` the JSON
+    /// snapshot of `tele`'s registry (503 while telemetry is disabled).
+    /// The first four bytes of a connection disambiguate — `"GET "` is
+    /// never a valid length prefix for a protocol envelope's first frame.
+    pub fn bind_with(addr: &str, coord: Coordinator, tele: Telemetry) -> Result<TcpServer> {
         let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
         let local_addr = listener.local_addr().context("local_addr")?;
         // Poll accept so the stop flag is honored without a self-connect.
@@ -161,9 +176,10 @@ impl TcpServer {
                         stream.set_nodelay(true).ok();
                         stream.set_nonblocking(false).ok();
                         let coord = coord.clone();
+                        let tele = tele.clone();
                         // Connection threads exit on EOF when the client
                         // disconnects; they are not joined.
-                        std::thread::spawn(move || serve_connection(stream, coord, epoch));
+                        std::thread::spawn(move || serve_connection(stream, coord, epoch, tele));
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                         std::thread::sleep(Duration::from_millis(10));
@@ -197,10 +213,25 @@ impl Drop for TcpServer {
 
 /// One connection's request loop. A malformed frame gets no reply and
 /// drops the connection (the client's decoder would reject garbage
-/// anyway); EOF means the participant left.
-fn serve_connection(mut stream: TcpStream, coord: Coordinator, epoch: Instant) {
+/// anyway); EOF means the participant left. Connections opening with
+/// `"GET "` are handed to the one-shot HTTP metrics responder instead.
+fn serve_connection(mut stream: TcpStream, coord: Coordinator, epoch: Instant, tele: Telemetry) {
+    // Sniff the first 4 bytes: either an HTTP method or a length prefix.
+    let mut head = [0u8; 4];
+    if Read::read_exact(&mut stream, &mut head).is_err() {
+        return;
+    }
+    if &head == b"GET " {
+        serve_http(stream, &tele);
+        return;
+    }
+    let mut pending = Some(u32::from_le_bytes(head));
     loop {
-        let frame = match read_frame(&mut stream) {
+        let frame = match pending.take() {
+            Some(len) => read_frame_body(&mut stream, len),
+            None => read_frame(&mut stream),
+        };
+        let frame = match frame {
             Ok(f) => f,
             Err(_) => return,
         };
@@ -214,6 +245,41 @@ fn serve_connection(mut stream: TcpStream, coord: Coordinator, epoch: Instant) {
             return;
         }
     }
+}
+
+/// Answer one HTTP GET (`"GET "` already consumed) and close. Minimal by
+/// design: HTTP/1.0 semantics, no keep-alive, two routes.
+fn serve_http(mut stream: TcpStream, tele: &Telemetry) {
+    // Read until the end of the request head; cap at 8 KiB of headers.
+    stream.set_read_timeout(Some(Duration::from_secs(5))).ok();
+    let mut head = Vec::with_capacity(256);
+    let mut byte = [0u8; 1];
+    while !head.ends_with(b"\r\n\r\n") && head.len() < 8192 {
+        match Read::read(&mut stream, &mut byte) {
+            Ok(1) => head.push(byte[0]),
+            _ => break,
+        }
+    }
+    let line = String::from_utf8_lossy(&head);
+    let path = line.split_whitespace().next().unwrap_or("").to_string();
+    let (status, ctype, body) = if !tele.is_enabled() {
+        ("503 Service Unavailable", "text/plain; charset=utf-8", "telemetry disabled\n".to_string())
+    } else {
+        match path.as_str() {
+            "/metrics" => ("200 OK", "text/plain; version=0.0.4", tele.export_prometheus()),
+            "/metrics.json" => {
+                ("200 OK", "application/json", tele.export_json().to_string_compact())
+            }
+            _ => ("404 Not Found", "text/plain; charset=utf-8", "not found\n".to_string()),
+        }
+    };
+    let resp = format!(
+        "HTTP/1.0 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\
+         \r\n\r\n{body}",
+        body.len()
+    );
+    let _ = stream.write_all(resp.as_bytes());
+    let _ = stream.flush();
 }
 
 #[cfg(test)]
@@ -266,5 +332,54 @@ mod tests {
     fn oversized_length_prefix_rejected_before_allocation() {
         let mut buf: &[u8] = &u32::MAX.to_le_bytes();
         assert!(read_frame(&mut buf).is_err());
+    }
+
+    fn http_get(addr: &str, path: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "GET {path} HTTP/1.0\r\nHost: zsfa\r\nConnection: close\r\n\r\n").unwrap();
+        s.flush().unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn http_metrics_and_framed_protocol_share_the_port() {
+        let coord = Coordinator::new(1000);
+        let tele = Telemetry::with_capacity(32);
+        tele.round_end(0, 3, 4, 1.0);
+        let mut server = TcpServer::bind_with("127.0.0.1:0", coord, tele).unwrap();
+        let addr = server.local_addr().to_string();
+
+        // A framed participant exchange works...
+        let mut t = TcpTransport::connect(&addr, Duration::from_secs(2)).unwrap();
+        let Reply::Rendezvous(RendezvousReply::Accept { pid }) =
+            t.request(&Request::Rendezvous).unwrap()
+        else {
+            panic!()
+        };
+        // ...while an HTTP scrape on the same port sees the registry.
+        let text = http_get(&addr, "/metrics");
+        assert!(text.starts_with("HTTP/1.0 200 OK"), "{text}");
+        assert!(text.contains("zsfa_rounds_total 1"), "{text}");
+        let json = http_get(&addr, "/metrics.json");
+        assert!(json.starts_with("HTTP/1.0 200 OK"), "{json}");
+        assert!(json.contains("\"rounds_total\":1"), "{json}");
+        assert!(http_get(&addr, "/nope").starts_with("HTTP/1.0 404"));
+        // The framed connection is still alive after the HTTP traffic.
+        assert_eq!(
+            t.request(&Request::Heartbeat { pid }).unwrap(),
+            Reply::Heartbeat(PhaseReply::Standby)
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn http_scrape_without_telemetry_is_refused() {
+        let coord = Coordinator::new(1000);
+        let mut server = TcpServer::bind("127.0.0.1:0", coord).unwrap();
+        let addr = server.local_addr().to_string();
+        assert!(http_get(&addr, "/metrics").starts_with("HTTP/1.0 503"));
+        server.shutdown();
     }
 }

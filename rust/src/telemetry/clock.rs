@@ -1,0 +1,96 @@
+//! The injectable monotonic clock behind every `wall_ms` measurement.
+//!
+//! The round engine and the networked service never call
+//! `std::time::Instant` directly for round timing; they start a
+//! [`Stopwatch`] from their [`Clock`]. The default [`Clock::Monotonic`]
+//! reads real time; [`Clock::Fixed`] reports a pinned number of
+//! milliseconds for every span, which is what lets the `determinism` /
+//! `spec-smoke` / `service-smoke` / `metrics-smoke` CI targets byte-diff
+//! raw CSVs (wall_ms column included) instead of excluding or normalizing
+//! them.
+
+use std::time::Instant;
+
+/// Environment variable consulted by [`Clock::from_env`]: when set (to a
+/// number of milliseconds), every stopwatch reports exactly that value.
+/// An env var rather than a CLI flag so one setting covers all three
+/// processes of a TCP serve/join smoke run.
+pub const FIXED_CLOCK_ENV: &str = "ZSFA_FIXED_CLOCK";
+
+/// A monotonic-time source for round timing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Clock {
+    /// Real wall-clock time via `std::time::Instant`.
+    #[default]
+    Monotonic,
+    /// Deterministic clock: every measured span reports exactly this many
+    /// milliseconds. Used by CI byte-diff smokes and tests.
+    Fixed(u64),
+}
+
+impl Clock {
+    /// [`Clock::Fixed`] when [`FIXED_CLOCK_ENV`] is set (unparsable values
+    /// pin 0 ms), [`Clock::Monotonic`] otherwise.
+    pub fn from_env() -> Clock {
+        match std::env::var(FIXED_CLOCK_ENV) {
+            Ok(v) if !v.trim().is_empty() => Clock::Fixed(v.trim().parse().unwrap_or(0)),
+            _ => Clock::Monotonic,
+        }
+    }
+
+    /// Start measuring a span.
+    pub fn start(self) -> Stopwatch {
+        match self {
+            Clock::Monotonic => Stopwatch { start: Some(Instant::now()), fixed_ms: 0 },
+            Clock::Fixed(ms) => Stopwatch { start: None, fixed_ms: ms },
+        }
+    }
+}
+
+/// A running span started by [`Clock::start`]. For a fixed clock no
+/// `Instant` is ever read, so the span is free of syscalls.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch {
+    start: Option<Instant>,
+    fixed_ms: u64,
+}
+
+impl Stopwatch {
+    /// Elapsed milliseconds (the pinned value under [`Clock::Fixed`]).
+    pub fn elapsed_ms(&self) -> f64 {
+        match self.start {
+            Some(t) => t.elapsed().as_secs_f64() * 1e3,
+            None => self.fixed_ms as f64,
+        }
+    }
+
+    /// Elapsed seconds (the pinned value under [`Clock::Fixed`]).
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed_ms() / 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_clock_reports_the_pinned_value() {
+        let sw = Clock::Fixed(7).start();
+        assert_eq!(sw.elapsed_ms(), 7.0);
+        assert_eq!(sw.elapsed_secs(), 0.007);
+    }
+
+    #[test]
+    fn monotonic_clock_is_nonnegative_and_advances() {
+        let sw = Clock::Monotonic.start();
+        let a = sw.elapsed_ms();
+        assert!(a >= 0.0);
+        assert!(sw.elapsed_ms() >= a);
+    }
+
+    #[test]
+    fn default_is_monotonic() {
+        assert_eq!(Clock::default(), Clock::Monotonic);
+    }
+}

@@ -1,0 +1,217 @@
+//! The event/span layer: fixed-size `Copy` events in a preallocated ring.
+//!
+//! Recording an event is a mutex lock plus an in-place slot write — no
+//! heap allocation ever happens after the ring is constructed, which is
+//! what lets the telemetry-enabled round loop stay inside the PR 5
+//! steady-state allocation budget (see `tests/alloc_regression.rs`).
+
+/// A round phase, in round-loop order. The engine path folds lane state
+/// while clients run, so [`Phase::Clients`] there covers perturb + sign +
+/// pack + in-lane fold; the networked service splits the same work into
+/// the offer/collect window ([`Phase::Clients`]) and the slot fold
+/// ([`Phase::Fold`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Client-side work: perturb + stochastic sign + pack (and, in the
+    /// in-process engine, the streamed in-lane fold).
+    Clients = 0,
+    /// Cross-lane / remote-slot fold into the aggregate.
+    Fold = 1,
+    /// The server step `x_t = x_{t-1} − η·γ·agg` (+ downlink billing).
+    ServerStep = 2,
+    /// Global-model evaluation.
+    Eval = 3,
+}
+
+impl Phase {
+    /// Number of phases (sizes the per-phase metric arrays).
+    pub const COUNT: usize = 4;
+
+    /// All phases, in round order.
+    pub const ALL: [Phase; Phase::COUNT] =
+        [Phase::Clients, Phase::Fold, Phase::ServerStep, Phase::Eval];
+
+    /// Stable label used by both exporters and the watcher.
+    pub fn label(self) -> &'static str {
+        match self {
+            Phase::Clients => "clients",
+            Phase::Fold => "fold",
+            Phase::ServerStep => "server_step",
+            Phase::Eval => "eval",
+        }
+    }
+}
+
+/// What happened. Coordinator kinds mirror the `service::wire` reply
+/// codes one-to-one so the per-reply-code protocol counters and the event
+/// ring stay consistent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A round started (value = σ for the round).
+    RoundBegin,
+    /// A phase finished (value = elapsed ms).
+    PhaseEnd(Phase),
+    /// A round finished (value = arrived participants).
+    RoundEnd,
+    /// An evaluation was recorded (value = objective).
+    Eval,
+    /// Coordinator accepted a rendezvous (value = roster size).
+    Rendezvous,
+    /// Coordinator deferred a rendezvous (roster closed).
+    RendezvousDeferred,
+    /// A heartbeat from a known peer was accepted.
+    Heartbeat,
+    /// A peer missed its heartbeat deadline and was expired
+    /// (value = reclaimed slots).
+    PeerExpired,
+    /// A work order was handed out (value = slot).
+    PullWork,
+    /// A pull found no open slot.
+    PullNoWork,
+    /// A submission was folded (value = slot).
+    SubmitOk,
+    /// A submission arrived for a closed round.
+    SubmitStale,
+    /// A submission arrived for an already-filled slot.
+    SubmitDuplicate,
+    /// A submission failed wire validation.
+    SubmitMalformed,
+    /// A request came from an unknown peer id.
+    SubmitUnknown,
+}
+
+impl EventKind {
+    /// Stable label used by both exporters and the watcher.
+    pub fn label(self) -> &'static str {
+        match self {
+            EventKind::RoundBegin => "round_begin",
+            EventKind::PhaseEnd(p) => p.label(),
+            EventKind::RoundEnd => "round_end",
+            EventKind::Eval => "eval",
+            EventKind::Rendezvous => "rendezvous",
+            EventKind::RendezvousDeferred => "rendezvous_deferred",
+            EventKind::Heartbeat => "heartbeat",
+            EventKind::PeerExpired => "peer_expired",
+            EventKind::PullWork => "pull_work",
+            EventKind::PullNoWork => "pull_no_work",
+            EventKind::SubmitOk => "submit_ok",
+            EventKind::SubmitStale => "submit_stale",
+            EventKind::SubmitDuplicate => "submit_duplicate",
+            EventKind::SubmitMalformed => "submit_malformed",
+            EventKind::SubmitUnknown => "submit_unknown",
+        }
+    }
+}
+
+/// One recorded event. `Copy`, no heap payload.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    /// What happened.
+    pub kind: EventKind,
+    /// The round it happened in (0 for pre-round coordinator traffic).
+    pub round: u64,
+    /// Kind-specific payload (see [`EventKind`] docs).
+    pub value: f64,
+}
+
+/// Fixed-capacity overwrite-oldest ring. All storage is allocated in
+/// [`EventRing::new`]; `push` never allocates.
+#[derive(Debug)]
+pub struct EventRing {
+    buf: Vec<Event>,
+    cap: usize,
+    total: u64,
+}
+
+impl EventRing {
+    /// A ring holding the last `cap` events (`cap` is clamped to ≥ 1).
+    pub fn new(cap: usize) -> EventRing {
+        let cap = cap.max(1);
+        EventRing { buf: Vec::with_capacity(cap), cap, total: 0 }
+    }
+
+    /// Record an event, overwriting the oldest once full.
+    pub fn push(&mut self, e: Event) {
+        if self.buf.len() < self.cap {
+            self.buf.push(e);
+        } else {
+            let idx = (self.total % self.cap as u64) as usize;
+            self.buf[idx] = e;
+        }
+        self.total += 1;
+    }
+
+    /// Total events ever pushed (≥ the number retained).
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Retained events, oldest first. Allocates (export path only).
+    pub fn snapshot(&self) -> Vec<Event> {
+        if self.total <= self.cap as u64 {
+            return self.buf.clone();
+        }
+        let split = (self.total % self.cap as u64) as usize;
+        let mut out = Vec::with_capacity(self.cap);
+        out.extend_from_slice(&self.buf[split..]);
+        out.extend_from_slice(&self.buf[..split]);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(round: u64) -> Event {
+        Event { kind: EventKind::RoundEnd, round, value: 0.0 }
+    }
+
+    #[test]
+    fn ring_retains_newest_in_order() {
+        let mut r = EventRing::new(3);
+        for i in 0..5 {
+            r.push(ev(i));
+        }
+        assert_eq!(r.total(), 5);
+        let got: Vec<u64> = r.snapshot().iter().map(|e| e.round).collect();
+        assert_eq!(got, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn ring_under_capacity_keeps_everything() {
+        let mut r = EventRing::new(8);
+        for i in 0..3 {
+            r.push(ev(i));
+        }
+        let got: Vec<u64> = r.snapshot().iter().map(|e| e.round).collect();
+        assert_eq!(got, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn push_never_reallocates_after_construction() {
+        let mut r = EventRing::new(4);
+        let ptr = r.buf.as_ptr();
+        for i in 0..64 {
+            r.push(ev(i));
+        }
+        assert_eq!(r.buf.as_ptr(), ptr);
+        assert_eq!(r.buf.capacity(), 4);
+    }
+
+    #[test]
+    fn zero_capacity_is_clamped() {
+        let mut r = EventRing::new(0);
+        r.push(ev(1));
+        r.push(ev(2));
+        assert_eq!(r.snapshot().len(), 1);
+        assert_eq!(r.snapshot()[0].round, 2);
+    }
+
+    #[test]
+    fn labels_are_stable() {
+        assert_eq!(Phase::ServerStep.label(), "server_step");
+        assert_eq!(EventKind::PhaseEnd(Phase::Fold).label(), "fold");
+        assert_eq!(EventKind::SubmitDuplicate.label(), "submit_duplicate");
+    }
+}

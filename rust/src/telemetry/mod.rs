@@ -1,0 +1,290 @@
+//! Observability: round/phase tracing, a metrics registry with
+//! Prometheus + JSON exporters, coordinator state-transition events, a
+//! deterministic clock seam and the `zsfa watch` dashboard.
+//!
+//! The subsystem is built around three invariants (DESIGN.md §6):
+//!
+//! * **Zero-cost when disabled.** A disabled [`Telemetry`] handle is a
+//!   `None`; every recording entry point is a branch on that option and
+//!   returns immediately — no `Instant::now`, no locks, no atomics.
+//! * **Allocation-free when enabled.** The event ring and every metric
+//!   cell are allocated when the handle is built; recording is an atomic
+//!   op or an in-place ring write, so the telemetry-enabled steady-state
+//!   round loop stays inside the PR 5 allocation budget
+//!   (`tests/alloc_regression.rs`).
+//! * **Read-only.** Telemetry observes the run and never feeds anything
+//!   back into it: results with telemetry enabled are byte-identical to
+//!   results with it disabled (pinned by `make metrics-smoke` and the
+//!   session tests). Span timings are real wall-clock and deliberately
+//!   outside the reproducibility surface; the record-level `wall_ms`
+//!   column goes through [`Clock`] instead, so CI can pin it.
+
+pub mod clock;
+pub mod event;
+pub mod prometheus;
+pub mod registry;
+pub mod watch;
+
+pub use clock::{Clock, Stopwatch, FIXED_CLOCK_ENV};
+pub use event::{Event, EventKind, EventRing, Phase};
+pub use registry::{Counter, Gauge, Histogram, Metrics};
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+struct Inner {
+    metrics: Metrics,
+    events: Mutex<EventRing>,
+}
+
+/// A cheaply clonable recorder handle. Disabled handles (the default)
+/// share nothing and record nothing; enabled handles share one registry
+/// plus one event ring across every clone, so the engine, the service
+/// host, the coordinator and the exporters all see the same state.
+#[derive(Clone, Default)]
+pub struct Telemetry {
+    inner: Option<Arc<Inner>>,
+}
+
+impl Telemetry {
+    /// The no-op handle: every recording call is a single branch.
+    pub fn disabled() -> Telemetry {
+        Telemetry { inner: None }
+    }
+
+    /// An enabled handle retaining the last `event_capacity` events.
+    pub fn with_capacity(event_capacity: usize) -> Telemetry {
+        let inner = Inner {
+            metrics: Metrics::default(),
+            events: Mutex::new(EventRing::new(event_capacity)),
+        };
+        Telemetry { inner: Some(Arc::new(inner)) }
+    }
+
+    /// Whether this handle records anything.
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// The shared registry, when enabled.
+    pub fn metrics(&self) -> Option<&Metrics> {
+        self.inner.as_deref().map(|i| &i.metrics)
+    }
+
+    /// Append an event to the ring (drops the oldest when full).
+    pub fn record(&self, kind: EventKind, round: u64, value: f64) {
+        if let Some(inner) = self.inner.as_deref() {
+            let mut ring = inner.events.lock().unwrap();
+            ring.push(Event { kind, round, value });
+        }
+    }
+
+    /// Retained events, oldest first (export path; allocates).
+    pub fn events(&self) -> Vec<Event> {
+        match self.inner.as_deref() {
+            Some(inner) => inner.events.lock().unwrap().snapshot(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Begin a span: reads `Instant::now` only when enabled, so the
+    /// disabled path performs no syscall.
+    pub fn span_start(&self) -> Option<Instant> {
+        self.inner.as_ref().map(|_| Instant::now())
+    }
+
+    /// End a span started by [`Telemetry::span_start`]: feeds the phase
+    /// histogram, the last-value gauge and the event ring.
+    pub fn span_end(&self, phase: Phase, start: Option<Instant>, round: u64) {
+        if let (Some(inner), Some(t0)) = (self.inner.as_deref(), start) {
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            inner.metrics.phase_ms[phase as usize].observe(ms);
+            inner.metrics.phase_ms_last[phase as usize].set(ms);
+            let mut ring = inner.events.lock().unwrap();
+            ring.push(Event { kind: EventKind::PhaseEnd(phase), round, value: ms });
+        }
+    }
+
+    /// Record the start of round `round` with noise scale `sigma`.
+    pub fn round_begin(&self, round: u64, sigma: f32) {
+        if let Some(inner) = self.inner.as_deref() {
+            inner.metrics.sigma.set(sigma as f64);
+            let mut ring = inner.events.lock().unwrap();
+            ring.push(Event { kind: EventKind::RoundBegin, round, value: sigma as f64 });
+        }
+    }
+
+    /// Record the completion of round `round` (`ms` from the engine's
+    /// round stopwatch; under a fixed clock this is the pinned value).
+    pub fn round_end(&self, round: u64, arrived: u64, selected: u64, ms: f64) {
+        if let Some(inner) = self.inner.as_deref() {
+            let m = &inner.metrics;
+            m.rounds_total.inc();
+            m.round_current.set(round as f64);
+            m.arrived_total.add(arrived);
+            m.selected_total.add(selected);
+            m.arrived_last.set(arrived as f64);
+            m.selected_last.set(selected as f64);
+            m.round_ms.observe(ms);
+            let mut ring = inner.events.lock().unwrap();
+            ring.push(Event { kind: EventKind::RoundEnd, round, value: arrived as f64 });
+        }
+    }
+
+    /// Record an evaluation of the global model.
+    pub fn observe_eval(&self, round: u64, objective: f64) {
+        if let Some(inner) = self.inner.as_deref() {
+            inner.metrics.objective.set(objective);
+            let mut ring = inner.events.lock().unwrap();
+            ring.push(Event { kind: EventKind::Eval, round, value: objective });
+        }
+    }
+
+    /// Account uplink bits (exact, same numbers as `RoundRecord`).
+    pub fn add_bits_up(&self, bits: u64) {
+        if let Some(inner) = self.inner.as_deref() {
+            inner.metrics.bits_up_total.add(bits);
+        }
+    }
+
+    /// Account downlink bits (exact, same numbers as `RoundRecord`).
+    pub fn add_bits_down(&self, bits: u64) {
+        if let Some(inner) = self.inner.as_deref() {
+            inner.metrics.bits_down_total.add(bits);
+        }
+    }
+
+    /// Count one remote slot fold (`RoundEngine::fold_remote_slot`).
+    pub fn count_fold(&self) {
+        if let Some(inner) = self.inner.as_deref() {
+            inner.metrics.folds_total.inc();
+        }
+    }
+
+    /// Count `n` client local-update tasks run in-process.
+    pub fn count_client_updates(&self, n: u64) {
+        if let Some(inner) = self.inner.as_deref() {
+            inner.metrics.client_updates_total.add(n);
+        }
+    }
+
+    /// Record a coordinator state transition: bumps the per-reply-code
+    /// counter and appends to the event ring.
+    pub fn coord_event(&self, kind: EventKind, round: u64, value: f64) {
+        if let Some(inner) = self.inner.as_deref() {
+            if let Some(idx) = registry::coord_index(kind) {
+                inner.metrics.coord[idx].inc();
+            }
+            let mut ring = inner.events.lock().unwrap();
+            ring.push(Event { kind, round, value });
+        }
+    }
+
+    /// Most recent duration of `phase` in ms (0.0 when disabled or not
+    /// yet observed). Feeds the JSONL telemetry extension.
+    pub fn phase_ms_last(&self, phase: Phase) -> f64 {
+        match self.inner.as_deref() {
+            Some(inner) => inner.metrics.phase_ms_last[phase as usize].get(),
+            None => 0.0,
+        }
+    }
+
+    /// Prometheus exposition text of the registry (empty when disabled).
+    pub fn export_prometheus(&self) -> String {
+        match self.metrics() {
+            Some(m) => prometheus::encode(m),
+            None => String::new(),
+        }
+    }
+
+    /// JSON snapshot of the registry ([`Json::Null`] when disabled).
+    pub fn export_json(&self) -> Json {
+        match self.metrics() {
+            Some(m) => m.to_json(),
+            None => Json::Null,
+        }
+    }
+}
+
+impl std::fmt::Debug for Telemetry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Telemetry").field("enabled", &self.is_enabled()).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_handle_records_nothing() {
+        let t = Telemetry::disabled();
+        assert!(!t.is_enabled());
+        assert!(t.span_start().is_none());
+        t.round_begin(0, 1.0);
+        t.round_end(0, 4, 4, 1.0);
+        t.coord_event(EventKind::Rendezvous, 0, 1.0);
+        assert!(t.events().is_empty());
+        assert!(t.metrics().is_none());
+        assert_eq!(t.export_prometheus(), "");
+        assert_eq!(t.export_json(), Json::Null);
+        assert_eq!(t.phase_ms_last(Phase::Eval), 0.0);
+    }
+
+    #[test]
+    fn clones_share_one_registry() {
+        let t = Telemetry::with_capacity(16);
+        let u = t.clone();
+        t.round_end(0, 3, 4, 1.0);
+        u.round_end(1, 2, 4, 1.0);
+        let m = t.metrics().unwrap();
+        assert_eq!(m.rounds_total.get(), 2);
+        assert_eq!(m.arrived_total.get(), 5);
+        assert_eq!(m.round_current.get(), 1.0);
+        assert_eq!(u.events().len(), 2);
+    }
+
+    #[test]
+    fn spans_feed_histogram_gauge_and_ring() {
+        let t = Telemetry::with_capacity(8);
+        let s = t.span_start();
+        assert!(s.is_some());
+        t.span_end(Phase::ServerStep, s, 7);
+        let m = t.metrics().unwrap();
+        assert_eq!(m.phase_ms[Phase::ServerStep as usize].snapshot().count, 1);
+        assert!(t.phase_ms_last(Phase::ServerStep) >= 0.0);
+        let ev = t.events();
+        assert_eq!(ev.len(), 1);
+        assert_eq!(ev[0].kind, EventKind::PhaseEnd(Phase::ServerStep));
+        assert_eq!(ev[0].round, 7);
+    }
+
+    #[test]
+    fn coord_events_hit_the_reply_code_counters() {
+        let t = Telemetry::with_capacity(8);
+        t.coord_event(EventKind::SubmitOk, 2, 0.0);
+        t.coord_event(EventKind::SubmitOk, 2, 1.0);
+        t.coord_event(EventKind::SubmitStale, 3, 0.0);
+        let m = t.metrics().unwrap();
+        let ok = registry::coord_index(EventKind::SubmitOk).unwrap();
+        let stale = registry::coord_index(EventKind::SubmitStale).unwrap();
+        assert_eq!(m.coord[ok].get(), 2);
+        assert_eq!(m.coord[stale].get(), 1);
+        let text = t.export_prometheus();
+        assert!(text.contains("zsfa_coord_replies_total{code=\"submit_ok\"} 2"));
+    }
+
+    #[test]
+    fn eval_and_bits_land_in_the_registry() {
+        let t = Telemetry::with_capacity(8);
+        t.observe_eval(5, 0.25);
+        t.add_bits_up(100);
+        t.add_bits_down(64);
+        let m = t.metrics().unwrap();
+        assert_eq!(m.objective.get(), 0.25);
+        assert_eq!(m.bits_up_total.get(), 100);
+        assert_eq!(m.bits_down_total.get(), 64);
+    }
+}

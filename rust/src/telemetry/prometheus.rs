@@ -1,0 +1,184 @@
+//! Prometheus text-format (version 0.0.4) encoder for the metrics
+//! registry. Served by `service::transport::TcpServer` at `GET /metrics`
+//! and dumpable via `zsfa run/serve --dump-metrics`.
+
+use std::fmt::Write;
+
+use super::event::Phase;
+use super::registry::{Metrics, COORD_KINDS, MS_BUCKET_BOUNDS, MS_BUCKETS};
+
+fn family(out: &mut String, name: &str, help: &str, kind: &str) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+}
+
+fn fnum(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v.is_infinite() {
+        if v > 0.0 { "+Inf".to_string() } else { "-Inf".to_string() }
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Encode the full registry as Prometheus exposition text. Every family
+/// is always present (at zero before first update), so scrapers and the
+/// `metrics-smoke` CI assertions see a stable family set.
+pub fn encode(m: &Metrics) -> String {
+    let mut out = String::with_capacity(4096);
+
+    family(&mut out, "zsfa_rounds_total", "Completed training rounds.", "counter");
+    let _ = writeln!(out, "zsfa_rounds_total {}", m.rounds_total.get());
+    family(&mut out, "zsfa_round_current", "Round index most recently completed.", "gauge");
+    let _ = writeln!(out, "zsfa_round_current {}", fnum(m.round_current.get()));
+    family(&mut out, "zsfa_objective", "Objective at the most recent evaluation.", "gauge");
+    let _ = writeln!(out, "zsfa_objective {}", fnum(m.objective.get()));
+    family(&mut out, "zsfa_sigma", "Noise scale of the most recent round.", "gauge");
+    let _ = writeln!(out, "zsfa_sigma {}", fnum(m.sigma.get()));
+    family(&mut out, "zsfa_bits_up_total", "Exact uplink bits accounted.", "counter");
+    let _ = writeln!(out, "zsfa_bits_up_total {}", m.bits_up_total.get());
+    family(&mut out, "zsfa_bits_down_total", "Exact downlink bits accounted.", "counter");
+    let _ = writeln!(out, "zsfa_bits_down_total {}", m.bits_down_total.get());
+    family(
+        &mut out,
+        "zsfa_clients_arrived_total",
+        "Participants whose reports arrived, summed over rounds.",
+        "counter",
+    );
+    let _ = writeln!(out, "zsfa_clients_arrived_total {}", m.arrived_total.get());
+    family(
+        &mut out,
+        "zsfa_clients_selected_total",
+        "Participants selected, summed over rounds.",
+        "counter",
+    );
+    let _ = writeln!(out, "zsfa_clients_selected_total {}", m.selected_total.get());
+    family(
+        &mut out,
+        "zsfa_clients_arrived",
+        "Arrived participants in the most recent round.",
+        "gauge",
+    );
+    let _ = writeln!(out, "zsfa_clients_arrived {}", fnum(m.arrived_last.get()));
+    family(
+        &mut out,
+        "zsfa_clients_selected",
+        "Selected participants in the most recent round.",
+        "gauge",
+    );
+    let _ = writeln!(out, "zsfa_clients_selected {}", fnum(m.selected_last.get()));
+    family(&mut out, "zsfa_folds_total", "Remote slot folds applied.", "counter");
+    let _ = writeln!(out, "zsfa_folds_total {}", m.folds_total.get());
+    family(
+        &mut out,
+        "zsfa_client_updates_total",
+        "Client local-update tasks executed in-process.",
+        "counter",
+    );
+    let _ = writeln!(out, "zsfa_client_updates_total {}", m.client_updates_total.get());
+
+    family(
+        &mut out,
+        "zsfa_coord_replies_total",
+        "Coordinator protocol events by reply code.",
+        "counter",
+    );
+    for (kind, c) in COORD_KINDS.iter().zip(&m.coord) {
+        let _ = writeln!(out, "zsfa_coord_replies_total{{code=\"{}\"}} {}", kind.label(), c.get());
+    }
+
+    family(&mut out, "zsfa_phase_ms", "Per-phase round-stage duration (ms).", "histogram");
+    for p in Phase::ALL {
+        histogram(&mut out, "zsfa_phase_ms", Some(("phase", p.label())), &m.phase_ms[p as usize]);
+    }
+    family(&mut out, "zsfa_round_ms", "Full-round duration (ms).", "histogram");
+    histogram(&mut out, "zsfa_round_ms", None, &m.round_ms);
+    out
+}
+
+fn histogram(
+    out: &mut String,
+    name: &str,
+    label: Option<(&str, &str)>,
+    h: &super::registry::Histogram,
+) {
+    let snap = h.snapshot();
+    let sep = |extra: &str| match label {
+        Some((k, v)) if extra.is_empty() => format!("{{{k}=\"{v}\"}}"),
+        Some((k, v)) => format!("{{{k}=\"{v}\",{extra}}}"),
+        None if extra.is_empty() => String::new(),
+        None => format!("{{{extra}}}"),
+    };
+    for (i, cum) in snap.cumulative.iter().enumerate() {
+        let le = if i + 1 == MS_BUCKETS {
+            "+Inf".to_string()
+        } else {
+            fnum(MS_BUCKET_BOUNDS[i])
+        };
+        let _ = writeln!(out, "{name}_bucket{} {cum}", sep(&format!("le=\"{le}\"")));
+    }
+    let _ = writeln!(out, "{name}_sum{} {}", sep(""), fnum(snap.sum));
+    let _ = writeln!(out, "{name}_count{} {}", sep(""), snap.count);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_required_families_present_even_at_zero() {
+        let text = encode(&Metrics::default());
+        for fam in [
+            "zsfa_rounds_total",
+            "zsfa_round_current",
+            "zsfa_objective",
+            "zsfa_sigma",
+            "zsfa_bits_up_total",
+            "zsfa_bits_down_total",
+            "zsfa_clients_arrived_total",
+            "zsfa_clients_selected_total",
+            "zsfa_coord_replies_total",
+            "zsfa_phase_ms",
+            "zsfa_round_ms",
+        ] {
+            assert!(text.contains(&format!("# TYPE {fam} ")), "missing family {fam}");
+        }
+        // One sample line per coordinator reply code.
+        assert!(text.contains("zsfa_coord_replies_total{code=\"rendezvous\"} 0"));
+        assert!(text.contains("zsfa_coord_replies_total{code=\"submit_stale\"} 0"));
+    }
+
+    #[test]
+    fn counter_values_appear_in_samples() {
+        let m = Metrics::default();
+        m.rounds_total.add(12);
+        m.bits_up_total.add(4000);
+        m.sigma.set(3.5);
+        let text = encode(&m);
+        assert!(text.contains("zsfa_rounds_total 12\n"));
+        assert!(text.contains("zsfa_bits_up_total 4000\n"));
+        assert!(text.contains("zsfa_sigma 3.5\n"));
+    }
+
+    #[test]
+    fn histogram_lines_carry_labels_and_inf_bucket() {
+        let m = Metrics::default();
+        m.phase_ms[Phase::Fold as usize].observe(0.1);
+        let text = encode(&m);
+        assert!(text.contains("zsfa_phase_ms_bucket{phase=\"fold\",le=\"0.25\"} 1"));
+        assert!(text.contains("zsfa_phase_ms_bucket{phase=\"fold\",le=\"+Inf\"} 1"));
+        assert!(text.contains("zsfa_phase_ms_count{phase=\"fold\"} 1"));
+        assert!(text.contains("zsfa_phase_ms_sum{phase=\"fold\"} 0.1"));
+        assert!(text.contains("zsfa_round_ms_bucket{le=\"+Inf\"} 0"));
+        assert!(text.contains("zsfa_round_ms_count 0"));
+    }
+
+    #[test]
+    fn non_finite_gauges_render_prometheus_style() {
+        assert_eq!(fnum(f64::INFINITY), "+Inf");
+        assert_eq!(fnum(f64::NEG_INFINITY), "-Inf");
+        assert_eq!(fnum(f64::NAN), "NaN");
+        assert_eq!(fnum(0.25), "0.25");
+    }
+}

@@ -1,0 +1,308 @@
+//! The metrics registry: lock-free counters, gauges and fixed-bucket
+//! histograms with a fixed field layout.
+//!
+//! The registry is a plain struct of atomics rather than a name→metric
+//! map: every cell exists from construction, updates are single atomic
+//! ops, and nothing allocates on the update path (the PR 5 steady-state
+//! allocation budget covers telemetry-enabled runs too). Exporters
+//! ([`super::prometheus`] and [`Metrics::to_json`]) enumerate the fields.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::event::{EventKind, Phase};
+use crate::util::json::Json;
+
+/// Monotone event count.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Add `v` occurrences.
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Add one occurrence.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins instantaneous value (stored as `f64` bits).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    /// Overwrite the value.
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current value (0.0 until first set).
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Upper bounds (ms) of the histogram buckets; a final +Inf bucket is
+/// implicit. Spans sub-50 µs analytic rounds through multi-second
+/// networked collect windows.
+pub const MS_BUCKET_BOUNDS: [f64; 7] = [0.05, 0.25, 1.0, 5.0, 25.0, 250.0, 2500.0];
+
+/// Bucket count including the implicit +Inf bucket.
+pub const MS_BUCKETS: usize = MS_BUCKET_BOUNDS.len() + 1;
+
+/// Fixed-bucket millisecond histogram (bounds: [`MS_BUCKET_BOUNDS`]).
+#[derive(Debug, Default)]
+pub struct Histogram {
+    buckets: [AtomicU64; MS_BUCKETS],
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+}
+
+/// Point-in-time copy of a [`Histogram`] for export.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistogramSnapshot {
+    /// Cumulative counts per bucket (Prometheus `le` semantics); the last
+    /// entry (+Inf) equals `count`.
+    pub cumulative: [u64; MS_BUCKETS],
+    /// Total observations.
+    pub count: u64,
+    /// Sum of observed values (ms).
+    pub sum: f64,
+}
+
+fn fetch_add_f64(cell: &AtomicU64, v: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + v).to_bits();
+        match cell.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+impl Histogram {
+    /// Record one observation of `ms` milliseconds.
+    pub fn observe(&self, ms: f64) {
+        let idx = MS_BUCKET_BOUNDS.iter().position(|&b| ms <= b).unwrap_or(MS_BUCKETS - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        fetch_add_f64(&self.sum_bits, ms);
+    }
+
+    /// Copy out cumulative buckets, count and sum.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let mut cumulative = [0u64; MS_BUCKETS];
+        let mut acc = 0u64;
+        for (out, b) in cumulative.iter_mut().zip(&self.buckets) {
+            acc += b.load(Ordering::Relaxed);
+            *out = acc;
+        }
+        HistogramSnapshot {
+            cumulative,
+            count: self.count.load(Ordering::Relaxed),
+            sum: f64::from_bits(self.sum_bits.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+/// Coordinator protocol events carried as per-reply-code counters, in
+/// export order. Indexed via [`coord_index`].
+pub const COORD_KINDS: [EventKind; 11] = [
+    EventKind::Rendezvous,
+    EventKind::RendezvousDeferred,
+    EventKind::Heartbeat,
+    EventKind::PeerExpired,
+    EventKind::PullWork,
+    EventKind::PullNoWork,
+    EventKind::SubmitOk,
+    EventKind::SubmitStale,
+    EventKind::SubmitDuplicate,
+    EventKind::SubmitMalformed,
+    EventKind::SubmitUnknown,
+];
+
+/// Index of a coordinator event kind in [`Metrics::coord`], or `None`
+/// for engine-side kinds.
+pub fn coord_index(kind: EventKind) -> Option<usize> {
+    COORD_KINDS.iter().position(|&k| k == kind)
+}
+
+/// The full registry. One instance per [`super::Telemetry`] handle;
+/// updated from the round engine, the service host and the coordinator.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Completed rounds (across all runs of a session).
+    pub rounds_total: Counter,
+    /// Round index most recently completed.
+    pub round_current: Gauge,
+    /// Objective at the most recent evaluation.
+    pub objective: Gauge,
+    /// Noise scale σ of the most recent round.
+    pub sigma: Gauge,
+    /// Exact uplink bits accounted so far.
+    pub bits_up_total: Counter,
+    /// Exact downlink bits accounted so far.
+    pub bits_down_total: Counter,
+    /// Participants whose reports arrived, summed over rounds.
+    pub arrived_total: Counter,
+    /// Participants selected, summed over rounds.
+    pub selected_total: Counter,
+    /// Arrived participants in the most recent round.
+    pub arrived_last: Gauge,
+    /// Selected participants in the most recent round.
+    pub selected_last: Gauge,
+    /// Remote slot folds (`fold_remote_slot` calls).
+    pub folds_total: Counter,
+    /// Client local-update tasks executed by the in-process engine.
+    pub client_updates_total: Counter,
+    /// Per-reply-code coordinator counters, indexed per [`COORD_KINDS`].
+    pub coord: [Counter; COORD_KINDS.len()],
+    /// Per-phase duration histograms, indexed by `Phase as usize`.
+    pub phase_ms: [Histogram; Phase::COUNT],
+    /// Most recent per-phase duration, indexed by `Phase as usize`.
+    pub phase_ms_last: [Gauge; Phase::COUNT],
+    /// Full-round duration histogram.
+    pub round_ms: Histogram,
+}
+
+impl Metrics {
+    /// Structured snapshot (the `/metrics.json` endpoint and the watcher
+    /// payload). Keys are stable; see the pinned test below.
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        let num = Json::Num;
+        let cnt = |c: &Counter| Json::Num(c.get() as f64);
+        m.insert("rounds_total".into(), cnt(&self.rounds_total));
+        m.insert("round".into(), num(self.round_current.get()));
+        m.insert("objective".into(), num(self.objective.get()));
+        m.insert("sigma".into(), num(self.sigma.get()));
+        m.insert("bits_up_total".into(), cnt(&self.bits_up_total));
+        m.insert("bits_down_total".into(), cnt(&self.bits_down_total));
+        m.insert("arrived_total".into(), cnt(&self.arrived_total));
+        m.insert("selected_total".into(), cnt(&self.selected_total));
+        m.insert("arrived_last".into(), num(self.arrived_last.get()));
+        m.insert("selected_last".into(), num(self.selected_last.get()));
+        m.insert("folds_total".into(), cnt(&self.folds_total));
+        m.insert("client_updates_total".into(), cnt(&self.client_updates_total));
+        let mut coord = std::collections::BTreeMap::new();
+        for (kind, c) in COORD_KINDS.iter().zip(&self.coord) {
+            coord.insert(kind.label().to_string(), cnt(c));
+        }
+        m.insert("coord".into(), Json::Obj(coord));
+        let mut phases = std::collections::BTreeMap::new();
+        for p in Phase::ALL {
+            phases.insert(p.label().to_string(), num(self.phase_ms_last[p as usize].get()));
+        }
+        m.insert("phase_ms_last".into(), Json::Obj(phases));
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::default();
+        assert_eq!(g.get(), 0.0);
+        g.set(-2.5);
+        assert_eq!(g.get(), -2.5);
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative() {
+        let h = Histogram::default();
+        h.observe(0.01); // bucket 0 (≤ 0.05)
+        h.observe(0.2); // bucket 1 (≤ 0.25)
+        h.observe(3.0); // bucket 3 (≤ 5)
+        h.observe(1e6); // +Inf bucket
+        let s = h.snapshot();
+        assert_eq!(s.count, 4);
+        assert!((s.sum - 1_000_003.21).abs() < 1e-6);
+        assert_eq!(s.cumulative[0], 1);
+        assert_eq!(s.cumulative[1], 2);
+        assert_eq!(s.cumulative[2], 2);
+        assert_eq!(s.cumulative[3], 3);
+        assert_eq!(s.cumulative[MS_BUCKETS - 1], 4);
+        // Monotone, and +Inf equals count.
+        for w in s.cumulative.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+
+    #[test]
+    fn boundary_value_lands_in_lower_bucket() {
+        let h = Histogram::default();
+        h.observe(0.05);
+        assert_eq!(h.snapshot().cumulative[0], 1);
+    }
+
+    #[test]
+    fn coord_index_covers_exactly_the_protocol_kinds() {
+        assert_eq!(coord_index(EventKind::Rendezvous), Some(0));
+        assert_eq!(coord_index(EventKind::SubmitUnknown), Some(COORD_KINDS.len() - 1));
+        assert_eq!(coord_index(EventKind::RoundEnd), None);
+        assert_eq!(coord_index(EventKind::PhaseEnd(Phase::Fold)), None);
+    }
+
+    #[test]
+    fn json_snapshot_has_stable_keys() {
+        let m = Metrics::default();
+        m.rounds_total.add(3);
+        m.sigma.set(5.0);
+        let j = m.to_json().to_string_compact();
+        for key in [
+            "\"rounds_total\":3",
+            "\"sigma\":5",
+            "\"round\":0",
+            "\"objective\":0",
+            "\"bits_up_total\":0",
+            "\"bits_down_total\":0",
+            "\"arrived_last\":0",
+            "\"selected_last\":0",
+            "\"arrived_total\":0",
+            "\"selected_total\":0",
+            "\"folds_total\":0",
+            "\"client_updates_total\":0",
+            "\"coord\":{",
+            "\"rendezvous\":0",
+            "\"submit_duplicate\":0",
+            "\"phase_ms_last\":{",
+            "\"server_step\":0",
+        ] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
+    }
+
+    #[test]
+    fn concurrent_updates_do_not_lose_counts() {
+        let m = Metrics::default();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..1000 {
+                        m.rounds_total.inc();
+                        m.round_ms.observe(1.0);
+                    }
+                });
+            }
+        });
+        assert_eq!(m.rounds_total.get(), 4000);
+        let snap = m.round_ms.snapshot();
+        assert_eq!(snap.count, 4000);
+        assert!((snap.sum - 4000.0).abs() < 1e-9);
+    }
+}

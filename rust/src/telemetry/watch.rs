@@ -1,0 +1,373 @@
+//! The `zsfa watch` live dashboard and the `zsfa metrics` scraper.
+//!
+//! Two sources, same renderer: poll a serving coordinator's
+//! `GET /metrics.json` endpoint (`--addr`), or tail the JSONL event log a
+//! run writes with `--jsonl` (`api::observer::JsonlSink`). Rendering is a
+//! pure function of a [`Dash`] snapshot so it is unit-testable without a
+//! terminal; the loop just clears the screen and reprints.
+
+use std::io::{Read, Write as IoWrite};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use super::event::Phase;
+use crate::util::json::Json;
+
+/// Everything `zsfa watch` needs from the CLI.
+#[derive(Debug, Clone, Default)]
+pub struct WatchOpts {
+    /// Coordinator metrics endpoint (`host:port`) to poll.
+    pub addr: Option<String>,
+    /// JSONL event log to tail (alternative to `addr`).
+    pub jsonl: Option<String>,
+    /// Refresh interval between frames.
+    pub interval_ms: u64,
+    /// Render a single frame (no screen clearing) and exit — used by
+    /// `make metrics-smoke` and tests.
+    pub once: bool,
+}
+
+/// One dashboard snapshot (the renderer's whole input).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Dash {
+    /// Where the data came from (shown in the header).
+    pub source: String,
+    /// Experiment name (JSONL source only).
+    pub experiment: String,
+    /// Series label of the most recent event (JSONL source only).
+    pub series: String,
+    /// Most recently completed round.
+    pub round: u64,
+    /// Noise scale σ of the most recent round.
+    pub sigma: f64,
+    /// Arrived participants in the most recent round.
+    pub arrived: u64,
+    /// Selected participants in the most recent round.
+    pub selected: u64,
+    /// Cumulative uplink bits.
+    pub bits_up: u64,
+    /// Cumulative downlink bits.
+    pub bits_down: u64,
+    /// Objective history, oldest first (sparkline input).
+    pub objective: Vec<f64>,
+    /// Most recent per-phase durations (ms), indexed by `Phase as usize`.
+    pub phase_ms: [f64; Phase::COUNT],
+    /// A connection / parse problem to surface instead of stale numbers.
+    pub note: Option<String>,
+}
+
+/// Sparkline over `vals` (oldest first), at most `width` cells, linear
+/// scale between the window's min and max. Non-finite values render as a
+/// space.
+pub fn sparkline(vals: &[f64], width: usize) -> String {
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let tail: &[f64] = if vals.len() > width { &vals[vals.len() - width..] } else { vals };
+    let finite: Vec<f64> = tail.iter().copied().filter(|v| v.is_finite()).collect();
+    if finite.is_empty() {
+        return String::new();
+    }
+    let lo = finite.iter().copied().fold(f64::INFINITY, f64::min);
+    let hi = finite.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let span = hi - lo;
+    tail.iter()
+        .map(|&v| {
+            if !v.is_finite() {
+                ' '
+            } else if span <= 0.0 {
+                BARS[0]
+            } else {
+                let lvl = ((v - lo) / span * 7.0).round() as usize;
+                BARS[lvl.min(7)]
+            }
+        })
+        .collect()
+}
+
+fn human_bits(bits: u64) -> String {
+    const UNITS: [&str; 5] = ["b", "Kb", "Mb", "Gb", "Tb"];
+    let mut v = bits as f64;
+    let mut u = 0;
+    while v >= 1000.0 && u + 1 < UNITS.len() {
+        v /= 1000.0;
+        u += 1;
+    }
+    if u == 0 { format!("{bits} b") } else { format!("{v:.1} {}", UNITS[u]) }
+}
+
+/// Render one dashboard frame (no ANSI control codes — the loop adds the
+/// screen clear, `--once` prints it as-is).
+pub fn render(d: &Dash) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("zsfa watch · {}\n", d.source));
+    if !d.experiment.is_empty() {
+        out.push_str(&format!("experiment {}", d.experiment));
+        if !d.series.is_empty() {
+            out.push_str(&format!(" · series {}", d.series));
+        }
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "round {:<6} σ {:<10.4} participation {}/{}\n",
+        d.round, d.sigma, d.arrived, d.selected
+    ));
+    let obj = d.objective.last().copied().unwrap_or(f64::NAN);
+    out.push_str(&format!("objective {obj:<14.6e} {}\n", sparkline(&d.objective, 48)));
+    out.push_str(&format!(
+        "bits up {} · down {}\n",
+        human_bits(d.bits_up),
+        human_bits(d.bits_down)
+    ));
+    out.push_str("phase ms ");
+    for p in Phase::ALL {
+        out.push_str(&format!(" {} {:.3}", p.label(), d.phase_ms[p as usize]));
+    }
+    out.push('\n');
+    if let Some(note) = &d.note {
+        out.push_str(&format!("[{note}]\n"));
+    }
+    out
+}
+
+/// Minimal HTTP/1.0 GET against `addr` (`host:port`), returning the
+/// response body. Used by `zsfa metrics`, `zsfa watch --addr` and the
+/// transport tests; keeps the crate dependency-free (no curl).
+pub fn http_get(addr: &str, path: &str, timeout_ms: u64) -> std::io::Result<String> {
+    let timeout = Duration::from_millis(timeout_ms.max(1));
+    let sock = addr
+        .parse::<std::net::SocketAddr>()
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidInput, e.to_string()))?;
+    let mut stream = TcpStream::connect_timeout(&sock, timeout)?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    write!(stream, "GET {path} HTTP/1.0\r\nHost: {addr}\r\nConnection: close\r\n\r\n")?;
+    stream.flush()?;
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw)?;
+    let (head, body) = raw
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "no HTTP header"))?;
+    let status = head.lines().next().unwrap_or("");
+    if !status.contains(" 200 ") {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("endpoint replied: {status}"),
+        ));
+    }
+    Ok(body.to_string())
+}
+
+/// Fold a `/metrics.json` registry snapshot into the dashboard,
+/// appending to the objective history when the round advanced.
+pub fn apply_metrics_json(d: &mut Dash, j: &Json) {
+    let num = |key: &str| j.get(key).and_then(Json::as_f64).unwrap_or(0.0);
+    let prev_round = d.round;
+    d.round = num("round") as u64;
+    d.sigma = num("sigma");
+    d.arrived = num("arrived_last") as u64;
+    d.selected = num("selected_last") as u64;
+    d.bits_up = num("bits_up_total") as u64;
+    d.bits_down = num("bits_down_total") as u64;
+    if let Some(Json::Obj(ph)) = j.get("phase_ms_last") {
+        for p in Phase::ALL {
+            if let Some(v) = ph.get(p.label()).and_then(Json::as_f64) {
+                d.phase_ms[p as usize] = v;
+            }
+        }
+    }
+    let obj = num("objective");
+    if d.objective.is_empty() || d.round != prev_round {
+        d.objective.push(obj);
+    } else if let Some(last) = d.objective.last_mut() {
+        *last = obj;
+    }
+    if d.objective.len() > 512 {
+        let drop = d.objective.len() - 512;
+        d.objective.drain(..drop);
+    }
+    d.note = None;
+}
+
+/// Fold one JSONL event (see `api::observer::JsonlSink`) into the
+/// dashboard. Non-round events only refresh the header.
+pub fn apply_jsonl_event(d: &mut Dash, j: &Json) {
+    if let Some(e) = j.get("experiment").and_then(Json::as_str) {
+        d.experiment = e.to_string();
+    }
+    if let Some(s) = j.get("series").and_then(Json::as_str) {
+        d.series = s.to_string();
+    }
+    if j.get("event").and_then(Json::as_str) != Some("round") {
+        return;
+    }
+    let num = |key: &str| j.get(key).and_then(Json::as_f64);
+    if let Some(r) = num("round") {
+        d.round = r as u64;
+    }
+    if let Some(s) = num("sigma") {
+        d.sigma = s;
+    }
+    if let Some(a) = num("arrived") {
+        d.arrived = a as u64;
+    }
+    if let Some(s) = num("selected") {
+        d.selected = s as u64;
+    }
+    if let Some(b) = num("bits_up") {
+        d.bits_up = b as u64;
+    }
+    if let Some(b) = num("bits_down") {
+        d.bits_down = b as u64;
+    }
+    if let Some(o) = num("objective") {
+        d.objective.push(o);
+    }
+    if let Some(Json::Obj(ph)) = j.get("phase_ms") {
+        for p in Phase::ALL {
+            if let Some(v) = ph.get(p.label()).and_then(Json::as_f64) {
+                d.phase_ms[p as usize] = v;
+            }
+        }
+    }
+}
+
+fn refresh(opts: &WatchOpts, d: &mut Dash) {
+    if let Some(addr) = &opts.addr {
+        d.source = format!("http://{addr}/metrics.json");
+        match http_get(addr, "/metrics.json", 2_000) {
+            Ok(body) => match Json::parse(&body) {
+                Ok(j) => apply_metrics_json(d, &j),
+                Err(e) => d.note = Some(format!("bad metrics payload: {e}")),
+            },
+            Err(e) => d.note = Some(format!("waiting for endpoint: {e}")),
+        }
+    } else if let Some(path) = &opts.jsonl {
+        d.source = path.clone();
+        // Re-read the whole log each frame: event logs are small and this
+        // keeps the tail logic trivially correct across truncation.
+        let mut fresh = Dash { source: d.source.clone(), ..Dash::default() };
+        match std::fs::read_to_string(path) {
+            Ok(text) => {
+                for line in text.lines().filter(|l| !l.trim().is_empty()) {
+                    if let Ok(j) = Json::parse(line) {
+                        apply_jsonl_event(&mut fresh, &j);
+                    }
+                }
+                *d = fresh;
+            }
+            Err(e) => d.note = Some(format!("waiting for {path}: {e}")),
+        }
+    }
+}
+
+/// Drive the dashboard until interrupted (or once, under
+/// [`WatchOpts::once`]). Returns an error only in `--once` mode when the
+/// source is unreachable; the interactive loop keeps retrying instead.
+pub fn run(opts: &WatchOpts) -> std::io::Result<()> {
+    let mut d = Dash::default();
+    loop {
+        refresh(opts, &mut d);
+        if opts.once {
+            if let Some(note) = &d.note {
+                return Err(std::io::Error::new(std::io::ErrorKind::TimedOut, note.clone()));
+            }
+            print!("{}", render(&d));
+            return Ok(());
+        }
+        print!("\x1b[2J\x1b[H{}", render(&d));
+        let _ = std::io::stdout().flush();
+        std::thread::sleep(Duration::from_millis(opts.interval_ms.max(100)));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparkline_scales_to_the_window() {
+        let s = sparkline(&[0.0, 1.0, 2.0, 3.0], 8);
+        assert_eq!(s.chars().count(), 4);
+        assert!(s.starts_with('▁'));
+        assert!(s.ends_with('█'));
+        // Constant series renders flat, not empty.
+        assert_eq!(sparkline(&[5.0, 5.0, 5.0], 8), "▁▁▁");
+        // Window truncation keeps the newest values.
+        let long: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        assert_eq!(sparkline(&long, 10).chars().count(), 10);
+        assert_eq!(sparkline(&[], 10), "");
+        assert_eq!(sparkline(&[f64::NAN], 10), "");
+    }
+
+    #[test]
+    fn render_contains_the_headline_numbers() {
+        let mut d = Dash {
+            source: "test".into(),
+            experiment: "fig1_d50".into(),
+            series: "1-SignSGD".into(),
+            round: 39,
+            sigma: 3.0,
+            arrived: 7,
+            selected: 8,
+            bits_up: 16_000,
+            bits_down: 1_600_000,
+            objective: vec![2.0, 1.0, 0.5],
+            ..Dash::default()
+        };
+        d.phase_ms[Phase::Clients as usize] = 0.125;
+        let frame = render(&d);
+        assert!(frame.contains("round 39"));
+        assert!(frame.contains("participation 7/8"));
+        assert!(frame.contains("fig1_d50"));
+        assert!(frame.contains("1-SignSGD"));
+        assert!(frame.contains("16.0 Kb"));
+        assert!(frame.contains("1.6 Mb"));
+        assert!(frame.contains("clients 0.125"));
+        assert!(frame.contains("5e-1") || frame.contains("5.000000e-1"));
+    }
+
+    #[test]
+    fn metrics_json_updates_and_round_history() {
+        let mut d = Dash::default();
+        let j = Json::parse(
+            "{\"round\":3,\"objective\":0.5,\"sigma\":2,\"arrived_last\":4,\
+             \"selected_last\":4,\"bits_up_total\":100,\"bits_down_total\":0,\
+             \"phase_ms_last\":{\"clients\":1.5,\"fold\":0.25,\"server_step\":0.1,\"eval\":0.2}}",
+        )
+        .unwrap();
+        apply_metrics_json(&mut d, &j);
+        assert_eq!(d.round, 3);
+        assert_eq!(d.objective, vec![0.5]);
+        assert_eq!(d.phase_ms[Phase::Fold as usize], 0.25);
+        // Same round: history length unchanged, value refreshed.
+        apply_metrics_json(&mut d, &j);
+        assert_eq!(d.objective, vec![0.5]);
+        // New round appends.
+        let j2 = Json::parse("{\"round\":4,\"objective\":0.25}").unwrap();
+        apply_metrics_json(&mut d, &j2);
+        assert_eq!(d.objective, vec![0.5, 0.25]);
+    }
+
+    #[test]
+    fn jsonl_round_events_accumulate_history() {
+        let mut d = Dash::default();
+        let lines = [
+            "{\"event\":\"round\",\"experiment\":\"e\",\"series\":\"s\",\"round\":0,\
+             \"objective\":2,\"sigma\":1,\"arrived\":8,\"bits_up\":400}",
+            "{\"event\":\"round\",\"experiment\":\"e\",\"series\":\"s\",\"round\":1,\
+             \"objective\":1,\"sigma\":1,\"arrived\":8,\"bits_up\":800,\"selected\":8}",
+            "{\"event\":\"run_end\",\"experiment\":\"e\",\"series\":\"s\",\"records\":2}",
+        ];
+        for l in lines {
+            apply_jsonl_event(&mut d, &Json::parse(l).unwrap());
+        }
+        assert_eq!(d.objective, vec![2.0, 1.0]);
+        assert_eq!(d.round, 1);
+        assert_eq!(d.selected, 8);
+        assert_eq!(d.experiment, "e");
+    }
+
+    #[test]
+    fn http_get_rejects_unparsable_addr() {
+        assert!(http_get("not-an-addr", "/metrics", 100).is_err());
+    }
+}

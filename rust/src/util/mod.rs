@@ -1,26 +1,9 @@
 //! Small shared utilities: a mini-JSON parser/writer (the vendor set has no
-//! serde), summary statistics, and a wall-clock timer.
+//! serde) and summary statistics.
+//!
+//! Round timing lives in [`crate::telemetry::clock`] — an injectable
+//! [`crate::telemetry::Clock`] rather than a raw `Instant` wrapper, so CI
+//! byte-diff smokes can pin a deterministic wall_ms.
 
 pub mod json;
 pub mod stats;
-
-use std::time::Instant;
-
-/// Simple scope timer for coarse profiling in drivers.
-pub struct Timer {
-    start: Instant,
-}
-
-impl Timer {
-    pub fn start() -> Self {
-        Timer { start: Instant::now() }
-    }
-
-    pub fn elapsed_secs(&self) -> f64 {
-        self.start.elapsed().as_secs_f64()
-    }
-
-    pub fn elapsed_ms(&self) -> f64 {
-        self.start.elapsed().as_secs_f64() * 1e3
-    }
-}

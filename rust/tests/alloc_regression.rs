@@ -20,6 +20,7 @@ use zsignfedavg::fl::server::ServerConfig;
 use zsignfedavg::fl::AlgorithmConfig;
 use zsignfedavg::problems::consensus::Consensus;
 use zsignfedavg::rng::ZParam;
+use zsignfedavg::telemetry::Telemetry;
 
 struct CountingAlloc;
 
@@ -107,4 +108,33 @@ fn steady_state_round_loop_has_no_per_client_allocation() {
             algo.name
         );
     }
+
+    // Telemetry-enabled variant, same budget: an enabled handle records
+    // spans, counters and ring events every round, but all of it lands in
+    // preallocated storage (atomics, fixed histogram buckets, the event
+    // ring built before warm-up) — enabling observability must not buy
+    // back per-round allocation.
+    let algo = AlgorithmConfig::z_signsgd(ZParam::Finite(1), 1.0).with_lrs(0.05, 1.0);
+    let cfg = ServerConfig {
+        rounds,
+        seed: 7,
+        eval_every: 4,
+        parallelism: 1,
+        ..Default::default()
+    };
+    let mut engine = RoundEngine::new(&algo, &cfg, d, n);
+    let tele = Telemetry::with_capacity(4096);
+    engine.set_telemetry(tele.clone());
+    let mut b1 = AnalyticBackend::new(Consensus::gaussian(n, d, 3));
+    engine.run(&mut b1);
+    let mut b2 = AnalyticBackend::new(Consensus::gaussian(n, d, 3));
+    let before = TOTAL.load(Ordering::Relaxed);
+    engine.run(&mut b2);
+    let grown = TOTAL.load(Ordering::Relaxed) - before;
+    assert!(
+        grown < budget,
+        "telemetry-enabled steady-state run allocated {grown} B (budget {budget} B)"
+    );
+    // And it actually observed both runs.
+    assert_eq!(tele.metrics().unwrap().rounds_total.get(), 2 * rounds as u64);
 }

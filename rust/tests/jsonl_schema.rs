@@ -1,0 +1,161 @@
+//! Pinned schema for the JSONL event stream (`api::observer::JsonlSink`).
+//!
+//! External consumers (`zsfa watch --jsonl`, dashboards, ad-hoc scripts)
+//! parse these lines, so the schema is a compatibility surface:
+//!
+//! * the golden fixture `tests/fixtures/events.jsonl` is written in the
+//!   exact compact form `util::json` emits (sorted keys, integers without
+//!   a decimal point) — every line must round-trip byte-for-byte;
+//! * the per-event key sets are pinned constants here; the fixture AND a
+//!   freshly generated stream must both match them;
+//! * the telemetry extension is strictly additive: with telemetry on, a
+//!   `round` line restricted to the base keys is byte-identical to the
+//!   telemetry-off line (observability never perturbs results).
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use zsignfedavg::api::{ExperimentSpec, JsonlSink, Session, WorkloadSpec};
+use zsignfedavg::fl::AlgorithmConfig;
+use zsignfedavg::telemetry::{Phase, Telemetry};
+use zsignfedavg::util::json::Json;
+
+/// Keys of every `round` event, telemetry on or off.
+const ROUND_KEYS: [&str; 11] = [
+    "accuracy",
+    "arrived",
+    "bits_up",
+    "event",
+    "experiment",
+    "objective",
+    "repeat",
+    "round",
+    "series",
+    "sigma",
+    "sim_time_s",
+];
+
+/// Extra `round` keys present exactly when telemetry is enabled.
+const ROUND_TELEMETRY_KEYS: [&str; 4] = ["bits_down", "phase_ms", "selected", "wall_ms"];
+
+const RUN_END_KEYS: [&str; 6] =
+    ["event", "experiment", "final_objective", "records", "repeat", "series"];
+
+const SERIES_END_KEYS: [&str; 5] =
+    ["event", "experiment", "final_objective_mean", "repeats", "series"];
+
+fn fixture() -> String {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/events.jsonl");
+    std::fs::read_to_string(path).expect("reading golden fixture")
+}
+
+fn keys(j: &Json) -> BTreeSet<&str> {
+    match j {
+        Json::Obj(m) => m.keys().map(|k| k.as_str()).collect(),
+        other => panic!("event line is not an object: {other:?}"),
+    }
+}
+
+fn key_set(names: &[&'static str]) -> BTreeSet<&'static str> {
+    names.iter().copied().collect()
+}
+
+fn event_kind(j: &Json) -> String {
+    j.get("event").and_then(Json::as_str).expect("event key").to_string()
+}
+
+#[test]
+fn golden_fixture_round_trips_byte_exactly() {
+    for (i, line) in fixture().lines().enumerate() {
+        let j = Json::parse(line).unwrap_or_else(|e| panic!("fixture line {i}: {e}"));
+        assert_eq!(j.to_string_compact(), line, "fixture line {i} is not in canonical form");
+    }
+}
+
+#[test]
+fn golden_fixture_pins_every_event_schema() {
+    let body = fixture();
+    let lines: Vec<Json> = body.lines().map(|l| Json::parse(l).unwrap()).collect();
+    assert_eq!(lines.len(), 4, "fixture covers base round, telemetry round, run_end, series_end");
+
+    assert_eq!(event_kind(&lines[0]), "round");
+    assert_eq!(keys(&lines[0]), key_set(&ROUND_KEYS));
+
+    assert_eq!(event_kind(&lines[1]), "round");
+    let mut extended = key_set(&ROUND_KEYS);
+    extended.extend(key_set(&ROUND_TELEMETRY_KEYS));
+    assert_eq!(keys(&lines[1]), extended);
+    let phase = lines[1].get("phase_ms").expect("telemetry round has phase_ms");
+    let want: BTreeSet<&str> = Phase::ALL.iter().map(|p| p.label()).collect();
+    assert_eq!(keys(phase), want, "phase_ms carries one entry per round phase");
+
+    assert_eq!(event_kind(&lines[2]), "run_end");
+    assert_eq!(keys(&lines[2]), key_set(&RUN_END_KEYS));
+
+    assert_eq!(event_kind(&lines[3]), "series_end");
+    assert_eq!(keys(&lines[3]), key_set(&SERIES_END_KEYS));
+}
+
+/// Strip the telemetry-only keys from a round event and re-serialize.
+fn project_to_base(j: &Json) -> String {
+    let Json::Obj(m) = j else { panic!("not an object") };
+    let base: std::collections::BTreeMap<String, Json> = m
+        .iter()
+        .filter(|(k, _)| !ROUND_TELEMETRY_KEYS.contains(&k.as_str()))
+        .map(|(k, v)| (k.clone(), v.clone()))
+        .collect();
+    Json::Obj(base).to_string_compact()
+}
+
+#[test]
+fn generated_stream_matches_the_pinned_schema_and_telemetry_is_additive() {
+    let root = std::env::temp_dir().join("zsfa_jsonl_schema");
+    std::fs::remove_dir_all(&root).ok();
+    let plain_path = root.join("plain.jsonl");
+    let tele_path = root.join("tele.jsonl");
+
+    let spec = ExperimentSpec::new("schema", WorkloadSpec::consensus(4, 8, 99))
+        .rounds(4)
+        .eval_every(2)
+        .series(AlgorithmConfig::gd().with_lrs(0.1, 1.0));
+
+    Session::new().with(JsonlSink::create(&plain_path).unwrap()).run(&spec).unwrap();
+    let tele = Telemetry::with_capacity(64);
+    Session::new()
+        .with(JsonlSink::create(&tele_path).unwrap().with_telemetry(tele.clone()))
+        .with_telemetry(tele)
+        .run(&spec)
+        .unwrap();
+
+    let plain = std::fs::read_to_string(&plain_path).unwrap();
+    let with_tele = std::fs::read_to_string(&tele_path).unwrap();
+    assert_eq!(plain.lines().count(), with_tele.lines().count());
+    assert!(plain.lines().count() >= 5, "3 rounds + run_end + series_end");
+
+    let mut extended = key_set(&ROUND_KEYS);
+    extended.extend(key_set(&ROUND_TELEMETRY_KEYS));
+    for (p_line, t_line) in plain.lines().zip(with_tele.lines()) {
+        let p = Json::parse(p_line).unwrap();
+        let t = Json::parse(t_line).unwrap();
+        match event_kind(&p).as_str() {
+            "round" => {
+                assert_eq!(keys(&p), key_set(&ROUND_KEYS), "{p_line}");
+                assert_eq!(keys(&t), extended, "{t_line}");
+                // The extension is additive: base projection is identical.
+                assert_eq!(project_to_base(&t), p_line);
+                let want: BTreeSet<&str> = Phase::ALL.iter().map(|ph| ph.label()).collect();
+                assert_eq!(keys(t.get("phase_ms").unwrap()), want);
+            }
+            "run_end" => {
+                assert_eq!(keys(&p), key_set(&RUN_END_KEYS));
+                assert_eq!(t_line, p_line, "run_end is telemetry-independent");
+            }
+            "series_end" => {
+                assert_eq!(keys(&p), key_set(&SERIES_END_KEYS));
+                assert_eq!(t_line, p_line, "series_end is telemetry-independent");
+            }
+            other => panic!("unexpected event {other:?}"),
+        }
+    }
+    std::fs::remove_dir_all(&root).ok();
+}
