@@ -3,11 +3,13 @@
 #   make build     release build of the coordinator (lib + zsfa binary)
 #   make test      full Rust test suite (tier-1 verify = build + test)
 #   make bench     run every registered micro/round bench
-#   make bench-smoke every registered bench with a tiny iteration budget
+#   make bench-smoke every registered bench with a tiny iteration budget,
+#                    run twice: default SIMD dispatch and ZSFA_SIMD=off
 #                    (catches bench rot; bench-compile alone doesn't execute)
 #   make bench-json  perf trajectory -> BENCH_compress.json (fused vs scalar
-#                    sign kernels), BENCH_aggregate.json (CSA vs scalar vote
-#                    add), BENCH_dense_reduce.json (streamed vs buffered)
+#                    sign kernels, A/B'd across SIMD backends),
+#                    BENCH_aggregate.json (CSA vs scalar vote add, ditto),
+#                    BENCH_dense_reduce.json (streamed vs buffered)
 #   make determinism parallelism-1 vs -8 scenario CSV byte-diff (what CI runs)
 #   make spec-smoke  `zsfa run` example spec vs equivalent fig1 driver CSV
 #                    byte-diff at parallelism 1 and 8 (what CI runs)
@@ -44,9 +46,13 @@ bench-build:
 
 # Execute every registered bench with a tiny iteration budget (release
 # mode). The timings are meaningless; the point is that the bench *code*
-# runs on every PR, which `cargo bench --no-run` cannot guarantee.
+# runs on every PR, which `cargo bench --no-run` cannot guarantee. Runs
+# twice — default dispatch and ZSFA_SIMD=off — so both the SIMD and the
+# scalar kernel paths execute (each run's in-bench exactness cross-checks
+# then pin every available backend against the scalar reference).
 bench-smoke:
 	$(CARGO) bench -- --smoke
+	ZSFA_SIMD=off $(CARGO) bench -- --smoke
 
 # Machine-readable perf trajectory at the repo root (CI uploads these as
 # artifacts): fused-vs-scalar compress throughput, CSA-vs-scalar vote
@@ -146,7 +152,8 @@ metrics-smoke: build
 	  wait $$srv && wait $$j1 && wait $$j2
 	@set -e; for fam in zsfa_rounds_total zsfa_round_current zsfa_objective zsfa_sigma \
 	  zsfa_bits_up_total zsfa_bits_down_total zsfa_clients_arrived_total \
-	  zsfa_clients_selected_total zsfa_coord_replies_total zsfa_phase_ms zsfa_round_ms; do \
+	  zsfa_clients_selected_total zsfa_coord_replies_total zsfa_simd_path \
+	  zsfa_phase_ms zsfa_round_ms; do \
 	  grep -q "^# TYPE $$fam " metrics_scrape.txt || { echo "scrape missing $$fam"; exit 1; }; \
 	  grep -q "^# TYPE $$fam " metrics_dump.txt || { echo "dump missing $$fam"; exit 1; }; \
 	done

@@ -5,16 +5,22 @@
 //! against the pre-CSA implementation (blanket per-client decrement plus a
 //! `trailing_zeros` walk of the set bits, reproduced locally below as the
 //! frozen baseline) and a naive unpack-and-add floor, at cohort sizes
-//! m ∈ {64, 512, 4096}. Also measures the final dequantize (`mean_into`)
+//! m ∈ {64, 512, 4096}. The CSA plane add + spill dispatches through
+//! `compress::simd`, so the CSA row is measured twice — forced to the
+//! scalar backend and to the best detected backend — with an exactness
+//! cross-check on the resulting counts across every available backend
+//! before any timing. Also measures the final dequantize (`mean_into`)
 //! and the dense-mean path used by FedAvg/QSGD.
 //!
 //! `--json PATH` writes the machine-readable perf trajectory (`make
-//! bench-json` → `BENCH_aggregate.json` at the repo root); `--smoke` runs a
-//! tiny-budget pass for CI (`make bench-smoke`).
+//! bench-json` → `BENCH_aggregate.json` at the repo root); the JSON header
+//! records the dispatched kernel path and detected CPU features. `--smoke`
+//! runs a tiny-budget pass for CI (`make bench-smoke`).
 
 use std::collections::BTreeMap;
 use zsignfedavg::bench::{bench, smoke_mode, BenchConfig};
 use zsignfedavg::compress::pack::{PackedSigns, VoteAccumulator};
+use zsignfedavg::compress::simd;
 use zsignfedavg::rng::Pcg64;
 use zsignfedavg::tensor;
 use zsignfedavg::testutil::{gen_signs, gen_vec_f32};
@@ -69,8 +75,19 @@ fn main() {
     let cases: &[(usize, usize)] =
         if smoke { &[(8, 4096)] } else { &[(64, 262_144), (512, 262_144), (4096, 65_536)] };
 
+    // Dispatched path (honors ZSFA_SIMD) for the JSON header; the CSA rows
+    // below re-point dispatch explicitly for the A/B comparison.
+    let dispatched = simd::active().label();
+    let best = simd::detected_best();
+    let paths = simd::available();
+
     let mut results: BTreeMap<String, Json> = BTreeMap::new();
-    println!("== sign-vote aggregation (per-round server cost) ==");
+    println!(
+        "== sign-vote aggregation (per-round server cost) ==\n\
+         dispatched={dispatched} best={} cpu={}",
+        best.label(),
+        simd::cpu_features()
+    );
     for &(m, d) in cases {
         let mut rng = Pcg64::seeded(7);
         let packed: Vec<PackedSigns> =
@@ -78,13 +95,12 @@ fn main() {
         let mut acc = VoteAccumulator::new(d);
         let mut scalar_acc = ScalarVoteAccumulator::new(d);
 
-        // Exactness cross-check: CSA == pre-CSA == naive, for this cohort.
+        // Exactness cross-check: CSA (under every available SIMD backend)
+        // == pre-CSA == naive, for this cohort.
         {
-            acc.reset();
             scalar_acc.reset();
             let mut naive = vec![0i32; d];
             for p in &packed {
-                acc.add(p);
                 scalar_acc.add(p);
             }
             let mut signs = vec![0i8; d];
@@ -94,17 +110,47 @@ fn main() {
                     *c += s as i32;
                 }
             }
-            assert_eq!(acc.counts(), &scalar_acc.counts[..], "CSA vs scalar m={m} d={d}");
-            assert_eq!(acc.counts(), &naive[..], "CSA vs naive m={m} d={d}");
+            for &path in &paths {
+                assert!(simd::set_path(path), "backend {path:?} unavailable");
+                acc.reset();
+                for p in &packed {
+                    acc.add(p);
+                }
+                let label = path.label();
+                assert_eq!(
+                    acc.counts(),
+                    &scalar_acc.counts[..],
+                    "CSA[{label}] vs scalar m={m} d={d}"
+                );
+                assert_eq!(acc.counts(), &naive[..], "CSA[{label}] vs naive m={m} d={d}");
+            }
         }
 
-        let csa = bench(&format!("votes_csa/m={m},d={d}"), cfg, || {
+        // CSA accumulate, plane add + spill forced to the scalar backend...
+        simd::set_path(simd::SimdPath::Scalar);
+        let csa_scalar = bench(&format!("votes_csa[scalar]/m={m},d={d}"), cfg, || {
             acc.reset();
             for p in &packed {
                 acc.add(std::hint::black_box(p));
             }
+            std::hint::black_box(acc.counts());
         });
-        println!("{}", csa.report_throughput((m * d) as f64, "vote"));
+        println!("{}", csa_scalar.report_throughput((m * d) as f64, "vote"));
+
+        // ...and to the best detected backend (the scalar-vs-SIMD row).
+        simd::set_path(best);
+        let csa = bench(&format!("votes_csa[{}]/m={m},d={d}", best.label()), cfg, || {
+            acc.reset();
+            for p in &packed {
+                acc.add(std::hint::black_box(p));
+            }
+            std::hint::black_box(acc.counts());
+        });
+        let simd_speedup = csa_scalar.median_s() / csa.median_s();
+        println!(
+            "{}   ({simd_speedup:.2}x vs csa-scalar)",
+            csa.report_throughput((m * d) as f64, "vote")
+        );
 
         let scalar = bench(&format!("votes_scalar/m={m},d={d}"), cfg, || {
             scalar_acc.reset();
@@ -157,11 +203,16 @@ fn main() {
         entry.insert("d".into(), Json::Num(d as f64));
         entry.insert("csa_votes_per_s".into(), Json::Num(csa.throughput((m * d) as f64)));
         entry.insert(
+            "csa_scalar_votes_per_s".into(),
+            Json::Num(csa_scalar.throughput((m * d) as f64)),
+        );
+        entry.insert(
             "scalar_votes_per_s".into(),
             Json::Num(scalar.throughput((m * d) as f64)),
         );
         entry.insert("naive_votes_per_s".into(), Json::Num(naive.throughput((m * d) as f64)));
         entry.insert("speedup".into(), Json::Num(speedup));
+        entry.insert("simd_speedup".into(), Json::Num(simd_speedup));
         results.insert(format!("m{m}"), Json::Obj(entry));
     }
 
@@ -169,6 +220,9 @@ fn main() {
         let mut doc = BTreeMap::new();
         doc.insert("bench".into(), Json::Str("aggregate".into()));
         doc.insert("smoke".into(), Json::Num(if smoke { 1.0 } else { 0.0 }));
+        doc.insert("simd_path".into(), Json::Str(dispatched.into()));
+        doc.insert("simd_best".into(), Json::Str(best.label().into()));
+        doc.insert("cpu_features".into(), Json::Str(simd::cpu_features()));
         doc.insert("results".into(), Json::Obj(results));
         std::fs::write(&path, Json::Obj(doc).to_string_compact()).expect("writing bench json");
         println!("wrote {path}");

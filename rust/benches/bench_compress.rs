@@ -1,17 +1,23 @@
 //! Bench: the uplink compression hot path — fused one-pass kernel vs the
-//! scalar reference path.
+//! scalar reference path, with the fused kernel A/B'd across SIMD backends.
 //!
 //! The scalar path is what production ran before the fused kernels landed:
 //! `StochasticSign::compress_into` (one z-noise draw per coordinate into an
 //! i8 buffer) followed by `PackedSigns::from_signs` (a second walk that
 //! packs and allocates). The fused path (`compress::kernel`) draws noise in
 //! 64-coordinate blocks and sets bits branchlessly straight into reused
-//! packed words — bit-identical output (cross-checked here and pinned by
-//! `tests/hotpath_exactness.rs`), measured side by side per z family at
+//! packed words; its compare→pack inner loop dispatches through
+//! `compress::simd`, so the fused rows are measured twice — dispatch forced
+//! to the scalar backend and to the best detected backend (AVX2/NEON) —
+//! with a bit-exactness cross-check across every available backend before
+//! any timing. Output is bit-identical on all paths (pinned by
+//! `tests/hotpath_exactness.rs`); measured per z family at
 //! d ∈ {4096, 262144, 1M}.
 //!
 //! `--json PATH` writes the machine-readable perf trajectory (`make
-//! bench-json` → `BENCH_compress.json` at the repo root); `--smoke` runs a
+//! bench-json` → `BENCH_compress.json` at the repo root). The JSON header
+//! records the dispatched kernel path and the detected CPU features so
+//! trajectory entries are comparable across machines. `--smoke` runs a
 //! tiny-budget pass for CI (`make bench-smoke`).
 
 use std::collections::BTreeMap;
@@ -20,11 +26,13 @@ use zsignfedavg::compress::kernel;
 use zsignfedavg::compress::pack::PackedSigns;
 use zsignfedavg::compress::qsgd::Qsgd;
 use zsignfedavg::compress::sign::{SigmaRule, StochasticSign};
+use zsignfedavg::compress::simd;
 use zsignfedavg::rng::{Pcg64, ZParam};
 use zsignfedavg::testutil::gen_vec_f32;
 use zsignfedavg::util::json::Json;
 
-/// The pre-PR production path: scalar compress into i8, then pack.
+/// The pre-PR production path: scalar compress into i8, then pack. Does
+/// not dispatch — this is the fixed reference on every machine.
 fn scalar_pack(
     comp: &mut StochasticSign,
     x: &[f32],
@@ -46,6 +54,18 @@ fn main() {
     let cfg = if smoke { BenchConfig::smoke() } else { BenchConfig::default() };
     let dims: &[usize] = if smoke { &[4096] } else { &[4096, 262_144, 1_048_576] };
 
+    // What this process dispatched to (honors ZSFA_SIMD), recorded in the
+    // JSON header; the A/B rows below re-point dispatch explicitly.
+    let dispatched = simd::active().label();
+    let best = simd::detected_best();
+    let paths = simd::available();
+    println!(
+        "== fused sign kernel vs scalar reference path ==\n\
+         dispatched={dispatched} best={} cpu={}",
+        best.label(),
+        simd::cpu_features()
+    );
+
     // (label, z, sigma): sigma = 0 is the deterministic SignSGD floor.
     let variants: &[(&str, ZParam, f32)] = &[
         ("sign_det", ZParam::Finite(1), 0.0),
@@ -55,7 +75,6 @@ fn main() {
     ];
 
     let mut results: BTreeMap<String, Json> = BTreeMap::new();
-    println!("== fused sign kernel vs scalar reference path ==");
     for &d in dims {
         let mut rng = Pcg64::seeded(42);
         let x = gen_vec_f32(&mut rng, d, 1.0);
@@ -63,14 +82,24 @@ fn main() {
         let mut packed = PackedSigns::zeroed(d);
 
         for &(label, z, sigma) in variants {
-            // Bit-exactness cross-check on identical RNG clones.
+            // Bit-exactness cross-check: the scalar reference path vs the
+            // fused kernel under *every* available backend, on identical
+            // RNG clones. Runs in smoke mode too.
             {
                 let mut ra = Pcg64::new(7, 1);
-                let mut rb = ra.clone();
                 let mut comp = StochasticSign::new(z, SigmaRule::Fixed(sigma));
                 let want = scalar_pack(&mut comp, &x, &mut ra, &mut i8buf);
-                kernel::stochastic_sign_packed(&x, z, sigma, &mut rb, &mut packed);
-                assert_eq!(packed, want, "fused/scalar divergence: {label} d={d}");
+                for &p in &paths {
+                    assert!(simd::set_path(p), "backend {p:?} unavailable");
+                    let mut rb = Pcg64::new(7, 1);
+                    kernel::stochastic_sign_packed(&x, z, sigma, &mut rb, &mut packed);
+                    assert_eq!(
+                        packed,
+                        want,
+                        "fused[{}] / scalar-reference divergence: {label} d={d}",
+                        p.label()
+                    );
+                }
             }
 
             let mut comp = StochasticSign::new(z, SigmaRule::Fixed(sigma));
@@ -80,7 +109,23 @@ fn main() {
             });
             println!("{}", scalar.report_throughput(d as f64, "elem"));
 
-            let fused = bench(&format!("fused/{label}/d={d}"), cfg, || {
+            // Fused kernel, dispatch forced to the scalar backend...
+            simd::set_path(simd::SimdPath::Scalar);
+            let fused_scalar = bench(&format!("fused[scalar]/{label}/d={d}"), cfg, || {
+                kernel::stochastic_sign_packed(
+                    std::hint::black_box(&x),
+                    z,
+                    sigma,
+                    &mut rng,
+                    &mut packed,
+                );
+                std::hint::black_box(&packed);
+            });
+            println!("{}", fused_scalar.report_throughput(d as f64, "elem"));
+
+            // ...and to the best detected backend (the scalar-vs-SIMD row).
+            simd::set_path(best);
+            let fused = bench(&format!("fused[{}]/{label}/d={d}", best.label()), cfg, || {
                 kernel::stochastic_sign_packed(
                     std::hint::black_box(&x),
                     z,
@@ -91,17 +136,27 @@ fn main() {
                 std::hint::black_box(&packed);
             });
             let speedup = scalar.median_s() / fused.median_s();
-            println!("{}   ({speedup:.2}x)", fused.report_throughput(d as f64, "elem"));
+            let simd_speedup = fused_scalar.median_s() / fused.median_s();
+            println!(
+                "{}   ({speedup:.2}x vs reference, {simd_speedup:.2}x vs fused-scalar)",
+                fused.report_throughput(d as f64, "elem")
+            );
 
             let mut entry = BTreeMap::new();
             entry.insert("d".into(), Json::Num(d as f64));
             entry.insert("scalar_elems_per_s".into(), Json::Num(scalar.throughput(d as f64)));
+            entry.insert(
+                "fused_scalar_elems_per_s".into(),
+                Json::Num(fused_scalar.throughput(d as f64)),
+            );
             entry.insert("fused_elems_per_s".into(), Json::Num(fused.throughput(d as f64)));
             entry.insert("speedup".into(), Json::Num(speedup));
+            entry.insert("simd_speedup".into(), Json::Num(simd_speedup));
             results.insert(format!("{label}_d{d}"), Json::Obj(entry));
         }
 
-        // Context rows: the packing/unpacking primitives and QSGD.
+        // Context rows: packing/unpacking primitives, the downlink decode
+        // A/B'd across backends, and QSGD.
         let r = bench(&format!("pack/d={d}"), cfg, || {
             std::hint::black_box(PackedSigns::from_signs(&i8buf));
         });
@@ -112,6 +167,29 @@ fn main() {
             p.unpack_into(std::hint::black_box(&mut unpacked));
         });
         println!("{}", r.report_throughput(d as f64, "elem"));
+
+        let mut fout = vec![0.0f32; d];
+        let mut decode_entry = BTreeMap::new();
+        decode_entry.insert("d".into(), Json::Num(d as f64));
+        let mut decode_rates = Vec::new();
+        for &path in &paths {
+            simd::set_path(path);
+            let r = bench(&format!("decode_scaled[{}]/d={d}", path.label()), cfg, || {
+                p.decode_scaled_into(0.5, std::hint::black_box(&mut fout));
+            });
+            println!("{}", r.report_throughput(d as f64, "elem"));
+            decode_entry.insert(
+                format!("{}_elems_per_s", path.label()),
+                Json::Num(r.throughput(d as f64)),
+            );
+            decode_rates.push(r.median_s());
+        }
+        if let (Some(&first), Some(&last)) = (decode_rates.first(), decode_rates.last()) {
+            decode_entry.insert("simd_speedup".into(), Json::Num(first / last));
+        }
+        results.insert(format!("decode_d{d}"), Json::Obj(decode_entry));
+        simd::set_path(best);
+
         for s in [1u32, 4] {
             let q = Qsgd::new(s);
             let mut out = vec![0.0f32; d];
@@ -127,6 +205,9 @@ fn main() {
         let mut doc = BTreeMap::new();
         doc.insert("bench".into(), Json::Str("compress".into()));
         doc.insert("smoke".into(), Json::Num(if smoke { 1.0 } else { 0.0 }));
+        doc.insert("simd_path".into(), Json::Str(dispatched.into()));
+        doc.insert("simd_best".into(), Json::Str(best.label().into()));
+        doc.insert("cpu_features".into(), Json::Str(simd::cpu_features()));
         doc.insert("results".into(), Json::Obj(results));
         std::fs::write(&path, Json::Obj(doc).to_string_compact()).expect("writing bench json");
         println!("wrote {path}");

@@ -22,9 +22,20 @@
 //!
 //! Any change to either side breaks every seeded experiment in the repo;
 //! `tests/hotpath_exactness.rs` pins the equivalence across boundary
-//! lengths, all `ZParam` families and all `SigmaRule`s.
+//! lengths, all `ZParam` families and all `SigmaRule`s — with SIMD
+//! dispatch forced off and on.
+//!
+//! ## SIMD dispatch
+//!
+//! The noise draws are inherently sequential (the stream contract above),
+//! but the compare → sign-bit → word assembly over each block is pure data
+//! parallelism. That inner loop — and the whole-slice pack — routes through
+//! the runtime-dispatched [`super::simd::SignKernels`] table (AVX2 / NEON /
+//! scalar, `ZSFA_SIMD` override), every backend of which is pinned
+//! bit-identical to the scalar reference.
 
 use super::pack::PackedSigns;
+use super::simd;
 use crate::rng::{Pcg64, ZParam};
 
 /// Coordinates per noise block: one packed word, filled in one RNG call.
@@ -40,8 +51,9 @@ pub fn stochastic_sign_packed(
     out: &mut PackedSigns,
 ) {
     out.reset_for(x.len());
+    let k = simd::active();
     if sigma == 0.0 {
-        pack_into_words(x, out);
+        k.pack_words(x, out.words_mut());
         return;
     }
     let s = sigma as f64;
@@ -49,12 +61,8 @@ pub fn stochastic_sign_packed(
     let words = out.words_mut();
     for (chunk, word) in x.chunks(BLOCK).zip(words.iter_mut()) {
         let nb = &mut noise[..chunk.len()];
-        rng.fill_z_noise_f64(z, nb);
-        let mut w = 0u64;
-        for (b, (&xi, &nz)) in chunk.iter().zip(nb.iter()).enumerate() {
-            w |= ((xi as f64 + s * nz >= 0.0) as u64) << b;
-        }
-        *word = w;
+        rng.fill_z_noise_f64(z, nb); // sequential: the RNG stream contract
+        *word = k.sign_block(chunk, s, nb);
     }
 }
 
@@ -62,20 +70,7 @@ pub fn stochastic_sign_packed(
 /// allocation-free equivalent of [`PackedSigns::from_f32_signs`].
 pub fn pack_f32_signs_into(x: &[f32], out: &mut PackedSigns) {
     out.reset_for(x.len());
-    pack_into_words(x, out);
-}
-
-/// Branchless sign-bit pack of `x` into `out`'s words (`out` already shaped
-/// for `x.len()`; trailing bits of a partial last block stay zero).
-fn pack_into_words(x: &[f32], out: &mut PackedSigns) {
-    let words = out.words_mut();
-    for (chunk, word) in x.chunks(BLOCK).zip(words.iter_mut()) {
-        let mut w = 0u64;
-        for (b, &xi) in chunk.iter().enumerate() {
-            w |= ((xi >= 0.0) as u64) << b;
-        }
-        *word = w;
-    }
+    simd::active().pack_words(x, out.words_mut());
 }
 
 #[cfg(test)]

@@ -12,6 +12,11 @@
 //! * [`kernel`] — the fused one-pass perturb→sign→pack client kernels
 //!   (bit-identical to the scalar reference path in [`sign`]; see the RNG
 //!   stream contract there and in DESIGN.md).
+//! * [`simd`] — the runtime-dispatched kernel backends (AVX2 / NEON /
+//!   scalar) behind the [`simd::SignKernels`] table that [`kernel`] and
+//!   [`pack`] route their inner loops through; every backend is pinned
+//!   bit-identical to the scalar reference (`ZSFA_SIMD` overrides
+//!   dispatch for A/B debugging).
 //! * [`qsgd`] — the unbiased stochastic quantizer of Alistarh et al. '17
 //!   (Definition 2 in the paper's appendix), used by the QSGD/FedPAQ
 //!   baselines of Appendix E.
@@ -31,6 +36,7 @@ pub mod kernel;
 pub mod pack;
 pub mod qsgd;
 pub mod sign;
+pub mod simd;
 pub mod sparsify;
 pub mod wire;
 

@@ -11,6 +11,19 @@
 //! lives at word `j / 64`, bit `j % 64`. Trailing bits of the last word are
 //! zero (i.e. decode as −1) and are never read back because the logical
 //! length is stored alongside.
+//!
+//! The three inner loops that dominate the server hot path — the carry-save
+//! plane add, the plane→counts spill and the scaled sign decode — route
+//! through the runtime-dispatched [`super::simd::SignKernels`] table
+//! (AVX2 / NEON / scalar, `ZSFA_SIMD` override); every backend is pinned
+//! bit-identical to the scalar reference by `tests/hotpath_exactness.rs`.
+
+use super::simd;
+
+/// Number of carry-save planes in [`VoteAccumulator`]: column counters
+/// saturate at 2^PLANES − 1, which sets the spill batch. Fixed by the
+/// SIMD spill kernels, which hard-code the 4-plane column expansion.
+const VOTE_PLANES: usize = simd::PLANES;
 
 /// A packed ±1 sign vector (`len` logical coordinates).
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -123,11 +136,7 @@ impl PackedSigns {
     /// round-trip.
     pub fn decode_scaled_into(&self, scale: f32, out: &mut [f32]) {
         assert_eq!(out.len(), self.len);
-        for (chunk, &w) in out.chunks_mut(64).zip(&self.words) {
-            for (b, o) in chunk.iter_mut().enumerate() {
-                *o = if w >> b & 1 == 1 { scale } else { -scale };
-            }
-        }
+        simd::active().decode_scaled(&self.words, scale, out);
     }
 }
 
@@ -144,10 +153,6 @@ impl PackedSigns {
 /// per client plus an amortized expansion — see `benches/bench_aggregate.rs`
 /// for the measured ratio. All arithmetic is exact integers, so spill
 /// timing, shard merging and lane order can never change the result.
-/// Number of carry-save planes: column counters saturate at 2^PLANES − 1,
-/// which sets the spill batch.
-const VOTE_PLANES: usize = 4;
-
 #[derive(Debug, Clone)]
 pub struct VoteAccumulator {
     counts: Vec<i32>, // sum of ±1 votes per coordinate (spilled state)
@@ -205,15 +210,7 @@ impl VoteAccumulator {
     /// 15, so no carry ever leaves the top plane before the spill.
     pub fn add(&mut self, signs: &PackedSigns) {
         assert_eq!(signs.len(), self.len, "vote length mismatch");
-        for (wi, &w) in signs.words.iter().enumerate() {
-            let mut carry = w;
-            for plane in self.planes.iter_mut() {
-                let t = plane[wi];
-                plane[wi] = t ^ carry;
-                carry &= t;
-            }
-            debug_assert_eq!(carry, 0, "CSA overflow before spill");
-        }
+        simd::active().csa_add(&mut self.planes, &signs.words);
         self.pending += 1;
         self.n += 1;
         if self.pending == Self::SPILL_BATCH {
@@ -226,19 +223,7 @@ impl VoteAccumulator {
     /// `pending` votes is +1 or −1). Runs once per batch, so the blanket
     /// `− pending` replaces the old per-client blanket decrement.
     fn spill_planes_into(planes: &[Vec<u64>; VOTE_PLANES], pending: u32, counts: &mut [i32]) {
-        if pending == 0 {
-            return;
-        }
-        let pend = pending as i32;
-        for (wi, chunk) in counts.chunks_mut(64).enumerate() {
-            let (p0, p1) = (planes[0][wi], planes[1][wi]);
-            let (p2, p3) = (planes[2][wi], planes[3][wi]);
-            for (b, c) in chunk.iter_mut().enumerate() {
-                let plus = (p0 >> b & 1) + 2 * (p1 >> b & 1) + 4 * (p2 >> b & 1)
-                    + 8 * (p3 >> b & 1);
-                *c += 2 * plus as i32 - pend;
-            }
-        }
+        simd::active().spill_counts(planes, pending, counts);
     }
 
     /// Spill the carry-save planes into the exact counts and clear them.

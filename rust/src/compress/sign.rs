@@ -62,7 +62,9 @@ impl StochasticSign {
     ///
     /// The production hot path is the fused kernel
     /// (`compress::kernel::stochastic_sign_packed`), which must stay
-    /// bit-identical to this loop: one z-noise draw per coordinate in
+    /// bit-identical to this loop *on every SIMD dispatch path* (this loop
+    /// never dispatches — it is the fixed point the `compress::simd`
+    /// backends are pinned against): one z-noise draw per coordinate in
     /// coordinate order, perturbation in f64, sign taken as `>= 0.0`, and
     /// no draws at all when σ = 0. `tests/hotpath_exactness.rs` pins the
     /// equivalence, so keep the two in lockstep when touching either.

@@ -1,0 +1,172 @@
+//! AVX2 backend: 256-bit lanes for the three hot kernels, bit-identical
+//! to `scalar.rs` by construction.
+//!
+//! Exactness notes (why each sequence can't drift from the scalar loops):
+//!
+//! * `sign_block` computes `x + (σ·ξ)` as `_mm256_mul_pd` then
+//!   `_mm256_add_pd` — **never** an FMA, which rounds once instead of
+//!   twice and would break bit-identity with the scalar `xi + s * nz`.
+//!   `_mm256_cvtps_pd` (f32→f64 widening) is exact, and the
+//!   `_CMP_GE_OQ` ordered compare matches scalar `>= 0.0` exactly:
+//!   `-0.0 >= 0.0` is true, NaN compares false.
+//! * `pack_words` / `csa_add` / `spill_counts` are pure bit/int ops —
+//!   exact on any path.
+//! * `decode_scaled` emits unmodified copies of `scale` / `-scale`
+//!   (`_mm256_blendv_ps` selects, never computes), so every output f32
+//!   is bit-identical to the scalar ternary.
+
+use std::arch::x86_64::*;
+
+use super::PLANES;
+
+/// Per-lane bit weights for expanding one byte of a packed word into
+/// eight 0/1 (or select-mask) lanes: lane k tests bit k.
+#[inline(always)]
+fn lane_bits() -> __m256i {
+    // SAFETY: setr is a pure register constant; AVX is implied by every
+    // caller's avx2 target feature.
+    unsafe { _mm256_setr_epi32(1, 2, 4, 8, 16, 32, 64, 128) }
+}
+
+/// # Safety
+/// Requires AVX2 (guaranteed by the dispatch table's runtime detection).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn sign_block(x: &[f32], s: f64, noise: &[f64]) -> u64 {
+    let sig = _mm256_set1_pd(s);
+    let zero = _mm256_setzero_pd();
+    let n = x.len();
+    let mut w = 0u64;
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let xd = _mm256_cvtps_pd(_mm_loadu_ps(x.as_ptr().add(i)));
+        let nz = _mm256_loadu_pd(noise.as_ptr().add(i));
+        // Multiply then add — NOT fused — to match scalar rounding.
+        let pert = _mm256_add_pd(xd, _mm256_mul_pd(sig, nz));
+        let ge = _mm256_cmp_pd::<_CMP_GE_OQ>(pert, zero);
+        w |= ((_mm256_movemask_pd(ge) as u32) as u64) << i;
+        i += 4;
+    }
+    while i < n {
+        w |= ((x[i] as f64 + s * noise[i] >= 0.0) as u64) << i;
+        i += 1;
+    }
+    w
+}
+
+/// # Safety
+/// Requires AVX2 (guaranteed by the dispatch table's runtime detection).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn pack_words(x: &[f32], words: &mut [u64]) {
+    let zero = _mm256_setzero_ps();
+    let blocks = x.len() / 64;
+    for (wi, word) in words.iter_mut().enumerate().take(blocks) {
+        let base = wi * 64;
+        let mut w = 0u64;
+        let mut k = 0usize;
+        while k < 64 {
+            let ge = _mm256_cmp_ps::<_CMP_GE_OQ>(_mm256_loadu_ps(x.as_ptr().add(base + k)), zero);
+            w |= ((_mm256_movemask_ps(ge) as u32) as u64) << k;
+            k += 8;
+        }
+        *word = w;
+    }
+    // Partial last block: scalar, keeps trailing bits zero.
+    let base = blocks * 64;
+    if base < x.len() {
+        let mut w = 0u64;
+        for (b, &xi) in x[base..].iter().enumerate() {
+            w |= ((xi >= 0.0) as u64) << b;
+        }
+        words[blocks] = w;
+    }
+}
+
+/// # Safety
+/// Requires AVX2 (guaranteed by the dispatch table's runtime detection).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn csa_add(planes: &mut [Vec<u64>; PLANES], w: &[u64]) {
+    let n = w.len();
+    // Raw plane pointers so the 4-word vector body and the scalar tail can
+    // share the loop structure; the borrows backing them end immediately.
+    let pp: [*mut u64; PLANES] = std::array::from_fn(|k| planes[k].as_mut_ptr());
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let mut carry = _mm256_loadu_si256(w.as_ptr().add(i).cast());
+        for &p in &pp {
+            let t = _mm256_loadu_si256(p.add(i).cast_const().cast());
+            _mm256_storeu_si256(p.add(i).cast(), _mm256_xor_si256(t, carry));
+            carry = _mm256_and_si256(t, carry);
+        }
+        i += 4;
+    }
+    while i < n {
+        let mut carry = w[i];
+        for plane in planes.iter_mut() {
+            let t = plane[i];
+            plane[i] = t ^ carry;
+            carry &= t;
+        }
+        i += 1;
+    }
+}
+
+/// # Safety
+/// Requires AVX2 (guaranteed by the dispatch table's runtime detection).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn spill_counts(planes: &[Vec<u64>; PLANES], pending: i32, counts: &mut [i32]) {
+    let bits = lane_bits();
+    let pend = _mm256_set1_epi32(pending);
+    // 0/1 per lane: broadcast one byte of a plane word, test lane k's bit.
+    macro_rules! bits01 {
+        ($byte:expr) => {{
+            let b = _mm256_set1_epi32($byte);
+            _mm256_srli_epi32::<31>(_mm256_cmpeq_epi32(_mm256_and_si256(b, bits), bits))
+        }};
+    }
+    for (wi, chunk) in counts.chunks_mut(64).enumerate() {
+        let (w0, w1) = (planes[0][wi], planes[1][wi]);
+        let (w2, w3) = (planes[2][wi], planes[3][wi]);
+        let groups = chunk.len() / 8;
+        for g in 0..groups {
+            let sh = 8 * g;
+            let m0 = bits01!(((w0 >> sh) & 0xff) as i32);
+            let m1 = bits01!(((w1 >> sh) & 0xff) as i32);
+            let m2 = bits01!(((w2 >> sh) & 0xff) as i32);
+            let m3 = bits01!(((w3 >> sh) & 0xff) as i32);
+            let mut plus = m0;
+            plus = _mm256_add_epi32(plus, _mm256_slli_epi32::<1>(m1));
+            plus = _mm256_add_epi32(plus, _mm256_slli_epi32::<2>(m2));
+            plus = _mm256_add_epi32(plus, _mm256_slli_epi32::<3>(m3));
+            let delta = _mm256_sub_epi32(_mm256_slli_epi32::<1>(plus), pend);
+            let ptr: *mut __m256i = chunk.as_mut_ptr().add(8 * g).cast();
+            _mm256_storeu_si256(ptr, _mm256_add_epi32(_mm256_loadu_si256(ptr.cast_const()), delta));
+        }
+        for b in 8 * groups..chunk.len() {
+            let plus =
+                (w0 >> b & 1) + 2 * (w1 >> b & 1) + 4 * (w2 >> b & 1) + 8 * (w3 >> b & 1);
+            chunk[b] += 2 * plus as i32 - pending;
+        }
+    }
+}
+
+/// # Safety
+/// Requires AVX2 (guaranteed by the dispatch table's runtime detection).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn decode_scaled(words: &[u64], scale: f32, out: &mut [f32]) {
+    let bits = lane_bits();
+    let pos = _mm256_set1_ps(scale);
+    let neg = _mm256_set1_ps(-scale);
+    for (chunk, &w) in out.chunks_mut(64).zip(words.iter()) {
+        let groups = chunk.len() / 8;
+        for g in 0..groups {
+            let b = _mm256_set1_epi32(((w >> (8 * g)) & 0xff) as i32);
+            let mask = _mm256_cmpeq_epi32(_mm256_and_si256(b, bits), bits);
+            // Pure lane select between exact ±scale copies — no arithmetic.
+            let v = _mm256_blendv_ps(neg, pos, _mm256_castsi256_ps(mask));
+            _mm256_storeu_ps(chunk.as_mut_ptr().add(8 * g), v);
+        }
+        for b in 8 * groups..chunk.len() {
+            chunk[b] = if w >> b & 1 == 1 { scale } else { -scale };
+        }
+    }
+}

@@ -1,0 +1,460 @@
+//! Runtime-dispatched SIMD backends for the three hot kernels.
+//!
+//! The per-round cost of sign-based FL sits in three loops: the fused
+//! perturb→sign→pack kernel (`compress::kernel`), the Harley–Seal
+//! carry-save vote planes (`compress::pack::VoteAccumulator`) and the
+//! scaled sign decode (`PackedSigns::decode_scaled_into`). This module
+//! owns vectorized implementations of exactly those loops behind one
+//! [`SignKernels`] dispatch table:
+//!
+//! * **AVX2** on `x86_64`, gated at runtime by `is_x86_feature_detected!`;
+//! * **NEON** on `aarch64` (baseline there, still runtime-checked);
+//! * the **scalar** reference everywhere else.
+//!
+//! Everything is stable Rust (`std::arch` intrinsics + `#[target_feature]`
+//! functions coerced to `unsafe fn` pointers) — no `std::simd` nightly
+//! dependency.
+//!
+//! ## The exactness contract
+//!
+//! Every backend is **bit-identical** to the scalar reference — same words,
+//! same counts, same f32 bit patterns — so dispatch can never move a seeded
+//! trajectory, a determinism byte-diff or a service CSV. Two rules make
+//! that possible and must survive any future backend:
+//!
+//! * **Noise draws stay sequential; only compare/pack vectorizes.** The
+//!   z-noise stream is drawn per 64-coordinate block by
+//!   `Pcg64::fill_z_noise_f64` (the DESIGN.md §2.6 RNG stream contract)
+//!   and the vector lanes only see the already-drawn buffer.
+//! * **No arithmetic re-association.** The perturbation is computed as a
+//!   separate multiply then add (`x + (σ·ξ)`), never an FMA — fused
+//!   multiply-add rounds once instead of twice and would break
+//!   bit-identity. Comparisons use ordered `>=` semantics (`_CMP_GE_OQ` /
+//!   `vcgezq`), matching scalar `>= 0.0` for −0.0 and NaN; all other ops
+//!   are integer/bitwise and exact by construction.
+//!
+//! `tests/hotpath_exactness.rs` pins every compiled backend against the
+//! scalar table across unaligned-tail lengths, all `ZParam` families and
+//! all `SigmaRule`s, and CI runs the whole suite twice (`ZSFA_SIMD=off`
+//! and default dispatch).
+//!
+//! ## Dispatch
+//!
+//! The active table is resolved once, on first use, from the [`SIMD_ENV`]
+//! environment variable (`ZSFA_SIMD=off|avx2|neon|auto`) falling back to
+//! the best runtime-detected path. Because all paths are bit-identical,
+//! re-pointing the dispatch mid-process ([`set_path`], used by benches and
+//! the equivalence tests for A/B runs) is always behavior-preserving. The
+//! selected path is surfaced as the `zsfa_simd_path` telemetry gauge, in
+//! `zsfa run`/`serve`/`join` startup logging, and in the `BENCH_*.json`
+//! headers so perf trajectories are comparable across machines.
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+#[cfg(target_arch = "aarch64")]
+mod neon;
+mod scalar;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Environment variable selecting the dispatch path
+/// (`off`/`scalar` | `avx2` | `neon` | `auto`). Unset means `auto`.
+pub const SIMD_ENV: &str = "ZSFA_SIMD";
+
+/// Number of carry-save planes in `VoteAccumulator` — fixed here because
+/// the spill kernels hard-code the 4-plane column expansion.
+pub const PLANES: usize = 4;
+
+/// A dispatchable kernel backend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdPath {
+    /// The scalar reference loops (always available, always correct).
+    Scalar,
+    /// 256-bit AVX2 lanes (x86_64, runtime-detected).
+    Avx2,
+    /// 128-bit NEON lanes (aarch64).
+    Neon,
+}
+
+impl SimdPath {
+    /// Stable lowercase label (telemetry gauge, bench headers, logs).
+    pub fn label(self) -> &'static str {
+        match self {
+            SimdPath::Scalar => "scalar",
+            SimdPath::Avx2 => "avx2",
+            SimdPath::Neon => "neon",
+        }
+    }
+
+    /// Parse a `ZSFA_SIMD` request; `None` for `auto`/unknown strings.
+    fn parse(s: &str) -> Option<SimdPath> {
+        match s {
+            "off" | "scalar" => Some(SimdPath::Scalar),
+            "avx2" => Some(SimdPath::Avx2),
+            "neon" => Some(SimdPath::Neon),
+            _ => None,
+        }
+    }
+}
+
+/// The dispatch table: one `unsafe fn` pointer per hot loop. `unsafe`
+/// because the non-scalar entries compile with `#[target_feature]` and are
+/// only sound on CPUs that have the feature — which is exactly what
+/// installation via [`kernels_for`] guarantees, so the safe wrapper
+/// methods below can call them.
+pub struct SignKernels {
+    path: SimdPath,
+    sign_block_fn: unsafe fn(&[f32], f64, &[f64]) -> u64,
+    pack_words_fn: unsafe fn(&[f32], &mut [u64]),
+    csa_add_fn: unsafe fn(&mut [Vec<u64>; PLANES], &[u64]),
+    spill_counts_fn: unsafe fn(&[Vec<u64>; PLANES], i32, &mut [i32]),
+    decode_scaled_fn: unsafe fn(&[u64], f32, &mut [f32]),
+}
+
+impl SignKernels {
+    /// Which backend this table is.
+    pub fn path(&self) -> SimdPath {
+        self.path
+    }
+
+    /// Stable label of this backend.
+    pub fn label(&self) -> &'static str {
+        self.path.label()
+    }
+
+    /// Threshold-compare one ≤64-coordinate block against its pre-drawn
+    /// noise: bit `b` of the result is `x[b] + sigma·noise[b] >= 0.0`.
+    /// Per-block (not whole-slice) because the noise draws interleave
+    /// with the packing in the fused kernel's RNG stream.
+    #[inline]
+    pub fn sign_block(&self, x: &[f32], sigma: f64, noise: &[f64]) -> u64 {
+        assert!(x.len() <= 64 && noise.len() == x.len());
+        // SAFETY: table invariant — the pointer's target features were
+        // runtime-detected before this table could be handed out.
+        unsafe { (self.sign_block_fn)(x, sigma, noise) }
+    }
+
+    /// Pack `x[j] >= 0.0` sign bits into words (trailing bits zero;
+    /// `words` must already be shaped: one word per 64 coordinates).
+    #[inline]
+    pub fn pack_words(&self, x: &[f32], words: &mut [u64]) {
+        assert_eq!(words.len(), x.len().div_ceil(64));
+        // SAFETY: see `sign_block`.
+        unsafe { (self.pack_words_fn)(x, words) }
+    }
+
+    /// Carry-save add of one packed vote word-stream into the planes
+    /// (`sum = a ^ b`, `carry = a & b` rippled through the 4 planes).
+    #[inline]
+    pub fn csa_add(&self, planes: &mut [Vec<u64>; PLANES], w: &[u64]) {
+        assert!(planes.iter().all(|p| p.len() == w.len()));
+        // SAFETY: see `sign_block`.
+        unsafe { (self.csa_add_fn)(planes, w) }
+    }
+
+    /// Expand `pending` clients' worth of planes into the exact counts:
+    /// a column with `plus` set bits contributes `2·plus − pending`.
+    #[inline]
+    pub fn spill_counts(&self, planes: &[Vec<u64>; PLANES], pending: u32, counts: &mut [i32]) {
+        if pending == 0 {
+            return;
+        }
+        assert!(planes.iter().all(|p| p.len() == counts.len().div_ceil(64)));
+        // SAFETY: see `sign_block`.
+        unsafe { (self.spill_counts_fn)(planes, pending as i32, counts) }
+    }
+
+    /// Write `±scale` per coordinate from packed sign words (exact IEEE
+    /// copies of `scale` / `-scale`, bit-identical to the scalar decode).
+    #[inline]
+    pub fn decode_scaled(&self, words: &[u64], scale: f32, out: &mut [f32]) {
+        assert_eq!(words.len(), out.len().div_ceil(64));
+        // SAFETY: see `sign_block`.
+        unsafe { (self.decode_scaled_fn)(words, scale, out) }
+    }
+}
+
+static SCALAR: SignKernels = SignKernels {
+    path: SimdPath::Scalar,
+    sign_block_fn: scalar::sign_block,
+    pack_words_fn: scalar::pack_words,
+    csa_add_fn: scalar::csa_add,
+    spill_counts_fn: scalar::spill_counts,
+    decode_scaled_fn: scalar::decode_scaled,
+};
+
+#[cfg(target_arch = "x86_64")]
+static AVX2: SignKernels = SignKernels {
+    path: SimdPath::Avx2,
+    sign_block_fn: avx2::sign_block,
+    pack_words_fn: avx2::pack_words,
+    csa_add_fn: avx2::csa_add,
+    spill_counts_fn: avx2::spill_counts,
+    decode_scaled_fn: avx2::decode_scaled,
+};
+
+#[cfg(target_arch = "aarch64")]
+static NEON: SignKernels = SignKernels {
+    path: SimdPath::Neon,
+    sign_block_fn: neon::sign_block,
+    pack_words_fn: neon::pack_words,
+    csa_add_fn: neon::csa_add,
+    spill_counts_fn: neon::spill_counts,
+    decode_scaled_fn: neon::decode_scaled,
+};
+
+/// Atomic dispatch state: a `SimdPath` code, or `UNRESOLVED` before the
+/// first use. Relaxed ordering is enough because every reachable value is
+/// behavior-identical (the exactness contract) — a racing reader at worst
+/// runs one call on a different-but-equal backend.
+const UNRESOLVED: u8 = u8::MAX;
+static ACTIVE: AtomicU8 = AtomicU8::new(UNRESOLVED);
+
+fn code(p: SimdPath) -> u8 {
+    match p {
+        SimdPath::Scalar => 0,
+        SimdPath::Avx2 => 1,
+        SimdPath::Neon => 2,
+    }
+}
+
+/// The backend table for `path`, if it is compiled in *and* the CPU has
+/// the features it needs. `Scalar` always succeeds.
+pub fn kernels_for(path: SimdPath) -> Option<&'static SignKernels> {
+    match path {
+        SimdPath::Scalar => Some(&SCALAR),
+        #[cfg(target_arch = "x86_64")]
+        SimdPath::Avx2 if is_x86_feature_detected!("avx2") => Some(&AVX2),
+        #[cfg(target_arch = "aarch64")]
+        SimdPath::Neon if std::arch::is_aarch64_feature_detected!("neon") => Some(&NEON),
+        _ => None,
+    }
+}
+
+/// The scalar reference table (the pin for every equivalence test).
+pub fn scalar_kernels() -> &'static SignKernels {
+    &SCALAR
+}
+
+/// Best backend this CPU supports, ignoring the env override.
+pub fn detected_best() -> SimdPath {
+    #[cfg(target_arch = "x86_64")]
+    if is_x86_feature_detected!("avx2") {
+        return SimdPath::Avx2;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if std::arch::is_aarch64_feature_detected!("neon") {
+        return SimdPath::Neon;
+    }
+    SimdPath::Scalar
+}
+
+/// Every backend available on this CPU (scalar first). The equivalence
+/// tests and the bench A/B rows iterate this.
+pub fn available() -> Vec<SimdPath> {
+    let mut v = vec![SimdPath::Scalar];
+    let best = detected_best();
+    if best != SimdPath::Scalar {
+        v.push(best);
+    }
+    v
+}
+
+fn resolve() -> &'static SignKernels {
+    let k = match std::env::var(SIMD_ENV) {
+        Ok(v) => match SimdPath::parse(&v) {
+            Some(p) => match kernels_for(p) {
+                Some(k) => k,
+                None => {
+                    eprintln!(
+                        "warning: {SIMD_ENV}={v} is not available on this CPU; \
+                         using the scalar kernels"
+                    );
+                    &SCALAR
+                }
+            },
+            None => {
+                if !v.is_empty() && v != "auto" && v != "on" {
+                    eprintln!(
+                        "warning: {SIMD_ENV}={v} not recognized \
+                         (expected off|avx2|neon|auto); auto-detecting"
+                    );
+                }
+                kernels_for(detected_best()).unwrap_or(&SCALAR)
+            }
+        },
+        Err(_) => kernels_for(detected_best()).unwrap_or(&SCALAR),
+    };
+    ACTIVE.store(code(k.path), Ordering::Relaxed);
+    k
+}
+
+/// The active dispatch table. Resolved once (env override, then runtime
+/// CPU detection); afterwards a single relaxed atomic load.
+#[inline]
+pub fn active() -> &'static SignKernels {
+    match ACTIVE.load(Ordering::Relaxed) {
+        0 => &SCALAR,
+        #[cfg(target_arch = "x86_64")]
+        1 => &AVX2,
+        #[cfg(target_arch = "aarch64")]
+        2 => &NEON,
+        _ => resolve(),
+    }
+}
+
+/// Re-point the dispatch at `path` (benches and equivalence tests A/B the
+/// backends this way). Returns `false` — leaving dispatch unchanged — when
+/// the backend isn't available on this CPU. Safe at any time because all
+/// backends are bit-identical.
+pub fn set_path(path: SimdPath) -> bool {
+    match kernels_for(path) {
+        Some(k) => {
+            ACTIVE.store(code(k.path), Ordering::Relaxed);
+            true
+        }
+        None => false,
+    }
+}
+
+/// Detected CPU features relevant to the kernels, as `arch:flag+flag`
+/// (bench JSON headers; makes BENCH trajectories comparable across
+/// machines).
+pub fn cpu_features() -> String {
+    let mut feats: Vec<&str> = Vec::new();
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            feats.push("avx2");
+        }
+        if is_x86_feature_detected!("avx") {
+            feats.push("avx");
+        }
+        if is_x86_feature_detected!("sse4.2") {
+            feats.push("sse4.2");
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    if std::arch::is_aarch64_feature_detected!("neon") {
+        feats.push("neon");
+    }
+    if feats.is_empty() {
+        feats.push("baseline");
+    }
+    format!("{}:{}", std::env::consts::ARCH, feats.join("+"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn gen_f32(rng: &mut Pcg64, d: usize) -> Vec<f32> {
+        (0..d).map(|_| rng.uniform_in(-2.0, 2.0) as f32).collect()
+    }
+
+    fn gen_words(rng: &mut Pcg64, d: usize) -> Vec<u64> {
+        let nw = d.div_ceil(64);
+        let mut w: Vec<u64> = (0..nw).map(|_| rng.next_u64()).collect();
+        if d % 64 != 0 {
+            if let Some(last) = w.last_mut() {
+                *last &= (1u64 << (d % 64)) - 1; // trailing bits zero
+            }
+        }
+        w
+    }
+
+    /// Unaligned tails around every lane width the backends use.
+    const DIMS: [usize; 11] = [0, 1, 63, 64, 65, 127, 128, 255, 256, 1000, 4099];
+
+    #[test]
+    fn labels_and_parse_roundtrip() {
+        for p in [SimdPath::Scalar, SimdPath::Avx2, SimdPath::Neon] {
+            assert_eq!(SimdPath::parse(p.label()), Some(p));
+        }
+        assert_eq!(SimdPath::parse("off"), Some(SimdPath::Scalar));
+        assert_eq!(SimdPath::parse("auto"), None);
+        assert_eq!(SimdPath::parse("bogus"), None);
+    }
+
+    #[test]
+    fn scalar_is_always_available_and_settable() {
+        assert!(kernels_for(SimdPath::Scalar).is_some());
+        assert!(kernels_for(detected_best()).is_some());
+        assert!(set_path(SimdPath::Scalar));
+        assert_eq!(active().path(), SimdPath::Scalar);
+        assert!(set_path(detected_best()));
+        assert_eq!(active().path(), detected_best());
+        assert_eq!(available()[0], SimdPath::Scalar);
+    }
+
+    #[test]
+    fn cpu_features_names_the_arch() {
+        let f = cpu_features();
+        assert!(f.starts_with(std::env::consts::ARCH), "{f}");
+        assert!(f.contains(':'), "{f}");
+    }
+
+    // Every compiled backend pinned bit-identical to the scalar table on
+    // random data across unaligned tails. The full dispatch-level matrix
+    // (all ZParams × SigmaRules through the fused kernel) lives in
+    // tests/hotpath_exactness.rs; this is the table-level pin that runs
+    // even when that harness is filtered out.
+    #[test]
+    fn all_backends_match_scalar_table() {
+        let sc = scalar_kernels();
+        for path in available() {
+            let kt = kernels_for(path).unwrap();
+            let mut rng = Pcg64::seeded(0xD15);
+            for &d in &DIMS {
+                let x = gen_f32(&mut rng, d);
+                let noise: Vec<f64> = (0..d.min(64)).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+
+                // sign_block on the first ≤64-coordinate block.
+                let blk = &x[..d.min(64)];
+                assert_eq!(
+                    kt.sign_block(blk, 0.7, &noise),
+                    sc.sign_block(blk, 0.7, &noise),
+                    "sign_block {path:?} d={d}"
+                );
+
+                // pack_words over the whole slice.
+                let nw = d.div_ceil(64);
+                let (mut wa, mut wb) = (vec![0u64; nw], vec![0u64; nw]);
+                kt.pack_words(&x, &mut wa);
+                sc.pack_words(&x, &mut wb);
+                assert_eq!(wa, wb, "pack_words {path:?} d={d}");
+
+                // csa_add + spill_counts over a full pending batch.
+                let mut pa: [Vec<u64>; PLANES] = std::array::from_fn(|_| vec![0u64; nw]);
+                let mut pb: [Vec<u64>; PLANES] = std::array::from_fn(|_| vec![0u64; nw]);
+                for _ in 0..15 {
+                    let w = gen_words(&mut rng, d);
+                    kt.csa_add(&mut pa, &w);
+                    sc.csa_add(&mut pb, &w);
+                }
+                assert_eq!(pa, pb, "csa planes {path:?} d={d}");
+                let (mut ca, mut cb) = (vec![0i32; d], vec![0i32; d]);
+                kt.spill_counts(&pa, 15, &mut ca);
+                sc.spill_counts(&pb, 15, &mut cb);
+                assert_eq!(ca, cb, "spill {path:?} d={d}");
+
+                // decode_scaled, f32 bit patterns compared exactly.
+                let w = gen_words(&mut rng, d);
+                let (mut oa, mut ob) = (vec![0.0f32; d], vec![0.0f32; d]);
+                kt.decode_scaled(&w, 0.37, &mut oa);
+                sc.decode_scaled(&w, 0.37, &mut ob);
+                let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&oa), bits(&ob), "decode {path:?} d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn spill_with_zero_pending_is_a_no_op() {
+        let planes: [Vec<u64>; PLANES] = std::array::from_fn(|_| vec![u64::MAX]);
+        let mut counts = vec![7i32; 64];
+        active().spill_counts(&planes, 0, &mut counts);
+        assert!(counts.iter().all(|&c| c == 7));
+    }
+}

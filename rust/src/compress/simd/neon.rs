@@ -1,0 +1,149 @@
+//! NEON backend (aarch64): 128-bit lanes for the three hot kernels,
+//! bit-identical to `scalar.rs` by construction.
+//!
+//! The same exactness rules as the AVX2 backend apply: the perturbation is
+//! `vmulq_f64` then `vaddq_f64` (never `vfmaq_f64` — fused rounding would
+//! break bit-identity with the scalar `xi + s * nz`), `vcvt_f64_f32` is an
+//! exact widening, `vcgezq` matches scalar `>= 0.0` (−0.0 true, NaN
+//! false), and everything else is integer/bitwise or a pure lane select.
+
+use std::arch::aarch64::*;
+
+use super::PLANES;
+
+/// Per-lane bit weights: lane k of a 4-lane u32 vector tests bit k.
+const NIBBLE_BITS: [u32; 4] = [1, 2, 4, 8];
+
+/// # Safety
+/// Requires NEON (guaranteed by the dispatch table's runtime detection).
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn sign_block(x: &[f32], s: f64, noise: &[f64]) -> u64 {
+    let sig = vdupq_n_f64(s);
+    let n = x.len();
+    let mut w = 0u64;
+    let mut i = 0usize;
+    while i + 2 <= n {
+        let xd = vcvt_f64_f32(vld1_f32(x.as_ptr().add(i)));
+        let nz = vld1q_f64(noise.as_ptr().add(i));
+        // Multiply then add — NOT fused — to match scalar rounding.
+        let pert = vaddq_f64(xd, vmulq_f64(sig, nz));
+        let ge = vcgezq_f64(pert);
+        w |= (vgetq_lane_u64::<0>(ge) & 1) << i;
+        w |= (vgetq_lane_u64::<1>(ge) & 1) << (i + 1);
+        i += 2;
+    }
+    if i < n {
+        w |= ((x[i] as f64 + s * noise[i] >= 0.0) as u64) << i;
+    }
+    w
+}
+
+/// # Safety
+/// Requires NEON (guaranteed by the dispatch table's runtime detection).
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn pack_words(x: &[f32], words: &mut [u64]) {
+    let bits = vld1q_u32(NIBBLE_BITS.as_ptr());
+    let blocks = x.len() / 64;
+    for (wi, word) in words.iter_mut().enumerate().take(blocks) {
+        let base = wi * 64;
+        let mut w = 0u64;
+        let mut k = 0usize;
+        while k < 64 {
+            let ge = vcgezq_f32(vld1q_f32(x.as_ptr().add(base + k)));
+            // Horizontal sum of (ge & [1,2,4,8]) = the 4-bit sign nibble.
+            let nib = vaddvq_u32(vandq_u32(ge, bits)) as u64;
+            w |= nib << k;
+            k += 4;
+        }
+        *word = w;
+    }
+    // Partial last block: scalar, keeps trailing bits zero.
+    let base = blocks * 64;
+    if base < x.len() {
+        let mut w = 0u64;
+        for (b, &xi) in x[base..].iter().enumerate() {
+            w |= ((xi >= 0.0) as u64) << b;
+        }
+        words[blocks] = w;
+    }
+}
+
+/// # Safety
+/// Requires NEON (guaranteed by the dispatch table's runtime detection).
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn csa_add(planes: &mut [Vec<u64>; PLANES], w: &[u64]) {
+    let n = w.len();
+    let pp: [*mut u64; PLANES] = std::array::from_fn(|k| planes[k].as_mut_ptr());
+    let mut i = 0usize;
+    while i + 2 <= n {
+        let mut carry = vld1q_u64(w.as_ptr().add(i));
+        for &p in &pp {
+            let t = vld1q_u64(p.add(i).cast_const());
+            vst1q_u64(p.add(i), veorq_u64(t, carry));
+            carry = vandq_u64(t, carry);
+        }
+        i += 2;
+    }
+    if i < n {
+        let mut carry = w[i];
+        for plane in planes.iter_mut() {
+            let t = plane[i];
+            plane[i] = t ^ carry;
+            carry &= t;
+        }
+    }
+}
+
+/// # Safety
+/// Requires NEON (guaranteed by the dispatch table's runtime detection).
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn spill_counts(planes: &[Vec<u64>; PLANES], pending: i32, counts: &mut [i32]) {
+    let bits = vld1q_u32(NIBBLE_BITS.as_ptr());
+    let pend = vdupq_n_s32(pending);
+    for (wi, chunk) in counts.chunks_mut(64).enumerate() {
+        let (w0, w1) = (planes[0][wi], planes[1][wi]);
+        let (w2, w3) = (planes[2][wi], planes[3][wi]);
+        let groups = chunk.len() / 4;
+        for g in 0..groups {
+            let sh = 4 * g;
+            // 0/1 per lane: all-ones from vtstq, shifted down to bit 0.
+            let m0 = vshrq_n_u32::<31>(vtstq_u32(vdupq_n_u32(((w0 >> sh) & 0xf) as u32), bits));
+            let m1 = vshrq_n_u32::<31>(vtstq_u32(vdupq_n_u32(((w1 >> sh) & 0xf) as u32), bits));
+            let m2 = vshrq_n_u32::<31>(vtstq_u32(vdupq_n_u32(((w2 >> sh) & 0xf) as u32), bits));
+            let m3 = vshrq_n_u32::<31>(vtstq_u32(vdupq_n_u32(((w3 >> sh) & 0xf) as u32), bits));
+            let mut plus = m0;
+            plus = vaddq_u32(plus, vshlq_n_u32::<1>(m1));
+            plus = vaddq_u32(plus, vshlq_n_u32::<2>(m2));
+            plus = vaddq_u32(plus, vshlq_n_u32::<3>(m3));
+            let delta = vsubq_s32(vreinterpretq_s32_u32(vshlq_n_u32::<1>(plus)), pend);
+            let ptr = chunk.as_mut_ptr().add(4 * g);
+            vst1q_s32(ptr, vaddq_s32(vld1q_s32(ptr.cast_const()), delta));
+        }
+        for b in 4 * groups..chunk.len() {
+            let plus =
+                (w0 >> b & 1) + 2 * (w1 >> b & 1) + 4 * (w2 >> b & 1) + 8 * (w3 >> b & 1);
+            chunk[b] += 2 * plus as i32 - pending;
+        }
+    }
+}
+
+/// # Safety
+/// Requires NEON (guaranteed by the dispatch table's runtime detection).
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn decode_scaled(words: &[u64], scale: f32, out: &mut [f32]) {
+    let bits = vld1q_u32(NIBBLE_BITS.as_ptr());
+    let pos = vdupq_n_f32(scale);
+    let neg = vdupq_n_f32(-scale);
+    for (chunk, &w) in out.chunks_mut(64).zip(words.iter()) {
+        let groups = chunk.len() / 4;
+        for g in 0..groups {
+            let mask = vtstq_u32(vdupq_n_u32(((w >> (4 * g)) & 0xf) as u32), bits);
+            // Pure lane select between exact ±scale copies — no arithmetic.
+            let v = vbslq_f32(mask, pos, neg);
+            vst1q_f32(chunk.as_mut_ptr().add(4 * g), v);
+        }
+        for b in 4 * groups..chunk.len() {
+            chunk[b] = if w >> b & 1 == 1 { scale } else { -scale };
+        }
+    }
+}

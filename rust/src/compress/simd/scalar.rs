@@ -1,0 +1,85 @@
+//! The scalar reference backend: the exact loops every SIMD backend is
+//! pinned against (and the dispatch fallback on CPUs without AVX2/NEON).
+//!
+//! These bodies are the PR 5 fused-kernel loops moved verbatim behind the
+//! table seam — any edit here changes every seeded experiment in the repo,
+//! so don't. The functions are `unsafe fn` only to match the dispatch-table
+//! pointer type; they have no safety requirements of their own.
+
+use super::PLANES;
+
+/// Sign bits of one ≤64-coordinate block: bit b = `x[b] + s·noise[b] >= 0`.
+///
+/// # Safety
+/// None — `unsafe fn` only for dispatch-table pointer compatibility.
+pub(super) unsafe fn sign_block(x: &[f32], s: f64, noise: &[f64]) -> u64 {
+    let mut w = 0u64;
+    for (b, (&xi, &nz)) in x.iter().zip(noise.iter()).enumerate() {
+        w |= ((xi as f64 + s * nz >= 0.0) as u64) << b;
+    }
+    w
+}
+
+/// Branchless sign-bit pack (`x[j] >= 0.0`, trailing bits stay zero).
+///
+/// # Safety
+/// None — `unsafe fn` only for dispatch-table pointer compatibility.
+pub(super) unsafe fn pack_words(x: &[f32], words: &mut [u64]) {
+    for (chunk, word) in x.chunks(64).zip(words.iter_mut()) {
+        let mut w = 0u64;
+        for (b, &xi) in chunk.iter().enumerate() {
+            w |= ((xi >= 0.0) as u64) << b;
+        }
+        *word = w;
+    }
+}
+
+/// Carry-save add: ripple each incoming word through the planes
+/// (`sum = a ^ b`, `carry = a & b`). With at most `SPILL_BATCH = 15`
+/// pending clients a column counter never exceeds 15, so no carry ever
+/// leaves the top plane before the spill (debug-asserted here; the SIMD
+/// backends rely on the same invariant without the assert).
+///
+/// # Safety
+/// None — `unsafe fn` only for dispatch-table pointer compatibility.
+pub(super) unsafe fn csa_add(planes: &mut [Vec<u64>; PLANES], w: &[u64]) {
+    for (wi, &word) in w.iter().enumerate() {
+        let mut carry = word;
+        for plane in planes.iter_mut() {
+            let t = plane[wi];
+            plane[wi] = t ^ carry;
+            carry &= t;
+        }
+        debug_assert_eq!(carry, 0, "CSA overflow before spill");
+    }
+}
+
+/// Expand the planes into exact counts: a column with `plus` set bits
+/// contributes `2·plus − pending` (each pending vote is +1 or −1).
+///
+/// # Safety
+/// None — `unsafe fn` only for dispatch-table pointer compatibility.
+pub(super) unsafe fn spill_counts(planes: &[Vec<u64>; PLANES], pending: i32, counts: &mut [i32]) {
+    for (wi, chunk) in counts.chunks_mut(64).enumerate() {
+        let (p0, p1) = (planes[0][wi], planes[1][wi]);
+        let (p2, p3) = (planes[2][wi], planes[3][wi]);
+        for (b, c) in chunk.iter_mut().enumerate() {
+            let plus =
+                (p0 >> b & 1) + 2 * (p1 >> b & 1) + 4 * (p2 >> b & 1) + 8 * (p3 >> b & 1);
+            *c += 2 * plus as i32 - pending;
+        }
+    }
+}
+
+/// Write `±scale` per coordinate from the packed words (exact IEEE copies
+/// of `scale` / `-scale`).
+///
+/// # Safety
+/// None — `unsafe fn` only for dispatch-table pointer compatibility.
+pub(super) unsafe fn decode_scaled(words: &[u64], scale: f32, out: &mut [f32]) {
+    for (chunk, &w) in out.chunks_mut(64).zip(words.iter()) {
+        for (b, o) in chunk.iter_mut().enumerate() {
+            *o = if w >> b & 1 == 1 { scale } else { -scale };
+        }
+    }
+}

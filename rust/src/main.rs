@@ -227,8 +227,22 @@ fn run_spec(args: &Args, path: &str) -> Result<()> {
         spec.repeats,
         spec.rounds
     );
+    log_simd_path();
     session.run(&spec)?;
     Ok(())
+}
+
+/// One-line record of which SIMD backend the hot kernels dispatched to
+/// (also exported as the `zsfa_simd_path` telemetry gauge). Results are
+/// bit-identical on every path; the line is for perf triage and A/B runs.
+fn log_simd_path() {
+    use zsignfedavg::compress::simd;
+    println!(
+        "simd: {} kernels on {} ({}=off|avx2|neon overrides)",
+        simd::active().label(),
+        simd::cpu_features(),
+        simd::SIMD_ENV,
+    );
 }
 
 /// `zsfa serve`: host an experiment's rounds over TCP. The spec's TCP
@@ -274,6 +288,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
         spec.repeats,
         spec.rounds
     );
+    log_simd_path();
     session.run(&spec)?;
     Ok(())
 }
@@ -295,6 +310,7 @@ fn join_cmd(args: &Args) -> Result<()> {
     };
     let patience = std::time::Duration::from_secs(args.u64_or("patience-s", 30)?);
     println!("join: working for coordinator at {addr}");
+    log_simd_path();
     let mut transport = TcpTransport::connect(&addr, patience)?;
     Participant::new(spec).run(&mut transport)?;
     println!("join: coordinator finished, exiting");
@@ -358,6 +374,7 @@ fn run_config(args: &Args) -> Result<()> {
         "run: {} on {dataset:?} — rounds={} E={e} repeats={}",
         spec.series[0].algorithm.name, spec.rounds, spec.repeats
     );
+    log_simd_path();
     Session::console().run(&spec)?;
     for k in cfg.unused_keys() {
         eprintln!("warning: unused config key {k:?}");

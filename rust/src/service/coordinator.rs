@@ -461,13 +461,21 @@ mod tests {
         (0..n).map(|client| Participant { client, fault: None }).collect()
     }
 
-    /// A valid d-dimensional sign submission payload.
-    fn sign_payload(seed: u64) -> Vec<u8> {
+    /// A sign submission payload of dimension `d`, built exactly the way
+    /// the probe-fold expects (z = 1, σ = 1). The single construction both
+    /// the happy-path helpers and the malformed-submission probes share —
+    /// so the probe path can't drift between call sites.
+    fn sign_payload_dim(seed: u64, d: usize) -> Vec<u8> {
         let mut rng = Pcg64::seeded(seed);
-        let delta: Vec<f32> = (0..D).map(|_| rng.normal() as f32).collect();
-        let mut packed = PackedSigns::zeroed(D);
+        let delta: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let mut packed = PackedSigns::zeroed(d);
         kernel::stochastic_sign_packed(&delta, ZParam::Finite(1), 1.0, &mut rng, &mut packed);
         wire::encode(&crate::compress::Message::Signs(packed))
+    }
+
+    /// A valid D-dimensional sign submission payload.
+    fn sign_payload(seed: u64) -> Vec<u8> {
+        sign_payload_dim(seed, D)
     }
 
     fn submit(st: &mut CoordState, pid: u64, round: u64, slot: u64, now: u64) -> SubmitReply {
@@ -611,17 +619,13 @@ mod tests {
         };
         assert_eq!(st.handle(&req, 3), Reply::Submit(SubmitReply::Malformed));
         // Right family, wrong dimension.
-        let mut packed = PackedSigns::zeroed(D + 1);
-        let mut rng = Pcg64::seeded(1);
-        let delta: Vec<f32> = (0..D + 1).map(|_| rng.normal() as f32).collect();
-        kernel::stochastic_sign_packed(&delta, ZParam::Finite(1), 1.0, &mut rng, &mut packed);
         let req = Request::Submit {
             pid: a,
             round: 5,
             slot: 0,
             loss: 0.0,
             ef_scale: None,
-            payload: wire::encode(&crate::compress::Message::Signs(packed)),
+            payload: sign_payload_dim(1, D + 1),
         };
         assert_eq!(st.handle(&req, 4), Reply::Submit(SubmitReply::Malformed));
         // The round is still waiting for an honest submission.

@@ -68,6 +68,13 @@ pub fn encode(m: &Metrics) -> String {
         "gauge",
     );
     let _ = writeln!(out, "zsfa_clients_selected {}", fnum(m.selected_last.get()));
+    family(
+        &mut out,
+        "zsfa_simd_path",
+        "Dispatched SIMD kernel path (info gauge; the path label carries the value).",
+        "gauge",
+    );
+    let _ = writeln!(out, "zsfa_simd_path{{path=\"{}\"}} 1", m.simd_path());
     family(&mut out, "zsfa_folds_total", "Remote slot folds applied.", "counter");
     let _ = writeln!(out, "zsfa_folds_total {}", m.folds_total.get());
     family(
@@ -139,6 +146,7 @@ mod tests {
             "zsfa_clients_arrived_total",
             "zsfa_clients_selected_total",
             "zsfa_coord_replies_total",
+            "zsfa_simd_path",
             "zsfa_phase_ms",
             "zsfa_round_ms",
         ] {
@@ -147,6 +155,14 @@ mod tests {
         // One sample line per coordinator reply code.
         assert!(text.contains("zsfa_coord_replies_total{code=\"rendezvous\"} 0"));
         assert!(text.contains("zsfa_coord_replies_total{code=\"submit_stale\"} 0"));
+        // The info gauge names a real dispatch path (checked by value set,
+        // not by re-reading dispatch — other tests may re-point it).
+        assert!(
+            ["scalar", "avx2", "neon"]
+                .iter()
+                .any(|p| text.contains(&format!("zsfa_simd_path{{path=\"{p}\"}} 1"))),
+            "no dispatch path sample in {text}"
+        );
     }
 
     #[test]

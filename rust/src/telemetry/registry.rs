@@ -174,6 +174,13 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// The SIMD kernel path the process dispatched to (an info-style
+    /// label, not a stored cell: dispatch is process-wide and resolved
+    /// once, so exporters read it straight from `compress::simd`).
+    pub fn simd_path(&self) -> &'static str {
+        crate::compress::simd::active().label()
+    }
+
     /// Structured snapshot (the `/metrics.json` endpoint and the watcher
     /// payload). Keys are stable; see the pinned test below.
     pub fn to_json(&self) -> Json {
@@ -192,6 +199,7 @@ impl Metrics {
         m.insert("selected_last".into(), num(self.selected_last.get()));
         m.insert("folds_total".into(), cnt(&self.folds_total));
         m.insert("client_updates_total".into(), cnt(&self.client_updates_total));
+        m.insert("simd_path".into(), Json::Str(self.simd_path().to_string()));
         let mut coord = std::collections::BTreeMap::new();
         for (kind, c) in COORD_KINDS.iter().zip(&self.coord) {
             coord.insert(kind.label().to_string(), cnt(c));
@@ -277,6 +285,7 @@ mod tests {
             "\"selected_total\":0",
             "\"folds_total\":0",
             "\"client_updates_total\":0",
+            "\"simd_path\":\"",
             "\"coord\":{",
             "\"rendezvous\":0",
             "\"submit_duplicate\":0",

@@ -7,6 +7,12 @@
 //! These tests pin each of them byte-identical to the reference across
 //! boundary lengths, all `ZParam` families and all `SigmaRule`s — the "RNG
 //! stream contract" of DESIGN.md.
+//!
+//! The kernels dispatch through `compress::simd` at runtime (AVX2 / NEON /
+//! scalar). CI runs this whole suite twice (`ZSFA_SIMD=off` and default
+//! dispatch); in addition, the `*_across_simd_paths` tests below force each
+//! available backend explicitly and assert byte-identical words, counts and
+//! f32 bit patterns, so a backend divergence fails even in a single run.
 
 use std::sync::Mutex;
 use zsignfedavg::compress::agg::{
@@ -16,12 +22,22 @@ use zsignfedavg::compress::kernel;
 use zsignfedavg::compress::pack::{PackedSigns, VoteAccumulator};
 use zsignfedavg::compress::qsgd::Qsgd;
 use zsignfedavg::compress::sign::{SigmaRule, StochasticSign};
+use zsignfedavg::compress::simd::{self, SimdPath};
 use zsignfedavg::compress::sparsify::{SparseSign, TopK};
 use zsignfedavg::compress::{Compressor, Message};
 use zsignfedavg::rng::{Pcg64, ZParam};
 use zsignfedavg::tensor;
 
-const BOUNDARY_DIMS: [usize; 8] = [0, 1, 63, 64, 65, 127, 128, 1000];
+/// Unaligned tails around every lane width the SIMD backends use (4- and
+/// 8-wide groups, 64-bit words, plus a 4096+3 page-ish slab).
+const BOUNDARY_DIMS: [usize; 11] = [0, 1, 63, 64, 65, 127, 128, 255, 256, 1000, 4099];
+
+/// Serializes the tests that re-point the global kernel dispatch. Tests
+/// *not* holding this lock are unaffected by a concurrent re-point: every
+/// backend is bit-identical, so a racing reader only ever sees equivalent
+/// kernels — but the forcing tests themselves must not race each other, or
+/// they could compare a backend against itself.
+static DISPATCH: Mutex<()> = Mutex::new(());
 
 fn gen_vec(rng: &mut Pcg64, d: usize) -> Vec<f32> {
     (0..d).map(|_| rng.uniform_in(-2.0, 2.0) as f32).collect()
@@ -247,6 +263,119 @@ fn sign_absorb_chain_matches_scalar_chain() {
     agg.reduce(&lanes, &mut got);
     for (j, (g, w)) in got.iter().zip(&want).enumerate() {
         assert_eq!(g.to_bits(), w.to_bits(), "j={j}");
+    }
+}
+
+/// The full fused-kernel matrix — unaligned-tail d sweep × every `ZParam`
+/// × every `SigmaRule` — forced through each available SIMD backend in
+/// turn: packed words, trailing-bit invariant and the continued RNG stream
+/// must be byte-identical to the scalar backend.
+#[test]
+fn fused_kernel_identical_across_simd_paths() {
+    let _g = DISPATCH.lock().unwrap_or_else(|e| e.into_inner());
+    let zs = [ZParam::Finite(1), ZParam::Finite(2), ZParam::Finite(3), ZParam::Inf];
+    let rules = [
+        SigmaRule::Fixed(0.0),
+        SigmaRule::Fixed(0.7),
+        SigmaRule::L2Norm,
+        SigmaRule::InfNorm,
+    ];
+    let paths = simd::available();
+    assert_eq!(paths[0], SimdPath::Scalar);
+    let mut data_rng = Pcg64::seeded(0x51d);
+    for &d in &BOUNDARY_DIMS {
+        let x = gen_vec(&mut data_rng, d);
+        for z in zs {
+            for rule in rules {
+                let sigma = match rule {
+                    SigmaRule::Fixed(s) => s,
+                    SigmaRule::L2Norm => tensor::norm2(&x) as f32,
+                    SigmaRule::InfNorm => tensor::norm_inf(&x) as f32,
+                };
+                let mut per_path: Vec<(Vec<u64>, u64)> = Vec::new();
+                for &path in &paths {
+                    assert!(simd::set_path(path), "{path:?} unavailable");
+                    let mut rng = Pcg64::new(23, d as u64);
+                    rng.normal(); // engage the Gaussian spare cache
+                    let mut p = PackedSigns::zeroed(0);
+                    kernel::stochastic_sign_packed(&x, z, sigma, &mut rng, &mut p);
+                    per_path.push((p.words().to_vec(), rng.next_u64()));
+                }
+                for (i, r) in per_path.iter().enumerate().skip(1) {
+                    let p = paths[i];
+                    assert_eq!(r, &per_path[0], "{p:?} vs scalar z={z} rule={rule:?} d={d}");
+                }
+            }
+        }
+    }
+    simd::set_path(simd::detected_best());
+}
+
+/// Satellite of the vote pipeline: the merge-associativity and
+/// slot-permutation properties, plus majority + scaled decode, run under
+/// each available SIMD backend — counts, packed words and decoded f32 bit
+/// patterns must be byte-identical across backends (and the properties
+/// must hold within each).
+#[test]
+fn vote_merge_properties_identical_across_simd_paths() {
+    let _g = DISPATCH.lock().unwrap_or_else(|e| e.into_inner());
+    let d = 517;
+    let mut rng = Pcg64::seeded(0xb07e);
+    let signs: Vec<PackedSigns> = (0..19)
+        .map(|_| {
+            let v: Vec<i8> =
+                (0..d).map(|_| if rng.next_u64() & 1 == 0 { 1i8 } else { -1 }).collect();
+            PackedSigns::from_signs(&v)
+        })
+        .collect();
+
+    // Everything the vote pipeline produces under one dispatch path:
+    // associativity counts both ways, slot-permuted counts, majority words
+    // and a scaled decode of the majority.
+    let run = |signs: &[PackedSigns]| {
+        let mk = |range: std::ops::Range<usize>| {
+            let mut acc = VoteAccumulator::new(d);
+            for s in &signs[range] {
+                acc.add(s);
+            }
+            acc
+        };
+        let (a, b, c) = (mk(0..3), mk(3..8), mk(8..19));
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut right = a.clone();
+        right.merge(&bc);
+        let left_counts = left.counts().to_vec();
+        let right_counts = right.counts().to_vec();
+        // Slot permutation: the same votes in reversed add order.
+        let mut rev = VoteAccumulator::new(d);
+        for s in signs.iter().rev() {
+            rev.add(s);
+        }
+        let rev_counts = rev.counts().to_vec();
+        let majority = left.majority();
+        let majority_words = majority.words().to_vec();
+        let mut decoded = vec![0.0f32; d];
+        majority.decode_scaled_into(0.37, &mut decoded);
+        let decoded_bits: Vec<u32> = decoded.iter().map(|f| f.to_bits()).collect();
+        (left_counts, right_counts, rev_counts, majority_words, decoded_bits)
+    };
+
+    let mut per_path = Vec::new();
+    for path in simd::available() {
+        assert!(simd::set_path(path), "{path:?} unavailable");
+        per_path.push((path, run(&signs)));
+    }
+    simd::set_path(simd::detected_best());
+
+    let (_, base) = &per_path[0];
+    assert_eq!(base.0, base.1, "merge associativity under the scalar backend");
+    assert_eq!(base.0, base.2, "slot-permutation invariance under the scalar backend");
+    for (path, r) in &per_path[1..] {
+        assert_eq!(r, base, "{path:?} diverges from the scalar backend");
     }
 }
 
