@@ -18,6 +18,10 @@
 #   make metrics-smoke telemetry end-to-end: scrape GET /metrics during a
 #                    TCP session, check families + monotone counters, render
 #                    one `zsfa watch` frame, byte-diff vs telemetry-off (CI)
+#   make ckpt-smoke  crash recovery end-to-end: TCP serve/join with
+#                    --checkpoint-every, kill -9 the coordinator once a
+#                    snapshot lands, `zsfa resume` it with a fresh cohort,
+#                    byte-diff the result tree vs an uninterrupted run (CI)
 #
 # The smoke targets export ZSFA_FIXED_CLOCK=0 (telemetry::Clock) so wall_ms
 # is pinned and whole result trees — raw CSVs included — byte-diff cleanly.
@@ -30,7 +34,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test bench bench-build bench-smoke bench-json determinism spec-smoke service-smoke metrics-smoke fmt lint python artifacts ci clean
+.PHONY: build test bench bench-build bench-smoke bench-json determinism spec-smoke service-smoke metrics-smoke ckpt-smoke fmt lint python artifacts ci clean
 
 build:
 	$(CARGO) build --release
@@ -153,6 +157,7 @@ metrics-smoke: build
 	@set -e; for fam in zsfa_rounds_total zsfa_round_current zsfa_objective zsfa_sigma \
 	  zsfa_bits_up_total zsfa_bits_down_total zsfa_clients_arrived_total \
 	  zsfa_clients_selected_total zsfa_coord_replies_total zsfa_simd_path \
+	  zsfa_checkpoints_total zsfa_resume_total \
 	  zsfa_phase_ms zsfa_round_ms; do \
 	  grep -q "^# TYPE $$fam " metrics_scrape.txt || { echo "scrape missing $$fam"; exit 1; }; \
 	  grep -q "^# TYPE $$fam " metrics_dump.txt || { echo "dump missing $$fam"; exit 1; }; \
@@ -163,6 +168,50 @@ metrics-smoke: build
 	  test -n "$$s" && test -n "$$d" && test "$$d" -ge "$$s" && test "$$d" -gt 0
 	diff -r results_metrics_off/results results_metrics_on/results
 	@echo "metrics-smoke: families served, counters monotone, watch rendered, results byte-identical"
+
+# Crash-recovery smoke (DESIGN.md §7): a TCP serve/join session with
+# --checkpoint-every is kill -9'd once the first snapshot lands, then
+# `zsfa resume <ckpt>` re-serves the embedded spec on the same address
+# (the snapshot IS the spec — no drift possible), a fresh cohort joins,
+# and the finished result tree must byte-diff clean against an
+# uninterrupted fixed-clock run. The kill is deliberately untimed beyond
+# "a snapshot exists": recovery must converge to the identical tree no
+# matter where between round boundaries the SIGKILL lands (latest-wins
+# snapshots + whole-file CSV writes at series end make this safe).
+# quickstart.json's algorithms are stateless client-side, so a brand-new
+# cohort resumes exactly (participant-held EF state is covered by
+# rust/tests/integration_ckpt.rs instead).
+ckpt-smoke: build
+	rm -rf results_ckpt_ref results_ckpt_tcp ckpts_smoke
+	mkdir -p results_ckpt_ref results_ckpt_tcp
+	cd results_ckpt_ref && ZSFA_FIXED_CLOCK=0 ../target/release/zsfa run \
+	  ../rust/examples/quickstart.json --parallelism 1
+	@set -e; cd results_ckpt_tcp; \
+	  ZSFA_FIXED_CLOCK=0 ../target/release/zsfa serve ../rust/examples/quickstart.json \
+	    --addr 127.0.0.1:7445 --min-participants 2 \
+	    --checkpoint-every 10 --checkpoint-dir ../ckpts_smoke & srv=$$!; \
+	  timeout 180 ../target/release/zsfa join ../rust/examples/quickstart.json \
+	    --addr 127.0.0.1:7445 --patience-s 60 & j1=$$!; \
+	  timeout 180 ../target/release/zsfa join ../rust/examples/quickstart.json \
+	    --addr 127.0.0.1:7445 --patience-s 60 & j2=$$!; \
+	  for i in $$(seq 1 300); do \
+	    test -f ../ckpts_smoke/fig1_d50.ckpt && break || sleep 0.2; \
+	  done; \
+	  test -f ../ckpts_smoke/fig1_d50.ckpt || { echo "no snapshot appeared"; \
+	    kill -9 $$srv $$j1 $$j2 2>/dev/null; exit 1; }; \
+	  kill -9 $$srv 2>/dev/null || true; \
+	  echo "ckpt-smoke: coordinator kill -9'd after first snapshot"; \
+	  wait $$j1 || true; wait $$j2 || true; wait $$srv || true
+	@set -e; cd results_ckpt_tcp; \
+	  ZSFA_FIXED_CLOCK=0 timeout 180 ../target/release/zsfa resume \
+	    ../ckpts_smoke/fig1_d50.ckpt & srv=$$!; \
+	  timeout 180 ../target/release/zsfa join ../rust/examples/quickstart.json \
+	    --addr 127.0.0.1:7445 --patience-s 60 & j1=$$!; \
+	  timeout 180 ../target/release/zsfa join ../rust/examples/quickstart.json \
+	    --addr 127.0.0.1:7445 --patience-s 60 & j2=$$!; \
+	  wait $$srv && wait $$j1 && wait $$j2
+	diff -r results_ckpt_ref/results results_ckpt_tcp/results
+	@echo "ckpt-smoke: killed-and-resumed TCP session byte-identical to the uninterrupted run"
 
 fmt:
 	$(CARGO) fmt --all -- --check

@@ -1,4 +1,4 @@
-//! END-TO-END VALIDATION DRIVER (DESIGN.md §7): the full three-layer stack
+//! END-TO-END VALIDATION DRIVER (DESIGN.md §8): the full three-layer stack
 //! on a real small workload.
 //!
 //! Trains the paper's 2-conv CNN on synthMNIST federated across 10

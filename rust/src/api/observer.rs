@@ -25,7 +25,7 @@ use crate::telemetry::{Phase, Telemetry};
 use crate::util::json::Json;
 use std::cell::RefCell;
 use std::collections::BTreeMap;
-use std::io::Write as _;
+use std::io::{Seek, SeekFrom, Write as _};
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
@@ -59,6 +59,22 @@ pub trait RoundObserver {
 
     /// All repeats of one series finished and were aggregated.
     fn on_series_end(&mut self, _ctx: &SeriesCtx, _agg: &Aggregated, _runs: &[RunResult]) {}
+
+    /// Capture this observer's output-stream position for a checkpoint
+    /// (`ckpt::Snapshot::observer_marks`). `None` — the default — means
+    /// the sink needs no mark: it either holds no mid-run partial state
+    /// ([`CsvSink`] writes whole files at series end) or cannot rewind.
+    fn ckpt_mark(&mut self) -> Option<u64> {
+        None
+    }
+
+    /// Rewind the output stream to a mark captured by
+    /// [`RoundObserver::ckpt_mark`], discarding everything written after
+    /// it (the partial rounds between the checkpoint and the crash), so a
+    /// resumed session continues the stream byte-identically.
+    fn ckpt_restore(&mut self, _mark: Option<u64>) -> std::io::Result<()> {
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -147,6 +163,18 @@ impl JsonlSink {
         Ok(JsonlSink { out: std::io::BufWriter::new(f), tele: Telemetry::disabled() })
     }
 
+    /// Open the event stream at `path` for appending (the resume path:
+    /// everything already on disk is kept; pair with
+    /// [`RoundObserver::ckpt_restore`] to drop partial post-checkpoint
+    /// lines first).
+    pub fn append(path: &Path) -> crate::error::Result<JsonlSink> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(JsonlSink { out: std::io::BufWriter::new(f), tele: Telemetry::disabled() })
+    }
+
     /// Extend `round` events with the telemetry keys (builder-style).
     pub fn with_telemetry(mut self, tele: Telemetry) -> JsonlSink {
         self.tele = tele;
@@ -219,6 +247,26 @@ impl RoundObserver for JsonlSink {
         ]);
         self.out.flush().expect("flushing jsonl events");
     }
+
+    /// The mark is the flushed byte length of the stream: every event up
+    /// to the checkpointed round is on disk and accounted.
+    fn ckpt_mark(&mut self) -> Option<u64> {
+        self.out.flush().ok()?;
+        self.out.get_mut().stream_position().ok()
+    }
+
+    /// Truncate back to the mark. Writes after a truncate land at the new
+    /// end in both write and append modes, so the resumed stream continues
+    /// exactly where the checkpointed one left off.
+    fn ckpt_restore(&mut self, mark: Option<u64>) -> std::io::Result<()> {
+        if let Some(pos) = mark {
+            self.out.flush()?;
+            let f = self.out.get_mut();
+            f.set_len(pos)?;
+            f.seek(SeekFrom::Start(pos))?;
+        }
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -261,5 +309,91 @@ impl RoundObserver for MemorySink {
             aggregated: agg.clone(),
             runs: runs.to_vec(),
         });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_ctx(dir: &Path) -> SeriesCtx {
+        SeriesCtx {
+            experiment: "obs_test".into(),
+            label: "series".into(),
+            display: "series".into(),
+            algorithm: "gd".into(),
+            index: 0,
+            total: 1,
+            out_dir: dir.to_path_buf(),
+        }
+    }
+
+    fn test_rec(round: usize) -> RoundRecord {
+        RoundRecord {
+            round,
+            objective: 2.0 - round as f64 * 0.25,
+            accuracy: None,
+            grad_norm_sq: None,
+            bits_up: 64 * (round as u64 + 1),
+            bits_down: 0,
+            sigma: 1.0,
+            wall_ms: 0.0,
+            sim_time_s: 0.0,
+            arrived: 4,
+            selected: 4,
+        }
+    }
+
+    #[test]
+    fn jsonl_crash_after_mark_resumes_byte_identical() {
+        let dir = std::env::temp_dir().join(format!("zsfa_obs_t{}", std::process::id()));
+        let ctx = test_ctx(&dir);
+
+        // Reference: one uninterrupted stream of rounds 0..6.
+        let ref_path = dir.join("ref.jsonl");
+        let mut r = JsonlSink::create(&ref_path).unwrap();
+        for t in 0..6 {
+            r.on_round(&ctx, 0, &test_rec(t));
+        }
+        drop(r);
+
+        // Crashed run: rounds 0..3 land, a checkpoint marks the stream,
+        // then two post-checkpoint rounds are written before the "crash"
+        // (drop without cleanup — the partial lines persist on disk).
+        let crash_path = dir.join("crash.jsonl");
+        let mut s = JsonlSink::create(&crash_path).unwrap();
+        for t in 0..3 {
+            s.on_round(&ctx, 0, &test_rec(t));
+        }
+        let mark = s.ckpt_mark();
+        assert!(mark.unwrap() > 0);
+        for t in 3..5 {
+            s.on_round(&ctx, 0, &test_rec(t));
+        }
+        drop(s);
+
+        // Resume: append-mode reopen keeps rounds 0..3, the restore
+        // truncates the partial tail, and the replayed rounds 3..6 land
+        // exactly where the uninterrupted stream put them.
+        let mut s2 = JsonlSink::append(&crash_path).unwrap();
+        s2.ckpt_restore(mark).unwrap();
+        for t in 3..6 {
+            s2.on_round(&ctx, 0, &test_rec(t));
+        }
+        drop(s2);
+
+        let want = std::fs::read(&ref_path).unwrap();
+        let got = std::fs::read(&crash_path).unwrap();
+        assert_eq!(got, want, "resumed stream diverges from uninterrupted one");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn default_marks_are_none_and_restore_is_a_no_op() {
+        let mut csv = CsvSink::new();
+        assert_eq!(csv.ckpt_mark(), None);
+        csv.ckpt_restore(Some(12345)).unwrap();
+        let mut mem = MemorySink::new();
+        assert_eq!(mem.ckpt_mark(), None);
     }
 }

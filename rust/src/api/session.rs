@@ -11,16 +11,21 @@
 
 use super::observer::{CsvSink, ProgressSink, RoundObserver, SeriesCtx};
 use super::spec::{ExperimentSpec, NeuralSpec, TransportSpec, WorkloadSpec};
+use crate::ckpt::{CheckpointPolicy, Snapshot};
 use crate::data::{partition, synth};
-use crate::error::{bail, Result};
+use crate::error::{bail, Error, Result};
 use crate::fl::backend::{AnalyticBackend, TrainBackend};
+use crate::fl::engine::{root_for_seed, CkptHook, EngineCkpt};
 use crate::fl::metrics::{aggregate, Aggregated, RunResult};
-use crate::fl::server::run_experiment_instrumented;
+use crate::fl::server::run_experiment_resumable;
 use crate::problems::consensus::Consensus;
 use crate::problems::least_squares::LeastSquares;
+use crate::rng::RngSnapshot;
 use crate::runtime::{ModelRuntime, XlaBackend};
 use crate::service::ServiceHost;
 use crate::telemetry::Telemetry;
+use std::cell::RefCell;
+use std::path::PathBuf;
 
 impl WorkloadSpec {
     /// Materialize a fresh backend for one repeat. Analytic workloads are
@@ -139,6 +144,46 @@ impl Session {
     /// repeats each (repeat `r` seeded by `spec.seed_for_repeat(r)`),
     /// streaming progress to the observers.
     pub fn run(&mut self, spec: &ExperimentSpec) -> Result<SessionResult> {
+        self.run_inner(spec, &CheckpointPolicy::off(), None)
+    }
+
+    /// [`Session::run`] with crash-recovery snapshots: whenever `policy`
+    /// fires at a round boundary, the full session state (iterate, RNG,
+    /// EF residuals, completed runs, observer marks, coordinator pins) is
+    /// written atomically to `policy.path_for(spec.name)`. A failed write
+    /// warns and keeps running — checkpointing never aborts a session.
+    pub fn run_with_checkpoints(
+        &mut self,
+        spec: &ExperimentSpec,
+        policy: &CheckpointPolicy,
+    ) -> Result<SessionResult> {
+        self.run_inner(spec, policy, None)
+    }
+
+    /// Resume a session from a [`Snapshot`], continuing to take new
+    /// checkpoints under `policy`. Refuses (with a
+    /// [`crate::error::ErrorKind::Checkpoint`] error) when `spec` does not
+    /// fingerprint-match the spec the snapshot was captured under.
+    ///
+    /// Series that finished before the snapshot are *not* re-run — their
+    /// outputs are already on disk — so the returned [`SessionResult`]
+    /// contains only the snapshot's series onward.
+    pub fn resume(
+        &mut self,
+        spec: &ExperimentSpec,
+        snap: &Snapshot,
+        policy: &CheckpointPolicy,
+    ) -> Result<SessionResult> {
+        snap.check_spec(&spec.to_json())?;
+        self.run_inner(spec, policy, Some(snap))
+    }
+
+    fn run_inner(
+        &mut self,
+        spec: &ExperimentSpec,
+        policy: &CheckpointPolicy,
+        resume: Option<&Snapshot>,
+    ) -> Result<SessionResult> {
         if let Err(errs) = spec.validate() {
             let msgs: Vec<String> = errs.iter().map(|e| e.to_string()).collect();
             bail!("invalid experiment spec: {}", msgs.join("; "));
@@ -182,10 +227,36 @@ impl Session {
             }
         };
 
+        // Checkpoint/resume plumbing. On resume: bump the counter, roll
+        // every observer back to its mark (truncating any lines written
+        // after the snapshot), and re-seed the coordinator's sticky pins.
+        policy.arm();
+        let spec_json = spec.to_json();
+        if let Some(snap) = resume {
+            tele.count_resume();
+            for (o, mark) in self.observers.iter_mut().zip(&snap.observer_marks) {
+                o.ckpt_restore(*mark)
+                    .map_err(|e| Error::checkpoint(format!("observer restore: {e}")))?;
+            }
+            if let Some(h) = host.as_ref() {
+                h.restore_pins(&snap.pins);
+            }
+        }
+        // The round callback and the checkpoint hook both need the
+        // observers mid-run (records vs. marks) — hence the RefCell; the
+        // two borrows never overlap in time.
+        let observers = RefCell::new(&mut self.observers);
+
         let expanded = spec.expanded_series();
         let total = expanded.len();
         let mut out = Vec::with_capacity(total);
         for (index, s) in expanded.into_iter().enumerate() {
+            if let Some(snap) = resume {
+                if index < snap.series as usize {
+                    // Finished before the snapshot; outputs already exist.
+                    continue;
+                }
+            }
             let ctx = SeriesCtx {
                 experiment: spec.name.clone(),
                 label: s.label.clone(),
@@ -195,38 +266,81 @@ impl Session {
                 total,
                 out_dir: spec.output.dir.clone(),
             };
-            let mut runs = Vec::with_capacity(spec.repeats);
-            for repeat in 0..spec.repeats {
+            let runs = RefCell::new(Vec::with_capacity(spec.repeats));
+            let mut first_repeat = 0usize;
+            let mut engine_resume: Option<&EngineCkpt> = None;
+            if let Some(snap) = resume {
+                if index == snap.series as usize {
+                    // Completed repeats are adopted verbatim (their
+                    // observer output predates the mark — don't re-fire
+                    // on_run_end); the interrupted repeat restarts from
+                    // the captured engine state.
+                    for recs in &snap.completed_runs {
+                        runs.borrow_mut().push(RunResult {
+                            algorithm: s.algorithm.name.clone(),
+                            records: recs.clone(),
+                        });
+                    }
+                    first_repeat = snap.repeat as usize;
+                    engine_resume = Some(&snap.engine);
+                }
+            }
+            for repeat in first_repeat..spec.repeats {
                 let mut backend = spec.workload.build_backend()?;
                 let cfg = spec.server_config(repeat);
-                let observers = &mut self.observers;
+                // The engine checkpoint applies to the snapshot's repeat
+                // only; later repeats start fresh.
+                let this_resume = engine_resume.take();
                 let mut on_round = |rec: &crate::fl::RoundRecord| {
-                    for o in observers.iter_mut() {
+                    for o in observers.borrow_mut().iter_mut() {
                         o.on_round(&ctx, repeat, rec);
                     }
                 };
+                let mut hook_store;
+                let hook: Option<&mut dyn CkptHook> = if policy.is_off() {
+                    None
+                } else {
+                    hook_store = SessionHook {
+                        policy,
+                        path: policy.path_for(&spec.name),
+                        spec_json: &spec_json,
+                        series: index as u32,
+                        repeat: repeat as u32,
+                        root: root_for_seed(cfg.seed).state_snapshot(),
+                        runs: &runs,
+                        observers: &observers,
+                        pins: Vec::new(),
+                        tele: tele.clone(),
+                    };
+                    Some(&mut hook_store)
+                };
                 let run = match host.as_mut() {
-                    None => run_experiment_instrumented(
+                    None => run_experiment_resumable(
                         backend.as_mut(),
                         &s.algorithm,
                         &cfg,
                         &tele,
                         &mut on_round,
+                        this_resume,
+                        hook,
                     ),
-                    Some(h) => h.run_one(
+                    Some(h) => h.run_one_resumable(
                         backend.as_mut(),
                         &s.algorithm,
                         &cfg,
                         index as u32,
                         repeat as u32,
                         &mut on_round,
+                        this_resume,
+                        hook,
                     )?,
                 };
-                for o in self.observers.iter_mut() {
+                for o in observers.borrow_mut().iter_mut() {
                     o.on_run_end(&ctx, repeat, &run);
                 }
-                runs.push(run);
+                runs.borrow_mut().push(run);
             }
+            let runs = runs.into_inner();
             let mut agg = aggregate(&runs);
             if let Some(f_star) = f_star {
                 // Report optimality gaps like the historical drivers did:
@@ -236,7 +350,7 @@ impl Session {
                     *v -= f_star;
                 }
             }
-            for o in self.observers.iter_mut() {
+            for o in observers.borrow_mut().iter_mut() {
                 o.on_series_end(&ctx, &agg, &runs);
             }
             out.push(SeriesResult {
@@ -262,6 +376,56 @@ impl Session {
             }
         }
         Ok(SessionResult { series: out })
+    }
+}
+
+/// The session's [`CkptHook`]: asks the policy when to snapshot, and on
+/// each capture wraps the engine state with the session context (spec
+/// fingerprint, series/repeat cursor, completed runs, observer marks,
+/// coordinator pins) and writes it atomically. Write failures warn on
+/// stderr and never abort the run — a broken checkpoint disk should not
+/// kill an otherwise healthy session.
+struct SessionHook<'a, 'b> {
+    policy: &'a CheckpointPolicy,
+    path: PathBuf,
+    spec_json: &'a str,
+    series: u32,
+    repeat: u32,
+    root: RngSnapshot,
+    runs: &'a RefCell<Vec<RunResult>>,
+    observers: &'a RefCell<&'b mut Vec<Box<dyn RoundObserver>>>,
+    /// Coordinator pins pushed by the host just before `store` (empty on
+    /// the engine path, which has no coordinator).
+    pins: Vec<(u64, u64)>,
+    tele: Telemetry,
+}
+
+impl CkptHook for SessionHook<'_, '_> {
+    fn want(&mut self, next_round: u64) -> bool {
+        self.policy.want(next_round)
+    }
+
+    fn store_pins(&mut self, pins: Vec<(u64, u64)>) {
+        self.pins = pins;
+    }
+
+    fn store(&mut self, ck: EngineCkpt) {
+        let marks: Vec<Option<u64>> =
+            self.observers.borrow_mut().iter_mut().map(|o| o.ckpt_mark()).collect();
+        let snap = Snapshot {
+            spec_json: self.spec_json.to_string(),
+            series: self.series,
+            repeat: self.repeat,
+            root: self.root,
+            engine: ck,
+            completed_runs: self.runs.borrow().iter().map(|r| r.records.clone()).collect(),
+            pins: std::mem::take(&mut self.pins),
+            observer_marks: marks,
+        };
+        match snap.write_atomic(&self.path) {
+            Ok(()) => self.tele.count_checkpoint(),
+            Err(e) => eprintln!("warning: checkpoint write failed: {e}"),
+        }
     }
 }
 
@@ -391,6 +555,56 @@ mod tests {
         let err = Session::new().run(&bad).unwrap_err().to_string();
         assert!(err.contains("invalid experiment spec"), "{err}");
         assert!(err.contains("rounds"), "{err}");
+    }
+
+    #[test]
+    fn checkpointed_session_resumes_to_the_identical_result() {
+        // Run with periodic checkpoints; the file left on disk is the
+        // *last* capture (series 0, repeat 1, next_round 15). Resuming it
+        // must reproduce the uninterrupted result exactly: repeat 0
+        // adopted from completed_runs, repeat 1 re-run from round 15.
+        let dir = std::env::temp_dir().join("zsfa_session_ckpt_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let policy = CheckpointPolicy::every(&dir, 5);
+        let want = Session::new().run_with_checkpoints(&spec(), &policy).unwrap();
+
+        let path = policy.path_for("session_test");
+        let snap = Snapshot::load(&path).unwrap();
+        assert_eq!((snap.series, snap.repeat), (0, 1));
+        assert_eq!(snap.engine.next_round, 15);
+        assert_eq!(snap.completed_runs.len(), 1);
+
+        let got = Session::new().resume(&spec(), &snap, &CheckpointPolicy::off()).unwrap();
+        assert_eq!(got.series.len(), want.series.len());
+        for (a, b) in want.series.iter().zip(&got.series) {
+            assert_eq!(a.runs.len(), b.runs.len());
+            for (ra, rb) in a.runs.iter().zip(&b.runs) {
+                assert_eq!(ra.records.len(), rb.records.len());
+                for (x, y) in ra.records.iter().zip(&rb.records) {
+                    let (mut x, mut y) = (*x, *y);
+                    x.wall_ms = 0.0;
+                    y.wall_ms = 0.0;
+                    assert_eq!(x, y, "{}", a.label);
+                }
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resume_under_a_modified_spec_is_refused() {
+        use crate::error::ErrorKind;
+        let dir = std::env::temp_dir().join("zsfa_session_ckpt_refusal_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let policy = CheckpointPolicy::every(&dir, 5);
+        Session::new().run_with_checkpoints(&spec(), &policy).unwrap();
+        let snap = Snapshot::load(&policy.path_for("session_test")).unwrap();
+        let err = Session::new()
+            .resume(&spec().rounds(21), &snap, &CheckpointPolicy::off())
+            .unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::Checkpoint);
+        assert!(err.to_string().contains("fingerprint"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -1,0 +1,908 @@
+//! Checkpoint/resume: versioned, checksummed binary snapshots of a
+//! running session, with byte-identical recovery.
+//!
+//! A [`Snapshot`] captures everything the round loop owns at a round
+//! boundary — the engine capture (`fl::engine::EngineCkpt`: iterate,
+//! server-optimizer state, plateau controller, EF residuals, bit/record
+//! cursors), the session cursor (expanded-series index, repeat), the
+//! completed repeats of the current series, the coordinator's sticky pins
+//! and each observer's output-stream mark — plus the *canonical spec
+//! JSON* and its FNV-1a/64 fingerprint. Per-round RNG streams are not
+//! stored: they are pure splits of the root generator (DESIGN.md §2.6),
+//! so a resumed round derives exactly the streams an uninterrupted run
+//! would. The root's [`crate::rng::RngSnapshot`] is embedded anyway as a
+//! tamper-evident cross-check on the seed.
+//!
+//! The wire format follows the same hardening discipline as
+//! `compress::wire` and `service::protocol`: little-endian fields, every
+//! length/count validated in wide (u128) arithmetic *before* any
+//! allocation, an FNV-1a/32 checksum over the whole body, and an
+//! adversarial decode suite (truncation sweep, byte flips, hostile
+//! counts, version skew). Decode failures are structured
+//! ([`CkptError`] → [`crate::error::ErrorKind::Checkpoint`]) — never a
+//! panic, and resuming under a *different* spec is refused by fingerprint
+//! before any engine state is touched.
+//!
+//! Snapshot writes are atomic (temp file + rename into place), so a crash
+//! mid-write leaves the previous snapshot intact.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::error::{Error, Result};
+use crate::fl::engine::EngineCkpt;
+use crate::fl::metrics::RoundRecord;
+use crate::fl::plateau::PlateauSnapshot;
+use crate::rng::RngSnapshot;
+
+/// Format magic ("zfck", little-endian).
+const MAGIC: u32 = u32::from_le_bytes(*b"zfck");
+
+/// Current snapshot format version.
+pub const VERSION: u8 = 1;
+
+/// FNV-1a over a byte slice, 32-bit (the frame checksum — same constants
+/// as `compress::wire` and `service::protocol`).
+fn fnv1a32(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// FNV-1a over a byte slice, 64-bit (the spec fingerprint).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Structured decode/resume failures. Deliberately does **not** implement
+/// `std::error::Error`: the crate's blanket `From<E: std::error::Error>`
+/// would classify it as `ErrorKind::Other`; use [`CkptError::into_error`]
+/// to convert with the `Checkpoint` kind intact.
+#[derive(Debug, PartialEq, Eq)]
+pub enum CkptError {
+    /// Fewer bytes than a field or the frame itself requires.
+    Truncated,
+    /// FNV-1a checksum mismatch (any corruption in the body).
+    BadChecksum,
+    /// The leading magic is not a checkpoint frame's.
+    BadMagic,
+    /// A checkpoint from an incompatible format version.
+    BadVersion(u8),
+    /// Well-sized and checksummed, but contents are unrepresentable
+    /// (bad flag byte, internal fingerprint mismatch, trailing bytes).
+    Corrupt,
+}
+
+impl std::fmt::Display for CkptError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CkptError::Truncated => write!(f, "truncated checkpoint"),
+            CkptError::BadChecksum => write!(f, "checkpoint checksum mismatch"),
+            CkptError::BadMagic => write!(f, "not a checkpoint file (bad magic)"),
+            CkptError::BadVersion(v) => write!(f, "unsupported checkpoint version {v}"),
+            CkptError::Corrupt => write!(f, "malformed checkpoint contents"),
+        }
+    }
+}
+
+impl CkptError {
+    /// Convert into the crate error with [`crate::error::ErrorKind::Checkpoint`].
+    pub fn into_error(self) -> Error {
+        Error::checkpoint(self)
+    }
+}
+
+/// When the round loops should capture a snapshot.
+#[derive(Debug, Clone, Default)]
+pub struct CheckpointPolicy {
+    /// Directory snapshots land in (`<dir>/<experiment>.ckpt`,
+    /// latest-wins).
+    pub dir: PathBuf,
+    /// Capture every k completed rounds.
+    pub every: Option<u64>,
+    /// Capture when the process receives `SIGUSR1` (call
+    /// [`CheckpointPolicy::arm`] once to install the handler).
+    pub on_signal: bool,
+}
+
+impl CheckpointPolicy {
+    /// The no-checkpointing policy.
+    pub fn off() -> CheckpointPolicy {
+        CheckpointPolicy::default()
+    }
+
+    /// Capture every `k` rounds into `dir`.
+    pub fn every(dir: impl Into<PathBuf>, k: u64) -> CheckpointPolicy {
+        CheckpointPolicy { dir: dir.into(), every: Some(k.max(1)), on_signal: false }
+    }
+
+    /// Whether this policy never captures.
+    pub fn is_off(&self) -> bool {
+        self.every.is_none() && !self.on_signal
+    }
+
+    /// Install the `SIGUSR1` handler when `on_signal` is set (idempotent;
+    /// no-op on targets without the signal).
+    pub fn arm(&self) {
+        if self.on_signal {
+            sig::install();
+        }
+    }
+
+    /// Whether to capture after the round that makes `next_round` next.
+    /// Consumes a pending signal request only when the periodic rule
+    /// doesn't already fire.
+    pub fn want(&self, next_round: u64) -> bool {
+        let periodic = match self.every {
+            Some(k) if k > 0 => next_round % k == 0,
+            _ => false,
+        };
+        periodic || (self.on_signal && sig::take())
+    }
+
+    /// The snapshot path for experiment `name` under this policy's dir.
+    pub fn path_for(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.ckpt"))
+    }
+}
+
+/// `SIGUSR1` → "checkpoint at the next round boundary". The handler body
+/// is a single relaxed atomic store — async-signal-safe. Registration
+/// calls the platform's `signal(2)` directly (no libc crate in the
+/// vendor set); on targets where the signal number is unknown this
+/// degrades to a no-op and only the periodic rule fires.
+mod sig {
+    use super::{AtomicBool, Ordering};
+
+    pub(super) static REQUESTED: AtomicBool = AtomicBool::new(false);
+
+    #[cfg(any(target_os = "linux", target_os = "macos"))]
+    mod imp {
+        #[cfg(target_os = "linux")]
+        pub const SIGUSR1: i32 = 10;
+        #[cfg(target_os = "macos")]
+        pub const SIGUSR1: i32 = 30;
+
+        extern "C" {
+            pub fn signal(signum: i32, handler: usize) -> usize;
+        }
+
+        pub extern "C" fn handler(_sig: i32) {
+            super::REQUESTED.store(true, super::Ordering::Relaxed);
+        }
+    }
+
+    pub(super) fn install() {
+        #[cfg(any(target_os = "linux", target_os = "macos"))]
+        unsafe {
+            imp::signal(imp::SIGUSR1, imp::handler as usize);
+        }
+    }
+
+    /// Consume a pending request.
+    pub(super) fn take() -> bool {
+        REQUESTED.swap(false, Ordering::Relaxed)
+    }
+
+    /// Test seam: set the flag as the handler would.
+    #[cfg(test)]
+    pub(super) fn raise() {
+        REQUESTED.store(true, Ordering::Relaxed);
+    }
+}
+
+/// A complete session snapshot (see the module docs for what is and is
+/// not captured).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Snapshot {
+    /// The running spec's canonical JSON (`ExperimentSpec::to_json`):
+    /// makes `zsfa resume <ckpt>` self-contained and anchors the
+    /// fingerprint refusal rule.
+    pub spec_json: String,
+    /// Index into the spec's *expanded* series list.
+    pub series: u32,
+    /// Repeat being executed within that series.
+    pub repeat: u32,
+    /// The run's root generator, exact (defensive cross-check; per-round
+    /// streams re-derive from it).
+    pub root: RngSnapshot,
+    /// The round loop's own state.
+    pub engine: EngineCkpt,
+    /// Records of repeats of the current series completed before the
+    /// capture (earlier series are fully on disk already).
+    pub completed_runs: Vec<Vec<RoundRecord>>,
+    /// Coordinator sticky pins `(client, pid)` (empty for in-process
+    /// transports; best-effort on restore — dead pids are re-stealable).
+    pub pins: Vec<(u64, u64)>,
+    /// Per-observer output-stream marks, in observer order (`Some(byte
+    /// offset)` for append-mode sinks; `None` for whole-file writers).
+    pub observer_marks: Vec<Option<u64>>,
+}
+
+impl Snapshot {
+    /// FNV-1a/64 of the embedded canonical spec JSON.
+    pub fn fingerprint(&self) -> u64 {
+        fnv1a64(self.spec_json.as_bytes())
+    }
+
+    /// Refuse to resume under a spec whose canonical JSON differs from
+    /// the one this snapshot was captured under.
+    pub fn check_spec(&self, spec_json: &str) -> Result<()> {
+        if fnv1a64(spec_json.as_bytes()) != self.fingerprint() {
+            return Err(Error::checkpoint(
+                "spec fingerprint mismatch: this checkpoint was captured under a \
+                 different experiment spec; resuming would silently diverge",
+            ));
+        }
+        Ok(())
+    }
+
+    /// Serialize to the framed binary format (body + FNV-1a/32 checksum).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Vec::with_capacity(256 + self.engine.params.len() * 4);
+        w.extend_from_slice(&MAGIC.to_le_bytes());
+        w.push(VERSION);
+        w.extend_from_slice(&self.fingerprint().to_le_bytes());
+        put_blob(&mut w, self.spec_json.as_bytes());
+        w.extend_from_slice(&self.series.to_le_bytes());
+        w.extend_from_slice(&self.repeat.to_le_bytes());
+        w.extend_from_slice(&self.root.state.to_le_bytes());
+        w.extend_from_slice(&self.root.inc.to_le_bytes());
+        put_opt_u64(&mut w, self.root.gauss_spare);
+        let e = &self.engine;
+        w.extend_from_slice(&e.next_round.to_le_bytes());
+        put_f32s(&mut w, &e.params);
+        put_f32s(&mut w, &e.momentum);
+        put_f32s(&mut w, &e.adam_v);
+        w.extend_from_slice(&e.adam_t.to_le_bytes());
+        match &e.plateau {
+            Some(p) => {
+                w.push(1);
+                w.extend_from_slice(&p.sigma.to_le_bytes());
+                w.extend_from_slice(&p.best.to_le_bytes());
+                w.extend_from_slice(&p.stall.to_le_bytes());
+            }
+            None => w.push(0),
+        }
+        w.extend_from_slice(&(e.ef_residuals.len() as u64).to_le_bytes());
+        for r in &e.ef_residuals {
+            put_f32s(&mut w, r);
+        }
+        w.extend_from_slice(&e.bits_up.to_le_bytes());
+        w.extend_from_slice(&e.bits_down.to_le_bytes());
+        w.extend_from_slice(&e.sim_time_s.to_le_bytes());
+        put_records(&mut w, &e.records);
+        w.extend_from_slice(&(self.completed_runs.len() as u64).to_le_bytes());
+        for run in &self.completed_runs {
+            put_records(&mut w, run);
+        }
+        w.extend_from_slice(&(self.pins.len() as u64).to_le_bytes());
+        for &(client, pid) in &self.pins {
+            w.extend_from_slice(&client.to_le_bytes());
+            w.extend_from_slice(&pid.to_le_bytes());
+        }
+        w.extend_from_slice(&(self.observer_marks.len() as u64).to_le_bytes());
+        for m in &self.observer_marks {
+            put_opt_u64(&mut w, *m);
+        }
+        let ck = fnv1a32(&w);
+        w.extend_from_slice(&ck.to_le_bytes());
+        w
+    }
+
+    /// Parse a framed snapshot. Hardened: checksum first, then magic and
+    /// version, then field-by-field reads where every length/count is
+    /// validated in u128 arithmetic against the remaining payload before
+    /// any allocation, and trailing bytes are rejected.
+    pub fn decode(bytes: &[u8]) -> std::result::Result<Snapshot, CkptError> {
+        // Smallest conceivable frame: magic + version + checksum.
+        if bytes.len() < 9 {
+            return Err(CkptError::Truncated);
+        }
+        let (body, ck_bytes) = bytes.split_at(bytes.len() - 4);
+        let ck = u32::from_le_bytes(ck_bytes.try_into().unwrap());
+        if fnv1a32(body) != ck {
+            return Err(CkptError::BadChecksum);
+        }
+        let mut c = Cursor { buf: body, pos: 0 };
+        if c.u32()? != MAGIC {
+            return Err(CkptError::BadMagic);
+        }
+        let version = c.u8()?;
+        if version != VERSION {
+            return Err(CkptError::BadVersion(version));
+        }
+        let fp = c.u64()?;
+        let spec_bytes = c.blob()?;
+        if fnv1a64(spec_bytes) != fp {
+            return Err(CkptError::Corrupt);
+        }
+        let spec_json =
+            String::from_utf8(spec_bytes.to_vec()).map_err(|_| CkptError::Corrupt)?;
+        let series = c.u32()?;
+        let repeat = c.u32()?;
+        let root = RngSnapshot {
+            state: c.u128()?,
+            inc: c.u128()?,
+            gauss_spare: get_opt_u64(&mut c)?,
+        };
+        let next_round = c.u64()?;
+        let params = c.f32s()?;
+        let momentum = c.f32s()?;
+        let adam_v = c.f32s()?;
+        let adam_t = c.u32()?;
+        let plateau = match c.u8()? {
+            0 => None,
+            1 => Some(PlateauSnapshot { sigma: c.f32()?, best: c.f64()?, stall: c.u64()? }),
+            _ => return Err(CkptError::Corrupt),
+        };
+        // Bounded loop without pre-allocation: each residual consumes at
+        // least its 8-byte count field, so a hostile count exhausts the
+        // buffer long before memory.
+        let n_ef = c.u64()?;
+        let mut ef_residuals = Vec::new();
+        for _ in 0..n_ef {
+            ef_residuals.push(c.f32s()?);
+        }
+        let bits_up = c.u64()?;
+        let bits_down = c.u64()?;
+        let sim_time_s = c.f64()?;
+        let records = get_records(&mut c)?;
+        let n_runs = c.u64()?;
+        let mut completed_runs = Vec::new();
+        for _ in 0..n_runs {
+            completed_runs.push(get_records(&mut c)?);
+        }
+        let n_pins = c.u64()?;
+        if (n_pins as u128) * 16 > c.remaining() as u128 {
+            return Err(CkptError::Truncated);
+        }
+        let mut pins = Vec::with_capacity(n_pins as usize);
+        for _ in 0..n_pins {
+            pins.push((c.u64()?, c.u64()?));
+        }
+        let n_marks = c.u64()?;
+        if n_marks as u128 > c.remaining() as u128 {
+            return Err(CkptError::Truncated);
+        }
+        let mut observer_marks = Vec::with_capacity(n_marks as usize);
+        for _ in 0..n_marks {
+            observer_marks.push(get_opt_u64(&mut c)?);
+        }
+        c.finish()?;
+        Ok(Snapshot {
+            spec_json,
+            series,
+            repeat,
+            root,
+            engine: EngineCkpt {
+                next_round,
+                params,
+                momentum,
+                adam_v,
+                adam_t,
+                plateau,
+                ef_residuals,
+                bits_up,
+                bits_down,
+                sim_time_s,
+                records,
+            },
+            completed_runs,
+            pins,
+            observer_marks,
+        })
+    }
+
+    /// Write atomically: serialize to `<path>.tmp`, then rename into
+    /// place, so a crash mid-write can never clobber the previous
+    /// snapshot with a half-written one.
+    pub fn write_atomic(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let tmp = path.with_extension("ckpt.tmp");
+        std::fs::write(&tmp, self.encode())?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Load and decode a snapshot file; all failures carry
+    /// [`crate::error::ErrorKind::Checkpoint`].
+    pub fn load(path: &Path) -> Result<Snapshot> {
+        let bytes = std::fs::read(path).map_err(|e| {
+            Error::checkpoint(format!("cannot read checkpoint {}: {e}", path.display()))
+        })?;
+        Snapshot::decode(&bytes)
+            .map_err(|e| e.into_error().wrap(format!("checkpoint {}", path.display())))
+    }
+}
+
+// -- writer helpers ----------------------------------------------------------
+
+fn put_blob(w: &mut Vec<u8>, bytes: &[u8]) {
+    w.extend_from_slice(&(bytes.len() as u64).to_le_bytes());
+    w.extend_from_slice(bytes);
+}
+
+fn put_f32s(w: &mut Vec<u8>, xs: &[f32]) {
+    w.extend_from_slice(&(xs.len() as u64).to_le_bytes());
+    for x in xs {
+        w.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_opt_u64(w: &mut Vec<u8>, v: Option<u64>) {
+    match v {
+        Some(x) => {
+            w.push(1);
+            w.extend_from_slice(&x.to_le_bytes());
+        }
+        None => w.push(0),
+    }
+}
+
+fn put_opt_f64(w: &mut Vec<u8>, v: Option<f64>) {
+    put_opt_u64(w, v.map(f64::to_bits));
+}
+
+fn put_records(w: &mut Vec<u8>, records: &[RoundRecord]) {
+    w.extend_from_slice(&(records.len() as u64).to_le_bytes());
+    for r in records {
+        w.extend_from_slice(&(r.round as u64).to_le_bytes());
+        w.extend_from_slice(&r.objective.to_le_bytes());
+        put_opt_f64(w, r.accuracy);
+        put_opt_f64(w, r.grad_norm_sq);
+        w.extend_from_slice(&r.bits_up.to_le_bytes());
+        w.extend_from_slice(&r.bits_down.to_le_bytes());
+        w.extend_from_slice(&r.sigma.to_le_bytes());
+        w.extend_from_slice(&r.wall_ms.to_le_bytes());
+        w.extend_from_slice(&r.sim_time_s.to_le_bytes());
+        w.extend_from_slice(&r.arrived.to_le_bytes());
+        w.extend_from_slice(&r.selected.to_le_bytes());
+    }
+}
+
+// -- reader helpers ----------------------------------------------------------
+
+fn get_opt_u64(c: &mut Cursor<'_>) -> std::result::Result<Option<u64>, CkptError> {
+    match c.u8()? {
+        0 => Ok(None),
+        1 => Ok(Some(c.u64()?)),
+        _ => Err(CkptError::Corrupt),
+    }
+}
+
+fn get_opt_f64(c: &mut Cursor<'_>) -> std::result::Result<Option<f64>, CkptError> {
+    Ok(get_opt_u64(c)?.map(f64::from_bits))
+}
+
+/// Every field in a record is ≥ 1 byte and the two options are 1–9, so a
+/// record consumes at least this many body bytes — the pre-allocation
+/// bound for hostile record counts.
+const MIN_RECORD_BYTES: u128 = 8 + 8 + 1 + 1 + 8 + 8 + 4 + 8 + 8 + 4 + 4;
+
+fn get_records(c: &mut Cursor<'_>) -> std::result::Result<Vec<RoundRecord>, CkptError> {
+    let n = c.u64()?;
+    if n as u128 * MIN_RECORD_BYTES > c.remaining() as u128 {
+        return Err(CkptError::Truncated);
+    }
+    let mut out = Vec::with_capacity(n as usize);
+    for _ in 0..n {
+        out.push(RoundRecord {
+            round: c.u64()? as usize,
+            objective: c.f64()?,
+            accuracy: get_opt_f64(c)?,
+            grad_norm_sq: get_opt_f64(c)?,
+            bits_up: c.u64()?,
+            bits_down: c.u64()?,
+            sigma: c.f32()?,
+            wall_ms: c.f64()?,
+            sim_time_s: c.f64()?,
+            arrived: c.u32()?,
+            selected: c.u32()?,
+        });
+    }
+    Ok(out)
+}
+
+/// Bounds-checked little-endian reader over the (already checksummed)
+/// body.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> std::result::Result<&'a [u8], CkptError> {
+        let end = self.pos.checked_add(n).ok_or(CkptError::Truncated)?;
+        if end > self.buf.len() {
+            return Err(CkptError::Truncated);
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> std::result::Result<u8, CkptError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> std::result::Result<u32, CkptError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> std::result::Result<u64, CkptError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn u128(&mut self) -> std::result::Result<u128, CkptError> {
+        Ok(u128::from_le_bytes(self.take(16)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> std::result::Result<f32, CkptError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> std::result::Result<f64, CkptError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Length-prefixed byte blob; the length is validated against the
+    /// remaining payload (wide arithmetic) before slicing.
+    fn blob(&mut self) -> std::result::Result<&'a [u8], CkptError> {
+        let n = self.u64()?;
+        if n as u128 > self.remaining() as u128 {
+            return Err(CkptError::Truncated);
+        }
+        self.take(n as usize)
+    }
+
+    /// Count-prefixed f32 vector; `n · 4` is validated in u128 before the
+    /// allocation, so a hostile count can neither overflow an offset nor
+    /// allocate beyond O(payload).
+    fn f32s(&mut self) -> std::result::Result<Vec<f32>, CkptError> {
+        let n = self.u64()?;
+        if n as u128 * 4 > self.remaining() as u128 {
+            return Err(CkptError::Truncated);
+        }
+        let bytes = self.take(n as usize * 4)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect())
+    }
+
+    /// Reject trailing bytes: a frame must account for every body byte.
+    fn finish(self) -> std::result::Result<(), CkptError> {
+        if self.pos != self.buf.len() {
+            return Err(CkptError::Corrupt);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::ErrorKind;
+
+    fn rec(round: usize, with_opts: bool) -> RoundRecord {
+        RoundRecord {
+            round,
+            objective: 1.25 - round as f64 * 0.125,
+            accuracy: if with_opts { Some(0.5 + round as f64 * 0.01) } else { None },
+            grad_norm_sq: if with_opts { Some(round as f64) } else { None },
+            bits_up: 1000 * (round as u64 + 1),
+            bits_down: 4096 * (round as u64 + 1),
+            sigma: 0.5,
+            wall_ms: 7.0,
+            sim_time_s: round as f64 * 0.25,
+            arrived: 6,
+            selected: 8,
+        }
+    }
+
+    /// A snapshot exercising every optional branch of the format.
+    fn full_snapshot() -> Snapshot {
+        Snapshot {
+            spec_json: r#"{"name":"demo","rounds":12}"#.to_string(),
+            series: 3,
+            repeat: 1,
+            root: RngSnapshot {
+                state: 0x0123_4567_89ab_cdef_0011_2233_4455_6677,
+                inc: 0x0f0f_0f0f_0f0f_0f0f_1357_9bdf_0246_8ace,
+                gauss_spare: Some(1.5f64.to_bits()),
+            },
+            engine: EngineCkpt {
+                next_round: 5,
+                params: vec![1.0, -2.5, 0.0, f32::MIN_POSITIVE],
+                momentum: vec![0.1, 0.2, 0.3, 0.4],
+                adam_v: vec![0.0; 4],
+                adam_t: 5,
+                plateau: Some(PlateauSnapshot { sigma: 0.25, best: 0.75, stall: 2 }),
+                ef_residuals: vec![vec![0.5, -0.5, 0.25, 0.0], vec![0.0; 4]],
+                bits_up: 123_456,
+                bits_down: 789_000,
+                sim_time_s: 1.5,
+                records: vec![rec(0, true), rec(2, false), rec(4, true)],
+            },
+            completed_runs: vec![vec![rec(0, true), rec(11, false)], vec![]],
+            pins: vec![(0, 17), (3, 42)],
+            observer_marks: vec![Some(8192), None],
+        }
+    }
+
+    /// The sparsest well-formed snapshot.
+    fn minimal_snapshot() -> Snapshot {
+        Snapshot {
+            spec_json: String::new(),
+            series: 0,
+            repeat: 0,
+            root: RngSnapshot { state: 1, inc: 3, gauss_spare: None },
+            engine: EngineCkpt {
+                next_round: 0,
+                params: Vec::new(),
+                momentum: Vec::new(),
+                adam_v: Vec::new(),
+                adam_t: 0,
+                plateau: None,
+                ef_residuals: Vec::new(),
+                bits_up: 0,
+                bits_down: 0,
+                sim_time_s: 0.0,
+                records: Vec::new(),
+            },
+            completed_runs: Vec::new(),
+            pins: Vec::new(),
+            observer_marks: Vec::new(),
+        }
+    }
+
+    /// Frame a raw body with a valid checksum, so tests reach the field
+    /// validation rather than the checksum gate.
+    fn seal(body: &[u8]) -> Vec<u8> {
+        let mut out = body.to_vec();
+        out.extend_from_slice(&fnv1a32(body).to_le_bytes());
+        out
+    }
+
+    #[test]
+    fn full_snapshot_roundtrips() {
+        let s = full_snapshot();
+        let back = Snapshot::decode(&s.encode()).unwrap();
+        assert_eq!(back, s);
+        assert_eq!(back.fingerprint(), s.fingerprint());
+    }
+
+    #[test]
+    fn minimal_snapshot_roundtrips() {
+        let s = minimal_snapshot();
+        assert_eq!(Snapshot::decode(&s.encode()).unwrap(), s);
+    }
+
+    #[test]
+    fn truncated_at_every_length_is_an_error() {
+        for frame in [full_snapshot().encode(), minimal_snapshot().encode()] {
+            for len in 0..frame.len() {
+                assert!(
+                    Snapshot::decode(&frame[..len]).is_err(),
+                    "prefix {len}/{} decoded",
+                    frame.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn every_single_byte_flip_is_detected() {
+        let frame = full_snapshot().encode();
+        for pos in 0..frame.len() {
+            for mask in [0x01u8, 0x80] {
+                let mut bad = frame.clone();
+                bad[pos] ^= mask;
+                assert!(
+                    Snapshot::decode(&bad).is_err(),
+                    "flip {mask:#x} at {pos} went undetected"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn flipped_checksum_bytes_report_bad_checksum() {
+        let frame = full_snapshot().encode();
+        for back in 1..=4 {
+            let mut bad = frame.clone();
+            let pos = frame.len() - back;
+            bad[pos] ^= 0xff;
+            assert_eq!(Snapshot::decode(&bad).unwrap_err(), CkptError::BadChecksum);
+        }
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let frame = full_snapshot().encode();
+        let mut body = frame[..frame.len() - 4].to_vec();
+        body[0] = b'x';
+        assert_eq!(Snapshot::decode(&seal(&body)).unwrap_err(), CkptError::BadMagic);
+    }
+
+    #[test]
+    fn version_skew_rejected_with_the_offending_version() {
+        let frame = full_snapshot().encode();
+        for v in [0u8, 2, 77, 255] {
+            let mut body = frame[..frame.len() - 4].to_vec();
+            body[4] = v;
+            assert_eq!(
+                Snapshot::decode(&seal(&body)).unwrap_err(),
+                CkptError::BadVersion(v),
+                "version {v}"
+            );
+        }
+    }
+
+    #[test]
+    fn hostile_length_fields_cannot_allocate_or_wrap() {
+        // Overwrite the spec-blob length (offset 13: magic 4 + version 1 +
+        // fingerprint 8) with hostile values and re-seal: the wide-
+        // arithmetic check must reject before any allocation.
+        let frame = full_snapshot().encode();
+        for n in [u64::MAX, u64::MAX / 2, (u32::MAX as u64) + 1] {
+            let mut body = frame[..frame.len() - 4].to_vec();
+            body[13..21].copy_from_slice(&n.to_le_bytes());
+            assert_eq!(
+                Snapshot::decode(&seal(&body)).unwrap_err(),
+                CkptError::Truncated,
+                "spec len {n}"
+            );
+        }
+        // Same for an f32 vector count: craft a minimal frame up to the
+        // params field, then claim u64::MAX params.
+        let s = minimal_snapshot();
+        let good = s.encode();
+        let mut body = good[..good.len() - 4].to_vec();
+        // Offsets in the minimal frame: 4 magic + 1 ver + 8 fp + 8 empty
+        // spec blob + 4 series + 4 repeat + 16 state + 16 inc + 1 spare
+        // flag + 8 next_round = 70; params count lives at [70..78].
+        for n in [u64::MAX, u64::MAX / 8, 1u64 << 61] {
+            body[70..78].copy_from_slice(&n.to_le_bytes());
+            assert_eq!(
+                Snapshot::decode(&seal(&body)).unwrap_err(),
+                CkptError::Truncated,
+                "params count {n}"
+            );
+        }
+    }
+
+    #[test]
+    fn hostile_record_and_collection_counts_rejected() {
+        // The record-count pre-check and the unallocated loops must both
+        // fail cleanly on absurd counts. Append hostile tails to a valid
+        // prefix: chop the trailing observer_marks count (8 bytes, value
+        // 2 in the full snapshot... easier: use the minimal snapshot whose
+        // final three u64 counts are ef/records/runs/pins/marks zeros) and
+        // claim huge counts.
+        let s = minimal_snapshot();
+        let good = s.encode();
+        let body_len = good.len() - 4;
+        // Final 8 bytes of the body are the observer_marks count.
+        for n in [u64::MAX, 1u64 << 40] {
+            let mut body = good[..body_len].to_vec();
+            let at = body.len() - 8;
+            body[at..].copy_from_slice(&n.to_le_bytes());
+            assert_eq!(
+                Snapshot::decode(&seal(&body)).unwrap_err(),
+                CkptError::Truncated,
+                "marks count {n}"
+            );
+        }
+    }
+
+    #[test]
+    fn internal_fingerprint_mismatch_is_corrupt() {
+        // A frame whose stored fingerprint disagrees with its own spec
+        // JSON (re-sealed so the checksum passes) is internally corrupt.
+        let frame = full_snapshot().encode();
+        let mut body = frame[..frame.len() - 4].to_vec();
+        body[5] ^= 0x01; // fingerprint byte
+        assert_eq!(Snapshot::decode(&seal(&body)).unwrap_err(), CkptError::Corrupt);
+    }
+
+    #[test]
+    fn bad_flag_bytes_are_corrupt() {
+        // The root gauss_spare flag in the minimal frame sits at offset
+        // 4 + 1 + 8 + 8 + 4 + 4 + 16 + 16 = 61.
+        let good = minimal_snapshot().encode();
+        let mut body = good[..good.len() - 4].to_vec();
+        body[61] = 7;
+        assert_eq!(Snapshot::decode(&seal(&body)).unwrap_err(), CkptError::Corrupt);
+    }
+
+    #[test]
+    fn trailing_garbage_is_corrupt() {
+        let good = full_snapshot().encode();
+        let mut body = good[..good.len() - 4].to_vec();
+        body.extend_from_slice(&[0u8; 3]);
+        assert_eq!(Snapshot::decode(&seal(&body)).unwrap_err(), CkptError::Corrupt);
+    }
+
+    #[test]
+    fn spec_fingerprint_refusal_rule() {
+        let s = full_snapshot();
+        assert!(s.check_spec(&s.spec_json).is_ok());
+        let err = s.check_spec(r#"{"name":"demo","rounds":13}"#).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::Checkpoint);
+    }
+
+    #[test]
+    fn errors_surface_with_the_checkpoint_kind() {
+        let e = CkptError::Truncated.into_error();
+        assert_eq!(e.kind(), ErrorKind::Checkpoint);
+        assert_eq!(e.wrap("resume").kind(), ErrorKind::Checkpoint);
+        // And the file loader classifies missing files the same way.
+        let missing = Snapshot::load(Path::new("/definitely/not/a.ckpt")).unwrap_err();
+        assert_eq!(missing.kind(), ErrorKind::Checkpoint);
+    }
+
+    #[test]
+    fn atomic_write_then_load_roundtrips() {
+        let dir = std::env::temp_dir().join(format!("zsfa_ckpt_t{}", std::process::id()));
+        let path = dir.join("demo.ckpt");
+        let s = full_snapshot();
+        s.write_atomic(&path).unwrap();
+        assert_eq!(Snapshot::load(&path).unwrap(), s);
+        // Overwrite with a different snapshot: latest wins, no tmp left.
+        let mut s2 = s.clone();
+        s2.engine.next_round = 9;
+        s2.write_atomic(&path).unwrap();
+        assert_eq!(Snapshot::load(&path).unwrap().engine.next_round, 9);
+        assert!(!dir.join("demo.ckpt.tmp").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn policy_every_k_and_signal() {
+        let off = CheckpointPolicy::off();
+        assert!(off.is_off());
+        assert!(!off.want(4));
+
+        let p = CheckpointPolicy::every("/tmp/ck", 3);
+        assert!(!p.is_off());
+        assert!(!p.want(1));
+        assert!(!p.want(2));
+        assert!(p.want(3));
+        assert!(p.want(6));
+        assert_eq!(p.path_for("exp"), PathBuf::from("/tmp/ck/exp.ckpt"));
+
+        // Signal mode: fires once per raised flag, then clears.
+        let sp = CheckpointPolicy { dir: PathBuf::new(), every: None, on_signal: true };
+        sig::take(); // drain anything a previous test raised
+        assert!(!sp.want(1));
+        sig::raise();
+        assert!(sp.want(2));
+        assert!(!sp.want(3));
+    }
+
+    #[test]
+    fn fnv1a64_pinned_vectors() {
+        // The fingerprint function is part of the on-disk format: pin it.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85dd_5a0c_a8ab_d4a4);
+    }
+}

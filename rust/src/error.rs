@@ -15,6 +15,9 @@
 //!   violated the coordinator grammar;
 //! * [`ErrorKind::Timeout`] — a deadline expired (rendezvous patience,
 //!   round deadline);
+//! * [`ErrorKind::Checkpoint`] — a checkpoint snapshot failed to decode
+//!   (corrupt/truncated/version-skewed) or a resume precondition was
+//!   violated (spec-fingerprint mismatch);
 //! * [`ErrorKind::Other`] — everything else, including every error
 //!   converted from a std error type via `?`.
 
@@ -31,6 +34,9 @@ pub enum ErrorKind {
     Protocol,
     /// A deadline expired.
     Timeout,
+    /// A checkpoint snapshot failed to decode, or a resume precondition
+    /// (spec fingerprint, format version) was violated.
+    Checkpoint,
 }
 
 /// A human-readable error message with a coarse kind.
@@ -58,6 +64,11 @@ impl Error {
     /// An expired deadline.
     pub fn timeout(msg: impl fmt::Display) -> Error {
         Error { kind: ErrorKind::Timeout, msg: msg.to_string() }
+    }
+
+    /// A checkpoint decode/resume failure.
+    pub fn checkpoint(msg: impl fmt::Display) -> Error {
+        Error { kind: ErrorKind::Checkpoint, msg: msg.to_string() }
     }
 
     pub fn kind(&self) -> ErrorKind {
@@ -193,6 +204,11 @@ mod tests {
         assert_eq!(anyhow!("x").kind(), ErrorKind::Other);
         assert_eq!(Error::spec("series[0].rounds: must be >= 1").kind(), ErrorKind::Spec);
         assert_eq!(Error::protocol("bad tag").kind(), ErrorKind::Protocol);
+        assert_eq!(Error::checkpoint("fingerprint mismatch").kind(), ErrorKind::Checkpoint);
+        assert_eq!(
+            Error::checkpoint("truncated").wrap("resume").kind(),
+            ErrorKind::Checkpoint
+        );
         let t = Error::timeout("round deadline");
         assert_eq!(t.kind(), ErrorKind::Timeout);
         let wrapped = t.wrap("round 3");

@@ -37,7 +37,7 @@
 use super::algorithms::{AlgorithmConfig, Compression, ServerOpt};
 use super::backend::{LocalScratch, ParallelBackend, TrainBackend};
 use super::metrics::{RoundRecord, RunResult};
-use super::plateau::PlateauController;
+use super::plateau::{PlateauController, PlateauSnapshot};
 use super::server::{Participation, ServerConfig};
 use crate::compress::agg::{
     AbsorbCtx, Aggregator, LaneAcc, ReduceStats, ReduceTopology, RemoteError, RemoteUpdate,
@@ -199,6 +199,56 @@ impl SignKernelHook for BackendHook<'_> {
     }
 }
 
+/// Everything the round loop owns, captured at a round boundary: the
+/// iterate, the server-optimizer state, the plateau controller, every
+/// client's EF residual and the exact bit/record/time cursors. Per-round
+/// RNG streams are *not* captured — they are pure splits of the root
+/// (see [`RoundEngine::root`]), so a resumed round `t` derives the same
+/// streams an uninterrupted run would (DESIGN.md §2.6).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EngineCkpt {
+    /// The first round the resumed loop will execute.
+    pub next_round: u64,
+    /// The global iterate after round `next_round - 1`.
+    pub params: Vec<f32>,
+    pub momentum: Vec<f32>,
+    pub adam_v: Vec<f32>,
+    pub adam_t: u32,
+    pub plateau: Option<PlateauSnapshot>,
+    /// Per-client EF residuals (empty unless the algorithm uses EF).
+    pub ef_residuals: Vec<Vec<f32>>,
+    pub bits_up: u64,
+    pub bits_down: u64,
+    pub sim_time_s: f64,
+    /// Records already evaluated this run (replayed into the resumed
+    /// `RunResult` without re-firing observers).
+    pub records: Vec<RoundRecord>,
+}
+
+/// The checkpoint seam threaded through both round loops (this engine's
+/// [`RoundEngine::run_resumable`] and `service::ServiceHost::run_one`):
+/// consulted once per completed round; on `true` the loop hands it a fresh
+/// [`EngineCkpt`]. `store` failures must not unwind into the round loop —
+/// implementors log and carry on.
+pub trait CkptHook {
+    /// Whether to capture after the round that makes `next_round` next.
+    fn want(&mut self, next_round: u64) -> bool;
+    /// Receive the capture (persist it, count it, ...).
+    fn store(&mut self, ck: EngineCkpt);
+    /// Transport-owned extra state — the service host delivers its sticky
+    /// client→pid pins here immediately before [`CkptHook::store`]. The
+    /// in-process engine never calls it; the default discards.
+    fn store_pins(&mut self, _pins: Vec<(u64, u64)>) {}
+}
+
+/// The run's root generator for `seed` — the DESIGN.md §2.6 `(seed,
+/// 0xa11ce)` derivation shared by the engine, the participant SDK and the
+/// checkpoint layer. Everything else the round loop draws is a pure
+/// [`Pcg64::split`] of this stream.
+pub fn root_for_seed(seed: u64) -> Pcg64 {
+    Pcg64::new(seed, 0xa11ce)
+}
+
 /// The round loop: server state + per-round client execution machinery.
 pub struct RoundEngine<'a> {
     algo: &'a AlgorithmConfig,
@@ -296,6 +346,22 @@ impl<'a> RoundEngine<'a> {
         backend: &mut dyn TrainBackend,
         on_record: &mut dyn FnMut(&RoundRecord),
     ) -> RunResult {
+        self.run_resumable(backend, on_record, None, None)
+    }
+
+    /// The full round loop with the checkpoint seam exposed: optionally
+    /// start from a restored [`EngineCkpt`] (skipping its already-completed
+    /// rounds; its records are replayed into the result without re-firing
+    /// `on_record`), and optionally hand a [`CkptHook`] a fresh capture
+    /// after any completed round it asks for. With `resume = None` and
+    /// `ckpt = None` this is exactly [`RoundEngine::run_observed`].
+    pub fn run_resumable(
+        &mut self,
+        backend: &mut dyn TrainBackend,
+        on_record: &mut dyn FnMut(&RoundRecord),
+        resume: Option<&EngineCkpt>,
+        mut ckpt: Option<&mut dyn CkptHook>,
+    ) -> RunResult {
         self.reset_run();
         let mut params = backend.init_params();
         assert_eq!(params.len(), self.d);
@@ -303,8 +369,16 @@ impl<'a> RoundEngine<'a> {
         let mut policy = self.build_policy(&root);
         let mut records = Vec::new();
         let mut sim_time_s = 0.0f64;
+        let mut start = 0usize;
+        if let Some(ck) = resume {
+            self.restore(ck);
+            params.copy_from_slice(&ck.params);
+            records = ck.records.clone();
+            sim_time_s = ck.sim_time_s;
+            start = ck.next_round as usize;
+        }
 
-        for t in 0..self.cfg.rounds {
+        for t in start..self.cfg.rounds {
             let sw = self.clock.start();
             // 1. Participation: the policy decides who reports this round
             //    (and what happened to everyone else it selected).
@@ -347,9 +421,79 @@ impl<'a> RoundEngine<'a> {
                 records.push(rec);
             }
             self.tele.round_end(t as u64, arrived as u64, selected as u64, sw.elapsed_ms());
+
+            // 8. Checkpoint seam: capture *after* the round is fully
+            //    folded, stepped and recorded, so `next_round = t + 1`
+            //    resumes exactly at the next plan. The final round is
+            //    never captured — there is nothing left to resume.
+            if let Some(hook) = ckpt.as_deref_mut() {
+                let next = t as u64 + 1;
+                if (next as usize) < self.cfg.rounds && hook.want(next) {
+                    hook.store(self.capture(next, &params, sim_time_s, &records));
+                }
+            }
         }
 
         RunResult { algorithm: self.algo.name.clone(), records }
+    }
+
+    /// Capture everything the round loop owns into an [`EngineCkpt`].
+    /// `next_round` is the first round a resumed loop will execute;
+    /// `params`, `sim_time_s` and `records` are the loop-local state the
+    /// engine does not hold itself.
+    pub fn capture(
+        &self,
+        next_round: u64,
+        params: &[f32],
+        sim_time_s: f64,
+        records: &[RoundRecord],
+    ) -> EngineCkpt {
+        EngineCkpt {
+            next_round,
+            params: params.to_vec(),
+            momentum: self.momentum_buf.clone(),
+            adam_v: self.adam_v.clone(),
+            adam_t: self.adam_t,
+            plateau: self.plateau.as_ref().map(|p| p.snapshot()),
+            ef_residuals: self
+                .ef
+                .iter()
+                .map(|e| e.lock().unwrap().residual().to_vec())
+                .collect(),
+            bits_up: self.bits_up,
+            bits_down: self.bits_down,
+            sim_time_s,
+            records: records.to_vec(),
+        }
+    }
+
+    /// Restore a capture onto a freshly [`RoundEngine::reset_run`] engine.
+    /// Panics if the capture's shapes do not match this engine's — shape
+    /// mismatches mean the caller skipped the spec-fingerprint check that
+    /// `ckpt::Snapshot` enforces before any engine is built.
+    pub fn restore(&mut self, ck: &EngineCkpt) {
+        assert_eq!(ck.params.len(), self.d, "checkpoint dimension mismatch");
+        assert_eq!(ck.momentum.len(), self.d, "checkpoint momentum mismatch");
+        assert_eq!(ck.adam_v.len(), self.d, "checkpoint adam_v mismatch");
+        assert_eq!(
+            ck.ef_residuals.len(),
+            self.ef.len(),
+            "checkpoint EF client-count mismatch"
+        );
+        self.momentum_buf.copy_from_slice(&ck.momentum);
+        self.adam_v.copy_from_slice(&ck.adam_v);
+        self.adam_t = ck.adam_t;
+        match (self.plateau.as_mut(), ck.plateau.as_ref()) {
+            (Some(p), Some(snap)) => p.restore(snap),
+            (None, None) => {}
+            _ => panic!("checkpoint plateau presence mismatch"),
+        }
+        for (slot, residual) in self.ef.iter_mut().zip(&ck.ef_residuals) {
+            assert_eq!(residual.len(), self.d, "checkpoint EF residual mismatch");
+            *slot = Mutex::new(EfState::from_residual(residual.clone()));
+        }
+        self.bits_up = ck.bits_up;
+        self.bits_down = ck.bits_down;
     }
 
     // --- The round loop, exploded into stages. ---------------------------
@@ -406,7 +550,7 @@ impl<'a> RoundEngine<'a> {
     /// The run's root RNG. The `(seed, 0xa11ce)` derivation is part of the
     /// reproducibility contract shared with every networked participant.
     pub fn root(&self) -> Pcg64 {
-        Pcg64::new(self.cfg.seed, 0xa11ce)
+        root_for_seed(self.cfg.seed)
     }
 
     /// Build the participation policy for one run.
@@ -1211,6 +1355,116 @@ mod tests {
             assert_eq!(rec.selected, 5);
             assert_eq!(rec.sim_time_s, 0.0);
         }
+    }
+
+    /// Test hook: capture exactly once, when `next_round == at`.
+    struct CaptureAt {
+        at: u64,
+        taken: Option<EngineCkpt>,
+    }
+
+    impl CkptHook for CaptureAt {
+        fn want(&mut self, next_round: u64) -> bool {
+            next_round == self.at
+        }
+        fn store(&mut self, ck: EngineCkpt) {
+            self.taken = Some(ck);
+        }
+    }
+
+    #[test]
+    fn snapshot_resume_is_bit_identical_mid_run() {
+        // Kill-at-round-k in miniature: run to round k, capture, build a
+        // fresh engine from the capture, and demand the stitched run equals
+        // the uninterrupted one bit for bit — across the stateful server
+        // paths (EF residuals, momentum + plateau + downlink compression,
+        // Adam, scenario participation).
+        let ef = AlgorithmConfig::ef_signsgd().with_lrs(0.05, 1.0);
+        let plateau_momentum = AlgorithmConfig::z_signsgd(ZParam::Finite(1), 2.0)
+            .with_lrs(0.05, 0.5)
+            .with_momentum(0.9);
+        let adam = AlgorithmConfig::z_signfedavg(ZParam::Finite(1), 2.0, 2)
+            .with_lrs(0.05, 0.3)
+            .with_server_adam();
+        let cases: Vec<(AlgorithmConfig, ServerConfig)> = vec![
+            (
+                ef,
+                ServerConfig { rounds: 10, seed: 4, eval_every: 1, ..Default::default() },
+            ),
+            (
+                plateau_momentum,
+                ServerConfig {
+                    rounds: 10,
+                    seed: 4,
+                    eval_every: 1,
+                    plateau: Some(PlateauConfig {
+                        sigma_init: 0.5,
+                        sigma_bound: 8.0,
+                        kappa: 2,
+                        beta: 2.0,
+                    }),
+                    downlink_sign: Some((ZParam::Finite(1), 0.5)),
+                    parallelism: 4,
+                    ..Default::default()
+                },
+            ),
+            (
+                adam,
+                ServerConfig {
+                    rounds: 10,
+                    seed: 4,
+                    eval_every: 2,
+                    parallelism: 8,
+                    participation: crate::fl::server::Participation::Simulated(scenario(0.25)),
+                    ..Default::default()
+                },
+            ),
+        ];
+        for (algo, cfg) in &cases {
+            let (n, d) = (24usize, 16usize);
+            let mut b = AnalyticBackend::new(Consensus::gaussian(n, d, 77));
+            let mut whole_engine = RoundEngine::new(algo, cfg, d, n);
+            let whole = whole_engine.run(&mut b);
+
+            for k in [1u64, 4, 7] {
+                let mut hook = CaptureAt { at: k, taken: None };
+                let mut b1 = AnalyticBackend::new(Consensus::gaussian(n, d, 77));
+                let mut first = RoundEngine::new(algo, cfg, d, n);
+                first.run_resumable(&mut b1, &mut |_| {}, None, Some(&mut hook));
+                let ck = hook.taken.expect("hook captured");
+                assert_eq!(ck.next_round, k);
+
+                let mut b2 = AnalyticBackend::new(Consensus::gaussian(n, d, 77));
+                let mut resumed = RoundEngine::new(algo, cfg, d, n);
+                let run = resumed.run_resumable(&mut b2, &mut |_| {}, Some(&ck), None);
+                assert_identical(&whole, &run, &format!("{} k={k}", algo.name));
+            }
+        }
+    }
+
+    #[test]
+    fn resumed_run_fires_on_record_only_for_new_rounds() {
+        // Replayed records land in the RunResult but must not re-fire the
+        // observer seam — the files they fed were already written.
+        let algo = AlgorithmConfig::z_signsgd(ZParam::Finite(1), 1.0).with_lrs(0.05, 1.0);
+        let cfg = ServerConfig { rounds: 6, seed: 2, eval_every: 1, ..Default::default() };
+        let mut hook = CaptureAt { at: 3, taken: None };
+        let mut b1 = AnalyticBackend::new(Consensus::gaussian(6, 9, 1));
+        let mut first = RoundEngine::new(&algo, &cfg, 9, 6);
+        first.run_resumable(&mut b1, &mut |_| {}, None, Some(&mut hook));
+        let ck = hook.taken.unwrap();
+
+        let mut seen = Vec::new();
+        let mut b2 = AnalyticBackend::new(Consensus::gaussian(6, 9, 1));
+        let mut resumed = RoundEngine::new(&algo, &cfg, 9, 6);
+        let run = resumed.run_resumable(
+            &mut b2,
+            &mut |r| seen.push(r.round),
+            Some(&ck),
+            None,
+        );
+        assert_eq!(seen, vec![3, 4, 5]);
+        assert_eq!(run.records.len(), 6);
     }
 
     #[test]

@@ -6,7 +6,7 @@ use std::io::Write;
 use std::path::Path;
 
 /// One communication round's measurements.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct RoundRecord {
     pub round: usize,
     /// Global objective (train loss / f(x)).

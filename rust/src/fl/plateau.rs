@@ -33,6 +33,16 @@ impl PlateauConfig {
     }
 }
 
+/// An exact capture of a [`PlateauController`]'s mutable state, for the
+/// checkpoint/resume seam (`ckpt::`). `stall` is widened to `u64` so the
+/// snapshot has a platform-independent wire width.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlateauSnapshot {
+    pub sigma: f32,
+    pub best: f64,
+    pub stall: u64,
+}
+
 /// Stateful controller: feed it the objective once per round, read σ back.
 #[derive(Debug, Clone)]
 pub struct PlateauController {
@@ -52,6 +62,21 @@ impl PlateauController {
     /// Current noise scale.
     pub fn sigma(&self) -> f32 {
         self.sigma
+    }
+
+    /// Capture the controller's exact mutable state for a checkpoint
+    /// (the config itself is rebuilt from the spec on resume).
+    pub fn snapshot(&self) -> PlateauSnapshot {
+        PlateauSnapshot { sigma: self.sigma, best: self.best, stall: self.stall as u64 }
+    }
+
+    /// Restore a [`PlateauController::snapshot`] onto a freshly built
+    /// controller: the restored controller continues the captured one's
+    /// σ trajectory exactly.
+    pub fn restore(&mut self, snap: &PlateauSnapshot) {
+        self.sigma = snap.sigma;
+        self.best = snap.best;
+        self.stall = snap.stall as usize;
     }
 
     /// Observe this round's objective; returns the (possibly grown) σ.
@@ -126,6 +151,29 @@ mod tests {
         // Needs another kappa stalls before the next growth.
         c.observe(1.0);
         assert_eq!(c.sigma(), s1);
+    }
+
+    #[test]
+    fn snapshot_restore_continues_the_sigma_trajectory() {
+        // Drive one controller straight through 40 rounds; drive another to
+        // round 17, snapshot, restore onto a fresh controller, and finish.
+        // The σ streams must match exactly (including best/stall carryover).
+        let objectives: Vec<f64> = (0..40).map(|i| if i < 5 { 10.0 - i as f64 } else { 5.0 }).collect();
+        let mut whole = PlateauController::new(cfg());
+        let reference: Vec<f32> = objectives.iter().map(|&o| whole.observe(o)).collect();
+
+        let mut first = PlateauController::new(cfg());
+        for &o in &objectives[..17] {
+            first.observe(o);
+        }
+        let snap = first.snapshot();
+        let mut resumed = PlateauController::new(cfg());
+        resumed.restore(&snap);
+        assert_eq!(resumed.sigma(), first.sigma());
+        for (i, &o) in objectives.iter().enumerate().skip(17) {
+            assert_eq!(resumed.observe(o), reference[i], "σ diverged at round {i}");
+        }
+        assert_eq!(resumed.snapshot(), whole.snapshot());
     }
 
     #[test]

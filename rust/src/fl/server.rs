@@ -145,11 +145,30 @@ pub fn run_experiment_instrumented(
     tele: &Telemetry,
     on_record: &mut dyn FnMut(&RoundRecord),
 ) -> RunResult {
+    run_experiment_resumable(backend, algo, cfg, tele, on_record, None, None)
+}
+
+/// The full experiment entry point: like [`run_experiment_instrumented`]
+/// plus the checkpoint/resume seam. `resume` restarts the run from a
+/// captured round boundary (replayed records do **not** re-fire
+/// `on_record`); `hook` is offered a capture at every round boundary it
+/// asks for. A resumed run is bit-identical to the uninterrupted one —
+/// per-round RNG streams are pure splits of the root (DESIGN.md §2.6), so
+/// nothing beyond the engine capture is needed.
+pub fn run_experiment_resumable(
+    backend: &mut dyn TrainBackend,
+    algo: &AlgorithmConfig,
+    cfg: &ServerConfig,
+    tele: &Telemetry,
+    on_record: &mut dyn FnMut(&RoundRecord),
+    resume: Option<&super::engine::EngineCkpt>,
+    hook: Option<&mut dyn super::engine::CkptHook>,
+) -> RunResult {
     let d = backend.dim();
     let n = backend.num_clients();
     let mut engine = RoundEngine::new(algo, cfg, d, n);
     engine.set_telemetry(tele.clone());
-    engine.run_observed(backend, on_record)
+    engine.run_resumable(backend, on_record, resume, hook)
 }
 
 #[cfg(test)]
@@ -410,6 +429,45 @@ mod tests {
         let gap = run.final_objective() - f_star;
         assert!(gap < gap0 * 0.5, "gap {gap0} -> {gap}");
         assert!(run.final_objective().is_finite());
+    }
+
+    #[test]
+    fn resumable_entry_point_matches_uninterrupted_run() {
+        use crate::fl::engine::{CkptHook, EngineCkpt};
+
+        struct At(u64, Option<EngineCkpt>);
+        impl CkptHook for At {
+            fn want(&mut self, next_round: u64) -> bool {
+                next_round == self.0
+            }
+            fn store(&mut self, ck: EngineCkpt) {
+                self.1 = Some(ck);
+            }
+        }
+
+        let algo = AlgorithmConfig::z_signsgd(ZParam::Finite(1), 1.0).with_lrs(0.05, 1.0);
+        let cfg = ServerConfig { rounds: 12, seed: 11, ..Default::default() };
+        let mut b = consensus_backend(6, 10);
+        let whole = run_experiment(&mut b, &algo, &cfg);
+
+        let mut b2 = consensus_backend(6, 10);
+        let mut hook = At(5, None);
+        let tele = Telemetry::disabled();
+        run_experiment_resumable(&mut b2, &algo, &cfg, &tele, &mut |_| {}, None, Some(&mut hook));
+        let ck = hook.1.expect("capture at round 5");
+
+        let mut b3 = consensus_backend(6, 10);
+        let resumed =
+            run_experiment_resumable(&mut b3, &algo, &cfg, &tele, &mut |_| {}, Some(&ck), None);
+        assert_eq!(whole.records.len(), resumed.records.len());
+        for (a, b) in whole.records.iter().zip(&resumed.records) {
+            // Everything but wall_ms (real wall-clock under the default
+            // monotonic clock) must be bit-identical.
+            let (mut a, mut b) = (*a, *b);
+            a.wall_ms = 0.0;
+            b.wall_ms = 0.0;
+            assert_eq!(a, b);
+        }
     }
 
     #[test]

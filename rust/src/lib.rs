@@ -21,7 +21,9 @@
 //! thin spec factories over the same seam. The same spec can run
 //! networked: [`service`] hosts the round loop behind a coordinator state
 //! machine with loopback/TCP transports (`zsfa serve` / `zsfa join`),
-//! selected by the spec's [`api::TransportSpec`].
+//! selected by the spec's [`api::TransportSpec`]. Long sessions are
+//! crash-tolerant: [`ckpt`] snapshots the full round-loop state to a
+//! checksummed binary file and `zsfa resume` recovers byte-identically.
 //!
 //! See `DESIGN.md` for the full system inventory and the experiment index
 //! mapping every figure/table of the paper to a driver.
@@ -29,6 +31,7 @@
 pub mod api;
 pub mod bench;
 pub mod cli;
+pub mod ckpt;
 pub mod compress;
 pub mod config;
 pub mod data;

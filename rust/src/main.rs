@@ -5,10 +5,11 @@
 //!   run --config f.cfg  config-driven experiment (legacy key=value format)
 //!   serve <spec.json>   host the rounds over TCP (networked coordinator)
 //!   join <spec.json>    work for a coordinator as a TCP participant
+//!   resume <file.ckpt>  continue a checkpointed run (byte-identical)
 //!   watch               live telemetry dashboard (endpoint or JSONL tail)
 //!   metrics             scrape a coordinator's Prometheus endpoint
 //!   fig1 fig2 fig3 fig5 fig6 fig16 fig17 table2
-//!                       reproduce the paper's figures/tables (DESIGN.md §7)
+//!                       reproduce the paper's figures/tables (DESIGN.md §8)
 //!   scenarios           client-lifecycle simulation: deadlines, dropouts,
 //!                       byzantine robustness (DESIGN.md §2.5)
 //!   inspect             list artifacts from the manifest
@@ -37,6 +38,7 @@ fn main() -> Result<()> {
         Some("run") => run_cmd(&args),
         Some("serve") => serve_cmd(&args),
         Some("join") => join_cmd(&args),
+        Some("resume") => resume_cmd(&args),
         Some("watch") => watch_cmd(&args),
         Some("metrics") => metrics_cmd(&args),
         Some("inspect") => inspect(&args),
@@ -74,6 +76,11 @@ SUBCOMMANDS
            --telemetry the coordinator port also answers GET /metrics)
   join    work for a coordinator:  zsfa join spec.json --addr host:7070
           (same spec file on both sides; exits when the run finishes)
+  resume  continue a crashed/checkpointed run:  zsfa resume file.ckpt
+          (the snapshot embeds its spec; the continued run is
+           byte-identical to one that never stopped; --jsonl FILE
+           re-attaches the event log in append mode, and the
+           --checkpoint-* flags keep snapshotting the resumed run)
   watch   live dashboard:  zsfa watch --addr host:7070  (poll endpoint)
                            zsfa watch --jsonl events.jsonl  (tail a log)
           (--interval-ms N refresh rate, --once prints one frame)
@@ -99,6 +106,12 @@ COMMON FLAGS (run/serve)
                        --telemetry)
   --jsonl FILE (stream round events as JSON lines; carries phase
                 timings when telemetry is on)
+  --checkpoint-every N (snapshot the full run state every N rounds to
+                        <dir>/<experiment>.ckpt; recover with
+                        `zsfa resume`)
+  --checkpoint-on-signal (also snapshot at the next round boundary after
+                          SIGUSR1)
+  --checkpoint-dir DIR (where snapshots land; default: checkpoints)
 
 COMMON FLAGS
   --rounds N --repeats N --seed N --paper-scale
@@ -169,6 +182,59 @@ fn console_session(args: &Args, spec: &mut ExperimentSpec) -> Result<Session> {
     Ok(session)
 }
 
+/// The `--checkpoint-every` / `--checkpoint-on-signal` /
+/// `--checkpoint-dir` flags shared by `run`, `serve` and `resume`. Off
+/// unless one of the trigger flags is present.
+fn checkpoint_policy(args: &Args) -> Result<zsignfedavg::ckpt::CheckpointPolicy> {
+    use zsignfedavg::ckpt::CheckpointPolicy;
+    let every = args.u64_or("checkpoint-every", 0)?;
+    let on_signal = args.has("checkpoint-on-signal");
+    if every == 0 && !on_signal {
+        return Ok(CheckpointPolicy::off());
+    }
+    let dir = args.str_or("checkpoint-dir", "checkpoints");
+    Ok(CheckpointPolicy {
+        dir: dir.into(),
+        every: if every > 0 { Some(every) } else { None },
+        on_signal,
+    })
+}
+
+/// `zsfa resume`: continue a checkpointed run. The snapshot embeds the
+/// canonical spec it was captured under, so no spec file is needed — and
+/// none is accepted: any spec change would make the continuation diverge
+/// from the uninterrupted run, which is exactly what the fingerprint
+/// check refuses. `--jsonl` re-attaches the event log in append mode
+/// (the sink is rolled back to its checkpoint mark before new lines are
+/// written); the `--checkpoint-*` flags keep snapshotting the resumed
+/// run.
+fn resume_cmd(args: &Args) -> Result<()> {
+    use zsignfedavg::api::JsonlSink;
+    use zsignfedavg::ckpt::Snapshot;
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("usage: zsfa resume <file.ckpt> [--jsonl events.jsonl]"))?;
+    let snap = Snapshot::load(std::path::Path::new(path))?;
+    let spec = ExperimentSpec::from_json(&snap.spec_json)?;
+    // Observers must be re-attached in the same order they were captured
+    // in: the console pair first (as `run`/`serve` build them), then the
+    // optional JSONL sink.
+    let tele = spec.telemetry.handle();
+    let mut session = Session::console().with_telemetry(tele.clone());
+    if let Some(p) = args.flag("jsonl") {
+        let sink = JsonlSink::append(std::path::Path::new(p))?.with_telemetry(tele);
+        session = session.with(sink);
+    }
+    println!(
+        "resume: {} — series {} repeat {} round {} (of {})",
+        spec.name, snap.series, snap.repeat, snap.engine.next_round, spec.rounds
+    );
+    log_simd_path();
+    session.resume(&spec, &snap, &checkpoint_policy(args)?)?;
+    Ok(())
+}
+
 /// `zsfa watch`: the live terminal dashboard (DESIGN.md §6.4).
 fn watch_cmd(args: &Args) -> Result<()> {
     use zsignfedavg::telemetry::watch::{self, WatchOpts};
@@ -228,7 +294,7 @@ fn run_spec(args: &Args, path: &str) -> Result<()> {
         spec.rounds
     );
     log_simd_path();
-    session.run(&spec)?;
+    session.run_with_checkpoints(&spec, &checkpoint_policy(args)?)?;
     Ok(())
 }
 
@@ -289,7 +355,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
         spec.rounds
     );
     log_simd_path();
-    session.run(&spec)?;
+    session.run_with_checkpoints(&spec, &checkpoint_policy(args)?)?;
     Ok(())
 }
 

@@ -1,4 +1,4 @@
-//! Reproduction drivers: one per paper figure/table (see DESIGN.md §7).
+//! Reproduction drivers: one per paper figure/table (see DESIGN.md §8).
 //!
 //! Every driver is a thin `api::ExperimentSpec` factory executed through
 //! `api::Session` (DESIGN.md §4.5) — none of them touch `ServerConfig`,

@@ -1,6 +1,6 @@
 //! HLO module audit: op-count / fusion / FLOP analysis of the AOT artifacts.
 //!
-//! The L2 performance deliverable (DESIGN.md §9): verify the lowered module
+//! The L2 performance deliverable (DESIGN.md §10): verify the lowered module
 //! has no redundant recomputation and that XLA fused what it should. This
 //! parses the HLO *text* (the same artifact the runtime loads), counts
 //! instructions by opcode, and estimates FLOPs for `dot`/`convolution` from

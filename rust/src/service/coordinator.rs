@@ -127,6 +127,25 @@ impl CoordState {
         self.peers.len()
     }
 
+    /// The sticky client→pid pins in deterministic (client-sorted) order,
+    /// for a checkpoint (`ckpt::Snapshot::pins`).
+    pub fn pins_snapshot(&self) -> Vec<(u64, u64)> {
+        let mut v: Vec<(u64, u64)> = self.pins.iter().map(|(&c, &p)| (c, p)).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Restore checkpointed pins. Best-effort by construction: pins are an
+    /// EF-residual-locality hint, and `PullRound` already lets any
+    /// participant steal a slot whose pin holder is not in the live
+    /// roster, so pins pointing at pre-crash pids resolve themselves as
+    /// the reconnected cohort pulls work.
+    pub fn restore_pins(&mut self, pins: &[(u64, u64)]) {
+        for &(client, pid) in pins {
+            self.pins.insert(client, pid);
+        }
+    }
+
     /// The phase a heartbeat would report (sans pid check).
     fn phase(&self) -> PhaseReply {
         if self.finished {
@@ -497,6 +516,52 @@ mod tests {
         match st.handle(&Request::PullRound { pid }, now) {
             Reply::Round(r) => r,
             other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pins_snapshot_restore_preserves_affinity_and_dead_pins_are_stolen() {
+        let mut st = state();
+        let a = rendezvous(&mut st, 0);
+        let b = rendezvous(&mut st, 0);
+        st.offer_round(0, 0, 0, 1.0, &[0.0; D], &participants(2));
+        let (wa, wb) = match (pull(&mut st, a, 1), pull(&mut st, b, 1)) {
+            (RoundReply::Work(x), RoundReply::Work(y)) => (x, y),
+            other => panic!("unexpected {other:?}"),
+        };
+        submit(&mut st, a, 0, wa.slot, 2);
+        submit(&mut st, b, 0, wb.slot, 2);
+        st.close_round();
+        let pins = st.pins_snapshot();
+        assert_eq!(pins.len(), 2);
+        assert!(pins.windows(2).all(|w| w[0].0 < w[1].0), "client-sorted");
+
+        // A fresh coordinator (the post-crash restart) with the *same*
+        // roster keeps affinity: each participant gets its pinned client.
+        let mut st2 = state();
+        let a2 = rendezvous(&mut st2, 0);
+        let b2 = rendezvous(&mut st2, 0);
+        assert_eq!((a2, b2), (a, b), "pid assignment is deterministic");
+        st2.restore_pins(&pins);
+        st2.offer_round(0, 0, 1, 1.0, &[0.0; D], &participants(2));
+        // b pulls first but must receive its own pinned client, not a's.
+        let want_b = pins.iter().find(|&&(_, p)| p == b).unwrap().0;
+        match pull(&mut st2, b, 1) {
+            RoundReply::Work(w) => assert_eq!(w.client, want_b),
+            other => panic!("unexpected {other:?}"),
+        }
+
+        // A restart where only ONE peer returns: pins held by the missing
+        // pid are stealable, so the survivor can still take every slot.
+        let mut st3 = state();
+        let solo = rendezvous(&mut st3, 0);
+        st3.restore_pins(&pins);
+        st3.offer_round(0, 0, 1, 1.0, &[0.0; D], &participants(2));
+        for _ in 0..2 {
+            match pull(&mut st3, solo, 1) {
+                RoundReply::Work(_) => {}
+                other => panic!("survivor blocked by a dead pin: {other:?}"),
+            }
         }
     }
 

@@ -37,7 +37,7 @@ pub use transport::{LoopbackTransport, TcpServer, TcpTransport, Transport, MAX_F
 
 use crate::api::spec::ExperimentSpec;
 use crate::error::{Error, Result};
-use crate::fl::engine::RoundEngine;
+use crate::fl::engine::{CkptHook, EngineCkpt, RoundEngine};
 use crate::fl::{AlgorithmConfig, RoundRecord, RunResult, ServerConfig, TrainBackend};
 use crate::telemetry::{Clock, Phase, Telemetry};
 use std::thread::JoinHandle;
@@ -61,6 +61,11 @@ pub struct ServiceHost {
     loopback: Vec<JoinHandle<Result<()>>>,
     clock: Clock,
     tele: Telemetry,
+    /// EF-residual mirror shared with in-process participants (loopback
+    /// only), so checkpoints capture the one piece of participant-owned
+    /// trajectory state. TCP participants keep residuals private — they
+    /// outlive a coordinator crash and reconnect with them intact.
+    ef_vault: Option<participant::ResidualVault>,
 }
 
 impl ServiceHost {
@@ -70,9 +75,10 @@ impl ServiceHost {
         // heartbeat_ms = 0 disables expiry: a loopback participant cannot
         // silently vanish, and a stable roster keeps EF residual pins fixed.
         let coord = Coordinator::new(0);
+        let vault: participant::ResidualVault = Default::default();
         let loopback = (0..workers.max(1))
             .map(|_| {
-                let mut p = Participant::new(spec.clone());
+                let mut p = Participant::new(spec.clone()).with_vault(vault.clone());
                 let mut t = LoopbackTransport::new(coord.clone());
                 std::thread::spawn(move || p.run(&mut t))
             })
@@ -88,6 +94,7 @@ impl ServiceHost {
             loopback,
             clock: Clock::from_env(),
             tele: Telemetry::disabled(),
+            ef_vault: Some(vault),
         }
     }
 
@@ -115,6 +122,7 @@ impl ServiceHost {
             loopback: Vec::new(),
             clock: Clock::from_env(),
             tele: tele.clone(),
+            ef_vault: None,
         })
     }
 
@@ -138,6 +146,19 @@ impl ServiceHost {
         self.server.as_ref().map(|s| s.local_addr())
     }
 
+    /// The coordinator's sticky client→pid pins, in deterministic order
+    /// (for `ckpt::Snapshot::pins`).
+    pub fn pins_snapshot(&self) -> Vec<(u64, u64)> {
+        self.coord.with_state(|st| st.pins_snapshot())
+    }
+
+    /// Restore checkpointed pins onto the (possibly re-rendezvoused)
+    /// cohort. Best-effort: pins whose holder never reconnects are stolen
+    /// by live participants at `PullRound`.
+    pub fn restore_pins(&self, pins: &[(u64, u64)]) {
+        self.coord.with_state(|st| st.restore_pins(pins));
+    }
+
     /// Run one (series, repeat) experiment through the service — the exact
     /// stage sequence of `RoundEngine::run_observed`, with the per-client
     /// work replaced by offer/submit through the coordinator.
@@ -149,6 +170,30 @@ impl ServiceHost {
         series: u32,
         repeat: u32,
         on_record: &mut dyn FnMut(&RoundRecord),
+    ) -> Result<RunResult> {
+        self.run_one_resumable(backend, algo, cfg, series, repeat, on_record, None, None)
+    }
+
+    /// [`ServiceHost::run_one`] plus the checkpoint/resume seam — the
+    /// service-side twin of `RoundEngine::run_resumable`. `resume`
+    /// restarts at a captured round boundary (replayed records do not
+    /// re-fire `on_record`); `hook` is offered a capture at every round
+    /// boundary it asks for, after that round is fully folded, stepped and
+    /// recorded. Participants reconnect through the ordinary rendezvous
+    /// path; their only cross-round state — EF residuals — is mirrored
+    /// through the loopback vault for in-process cohorts, while TCP
+    /// participants outlive a coordinator crash and keep their own.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_one_resumable(
+        &mut self,
+        backend: &mut dyn TrainBackend,
+        algo: &AlgorithmConfig,
+        cfg: &ServerConfig,
+        series: u32,
+        repeat: u32,
+        on_record: &mut dyn FnMut(&RoundRecord),
+        resume: Option<&EngineCkpt>,
+        mut hook: Option<&mut dyn CkptHook>,
     ) -> Result<RunResult> {
         let d = backend.dim();
         let n = backend.num_clients();
@@ -178,7 +223,24 @@ impl ServiceHost {
 
         let mut records = Vec::new();
         let mut sim_time_s = 0.0f64;
-        for t in 0..cfg.rounds {
+        let mut start = 0usize;
+        if let Some(ck) = resume {
+            engine.restore(ck);
+            params.copy_from_slice(&ck.params);
+            records = ck.records.clone();
+            sim_time_s = ck.sim_time_s;
+            start = ck.next_round as usize;
+            // Seed the loopback residual vault: in-process participants
+            // adopt the checkpointed EF residuals on first touch. (TCP
+            // participants survived the crash and still hold their own.)
+            if let Some(vault) = &self.ef_vault {
+                let mut v = vault.lock().unwrap();
+                for (client, r) in ck.ef_residuals.iter().enumerate() {
+                    v.insert((series, repeat, client as u64), r.clone());
+                }
+            }
+        }
+        for t in start..cfg.rounds {
             let sw = self.clock.start();
             // 1. Participation: planned server-side, exactly like the
             //    engine; the plan's faults ride along in the work orders.
@@ -255,6 +317,25 @@ impl ServiceHost {
                 records.push(rec);
             }
             self.tele.round_end(t as u64, arrived as u64, selected as u64, sw.elapsed_ms());
+            if let Some(h) = hook.as_deref_mut() {
+                let next = t as u64 + 1;
+                if (next as usize) < cfg.rounds && h.want(next) {
+                    let mut ck = engine.capture(next, &params, sim_time_s, &records);
+                    // The engine-side EF table is inert on the service
+                    // path — the live residuals are participant-owned and
+                    // mirrored into the loopback vault at submit time.
+                    if let Some(vault) = &self.ef_vault {
+                        let v = vault.lock().unwrap();
+                        for (client, r) in ck.ef_residuals.iter_mut().enumerate() {
+                            if let Some(stored) = v.get(&(series, repeat, client as u64)) {
+                                r.copy_from_slice(stored);
+                            }
+                        }
+                    }
+                    h.store_pins(self.pins_snapshot());
+                    h.store(ck);
+                }
+            }
         }
         Ok(RunResult { algorithm: engine.algorithm_name().to_string(), records })
     }
@@ -422,6 +503,76 @@ mod tests {
                 let got = loopback_run(&spec, workers, 0, 0);
                 assert_identical(&want, &got, &format!("{} workers={workers}", want.algorithm));
             }
+        }
+    }
+
+    #[test]
+    fn fresh_loopback_host_resumes_bit_identical_even_with_ef_residuals() {
+        // The crash-recovery story for in-process transports: run to a
+        // round boundary, capture, throw the whole host (and its
+        // participants) away, rebuild from the snapshot, finish. EF is the
+        // hard case — the residuals are participant-owned, so this pins
+        // the vault mirror/seed path; the pins restore keeps affinity.
+        struct At(u64, Option<EngineCkpt>);
+        impl CkptHook for At {
+            fn want(&mut self, next_round: u64) -> bool {
+                next_round == self.0
+            }
+            fn store(&mut self, ck: EngineCkpt) {
+                self.1 = Some(ck);
+            }
+        }
+
+        for algo in [
+            AlgorithmConfig::ef_signsgd().with_lrs(0.05, 1.0),
+            AlgorithmConfig::z_signfedavg(ZParam::Finite(1), 2.0, 2).with_lrs(0.05, 1.0),
+        ] {
+            let spec = ExperimentSpec::new("svc", WorkloadSpec::consensus(16, 37, 1234))
+                .rounds(8)
+                .seed(13)
+                .reduce_lanes(3)
+                .series(algo);
+            let want = engine_run(&spec, 0, 0);
+            let algo = spec.expanded_series()[0].algorithm.clone();
+            let cfg = spec.server_config(0);
+
+            let mut host = ServiceHost::loopback(&spec, 4);
+            let mut backend = spec.workload.build_backend().unwrap();
+            let mut hook = At(4, None);
+            host.run_one_resumable(
+                backend.as_mut(),
+                &algo,
+                &cfg,
+                0,
+                0,
+                &mut |_| {},
+                None,
+                Some(&mut hook),
+            )
+            .unwrap();
+            let pins = host.pins_snapshot();
+            host.shutdown().unwrap();
+            let ck = hook.1.expect("capture at round 4");
+            assert_eq!(ck.next_round, 4);
+            assert!(!pins.is_empty());
+
+            let mut host2 = ServiceHost::loopback(&spec, 4);
+            host2.restore_pins(&pins);
+            let mut backend2 = spec.workload.build_backend().unwrap();
+            let got = host2
+                .run_one_resumable(
+                    backend2.as_mut(),
+                    &algo,
+                    &cfg,
+                    0,
+                    0,
+                    &mut |_| {},
+                    Some(&ck),
+                    None,
+                )
+                .unwrap();
+            host2.shutdown().unwrap();
+            assert_identical(&want, &got, &format!("{} resumed", want.algorithm));
         }
     }
 

@@ -17,7 +17,13 @@
 //! EF-SignSGD residuals live here, per client id, exactly like the
 //! engine's per-client `EfState` table. The coordinator's sticky
 //! client→participant pinning keeps a client on the participant that owns
-//! its residual.
+//! its residual. For crash recovery the residuals are the one piece of
+//! participant-owned trajectory state, so in-process participants can
+//! share a [`ResidualVault`] with their host: every EF update is mirrored
+//! into the vault (and seeded back from it), which is how a loopback
+//! session's checkpoint captures residuals the host process could not
+//! otherwise see. Remote (TCP) participants keep residuals private — they
+//! outlive a coordinator crash and simply reconnect.
 
 use super::protocol::{
     PhaseReply, Reply, RendezvousReply, Request, RoundReply, SubmitReply, WorkOrder,
@@ -33,7 +39,13 @@ use crate::fl::engine::ClientTask;
 use crate::fl::{AlgorithmConfig, Compression};
 use crate::rng::Pcg64;
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
+
+/// Shared EF-residual mirror, keyed by `(series, repeat, client)`. The
+/// host hands clones to its in-process participants so a checkpoint can
+/// capture residuals (and a resume can seed them) without any protocol
+/// traffic; see the module docs.
+pub type ResidualVault = Arc<Mutex<HashMap<(u32, u32, u64), Vec<f32>>>>;
 
 /// Everything scoped to one (series, repeat) run: the backend with this
 /// repeat's data, the series' aggregator, the run's root RNG stream, the
@@ -59,13 +71,21 @@ pub struct Participant {
     spec: ExperimentSpec,
     series: Vec<SeriesSpec>,
     run: Option<RunCtx>,
+    vault: Option<ResidualVault>,
 }
 
 impl Participant {
     /// Build from the experiment spec both sides share.
     pub fn new(spec: ExperimentSpec) -> Participant {
         let series = spec.expanded_series();
-        Participant { spec, series, run: None }
+        Participant { spec, series, run: None, vault: None }
+    }
+
+    /// Mirror EF residuals into (and seed them from) a host-shared vault
+    /// (builder-style; in-process participants only).
+    pub fn with_vault(mut self, vault: ResidualVault) -> Participant {
+        self.vault = Some(vault);
+        self
     }
 
     /// Join the coordinator and work until it finishes. Returns `Ok(())`
@@ -129,6 +149,7 @@ impl Participant {
         pid: u64,
         w: &WorkOrder,
     ) -> Result<SubmitReply> {
+        let vault = self.vault.clone();
         let ctx = self.ensure_run(w.series, w.repeat)?;
         if w.params.len() != ctx.d {
             return Err(Error::protocol(format!(
@@ -153,10 +174,20 @@ impl Participant {
             mode.apply(&mut ctx.delta);
         }
         let ef = match ctx.algo.compression {
-            Compression::ErrorFeedback => Some(&*ctx
-                .ef
-                .entry(w.client)
-                .or_insert_with(|| Mutex::new(EfState::new(ctx.d)))),
+            Compression::ErrorFeedback => {
+                let (series, repeat, d) = (ctx.series, ctx.repeat, ctx.d);
+                Some(&*ctx.ef.entry(w.client).or_insert_with(|| {
+                    // First touch of this client: adopt a checkpointed
+                    // residual from the vault when the host restored one.
+                    let seeded = vault.as_ref().and_then(|v| {
+                        v.lock().unwrap().get(&(series, repeat, w.client)).cloned()
+                    });
+                    Mutex::new(match seeded {
+                        Some(r) if r.len() == d => EfState::from_residual(r),
+                        _ => EfState::new(d),
+                    })
+                }))
+            }
             _ => None,
         };
         let upd = ctx.agg.compress_remote(
@@ -164,6 +195,13 @@ impl Participant {
             RemoteCtx { rng: &mut task.rng, round_sigma: w.sigma, ef },
             &mut ctx.scratch,
         );
+        // Mirror the post-update residual before submitting: once the
+        // coordinator has this round's submission, any checkpoint it takes
+        // at the round boundary sees the matching residual.
+        if let (Some(v), Some(ef)) = (vault.as_ref(), ef) {
+            let key = (ctx.series, ctx.repeat, w.client);
+            v.lock().unwrap().insert(key, ef.lock().unwrap().residual().to_vec());
+        }
         let req = Request::Submit {
             pid,
             round: w.round,
@@ -206,7 +244,7 @@ impl Participant {
                 agg: algo.compression.aggregator(algo.client_lr),
                 algo,
                 // The engine's root derivation — shared contract.
-                root: Pcg64::new(seed, 0xa11ce),
+                root: crate::fl::engine::root_for_seed(seed),
                 ef: HashMap::new(),
                 delta: vec![0.0; d],
                 local: LocalScratch::new(),

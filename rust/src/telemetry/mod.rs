@@ -170,6 +170,20 @@ impl Telemetry {
         }
     }
 
+    /// Count one checkpoint snapshot written (`ckpt::`).
+    pub fn count_checkpoint(&self) {
+        if let Some(inner) = self.inner.as_deref() {
+            inner.metrics.checkpoints_total.inc();
+        }
+    }
+
+    /// Count one session resumed from a checkpoint snapshot.
+    pub fn count_resume(&self) {
+        if let Some(inner) = self.inner.as_deref() {
+            inner.metrics.resume_total.inc();
+        }
+    }
+
     /// Record a coordinator state transition: bumps the per-reply-code
     /// counter and appends to the event ring.
     pub fn coord_event(&self, kind: EventKind, round: u64, value: f64) {

@@ -84,6 +84,15 @@ pub fn encode(m: &Metrics) -> String {
         "counter",
     );
     let _ = writeln!(out, "zsfa_client_updates_total {}", m.client_updates_total.get());
+    family(&mut out, "zsfa_checkpoints_total", "Checkpoint snapshots written.", "counter");
+    let _ = writeln!(out, "zsfa_checkpoints_total {}", m.checkpoints_total.get());
+    family(
+        &mut out,
+        "zsfa_resume_total",
+        "Sessions resumed from a checkpoint snapshot.",
+        "counter",
+    );
+    let _ = writeln!(out, "zsfa_resume_total {}", m.resume_total.get());
 
     family(
         &mut out,
@@ -146,6 +155,8 @@ mod tests {
             "zsfa_clients_arrived_total",
             "zsfa_clients_selected_total",
             "zsfa_coord_replies_total",
+            "zsfa_checkpoints_total",
+            "zsfa_resume_total",
             "zsfa_simd_path",
             "zsfa_phase_ms",
             "zsfa_round_ms",

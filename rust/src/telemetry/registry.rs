@@ -163,6 +163,10 @@ pub struct Metrics {
     pub folds_total: Counter,
     /// Client local-update tasks executed by the in-process engine.
     pub client_updates_total: Counter,
+    /// Checkpoint snapshots written (`ckpt::`).
+    pub checkpoints_total: Counter,
+    /// Sessions resumed from a checkpoint snapshot.
+    pub resume_total: Counter,
     /// Per-reply-code coordinator counters, indexed per [`COORD_KINDS`].
     pub coord: [Counter; COORD_KINDS.len()],
     /// Per-phase duration histograms, indexed by `Phase as usize`.
@@ -199,6 +203,8 @@ impl Metrics {
         m.insert("selected_last".into(), num(self.selected_last.get()));
         m.insert("folds_total".into(), cnt(&self.folds_total));
         m.insert("client_updates_total".into(), cnt(&self.client_updates_total));
+        m.insert("checkpoints_total".into(), cnt(&self.checkpoints_total));
+        m.insert("resume_total".into(), cnt(&self.resume_total));
         m.insert("simd_path".into(), Json::Str(self.simd_path().to_string()));
         let mut coord = std::collections::BTreeMap::new();
         for (kind, c) in COORD_KINDS.iter().zip(&self.coord) {
@@ -285,6 +291,8 @@ mod tests {
             "\"selected_total\":0",
             "\"folds_total\":0",
             "\"client_updates_total\":0",
+            "\"checkpoints_total\":0",
+            "\"resume_total\":0",
             "\"simd_path\":\"",
             "\"coord\":{",
             "\"rendezvous\":0",

@@ -128,6 +128,52 @@ pub fn render(d: &Dash) -> String {
     out
 }
 
+/// Incremental reader for a growing JSONL log: remembers the byte offset
+/// already consumed so each poll reads only the new bytes, and buffers an
+/// unterminated final line until its newline arrives. If the file shrinks
+/// between polls (log rotation, or `zsfa resume` rolling the sink back to
+/// its checkpoint mark), the tail restarts from byte 0 and reports the
+/// reset so the caller can drop accumulated state. A same-size rewrite
+/// between polls is indistinguishable from no change — acceptable for an
+/// append-mostly event log.
+#[derive(Debug, Default)]
+pub struct JsonlTail {
+    offset: u64,
+    partial: String,
+}
+
+impl JsonlTail {
+    /// Read everything new since the last poll. Returns `(reset, lines)`:
+    /// `reset` is true when the file shrank and the scan restarted from
+    /// the top; `lines` holds the complete (newline-terminated) non-empty
+    /// lines, oldest first.
+    pub fn poll(&mut self, path: &str) -> std::io::Result<(bool, Vec<String>)> {
+        use std::fs::File;
+        use std::io::{Seek, SeekFrom};
+        let mut f = File::open(path)?;
+        let len = f.metadata()?.len();
+        let reset = len < self.offset;
+        if reset {
+            self.offset = 0;
+            self.partial.clear();
+        }
+        f.seek(SeekFrom::Start(self.offset))?;
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf)?;
+        self.offset += buf.len() as u64;
+        self.partial.push_str(&String::from_utf8_lossy(&buf));
+        let mut lines = Vec::new();
+        while let Some(nl) = self.partial.find('\n') {
+            let line: String = self.partial.drain(..=nl).collect();
+            let line = line.trim();
+            if !line.is_empty() {
+                lines.push(line.to_string());
+            }
+        }
+        Ok((reset, lines))
+    }
+}
+
 /// Minimal HTTP/1.0 GET against `addr` (`host:port`), returning the
 /// response body. Used by `zsfa metrics`, `zsfa watch --addr` and the
 /// transport tests; keeps the crate dependency-free (no curl).
@@ -230,7 +276,7 @@ pub fn apply_jsonl_event(d: &mut Dash, j: &Json) {
     }
 }
 
-fn refresh(opts: &WatchOpts, d: &mut Dash) {
+fn refresh(opts: &WatchOpts, d: &mut Dash, tail: &mut JsonlTail) {
     if let Some(addr) = &opts.addr {
         d.source = format!("http://{addr}/metrics.json");
         match http_get(addr, "/metrics.json", 2_000) {
@@ -242,17 +288,20 @@ fn refresh(opts: &WatchOpts, d: &mut Dash) {
         }
     } else if let Some(path) = &opts.jsonl {
         d.source = path.clone();
-        // Re-read the whole log each frame: event logs are small and this
-        // keeps the tail logic trivially correct across truncation.
-        let mut fresh = Dash { source: d.source.clone(), ..Dash::default() };
-        match std::fs::read_to_string(path) {
-            Ok(text) => {
-                for line in text.lines().filter(|l| !l.trim().is_empty()) {
+        // Incremental tail: only the new bytes since the last frame are
+        // read and folded in; a shrink (rotation, resume rollback) resets
+        // both the tail and the accumulated dashboard.
+        match tail.poll(path) {
+            Ok((reset, lines)) => {
+                if reset {
+                    *d = Dash { source: d.source.clone(), ..Dash::default() };
+                }
+                for line in &lines {
                     if let Ok(j) = Json::parse(line) {
-                        apply_jsonl_event(&mut fresh, &j);
+                        apply_jsonl_event(d, &j);
                     }
                 }
-                *d = fresh;
+                d.note = None;
             }
             Err(e) => d.note = Some(format!("waiting for {path}: {e}")),
         }
@@ -264,8 +313,9 @@ fn refresh(opts: &WatchOpts, d: &mut Dash) {
 /// source is unreachable; the interactive loop keeps retrying instead.
 pub fn run(opts: &WatchOpts) -> std::io::Result<()> {
     let mut d = Dash::default();
+    let mut tail = JsonlTail::default();
     loop {
-        refresh(opts, &mut d);
+        refresh(opts, &mut d, &mut tail);
         if opts.once {
             if let Some(note) = &d.note {
                 return Err(std::io::Error::new(std::io::ErrorKind::TimedOut, note.clone()));
@@ -369,5 +419,41 @@ mod tests {
     #[test]
     fn http_get_rejects_unparsable_addr() {
         assert!(http_get("not-an-addr", "/metrics", 100).is_err());
+    }
+
+    #[test]
+    fn jsonl_tail_consumes_incrementally_and_detects_rotation() {
+        let dir = std::env::temp_dir().join("zsfa_watch_tail_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("events.jsonl");
+        let p = path.to_string_lossy().to_string();
+        std::fs::remove_file(&path).ok();
+        let mut tail = JsonlTail::default();
+        assert!(tail.poll(&p).is_err(), "missing file is an error, not a panic");
+
+        // Two complete lines plus a crash-torn partial one.
+        std::fs::write(&path, "{\"a\":1}\n{\"b\":2}\n{\"par").unwrap();
+        let (reset, lines) = tail.poll(&p).unwrap();
+        assert!(!reset);
+        assert_eq!(lines, vec!["{\"a\":1}", "{\"b\":2}"]);
+        // Nothing new arrived: the partial line stays buffered.
+        assert_eq!(tail.poll(&p).unwrap(), (false, vec![]));
+
+        // The writer finishes the torn line and appends another.
+        {
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            write!(f, "tial\":3}}\n{{\"c\":4}}\n").unwrap();
+        }
+        let (reset, lines) = tail.poll(&p).unwrap();
+        assert!(!reset);
+        assert_eq!(lines, vec!["{\"partial\":3}", "{\"c\":4}"]);
+
+        // Rotation (or a resume rolling the sink back): the file shrank,
+        // so the tail restarts from byte 0 and reports the reset.
+        std::fs::write(&path, "{\"fresh\":1}\n").unwrap();
+        let (reset, lines) = tail.poll(&p).unwrap();
+        assert!(reset);
+        assert_eq!(lines, vec!["{\"fresh\":1}"]);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

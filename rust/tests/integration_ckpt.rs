@@ -1,0 +1,431 @@
+//! Checkpoint/resume integration: crash-tolerant sessions with
+//! byte-identical recovery (`ckpt::Snapshot` + `Session::resume`).
+//!
+//! The headline harness runs every algorithm preset to a round boundary,
+//! snapshots, simulates the crash (CSVs missing, a torn JSONL line),
+//! rebuilds a fresh session from the snapshot and `diff -r`s the full
+//! result tree against an uninterrupted reference — across engine and
+//! loopback transports at parallelism 1 and 8. A TCP coordinator is
+//! additionally killed (panic mid-loop, host dropped) at a round boundary
+//! and replaced, with the surviving participant re-rendezvousing — the
+//! error-feedback residuals it privately holds are the state the
+//! replacement cannot reconstruct, which is exactly what the test pins.
+//!
+//! Everything runs under `ZSFA_FIXED_CLOCK` so `wall_ms` (a CSV/JSONL
+//! column) is deterministic; metrics dumps are excluded from the byte
+//! diff because `zsfa_checkpoints_total`/`zsfa_resume_total` differ
+//! between an interrupted and an uninterrupted run *by design* — those
+//! counters are asserted directly instead.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::mpsc;
+use std::time::Duration;
+
+use zsignfedavg::api::{
+    CsvSink, ExperimentSpec, JsonlSink, Session, TransportSpec, WorkloadSpec,
+};
+use zsignfedavg::ckpt::{CheckpointPolicy, Snapshot};
+use zsignfedavg::error::ErrorKind;
+use zsignfedavg::fl::engine::{CkptHook, EngineCkpt};
+use zsignfedavg::fl::{run_experiment, AlgorithmConfig, RunResult};
+use zsignfedavg::rng::ZParam;
+use zsignfedavg::service::{Participant, ServiceHost, TcpTransport};
+use zsignfedavg::telemetry::{Telemetry, FIXED_CLOCK_ENV};
+
+/// Pin the wall clock for the whole process. Every test calls this first;
+/// concurrent calls store the same value, so the race is benign.
+fn fixed_clock() {
+    std::env::set_var(FIXED_CLOCK_ENV, "0");
+}
+
+/// The twelve algorithm presets of the service byte-identity suite.
+fn families() -> Vec<AlgorithmConfig> {
+    vec![
+        AlgorithmConfig::gd().with_lrs(0.05, 1.0),
+        AlgorithmConfig::fedavg(3).with_lrs(0.05, 1.0),
+        AlgorithmConfig::signsgd().with_lrs(0.05, 1.0),
+        AlgorithmConfig::z_signsgd(ZParam::Finite(1), 2.0).with_lrs(0.05, 1.0),
+        AlgorithmConfig::z_signsgd(ZParam::Inf, 2.0).with_lrs(0.05, 1.0),
+        AlgorithmConfig::sto_signsgd().with_lrs(0.05, 1.0),
+        AlgorithmConfig::ef_signsgd().with_lrs(0.05, 1.0),
+        AlgorithmConfig::qsgd(2).with_lrs(0.05, 1.0),
+        AlgorithmConfig::topk(0.25, 1).with_lrs(0.05, 1.0),
+        AlgorithmConfig::sparse_sign(0.25, ZParam::Finite(1), 1.0, 1).with_lrs(0.05, 1.0),
+        AlgorithmConfig::dp_signfedavg(0.5, 1.0, 2).with_lrs(0.05, 0.5),
+        AlgorithmConfig::dp_fedavg(0.5, 1.0, 2).with_lrs(0.05, 0.5),
+    ]
+}
+
+fn spec_for(
+    algo: AlgorithmConfig,
+    name: &str,
+    out: &Path,
+    transport: TransportSpec,
+    parallelism: usize,
+) -> ExperimentSpec {
+    ExperimentSpec::new(name, WorkloadSpec::consensus(16, 37, 1234))
+        .rounds(8)
+        .eval_every(2)
+        .repeats(2)
+        .seed(13)
+        .reduce_lanes(3)
+        .parallelism(parallelism)
+        .transport(transport)
+        .output_dir(out)
+        .series(algo)
+}
+
+/// The observer stack both the original run and the resume must share
+/// (same order — the snapshot's observer marks are positional).
+fn session_for(dir: &Path, append: bool) -> Session {
+    let events = dir.join("events.jsonl");
+    let sink = if append {
+        JsonlSink::append(&events)
+    } else {
+        JsonlSink::create(&events)
+    }
+    .unwrap();
+    Session::new().with(CsvSink::new()).with(sink)
+}
+
+/// Read a directory tree into relative-path → bytes.
+fn tree(root: &Path) -> BTreeMap<String, Vec<u8>> {
+    fn walk(base: &Path, dir: &Path, out: &mut BTreeMap<String, Vec<u8>>) {
+        for e in std::fs::read_dir(dir).unwrap() {
+            let p = e.unwrap().path();
+            if p.is_dir() {
+                walk(base, &p, out);
+            } else {
+                let rel = p.strip_prefix(base).unwrap().to_string_lossy().to_string();
+                out.insert(rel, std::fs::read(&p).unwrap());
+            }
+        }
+    }
+    let mut out = BTreeMap::new();
+    walk(root, root, &mut out);
+    out
+}
+
+/// `diff -r`, in-process: same file set, same bytes.
+fn assert_trees_identical(a: &Path, b: &Path, what: &str) {
+    let (ta, tb) = (tree(a), tree(b));
+    let ka: Vec<&String> = ta.keys().collect();
+    let kb: Vec<&String> = tb.keys().collect();
+    assert_eq!(ka, kb, "{what}: file sets differ");
+    for (k, va) in &ta {
+        assert_eq!(va, &tb[k], "{what}: {k} differs");
+    }
+}
+
+fn assert_records_identical(want: &RunResult, got: &RunResult, what: &str) {
+    assert_eq!(want.records.len(), got.records.len(), "{what}: record count");
+    for (x, y) in want.records.iter().zip(&got.records) {
+        // Full equality including wall_ms — the fixed clock pins it.
+        assert_eq!(x, y, "{what}: round {}", x.round);
+    }
+}
+
+#[test]
+fn every_preset_resumes_to_a_byte_identical_result_tree() {
+    fixed_clock();
+    let base = std::env::temp_dir().join("zsfa_ckpt_tree_test");
+    std::fs::remove_dir_all(&base).ok();
+    for (i, algo) in families().into_iter().enumerate() {
+        let name = format!("ckpt{i}");
+        // The uninterrupted reference (engine transport, parallelism 1);
+        // every crashed-and-resumed tree below must match it byte for
+        // byte, which simultaneously pins the transport/parallelism
+        // determinism contract and the resume path.
+        let dir_a = base.join(format!("{name}_ref"));
+        let spec_a = spec_for(algo.clone(), &name, &dir_a, TransportSpec::Engine, 1);
+        session_for(&dir_a, false).run(&spec_a).unwrap();
+
+        for (transport, tlabel) in
+            [(TransportSpec::Engine, "engine"), (TransportSpec::Loopback, "loopback")]
+        {
+            for parallelism in [1usize, 8] {
+                let what = format!("{name} {tlabel} p{parallelism}");
+                let dir_b = base.join(format!("{name}_{tlabel}_{parallelism}"));
+                let ckpt_dir = base.join(format!("{name}_{tlabel}_{parallelism}_ckpt"));
+                let spec_b =
+                    spec_for(algo.clone(), &name, &dir_b, transport.clone(), parallelism);
+                let policy = CheckpointPolicy::every(&ckpt_dir, 3);
+                session_for(&dir_b, false).run_with_checkpoints(&spec_b, &policy).unwrap();
+
+                // Simulate the crash at the last capture (series 0,
+                // repeat 1, round 6): at that moment no CSVs existed yet
+                // (they are written at series end) and the event log held
+                // only the pre-checkpoint lines — plus whatever torn
+                // partial line the dying process managed to emit. The
+                // JSONL rollback to the observer mark happens inside
+                // resume; the CSV subtree we remove by hand.
+                let snap = Snapshot::load(&policy.path_for(&name)).unwrap();
+                assert_eq!(
+                    (snap.series, snap.repeat, snap.engine.next_round),
+                    (0, 1, 6),
+                    "{what}"
+                );
+                std::fs::remove_dir_all(dir_b.join(&name)).unwrap();
+                {
+                    use std::io::Write as _;
+                    let mut f = std::fs::OpenOptions::new()
+                        .append(true)
+                        .open(dir_b.join("events.jsonl"))
+                        .unwrap();
+                    write!(f, "{{\"event\":\"round\",\"torn").unwrap();
+                }
+
+                session_for(&dir_b, true)
+                    .resume(&spec_b, &snap, &CheckpointPolicy::off())
+                    .unwrap();
+                assert_trees_identical(&dir_a, &dir_b, &what);
+            }
+        }
+    }
+    std::fs::remove_dir_all(&base).ok();
+}
+
+#[test]
+fn tcp_coordinator_killed_at_a_round_boundary_resumes_bit_identical() {
+    fixed_clock();
+    // EF-SignSGD is the hard case: over TCP the residuals live *only* in
+    // the participant process, so recovery depends on the participant
+    // outliving the coordinator and re-rendezvousing with its state
+    // intact. A single participant keeps the client→pid affinity trivially
+    // stable across the replacement.
+    for algo in [
+        AlgorithmConfig::ef_signsgd().with_lrs(0.05, 1.0),
+        AlgorithmConfig::z_signfedavg(ZParam::Finite(1), 2.0, 2).with_lrs(0.05, 1.0),
+    ] {
+        let spec = ExperimentSpec::new("tcpckpt", WorkloadSpec::consensus(10, 13, 2024))
+            .rounds(6)
+            .seed(11)
+            .reduce_lanes(3)
+            .series(algo);
+        let algo = spec.expanded_series()[0].algorithm.clone();
+        let cfg = spec.server_config(0);
+        let mut backend = spec.workload.build_backend().unwrap();
+        let want = run_experiment(backend.as_mut(), &algo, &cfg);
+
+        let host = ServiceHost::tcp("127.0.0.1:0", 500, 30_000, 1, &Telemetry::disabled())
+            .unwrap();
+        let addr1 = host.local_addr().unwrap().to_string();
+        let (ck_tx, ck_rx) = mpsc::channel::<(EngineCkpt, Vec<(u64, u64)>)>();
+        let (addr_tx, addr_rx) = mpsc::channel::<String>();
+
+        // The participant outlives the coordinator: it works for host 1
+        // until the crash, keeps its residuals, then joins the
+        // replacement.
+        let spec_p = spec.clone();
+        let worker = std::thread::spawn(move || {
+            let mut p = Participant::new(spec_p);
+            let mut t = TcpTransport::connect(&addr1, Duration::from_secs(10)).unwrap();
+            let _ = p.run(&mut t); // ends (Ok or transport error) when host 1 dies
+            let addr2 = addr_rx.recv().unwrap();
+            let mut t2 = TcpTransport::connect(&addr2, Duration::from_secs(10)).unwrap();
+            p.run(&mut t2)
+        });
+
+        // Host 1 "crashes" at the round-4 boundary: the capture hook
+        // panics, unwinding out of the round loop before round 4 is ever
+        // offered — the same cut point as a kill -9 between rounds — and
+        // the host is dropped.
+        struct KillAt(u64, mpsc::Sender<(EngineCkpt, Vec<(u64, u64)>)>, Vec<(u64, u64)>);
+        impl CkptHook for KillAt {
+            fn want(&mut self, next_round: u64) -> bool {
+                next_round == self.0
+            }
+            fn store_pins(&mut self, pins: Vec<(u64, u64)>) {
+                self.2 = pins;
+            }
+            fn store(&mut self, ck: EngineCkpt) {
+                self.1.send((ck, std::mem::take(&mut self.2))).unwrap();
+                panic!("simulated coordinator crash");
+            }
+        }
+        let spec_c = spec.clone();
+        let algo_c = algo.clone();
+        let cfg_c = cfg.clone();
+        let crash = std::thread::spawn(move || {
+            let mut host = host;
+            let mut backend = spec_c.workload.build_backend().unwrap();
+            let mut hook = KillAt(4, ck_tx, Vec::new());
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                host.run_one_resumable(
+                    backend.as_mut(),
+                    &algo_c,
+                    &cfg_c,
+                    0,
+                    0,
+                    &mut |_| {},
+                    None,
+                    Some(&mut hook),
+                )
+            }));
+            assert!(r.is_err(), "the crash hook must abort the run");
+            drop(host);
+        });
+        crash.join().unwrap();
+        let (ck, pins) = ck_rx.recv().unwrap();
+        assert_eq!(ck.next_round, 4);
+
+        let mut host2 = ServiceHost::tcp("127.0.0.1:0", 500, 30_000, 1, &Telemetry::disabled())
+            .unwrap();
+        host2.restore_pins(&pins);
+        addr_tx.send(host2.local_addr().unwrap().to_string()).unwrap();
+        let mut backend2 = spec.workload.build_backend().unwrap();
+        let got = host2
+            .run_one_resumable(backend2.as_mut(), &algo, &cfg, 0, 0, &mut |_| {}, Some(&ck), None)
+            .unwrap();
+        host2.shutdown().unwrap();
+        worker.join().unwrap().unwrap();
+        assert_records_identical(&want, &got, &format!("tcp killed {}", want.algorithm));
+    }
+}
+
+#[test]
+fn tcp_resume_with_a_fresh_cohort_is_identical_for_stateless_presets() {
+    fixed_clock();
+    // Coordinator crash where the participants also died: a brand-new
+    // cohort re-rendezvouses against the restored pins (whose holders no
+    // longer exist, so the slots are stolen at PullRound). Correct for
+    // every algorithm whose participants hold no cross-round state.
+    let spec = ExperimentSpec::new("tcpfresh", WorkloadSpec::consensus(10, 13, 7))
+        .rounds(6)
+        .seed(3)
+        .reduce_lanes(3)
+        .series(AlgorithmConfig::z_signfedavg(ZParam::Finite(1), 2.0, 2).with_lrs(0.05, 1.0));
+    let algo = spec.expanded_series()[0].algorithm.clone();
+    let cfg = spec.server_config(0);
+
+    struct At(u64, Option<EngineCkpt>, Vec<(u64, u64)>);
+    impl CkptHook for At {
+        fn want(&mut self, next_round: u64) -> bool {
+            next_round == self.0
+        }
+        fn store_pins(&mut self, pins: Vec<(u64, u64)>) {
+            self.2 = pins;
+        }
+        fn store(&mut self, ck: EngineCkpt) {
+            self.1 = Some(ck);
+        }
+    }
+
+    let join_cohort = |addr: String, n: usize| {
+        (0..n)
+            .map(|_| {
+                let spec = spec.clone();
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let mut t = TcpTransport::connect(&addr, Duration::from_secs(10)).unwrap();
+                    Participant::new(spec).run(&mut t)
+                })
+            })
+            .collect::<Vec<_>>()
+    };
+
+    let mut host = ServiceHost::tcp("127.0.0.1:0", 500, 30_000, 2, &Telemetry::disabled())
+        .unwrap();
+    let joiners = join_cohort(host.local_addr().unwrap().to_string(), 2);
+    let mut backend = spec.workload.build_backend().unwrap();
+    let mut hook = At(3, None, Vec::new());
+    let want = host
+        .run_one_resumable(backend.as_mut(), &algo, &cfg, 0, 0, &mut |_| {}, None, Some(&mut hook))
+        .unwrap();
+    host.shutdown().unwrap();
+    for j in joiners {
+        j.join().unwrap().unwrap();
+    }
+    let ck = hook.1.expect("capture at round 3");
+    assert!(!hook.2.is_empty(), "sticky pins captured");
+
+    let mut host2 = ServiceHost::tcp("127.0.0.1:0", 500, 30_000, 2, &Telemetry::disabled())
+        .unwrap();
+    host2.restore_pins(&hook.2);
+    let joiners2 = join_cohort(host2.local_addr().unwrap().to_string(), 2);
+    let mut backend2 = spec.workload.build_backend().unwrap();
+    let got = host2
+        .run_one_resumable(backend2.as_mut(), &algo, &cfg, 0, 0, &mut |_| {}, Some(&ck), None)
+        .unwrap();
+    host2.shutdown().unwrap();
+    for j in joiners2 {
+        j.join().unwrap().unwrap();
+    }
+    assert_records_identical(&want, &got, "tcp fresh cohort");
+}
+
+#[test]
+fn corrupted_or_truncated_snapshots_fail_with_structured_errors() {
+    fixed_clock();
+    let base = std::env::temp_dir().join("zsfa_ckpt_corrupt_test");
+    std::fs::remove_dir_all(&base).ok();
+    let spec = spec_for(
+        AlgorithmConfig::gd().with_lrs(0.05, 1.0),
+        "corrupt",
+        &base.join("out"),
+        TransportSpec::Engine,
+        1,
+    );
+    let policy = CheckpointPolicy::every(base.join("ckpt"), 3);
+    session_for(&base.join("out"), false).run_with_checkpoints(&spec, &policy).unwrap();
+    let path = policy.path_for("corrupt");
+    let bytes = std::fs::read(&path).unwrap();
+
+    // Truncation at any length: a structured error, never a panic.
+    for cut in [0usize, 1, 8, bytes.len() / 2, bytes.len() - 1] {
+        std::fs::write(&path, &bytes[..cut]).unwrap();
+        let err = Snapshot::load(&path).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::Checkpoint, "cut at {cut}: {err}");
+    }
+    // Bit rot anywhere in the frame.
+    let mut bad = bytes.clone();
+    bad[bytes.len() / 3] ^= 0x40;
+    std::fs::write(&path, &bad).unwrap();
+    assert_eq!(Snapshot::load(&path).unwrap_err().kind(), ErrorKind::Checkpoint);
+
+    // A healthy snapshot under a *modified* spec: refused up front by the
+    // fingerprint rule rather than silently diverging.
+    std::fs::write(&path, &bytes).unwrap();
+    let snap = Snapshot::load(&path).unwrap();
+    let changed = spec.clone().rounds(9);
+    let err = Session::new()
+        .resume(&changed, &snap, &CheckpointPolicy::off())
+        .unwrap_err();
+    assert_eq!(err.kind(), ErrorKind::Checkpoint);
+    assert!(err.to_string().contains("fingerprint"), "{err}");
+    std::fs::remove_dir_all(&base).ok();
+}
+
+#[test]
+fn checkpoints_and_resumes_are_counted_by_telemetry() {
+    fixed_clock();
+    let base = std::env::temp_dir().join("zsfa_ckpt_counter_test");
+    std::fs::remove_dir_all(&base).ok();
+    let spec = spec_for(
+        AlgorithmConfig::gd().with_lrs(0.05, 1.0),
+        "counted",
+        &base.join("out"),
+        TransportSpec::Engine,
+        1,
+    );
+    let policy = CheckpointPolicy::every(base.join("ckpt"), 3);
+    let tele = Telemetry::with_capacity(64);
+    Session::new()
+        .with_telemetry(tele.clone())
+        .run_with_checkpoints(&spec, &policy)
+        .unwrap();
+    // rounds 8, k = 3, 2 repeats: captures at next_round 3 and 6 each.
+    assert_eq!(tele.metrics().unwrap().checkpoints_total.get(), 4);
+    assert_eq!(tele.metrics().unwrap().resume_total.get(), 0);
+
+    let snap = Snapshot::load(&policy.path_for("counted")).unwrap();
+    let tele2 = Telemetry::with_capacity(64);
+    Session::new()
+        .with_telemetry(tele2.clone())
+        .resume(&spec, &snap, &CheckpointPolicy::off())
+        .unwrap();
+    assert_eq!(tele2.metrics().unwrap().resume_total.get(), 1);
+    assert_eq!(tele2.metrics().unwrap().checkpoints_total.get(), 0);
+    std::fs::remove_dir_all(&base).ok();
+}
