@@ -22,6 +22,11 @@
 #                    --checkpoint-every, kill -9 the coordinator once a
 #                    snapshot lands, `zsfa resume` it with a fresh cohort,
 #                    byte-diff the result tree vs an uninterrupted run (CI)
+#   make chaos-smoke fault-tolerance end-to-end: TCP serve/join with two
+#                    chaos-transport participants (seeded drops, dups,
+#                    resets, corrupt frames) plus one scripted straggler
+#                    that holds a work order forever, byte-diff the result
+#                    tree vs a clean fixed-clock run (CI)
 #
 # The smoke targets export ZSFA_FIXED_CLOCK=0 (telemetry::Clock) so wall_ms
 # is pinned and whole result trees — raw CSVs included — byte-diff cleanly.
@@ -34,7 +39,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test bench bench-build bench-smoke bench-json determinism spec-smoke service-smoke metrics-smoke ckpt-smoke fmt lint python artifacts ci clean
+.PHONY: build test bench bench-build bench-smoke bench-json determinism spec-smoke service-smoke metrics-smoke ckpt-smoke chaos-smoke fmt lint python artifacts ci clean
 
 build:
 	$(CARGO) build --release
@@ -158,6 +163,8 @@ metrics-smoke: build
 	  zsfa_bits_up_total zsfa_bits_down_total zsfa_clients_arrived_total \
 	  zsfa_clients_selected_total zsfa_coord_replies_total zsfa_simd_path \
 	  zsfa_checkpoints_total zsfa_resume_total \
+	  zsfa_retries_total zsfa_faults_injected_total zsfa_timeouts_total \
+	  zsfa_degraded_rounds_total zsfa_degraded_round_last \
 	  zsfa_phase_ms zsfa_round_ms; do \
 	  grep -q "^# TYPE $$fam " metrics_scrape.txt || { echo "scrape missing $$fam"; exit 1; }; \
 	  grep -q "^# TYPE $$fam " metrics_dump.txt || { echo "dump missing $$fam"; exit 1; }; \
@@ -212,6 +219,35 @@ ckpt-smoke: build
 	  wait $$srv && wait $$j1 && wait $$j2
 	diff -r results_ckpt_ref/results results_ckpt_tcp/results
 	@echo "ckpt-smoke: killed-and-resumed TCP session byte-identical to the uninterrupted run"
+
+# Chaos / graceful-degradation smoke (DESIGN.md §5.6): serve the example
+# spec over TCP while two participants join through seeded fault-injecting
+# transports (drops, duplicates, delays, resets, corrupt frames — the
+# aggressive profile) and a third scripted straggler (`join --stall`)
+# pulls one work order and never submits it. The coordinator must ride
+# its round-deadline reclaim path (the chaos joiners repair the freed
+# slot, so no round actually degrades), and the finished result tree must
+# byte-diff clean against a clean fixed-clock engine run: fault handling
+# is not allowed to change one byte of science. The straggler is reaped
+# with `|| true` — it exits as soon as it observes Finished, but the
+# coordinator owes it nothing after the run is over.
+chaos-smoke: build
+	rm -rf results_chaos_ref results_chaos_tcp
+	mkdir -p results_chaos_ref results_chaos_tcp
+	cd results_chaos_ref && ZSFA_FIXED_CLOCK=0 ../target/release/zsfa run \
+	  ../rust/examples/quickstart.json --parallelism 1
+	@set -e; cd results_chaos_tcp; \
+	  ZSFA_FIXED_CLOCK=0 timeout 240 ../target/release/zsfa serve ../rust/examples/quickstart.json \
+	    --addr 127.0.0.1:7446 --min-participants 2 --round-deadline-ms 2000 & srv=$$!; \
+	  timeout 240 ../target/release/zsfa join ../rust/examples/quickstart.json \
+	    --addr 127.0.0.1:7446 --patience-s 120 --chaos-seed 1001 & j1=$$!; \
+	  timeout 240 ../target/release/zsfa join ../rust/examples/quickstart.json \
+	    --addr 127.0.0.1:7446 --patience-s 120 --chaos-seed 2002 & j2=$$!; \
+	  timeout 240 ../target/release/zsfa join ../rust/examples/quickstart.json \
+	    --addr 127.0.0.1:7446 --patience-s 120 --stall & j3=$$!; \
+	  wait $$srv && wait $$j1 && wait $$j2; wait $$j3 || true
+	diff -r results_chaos_ref/results results_chaos_tcp/results
+	@echo "chaos-smoke: chaos-transport TCP session byte-identical to the clean engine run"
 
 fmt:
 	$(CARGO) fmt --all -- --check

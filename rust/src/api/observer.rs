@@ -341,6 +341,7 @@ mod tests {
             sim_time_s: 0.0,
             arrived: 4,
             selected: 4,
+            degraded: false,
         }
     }
 

@@ -23,6 +23,7 @@
 //!   paper-protocol repeat loop has always used; a pinned test keeps it
 //!   from drifting.
 
+use crate::compress::agg::RobustRule;
 use crate::compress::sign::SigmaRule;
 use crate::fl::algorithms::ServerOpt;
 use crate::fl::plateau::PlateauConfig;
@@ -1289,15 +1290,51 @@ fn server_opt_from(j: &Json, at: &str) -> Result<ServerOpt, SpecError> {
     Ok(s)
 }
 
+fn robust_json(r: &RobustRule) -> Json {
+    match *r {
+        RobustRule::None => jobj(vec![("rule", jstr("none"))]),
+        RobustRule::TrimmedMajority { frac } => {
+            jobj(vec![("rule", jstr("trimmed_majority")), ("frac", jf32(frac))])
+        }
+    }
+}
+
+fn robust_from(j: &Json, at: &str) -> Result<RobustRule, SpecError> {
+    let o = Obj::new(j, at)?;
+    let r = match o.req_str("rule")? {
+        "none" => RobustRule::None,
+        "trimmed_majority" => {
+            let frac = o.req_f32("frac")?;
+            if !(0.0..0.5).contains(&frac) {
+                return Err(SpecError::new(
+                    o.path("frac"),
+                    "trim fraction must be in [0, 0.5)",
+                ));
+            }
+            RobustRule::TrimmedMajority { frac }
+        }
+        other => {
+            return Err(SpecError::new(o.path("rule"), format!("unknown robust rule {other:?}")))
+        }
+    };
+    o.finish()?;
+    Ok(r)
+}
+
 fn algorithm_json(a: &AlgorithmConfig) -> Json {
-    jobj(vec![
+    let mut v = vec![
         ("name", jstr(&a.name)),
         ("compression", compression_json(&a.compression)),
         ("client_lr", jf32(a.client_lr)),
         ("server_lr", jf32(a.server_lr)),
         ("server_opt", server_opt_json(&a.server_opt)),
         ("local_steps", jus(a.local_steps)),
-    ])
+    ];
+    // Emitted only when set, so pre-existing spec JSON stays byte-stable.
+    if a.robust != RobustRule::None {
+        v.push(("robust", robust_json(&a.robust)));
+    }
+    jobj(v)
 }
 
 fn algorithm_from(j: &Json, at: &str) -> Result<AlgorithmConfig, SpecError> {
@@ -1312,6 +1349,10 @@ fn algorithm_from(j: &Json, at: &str) -> Result<AlgorithmConfig, SpecError> {
             Some(v) => server_opt_from(v, &o.path("server_opt"))?,
         },
         local_steps: o.usize_or("local_steps", 1)?,
+        robust: match o.get("robust") {
+            None => RobustRule::None,
+            Some(v) => robust_from(v, &o.path("robust"))?,
+        },
     };
     o.finish()?;
     Ok(a)
@@ -1867,6 +1908,34 @@ mod tests {
         assert_eq!(zparam_from(&Json::parse("\"inf\"").unwrap(), "z").unwrap(), ZParam::Inf);
         assert!(zparam_from(&Json::parse("0").unwrap(), "z").is_err());
         assert!(zparam_from(&Json::parse("1.5").unwrap(), "z").is_err());
+    }
+
+    #[test]
+    fn robust_json_round_trips_and_default_is_absent() {
+        // Pre-robust spec files must stay byte-compatible: RobustRule::None
+        // adds no key, and loading such a file yields None.
+        let plain = tiny_spec();
+        assert!(!plain.to_json().contains("robust"));
+        assert_eq!(
+            ExperimentSpec::from_json(&plain.to_json()).unwrap().series[0].algorithm.robust,
+            RobustRule::None
+        );
+
+        let trimmed = tiny_spec().series(
+            AlgorithmConfig::signsgd().with_robust(RobustRule::TrimmedMajority { frac: 0.25 }),
+        );
+        let json = trimmed.to_json();
+        assert!(json.contains("trimmed_majority"), "{json}");
+        assert_eq!(ExperimentSpec::from_json(&json).unwrap(), trimmed);
+
+        let bad_rule = json.replace("\"trimmed_majority\"", "\"krum\"");
+        let err = ExperimentSpec::from_json(&bad_rule).unwrap_err();
+        assert!(err.at.ends_with("robust.rule"), "{err}");
+
+        let oob = json.replace("\"frac\":0.25", "\"frac\":0.5");
+        assert_ne!(oob, json, "replace must have rewritten the fraction");
+        let err = ExperimentSpec::from_json(&oob).unwrap_err();
+        assert!(err.at.ends_with("robust.frac"), "{err}");
     }
 
     #[test]

@@ -38,8 +38,10 @@ use crate::rng::RngSnapshot;
 /// Format magic ("zfck", little-endian).
 const MAGIC: u32 = u32::from_le_bytes(*b"zfck");
 
-/// Current snapshot format version.
-pub const VERSION: u8 = 1;
+/// Current snapshot format version. v2 added the per-record `degraded`
+/// flag; v1 frames are refused with [`CkptError::BadVersion`] rather than
+/// silently reinterpreted.
+pub const VERSION: u8 = 2;
 
 /// FNV-1a over a byte slice, 32-bit (the frame checksum — same constants
 /// as `compress::wire` and `service::protocol`).
@@ -470,6 +472,7 @@ fn put_records(w: &mut Vec<u8>, records: &[RoundRecord]) {
         w.extend_from_slice(&r.sim_time_s.to_le_bytes());
         w.extend_from_slice(&r.arrived.to_le_bytes());
         w.extend_from_slice(&r.selected.to_le_bytes());
+        w.push(r.degraded as u8);
     }
 }
 
@@ -490,7 +493,7 @@ fn get_opt_f64(c: &mut Cursor<'_>) -> std::result::Result<Option<f64>, CkptError
 /// Every field in a record is ≥ 1 byte and the two options are 1–9, so a
 /// record consumes at least this many body bytes — the pre-allocation
 /// bound for hostile record counts.
-const MIN_RECORD_BYTES: u128 = 8 + 8 + 1 + 1 + 8 + 8 + 4 + 8 + 8 + 4 + 4;
+const MIN_RECORD_BYTES: u128 = 8 + 8 + 1 + 1 + 8 + 8 + 4 + 8 + 8 + 4 + 4 + 1;
 
 fn get_records(c: &mut Cursor<'_>) -> std::result::Result<Vec<RoundRecord>, CkptError> {
     let n = c.u64()?;
@@ -511,6 +514,11 @@ fn get_records(c: &mut Cursor<'_>) -> std::result::Result<Vec<RoundRecord>, Ckpt
             sim_time_s: c.f64()?,
             arrived: c.u32()?,
             selected: c.u32()?,
+            degraded: match c.u8()? {
+                0 => false,
+                1 => true,
+                _ => return Err(CkptError::Corrupt),
+            },
         });
     }
     Ok(out)
@@ -614,6 +622,7 @@ mod tests {
             sim_time_s: round as f64 * 0.25,
             arrived: 6,
             selected: 8,
+            degraded: round % 2 == 1,
         }
     }
 
@@ -745,7 +754,7 @@ mod tests {
     #[test]
     fn version_skew_rejected_with_the_offending_version() {
         let frame = full_snapshot().encode();
-        for v in [0u8, 2, 77, 255] {
+        for v in [0u8, 1, 77, 255] {
             let mut body = frame[..frame.len() - 4].to_vec();
             body[4] = v;
             assert_eq!(

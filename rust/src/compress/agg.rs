@@ -372,11 +372,39 @@ fn scatter_sparse(
     Ok(())
 }
 
+/// Byzantine-robust aggregation rule for the sign (vote-count) family.
+/// Applied at reduce time on the exact merged integer tallies, so it is
+/// deterministic and thread-count independent like everything else in the
+/// vote path.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RobustRule {
+    /// Plain mean vote — the paper's Algorithm 1 server step.
+    None,
+    /// Coordinate-wise trimmed-count majority
+    /// ([`VoteAccumulator::trimmed_mean_into`]): soft-threshold every tally
+    /// toward zero by `2·⌊frac·n⌋`, neutralizing up to `⌊frac·n⌋`
+    /// sign-flipping clients per coordinate (arXiv 2210.00665).
+    TrimmedMajority {
+        /// Fraction of the arriving cohort to trim, in `[0, 0.5)`.
+        frac: f32,
+    },
+}
+
+impl RobustRule {
+    /// Votes to trim for a cohort of `n` arrivals.
+    fn trim_for(&self, n: u32) -> u32 {
+        match *self {
+            RobustRule::None => 0,
+            RobustRule::TrimmedMajority { frac } => (frac as f64 * n as f64).floor() as u32,
+        }
+    }
+}
+
 /// Lane fold for the sign family: merge lane vote shards (exact integer
 /// counts, order-independent — lane order is used anyway) and write the
-/// mean vote. The merged accumulator is returned to lane 0 so its
-/// allocation is reused next round.
-fn reduce_votes(lanes: &[Mutex<LaneAcc>], update: &mut [f32]) -> ReduceStats {
+/// mean vote, optionally trimmed per [`RobustRule`]. The merged accumulator
+/// is returned to lane 0 so its allocation is reused next round.
+fn reduce_votes(lanes: &[Mutex<LaneAcc>], rule: RobustRule, update: &mut [f32]) -> ReduceStats {
     let mut stats = ReduceStats::default();
     let mut total: Option<VoteAccumulator> = None;
     for lane in lanes {
@@ -391,7 +419,12 @@ fn reduce_votes(lanes: &[Mutex<LaneAcc>], update: &mut [f32]) -> ReduceStats {
         }
     }
     let mut total = total.expect("sign reduce with no votes absorbed");
-    total.mean_into(1.0, update);
+    match rule.trim_for(total.num_votes()) {
+        // trim = 0 routes through the untrimmed kernel — bit-identical to
+        // the pre-RobustRule behavior by construction.
+        0 => total.mean_into(1.0, update),
+        trim => total.trimmed_mean_into(trim, 1.0, update),
+    }
     lanes[0].lock().unwrap().votes = Some(total);
     stats
 }
@@ -469,6 +502,7 @@ impl Aggregator for DenseAgg {
 pub struct ZSignAgg {
     pub z: ZParam,
     pub sigma: SigmaRule,
+    pub robust: RobustRule,
 }
 
 impl Aggregator for ZSignAgg {
@@ -504,7 +538,7 @@ impl Aggregator for ZSignAgg {
     }
 
     fn reduce(&self, lanes: &[Mutex<LaneAcc>], update: &mut [f32]) -> ReduceStats {
-        reduce_votes(lanes, update)
+        reduce_votes(lanes, self.robust, update)
     }
 
     fn compress_remote(
@@ -681,6 +715,7 @@ pub struct DpSignAgg {
     pub clip: f32,
     pub noise_mult: f32,
     pub client_lr: f32,
+    pub robust: RobustRule,
 }
 
 impl Aggregator for DpSignAgg {
@@ -707,7 +742,7 @@ impl Aggregator for DpSignAgg {
     }
 
     fn reduce(&self, lanes: &[Mutex<LaneAcc>], update: &mut [f32]) -> ReduceStats {
-        reduce_votes(lanes, update)
+        reduce_votes(lanes, self.robust, update)
     }
 
     fn compress_remote(
@@ -1010,7 +1045,11 @@ mod tests {
     fn sign_reduce_is_slot_permutation_invariant() {
         let d = 130;
         let m = 12;
-        let agg = ZSignAgg { z: ZParam::Finite(1), sigma: SigmaRule::Fixed(1.0) };
+        let agg = ZSignAgg {
+            z: ZParam::Finite(1),
+            sigma: SigmaRule::Fixed(1.0),
+            robust: RobustRule::None,
+        };
         let mut rng = Pcg64::seeded(5);
         // One fixed (delta, rng stream) per *client*; permuting slots
         // re-orders absorption but not any client's own randomness.
@@ -1169,7 +1208,11 @@ mod tests {
     #[test]
     fn sign_lanes_allocate_no_dense_state() {
         let d = 96;
-        let agg = ZSignAgg { z: ZParam::Finite(1), sigma: SigmaRule::Fixed(0.5) };
+        let agg = ZSignAgg {
+            z: ZParam::Finite(1),
+            sigma: SigmaRule::Fixed(0.5),
+            robust: RobustRule::None,
+        };
         let lanes = mk_lanes(2, d);
         let mut scratch = Scratch::new(d);
         for slot in 0..6usize {
@@ -1193,10 +1236,19 @@ mod tests {
         let d = 100;
         let aggs: Vec<Box<dyn Aggregator>> = vec![
             Box::new(DenseAgg),
-            Box::new(ZSignAgg { z: ZParam::Finite(1), sigma: SigmaRule::Fixed(1.0) }),
+            Box::new(ZSignAgg {
+                z: ZParam::Finite(1),
+                sigma: SigmaRule::Fixed(1.0),
+                robust: RobustRule::None,
+            }),
             Box::new(QsgdAgg { s: 1 }),
             Box::new(QsgdAgg { s: 4 }),
-            Box::new(DpSignAgg { clip: 0.5, noise_mult: 1.0, client_lr: 0.1 }),
+            Box::new(DpSignAgg {
+                clip: 0.5,
+                noise_mult: 1.0,
+                client_lr: 0.1,
+                robust: RobustRule::None,
+            }),
             Box::new(DpDenseAgg { clip: 0.5, noise_mult: 1.0, client_lr: 0.1 }),
             Box::new(TopKAgg { frac: 0.1 }),
             Box::new(SparseSignAgg { frac: 0.1, z: ZParam::Finite(1), sigma: 1.0 }),
@@ -1239,11 +1291,24 @@ mod tests {
         let inv_m = 1.0f32 / m as f32;
         let aggs: Vec<Box<dyn Aggregator>> = vec![
             Box::new(DenseAgg),
-            Box::new(ZSignAgg { z: ZParam::Finite(1), sigma: SigmaRule::Fixed(1.0) }),
-            Box::new(ZSignAgg { z: ZParam::Inf, sigma: SigmaRule::L2Norm }),
+            Box::new(ZSignAgg {
+                z: ZParam::Finite(1),
+                sigma: SigmaRule::Fixed(1.0),
+                robust: RobustRule::None,
+            }),
+            Box::new(ZSignAgg {
+                z: ZParam::Inf,
+                sigma: SigmaRule::L2Norm,
+                robust: RobustRule::None,
+            }),
             Box::new(QsgdAgg { s: 1 }),
             Box::new(QsgdAgg { s: 4 }),
-            Box::new(DpSignAgg { clip: 0.5, noise_mult: 1.0, client_lr: 0.1 }),
+            Box::new(DpSignAgg {
+                clip: 0.5,
+                noise_mult: 1.0,
+                client_lr: 0.1,
+                robust: RobustRule::None,
+            }),
             Box::new(DpDenseAgg { clip: 0.5, noise_mult: 1.0, client_lr: 0.1 }),
             Box::new(TopKAgg { frac: 0.1 }),
             Box::new(SparseSignAgg { frac: 0.1, z: ZParam::Finite(1), sigma: 1.0 }),
@@ -1389,7 +1454,11 @@ mod tests {
         let mut scratch = Scratch::new(d);
         let mk_lane = || LaneAcc::new(d);
 
-        let sign = ZSignAgg { z: ZParam::Finite(1), sigma: SigmaRule::Fixed(1.0) };
+        let sign = ZSignAgg {
+            z: ZParam::Finite(1),
+            sigma: SigmaRule::Fixed(1.0),
+            robust: RobustRule::None,
+        };
         let dense = DenseAgg;
         let qsgd = QsgdAgg { s: 2 };
         let topk = TopKAgg { frac: 0.1 };

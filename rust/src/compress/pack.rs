@@ -271,6 +271,26 @@ impl VoteAccumulator {
         }
     }
 
+    /// [`VoteAccumulator::mean_into`] with a coordinate-wise trimmed-count
+    /// majority: each tally is soft-thresholded toward zero by `2·trim`
+    /// before averaging, i.e. `c → sign(c)·max(0, |c| − 2·trim)`. One
+    /// Byzantine voter can move a ±1 tally by at most 2, so `trim = k`
+    /// exactly neutralizes any k sign-flipping clients on coordinates where
+    /// the honest margin exceeds them (arXiv 2210.00665's robust one-bit
+    /// aggregation, expressed on exact integer counts). `trim = 0` is
+    /// bit-identical to `mean_into`.
+    pub fn trimmed_mean_into(&mut self, trim: u32, scale: f32, out: &mut [f32]) {
+        assert_eq!(out.len(), self.len);
+        assert!(self.n > 0, "no votes accumulated");
+        self.spill();
+        let k = scale / self.n as f32;
+        let cut = (trim as i64 * 2).min(i32::MAX as i64) as i32;
+        for (o, &c) in out.iter_mut().zip(&self.counts) {
+            let t = (c.abs().max(cut) - cut) * c.signum();
+            *o = k * t as f32;
+        }
+    }
+
     /// Majority-vote signs (used by the SignSGD-with-majority-vote ablation;
     /// ties resolve to +1, consistent with Sign(0) = +1). Builds the packed
     /// words straight from the counts — no i8 round-trip.
@@ -393,6 +413,70 @@ mod tests {
             assert_eq!(acc.counts(), &naive[..], "d={d} final");
             assert_eq!(acc.num_votes(), (3 * b) as u32);
         }
+    }
+
+    #[test]
+    fn trimmed_mean_zero_trim_is_bit_identical_to_mean() {
+        let mut rng = Pcg64::seeded(44);
+        let d = 257;
+        let mut acc = VoteAccumulator::new(d);
+        for _ in 0..9 {
+            acc.add(&PackedSigns::from_signs(&random_signs(&mut rng, d)));
+        }
+        let mut want = vec![0.0f32; d];
+        let mut got = vec![0.0f32; d];
+        acc.mean_into(0.75, &mut want);
+        acc.trimmed_mean_into(0, 0.75, &mut got);
+        for (j, (w, g)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(w.to_bits(), g.to_bits(), "j={j}");
+        }
+    }
+
+    #[test]
+    fn trimmed_mean_soft_thresholds_the_tallies() {
+        // 7 voters, per-coordinate tallies by construction: +7 (unanimous),
+        // +1 (weak margin), -3, 0 is impossible with odd n so use -7.
+        let d = 4;
+        let votes: [[i8; 4]; 7] = [
+            [1, 1, -1, -1],
+            [1, 1, -1, -1],
+            [1, -1, -1, -1],
+            [1, -1, 1, -1],
+            [1, -1, 1, -1],
+            [1, 1, -1, -1],
+            [1, 1, -1, -1],
+        ];
+        let mut acc = VoteAccumulator::new(d);
+        for v in &votes {
+            acc.add(&PackedSigns::from_signs(v));
+        }
+        assert_eq!(acc.counts(), &[7, 1, -3, -7]);
+        let mut out = vec![0.0f32; d];
+        // trim = 1 → cut 2: tallies shrink toward zero by 2, floored at 0.
+        acc.trimmed_mean_into(1, 7.0, &mut out);
+        assert_eq!(out, vec![5.0, 0.0, -1.0, -5.0]);
+        // trim = 2 → cut 4 kills everything with |tally| <= 4.
+        acc.trimmed_mean_into(2, 7.0, &mut out);
+        assert_eq!(out, vec![3.0, 0.0, 0.0, -3.0]);
+    }
+
+    #[test]
+    fn trimmed_mean_neutralizes_k_sign_flippers() {
+        // d=1: 9 honest +1 votes plus k=2 flipped (-1) votes. The honest
+        // margin is 9-2=7; trimming 2 recovers a strictly positive mean on
+        // every coordinate the honest majority carries.
+        let mut acc = VoteAccumulator::new(1);
+        for _ in 0..9 {
+            acc.add(&PackedSigns::from_signs(&[1]));
+        }
+        for _ in 0..2 {
+            acc.add(&PackedSigns::from_signs(&[-1]));
+        }
+        let mut out = [0.0f32];
+        acc.trimmed_mean_into(2, 11.0, &mut out);
+        // tally 7, cut 4 → 3; the flippers' pull (and as much honest
+        // signal) is clipped away, sign preserved.
+        assert_eq!(out[0], 3.0);
     }
 
     #[test]

@@ -3,8 +3,8 @@
 //! configurations over the shared round loop in [`super::server`].
 
 use crate::compress::agg::{
-    Aggregator, DenseAgg, DpDenseAgg, DpSignAgg, EfAgg, QsgdAgg, SparseSignAgg, TopKAgg,
-    ZSignAgg,
+    Aggregator, DenseAgg, DpDenseAgg, DpSignAgg, EfAgg, QsgdAgg, RobustRule, SparseSignAgg,
+    TopKAgg, ZSignAgg,
 };
 use crate::compress::sign::SigmaRule;
 use crate::rng::ZParam;
@@ -47,13 +47,21 @@ impl Compression {
     /// update. `client_lr` is γ for the families that compress the
     /// stepsize-scaled model diff (EF, the DP variants).
     pub fn aggregator(&self, client_lr: f32) -> Box<dyn Aggregator> {
+        self.aggregator_robust(client_lr, RobustRule::None)
+    }
+
+    /// Like [`Compression::aggregator`], but with a Byzantine-robust vote
+    /// reduction (see `compress::agg::RobustRule`). Only the packed-sign
+    /// families carry a majority vote that can be trimmed; the dense and
+    /// value-carrying compressors ignore the rule.
+    pub fn aggregator_robust(&self, client_lr: f32, robust: RobustRule) -> Box<dyn Aggregator> {
         match *self {
             Compression::None => Box::new(DenseAgg),
-            Compression::ZSign { z, sigma } => Box::new(ZSignAgg { z, sigma }),
+            Compression::ZSign { z, sigma } => Box::new(ZSignAgg { z, sigma, robust }),
             Compression::ErrorFeedback => Box::new(EfAgg { client_lr }),
             Compression::Qsgd { s } => Box::new(QsgdAgg { s }),
             Compression::DpSign { clip, noise_mult } => {
-                Box::new(DpSignAgg { clip, noise_mult, client_lr })
+                Box::new(DpSignAgg { clip, noise_mult, client_lr, robust })
             }
             Compression::DpDense { clip, noise_mult } => {
                 Box::new(DpDenseAgg { clip, noise_mult, client_lr })
@@ -93,6 +101,9 @@ pub struct AlgorithmConfig {
     pub server_opt: ServerOpt,
     /// Local SGD steps per round E (E = 1 recovers z-SignSGD).
     pub local_steps: usize,
+    /// Byzantine-robust reduction of the sign majority vote (sign families
+    /// only; [`RobustRule::None`] reproduces the paper's plain mean).
+    pub robust: RobustRule,
 }
 
 impl AlgorithmConfig {
@@ -104,6 +115,7 @@ impl AlgorithmConfig {
             server_lr: 1.0,
             server_opt: ServerOpt::Sgd,
             local_steps: 1,
+            robust: RobustRule::None,
         }
     }
 
@@ -135,6 +147,12 @@ impl AlgorithmConfig {
     pub fn with_local_steps(mut self, e: usize) -> Self {
         assert!(e >= 1);
         self.local_steps = e;
+        self
+    }
+
+    /// Byzantine-robust trimmed majority vote (sign families only).
+    pub fn with_robust(mut self, robust: RobustRule) -> Self {
+        self.robust = robust;
         self
     }
 
@@ -284,6 +302,15 @@ mod tests {
         let a = AlgorithmConfig::z_signfedavg(ZParam::Finite(1), 0.01, 5).with_server_adam();
         assert!(matches!(a.server_opt, ServerOpt::Adam { .. }));
         assert!(a.name.ends_with("+Adam"));
+    }
+
+    #[test]
+    fn robust_builder_sets_the_rule() {
+        let a = AlgorithmConfig::signsgd().with_robust(RobustRule::TrimmedMajority { frac: 0.1 });
+        assert_eq!(a.robust, RobustRule::TrimmedMajority { frac: 0.1 });
+        assert_eq!(AlgorithmConfig::signsgd().robust, RobustRule::None);
+        // Dense families ignore the rule but still build an aggregator.
+        let _ = AlgorithmConfig::gd().compression.aggregator_robust(0.01, a.robust);
     }
 
     #[test]

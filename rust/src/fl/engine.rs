@@ -291,7 +291,7 @@ impl<'a> RoundEngine<'a> {
     /// `d` / `n`: the backend's parameter dimension and client count.
     pub fn new(algo: &'a AlgorithmConfig, cfg: &'a ServerConfig, d: usize, n: usize) -> Self {
         RoundEngine {
-            agg: algo.compression.aggregator(algo.client_lr),
+            agg: algo.compression.aggregator_robust(algo.client_lr, algo.robust),
             algo,
             cfg,
             d,
@@ -762,6 +762,7 @@ impl<'a> RoundEngine<'a> {
             sim_time_s,
             arrived,
             selected,
+            degraded: false,
         }
     }
 

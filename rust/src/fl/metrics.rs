@@ -39,6 +39,12 @@ pub struct RoundRecord {
     /// Clients the coordinator selected this round (≥ `arrived`; the gap
     /// is stragglers + dropouts + unreachable devices).
     pub selected: u32,
+    /// True when the networked service closed this round at the quorum
+    /// deadline without every offered slot submitting (graceful
+    /// degradation). Always false in the in-process engine, whose
+    /// partial-participation semantics are modeled by `selected`/`arrived`
+    /// instead.
+    pub degraded: bool,
 }
 
 /// A complete run: algorithm name + its round records.
@@ -161,13 +167,13 @@ pub fn write_runs_csv(path: &Path, runs: &[RunResult]) -> std::io::Result<()> {
     writeln!(
         f,
         "run,round,objective,accuracy,grad_norm_sq,bits_up,bits_down,sigma,wall_ms,\
-         sim_time_s,arrived,selected"
+         sim_time_s,arrived,selected,degraded"
     )?;
     for (k, run) in runs.iter().enumerate() {
         for r in &run.records {
             writeln!(
                 f,
-                "{},{},{},{},{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{}",
                 k,
                 r.round,
                 r.objective,
@@ -179,7 +185,8 @@ pub fn write_runs_csv(path: &Path, runs: &[RunResult]) -> std::io::Result<()> {
                 r.wall_ms,
                 r.sim_time_s,
                 r.arrived,
-                r.selected
+                r.selected,
+                r.degraded as u8
             )?;
         }
     }
@@ -208,6 +215,7 @@ mod tests {
                     sim_time_s: (i as f64 + 1.0) * 2.0,
                     arrived: 4,
                     selected: 5,
+                    degraded: false,
                 })
                 .collect(),
         }

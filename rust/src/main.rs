@@ -75,7 +75,10 @@ SUBCOMMANDS
            liveness; results are bit-identical to `zsfa run`; with
            --telemetry the coordinator port also answers GET /metrics)
   join    work for a coordinator:  zsfa join spec.json --addr host:7070
-          (same spec file on both sides; exits when the run finishes)
+          (same spec file on both sides; exits when the run finishes;
+           --chaos-seed N injects seeded transport faults — results stay
+           byte-identical; --stall holds one work order forever to force
+           the coordinator's deadline/reclaim/quorum path)
   resume  continue a crashed/checkpointed run:  zsfa resume file.ckpt
           (the snapshot embeds its spec; the continued run is
            byte-identical to one that never stopped; --jsonl FILE
@@ -362,8 +365,16 @@ fn serve_cmd(args: &Args) -> Result<()> {
 /// `zsfa join`: work for a coordinator as a TCP participant until the
 /// experiment finishes. Both sides must load the same spec file — that is
 /// how they agree on the workload, series algorithms and repeat seeds.
+///
+/// `--chaos-seed N` wraps the connection in a seeded fault-injecting
+/// transport (the chaos-smoke harness; results must stay byte-identical).
+/// `--stall` joins, pulls one work order and never submits it — a
+/// scripted straggler for exercising the coordinator's deadline/reclaim/
+/// quorum degradation path.
 fn join_cmd(args: &Args) -> Result<()> {
-    use zsignfedavg::service::{Participant, TcpTransport};
+    use zsignfedavg::service::{
+        ChaosConfig, ChaosTransport, FaultPlan, Participant, RetryPolicy, TcpTransport, Transport,
+    };
     let path = args
         .positional
         .first()
@@ -377,10 +388,67 @@ fn join_cmd(args: &Args) -> Result<()> {
     let patience = std::time::Duration::from_secs(args.u64_or("patience-s", 30)?);
     println!("join: working for coordinator at {addr}");
     log_simd_path();
-    let mut transport = TcpTransport::connect(&addr, patience)?;
-    Participant::new(spec).run(&mut transport)?;
+    let tcp = TcpTransport::connect(&addr, patience)?;
+    let chaos_seed =
+        if args.has("chaos-seed") { Some(args.u64_or("chaos-seed", 0)?) } else { None };
+    let mut transport: Box<dyn Transport> = match chaos_seed {
+        Some(seed) => {
+            println!("join: chaos transport on (aggressive profile, seed {seed})");
+            Box::new(ChaosTransport::new(tcp, FaultPlan::new(ChaosConfig::aggressive(), seed)))
+        }
+        None => Box::new(tcp),
+    };
+    let retry = match chaos_seed {
+        Some(seed) => RetryPolicy { seed, ..RetryPolicy::default() },
+        None => RetryPolicy::default(),
+    };
+    if args.has("stall") {
+        stall(transport.as_mut(), retry, patience)?;
+    } else {
+        let mut p = Participant::new(spec).with_retry(retry).with_rendezvous_patience(patience);
+        p.run(transport.as_mut())?;
+    }
     println!("join: coordinator finished, exiting");
     Ok(())
+}
+
+/// The `join --stall` loop: rendezvous, pull one work order, hold it
+/// without submitting, heartbeat until the coordinator reports
+/// `Finished`. The held slot forces the coordinator through its
+/// round-deadline reclaim (and, if nobody repairs it, a quorum close).
+fn stall(
+    transport: &mut dyn Transport,
+    retry: zsignfedavg::service::RetryPolicy,
+    patience: std::time::Duration,
+) -> Result<()> {
+    use zsignfedavg::service::participant::{rendezvous_retrying, request_with_retry};
+    use zsignfedavg::service::protocol::{PhaseReply, Reply, Request, RoundReply};
+    use zsignfedavg::telemetry::Telemetry;
+    let tele = Telemetry::disabled();
+    let pid = loop {
+        match rendezvous_retrying(transport, retry, patience, &tele)? {
+            Some(pid) => break pid,
+            None => retry.sleep(0),
+        }
+    };
+    println!("stall: joined as pid {pid}; will hold the first work order");
+    let mut holding = false;
+    loop {
+        if !holding {
+            if let Reply::Round(RoundReply::Work(w)) =
+                request_with_retry(transport, &Request::PullRound { pid }, retry, &tele)?
+            {
+                println!("stall: holding round {} (never submitting)", w.round);
+                holding = true;
+            }
+        }
+        if let Reply::Heartbeat(PhaseReply::Finished) =
+            request_with_retry(transport, &Request::Heartbeat { pid }, retry, &tele)?
+        {
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
 }
 
 /// Config-driven experiment runner (see `configs/*.cfg`), routed through

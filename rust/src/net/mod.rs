@@ -200,6 +200,7 @@ mod tests {
                     sim_time_s: 0.0,
                     arrived: 1,
                     selected: 1,
+                    degraded: false,
                 })
                 .collect(),
         }

@@ -13,7 +13,10 @@
 //! an attacker's vote is worth ±1 per coordinate no matter how hard it
 //! lies — while the dense mean inherits the attacker's magnitude and, at
 //! 10% gradient-negating clients with a 10× boost, turns the update
-//! direction *ascending*.
+//! direction *ascending*. A third series runs the same sign method under
+//! the trimmed-count majority rule (`RobustRule::TrimmedMajority`,
+//! `--trim-frac`, default 0.2): trimming the most one-sided vote counts
+//! buys extra headroom exactly where the plain vote starts to bend.
 //!
 //! All runs use analytic backends: no artifacts needed, `--parallelism`
 //! fans clients out with bit-identical results. Scenario knobs are the
@@ -22,6 +25,7 @@
 use super::common::*;
 use crate::api::{CsvSink, ExperimentSpec, Session, WorkloadSpec};
 use crate::cli::Args;
+use crate::compress::agg::RobustRule;
 use crate::fl::server::Participation;
 use crate::fl::AlgorithmConfig;
 use crate::problems::consensus::Consensus;
@@ -110,9 +114,15 @@ fn byzantine_robustness(args: &Args, base: &ScenarioConfig) -> crate::error::Res
     let sigma = args.f32_or("sigma", 2.0)?;
     let repeats = args.usize_or("repeats", 3)?;
     let fracs = [0.0f32, 0.1, 0.2, 0.3];
+    let trim = args.f32_or("trim-frac", 0.2)?;
+    let mut trimmed = AlgorithmConfig::z_signfedavg(ZParam::Finite(1), sigma, e)
+        .with_lrs(0.05, 1.0)
+        .with_robust(RobustRule::TrimmedMajority { frac: trim });
+    trimmed.name = format!("1-signfedavg-trim{trim}");
     let algos = vec![
         AlgorithmConfig::fedavg(e).with_lrs(0.05, 1.0),
         AlgorithmConfig::z_signfedavg(ZParam::Finite(1), sigma, e).with_lrs(0.05, 1.0),
+        trimmed,
     ];
 
     // Both attack modes are swept; --sim_byzantine_boost (via a
@@ -178,7 +188,10 @@ fn byzantine_robustness(args: &Args, base: &ScenarioConfig) -> crate::error::Res
     println!(
         "\n  Majority-vote sign aggregation degrades more gracefully: an attacker's\n  \
          report is clipped to one vote per coordinate, while the dense mean\n  \
-         inherits its (arbitrarily scaled) magnitude."
+         inherits its (arbitrarily scaled) magnitude. The trimmed-count rule\n  \
+         (trim {trim}) discards the most one-sided vote counts before the\n  \
+         majority decision, trading a little byz-free accuracy for a flatter\n  \
+         curve at high attacker fractions."
     );
     Ok(())
 }

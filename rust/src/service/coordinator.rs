@@ -195,6 +195,30 @@ impl CoordState {
         self.active.as_ref().is_some_and(|r| r.submitted == r.slots.len())
     }
 
+    /// Number of submissions stored in the open round (0 when none open).
+    pub fn submitted_count(&self) -> usize {
+        self.active.as_ref().map_or(0, |r| r.submitted)
+    }
+
+    /// Return every assigned-but-unsubmitted slot to the pool, releasing
+    /// the straggler's pin on its client so live participants can take the
+    /// work over during the degradation grace window. Returns how many
+    /// slots were reclaimed.
+    pub fn reclaim_unsubmitted(&mut self) -> usize {
+        let Some(r) = self.active.as_mut() else { return 0 };
+        let mut reclaimed = 0;
+        for slot in r.slots.iter_mut() {
+            if let SlotStatus::Assigned { pid } = slot.status {
+                if self.pins.get(&slot.client) == Some(&pid) {
+                    self.pins.remove(&slot.client);
+                }
+                slot.status = SlotStatus::Unassigned;
+                reclaimed += 1;
+            }
+        }
+        reclaimed
+    }
+
     /// Close the open round and return the submissions that made it, in
     /// slot order (the fold order). Slots that never submitted are simply
     /// absent — an empty vec is the empty-round freeze.
@@ -310,6 +334,17 @@ impl CoordState {
                 let Some(r) = self.active.as_mut() else {
                     return Reply::Round(RoundReply::NoWork);
                 };
+                // A participant that already holds a slot re-receives the
+                // same work order: the reply to its original pull may have
+                // been lost in flight, and re-issuing is idempotent (the
+                // slot stays assigned to the same pid).
+                if let Some(i) = r
+                    .slots
+                    .iter()
+                    .position(|s| s.status == (SlotStatus::Assigned { pid: *pid }))
+                {
+                    return Reply::Round(RoundReply::Work(Box::new(work_order(r, i))));
+                }
                 // Prefer a slot whose client is already pinned to this
                 // participant (EF residual locality), then any slot whose
                 // client is unpinned or whose pin holder is gone.
@@ -333,16 +368,7 @@ impl CoordState {
                 };
                 r.slots[i].status = SlotStatus::Assigned { pid: *pid };
                 pins.insert(r.slots[i].client, *pid);
-                Reply::Round(RoundReply::Work(Box::new(WorkOrder {
-                    series: r.series,
-                    repeat: r.repeat,
-                    round: r.round,
-                    sigma: r.sigma,
-                    slot: i as u64,
-                    client: r.slots[i].client,
-                    fault: r.slots[i].fault,
-                    params: r.params.clone(),
-                })))
+                Reply::Round(RoundReply::Work(Box::new(work_order(r, i))))
             }
             Request::Submit { pid, round, slot, loss, ef_scale, payload } => {
                 if !self.peers.contains_key(pid) {
@@ -381,6 +407,20 @@ impl CoordState {
                 Reply::Submit(SubmitReply::Ok)
             }
         }
+    }
+}
+
+/// The work order for slot `i` of the open round.
+fn work_order(r: &ActiveRound, i: usize) -> WorkOrder {
+    WorkOrder {
+        series: r.series,
+        repeat: r.repeat,
+        round: r.round,
+        sigma: r.sigma,
+        slot: i as u64,
+        client: r.slots[i].client,
+        fault: r.slots[i].fault,
+        params: r.params.clone(),
     }
 }
 
@@ -452,7 +492,7 @@ impl Coordinator {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compress::agg::ZSignAgg;
+    use crate::compress::agg::{RobustRule, ZSignAgg};
     use crate::compress::kernel;
     use crate::compress::pack::PackedSigns;
     use crate::compress::sign::SigmaRule;
@@ -463,7 +503,11 @@ mod tests {
     fn state() -> CoordState {
         let mut st = CoordState::new(100);
         st.begin_run(
-            Box::new(ZSignAgg { z: ZParam::Finite(1), sigma: SigmaRule::Fixed(1.0) }),
+            Box::new(ZSignAgg {
+                z: ZParam::Finite(1),
+                sigma: SigmaRule::Fixed(1.0),
+                robust: RobustRule::None,
+            }),
             D,
         );
         st
@@ -613,8 +657,10 @@ mod tests {
         assert_eq!(w.params, vec![1.0; D]);
         let RoundReply::Work(w2) = pull(&mut st, b, 1) else { panic!() };
         assert_eq!(w2.slot, 1);
-        // All slots assigned: a third pull finds nothing.
-        assert_eq!(pull(&mut st, a, 2), RoundReply::NoWork);
+        // All slots assigned: a third participant finds nothing (the slot
+        // holders themselves would re-receive their held orders).
+        let c = rendezvous(&mut st, 2);
+        assert_eq!(pull(&mut st, c, 2), RoundReply::NoWork);
         assert!(!st.round_complete());
         assert_eq!(submit(&mut st, a, 7, 0, 3), SubmitReply::Ok);
         assert_eq!(submit(&mut st, b, 7, 1, 3), SubmitReply::Ok);
@@ -769,8 +815,10 @@ mod tests {
         let a = rendezvous(&mut st, 0);
         st.offer_round(0, 0, 0, 1.0, &[0.0; D], &participants(1));
         let RoundReply::Work(_) = pull(&mut st, a, 1) else { panic!() };
-        assert_eq!(pull(&mut st, a, 2), RoundReply::NoWork);
         assert_eq!(submit(&mut st, a, 0, 0, 3), SubmitReply::Ok);
+        // The held slot is submitted, so the next pull finds nothing (an
+        // unsubmitted holder would re-receive its order instead).
+        assert_eq!(pull(&mut st, a, 4), RoundReply::NoWork);
         assert_eq!(submit(&mut st, a, 0, 0, 4), SubmitReply::Duplicate);
         assert_eq!(submit(&mut st, a, 9, 0, 5), SubmitReply::Stale);
         assert_eq!(submit(&mut st, 777, 0, 0, 6), SubmitReply::Unknown);
@@ -813,7 +861,11 @@ mod tests {
     fn zero_heartbeat_disables_expiry() {
         let mut st = CoordState::new(0);
         st.begin_run(
-            Box::new(ZSignAgg { z: ZParam::Finite(1), sigma: SigmaRule::Fixed(1.0) }),
+            Box::new(ZSignAgg {
+                z: ZParam::Finite(1),
+                sigma: SigmaRule::Fixed(1.0),
+                robust: RobustRule::None,
+            }),
             D,
         );
         let a = rendezvous(&mut st, 0);
@@ -823,5 +875,78 @@ mod tests {
         st.expire_peers(u64::MAX);
         assert_eq!(st.roster_len(), 1);
         assert_eq!(submit(&mut st, a, 0, 0, u64::MAX), SubmitReply::Ok);
+    }
+
+    #[test]
+    fn lost_pull_reply_is_re_issued_idempotently() {
+        // The chaos seam can drop the reply to a PullRound after the slot
+        // was assigned. The holder's retry must re-receive the identical
+        // work order rather than orphaning the slot until expiry.
+        let mut st = state();
+        let a = rendezvous(&mut st, 0);
+        st.offer_round(0, 0, 0, 1.0, &[0.0; D], &participants(2));
+        let RoundReply::Work(w1) = pull(&mut st, a, 1) else { panic!() };
+        let RoundReply::Work(w2) = pull(&mut st, a, 2) else {
+            panic!("re-pull by the slot holder must re-issue its order")
+        };
+        assert_eq!(w1, w2);
+        // The slot stayed singly assigned: a second participant gets the
+        // other slot, not a double-assignment of the first.
+        let b = rendezvous(&mut st, 2);
+        let RoundReply::Work(wb) = pull(&mut st, b, 3) else { panic!() };
+        assert_eq!(wb.slot, 1);
+        // Once submitted, the re-issue preference disappears.
+        assert_eq!(submit(&mut st, a, 0, w1.slot, 4), SubmitReply::Ok);
+        assert_eq!(pull(&mut st, a, 5), RoundReply::NoWork);
+    }
+
+    #[test]
+    fn degraded_quorum_reclaim_and_close() {
+        // The graceful-degradation state walk the host performs at a round
+        // deadline: reclaim the straggler's slot, observe the quorum via
+        // submitted_count, close with a partial fold in slot order.
+        let mut st = state();
+        let a = rendezvous(&mut st, 0);
+        let b = rendezvous(&mut st, 0);
+        st.offer_round(0, 0, 0, 1.0, &[0.0; D], &participants(3));
+        let RoundReply::Work(wa) = pull(&mut st, a, 1) else { panic!() };
+        let RoundReply::Work(wb) = pull(&mut st, b, 1) else { panic!() };
+        assert_eq!(submit(&mut st, a, 0, wa.slot, 2), SubmitReply::Ok);
+        assert_eq!(submit(&mut st, b, 0, wb.slot, 2), SubmitReply::Ok);
+        // b picks up the third slot but stalls without submitting.
+        let RoundReply::Work(w3) = pull(&mut st, b, 3) else { panic!() };
+        assert_eq!(w3.slot, 2);
+        assert_eq!(st.submitted_count(), 2);
+        assert!(!st.round_complete());
+        // Deadline: the host reclaims the stalled assignment...
+        assert_eq!(st.reclaim_unsubmitted(), 1);
+        // ...the slot is immediately re-offerable to a live participant...
+        let c = rendezvous(&mut st, 4);
+        let RoundReply::Work(wc) = pull(&mut st, c, 5) else {
+            panic!("reclaimed slot must be re-offerable")
+        };
+        assert_eq!(wc.slot, 2);
+        // ...and with the quorum met the round closes as a partial fold in
+        // slot order, still reporting incomplete.
+        assert!(!st.round_complete());
+        let subs = st.close_round();
+        assert_eq!(subs.len(), 2);
+    }
+
+    #[test]
+    fn truncated_payload_routes_through_malformed() {
+        // Exactly what ChaosTransport's payload corruption produces: a
+        // valid wire frame truncated by one byte. The wire checksum fails
+        // and the coordinator answers Malformed; the identical bytes minus
+        // the truncation then submit cleanly.
+        let mut st = state();
+        let a = rendezvous(&mut st, 0);
+        st.offer_round(0, 0, 0, 1.0, &[0.0; D], &participants(1));
+        let RoundReply::Work(_) = pull(&mut st, a, 1) else { panic!() };
+        let mut payload = sign_payload(100);
+        payload.pop();
+        let req = Request::Submit { pid: a, round: 0, slot: 0, loss: 0.5, ef_scale: None, payload };
+        assert_eq!(st.handle(&req, 2), Reply::Submit(SubmitReply::Malformed));
+        assert_eq!(submit(&mut st, a, 0, 0, 3), SubmitReply::Ok);
     }
 }

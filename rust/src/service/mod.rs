@@ -26,11 +26,13 @@
 //! family, at 1 and 8 participant threads, under uniform and simulated
 //! (faulty) participation.
 
+pub mod chaos;
 pub mod coordinator;
 pub mod participant;
 pub mod protocol;
 pub mod transport;
 
+pub use chaos::{ChaosConfig, ChaosTransport, FaultPlan, RetryPolicy};
 pub use coordinator::{CoordState, Coordinator, Submission};
 pub use participant::Participant;
 pub use transport::{LoopbackTransport, TcpServer, TcpTransport, Transport, MAX_FRAME_BYTES};
@@ -72,15 +74,40 @@ impl ServiceHost {
     /// In-process service: `workers` participant threads over the loopback
     /// transport (full protocol codec, zero I/O).
     pub fn loopback(spec: &ExperimentSpec, workers: usize) -> ServiceHost {
+        Self::loopback_chaos(spec, workers, None)
+    }
+
+    /// [`ServiceHost::loopback`] with a seeded fault plan injected between
+    /// every in-process participant and the coordinator. Worker `w` runs
+    /// under the deterministic plan `(cfg, seed + w)` with a fast retry
+    /// policy, so the whole chaotic run replays from `seed` — and, because
+    /// retries, duplicate suppression and idempotent re-pulls are invisible
+    /// to the slot-ordered fold, stays byte-identical to the fault-free
+    /// host (pinned by the chaos tests below and `make chaos-smoke`).
+    pub fn loopback_chaos(
+        spec: &ExperimentSpec,
+        workers: usize,
+        chaos: Option<(ChaosConfig, u64)>,
+    ) -> ServiceHost {
         // heartbeat_ms = 0 disables expiry: a loopback participant cannot
         // silently vanish, and a stable roster keeps EF residual pins fixed.
         let coord = Coordinator::new(0);
         let vault: participant::ResidualVault = Default::default();
         let loopback = (0..workers.max(1))
-            .map(|_| {
-                let mut p = Participant::new(spec.clone()).with_vault(vault.clone());
-                let mut t = LoopbackTransport::new(coord.clone());
-                std::thread::spawn(move || p.run(&mut t))
+            .map(|w| {
+                let p = Participant::new(spec.clone()).with_vault(vault.clone());
+                let coord = coord.clone();
+                std::thread::spawn(move || match chaos {
+                    Some((cfg, seed)) => {
+                        let plan = FaultPlan::new(cfg, seed.wrapping_add(w as u64));
+                        let mut p = p.with_retry(RetryPolicy::fast(plan.seed));
+                        p.run(&mut ChaosTransport::new(LoopbackTransport::new(coord), plan))
+                    }
+                    None => {
+                        let mut p = p;
+                        p.run(&mut LoopbackTransport::new(coord))
+                    }
+                })
             })
             .collect();
         ServiceHost {
@@ -131,6 +158,13 @@ impl ServiceHost {
     /// [`Clock::from_env`].
     pub fn set_clock(&mut self, clock: Clock) {
         self.clock = clock;
+    }
+
+    /// Override the per-round submission deadline — the window each of the
+    /// three degradation stages (full submission, reclaim grace, quorum
+    /// settle) is allowed before the round closes partial.
+    pub fn set_round_deadline(&mut self, deadline: Duration) {
+        self.round_deadline = deadline;
     }
 
     /// Attach a telemetry recorder after construction (loopback hosts are
@@ -210,7 +244,9 @@ impl ServiceHost {
 
         // Arm submission validation for this run's family, then wait for
         // the minimum cohort to rendezvous.
-        self.coord.with_state(|st| st.begin_run(algo.compression.aggregator(algo.client_lr), d));
+        self.coord.with_state(|st| {
+            st.begin_run(algo.compression.aggregator_robust(algo.client_lr, algo.robust), d)
+        });
         let min = self.min_participants;
         self.coord
             .wait_until(self.join_patience, |st| (st.roster_len() >= min).then_some(()))
@@ -252,6 +288,7 @@ impl ServiceHost {
             self.tele.round_begin(t as u64, round_sigma);
 
             let mut arrived = 0u32;
+            let mut degraded = false;
             if !plan.participants.is_empty() {
                 // 2. Offer the round; participants pull slots and submit.
                 // The Clients span is the offer→close window: remote local
@@ -267,11 +304,35 @@ impl ServiceHost {
                         &plan.participants,
                     )
                 });
-                // 3. Close at full submission or at the deadline — a
-                //    partial round is the dropout semantics, not an error.
+                // 3. Close at full submission; past the deadline, degrade
+                //    gracefully in bounded stages: reclaim stalled slots so
+                //    live peers can re-pull them, grant one grace window for
+                //    the repairs, then settle for a quorum. A round closed
+                //    short of full submission is the dropout semantics, not
+                //    an error — but it is surfaced as degraded.
                 self.coord
                     .wait_until(self.round_deadline, |st| st.round_complete().then_some(()));
-                let subs = self.coord.with_state(|st| st.close_round());
+                if !self.coord.with_state(|st| st.round_complete()) {
+                    if self.coord.with_state(|st| st.reclaim_unsubmitted()) > 0 {
+                        self.coord.wait_until(self.round_deadline, |st| {
+                            st.round_complete().then_some(())
+                        });
+                    }
+                    let quorum = self.min_participants.min(plan.participants.len());
+                    if !self.coord.with_state(|st| st.round_complete()) {
+                        self.coord.wait_until(self.round_deadline, |st| {
+                            (st.submitted_count() >= quorum).then_some(())
+                        });
+                    }
+                }
+                let (subs, full) = self.coord.with_state(|st| {
+                    let full = st.round_complete();
+                    (st.close_round(), full)
+                });
+                degraded = !full;
+                if degraded {
+                    self.tele.round_degraded(t as u64);
+                }
                 self.tele.span_end(Phase::Clients, span, t as u64);
 
                 // 4–6. Fold in slot order and step, exactly like the
@@ -303,7 +364,7 @@ impl ServiceHost {
             //    after `evaluate` returns, so wall_ms spans the full round
             //    (see `RoundRecord::wall_ms`) — same contract as the engine.
             if engine.should_eval(t) {
-                let rec = engine.eval_record(
+                let mut rec = engine.eval_record(
                     backend,
                     t,
                     &params,
@@ -313,6 +374,7 @@ impl ServiceHost {
                     arrived,
                     selected,
                 );
+                rec.degraded = degraded;
                 on_record(&rec);
                 records.push(rec);
             }
@@ -378,9 +440,12 @@ impl Drop for ServiceHost {
 mod tests {
     use super::*;
     use crate::api::spec::WorkloadSpec;
-    use crate::rng::ZParam;
     use crate::fl::server::{run_experiment, Participation};
+    use crate::rng::ZParam;
     use crate::sim::{ByzantineMode, FleetPreset, ScenarioConfig};
+    use protocol::{
+        PhaseReply, Reply, RendezvousReply, Request, RoundReply, SubmitReply, WorkOrder,
+    };
 
     /// The engine test suite's identity check: every record field except
     /// wall-clock must match to the bit.
@@ -402,6 +467,7 @@ mod tests {
             assert_eq!(x.sim_time_s.to_bits(), y.sim_time_s.to_bits(), "{what}");
             assert_eq!(x.arrived, y.arrived, "{what} round {}", x.round);
             assert_eq!(x.selected, y.selected, "{what}");
+            assert_eq!(x.degraded, y.degraded, "{what} round {}", x.round);
         }
     }
 
@@ -634,6 +700,259 @@ mod tests {
         // Protocol counters: every loopback worker rendezvoused.
         let prom = tele.export_prometheus();
         assert!(prom.contains("zsfa_rounds_total 5"), "{prom}");
+    }
+
+    #[test]
+    fn chaos_loopback_is_byte_identical_to_the_engine_for_every_family() {
+        // The headline robustness pin: under an aggressive seeded fault
+        // plan (drops, dupes, resets, corrupted frames and payloads,
+        // delays) every family still produces records byte-identical to
+        // the fault-free engine run, at 1 and 8 workers — retries, dedup
+        // and idempotent re-pulls are invisible to the slot-ordered fold.
+        let chaos = Some((ChaosConfig::aggressive(), 0xC4A05));
+        for algo in families() {
+            let spec = ExperimentSpec::new("svc", WorkloadSpec::consensus(16, 37, 1234))
+                .rounds(4)
+                .seed(13)
+                .reduce_lanes(3)
+                .series(algo);
+            let want = engine_run(&spec, 0, 0);
+            for workers in [1usize, 8] {
+                let mut host = ServiceHost::loopback_chaos(&spec, workers, chaos);
+                let mut backend = spec.workload.build_backend().unwrap();
+                let algo = spec.expanded_series()[0].algorithm.clone();
+                let cfg = spec.server_config(0);
+                let got = host
+                    .run_one(backend.as_mut(), &algo, &cfg, 0, 0, &mut |_| {})
+                    .unwrap();
+                host.shutdown().unwrap();
+                assert_identical(
+                    &want,
+                    &got,
+                    &format!("chaos {} workers={workers}", want.algorithm),
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn chaos_tcp_service_is_byte_identical_to_the_engine_for_every_family() {
+        for algo in families() {
+            let spec = ExperimentSpec::new("svc", WorkloadSpec::consensus(10, 13, 2024))
+                .rounds(3)
+                .seed(11)
+                .series(algo);
+            let want = engine_run(&spec, 0, 0);
+            let mut host =
+                ServiceHost::tcp("127.0.0.1:0", 500, 30_000, 2, &Telemetry::disabled()).unwrap();
+            let addr = host.local_addr().unwrap().to_string();
+            let joiners: Vec<_> = (0..2u64)
+                .map(|k| {
+                    let spec = spec.clone();
+                    let addr = addr.clone();
+                    std::thread::spawn(move || -> Result<()> {
+                        let inner = TcpTransport::connect(&addr, Duration::from_secs(10))?;
+                        let plan = FaultPlan::new(ChaosConfig::aggressive(), 0xFEED + k);
+                        let mut t = ChaosTransport::new(inner, plan);
+                        Participant::new(spec)
+                            .with_retry(RetryPolicy::fast(0xFEED + k))
+                            .run(&mut t)
+                    })
+                })
+                .collect();
+            let mut backend = spec.workload.build_backend().unwrap();
+            let algo = spec.expanded_series()[0].algorithm.clone();
+            let cfg = spec.server_config(0);
+            let got = host.run_one(backend.as_mut(), &algo, &cfg, 0, 0, &mut |_| {}).unwrap();
+            host.shutdown().unwrap();
+            for j in joiners {
+                j.join().unwrap().unwrap();
+            }
+            assert_identical(&want, &got, &format!("chaos tcp {}", want.algorithm));
+        }
+    }
+
+    /// A hand-rolled peer that rendezvouses, pulls one work order, never
+    /// submits it (the stalled straggler), signals `on_hold`, then
+    /// heartbeats until the coordinator finishes.
+    fn stalled_peer(
+        addr: String,
+        on_hold: std::sync::mpsc::Sender<()>,
+    ) -> std::thread::JoinHandle<()> {
+        std::thread::spawn(move || {
+            let mut t = TcpTransport::connect(&addr, Duration::from_secs(10)).unwrap();
+            let Reply::Rendezvous(RendezvousReply::Accept { pid }) =
+                t.request(&Request::Rendezvous).unwrap()
+            else {
+                panic!("stalled peer refused")
+            };
+            loop {
+                match t.request(&Request::PullRound { pid }).unwrap() {
+                    Reply::Round(RoundReply::Work(_)) => break, // hold it forever
+                    _ => {
+                        if let Reply::Heartbeat(PhaseReply::Finished) =
+                            t.request(&Request::Heartbeat { pid }).unwrap()
+                        {
+                            return; // round closed before we could stall
+                        }
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                }
+            }
+            let _ = on_hold.send(());
+            loop {
+                match t.request(&Request::Heartbeat { pid }).unwrap() {
+                    Reply::Heartbeat(PhaseReply::Finished) => return,
+                    _ => std::thread::sleep(Duration::from_millis(5)),
+                }
+            }
+        })
+    }
+
+    /// Execute one work order honestly — the exact client seam the
+    /// participant SDK uses — and submit the result once.
+    fn honest_submit(
+        spec: &ExperimentSpec,
+        t: &mut dyn Transport,
+        pid: u64,
+        w: &WorkOrder,
+    ) -> SubmitReply {
+        use crate::compress::agg::{RemoteCtx, Scratch};
+        use crate::compress::wire;
+        use crate::fl::backend::LocalScratch;
+        use crate::fl::engine::{root_for_seed, ClientTask};
+
+        let algo = spec.expanded_series()[w.series as usize].algorithm.clone();
+        let mut backend = spec.workload.build_backend().unwrap();
+        let d = backend.dim();
+        let root = root_for_seed(spec.seed_for_repeat(w.repeat as usize));
+        let mut task = ClientTask::new(&root, w.round as usize, 0, w.client as usize);
+        let mut delta = vec![0.0f32; d];
+        let mut local = LocalScratch::new();
+        let loss = backend.local_update_into(
+            w.client as usize,
+            &w.params,
+            algo.local_steps,
+            algo.client_lr,
+            &mut task.rng,
+            &mut delta,
+            &mut local,
+        );
+        if let Some(mode) = w.fault {
+            mode.apply(&mut delta);
+        }
+        let agg = algo.compression.aggregator(algo.client_lr);
+        let mut scratch = Scratch::new(d);
+        let upd = agg.compress_remote(
+            &mut delta,
+            RemoteCtx { rng: &mut task.rng, round_sigma: w.sigma, ef: None },
+            &mut scratch,
+        );
+        let req = Request::Submit {
+            pid,
+            round: w.round,
+            slot: w.slot,
+            loss,
+            ef_scale: upd.ef_scale,
+            payload: wire::encode(&upd.msg),
+        };
+        match t.request(&req).unwrap() {
+            Reply::Submit(r) => r,
+            other => panic!("unexpected reply to submit: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn deadline_reclaim_lets_a_live_peer_repair_a_stalled_round() {
+        // One peer pulls a slot and stalls; a real participant joins after
+        // the stall is in place. At the round deadline the host reclaims
+        // the stalled slot, the live participant re-pulls and repairs it
+        // inside the grace window — the round closes *full*, is not marked
+        // degraded, and stays byte-identical to the engine.
+        let spec = ExperimentSpec::new("svc", WorkloadSpec::consensus(2, 8, 77))
+            .rounds(1)
+            .seed(3)
+            .series(AlgorithmConfig::gd().with_lrs(0.05, 1.0));
+        let mut host =
+            ServiceHost::tcp("127.0.0.1:0", 0, 250, 1, &Telemetry::disabled()).unwrap();
+        let addr = host.local_addr().unwrap().to_string();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let stalled = stalled_peer(addr.clone(), tx);
+        let live = {
+            let spec = spec.clone();
+            std::thread::spawn(move || -> Result<()> {
+                rx.recv().expect("stall signal");
+                let mut t = TcpTransport::connect(&addr, Duration::from_secs(10))?;
+                Participant::new(spec).run(&mut t)
+            })
+        };
+        let mut backend = spec.workload.build_backend().unwrap();
+        let algo = spec.expanded_series()[0].algorithm.clone();
+        let cfg = spec.server_config(0);
+        let got = host.run_one(backend.as_mut(), &algo, &cfg, 0, 0, &mut |_| {}).unwrap();
+        host.shutdown().unwrap();
+        stalled.join().unwrap();
+        live.join().unwrap().unwrap();
+        assert_eq!(got.records.len(), 1);
+        assert!(!got.records[0].degraded, "repaired round must not be degraded");
+        assert_eq!(got.records[0].arrived, 2);
+        assert_identical(&engine_run(&spec, 0, 0), &got, "repaired round");
+    }
+
+    #[test]
+    fn deadline_closes_a_degraded_round_at_quorum() {
+        // Two peers, two slots: one submits its slot honestly and then only
+        // heartbeats, the other stalls on its held slot. Nobody repairs the
+        // reclaimed slot, so the host degrades gracefully: the round closes
+        // at the deadline with the quorum's single submission and the
+        // record is marked degraded.
+        let spec = ExperimentSpec::new("svc", WorkloadSpec::consensus(2, 8, 55))
+            .rounds(1)
+            .seed(9)
+            .series(AlgorithmConfig::gd().with_lrs(0.05, 1.0));
+        let tele = Telemetry::with_capacity(64);
+        let mut host = ServiceHost::tcp("127.0.0.1:0", 0, 250, 2, &tele).unwrap();
+        let addr = host.local_addr().unwrap().to_string();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let stalled = stalled_peer(addr.clone(), tx);
+        let submitter = {
+            let spec = spec.clone();
+            std::thread::spawn(move || {
+                let mut t = TcpTransport::connect(&addr, Duration::from_secs(10)).unwrap();
+                let Reply::Rendezvous(RendezvousReply::Accept { pid }) =
+                    t.request(&Request::Rendezvous).unwrap()
+                else {
+                    panic!("submitter refused")
+                };
+                let w = loop {
+                    match t.request(&Request::PullRound { pid }).unwrap() {
+                        Reply::Round(RoundReply::Work(w)) => break w,
+                        _ => std::thread::sleep(Duration::from_millis(5)),
+                    }
+                };
+                assert_eq!(honest_submit(&spec, &mut t, pid, &w), SubmitReply::Ok);
+                loop {
+                    match t.request(&Request::Heartbeat { pid }).unwrap() {
+                        Reply::Heartbeat(PhaseReply::Finished) => return,
+                        _ => std::thread::sleep(Duration::from_millis(5)),
+                    }
+                }
+            })
+        };
+        let mut backend = spec.workload.build_backend().unwrap();
+        let algo = spec.expanded_series()[0].algorithm.clone();
+        let cfg = spec.server_config(0);
+        let got = host.run_one(backend.as_mut(), &algo, &cfg, 0, 0, &mut |_| {}).unwrap();
+        host.shutdown().unwrap();
+        let _ = rx.recv();
+        stalled.join().unwrap();
+        submitter.join().unwrap();
+        assert_eq!(got.records.len(), 1);
+        assert!(got.records[0].degraded, "quorum close must be surfaced as degraded");
+        assert_eq!(got.records[0].arrived, 1);
+        assert_eq!(got.records[0].selected, 2);
+        let m = tele.metrics().unwrap();
+        assert_eq!(m.degraded_rounds_total.get(), 1);
     }
 
     #[test]

@@ -25,6 +25,7 @@
 //! otherwise see. Remote (TCP) participants keep residuals private — they
 //! outlive a coordinator crash and simply reconnect.
 
+use super::chaos::RetryPolicy;
 use super::protocol::{
     PhaseReply, Reply, RendezvousReply, Request, RoundReply, SubmitReply, WorkOrder,
 };
@@ -33,13 +34,15 @@ use crate::api::spec::{ExperimentSpec, SeriesSpec};
 use crate::compress::agg::{Aggregator, RemoteCtx, Scratch};
 use crate::compress::error_feedback::EfState;
 use crate::compress::wire;
-use crate::error::{Error, Result};
+use crate::error::{Error, ErrorKind, Result};
 use crate::fl::backend::{LocalScratch, TrainBackend};
 use crate::fl::engine::ClientTask;
 use crate::fl::{AlgorithmConfig, Compression};
 use crate::rng::Pcg64;
+use crate::telemetry::Telemetry;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 /// Shared EF-residual mirror, keyed by `(series, repeat, client)`. The
 /// host hands clones to its in-process participants so a checkpoint can
@@ -65,20 +68,39 @@ struct RunCtx {
     scratch: Scratch,
 }
 
+/// Default bound on how long a participant keeps retrying to rendezvous
+/// before surfacing `ErrorKind::Timeout`.
+pub const DEFAULT_RENDEZVOUS_PATIENCE: Duration = Duration::from_secs(60);
+
 /// A service client: rendezvous, pull work, run the local update, submit —
-/// until the coordinator reports `Finished`.
+/// until the coordinator reports `Finished`. Every request runs under the
+/// participant's [`RetryPolicy`]: transient transport failures (timeouts,
+/// resets, injected chaos) are retried with bounded deterministic backoff,
+/// and the coordinator's `Duplicate`/`Stale` dedup makes the resulting
+/// resubmissions idempotent.
 pub struct Participant {
     spec: ExperimentSpec,
     series: Vec<SeriesSpec>,
     run: Option<RunCtx>,
     vault: Option<ResidualVault>,
+    retry: RetryPolicy,
+    rendezvous_patience: Duration,
+    tele: Telemetry,
 }
 
 impl Participant {
     /// Build from the experiment spec both sides share.
     pub fn new(spec: ExperimentSpec) -> Participant {
         let series = spec.expanded_series();
-        Participant { spec, series, run: None, vault: None }
+        Participant {
+            spec,
+            series,
+            run: None,
+            vault: None,
+            retry: RetryPolicy::default(),
+            rendezvous_patience: DEFAULT_RENDEZVOUS_PATIENCE,
+            tele: Telemetry::disabled(),
+        }
     }
 
     /// Mirror EF residuals into (and seed them from) a host-shared vault
@@ -88,15 +110,35 @@ impl Participant {
         self
     }
 
+    /// Override the request retry/backoff schedule (builder-style).
+    pub fn with_retry(mut self, retry: RetryPolicy) -> Participant {
+        self.retry = retry;
+        self
+    }
+
+    /// Bound the rendezvous retry loop (builder-style).
+    pub fn with_rendezvous_patience(mut self, patience: Duration) -> Participant {
+        self.rendezvous_patience = patience;
+        self
+    }
+
+    /// Count retries/timeouts into a telemetry registry (builder-style).
+    pub fn with_telemetry(mut self, tele: &Telemetry) -> Participant {
+        self.tele = tele.clone();
+        self
+    }
+
     /// Join the coordinator and work until it finishes. Returns `Ok(())`
     /// when the coordinator reports the terminal phase (or refuses the
     /// rendezvous because the run is already over).
     pub fn run(&mut self, transport: &mut dyn Transport) -> Result<()> {
-        let Some(mut pid) = rendezvous(transport)? else {
+        let (retry, patience, tele) =
+            (self.retry, self.rendezvous_patience, self.tele.clone());
+        let Some(mut pid) = rendezvous_retrying(transport, retry, patience, &tele)? else {
             return Ok(()); // Nothing left to join.
         };
         loop {
-            match transport.request(&Request::PullRound { pid })? {
+            match request_with_retry(transport, &Request::PullRound { pid }, retry, &tele)? {
                 Reply::Round(RoundReply::Work(w)) => {
                     match self.execute(transport, pid, &w)? {
                         // Stale/Duplicate: the round closed (or the slot was
@@ -104,13 +146,15 @@ impl Participant {
                         // result and pull again.
                         SubmitReply::Ok | SubmitReply::Stale | SubmitReply::Duplicate => {}
                         // Our registration expired (heartbeat lapse): rejoin.
-                        SubmitReply::Unknown => match rendezvous(transport)? {
-                            Some(p) => pid = p,
-                            None => return Ok(()),
-                        },
-                        // An honest participant producing a malformed
-                        // submission means the two sides disagree about the
-                        // spec — not something a retry can fix.
+                        SubmitReply::Unknown => {
+                            match rendezvous_retrying(transport, retry, patience, &tele)? {
+                                Some(p) => pid = p,
+                                None => return Ok(()),
+                            }
+                        }
+                        // An honest participant whose resubmissions are all
+                        // rejected as malformed means the two sides disagree
+                        // about the spec — not something a retry can fix.
                         SubmitReply::Malformed => {
                             return Err(Error::protocol(
                                 "coordinator rejected this participant's submission as \
@@ -120,12 +164,19 @@ impl Participant {
                     }
                 }
                 Reply::Round(RoundReply::NoWork) => {
-                    match transport.request(&Request::Heartbeat { pid })? {
+                    match request_with_retry(
+                        transport,
+                        &Request::Heartbeat { pid },
+                        retry,
+                        &tele,
+                    )? {
                         Reply::Heartbeat(PhaseReply::Finished) => return Ok(()),
-                        Reply::Heartbeat(PhaseReply::Unknown) => match rendezvous(transport)? {
-                            Some(p) => pid = p,
-                            None => return Ok(()),
-                        },
+                        Reply::Heartbeat(PhaseReply::Unknown) => {
+                            match rendezvous_retrying(transport, retry, patience, &tele)? {
+                                Some(p) => pid = p,
+                                None => return Ok(()),
+                            }
+                        }
                         Reply::Heartbeat(_) => transport.idle_wait(),
                         other => {
                             return Err(Error::protocol(format!(
@@ -150,6 +201,7 @@ impl Participant {
         w: &WorkOrder,
     ) -> Result<SubmitReply> {
         let vault = self.vault.clone();
+        let (retry, tele) = (self.retry, self.tele.clone());
         let ctx = self.ensure_run(w.series, w.repeat)?;
         if w.params.len() != ctx.d {
             return Err(Error::protocol(format!(
@@ -202,6 +254,9 @@ impl Participant {
             let key = (ctx.series, ctx.repeat, w.client);
             v.lock().unwrap().insert(key, ef.lock().unwrap().residual().to_vec());
         }
+        // Built once and resubmitted verbatim: the EF residual has already
+        // absorbed this round's update, so recompressing on a retry would
+        // produce a different (wrong) payload.
         let req = Request::Submit {
             pid,
             round: w.round,
@@ -210,9 +265,27 @@ impl Participant {
             ef_scale: upd.ef_scale,
             payload: wire::encode(&upd.msg),
         };
-        match transport.request(&req)? {
-            Reply::Submit(r) => Ok(r),
-            other => Err(Error::protocol(format!("unexpected reply to submit: {other:?}"))),
+        // `Malformed` from an honest participant is a frame corrupted in
+        // flight (the chaos seam truncates payloads to exercise exactly
+        // this): resubmit the identical bytes a bounded number of times
+        // before concluding the two sides genuinely disagree.
+        let mut resubmits = 0u32;
+        loop {
+            match request_with_retry(transport, &req, retry, &tele)? {
+                Reply::Submit(SubmitReply::Malformed)
+                    if resubmits + 1 < retry.max_attempts.max(1) =>
+                {
+                    resubmits += 1;
+                    tele.count_retry();
+                    retry.sleep(resubmits - 1);
+                }
+                Reply::Submit(r) => return Ok(r),
+                other => {
+                    return Err(Error::protocol(format!(
+                        "unexpected reply to submit: {other:?}"
+                    )))
+                }
+            }
         }
     }
 
@@ -241,7 +314,7 @@ impl Participant {
                 repeat,
                 d,
                 backend,
-                agg: algo.compression.aggregator(algo.client_lr),
+                agg: algo.compression.aggregator_robust(algo.client_lr, algo.robust),
                 algo,
                 // The engine's root derivation — shared contract.
                 root: crate::fl::engine::root_for_seed(seed),
@@ -262,5 +335,122 @@ fn rendezvous(transport: &mut dyn Transport) -> Result<Option<u64>> {
         Reply::Rendezvous(RendezvousReply::Accept { pid }) => Ok(Some(pid)),
         Reply::Rendezvous(RendezvousReply::Later) => Ok(None),
         other => Err(Error::protocol(format!("unexpected reply to rendezvous: {other:?}"))),
+    }
+}
+
+/// Rendezvous, retrying transient failures under `retry`'s backoff but
+/// never past the `patience` deadline — a coordinator that stays
+/// unreachable surfaces as `ErrorKind::Timeout` instead of looping forever.
+pub fn rendezvous_retrying(
+    transport: &mut dyn Transport,
+    retry: RetryPolicy,
+    patience: Duration,
+    tele: &Telemetry,
+) -> Result<Option<u64>> {
+    let start = Instant::now();
+    let mut attempt = 0u32;
+    loop {
+        match rendezvous(transport) {
+            Ok(r) => return Ok(r),
+            Err(e) => {
+                if e.kind() == ErrorKind::Timeout {
+                    tele.count_timeout();
+                }
+                if start.elapsed() >= patience {
+                    return Err(Error::timeout(format!(
+                        "rendezvous: no accept within {patience:?} (last error: {e})"
+                    )));
+                }
+                tele.count_retry();
+                retry.sleep(attempt);
+                attempt += 1;
+            }
+        }
+    }
+}
+
+/// Issue one request, retrying transient transport failures up to
+/// `retry.max_attempts` total attempts with deterministic backoff. The
+/// coordinator's idempotent request handling (re-pull returns the held
+/// slot, duplicate submits answer `Duplicate`) is what makes blind
+/// retransmission safe.
+pub fn request_with_retry(
+    transport: &mut dyn Transport,
+    req: &Request,
+    retry: RetryPolicy,
+    tele: &Telemetry,
+) -> Result<Reply> {
+    let mut attempt = 0u32;
+    loop {
+        match transport.request(req) {
+            Ok(reply) => return Ok(reply),
+            Err(e) => {
+                if e.kind() == ErrorKind::Timeout {
+                    tele.count_timeout();
+                }
+                attempt += 1;
+                if attempt >= retry.max_attempts.max(1) {
+                    return Err(e.wrap(&format!("request failed after {attempt} attempts")));
+                }
+                tele.count_retry();
+                retry.sleep(attempt - 1);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A transport that fails its first `fail` requests with a timeout,
+    /// then answers every request with `Heartbeat(Standby)`.
+    struct Flaky {
+        fail: u32,
+        calls: u32,
+    }
+
+    impl Transport for Flaky {
+        fn request(&mut self, _req: &Request) -> Result<Reply> {
+            self.calls += 1;
+            if self.calls <= self.fail {
+                Err(Error::timeout("flaky"))
+            } else {
+                Ok(Reply::Heartbeat(PhaseReply::Standby))
+            }
+        }
+    }
+
+    #[test]
+    fn retry_rides_out_transient_failures() {
+        let mut t = Flaky { fail: 3, calls: 0 };
+        let retry = RetryPolicy::fast(1);
+        let tele = Telemetry::disabled();
+        let reply =
+            request_with_retry(&mut t, &Request::Heartbeat { pid: 1 }, retry, &tele).unwrap();
+        assert_eq!(reply, Reply::Heartbeat(PhaseReply::Standby));
+        assert_eq!(t.calls, 4);
+    }
+
+    #[test]
+    fn retry_budget_is_bounded() {
+        let mut t = Flaky { fail: u32::MAX, calls: 0 };
+        let retry = RetryPolicy::fast(1);
+        let tele = Telemetry::disabled();
+        let err = request_with_retry(&mut t, &Request::Heartbeat { pid: 1 }, retry, &tele)
+            .unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::Timeout, "wrap must preserve the kind");
+        assert_eq!(t.calls, retry.max_attempts);
+    }
+
+    #[test]
+    fn rendezvous_deadline_surfaces_as_timeout() {
+        let mut t = Flaky { fail: u32::MAX, calls: 0 };
+        let retry = RetryPolicy::fast(1);
+        let tele = Telemetry::disabled();
+        let err =
+            rendezvous_retrying(&mut t, retry, Duration::from_millis(30), &tele).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::Timeout);
+        assert!(t.calls >= 2, "must have retried before the deadline");
     }
 }

@@ -15,7 +15,7 @@
 
 use super::coordinator::Coordinator;
 use super::protocol::{decode_reply, decode_request, encode_reply, encode_request, Reply, Request};
-use crate::error::{anyhow, Context, Result};
+use crate::error::{anyhow, Context, Error, Result};
 use crate::telemetry::Telemetry;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -39,6 +39,22 @@ pub trait Transport: Send {
     fn idle_wait(&mut self) {
         std::thread::sleep(Duration::from_millis(10));
     }
+
+    /// Send a pre-encoded request frame verbatim — possibly corrupt; the
+    /// fault-injection seam (`service::chaos`) uses this to put undecodable
+    /// bytes on the wire. Default: decode locally and delegate, so
+    /// in-process transports reject a corrupt frame exactly where a remote
+    /// server's decoder would.
+    fn send_raw(&mut self, frame: &[u8]) -> Result<Reply> {
+        let req = decode_request(frame)
+            .map_err(|e| Error::protocol(format!("raw frame rejected: {e:?}")))?;
+        self.request(&req)
+    }
+
+    /// Drop any underlying connection so the next request re-establishes
+    /// it (and the participant loop re-rendezvouses if its pid expired).
+    /// No-op for connectionless transports.
+    fn break_connection(&mut self) {}
 }
 
 /// In-process transport: full codec round-trip, zero I/O.
@@ -103,41 +119,114 @@ fn read_frame_body(r: &mut impl Read, len: u32) -> std::io::Result<Vec<u8>> {
     Ok(buf)
 }
 
-/// Client side of the TCP transport: one persistent connection.
+/// Default per-request socket timeout for TCP clients: a stalled
+/// coordinator surfaces as [`crate::error::ErrorKind::Timeout`] instead of
+/// wedging the participant forever.
+pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Client side of the TCP transport: one persistent connection,
+/// re-established on demand after an I/O failure or an injected reset.
 pub struct TcpTransport {
-    stream: TcpStream,
+    /// `None` between connections (after an I/O error or `break_connection`).
+    stream: Option<TcpStream>,
     addr: String,
+    io_timeout: Duration,
+    reconnect_patience: Duration,
 }
 
 impl TcpTransport {
     /// Connect, retrying for up to `patience` (covers `zsfa join` racing
-    /// `zsfa serve` to the port).
+    /// `zsfa serve` to the port), with [`DEFAULT_IO_TIMEOUT`] on reads and
+    /// writes.
     pub fn connect(addr: &str, patience: Duration) -> Result<TcpTransport> {
+        TcpTransport::connect_with(addr, patience, DEFAULT_IO_TIMEOUT)
+    }
+
+    /// [`TcpTransport::connect`] with an explicit per-request socket
+    /// timeout.
+    pub fn connect_with(
+        addr: &str,
+        patience: Duration,
+        io_timeout: Duration,
+    ) -> Result<TcpTransport> {
+        let mut t = TcpTransport {
+            stream: None,
+            addr: addr.to_string(),
+            io_timeout,
+            reconnect_patience: patience,
+        };
+        t.dial(patience)?;
+        Ok(t)
+    }
+
+    fn dial(&mut self, patience: Duration) -> Result<()> {
         let start = Instant::now();
         loop {
-            match TcpStream::connect(addr) {
+            match TcpStream::connect(&self.addr) {
                 Ok(stream) => {
                     stream.set_nodelay(true).ok();
-                    return Ok(TcpTransport { stream, addr: addr.to_string() });
+                    stream.set_read_timeout(Some(self.io_timeout)).ok();
+                    stream.set_write_timeout(Some(self.io_timeout)).ok();
+                    self.stream = Some(stream);
+                    return Ok(());
                 }
                 Err(e) => {
                     if start.elapsed() >= patience {
-                        return Err(anyhow!("connect to {addr}: {e}"));
+                        return Err(Error::timeout(format!(
+                            "connect to {}: {e}",
+                            self.addr
+                        )));
                     }
                     std::thread::sleep(Duration::from_millis(100));
                 }
             }
         }
     }
+
+    /// One framed exchange. Any I/O failure burns the connection (the next
+    /// request redials) and is classified: socket timeouts surface as
+    /// `ErrorKind::Timeout`, everything else as a generic transport error.
+    fn raw_exchange(&mut self, frame: &[u8]) -> Result<Vec<u8>> {
+        if self.stream.is_none() {
+            self.dial(self.reconnect_patience)?;
+        }
+        let stream = self.stream.as_mut().expect("dialed above");
+        let res = write_frame(stream, frame).and_then(|()| read_frame(stream));
+        match res {
+            Ok(reply) => Ok(reply),
+            Err(e) => {
+                self.stream = None;
+                Err(classify_io(e, &self.addr))
+            }
+        }
+    }
+}
+
+/// Map an I/O failure onto the service error taxonomy.
+fn classify_io(e: std::io::Error, addr: &str) -> Error {
+    match e.kind() {
+        // Both kinds occur for an expired socket timeout, depending on
+        // platform.
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+            Error::timeout(format!("request to coordinator at {addr} timed out: {e}"))
+        }
+        _ => anyhow!("exchange with coordinator at {addr}: {e}"),
+    }
 }
 
 impl Transport for TcpTransport {
     fn request(&mut self, req: &Request) -> Result<Reply> {
-        write_frame(&mut self.stream, &encode_request(req))
-            .with_context(|| format!("send to coordinator at {}", self.addr))?;
-        let frame = read_frame(&mut self.stream)
-            .with_context(|| format!("read reply from coordinator at {}", self.addr))?;
+        let frame = self.raw_exchange(&encode_request(req))?;
         decode_reply(&frame).context("decode coordinator reply")
+    }
+
+    fn send_raw(&mut self, frame: &[u8]) -> Result<Reply> {
+        let reply = self.raw_exchange(frame)?;
+        decode_reply(&reply).context("decode coordinator reply")
+    }
+
+    fn break_connection(&mut self) {
+        self.stream = None;
     }
 }
 
@@ -325,6 +414,75 @@ mod tests {
             panic!()
         };
         assert_ne!(pid, pid2);
+        server.shutdown();
+    }
+
+    #[test]
+    fn stalled_coordinator_surfaces_as_timeout() {
+        // A listener that accepts into the kernel backlog but never reads
+        // or replies: the request's read must expire with ErrorKind::Timeout
+        // instead of wedging forever.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let mut t = TcpTransport::connect_with(
+            &addr,
+            Duration::from_secs(2),
+            Duration::from_millis(50),
+        )
+        .unwrap();
+        let err = t.request(&Request::Rendezvous).unwrap_err();
+        assert_eq!(err.kind(), crate::error::ErrorKind::Timeout);
+        drop(listener);
+    }
+
+    #[test]
+    fn connect_patience_expiry_is_a_timeout() {
+        // Nothing listens on a fresh ephemeral port we bind-then-release.
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let err = TcpTransport::connect(&addr, Duration::from_millis(50)).unwrap_err();
+        assert_eq!(err.kind(), crate::error::ErrorKind::Timeout);
+    }
+
+    #[test]
+    fn broken_connection_redials_transparently() {
+        let coord = Coordinator::new(1000);
+        let mut server = TcpServer::bind("127.0.0.1:0", coord).unwrap();
+        let addr = server.local_addr().to_string();
+        let mut t = TcpTransport::connect(&addr, Duration::from_secs(2)).unwrap();
+        let Reply::Rendezvous(RendezvousReply::Accept { pid }) =
+            t.request(&Request::Rendezvous).unwrap()
+        else {
+            panic!()
+        };
+        t.break_connection();
+        // The next request dials a fresh connection; the coordinator still
+        // knows the pid because liveness is per-pid, not per-connection.
+        assert_eq!(
+            t.request(&Request::Heartbeat { pid }).unwrap(),
+            Reply::Heartbeat(PhaseReply::Standby)
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn corrupt_raw_frame_drops_the_connection_then_recovers() {
+        let coord = Coordinator::new(1000);
+        let mut server = TcpServer::bind("127.0.0.1:0", coord).unwrap();
+        let addr = server.local_addr().to_string();
+        let mut t = TcpTransport::connect(&addr, Duration::from_secs(2)).unwrap();
+        // A truncated envelope: the server's decoder rejects it and drops
+        // the connection without a reply, so the client sees an error...
+        let mut frame = encode_request(&Request::Rendezvous);
+        frame.pop();
+        assert!(t.send_raw(&frame).is_err());
+        // ...and the next clean request transparently reconnects.
+        assert!(matches!(
+            t.request(&Request::Rendezvous).unwrap(),
+            Reply::Rendezvous(RendezvousReply::Accept { .. })
+        ));
         server.shutdown();
     }
 

@@ -184,6 +184,35 @@ impl Telemetry {
         }
     }
 
+    /// Count one participant-side request retry (attempts past the first).
+    pub fn count_retry(&self) {
+        if let Some(inner) = self.inner.as_deref() {
+            inner.metrics.retries_total.inc();
+        }
+    }
+
+    /// Count one fault injected by a chaos transport.
+    pub fn count_fault_injected(&self) {
+        if let Some(inner) = self.inner.as_deref() {
+            inner.metrics.faults_injected_total.inc();
+        }
+    }
+
+    /// Count one request timeout observed by a participant.
+    pub fn count_timeout(&self) {
+        if let Some(inner) = self.inner.as_deref() {
+            inner.metrics.timeouts_total.inc();
+        }
+    }
+
+    /// Record a round closed at quorum instead of a full roster.
+    pub fn round_degraded(&self, round: u64) {
+        if let Some(inner) = self.inner.as_deref() {
+            inner.metrics.degraded_rounds_total.inc();
+            inner.metrics.degraded_round_last.set(round as f64);
+        }
+    }
+
     /// Record a coordinator state transition: bumps the per-reply-code
     /// counter and appends to the event ring.
     pub fn coord_event(&self, kind: EventKind, round: u64, value: f64) {
@@ -288,6 +317,27 @@ mod tests {
         assert_eq!(m.coord[stale].get(), 1);
         let text = t.export_prometheus();
         assert!(text.contains("zsfa_coord_replies_total{code=\"submit_ok\"} 2"));
+    }
+
+    #[test]
+    fn chaos_counters_land_in_the_registry() {
+        let t = Telemetry::with_capacity(8);
+        t.count_retry();
+        t.count_retry();
+        t.count_fault_injected();
+        t.count_timeout();
+        t.round_degraded(6);
+        let m = t.metrics().unwrap();
+        assert_eq!(m.retries_total.get(), 2);
+        assert_eq!(m.faults_injected_total.get(), 1);
+        assert_eq!(m.timeouts_total.get(), 1);
+        assert_eq!(m.degraded_rounds_total.get(), 1);
+        assert_eq!(m.degraded_round_last.get(), 6.0);
+        // The disabled handle keeps its single-branch contract.
+        let d = Telemetry::disabled();
+        d.count_retry();
+        d.round_degraded(1);
+        assert!(d.metrics().is_none());
     }
 
     #[test]

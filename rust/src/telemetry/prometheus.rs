@@ -93,6 +93,41 @@ pub fn encode(m: &Metrics) -> String {
         "counter",
     );
     let _ = writeln!(out, "zsfa_resume_total {}", m.resume_total.get());
+    family(
+        &mut out,
+        "zsfa_retries_total",
+        "Participant request retries after the first attempt.",
+        "counter",
+    );
+    let _ = writeln!(out, "zsfa_retries_total {}", m.retries_total.get());
+    family(
+        &mut out,
+        "zsfa_faults_injected_total",
+        "Faults injected by a chaos transport.",
+        "counter",
+    );
+    let _ = writeln!(out, "zsfa_faults_injected_total {}", m.faults_injected_total.get());
+    family(
+        &mut out,
+        "zsfa_timeouts_total",
+        "Request timeouts observed by participants.",
+        "counter",
+    );
+    let _ = writeln!(out, "zsfa_timeouts_total {}", m.timeouts_total.get());
+    family(
+        &mut out,
+        "zsfa_degraded_rounds_total",
+        "Rounds closed at quorum instead of a full roster.",
+        "counter",
+    );
+    let _ = writeln!(out, "zsfa_degraded_rounds_total {}", m.degraded_rounds_total.get());
+    family(
+        &mut out,
+        "zsfa_degraded_round_last",
+        "Round index of the most recent degraded close.",
+        "gauge",
+    );
+    let _ = writeln!(out, "zsfa_degraded_round_last {}", fnum(m.degraded_round_last.get()));
 
     family(
         &mut out,
@@ -157,6 +192,11 @@ mod tests {
             "zsfa_coord_replies_total",
             "zsfa_checkpoints_total",
             "zsfa_resume_total",
+            "zsfa_retries_total",
+            "zsfa_faults_injected_total",
+            "zsfa_timeouts_total",
+            "zsfa_degraded_rounds_total",
+            "zsfa_degraded_round_last",
             "zsfa_simd_path",
             "zsfa_phase_ms",
             "zsfa_round_ms",

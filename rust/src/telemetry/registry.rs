@@ -167,6 +167,17 @@ pub struct Metrics {
     pub checkpoints_total: Counter,
     /// Sessions resumed from a checkpoint snapshot.
     pub resume_total: Counter,
+    /// Participant request retries (after the first attempt).
+    pub retries_total: Counter,
+    /// Faults injected by a chaos transport (`service::chaos`).
+    pub faults_injected_total: Counter,
+    /// Request timeouts observed by participants.
+    pub timeouts_total: Counter,
+    /// Rounds closed at quorum instead of a full roster.
+    pub degraded_rounds_total: Counter,
+    /// Round index of the most recent degraded close (0 until one; pair
+    /// with `degraded_rounds_total` to tell "none yet" from "round 0").
+    pub degraded_round_last: Gauge,
     /// Per-reply-code coordinator counters, indexed per [`COORD_KINDS`].
     pub coord: [Counter; COORD_KINDS.len()],
     /// Per-phase duration histograms, indexed by `Phase as usize`.
@@ -205,6 +216,11 @@ impl Metrics {
         m.insert("client_updates_total".into(), cnt(&self.client_updates_total));
         m.insert("checkpoints_total".into(), cnt(&self.checkpoints_total));
         m.insert("resume_total".into(), cnt(&self.resume_total));
+        m.insert("retries_total".into(), cnt(&self.retries_total));
+        m.insert("faults_injected_total".into(), cnt(&self.faults_injected_total));
+        m.insert("timeouts_total".into(), cnt(&self.timeouts_total));
+        m.insert("degraded_rounds_total".into(), cnt(&self.degraded_rounds_total));
+        m.insert("degraded_round_last".into(), num(self.degraded_round_last.get()));
         m.insert("simd_path".into(), Json::Str(self.simd_path().to_string()));
         let mut coord = std::collections::BTreeMap::new();
         for (kind, c) in COORD_KINDS.iter().zip(&self.coord) {
@@ -293,6 +309,11 @@ mod tests {
             "\"client_updates_total\":0",
             "\"checkpoints_total\":0",
             "\"resume_total\":0",
+            "\"retries_total\":0",
+            "\"faults_injected_total\":0",
+            "\"timeouts_total\":0",
+            "\"degraded_rounds_total\":0",
+            "\"degraded_round_last\":0",
             "\"simd_path\":\"",
             "\"coord\":{",
             "\"rendezvous\":0",

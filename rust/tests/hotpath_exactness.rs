@@ -235,7 +235,11 @@ fn sign_absorb_chain_matches_scalar_chain() {
     let m = 23; // crosses one CSA spill boundary
     let mut data_rng = Pcg64::seeded(0x51c);
     let deltas: Vec<Vec<f32>> = (0..m).map(|_| gen_vec(&mut data_rng, d)).collect();
-    let agg = ZSignAgg { z: ZParam::Finite(1), sigma: SigmaRule::Fixed(0.6) };
+    let agg = ZSignAgg {
+        z: ZParam::Finite(1),
+        sigma: SigmaRule::Fixed(0.6),
+        robust: zsignfedavg::compress::agg::RobustRule::None,
+    };
 
     // Reference: scalar compressor + naive vote counts.
     let mut counts = vec![0i32; d];

@@ -18,6 +18,7 @@ use zsignfedavg::api::{
     seed_for_repeat, CsvSink, ExperimentSpec, JsonlSink, MemorySink, RoundObserver, SeriesCtx,
     Session, SweepSpec, WorkloadSpec,
 };
+use zsignfedavg::compress::agg::RobustRule;
 use zsignfedavg::compress::sign::SigmaRule;
 use zsignfedavg::fl::backend::AnalyticBackend;
 use zsignfedavg::fl::metrics::{
@@ -78,7 +79,12 @@ fn json_roundtrip_every_compression_and_server_opt() {
             server_lr: 0.7,
             server_opt: zsignfedavg::fl::algorithms::ServerOpt::Sgd,
             local_steps: 4,
+            robust: RobustRule::None,
         },
+        // Robust trimmed-majority vote rides the spec round-trip too.
+        AlgorithmConfig::signsgd().with_robust(RobustRule::TrimmedMajority { frac: 0.2 }),
+        AlgorithmConfig::dp_signfedavg(0.01, 1.1, 2)
+            .with_robust(RobustRule::TrimmedMajority { frac: 0.1 }),
     ];
     for algo in algos {
         let spec = ExperimentSpec::new("rt", WorkloadSpec::consensus(8, 16, 99))
